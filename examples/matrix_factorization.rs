@@ -1,0 +1,93 @@
+//! MovieLens-style matrix factorization (paper §5.2): alternating
+//! minimization where each large row/column subproblem is solved by
+//! DISTRIBUTED ENCODED L-BFGS, small ones locally (the paper's n<500
+//! rule).
+//!
+//!     cargo run --release --example matrix_factorization
+
+use coded_opt::cluster::SimCluster;
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::{build_data_parallel, run_lbfgs, LbfgsConfig};
+use coded_opt::data::movielens;
+use coded_opt::delay::ExponentialDelay;
+use coded_opt::objectives::matfac::{LocalCholesky, MatFacProblem, SubSolver, Subproblem};
+use coded_opt::objectives::QuadObjective;
+
+/// The paper's hybrid solver: distributed encoded L-BFGS above the size
+/// threshold, local Cholesky below (§5.2).
+struct DistributedLbfgs {
+    scheme: Scheme,
+    m: usize,
+    k: usize,
+    threshold: usize,
+    local: LocalCholesky,
+    /// (subproblems solved distributed, locally)
+    pub counts: (usize, usize),
+}
+
+impl SubSolver for DistributedLbfgs {
+    fn solve(&mut self, sub: &Subproblem) -> Vec<f64> {
+        if sub.a.rows() < self.threshold {
+            self.counts.1 += 1;
+            return self.local.solve(sub);
+        }
+        self.counts.0 += 1;
+        let n = sub.a.rows();
+        // eq-13 subproblem has unnormalized ‖Aw−b‖² + λ‖w‖²; our ridge
+        // convention is 1/(2n)‖·‖² + λ/2‖·‖², so rescale λ.
+        let lam = 2.0 * sub.lambda / n as f64;
+        let dp = build_data_parallel(&sub.a, &sub.b, self.scheme, self.m, 2.0, 1).unwrap();
+        let asm = dp.assembler.clone();
+        let delay = ExponentialDelay::new(self.m, 0.010, 5); // paper's exp(10ms)
+        let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
+        let prob = coded_opt::objectives::RidgeProblem::new(sub.a.clone(), sub.b.clone(), lam);
+        let cfg = LbfgsConfig {
+            k: self.k,
+            iters: 15,
+            lambda: lam,
+            memory: 8,
+            rho: 0.9,
+            w0: None,
+        };
+        let out = run_lbfgs(&mut cluster, &asm, &cfg, "mf-sub", &|w| (prob.objective(w), 0.0));
+        out.w
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    // paper: MovieLens-1M, p=15, λ=10, b=3; synthetic substitute scaled.
+    let (users, movies, p) = (120, 400, 8);
+    let ds = movielens::generate(users, movies, p, 60, 0.3, 7);
+    println!(
+        "ratings: {} train / {} test over {users}×{movies} (p={p})",
+        ds.train.len(),
+        ds.test.len()
+    );
+    let mut mf = MatFacProblem::new(&ds.train, users, movies, p, 2.0, ds.global_mean, 3);
+    let mut solver = DistributedLbfgs {
+        scheme: Scheme::Paley, // the paper's MF tables feature Paley ETF
+        m: 8,
+        k: 6,
+        threshold: 40,
+        local: LocalCholesky,
+        counts: (0, 0),
+    };
+    println!("\n{:<7} {:>12} {:>12} {:>12}", "epoch", "train RMSE", "test RMSE", "objective");
+    println!("{:<7} {:>12.4} {:>12.4} {:>12.1}", 0, mf.rmse(&ds.train), mf.rmse(&ds.test), mf.objective(&ds.train));
+    for epoch in 1..=5 {
+        mf.als_epoch(&mut solver);
+        println!(
+            "{:<7} {:>12.4} {:>12.4} {:>12.1}",
+            epoch,
+            mf.rmse(&ds.train),
+            mf.rmse(&ds.test),
+            mf.objective(&ds.train)
+        );
+    }
+    println!(
+        "\nsubproblems: {} distributed (encoded L-BFGS, k=6/8, Paley), {} local (Cholesky)",
+        solver.counts.0, solver.counts.1
+    );
+    println!("Paper's Tables 2–3 shape: coded schemes ≈ perfect RMSE at k<m.");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: encoded gradient descent on a ridge problem with
+//! bimodal stragglers, in ~30 lines of library use.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds a Hadamard (β=2) encoding over 8 simulated workers, waits for
+//! the fastest 6 each round, and prints the convergence trace on the
+//! ORIGINAL objective — next to an uncoded baseline suffering the same
+//! stragglers.
+
+use coded_opt::cluster::SimCluster;
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::{build_data_parallel, run_gd, GdConfig};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::delay::MixtureDelay;
+use coded_opt::objectives::{QuadObjective, RidgeProblem};
+
+fn main() -> anyhow::Result<()> {
+    let (n, p, m, k) = (512, 64, 8, 6);
+    let (x, y, _) = gaussian_linear(n, p, 0.5, 42);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let f_star = prob.objective(&prob.solve_exact());
+    println!("ridge: n={n} p={p} m={m} k={k}   f* = {f_star:.6}");
+    println!("{:<12} {:>10} {:>14} {:>12}", "scheme", "iters", "f(w_T)", "sim time");
+
+    for scheme in [Scheme::Hadamard, Scheme::Uncoded] {
+        let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 42)?;
+        let asm = dp.assembler.clone();
+        // the paper's §5.3 bimodal delay: half the fleet ~0.5s, half ~20s
+        let delay = MixtureDelay::paper_bimodal(m, 7);
+        let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
+        let cfg = GdConfig {
+            k,
+            step: 1.0 / prob.smoothness(),
+            iters: 200,
+            lambda: 0.05,
+            w0: None,
+        };
+        let out = run_gd(&mut cluster, &asm, &cfg, scheme.name(), &|w| {
+            (prob.objective(w), 0.0)
+        });
+        println!(
+            "{:<12} {:>10} {:>14.6} {:>10.1}s",
+            scheme.name(),
+            out.trace.len(),
+            out.trace.final_objective(),
+            out.trace.total_time()
+        );
+    }
+    println!("\n(encoded run lands near f*; uncoded fixed-k is biased by dropped blocks)");
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Figure-5/6-style spectrum analysis: eigenvalue distribution of the
+//! normalized subset Gram `(1/(ηβ))·S_AᵀS_A` for every construction.
+//!
+//!     cargo run --release --example spectrum_analysis
+
+use coded_opt::config::Scheme;
+use coded_opt::encoding::{Encoding, SubsetSpectrum};
+use coded_opt::metrics::TableWriter;
+
+fn main() -> anyhow::Result<()> {
+    let n = 120;
+    let m = 16;
+    let beta = 2.0;
+    for (label, k) in [("small k (η=0.375, Fig. 5)", 6), ("large k (η=0.75, Fig. 6)", 12)] {
+        println!("\n=== {label}: n={n}, m={m}, β≈{beta} ===");
+        let mut table = TableWriter::new(&[
+            "scheme", "n", "k/m", "β", "λmin", "λmax", "ε", "bulk@1",
+        ]);
+        for scheme in [
+            Scheme::Gaussian,
+            Scheme::Paley,
+            Scheme::Hadamard,
+            Scheme::Steiner,
+            Scheme::Haar,
+        ] {
+            let enc = Encoding::build(scheme, n, m, beta, 5)?;
+            let mut an = SubsetSpectrum::new(&enc, 11);
+            let stats = an.analyze(k, 12);
+            table.row(&stats.summary_row());
+        }
+        table.print();
+    }
+    println!("\nPaper's Figs. 5–6 shape: ETFs concentrate the bulk at exactly 1");
+    println!("(Prop. 8 plateau); Gaussian spreads Marchenko–Pastur-style.");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT lowering: JAX/Pallas (L2+L1) → HLO text artifacts for the rust
+runtime.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Emits one ``<name>.hlo.txt`` per (function, shard shape) variant plus
+``manifest.toml``, the index the rust `ArtifactIndex` loads.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shard shapes (rows, cols) the benches/examples use. A worker whose
+# shard matches one of these gets the PJRT fast path; anything else
+# falls back to the rust-native kernel.
+QUAD_GRAD_SHAPES = [
+    (64, 32),
+    (128, 64),
+    (256, 64),
+    (256, 128),
+    (512, 128),
+]
+
+LINESEARCH_SHAPES = [
+    (128, 64),
+    (256, 128),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side can unwrap uniformly with ``to_tuple1``)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_quad_grad(rows: int, cols: int, use_pallas: bool = True) -> str:
+    sx = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    sy = jax.ShapeDtypeStruct((rows,), jnp.float32)
+    w = jax.ShapeDtypeStruct((cols,), jnp.float32)
+    fn = model.quad_grad if use_pallas else model.quad_grad_jnp
+    return to_hlo_text(jax.jit(fn).lower(sx, sy, w))
+
+
+def lower_linesearch(rows: int, cols: int) -> str:
+    sx = jax.ShapeDtypeStruct((rows, cols), jnp.float32)
+    d = jax.ShapeDtypeStruct((cols,), jnp.float32)
+    return to_hlo_text(jax.jit(model.linesearch_quad).lower(sx, d))
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+
+    def emit(name: str, kind: str, rows: int, cols: int, text: str) -> None:
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f'[{name}]\nfile = "{fname}"\nkind = "{kind}"\nrows = {rows}\ncols = {cols}\n'
+        )
+        print(f"  {name}: {len(text)} chars")
+
+    print("lowering quad_grad (pallas) variants:")
+    for rows, cols in QUAD_GRAD_SHAPES:
+        emit(
+            f"quad_grad_{rows}x{cols}",
+            "quad_grad",
+            rows,
+            cols,
+            lower_quad_grad(rows, cols, use_pallas=True),
+        )
+
+    print("lowering quad_grad (jnp reference) cross-check variant:")
+    rows, cols = QUAD_GRAD_SHAPES[0]
+    emit(
+        f"quad_grad_jnp_{rows}x{cols}",
+        "quad_grad_jnp",
+        rows,
+        cols,
+        lower_quad_grad(rows, cols, use_pallas=False),
+    )
+
+    print("lowering linesearch variants:")
+    for rows, cols in LINESEARCH_SHAPES:
+        emit(
+            f"linesearch_{rows}x{cols}",
+            "linesearch",
+            rows,
+            cols,
+            lower_linesearch(rows, cols),
+        )
+
+    with open(os.path.join(args.out, "manifest.toml"), "w") as f:
+        f.write("\n".join(manifest_lines))
+    print(f"wrote {args.out}/manifest.toml ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

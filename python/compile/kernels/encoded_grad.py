@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: the encoded-gradient hot spot.
+
+Computes the per-worker partial gradient of the encoded quadratic loss
+(paper eq. 10):
+
+    r = (S̄X)ᵀ (S̄X·w − S̄y)
+
+for the worker's resident shard ``sx = S̄X ∈ R^{rows×p}``, ``sy = S̄y``.
+The kernel tiles the shard over a 1-D grid of row-blocks: each grid step
+streams one ``(block_rows × p)`` tile of ``sx`` through VMEM while ``w``
+stays resident, computes the local residual, and accumulates the
+rank-`block_rows` contribution into the output block (which maps to the
+same ``p``-vector at every grid step — the canonical Pallas reduction
+pattern).
+
+TPU mapping (DESIGN.md §4): the two products per tile are MXU-shaped
+matmuls (``tile @ w`` and ``tileᵀ @ resid``); VMEM footprint per step is
+``block_rows·p + 2·block_rows + 2·p`` floats. On this CPU plugin the
+kernel runs with ``interpret=True`` (Mosaic custom-calls cannot execute
+on CPU-PJRT); the lowered HLO is what the rust runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _grad_kernel(sx_ref, sy_ref, w_ref, o_ref):
+    """One grid step: accumulate sx_tileᵀ(sx_tile·w − sy_tile)."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = sx_ref[...]  # (block_rows, p)
+    resid = tile @ w_ref[...] - sy_ref[...]  # (block_rows,)
+    o_ref[...] += tile.T @ resid  # (p,)
+
+
+def _pick_block_rows(rows: int, requested: int) -> int:
+    """Largest divisor of ``rows`` not exceeding ``requested``."""
+    b = min(requested, rows)
+    while rows % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def encoded_grad(sx, sy, w, *, block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Pallas-tiled encoded gradient ``sxᵀ(sx·w − sy)``.
+
+    Shapes: ``sx (rows, p)``, ``sy (rows,)``, ``w (p,)`` → ``(p,)``.
+    """
+    rows, p = sx.shape
+    assert sy.shape == (rows,), f"sy shape {sy.shape} != ({rows},)"
+    assert w.shape == (p,), f"w shape {w.shape} != ({p},)"
+    b = _pick_block_rows(rows, block_rows)
+    grid = (rows // b,)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, p), lambda i: (i, 0)),
+            pl.BlockSpec((b,), lambda i: (i,)),
+            pl.BlockSpec((p,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((p,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((p,), sx.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(sx, sy, w)
+
+
+def vmem_estimate_bytes(block_rows: int, p: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one grid step (DESIGN.md §Perf):
+    sx tile + sy tile + w + output accumulator + residual scratch."""
+    return dtype_bytes * (block_rows * p + block_rows + p + p + block_rows)

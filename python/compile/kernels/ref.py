@@ -1,0 +1,24 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against in
+``python/tests/``; they are also lowered (without Pallas) as alternative
+artifacts so the rust integration test can cross-check numerics.
+"""
+
+import jax.numpy as jnp
+
+
+def encoded_grad_ref(sx, sy, w):
+    """r = sxᵀ(sx·w − sy)."""
+    return sx.T @ (sx @ w - sy)
+
+
+def linesearch_quad_ref(sx, d):
+    """‖sx·d‖² — the worker's exact-line-search response (paper eq. 3)."""
+    v = sx @ d
+    return jnp.dot(v, v)
+
+
+def soft_threshold_ref(x, tau):
+    """prox of τ‖·‖₁ (ISTA master step)."""
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - tau, 0.0)

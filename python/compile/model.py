@@ -1,0 +1,40 @@
+"""L2 JAX model: the per-worker computations, built on the L1 kernels.
+
+Each function here is a pure JAX function over the worker's resident
+shard; ``aot.py`` lowers them (per shard shape) to HLO text, and the
+rust runtime (rust/src/runtime) executes the artifacts from the hot
+path. The Pallas kernel is called inside, so it lowers into the same
+HLO module — a single PJRT call per worker step.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.encoded_grad import encoded_grad
+from .kernels import ref
+
+
+def quad_grad(sx, sy, w):
+    """Worker gradient task (KIND_GRADIENT): r = (S̄X)ᵀ(S̄X·w − S̄y).
+
+    The matmul hot spot runs through the Pallas kernel; returns a tuple
+    so the rust side unwraps with ``to_tuple1``.
+    """
+    return (encoded_grad(sx, sy, w),)
+
+
+def quad_grad_jnp(sx, sy, w):
+    """Reference variant without Pallas (cross-check artifact)."""
+    return (ref.encoded_grad_ref(sx, sy, w),)
+
+
+def linesearch_quad(sx, d):
+    """Worker line-search task (KIND_LINESEARCH): ‖S̄X·d‖² (eq. 3)."""
+    v = sx @ d
+    return (jnp.dot(v, v),)
+
+
+def prox_step(w, g, alpha, tau):
+    """Master-side ISTA step (lowered for completeness / future fusing):
+    prox_{τ‖·‖₁}(w − α·g)."""
+    z = w - alpha * g
+    return (jnp.sign(z) * jnp.maximum(jnp.abs(z) - tau, 0.0),)

@@ -1,0 +1,9 @@
+"""Test configuration: enable x64 so dtype-fidelity tests can use f64.
+
+The shipped artifacts are all f32 (explicit ShapeDtypeStructs in
+aot.py), so this does not change the lowering contract.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,94 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and block sizes; fixed-seed numpy cases cover
+the exact shard shapes the AOT pipeline ships.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.encoded_grad import (
+    DEFAULT_BLOCK_ROWS,
+    _pick_block_rows,
+    encoded_grad,
+    vmem_estimate_bytes,
+)
+from compile.kernels import ref
+
+
+def random_case(rows, cols, seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    sx = rng.standard_normal((rows, cols)).astype(dtype)
+    sy = rng.standard_normal(rows).astype(dtype)
+    w = rng.standard_normal(cols).astype(dtype)
+    return sx, sy, w
+
+
+@pytest.mark.parametrize("rows,cols", [(64, 32), (128, 64), (256, 64), (256, 128), (512, 128)])
+def test_kernel_matches_ref_on_shipped_shapes(rows, cols):
+    sx, sy, w = random_case(rows, cols, seed=rows * 1000 + cols)
+    got = np.asarray(encoded_grad(jnp.array(sx), jnp.array(sy), jnp.array(w)))
+    want = np.asarray(ref.encoded_grad_ref(jnp.array(sx), jnp.array(sy), jnp.array(w)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=96),
+    cols=st.integers(min_value=1, max_value=48),
+    block=st.integers(min_value=1, max_value=64),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_kernel_matches_ref_hypothesis(rows, cols, block, seed):
+    sx, sy, w = random_case(rows, cols, seed)
+    got = np.asarray(
+        encoded_grad(jnp.array(sx), jnp.array(sy), jnp.array(w), block_rows=block)
+    )
+    want = sx.T @ (sx @ w - sy)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=2, max_value=64),
+    cols=st.integers(min_value=1, max_value=32),
+    seed=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_kernel_float64_path(rows, cols, seed):
+    # interpret-mode kernel must respect the input dtype
+    sx, sy, w = random_case(rows, cols, seed, dtype=np.float64)
+    got = np.asarray(encoded_grad(jnp.array(sx), jnp.array(sy), jnp.array(w)))
+    want = sx.T @ (sx @ w - sy)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_zero_w_gives_minus_xty():
+    sx, sy, _ = random_case(32, 8, 7)
+    w = np.zeros(8, np.float32)
+    got = np.asarray(encoded_grad(jnp.array(sx), jnp.array(sy), jnp.array(w)))
+    np.testing.assert_allclose(got, -sx.T @ sy, rtol=1e-5, atol=1e-5)
+
+
+def test_gradient_of_exact_fit_is_zero():
+    rng = np.random.default_rng(3)
+    sx = rng.standard_normal((40, 10)).astype(np.float32)
+    w = rng.standard_normal(10).astype(np.float32)
+    sy = (sx @ w).astype(np.float32)
+    got = np.asarray(encoded_grad(jnp.array(sx), jnp.array(sy), jnp.array(w)))
+    np.testing.assert_allclose(got, np.zeros(10), atol=1e-3)
+
+
+@pytest.mark.parametrize("rows,requested,expect", [(128, 128, 128), (128, 100, 64), (7, 4, 1), (60, 16, 15)])
+def test_pick_block_rows_divides(rows, requested, expect):
+    b = _pick_block_rows(rows, requested)
+    assert b == expect
+    assert rows % b == 0
+
+
+def test_vmem_estimate_is_positive_and_scales():
+    small = vmem_estimate_bytes(32, 64)
+    big = vmem_estimate_bytes(DEFAULT_BLOCK_ROWS, 64)
+    assert 0 < small < big

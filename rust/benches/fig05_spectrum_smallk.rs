@@ -1,0 +1,45 @@
+//! Figure 5: sample spectrum of S_AᵀS_A for various constructions with
+//! SMALL k (η well below 1). Regenerates the eigenvalue histograms the
+//! paper plots, as ASCII series + summary table.
+//!
+//!     cargo bench --bench fig05_spectrum_smallk
+
+use coded_opt::bench::banner;
+use coded_opt::config::Scheme;
+use coded_opt::encoding::{Encoding, SubsetSpectrum};
+use coded_opt::metrics::TableWriter;
+
+fn main() -> anyhow::Result<()> {
+    banner("Figure 5", "spectrum of subset Grams, small k (η = 0.375)");
+    let (n, m, beta, k) = (120usize, 16usize, 2.0, 6usize);
+    let mut table =
+        TableWriter::new(&["scheme", "n", "k/m", "β", "λmin", "λmax", "ε", "bulk@1"]);
+    for scheme in [
+        Scheme::Gaussian,
+        Scheme::Paley,
+        Scheme::Hadamard,
+        Scheme::Steiner,
+        Scheme::Haar,
+    ] {
+        let enc = Encoding::build(scheme, n, m, beta, 5)?;
+        let mut an = SubsetSpectrum::new(&enc, 11);
+        let stats = an.analyze(k, 16);
+        table.row(&stats.summary_row());
+        // ASCII histogram over [0, 2.5] — the figure's x-axis
+        let hist = stats.histogram(0.0, 2.5, 25);
+        let max = *hist.iter().max().unwrap() as f64;
+        let bars: String = hist
+            .iter()
+            .map(|&c| {
+                let lvl = (8.0 * c as f64 / max.max(1.0)).round() as usize;
+                [' ', '.', ':', '-', '=', '+', '*', '#', '@'][lvl.min(8)]
+            })
+            .collect();
+        println!("{:<10} |{}| λ∈[0,2.5]", scheme.name(), bars);
+    }
+    println!();
+    table.print();
+    println!("\nPaper shape: ETF spectra (paley/hadamard/steiner) concentrate harder than");
+    println!("gaussian; at η < 1−1/β no flat plateau is guaranteed (Prop. 8 premise fails).");
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Figure 7: ridge regression with distributed encoded L-BFGS.
+//! Left panel — objective evolution for uncoded / replication / Hadamard
+//! at the paper's k=12, m=32 operating point (persistent stragglers).
+//! Right panel — total runtime vs η for a fixed iteration budget.
+//!
+//!     cargo bench --bench fig07_ridge
+
+use coded_opt::bench::banner;
+use coded_opt::cluster::{Gather, SimCluster};
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::{build_data_parallel, run_lbfgs, LbfgsConfig};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::delay::{BackgroundTasksDelay, DelayModel};
+use coded_opt::metrics::TableWriter;
+use coded_opt::objectives::{QuadObjective, RidgeProblem};
+
+const SECS_PER_UNIT: f64 = 2e-4;
+
+fn delay_for(m: usize, seed: u64) -> Box<dyn DelayModel> {
+    // persistent background-load stragglers: the regime where fixed-k
+    // uncoded permanently drops the same blocks
+    Box::new(BackgroundTasksDelay::new(m, 1.5, 50, 0.2, seed))
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Figure 7", "ridge L-BFGS: convergence (left) and runtime vs η (right)");
+    // paper: (n,p)=(4096,6000), m=32, k=12, λ=0.05, β=2 — scaled 4×
+    let (n, p, m, k) = (1024usize, 256usize, 32usize, 12usize);
+    let lambda = 0.05;
+    let (x, y, _) = gaussian_linear(n, p, 0.5, 99);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), lambda);
+    let f_star = prob.objective(&prob.solve_exact());
+    println!("n={n} p={p} m={m} k={k} λ={lambda} β=2   f*={f_star:.6}\n");
+
+    // ---- Left: evolution of (f−f*)/f* per iteration
+    println!("LEFT: relative suboptimality vs iteration");
+    println!("{:<6} {:>12} {:>12} {:>12}", "iter", "uncoded", "replication", "hadamard");
+    let mut traces = Vec::new();
+    for scheme in [Scheme::Uncoded, Scheme::Replication, Scheme::Hadamard] {
+        let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 5)?;
+        let asm = dp.assembler.clone();
+        let mut cluster =
+            SimCluster::new(dp.workers, delay_for(m, 77)).with_timing(SECS_PER_UNIT, 1e-3);
+        let cfg = LbfgsConfig { k, iters: 40, lambda, memory: 10, rho: 0.9, w0: None };
+        let out = run_lbfgs(&mut cluster, &asm, &cfg, scheme.name(), &|w| {
+            (prob.objective(w), 0.0)
+        });
+        traces.push(out.trace);
+    }
+    for i in (0..40).step_by(4) {
+        print!("{:<6}", i);
+        for t in &traces {
+            print!(" {:>12.3e}", (t.records[i].objective - f_star) / f_star);
+        }
+        println!();
+    }
+    println!("\nfinal suboptimality:");
+    for t in &traces {
+        println!("  {:<12} {:.3e}", t.label, (t.final_objective() - f_star) / f_star);
+    }
+
+    // ---- Right: runtime vs η for the same iteration count
+    println!("\nRIGHT: simulated runtime (s) for 40 iterations vs η = k/m");
+    let mut table = TableWriter::new(&["η", "k", "uncoded", "replication", "hadamard"]);
+    for k_sweep in [8usize, 12, 16, 20, 24, 28, 32] {
+        let mut row = vec![format!("{:.3}", k_sweep as f64 / m as f64), format!("{k_sweep}")];
+        for scheme in [Scheme::Uncoded, Scheme::Replication, Scheme::Hadamard] {
+            let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 5)?;
+            let asm = dp.assembler.clone();
+            let mut cluster =
+                SimCluster::new(dp.workers, delay_for(m, 77)).with_timing(SECS_PER_UNIT, 1e-3);
+            let cfg =
+                LbfgsConfig { k: k_sweep, iters: 40, lambda, memory: 10, rho: 0.9, w0: None };
+            let _ = run_lbfgs(&mut cluster, &asm, &cfg, scheme.name(), &|_| (0.0, 0.0));
+            row.push(format!("{:.1}", cluster.clock()));
+        }
+        table.row(&row);
+    }
+    table.print();
+    println!("\nPaper shape: runtime grows steeply as η→1 (waiting for stragglers);");
+    println!("k=12 cuts runtime ~40% vs k=32 while hadamard keeps converging stably.");
+    Ok(())
+}

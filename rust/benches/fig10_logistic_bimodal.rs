@@ -1,0 +1,164 @@
+//! Figure 10: logistic regression (encoded BCD, model parallelism) —
+//! train/test error over TIME under the bimodal delay mixture
+//! (q=0.5: N(0.5s, 0.2²) + N(20s, 5²)), k/m = 0.5, β = 2.
+//! Schemes: Steiner, Haar, uncoded, replication(-equivalent), async.
+//!
+//!     cargo bench --bench fig10_logistic_bimodal
+
+use coded_opt::bench::banner;
+use coded_opt::cluster::SimCluster;
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::asynchronous::{run_async_bcd, AsyncBcdConfig};
+use coded_opt::coordinator::bcd::{
+    build_model_parallel, logistic_phi, replication_equivalent, run_bcd, BcdConfig,
+};
+use coded_opt::data::rcv1like;
+use coded_opt::delay::{MinOfR, MixtureDelay};
+use coded_opt::encoding::partition_bounds;
+use coded_opt::metrics::Trace;
+use coded_opt::objectives::LogisticProblem;
+
+const SECS_PER_UNIT: f64 = 1e-4;
+
+fn main() -> anyhow::Result<()> {
+    banner("Figure 10", "logistic BCD, bimodal stragglers: error vs time");
+    // paper: m=128, k=64, β=2 on rcv1 — scaled: m=16, k=8
+    let (docs, feats, nnz) = (700usize, 256usize, 12usize);
+    let (m, k) = (16usize, 8usize);
+    let ds = rcv1like::generate(docs, feats, nnz, 0.05, 77);
+    let x = ds.train.to_dense();
+    let n_train = ds.train.rows();
+    let prob = LogisticProblem::new(ds.train.clone(), 1e-4);
+    let step = 1.0 / prob.smoothness() / 4.0;
+    let iters = 400;
+
+    let mut traces: Vec<Trace> = Vec::new();
+
+    // ---- encoded / uncoded BCD. "uncoded k=m" is the paper's main
+    // baseline: it waits for every straggler (≈20 s nodes) each round.
+    let sync_runs: Vec<(&str, Scheme, usize, f64, usize)> = vec![
+        ("steiner k<m", Scheme::Steiner, k, 2.0, iters),
+        ("haar k<m", Scheme::Haar, k, 2.0, iters),
+        ("uncoded k<m", Scheme::Uncoded, k, 1.0, iters),
+        // far fewer rounds fit in the same wall budget at k=m
+        ("uncoded k=m", Scheme::Uncoded, m, 1.0, iters),
+    ];
+    for (label, scheme, k_run, beta, it) in sync_runs {
+        let mp = build_model_parallel(&x, scheme, m, beta, step, 1e-4, 13, logistic_phi())?;
+        let sbar = mp.sbar;
+        let delay = MixtureDelay::paper_bimodal(m, 29);
+        let mut cluster =
+            SimCluster::new(mp.workers, Box::new(delay)).with_timing(SECS_PER_UNIT, 1e-3);
+        let cfg = BcdConfig { k: k_run, iters: it };
+        let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, label, &|w| {
+            (prob.objective(w), prob.error_rate(w, &ds.test))
+        });
+        traces.push(out.trace);
+    }
+
+    // ---- replication-equivalent: P logical workers, fastest-of-2 delays
+    {
+        let (p_logical, k_logical) = replication_equivalent(m, 2, k);
+        let mp = build_model_parallel(
+            &x,
+            Scheme::Uncoded,
+            p_logical,
+            1.0,
+            step,
+            1e-4,
+            13,
+            logistic_phi(),
+        )?;
+        let sbar = mp.sbar;
+        let inner = MixtureDelay::paper_bimodal(2 * p_logical, 29);
+        let delay = MinOfR::new(inner, 2);
+        let mut cluster =
+            SimCluster::new(mp.workers, Box::new(delay)).with_timing(SECS_PER_UNIT, 1e-3);
+        let cfg = BcdConfig { k: k_logical, iters };
+        let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, "replication", &|w| {
+            (prob.objective(w), prob.error_rate(w, &ds.test))
+        });
+        traces.push(out.trace);
+    }
+
+    // ---- async baseline, same wall budget
+    {
+        let bounds = partition_bounds(feats, m);
+        let blocks: Vec<coded_opt::linalg::Mat> = bounds
+            .windows(2)
+            .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
+            .collect();
+        let grad_phi = |u: &[f64]| -> Vec<f64> {
+            let n = u.len() as f64;
+            u.iter().map(|&ui| -coded_opt::objectives::logistic::sigmoid(-ui) / n).collect()
+        };
+        let mut delay = MixtureDelay::paper_bimodal(m, 29);
+        let budget = traces.iter().map(|t| t.total_time()).fold(0.0, f64::max);
+        // async applies ~1 update per mean-delay per worker; cap generously
+        let cfg = AsyncBcdConfig {
+            step,
+            lambda: 1e-4,
+            updates: 40_000,
+            secs_per_unit: SECS_PER_UNIT,
+            record_every: 200,
+        };
+        let eval = |v: &[Vec<f64>]| -> (f64, f64) {
+            let w: Vec<f64> = v.iter().flatten().copied().collect();
+            (prob.objective(&w), prob.error_rate(&w, &ds.test))
+        };
+        let (mut trace, _, _) =
+            run_async_bcd(&blocks, &grad_phi, n_train, &cfg, &mut delay, "async", &eval);
+        // truncate to the synchronized runs' wall budget for fairness
+        trace.records.retain(|r| r.time <= budget);
+        traces.push(trace);
+    }
+
+    // ---- print error-vs-time series (axis spans the k<m runs; the
+    // k=m run is far slower — its state is read at the same checkpoints)
+    let t_max = traces
+        .iter()
+        .filter(|t| t.label != "uncoded k=m")
+        .map(|t| t.total_time())
+        .fold(0.0, f64::max);
+    let checkpoints: Vec<f64> = (1..=8).map(|i| t_max * i as f64 / 8.0).collect();
+    println!("\ntrain objective at time t:");
+    print!("{:<10}", "time(s)");
+    for t in &traces {
+        print!(" {:>12}", t.label);
+    }
+    println!();
+    for &cp in &checkpoints {
+        print!("{:<10.0}", cp);
+        for t in &traces {
+            print!(" {:>12.4}", t.objective_at_time(cp));
+        }
+        println!();
+    }
+    println!("\ntest error at time t:");
+    print!("{:<10}", "time(s)");
+    for t in &traces {
+        print!(" {:>12}", t.label);
+    }
+    println!();
+    for &cp in &checkpoints {
+        print!("{:<10.0}", cp);
+        for t in &traces {
+            print!(" {:>12.4}", t.test_metric_at_time(cp));
+        }
+        println!();
+    }
+    println!("\nfinal state per run:");
+    for t in &traces {
+        println!(
+            "  {:<14} obj {:.4}  test err {:.3}  total sim time {:.0}s",
+            t.label,
+            t.final_objective(),
+            t.final_test_metric(),
+            t.total_time()
+        );
+    }
+    println!("\nPaper shape (Fig. 10): waiting for all (uncoded k=m) pays the ~20 s");
+    println!("straggler tail every round — k<m schemes do ~10× more rounds in the");
+    println!("same wall time; the encoded ones keep full-data fidelity while doing so.");
+    Ok(())
+}

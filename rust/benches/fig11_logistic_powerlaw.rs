@@ -1,0 +1,124 @@
+//! Figure 11: logistic regression (encoded BCD) — train/test error over
+//! time when the number of background tasks per machine follows a power
+//! law (α = 1.5, capped at 50); k/m = 0.625 (the paper's k=80, m=128).
+//!
+//!     cargo bench --bench fig11_logistic_powerlaw
+
+use coded_opt::bench::banner;
+use coded_opt::cluster::SimCluster;
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::asynchronous::{run_async_bcd, AsyncBcdConfig};
+use coded_opt::coordinator::bcd::{build_model_parallel, logistic_phi, run_bcd, BcdConfig};
+use coded_opt::data::rcv1like;
+use coded_opt::delay::BackgroundTasksDelay;
+use coded_opt::encoding::partition_bounds;
+use coded_opt::metrics::Trace;
+use coded_opt::objectives::LogisticProblem;
+
+const SECS_PER_UNIT: f64 = 1e-4;
+
+fn main() -> anyhow::Result<()> {
+    banner("Figure 11", "logistic BCD, power-law background tasks: error vs time");
+    let (docs, feats, nnz) = (700usize, 256usize, 12usize);
+    let (m, k) = (16usize, 10usize); // k/m = 0.625 = paper's 80/128
+    let ds = rcv1like::generate(docs, feats, nnz, 0.05, 77);
+    let x = ds.train.to_dense();
+    let n_train = ds.train.rows();
+    let prob = LogisticProblem::new(ds.train.clone(), 1e-4);
+    let step = 1.0 / prob.smoothness() / 4.0;
+    let iters = 400;
+
+    let mut traces: Vec<Trace> = Vec::new();
+    let sync_runs: Vec<(&str, Scheme, usize, f64)> = vec![
+        ("steiner k<m", Scheme::Steiner, k, 2.0),
+        ("haar k<m", Scheme::Haar, k, 2.0),
+        ("uncoded k<m", Scheme::Uncoded, k, 1.0),
+        ("uncoded k=m", Scheme::Uncoded, m, 1.0),
+    ];
+    for (label, scheme, k_run, beta) in sync_runs {
+        let mp = build_model_parallel(&x, scheme, m, beta, step, 1e-4, 13, logistic_phi())?;
+        let sbar = mp.sbar;
+        let delay = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31);
+        let mut cluster =
+            SimCluster::new(mp.workers, Box::new(delay)).with_timing(SECS_PER_UNIT, 1e-3);
+        let cfg = BcdConfig { k: k_run, iters };
+        let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, label, &|w| {
+            (prob.objective(w), prob.error_rate(w, &ds.test))
+        });
+        traces.push(out.trace);
+    }
+    // async under the same persistent background load, same wall budget
+    {
+        let bounds = partition_bounds(feats, m);
+        let blocks: Vec<coded_opt::linalg::Mat> = bounds
+            .windows(2)
+            .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
+            .collect();
+        let grad_phi = |u: &[f64]| -> Vec<f64> {
+            let n = u.len() as f64;
+            u.iter().map(|&ui| -coded_opt::objectives::logistic::sigmoid(-ui) / n).collect()
+        };
+        let mut delay = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31);
+        let budget = traces.iter().map(|t| t.total_time()).fold(0.0, f64::max);
+        let cfg = AsyncBcdConfig {
+            step,
+            lambda: 1e-4,
+            updates: 40_000,
+            secs_per_unit: SECS_PER_UNIT,
+            record_every: 200,
+        };
+        let eval = |v: &[Vec<f64>]| -> (f64, f64) {
+            let w: Vec<f64> = v.iter().flatten().copied().collect();
+            (prob.objective(&w), prob.error_rate(&w, &ds.test))
+        };
+        let (mut trace, _, _) =
+            run_async_bcd(&blocks, &grad_phi, n_train, &cfg, &mut delay, "async", &eval);
+        trace.records.retain(|r| r.time <= budget);
+        traces.push(trace);
+    }
+
+    let t_max = traces
+        .iter()
+        .filter(|t| t.label != "uncoded k=m")
+        .map(|t| t.total_time())
+        .fold(0.0, f64::max);
+    println!("\ntrain objective / test error at time t:");
+    print!("{:<10}", "time(s)");
+    for t in &traces {
+        print!(" {:>20}", t.label);
+    }
+    println!();
+    for i in 1..=8 {
+        let cp = t_max * i as f64 / 8.0;
+        print!("{:<10.1}", cp);
+        for t in &traces {
+            print!(
+                " {:>12.4}/{:>6.3}",
+                t.objective_at_time(cp),
+                t.test_metric_at_time(cp)
+            );
+        }
+        println!();
+    }
+    println!("\nfinal state per run:");
+    for t in &traces {
+        println!(
+            "  {:<14} obj {:.4}  test err {:.3}  total sim time {:.0}s",
+            t.label,
+            t.final_objective(),
+            t.final_test_metric(),
+            t.total_time()
+        );
+    }
+    println!("\nPaper shape (Fig. 11): under PERSISTENT power-law load the same machines");
+    println!("straggle forever: uncoded k<m permanently freezes their blocks (stalls");
+    println!("above the encoded runs), uncoded k=m pays their latency every round, and");
+    println!("the encoded schemes sidestep both.");
+    println!("\nHONEST DIVERGENCE NOTE: in this scaled simulator the async baseline is");
+    println!("more competitive on raw objective than in the paper's 128-node EC2 runs —");
+    println!("block-separable staleness is benign at m=16 with a convex objective. The");
+    println!("paper's async pathologies (Fig. 13 participation skew, no deterministic");
+    println!("guarantee, divergence risk at aggressive steps) are reproduced in");
+    println!("fig13_participation_async and the theory checkpoints.");
+    Ok(())
+}

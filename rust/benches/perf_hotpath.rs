@@ -1,0 +1,98 @@
+//! Hot-path microbenchmarks (EXPERIMENTS.md §Perf).
+//!
+//! Times the components that dominate an encoded-optimization round:
+//! worker gradient kernels (native vs PJRT), gather-round dispatch
+//! overhead, gradient assembly, FWHT encoding, and encoding construction.
+//!
+//!     cargo bench --bench perf_hotpath
+
+use coded_opt::bench::{banner, run_bench};
+use coded_opt::cluster::{Gather, SimCluster, Task};
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::{build_data_parallel, KIND_GRADIENT};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::delay::NoDelay;
+use coded_opt::linalg::fwht::fwht;
+use coded_opt::linalg::Mat;
+use coded_opt::rng::Pcg64;
+use coded_opt::runtime::{ArtifactIndex, GradExecutor};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    banner("perf", "hot-path microbenchmarks (native kernel, PJRT, gather, FWHT)");
+    let mut rng = Pcg64::new(1);
+
+    // ---- native worker gradient kernel, shipped shapes
+    for &(rows, cols) in &[(128usize, 64usize), (512, 128)] {
+        let sx = Mat::from_fn(rows, cols, |_, _| rng.next_f64() - 0.5);
+        let sy: Vec<f64> = (0..rows).map(|_| rng.next_f64() - 0.5).collect();
+        let w: Vec<f64> = (0..cols).map(|_| rng.next_f64() - 0.5).collect();
+        run_bench(&format!("native quad_grad {rows}x{cols}"), 20, 200, || {
+            let mut resid = sx.matvec(&w);
+            for (r, y) in resid.iter_mut().zip(&sy) {
+                *r -= y;
+            }
+            std::hint::black_box(sx.matvec_t(&resid));
+        });
+    }
+
+    // ---- PJRT worker gradient kernel (AOT pallas artifact)
+    let idx = ArtifactIndex::load(Path::new("artifacts"))?;
+    if idx.is_empty() {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    } else {
+        for &(rows, cols) in &[(128usize, 64usize), (512, 128)] {
+            let sx = Mat::from_fn(rows, cols, |_, _| rng.next_f64() - 0.5);
+            let sy: Vec<f64> = (0..rows).map(|_| rng.next_f64() - 0.5).collect();
+            let w: Vec<f64> = (0..cols).map(|_| rng.next_f64() - 0.5).collect();
+            if let Some(mut exec) = GradExecutor::from_index(&idx, &sx, &sy) {
+                exec.gradient(&w)?; // compile once outside the timer
+                run_bench(&format!("PJRT  quad_grad {rows}x{cols}"), 20, 200, || {
+                    std::hint::black_box(exec.gradient(&w).unwrap());
+                });
+            }
+        }
+    }
+
+    // ---- full gather round (m=8 sim cluster, no delays): coordinator
+    //      dispatch + worker compute + assembly
+    {
+        let (x, y, _) = gaussian_linear(512, 64, 0.3, 5);
+        let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 5)?;
+        let asm = dp.assembler.clone();
+        let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(8)));
+        let w: Vec<f64> = (0..64).map(|_| rng.next_f64() - 0.5).collect();
+        let mut iter = 0usize;
+        run_bench("gather round m=8 (512x64, hadamard)", 10, 100, || {
+            let rr = cluster.round(6, &mut |_| Task {
+                iter,
+                kind: KIND_GRADIENT,
+                payload: w.clone(),
+                aux: vec![],
+            });
+            iter += 1;
+            std::hint::black_box(asm.assemble(&rr.responses));
+        });
+    }
+
+    // ---- FWHT encoding throughput
+    for nn in [1024usize, 8192] {
+        let mut buf: Vec<f64> = (0..nn).map(|i| (i as f64 * 0.37).sin()).collect();
+        run_bench(&format!("FWHT n={nn}"), 20, 200, || {
+            fwht(&mut buf);
+        });
+    }
+
+    // ---- encoding construction (amortized once per experiment)
+    run_bench("build hadamard encoding 1024x512 m=16", 2, 10, || {
+        std::hint::black_box(
+            coded_opt::encoding::Encoding::build(Scheme::Hadamard, 512, 16, 2.0, 3).unwrap(),
+        );
+    });
+    run_bench("build steiner  encoding n=496 m=16", 2, 10, || {
+        std::hint::black_box(
+            coded_opt::encoding::Encoding::build(Scheme::Steiner, 496, 16, 2.0, 3).unwrap(),
+        );
+    });
+    Ok(())
+}

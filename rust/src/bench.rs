@@ -1,0 +1,101 @@
+//! Benchmark harness (criterion stand-in for the offline environment).
+//!
+//! Used by the `rust/benches/*` binaries (declared with `harness = false`)
+//! to produce stable timing summaries and the paper-table output rows.
+
+use std::time::Instant;
+
+use crate::metrics::Histogram;
+
+/// Timing statistics from [`run_bench`].
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub iters: usize,
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} mean {:>12} p50 {:>12} p95 {:>12} ({} iters)",
+            self.name,
+            fmt_secs(self.mean_secs),
+            fmt_secs(self.p50_secs),
+            fmt_secs(self.p95_secs),
+            self.iters
+        )
+    }
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Time a closure `iters` times after `warmup` runs; returns stats.
+pub fn run_bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut h = Histogram::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        h.record(t0.elapsed().as_secs_f64());
+    }
+    let stats = BenchStats {
+        name: name.to_string(),
+        mean_secs: h.mean(),
+        p50_secs: h.percentile(0.5),
+        p95_secs: h.percentile(0.95),
+        iters,
+    };
+    println!("{stats}");
+    stats
+}
+
+/// Header banner for a bench binary; prints which paper artifact it
+/// regenerates.
+pub fn banner(fig: &str, desc: &str) {
+    println!("================================================================");
+    println!("  coded-opt bench — {fig}");
+    println!("  {desc}");
+    println!("================================================================");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_counts() {
+        let mut count = 0usize;
+        let stats = run_bench("noop", 2, 5, || {
+            count += 1;
+        });
+        assert_eq!(count, 7);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.mean_secs >= 0.0);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("µs"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

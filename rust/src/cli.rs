@@ -1,0 +1,122 @@
+//! Command-line argument parsing for the launcher (no clap offline).
+//!
+//! Grammar: `coded-opt <subcommand> [--key value | --key=value | --flag]*`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                args.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(stripped) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            if stripped.is_empty() {
+                bail!("bare '--' not supported");
+            }
+            if let Some(eq) = stripped.find('=') {
+                let (k, v) = stripped.split_at(eq);
+                args.options.insert(k.to_string(), v[1..].to_string());
+            } else if let Some(next) = it.peek() {
+                if next.starts_with("--") {
+                    args.flags.push(stripped.to_string());
+                } else {
+                    args.options.insert(stripped.to_string(), it.next().unwrap());
+                }
+            } else {
+                args.flags.push(stripped.to_string());
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Self> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'"))?)),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'"))?)),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["run", "--config", "exp.toml", "--k=12", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("config"), Some("exp.toml"));
+        assert_eq!(a.get_usize("k").unwrap(), Some(12));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["bench", "--fast"]);
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["run", "--offset=-1.5"]);
+        assert_eq!(a.get_f64("offset").unwrap(), Some(-1.5));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--k", "3"]);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_usize("k").unwrap(), Some(3));
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse(&["run", "--k", "abc"]);
+        assert!(a.get_usize("k").is_err());
+    }
+
+    #[test]
+    fn positional_after_subcommand_rejected() {
+        assert!(Args::parse(["run".to_string(), "oops".to_string()]).is_err());
+    }
+}

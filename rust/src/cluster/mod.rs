@@ -1,0 +1,115 @@
+//! Simulated distributed cluster: master/worker substrate with
+//! wait-for-k gather and straggler interrupts.
+//!
+//! Substitutes for the paper's EC2 deployments (see DESIGN.md §5): the
+//! paper's own MovieLens experiment already runs on a single machine with
+//! injected latencies, and the straggler phenomenology lives entirely in
+//! the delay distribution + wait-for-k semantics, both of which are
+//! reproduced exactly here.
+//!
+//! Two engines share the [`WorkerNode`] / round-gather contract:
+//! - [`sim::SimCluster`] — virtual-clock, single-threaded, fully
+//!   deterministic. Drives all paper-figure benches (time axis =
+//!   simulated seconds).
+//! - [`threads::ThreadCluster`] — real OS threads, std::mpsc messaging,
+//!   `AtomicU64` interrupt lines, wall-clock timing. Drives the examples
+//!   and the PJRT-backed end-to-end run.
+
+pub mod sim;
+pub mod threads;
+
+pub use sim::SimCluster;
+pub use threads::ThreadCluster;
+
+/// A task broadcast from the master to workers in one round.
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Iteration index t (workers echo it back; stale results discarded).
+    pub iter: usize,
+    /// Operation selector, interpreted by the worker implementation
+    /// (e.g. 0 = gradient, 1 = line-search matvec, 2 = BCD step).
+    pub kind: u32,
+    /// Main payload (e.g. the iterate w_t, or the direction d_t).
+    pub payload: Vec<f64>,
+    /// Auxiliary payload (e.g. BCD's (I_{i,t−1}, z̃_{i,t})).
+    pub aux: Vec<f64>,
+}
+
+/// One worker's computational endpoint. Implementations own their shard
+/// of the encoded data and any local state (e.g. BCD's v_i).
+pub trait WorkerNode: Send {
+    /// Execute a task, returning the update payload sent to the master.
+    fn process(&mut self, task: &Task) -> Vec<f64>;
+
+    /// Relative compute cost of one task (arrival time = cost ·
+    /// seconds-per-unit + injected delay). Defaults to 1.
+    fn cost(&self) -> f64 {
+        1.0
+    }
+}
+
+/// A single worker response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub worker: usize,
+    pub payload: Vec<f64>,
+    /// Arrival time (seconds since round start).
+    pub arrival: f64,
+}
+
+/// Result of one wait-for-k round.
+#[derive(Clone, Debug)]
+pub struct RoundResult {
+    /// The k fastest responses, in arrival order — A_t with payloads.
+    pub responses: Vec<Response>,
+    /// Time the round took (arrival of the k-th response).
+    pub elapsed: f64,
+    /// Workers that were interrupted (A_tᶜ).
+    pub interrupted: Vec<usize>,
+}
+
+impl RoundResult {
+    /// The active set A_t (sorted worker ids).
+    pub fn active_set(&self) -> Vec<usize> {
+        let mut a: Vec<usize> = self.responses.iter().map(|r| r.worker).collect();
+        a.sort_unstable();
+        a
+    }
+
+    /// Workers in arrival order (fastest first).
+    pub fn arrival_order(&self) -> Vec<usize> {
+        self.responses.iter().map(|r| r.worker).collect()
+    }
+}
+
+/// The round-gather contract shared by both engines.
+pub trait Gather {
+    /// Broadcast one task per worker (built by `task_for`), wait for the
+    /// fastest `k` responses, interrupt the rest, return the round.
+    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult;
+
+    /// Worker count m.
+    fn workers(&self) -> usize;
+
+    /// Total simulated/wall time elapsed so far (seconds).
+    fn clock(&self) -> f64;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_result_active_set_sorted() {
+        let rr = RoundResult {
+            responses: vec![
+                Response { worker: 3, payload: vec![], arrival: 0.1 },
+                Response { worker: 0, payload: vec![], arrival: 0.2 },
+            ],
+            elapsed: 0.2,
+            interrupted: vec![1, 2],
+        };
+        assert_eq!(rr.active_set(), vec![0, 3]);
+        assert_eq!(rr.arrival_order(), vec![3, 0]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Real-thread cluster: one OS thread per worker, std::mpsc messaging,
+//! atomic interrupt lines, wall-clock timing.
+//!
+//! This is the production coordinator path: worker `process()` does real
+//! compute (native kernels or PJRT executions of the AOT artifacts).
+//! Injected straggler delays are sampled master-side per round and
+//! slept worker-side in small chunks so an interrupt cancels the
+//! remainder — mirroring the paper's footnote 1 (master sends an
+//! interrupt signal; a listener thread at the worker aborts the
+//! computation).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::{Gather, Response, RoundResult, Task, WorkerNode};
+use crate::delay::DelayModel;
+
+enum Msg {
+    Run(Task, /*injected delay secs*/ f64),
+    Shutdown,
+}
+
+struct ResultMsg {
+    worker: usize,
+    iter: usize,
+    payload: Vec<f64>,
+}
+
+/// Sentinel meaning "no iteration is interrupted".
+const NO_ABORT: u64 = u64::MAX;
+
+/// Granularity of interruptible sleep.
+const SLEEP_CHUNK: Duration = Duration::from_micros(200);
+
+/// Wall-clock master/worker cluster.
+pub struct ThreadCluster {
+    task_txs: Vec<Sender<Msg>>,
+    results: Receiver<ResultMsg>,
+    abort_iter: Vec<Arc<AtomicU64>>,
+    handles: Vec<JoinHandle<()>>,
+    delay: Box<dyn DelayModel>,
+    /// Injected delays are multiplied by this factor (scale the paper's
+    /// 20-second stragglers down to test-friendly milliseconds).
+    pub delay_scale: f64,
+    started: Instant,
+    iter: usize,
+}
+
+impl ThreadCluster {
+    pub fn new(workers: Vec<Box<dyn WorkerNode>>, delay: Box<dyn DelayModel>) -> Self {
+        assert_eq!(workers.len(), delay.workers(), "delay model sized for wrong m");
+        let m = workers.len();
+        let (res_tx, res_rx) = channel::<ResultMsg>();
+        let mut task_txs = Vec::with_capacity(m);
+        let mut abort_iter = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        for (id, mut worker) in workers.into_iter().enumerate() {
+            let (tx, rx) = channel::<Msg>();
+            let abort = Arc::new(AtomicU64::new(NO_ABORT));
+            let res = res_tx.clone();
+            let abort_w = Arc::clone(&abort);
+            let handle = std::thread::Builder::new()
+                .name(format!("coded-opt-worker-{id}"))
+                .spawn(move || worker_loop(id, &mut *worker, &rx, &res, &abort_w))
+                .expect("spawn worker thread");
+            task_txs.push(tx);
+            abort_iter.push(abort);
+            handles.push(handle);
+        }
+        ThreadCluster {
+            task_txs,
+            results: res_rx,
+            abort_iter,
+            handles,
+            delay,
+            delay_scale: 1.0,
+            started: Instant::now(),
+            iter: 0,
+        }
+    }
+
+    pub fn with_delay_scale(mut self, scale: f64) -> Self {
+        self.delay_scale = scale;
+        self
+    }
+}
+
+fn worker_loop(
+    id: usize,
+    worker: &mut dyn WorkerNode,
+    rx: &Receiver<Msg>,
+    res: &Sender<ResultMsg>,
+    abort: &AtomicU64,
+) {
+    while let Ok(msg) = rx.recv() {
+        let (task, delay) = match msg {
+            Msg::Run(task, delay) => (task, delay),
+            Msg::Shutdown => break,
+        };
+        let iter = task.iter as u64;
+        // Interruptible sleep simulating the injected straggler latency.
+        let deadline = Instant::now() + Duration::from_secs_f64(delay.max(0.0));
+        let mut interrupted = false;
+        while Instant::now() < deadline {
+            if abort.load(Ordering::Acquire) == iter {
+                interrupted = true;
+                break;
+            }
+            std::thread::sleep(SLEEP_CHUNK.min(deadline - Instant::now()));
+        }
+        if interrupted || abort.load(Ordering::Acquire) == iter {
+            continue; // drop the task; master moved on without us
+        }
+        let payload = worker.process(&task);
+        if abort.load(Ordering::Acquire) == iter {
+            continue; // interrupted mid-compute: do not send (footnote 1)
+        }
+        // Master may have dropped the receiver during shutdown.
+        let _ = res.send(ResultMsg { worker: id, iter: task.iter, payload });
+    }
+}
+
+impl Gather for ThreadCluster {
+    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        let m = self.task_txs.len();
+        assert!(k >= 1 && k <= m, "k={k} out of range for m={m}");
+        let iter = self.iter;
+        let round_start = Instant::now();
+        for i in 0..m {
+            let task = task_for(i);
+            debug_assert_eq!(task.iter, iter, "task iter mismatch");
+            let delay = self.delay.sample(i, iter) * self.delay_scale;
+            self.task_txs[i].send(Msg::Run(task, delay)).expect("worker alive");
+        }
+        let mut responses: Vec<Response> = Vec::with_capacity(k);
+        let mut responded = vec![false; m];
+        while responses.len() < k {
+            let msg = self.results.recv().expect("workers alive");
+            if msg.iter != iter {
+                continue; // stale result from an interrupted past round
+            }
+            responded[msg.worker] = true;
+            responses.push(Response {
+                worker: msg.worker,
+                payload: msg.payload,
+                arrival: round_start.elapsed().as_secs_f64(),
+            });
+        }
+        // Interrupt the stragglers (A_tᶜ).
+        let mut interrupted = Vec::with_capacity(m - k);
+        for i in 0..m {
+            if !responded[i] {
+                self.abort_iter[i].store(iter as u64, Ordering::Release);
+                interrupted.push(i);
+            }
+        }
+        let elapsed = responses.last().map(|r| r.arrival).unwrap_or(0.0);
+        self.iter += 1;
+        RoundResult { responses, elapsed, interrupted }
+    }
+
+    fn workers(&self) -> usize {
+        self.task_txs.len()
+    }
+
+    fn clock(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+impl Drop for ThreadCluster {
+    fn drop(&mut self) {
+        for tx in &self.task_txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::{AdversarialDelay, NoDelay};
+
+    struct Echo {
+        id: usize,
+    }
+
+    impl WorkerNode for Echo {
+        fn process(&mut self, task: &Task) -> Vec<f64> {
+            vec![self.id as f64, task.iter as f64, task.payload.iter().sum()]
+        }
+    }
+
+    fn mk(m: usize, delay: Box<dyn crate::delay::DelayModel>) -> ThreadCluster {
+        let workers: Vec<Box<dyn WorkerNode>> =
+            (0..m).map(|id| Box::new(Echo { id }) as Box<dyn WorkerNode>).collect();
+        ThreadCluster::new(workers, delay)
+    }
+
+    fn task(iter: usize, payload: Vec<f64>) -> Task {
+        Task { iter, kind: 0, payload, aux: vec![] }
+    }
+
+    #[test]
+    fn gathers_k_of_m() {
+        let mut c = mk(4, Box::new(NoDelay::new(4)));
+        let rr = c.round(3, &mut |_| task(0, vec![1.0, 2.0]));
+        assert_eq!(rr.responses.len(), 3);
+        assert_eq!(rr.interrupted.len(), 1);
+        for r in &rr.responses {
+            assert_eq!(r.payload[2], 3.0);
+        }
+    }
+
+    #[test]
+    fn adversarial_stragglers_excluded() {
+        // workers 0,1 delayed 50 ms; k=2 of 4 → 2,3 always win.
+        let delay = AdversarialDelay::new(4, vec![0, 1], 0.05);
+        let mut c = mk(4, Box::new(delay));
+        for t in 0..3 {
+            let rr = c.round(2, &mut |_| task(t, vec![]));
+            assert_eq!(rr.active_set(), vec![2, 3], "iter {t}");
+        }
+    }
+
+    #[test]
+    fn stale_results_discarded_across_rounds() {
+        // Round 0 interrupts the slow pair mid-sleep; round 1 must still
+        // return exactly k fresh responses with the right iter tag.
+        let delay = AdversarialDelay::new(3, vec![2], 0.02);
+        let mut c = mk(3, Box::new(delay));
+        let r0 = c.round(2, &mut |_| task(0, vec![]));
+        assert_eq!(r0.active_set(), vec![0, 1]);
+        let r1 = c.round(3, &mut |_| task(1, vec![]));
+        for r in &r1.responses {
+            assert_eq!(r.payload[1], 1.0, "payload iter tag");
+        }
+    }
+
+    #[test]
+    fn multiple_rounds_advance() {
+        let mut c = mk(2, Box::new(NoDelay::new(2)));
+        for t in 0..5 {
+            let rr = c.round(2, &mut |_| task(t, vec![t as f64]));
+            assert_eq!(rr.responses.len(), 2);
+            for r in &rr.responses {
+                assert_eq!(r.payload[1], t as f64);
+            }
+        }
+        assert!(c.clock() > 0.0);
+    }
+
+    #[test]
+    fn delay_scale_shrinks_waits() {
+        let delay = AdversarialDelay::new(2, vec![1], 100.0); // 100 s !
+        let mut c = mk(2, Box::new(delay)).with_delay_scale(1e-4); // → 10 ms
+        let t0 = Instant::now();
+        let rr = c.round(2, &mut |_| task(0, vec![]));
+        assert!(t0.elapsed().as_secs_f64() < 5.0);
+        assert_eq!(rr.responses.len(), 2);
+    }
+}

@@ -1,0 +1,356 @@
+//! Experiment configuration.
+//!
+//! A TOML-subset parser ([`toml`]) plus the typed [`ExperimentConfig`]
+//! consumed by the launcher (`coded-opt run --config exp.toml`). No serde
+//! in the offline environment, so decoding is explicit.
+
+pub mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use anyhow::{bail, Context, Result};
+
+/// Which optimization algorithm drives the experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algorithm {
+    /// Encoded gradient descent (data parallelism, Thm 2).
+    Gd,
+    /// Encoded L-BFGS with overlap curvature pairs (Thm 4).
+    Lbfgs,
+    /// Encoded proximal gradient / ISTA (Thm 5).
+    ProxGradient,
+    /// Encoded block coordinate descent (model parallelism, Thm 6).
+    Bcd,
+}
+
+impl Algorithm {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "gd" | "gradient_descent" => Algorithm::Gd,
+            "lbfgs" | "l-bfgs" => Algorithm::Lbfgs,
+            "prox" | "proximal_gradient" | "ista" => Algorithm::ProxGradient,
+            "bcd" | "coordinate_descent" => Algorithm::Bcd,
+            other => bail!("unknown algorithm '{other}'"),
+        })
+    }
+}
+
+/// Encoding scheme selector (paper §4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    /// S = I: classic uncoded partitioning.
+    Uncoded,
+    /// β-fold block replication with fastest-copy deduplication.
+    Replication,
+    /// i.i.d. N(0, 1/√(βn)) dense encoding.
+    Gaussian,
+    /// Paley conference-matrix ETF.
+    Paley,
+    /// Column-subsampled Hadamard (FWHT fast path).
+    Hadamard,
+    /// Steiner ETF from (2,2,v)-Steiner systems (sparse).
+    Steiner,
+    /// Column-subsampled Haar wavelet matrix (sparse).
+    Haar,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "uncoded" | "identity" => Scheme::Uncoded,
+            "replication" | "rep" => Scheme::Replication,
+            "gaussian" | "iid" => Scheme::Gaussian,
+            "paley" => Scheme::Paley,
+            "hadamard" | "fwht" => Scheme::Hadamard,
+            "steiner" => Scheme::Steiner,
+            "haar" => Scheme::Haar,
+            other => bail!("unknown scheme '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Uncoded => "uncoded",
+            Scheme::Replication => "replication",
+            Scheme::Gaussian => "gaussian",
+            Scheme::Paley => "paley",
+            Scheme::Hadamard => "hadamard",
+            Scheme::Steiner => "steiner",
+            Scheme::Haar => "haar",
+        }
+    }
+
+    /// All schemes the paper benchmarks against each other.
+    pub fn all() -> &'static [Scheme] {
+        &[
+            Scheme::Uncoded,
+            Scheme::Replication,
+            Scheme::Gaussian,
+            Scheme::Paley,
+            Scheme::Hadamard,
+            Scheme::Steiner,
+            Scheme::Haar,
+        ]
+    }
+}
+
+/// Delay model selector (paper §5 experiment setups).
+#[derive(Clone, Debug, PartialEq)]
+pub enum DelaySpec {
+    /// No injected delay.
+    None,
+    /// Exponential with given mean (seconds).
+    Exponential { mean: f64 },
+    /// The §5.3 bimodal Gaussian mixture.
+    Bimodal,
+    /// The §5.4 trimodal Gaussian mixture.
+    Trimodal,
+    /// Power-law number of background tasks (§5.3), capped.
+    BackgroundTasks { alpha: f64, cap: usize, task_secs: f64 },
+    /// Adversarial: a fixed set of nodes is always slowest.
+    Adversarial { slow_fraction: f64, slow_secs: f64 },
+}
+
+impl DelaySpec {
+    pub fn parse(doc: &TomlDoc, section: &str) -> Result<Self> {
+        let kind = doc.get_str(section, "kind").unwrap_or("none");
+        Ok(match kind {
+            "none" => DelaySpec::None,
+            "exponential" => DelaySpec::Exponential {
+                mean: doc.get_f64(section, "mean").unwrap_or(0.01),
+            },
+            "bimodal" => DelaySpec::Bimodal,
+            "trimodal" => DelaySpec::Trimodal,
+            "background" => DelaySpec::BackgroundTasks {
+                alpha: doc.get_f64(section, "alpha").unwrap_or(1.5),
+                cap: doc.get_i64(section, "cap").unwrap_or(50) as usize,
+                task_secs: doc.get_f64(section, "task_secs").unwrap_or(0.05),
+            },
+            "adversarial" => DelaySpec::Adversarial {
+                slow_fraction: doc.get_f64(section, "slow_fraction").unwrap_or(0.25),
+                slow_secs: doc.get_f64(section, "slow_secs").unwrap_or(10.0),
+            },
+            other => bail!("unknown delay kind '{other}'"),
+        })
+    }
+}
+
+/// Full experiment configuration for the launcher.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub algorithm: Algorithm,
+    pub scheme: Scheme,
+    /// Worker count m.
+    pub workers: usize,
+    /// Wait-for-k (k ≤ m).
+    pub k: usize,
+    /// Redundancy factor β ≥ 1.
+    pub beta: f64,
+    pub iterations: usize,
+    pub seed: u64,
+    /// Problem dims (rows n, cols p).
+    pub n: usize,
+    pub p: usize,
+    /// Regularization λ.
+    pub lambda: f64,
+    /// Step size (0 → algorithm default).
+    pub step_size: f64,
+    /// L-BFGS memory σ.
+    pub lbfgs_memory: usize,
+    pub delay: DelaySpec,
+    /// Use the PJRT runtime (AOT artifacts) for worker compute when the
+    /// shard shape matches a compiled artifact; fall back to native rust
+    /// kernels otherwise.
+    pub use_pjrt: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "default".into(),
+            algorithm: Algorithm::Gd,
+            scheme: Scheme::Hadamard,
+            workers: 8,
+            k: 6,
+            beta: 2.0,
+            iterations: 100,
+            seed: 42,
+            n: 512,
+            p: 128,
+            lambda: 0.05,
+            step_size: 0.0,
+            lbfgs_memory: 10,
+            delay: DelaySpec::Exponential { mean: 0.001 },
+            use_pjrt: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Decode from a parsed TOML document. Missing keys keep defaults.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let s = "experiment";
+        if let Some(v) = doc.get_str(s, "name") {
+            cfg.name = v.to_string();
+        }
+        if let Some(v) = doc.get_str(s, "algorithm") {
+            cfg.algorithm = Algorithm::parse(v)?;
+        }
+        if let Some(v) = doc.get_str(s, "scheme") {
+            cfg.scheme = Scheme::parse(v)?;
+        }
+        if let Some(v) = doc.get_i64(s, "workers") {
+            cfg.workers = v as usize;
+        }
+        if let Some(v) = doc.get_i64(s, "k") {
+            cfg.k = v as usize;
+        }
+        if let Some(v) = doc.get_f64(s, "beta") {
+            cfg.beta = v;
+        }
+        if let Some(v) = doc.get_i64(s, "iterations") {
+            cfg.iterations = v as usize;
+        }
+        if let Some(v) = doc.get_i64(s, "seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_i64(s, "n") {
+            cfg.n = v as usize;
+        }
+        if let Some(v) = doc.get_i64(s, "p") {
+            cfg.p = v as usize;
+        }
+        if let Some(v) = doc.get_f64(s, "lambda") {
+            cfg.lambda = v;
+        }
+        if let Some(v) = doc.get_f64(s, "step_size") {
+            cfg.step_size = v;
+        }
+        if let Some(v) = doc.get_i64(s, "lbfgs_memory") {
+            cfg.lbfgs_memory = v as usize;
+        }
+        if let Some(v) = doc.get_bool(s, "use_pjrt") {
+            cfg.use_pjrt = v;
+        }
+        if doc.has_section("delay") {
+            cfg.delay = DelaySpec::parse(doc, "delay")?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading config {path}"))?;
+        let doc = TomlDoc::parse(&text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Invariant checks shared by launcher and tests.
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be ≥ 1");
+        }
+        if self.k == 0 || self.k > self.workers {
+            bail!("k must satisfy 1 ≤ k ≤ m (k={}, m={})", self.k, self.workers);
+        }
+        if self.beta < 1.0 {
+            bail!("redundancy β must be ≥ 1 (got {})", self.beta);
+        }
+        Ok(())
+    }
+
+    /// Whether the strict BRIP condition of Definition 1 (η ≥ 1/β) can
+    /// hold for this operating point. The paper notes the algorithms often
+    /// work below this threshold (e.g. Fig. 7 runs k=12, m=32, β=2), so
+    /// this is advisory — the launcher logs a warning, never rejects.
+    pub fn brip_feasible(&self) -> bool {
+        match self.scheme {
+            Scheme::Uncoded | Scheme::Replication => true,
+            _ => self.eta() * self.beta >= 1.0 - 1e-9,
+        }
+    }
+
+    /// η = k/m, the fraction of nodes waited for.
+    pub fn eta(&self) -> f64 {
+        self.k as f64 / self.workers as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_doc() {
+        let text = r#"
+[experiment]
+name = "ridge-fig7"
+algorithm = "lbfgs"
+scheme = "hadamard"
+workers = 32
+k = 12
+beta = 2.0
+iterations = 50
+n = 1024
+p = 1500
+lambda = 0.05
+
+[delay]
+kind = "bimodal"
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.name, "ridge-fig7");
+        assert_eq!(cfg.algorithm, Algorithm::Lbfgs);
+        assert_eq!(cfg.scheme, Scheme::Hadamard);
+        assert_eq!(cfg.workers, 32);
+        assert_eq!(cfg.k, 12);
+        assert_eq!(cfg.delay, DelaySpec::Bimodal);
+        assert!((cfg.eta() - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_greater_than_m_rejected() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.k = cfg.workers + 1;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn brip_feasibility_is_advisory() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workers = 10;
+        cfg.k = 2;
+        cfg.beta = 2.0; // η·β = 0.4 < 1
+        cfg.validate().unwrap(); // still valid to run…
+        assert!(!cfg.brip_feasible()); // …but flagged
+        cfg.k = 5; // η·β = 1.0
+        assert!(cfg.brip_feasible());
+    }
+
+    #[test]
+    fn uncoded_always_brip_feasible() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.scheme = Scheme::Uncoded;
+        cfg.workers = 10;
+        cfg.k = 2;
+        cfg.beta = 1.0;
+        cfg.validate().unwrap();
+        assert!(cfg.brip_feasible());
+    }
+
+    #[test]
+    fn algorithm_and_scheme_parsing() {
+        assert_eq!(Algorithm::parse("L-BFGS").unwrap(), Algorithm::Lbfgs);
+        assert_eq!(Scheme::parse("STEINER").unwrap(), Scheme::Steiner);
+        assert!(Algorithm::parse("sgd?").is_err());
+        assert!(Scheme::parse("fourier??").is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports exactly what experiment configs need:
+//! `[section]` headers, `key = value` pairs with string / integer / float /
+//! boolean values, `#` comments, and blank lines. No arrays, no nested
+//! tables, no multi-line strings — configs stay flat by design.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// A parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// A parsed document: section → key → value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut current = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(stripped) = line.strip_prefix('[') {
+                let Some(name) = stripped.strip_suffix(']') else {
+                    bail!("line {}: malformed section header '{raw}'", lineno + 1);
+                };
+                current = name.trim().to_string();
+                if current.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                doc.sections.entry(current.clone()).or_default();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected 'key = value', got '{raw}'", lineno + 1);
+            };
+            let key = line[..eq].trim().to_string();
+            let val_str = line[eq + 1..].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(val_str)
+                .ok_or_else(|| anyhow::anyhow!("line {}: cannot parse value '{val_str}'", lineno + 1))?;
+            doc.sections.entry(current.clone()).or_default().insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_i64(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (`beta = 2`).
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// All section names, in order.
+    pub fn sections(&self) -> Vec<String> {
+        self.sections.keys().cloned().collect()
+    }
+
+    /// Keys of a section (for diagnostics).
+    pub fn keys(&self, section: &str) -> Vec<&str> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Remove a trailing `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<TomlValue> {
+    if let Some(stripped) = s.strip_prefix('"') {
+        let inner = stripped.strip_suffix('"')?;
+        return Some(TomlValue::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(TomlValue::Bool(true)),
+        "false" => return Some(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(TomlValue::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+# top comment
+[a]
+s = "hello"   # trailing comment
+i = 42
+f = 2.5
+neg = -3
+b = true
+
+[b]
+x = 1
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("a", "s"), Some("hello"));
+        assert_eq!(doc.get_i64("a", "i"), Some(42));
+        assert_eq!(doc.get_f64("a", "f"), Some(2.5));
+        assert_eq!(doc.get_i64("a", "neg"), Some(-3));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(doc.get_i64("b", "x"), Some(1));
+        assert!(doc.has_section("b"));
+        assert!(!doc.has_section("c"));
+    }
+
+    #[test]
+    fn int_readable_as_float() {
+        let doc = TomlDoc::parse("[s]\nbeta = 2\n").unwrap();
+        assert_eq!(doc.get_f64("s", "beta"), Some(2.0));
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = TomlDoc::parse("[s]\nname = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("s", "name"), Some("a#b"));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("[s]\nnovalue\n").is_err());
+        assert!(TomlDoc::parse("[s]\nk = what\n").is_err());
+        assert!(TomlDoc::parse("[]\n").is_err());
+        assert!(TomlDoc::parse("[s]\n = 3\n").is_err());
+    }
+
+    #[test]
+    fn wrong_type_returns_none() {
+        let doc = TomlDoc::parse("[s]\nk = 3\n").unwrap();
+        assert_eq!(doc.get_str("s", "k"), None);
+        assert_eq!(doc.get_bool("s", "k"), None);
+    }
+
+    #[test]
+    fn last_duplicate_wins() {
+        let doc = TomlDoc::parse("[s]\nk = 1\nk = 2\n").unwrap();
+        assert_eq!(doc.get_i64("s", "k"), Some(2));
+    }
+}

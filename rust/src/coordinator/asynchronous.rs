@@ -1,0 +1,279 @@
+//! Asynchronous baselines (paper §5 comparison schemes, Figures 10–13).
+//!
+//! Parameter-server-style asynchrony: each worker loops
+//! fetch-compute-push independently; the master applies updates as they
+//! arrive, with whatever staleness the delays induce. Simulated with a
+//! virtual-time event queue over the same [`crate::delay::DelayModel`]s
+//! as the synchronous engines, so coded-vs-async comparisons share the
+//! exact same straggler process.
+//!
+//! The paper's point (Figs. 12–13): under persistent stragglers the
+//! async update frequencies become wildly non-uniform — slow nodes
+//! contribute stale, rare updates, degrading convergence — whereas the
+//! encoded scheme simply never waits for them.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::delay::DelayModel;
+use crate::linalg::Mat;
+use crate::metrics::{IterRecord, Participation, Trace};
+
+/// Ordered f64 key for the event queue.
+#[derive(PartialEq, PartialOrd)]
+struct Time(f64);
+impl Eq for Time {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Time {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Config for the async gradient-descent baseline.
+#[derive(Clone, Debug)]
+pub struct AsyncGdConfig {
+    /// Step size per update (async steps are per-worker partial steps).
+    pub step: f64,
+    /// ℓ₂ regularizer weight.
+    pub lambda: f64,
+    /// Total worker updates to apply (comparable budget: iterations × k).
+    pub updates: usize,
+    /// Seconds of compute per shard row (same constant as SimCluster).
+    pub secs_per_unit: f64,
+    /// Record a trace point every this many updates.
+    pub record_every: usize,
+}
+
+/// Async data-parallel gradient descent over uncoded partitions.
+///
+/// `shards[i] = (X_i, y_i)`; the update applied on arrival of worker i's
+/// gradient (computed at the stale iterate it fetched) is
+/// `w ← w − step·(m/n)·X_iᵀ(X_i·w_stale − y_i) − step·λ·w`.
+pub fn run_async_gd(
+    shards: &[(Mat, Vec<f64>)],
+    delay: &mut dyn DelayModel,
+    n: usize,
+    p: usize,
+    cfg: &AsyncGdConfig,
+    label: &str,
+    eval: &super::EvalFn,
+) -> super::gd::RunOutput {
+    let m = shards.len();
+    assert!(m > 0 && delay.workers() == m);
+    let mut w = vec![0.0; p];
+    // Each worker's in-flight computation: (finish_time, worker, w_stale)
+    let mut queue: BinaryHeap<(Reverse<Time>, usize)> = BinaryHeap::new();
+    let mut stale: Vec<Vec<f64>> = Vec::with_capacity(m);
+    let mut clock;
+    for i in 0..m {
+        let dur = shards[i].0.rows() as f64 * cfg.secs_per_unit + delay.sample(i, 0);
+        queue.push((Reverse(Time(dur)), i));
+        stale.push(w.clone());
+    }
+    let mut trace = Trace::new(label);
+    let mut participation = Participation::new(m);
+    for upd in 0..cfg.updates {
+        let (Reverse(Time(t)), i) = queue.pop().expect("queue nonempty");
+        clock = t;
+        // gradient at the stale iterate
+        let (xi, yi) = &shards[i];
+        let mut resid = xi.matvec(&stale[i]);
+        for (r, y) in resid.iter_mut().zip(yi) {
+            *r -= y;
+        }
+        let mut g = xi.matvec_t(&resid);
+        crate::linalg::scale(m as f64 / n as f64, &mut g);
+        crate::linalg::axpy(cfg.lambda, &stale[i], &mut g);
+        crate::linalg::axpy(-cfg.step, &g, &mut w);
+        participation.record(&[i]);
+        // worker fetches the fresh iterate and starts over
+        stale[i] = w.clone();
+        let dur = xi.rows() as f64 * cfg.secs_per_unit + delay.sample(i, upd + 1);
+        queue.push((Reverse(Time(clock + dur)), i));
+        if upd % cfg.record_every == 0 || upd + 1 == cfg.updates {
+            let (objective, test_metric) = eval(&w);
+            trace.push(IterRecord {
+                iter: upd,
+                time: clock,
+                objective,
+                test_metric,
+                k_used: 1,
+            });
+        }
+    }
+    super::gd::RunOutput { trace, w, participation }
+}
+
+/// Config for the async BCD baseline (model parallelism).
+#[derive(Clone, Debug)]
+pub struct AsyncBcdConfig {
+    pub step: f64,
+    pub lambda: f64,
+    pub updates: usize,
+    pub secs_per_unit: f64,
+    pub record_every: usize,
+}
+
+/// Async block coordinate descent: worker i owns uncoded column block
+/// `A_i = X_{:,Bi}` and coordinates `w_i`; on each completion it applies
+/// `w_i ← w_i − step·(A_iᵀ∇φ(u_stale) + 2λw_i)` against the aggregate it
+/// fetched before computing (staleness grows with its delay).
+pub fn run_async_bcd(
+    blocks: &[Mat],
+    grad_phi: &dyn Fn(&[f64]) -> Vec<f64>,
+    n: usize,
+    cfg: &AsyncBcdConfig,
+    delay: &mut dyn DelayModel,
+    label: &str,
+    eval_w_blocks: &dyn Fn(&[Vec<f64>]) -> (f64, f64),
+) -> (Trace, Vec<Vec<f64>>, Participation) {
+    let m = blocks.len();
+    assert_eq!(delay.workers(), m);
+    let mut v: Vec<Vec<f64>> = blocks.iter().map(|b| vec![0.0; b.cols()]).collect();
+    // master-side aggregate u_total = Σ A_i v_i
+    let mut u_total = vec![0.0; n];
+    // worker i's snapshot of u_total − A_i v_i taken at fetch time
+    let mut fetched: Vec<Vec<f64>> = vec![vec![0.0; n]; m];
+    let mut queue: BinaryHeap<(Reverse<Time>, usize)> = BinaryHeap::new();
+    let mut clock;
+    for i in 0..m {
+        let dur = (blocks[i].rows() * blocks[i].cols()) as f64 / 1000.0 * cfg.secs_per_unit
+            + delay.sample(i, 0);
+        queue.push((Reverse(Time(dur)), i));
+    }
+    let mut trace = Trace::new(label);
+    let mut participation = Participation::new(m);
+    for upd in 0..cfg.updates {
+        let (Reverse(Time(t)), i) = queue.pop().expect("queue nonempty");
+        clock = t;
+        // gradient of block i at (stale z̃ fetched earlier, current v_i)
+        let mut xw = blocks[i].matvec(&v[i]);
+        crate::linalg::axpy(1.0, &fetched[i], &mut xw);
+        let gphi = grad_phi(&xw);
+        let mut grad = blocks[i].matvec_t(&gphi);
+        crate::linalg::axpy(2.0 * cfg.lambda, &v[i], &mut grad);
+        // apply to owned block; update aggregate with the delta
+        let old_contrib = blocks[i].matvec(&v[i]);
+        crate::linalg::axpy(-cfg.step, &grad, &mut v[i]);
+        let new_contrib = blocks[i].matvec(&v[i]);
+        for ((tot, o), nw) in u_total.iter_mut().zip(&old_contrib).zip(&new_contrib) {
+            *tot += nw - o;
+        }
+        participation.record(&[i]);
+        // fetch fresh aggregate-minus-own and restart
+        let mut z = u_total.clone();
+        let own = blocks[i].matvec(&v[i]);
+        for (zv, o) in z.iter_mut().zip(&own) {
+            *zv -= o;
+        }
+        fetched[i] = z;
+        let dur = (blocks[i].rows() * blocks[i].cols()) as f64 / 1000.0 * cfg.secs_per_unit
+            + delay.sample(i, upd + 1);
+        queue.push((Reverse(Time(clock + dur)), i));
+        if upd % cfg.record_every == 0 || upd + 1 == cfg.updates {
+            let (objective, test_metric) = eval_w_blocks(&v);
+            trace.push(IterRecord { iter: upd, time: clock, objective, test_metric, k_used: 1 });
+        }
+    }
+    (trace, v, participation)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_linear;
+    use crate::delay::{BackgroundTasksDelay, NoDelay};
+    use crate::encoding::partition_bounds;
+    use crate::objectives::{QuadObjective, RidgeProblem};
+
+    fn uncoded_shards(x: &Mat, y: &[f64], m: usize) -> Vec<(Mat, Vec<f64>)> {
+        let bounds = partition_bounds(x.rows(), m);
+        bounds
+            .windows(2)
+            .map(|w| (x.row_block(w[0], w[1]), y[w[0]..w[1]].to_vec()))
+            .collect()
+    }
+
+    #[test]
+    fn async_gd_converges_without_delays() {
+        let (x, y, _) = gaussian_linear(64, 8, 0.2, 3);
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+        let f_star = prob.objective(&prob.solve_exact());
+        let shards = uncoded_shards(&x, &y, 4);
+        let mut delay = NoDelay::new(4);
+        let cfg = AsyncGdConfig {
+            step: 0.3 / prob.smoothness(),
+            lambda: 0.05,
+            updates: 3000,
+            secs_per_unit: 1e-4,
+            record_every: 100,
+        };
+        let out = run_async_gd(&shards, &mut delay, 64, 8, &cfg, "async", &|w| {
+            (prob.objective(w), 0.0)
+        });
+        let sub = (out.trace.final_objective() - f_star) / f_star;
+        assert!(sub < 5e-3, "subopt {sub}");
+    }
+
+    #[test]
+    fn async_participation_skewed_under_background_tasks() {
+        // Figure 13's phenomenon: power-law background load → power-law
+        // update frequencies.
+        let (x, y, _) = gaussian_linear(64, 8, 0.2, 5);
+        let shards = uncoded_shards(&x, &y, 16);
+        let mut delay = BackgroundTasksDelay::new(16, 1.5, 50, 0.05, 7);
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+        let cfg = AsyncGdConfig {
+            step: 0.1 / prob.smoothness(),
+            lambda: 0.05,
+            updates: 2000,
+            secs_per_unit: 1e-4,
+            record_every: 500,
+        };
+        let out = run_async_gd(&shards, &mut delay, 64, 8, &cfg, "async-bg", &|w| {
+            (prob.objective(w), 0.0)
+        });
+        assert!(
+            out.participation.imbalance() > 0.3,
+            "imbalance {}",
+            out.participation.imbalance()
+        );
+    }
+
+    #[test]
+    fn async_bcd_decreases_objective() {
+        let (x, y, _) = gaussian_linear(40, 12, 0.1, 9);
+        let bounds = partition_bounds(12, 4);
+        let blocks: Vec<Mat> = bounds
+            .windows(2)
+            .map(|w| {
+                let idx: Vec<usize> = (w[0]..w[1]).collect();
+                x.select_cols(&idx)
+            })
+            .collect();
+        let yc = y.clone();
+        let n = 40;
+        let grad_phi = move |u: &[f64]| -> Vec<f64> {
+            u.iter().zip(&yc).map(|(ui, yi)| (ui - yi) / n as f64).collect()
+        };
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+        let f0 = prob.objective(&vec![0.0; 12]);
+        let step = 0.5 * 40.0 / x.gram_spectral_norm(60, 4);
+        let cfg = AsyncBcdConfig {
+            step,
+            lambda: 0.0,
+            updates: 800,
+            secs_per_unit: 1e-4,
+            record_every: 100,
+        };
+        let mut delay = NoDelay::new(4);
+        let eval = |v: &[Vec<f64>]| -> (f64, f64) {
+            // uncoded: w is the concatenation of blocks
+            let w: Vec<f64> = v.iter().flatten().copied().collect();
+            (prob.objective(&w), 0.0)
+        };
+        let (trace, _, _) = run_async_bcd(&blocks, &grad_phi, 40, &cfg, &mut delay, "abcd", &eval);
+        assert!(trace.final_objective() < 0.2 * f0, "{} vs {f0}", trace.final_objective());
+    }
+}

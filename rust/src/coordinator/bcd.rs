@@ -1,0 +1,440 @@
+//! Encoded block coordinate descent under model parallelism
+//! (paper §2.2, Algorithms 3–4, Theorem 6).
+//!
+//! The model dimension p is lifted to βp redundant coordinates via
+//! `w = S̄ᵀv`; worker i owns the coordinate block `v_i` and the column
+//! block `A_i = X·S̄_iᵀ`. Each round the master sends worker i its
+//! aggregate `z̃_i = Σ_{j≠i} u_j` (`u_j = A_j·v_j`) plus the accept flag
+//! for the worker's pending step; the worker answers with its refreshed
+//! `u_i` (and `v_i`, used master-side for evaluation only). Stragglers'
+//! updates are erased: the master reuses `u_{i,t−1}` (Algorithm 4 line
+//! 7) and tells the worker to discard the never-accepted step — this is
+//! what keeps parameter values consistent across machines.
+//!
+//! Because the lift preserves the problem geometry (`g̃` minimized at
+//! `S̄ᵀv* = w*`, Lemma 15), encoded BCD converges to the *exact*
+//! optimum, unlike the data-parallel algorithms' κ-approximation.
+
+use super::gd::RunOutput;
+use super::KIND_BCD_STEP;
+use crate::cluster::{Gather, Task, WorkerNode};
+use crate::config::Scheme;
+use crate::encoding::{Encoding, SMatrix};
+use crate::linalg::{Csr, Mat};
+use crate::metrics::{IterRecord, Participation, Trace};
+use anyhow::Result;
+
+/// Per-coordinate-block worker state.
+pub struct BcdWorker {
+    /// Column block A_i = X·S̄_iᵀ (n × b_i).
+    pub a: Mat,
+    /// Owned coordinate block v_i.
+    pub v: Vec<f64>,
+    /// Pending step d_i and the round it was computed in (−1 = none).
+    pending: Vec<f64>,
+    pending_round: i64,
+    /// Step size α.
+    pub step: f64,
+    /// Lifted ℓ₂ regularizer weight: adds 2λv_i to the block gradient
+    /// (λ‖v‖² is block-separable; λ‖S̄ᵀv‖² would not be).
+    pub lambda: f64,
+    /// ∇φ: maps the n-vector Xw to the n-vector ∇φ(Xw).
+    pub grad_phi: Box<dyn Fn(&[f64]) -> Vec<f64> + Send>,
+}
+
+impl BcdWorker {
+    pub fn new(
+        a: Mat,
+        step: f64,
+        lambda: f64,
+        grad_phi: Box<dyn Fn(&[f64]) -> Vec<f64> + Send>,
+    ) -> Self {
+        let b = a.cols();
+        BcdWorker {
+            a,
+            v: vec![0.0; b],
+            pending: vec![0.0; b],
+            pending_round: -1,
+            step,
+            lambda,
+            grad_phi,
+        }
+    }
+}
+
+impl WorkerNode for BcdWorker {
+    fn process(&mut self, task: &Task) -> Vec<f64> {
+        assert_eq!(task.kind, KIND_BCD_STEP);
+        let accept_round = task.aux[0] as i64;
+        // Apply the pending step iff the master accepted the round that
+        // produced it (lines 4–8 of Algorithm 3).
+        if self.pending_round >= 0 && accept_round == self.pending_round {
+            crate::linalg::axpy(1.0, &self.pending, &mut self.v);
+        }
+        let z_tilde = &task.payload;
+        // Block gradient ∇_i g̃(v) = A_iᵀ∇φ(A_i·v_i + z̃_i) + 2λv_i.
+        let mut xw = self.a.matvec(&self.v);
+        crate::linalg::axpy(1.0, z_tilde, &mut xw);
+        let gphi = (self.grad_phi)(&xw);
+        let mut grad = self.a.matvec_t(&gphi);
+        crate::linalg::axpy(2.0 * self.lambda, &self.v, &mut grad);
+        // d_{i,t} = −α∇_i g̃ (to be applied next round if accepted)
+        self.pending = grad.iter().map(|g| -self.step * g).collect();
+        self.pending_round = task.iter as i64;
+        // u_i = A_i·v_i at the CURRENT v (one-round staleness by design)
+        let mut out = self.a.matvec(&self.v);
+        out.extend_from_slice(&self.v);
+        out
+    }
+
+    fn cost(&self) -> f64 {
+        (self.a.rows() * self.a.cols()).max(1) as f64 / 1000.0
+    }
+}
+
+/// Assembled model-parallel problem.
+pub struct ModelParallel {
+    pub workers: Vec<Box<dyn WorkerNode>>,
+    /// Parseval-normalized blocks S̄_i (for reconstructing w = S̄ᵀv).
+    pub sbar: Vec<SMatrix>,
+    /// Data rows n and model dim p.
+    pub n: usize,
+    pub p: usize,
+    /// Achieved redundancy.
+    pub beta: f64,
+}
+
+/// Build model-parallel workers for a generic smooth φ over `X·w`.
+///
+/// `x` is the n×p data (dense here; the sparse-input case densifies the
+/// per-worker column blocks `X·S̄_iᵀ`, which are small: n × βp/m).
+pub fn build_model_parallel(
+    x: &Mat,
+    scheme: Scheme,
+    m: usize,
+    beta: f64,
+    step: f64,
+    lambda: f64,
+    seed: u64,
+    grad_phi: impl Fn() -> Box<dyn Fn(&[f64]) -> Vec<f64> + Send>,
+) -> Result<ModelParallel> {
+    let p = x.cols();
+    let enc = Encoding::build(scheme, p, m, beta, seed)?;
+    let norm = 1.0 / enc.beta.sqrt();
+    let xt = x.transpose(); // p × n
+    let mut workers: Vec<Box<dyn WorkerNode>> = Vec::with_capacity(m);
+    let mut sbar = Vec::with_capacity(m);
+    for s in &enc.blocks {
+        // A_i = X·S̄_iᵀ = (S̄_i·Xᵀ)ᵀ
+        let mut si_xt = s.encode_mat(&xt); // b_i × n
+        si_xt.scale_inplace(norm);
+        let a = si_xt.transpose(); // n × b_i
+        workers.push(Box::new(BcdWorker::new(a, step, lambda, grad_phi())));
+        // store normalized S̄_i for w reconstruction
+        let mut dense = s.to_dense();
+        dense.scale_inplace(norm);
+        sbar.push(SMatrix::Dense(dense));
+    }
+    Ok(ModelParallel { workers, sbar, n: x.rows(), p, beta: enc.beta })
+}
+
+/// Dense copy of a sparse data matrix (helper for logistic model
+/// parallelism over CSR docs).
+pub fn csr_to_dense(z: &Csr) -> Mat {
+    z.to_dense()
+}
+
+/// Configuration for [`run_bcd`].
+#[derive(Clone, Debug)]
+pub struct BcdConfig {
+    pub k: usize,
+    pub iters: usize,
+}
+
+/// Run encoded BCD. `block_sizes` come from `mp.sbar`; `eval` receives
+/// the reconstructed `w_t = S̄ᵀv_t` (master-visible state).
+pub fn run_bcd(
+    cluster: &mut dyn Gather,
+    mp_sbar: &[SMatrix],
+    n: usize,
+    p: usize,
+    cfg: &BcdConfig,
+    label: &str,
+    eval: &super::EvalFn,
+) -> RunOutput {
+    let m = cluster.workers();
+    assert!(cfg.k >= 1 && cfg.k <= m);
+    assert_eq!(mp_sbar.len(), m);
+    let block_sizes: Vec<usize> = mp_sbar.iter().map(|s| s.rows()).collect();
+    // Master state: per-worker u_i (n) and v_i snapshots, accept rounds.
+    let mut u: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
+    let mut v: Vec<Vec<f64>> = block_sizes.iter().map(|&b| vec![0.0; b]).collect();
+    let mut last_accept: Vec<f64> = vec![-1.0; m];
+    let mut total_u = vec![0.0; n];
+    let mut trace = Trace::new(label);
+    let mut participation = Participation::new(m);
+
+    for t in 0..cfg.iters {
+        let rr = {
+            let total_ref = &total_u;
+            let u_ref = &u;
+            let accept_ref = &last_accept;
+            cluster.round(cfg.k, &mut |i| {
+                let mut z_tilde = total_ref.clone();
+                for (z, ui) in z_tilde.iter_mut().zip(&u_ref[i]) {
+                    *z -= ui;
+                }
+                Task { iter: t, kind: KIND_BCD_STEP, payload: z_tilde, aux: vec![accept_ref[i]] }
+            })
+        };
+        participation.record(&rr.active_set());
+        for resp in &rr.responses {
+            let i = resp.worker;
+            let (u_new, v_new) = resp.payload.split_at(n);
+            // total_u update: subtract old, add new
+            for ((tot, old), new) in total_u.iter_mut().zip(&u[i]).zip(u_new) {
+                *tot += new - old;
+            }
+            u[i].copy_from_slice(u_new);
+            v[i].copy_from_slice(v_new);
+            last_accept[i] = t as f64;
+        }
+        // Reconstruct w = Σ S̄_iᵀ v_i for evaluation.
+        let mut w = vec![0.0; p];
+        for (s, vi) in mp_sbar.iter().zip(&v) {
+            let wi = s.matvec_t(vi);
+            crate::linalg::axpy(1.0, &wi, &mut w);
+        }
+        let (objective, test_metric) = eval(&w);
+        trace.push(IterRecord {
+            iter: t,
+            time: cluster.clock(),
+            objective,
+            test_metric,
+            k_used: rr.responses.len(),
+        });
+    }
+    // final w
+    let mut w = vec![0.0; p];
+    for (s, vi) in mp_sbar.iter().zip(&v) {
+        crate::linalg::axpy(1.0, &s.matvec_t(vi), &mut w);
+    }
+    RunOutput { trace, w, participation }
+}
+
+/// Replication-equivalent operating point for model-parallel BCD.
+///
+/// The paper's replication baseline holds each of P = m/r coordinate
+/// partitions on r nodes and uses the fastest copy, waiting for k
+/// *physical* responses. Since replicas are deterministic clones, this
+/// is equivalent to P logical workers with fastest-of-r delays
+/// ([`crate::delay::MinOfR`]) waited for `E[#distinct partitions among
+/// the first k of m physical arrivals]` — hypergeometric coverage:
+/// `P·(1 − C(m−r,k)/C(m,k))`, rounded.
+pub fn replication_equivalent(m: usize, r: usize, k: usize) -> (usize, usize) {
+    assert!(r >= 1 && m % r == 0 && k <= m);
+    let p = m / r;
+    // P(a given partition has no copy among the first k) =
+    // C(m−r, k)/C(m, k) = Π_{j=0..r−1} (m−k−j)/(m−j)
+    let mut miss = 1.0f64;
+    for j in 0..r {
+        miss *= ((m - k) as f64 - j as f64).max(0.0) / (m - j) as f64;
+    }
+    let k_logical = ((p as f64) * (1.0 - miss)).round() as usize;
+    (p, k_logical.clamp(1, p))
+}
+
+/// Convenience: grad_phi factory for least squares
+/// `φ(u) = 1/(2n)·‖u − y‖²` (∇φ = (u−y)/n).
+pub fn quadratic_phi(y: Vec<f64>) -> impl Fn() -> Box<dyn Fn(&[f64]) -> Vec<f64> + Send> {
+    move || {
+        let y = y.clone();
+        Box::new(move |u: &[f64]| {
+            let n = u.len() as f64;
+            u.iter().zip(&y).map(|(ui, yi)| (ui - yi) / n).collect()
+        })
+    }
+}
+
+/// grad_phi factory for logistic loss over label-scaled rows:
+/// `φ(u) = 1/n·Σ log(1+e^{−uᵢ})` (∇φᵢ = −σ(−uᵢ)/n).
+pub fn logistic_phi() -> impl Fn() -> Box<dyn Fn(&[f64]) -> Vec<f64> + Send> {
+    || {
+        Box::new(|u: &[f64]| {
+            let n = u.len() as f64;
+            u.iter().map(|&ui| -crate::objectives::logistic::sigmoid(-ui) / n).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SimCluster;
+    use crate::data::rcv1like;
+    use crate::data::synth::gaussian_linear;
+    use crate::delay::{AdversarialDelay, NoDelay};
+    use crate::objectives::LogisticProblem;
+
+    #[test]
+    fn bcd_least_squares_reaches_exact_optimum_full_gather() {
+        // Model-parallel encoded BCD on ½‖Xw−y‖²/n: exact convergence
+        // (Theorem 6 — the lift preserves the optimum).
+        let (x, y, _) = gaussian_linear(48, 12, 0.1, 3);
+        let m = 4;
+        let step = 0.8 * 48.0 / x.gram_spectral_norm(60, 1); // α < n/λmax ≈ 1/L
+        let mp = build_model_parallel(
+            &x,
+            Scheme::Hadamard,
+            m,
+            2.0,
+            step,
+            0.0,
+            5,
+            quadratic_phi(y.clone()),
+        )
+        .unwrap();
+        let sbar = mp.sbar;
+        let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
+        let prob = crate::objectives::RidgeProblem::new(x.clone(), y.clone(), 0.0);
+        use crate::objectives::QuadObjective;
+        let f_star = prob.objective(&prob.solve_exact());
+        let cfg = BcdConfig { k: m, iters: 400 };
+        let out = run_bcd(&mut cluster, &sbar, 48, 12, &cfg, "bcd", &|w| {
+            (prob.objective(w), 0.0)
+        });
+        let f_final = out.trace.final_objective();
+        assert!(
+            (f_final - f_star) / f_star.max(1e-12) < 1e-3,
+            "f_final={f_final} f*={f_star}"
+        );
+    }
+
+    #[test]
+    fn bcd_converges_with_stragglers() {
+        let (x, y, _) = gaussian_linear(40, 16, 0.1, 7);
+        let m = 8;
+        let step = 0.8 * 40.0 / x.gram_spectral_norm(60, 2);
+        let mp = build_model_parallel(
+            &x,
+            Scheme::Haar,
+            m,
+            2.0,
+            step,
+            0.0,
+            9,
+            quadratic_phi(y.clone()),
+        )
+        .unwrap();
+        let sbar = mp.sbar;
+        let delay = AdversarialDelay::new(m, vec![1, 4], 1e6);
+        let mut cluster = SimCluster::new(mp.workers, Box::new(delay));
+        let prob = crate::objectives::RidgeProblem::new(x.clone(), y.clone(), 0.0);
+        use crate::objectives::QuadObjective;
+        let f_star = prob.objective(&prob.solve_exact());
+        let f0 = prob.objective(&vec![0.0; 16]);
+        let cfg = BcdConfig { k: 6, iters: 600 };
+        let out = run_bcd(&mut cluster, &sbar, 40, 16, &cfg, "bcd-adv", &|w| {
+            (prob.objective(w), 0.0)
+        });
+        let f_final = out.trace.final_objective();
+        // Fixed stragglers freeze 2 of 8 lifted blocks; redundancy must
+        // still recover most of the gap to optimal.
+        assert!(
+            f_final - f_star < 0.1 * (f0 - f_star),
+            "f_final={f_final} f*={f_star} f0={f0}"
+        );
+    }
+
+    #[test]
+    fn bcd_monotone_descent_full_gather() {
+        let (x, y, _) = gaussian_linear(30, 8, 0.2, 11);
+        let m = 4;
+        let step = 0.5 * 30.0 / x.gram_spectral_norm(60, 3);
+        let mp = build_model_parallel(
+            &x,
+            Scheme::Gaussian,
+            m,
+            2.0,
+            step,
+            0.0,
+            11,
+            quadratic_phi(y.clone()),
+        )
+        .unwrap();
+        let sbar = mp.sbar;
+        let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
+        let prob = crate::objectives::RidgeProblem::new(x, y, 0.0);
+        use crate::objectives::QuadObjective;
+        let cfg = BcdConfig { k: m, iters: 100 };
+        let out = run_bcd(&mut cluster, &sbar, 30, 8, &cfg, "bcd", &|w| {
+            (prob.objective(w), 0.0)
+        });
+        // allow the tiny one-round-staleness transient at t=0→1
+        for pair in out.trace.records.windows(2).skip(1) {
+            assert!(
+                pair[1].objective <= pair[0].objective + 1e-9,
+                "ascent: {} → {}",
+                pair[0].objective,
+                pair[1].objective
+            );
+        }
+    }
+
+    #[test]
+    fn bcd_logistic_learns() {
+        let ds = rcv1like::generate(120, 24, 5, 0.05, 13);
+        let x = csr_to_dense(&ds.train);
+        let n_train = ds.train.rows();
+        let prob = LogisticProblem::new(ds.train.clone(), 0.0);
+        let m = 6;
+        let step = 2.0; // logistic φ is 1/(4n)-smooth per unit ‖X‖²; generous but stable here
+        let mp = build_model_parallel(&x, Scheme::Steiner, m, 2.0, step, 1e-4, 15, logistic_phi())
+            .unwrap();
+        let sbar = mp.sbar;
+        let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
+        let f0 = prob.objective(&vec![0.0; 24]);
+        let cfg = BcdConfig { k: 4, iters: 150 };
+        let out = run_bcd(&mut cluster, &sbar, n_train, 24, &cfg, "bcd-log", &|w| {
+            (prob.objective(w), prob.error_rate(w, &ds.test))
+        });
+        assert!(
+            out.trace.final_objective() < 0.7 * f0,
+            "objective {} vs f0 {f0}",
+            out.trace.final_objective()
+        );
+        assert!(out.trace.final_test_metric() < 0.4);
+    }
+
+    #[test]
+    fn replication_equivalent_coverage() {
+        // m=128, r=2, k=64 (the paper's Fig-10 point): P=64 logical,
+        // miss = (64·63)/(128·127) ≈ 0.248 → k_logical ≈ 48.
+        let (p, k) = replication_equivalent(128, 2, 64);
+        assert_eq!(p, 64);
+        assert_eq!(k, 48);
+        // full wait covers everything
+        assert_eq!(replication_equivalent(8, 2, 8), (4, 4));
+        // r=1 degenerates to identity
+        assert_eq!(replication_equivalent(8, 1, 5), (8, 5));
+    }
+
+    #[test]
+    fn pending_step_discarded_when_interrupted_midcompute() {
+        // Unit-level: a worker whose pending round is never accepted must
+        // not apply the step.
+        let a = Mat::eye(3);
+        let mut w = BcdWorker::new(a, 0.1, 0.0, Box::new(|u: &[f64]| u.to_vec()));
+        let t0 = Task { iter: 0, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![-1.0] };
+        let _ = w.process(&t0); // computes pending for round 0
+        let v_before = w.v.clone();
+        // master says: last accepted round = −1 (round 0 was erased)
+        let t1 = Task { iter: 1, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![-1.0] };
+        let _ = w.process(&t1);
+        assert_eq!(w.v, v_before, "discarded step must not mutate v");
+        // now accept round 1: the round-1 pending applies at round 2
+        let t2 = Task { iter: 2, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![1.0] };
+        let _ = w.process(&t2);
+        assert_ne!(w.v, v_before, "accepted step must apply");
+    }
+}

@@ -1,0 +1,367 @@
+//! The encoded distributed optimization coordinator — the paper's system
+//! contribution.
+//!
+//! Data-parallel algorithms (encoded objective
+//! `f̃(w) = 1/(2n)·‖S(Xw−y)‖² + λh(w)`, Algorithms 1–2):
+//! - [`gd`]    — encoded gradient descent (Theorem 2),
+//! - [`lbfgs`] — encoded L-BFGS with overlap curvature pairs and exact
+//!   line search over the fastest-k set D_t (Theorem 4),
+//! - [`prox`]  — encoded proximal gradient / ISTA (Theorem 5).
+//!
+//! Model-parallel:
+//! - [`bcd`]   — encoded block coordinate descent (Algorithms 3–4,
+//!   Theorem 6).
+//!
+//! Baselines:
+//! - uncoded / replication — via [`GradAssembler`] over identity
+//!   encodings and [`crate::encoding::ReplicationMap`],
+//! - [`asynchronous`] — parameter-server-style async gradient descent and
+//!   async BCD (the Figures 10–13 comparison).
+//!
+//! ## Normalization convention
+//!
+//! Encoding constructions produce `SᵀS = β·I` (unit-norm tight frames).
+//! Worker shards store the *Parseval-normalized* blocks `S̄_i = S_i/√β`,
+//! so `S̄ᵀS̄ = I` and the encoded objective equals the original objective
+//! exactly when all workers respond — including the regularizer weighting
+//! (the paper's §4.1 optimality-preservation argument). When only k of m
+//! respond, the master rescales partial sums by `m/k` (unbiased under
+//! random A_t; the BRIP condition bounds the worst case).
+
+pub mod asynchronous;
+pub mod bcd;
+pub mod gd;
+pub mod lbfgs;
+pub mod mf;
+pub mod prox;
+pub mod schedule;
+
+pub use gd::{run_gd, GdConfig};
+pub use lbfgs::{run_lbfgs, LbfgsConfig};
+pub use prox::{run_prox, ProxConfig};
+
+use crate::cluster::{Task, WorkerNode};
+use crate::config::Scheme;
+use crate::encoding::{Encoding, ReplicationMap};
+use crate::linalg::Mat;
+use anyhow::Result;
+
+/// Task kinds understood by [`QuadWorker`].
+pub const KIND_GRADIENT: u32 = 0;
+pub const KIND_LINESEARCH: u32 = 1;
+/// Task kind understood by BCD workers.
+pub const KIND_BCD_STEP: u32 = 2;
+
+/// Data-parallel worker: stores its encoded shard `(S̄_iX, S̄_iy)` and
+/// serves gradient / line-search requests.
+///
+/// When a PJRT runtime handle is attached (see [`crate::runtime`]), the
+/// gradient hot path executes the AOT-compiled JAX/Pallas artifact;
+/// otherwise it runs the native rust kernel. Both compute
+/// `r_i = (S̄_iX)ᵀ(S̄_iX·w − S̄_iy)`.
+pub struct QuadWorker {
+    /// Encoded shard S̄_iX (rows_i × p).
+    pub sx: Mat,
+    /// Encoded targets S̄_i y.
+    pub sy: Vec<f64>,
+    /// Optional PJRT executor for the gradient kernel.
+    pub pjrt: Option<crate::runtime::GradExecutor>,
+    /// Residual scratch buffer (hot-path allocation avoidance; see
+    /// EXPERIMENTS.md §Perf iteration 5).
+    resid: Vec<f64>,
+}
+
+impl QuadWorker {
+    pub fn new(sx: Mat, sy: Vec<f64>) -> Self {
+        assert_eq!(sx.rows(), sy.len());
+        let rows = sx.rows();
+        QuadWorker { sx, sy, pjrt: None, resid: vec![0.0; rows] }
+    }
+
+    /// Native gradient kernel: r = S̄Xᵀ(S̄X·w − S̄y), residual computed
+    /// into the reusable scratch buffer (fused matvec−y pass).
+    fn native_gradient(&mut self, w: &[f64]) -> Vec<f64> {
+        for i in 0..self.sx.rows() {
+            self.resid[i] = crate::linalg::dot(self.sx.row(i), w) - self.sy[i];
+        }
+        self.sx.matvec_t(&self.resid)
+    }
+}
+
+impl WorkerNode for QuadWorker {
+    fn process(&mut self, task: &Task) -> Vec<f64> {
+        match task.kind {
+            KIND_GRADIENT => {
+                if let Some(exec) = &mut self.pjrt {
+                    if let Ok(g) = exec.gradient(&task.payload) {
+                        return g;
+                    }
+                    // artifact shape mismatch → native fallback
+                }
+                self.native_gradient(&task.payload)
+            }
+            KIND_LINESEARCH => {
+                let xd = self.sx.matvec(&task.payload);
+                vec![crate::linalg::dot(&xd, &xd)]
+            }
+            other => panic!("QuadWorker: unknown task kind {other}"),
+        }
+    }
+
+    fn cost(&self) -> f64 {
+        // relative compute ∝ shard flops
+        (self.sx.rows().max(1)) as f64
+    }
+}
+
+/// Master-side bookkeeping to turn k worker responses into an unbiased
+/// gradient estimate, uniform across uncoded / replication / coded
+/// schemes.
+#[derive(Clone, Debug)]
+pub struct GradAssembler {
+    /// Original data rows n (gradient normalization).
+    pub n: usize,
+    /// Model dimension p.
+    pub p: usize,
+    /// worker → partition map (identity for coded schemes).
+    pub map: ReplicationMap,
+}
+
+impl GradAssembler {
+    /// Combine responses (arrival order) into `(m_eff/|distinct|)·(1/n)·Σ r`.
+    pub fn assemble(&self, responses: &[crate::cluster::Response]) -> Vec<f64> {
+        let order: Vec<usize> = responses.iter().map(|r| r.worker).collect();
+        let chosen = self.map.resolve(&order);
+        let mut g = vec![0.0; self.p];
+        for &(_, w) in &chosen {
+            let resp = responses.iter().find(|r| r.worker == w).unwrap();
+            debug_assert_eq!(resp.payload.len(), self.p, "gradient payload length");
+            crate::linalg::axpy(1.0, &resp.payload, &mut g);
+        }
+        let scale = self.map.partitions() as f64 / (chosen.len().max(1) as f64 * self.n as f64);
+        crate::linalg::scale(scale, &mut g);
+        g
+    }
+
+    /// Combine line-search responses `‖S̄_iX·d‖²` into the quadratic form
+    /// estimate `dᵀ(XᵀX/n)d ≈ (m_eff/|distinct|)·(1/n)·Σ ‖·‖²`.
+    pub fn assemble_quadform(&self, responses: &[crate::cluster::Response]) -> f64 {
+        let order: Vec<usize> = responses.iter().map(|r| r.worker).collect();
+        let chosen = self.map.resolve(&order);
+        let mut q = 0.0;
+        for &(_, w) in &chosen {
+            let resp = responses.iter().find(|r| r.worker == w).unwrap();
+            q += resp.payload[0];
+        }
+        q * self.map.partitions() as f64 / (chosen.len().max(1) as f64 * self.n as f64)
+    }
+}
+
+/// Fully-assembled data-parallel problem: encoded worker boxes plus the
+/// assembler metadata.
+pub struct DataParallel {
+    pub workers: Vec<Box<dyn WorkerNode>>,
+    pub assembler: GradAssembler,
+    pub scheme: Scheme,
+    /// Achieved redundancy.
+    pub beta: f64,
+    /// Workers whose shard shape matched an AOT artifact and got a PJRT
+    /// executor attached (0 when built without a runtime index).
+    pub pjrt_attached: usize,
+}
+
+/// Build data-parallel workers for (X, y) under a scheme.
+///
+/// - Coded schemes: worker i stores `(S̄_iX, S̄_iy)` with `S̄ = S/√β`.
+/// - Uncoded: S = I row-partitioned.
+/// - Replication: `⌊β⌋`-fold duplication of the m/⌊β⌋ uncoded partitions.
+pub fn build_data_parallel(
+    x: &Mat,
+    y: &[f64],
+    scheme: Scheme,
+    m: usize,
+    beta: f64,
+    seed: u64,
+) -> Result<DataParallel> {
+    build_data_parallel_with_runtime(x, y, scheme, m, beta, seed, None)
+}
+
+/// [`build_data_parallel`] with an optional AOT artifact index: workers
+/// whose shard shape matches a compiled `quad_grad` artifact execute
+/// their gradient hot path on PJRT (lazy per-thread compilation); the
+/// rest use the native kernel.
+pub fn build_data_parallel_with_runtime(
+    x: &Mat,
+    y: &[f64],
+    scheme: Scheme,
+    m: usize,
+    beta: f64,
+    seed: u64,
+    runtime: Option<&crate::runtime::ArtifactIndex>,
+) -> Result<DataParallel> {
+    let n = x.rows();
+    anyhow::ensure!(y.len() == n, "X/y mismatch");
+    match scheme {
+        Scheme::Replication => {
+            let r = beta.round() as usize;
+            anyhow::ensure!(r >= 1 && m % r == 0, "replication needs r|m (r={r}, m={m})");
+            let map = ReplicationMap::new(m, r);
+            let parts = map.partitions();
+            let enc = crate::encoding::identity_encoding(n, parts);
+            // partition p's shard, duplicated to each holder
+            let shards: Vec<(Mat, Vec<f64>)> = (0..parts)
+                .map(|p| (enc.blocks[p].encode_mat(x), enc.blocks[p].matvec(y)))
+                .collect();
+            let mut pjrt_attached = 0;
+            let workers: Vec<Box<dyn WorkerNode>> = (0..m)
+                .map(|w| {
+                    let p = map.partition_of(w);
+                    let mut worker = QuadWorker::new(shards[p].0.clone(), shards[p].1.clone());
+                    if let Some(idx) = runtime {
+                        worker.pjrt =
+                            crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
+                        pjrt_attached += usize::from(worker.pjrt.is_some());
+                    }
+                    Box::new(worker) as Box<dyn WorkerNode>
+                })
+                .collect();
+            Ok(DataParallel {
+                workers,
+                assembler: GradAssembler { n, p: x.cols(), map },
+                scheme,
+                beta: r as f64,
+                pjrt_attached,
+            })
+        }
+        _ => {
+            let enc = Encoding::build(scheme, n, m, beta, seed)?;
+            let norm = 1.0 / enc.beta.sqrt();
+            let mut pjrt_attached = 0;
+            let workers: Vec<Box<dyn WorkerNode>> = enc
+                .blocks
+                .iter()
+                .map(|s| {
+                    let mut sx = s.encode_mat(x);
+                    sx.scale_inplace(norm);
+                    let mut sy = s.matvec(y);
+                    crate::linalg::scale(norm, &mut sy);
+                    let mut worker = QuadWorker::new(sx, sy);
+                    if let Some(idx) = runtime {
+                        worker.pjrt =
+                            crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
+                        pjrt_attached += usize::from(worker.pjrt.is_some());
+                    }
+                    Box::new(worker) as Box<dyn WorkerNode>
+                })
+                .collect();
+            Ok(DataParallel {
+                workers,
+                assembler: GradAssembler { n, p: x.cols(), map: ReplicationMap::new(m, 1) },
+                scheme,
+                beta: enc.beta,
+                pjrt_attached,
+            })
+        }
+    }
+}
+
+/// Evaluation callback: maps the current iterate to
+/// `(original objective, test metric)` for the trace.
+pub type EvalFn<'a> = dyn Fn(&[f64]) -> (f64, f64) + 'a;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Gather, SimCluster};
+    use crate::data::synth::gaussian_linear;
+    use crate::delay::NoDelay;
+    use crate::objectives::{QuadObjective, RidgeProblem};
+
+    fn grad_task(iter: usize, w: &[f64]) -> Task {
+        Task { iter, kind: KIND_GRADIENT, payload: w.to_vec(), aux: vec![] }
+    }
+
+    #[test]
+    fn full_gather_matches_exact_gradient_for_tight_frames() {
+        // k = m with a Parseval frame ⇒ assembled gradient == (1/n)Xᵀ(Xw−y)
+        let (x, y, _) = gaussian_linear(32, 6, 0.3, 5);
+        for scheme in [Scheme::Hadamard, Scheme::Haar, Scheme::Uncoded] {
+            let dp = build_data_parallel(&x, &y, scheme, 4, 2.0, 7).unwrap();
+            let asm = dp.assembler.clone();
+            let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
+            let w: Vec<f64> = (0..6).map(|i| 0.2 * i as f64 - 0.5).collect();
+            let rr = cluster.round(4, &mut |_| grad_task(0, &w));
+            let g = asm.assemble(&rr.responses);
+            // compare against the λ=0 ridge gradient
+            let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+            let g_exact = prob.gradient(&w);
+            let err = crate::testutil::rel_err(&g, &g_exact);
+            assert!(err < 1e-9, "{scheme:?}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn partial_gather_is_close_for_coded_far_for_uncoded() {
+        let (x, y, _) = gaussian_linear(64, 8, 0.2, 9);
+        let w: Vec<f64> = (0..8).map(|i| 0.1 * i as f64).collect();
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+        let g_exact = prob.gradient(&w);
+        let mut errs = std::collections::BTreeMap::new();
+        for scheme in [Scheme::Hadamard, Scheme::Uncoded] {
+            let dp = build_data_parallel(&x, &y, scheme, 8, 2.0, 3).unwrap();
+            let asm = dp.assembler.clone();
+            let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(8)));
+            let rr = cluster.round(6, &mut |_| grad_task(0, &w));
+            let g = asm.assemble(&rr.responses);
+            errs.insert(format!("{scheme:?}"), crate::testutil::rel_err(&g, &g_exact));
+        }
+        let coded = errs["Hadamard"];
+        let uncoded = errs["Uncoded"];
+        assert!(coded < uncoded, "coded {coded} !< uncoded {uncoded}");
+    }
+
+    #[test]
+    fn replication_dedups_and_scales() {
+        let (x, y, _) = gaussian_linear(24, 4, 0.1, 11);
+        let dp = build_data_parallel(&x, &y, Scheme::Replication, 8, 2.0, 1).unwrap();
+        let asm = dp.assembler.clone();
+        let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(8)));
+        let w = vec![0.1, -0.2, 0.3, 0.0];
+        // all respond: both copies of each partition arrive; gradient must
+        // still equal the exact one (duplicates dropped, not double-counted)
+        let rr = cluster.round(8, &mut |_| grad_task(0, &w));
+        let g = asm.assemble(&rr.responses);
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+        let err = crate::testutil::rel_err(&g, &prob.gradient(&w));
+        assert!(err < 1e-9, "rel err {err}");
+    }
+
+    #[test]
+    fn linesearch_quadform_matches_exact() {
+        let (x, y, _) = gaussian_linear(32, 5, 0.2, 13);
+        let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 4, 2.0, 5).unwrap();
+        let asm = dp.assembler.clone();
+        let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
+        let d = vec![0.3, -0.1, 0.5, 0.2, -0.4];
+        let rr = cluster.round(4, &mut |_| Task {
+            iter: 0,
+            kind: KIND_LINESEARCH,
+            payload: d.clone(),
+            aux: vec![],
+        });
+        let q = asm.assemble_quadform(&rr.responses);
+        let xd = x.matvec(&d);
+        let exact = crate::linalg::dot(&xd, &xd) / 32.0;
+        assert!((q - exact).abs() < 1e-9 * exact.max(1.0), "{q} vs {exact}");
+    }
+
+    #[test]
+    fn worker_cost_scales_with_rows() {
+        let (x, y, _) = gaussian_linear(30, 4, 0.1, 15);
+        let dp = build_data_parallel(&x, &y, Scheme::Gaussian, 3, 2.0, 1).unwrap();
+        // Gaussian β=2 → 60 rows over 3 workers = 20 each
+        for w in &dp.workers {
+            assert_eq!(w.cost(), 20.0);
+        }
+    }
+}

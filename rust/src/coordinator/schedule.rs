@@ -1,0 +1,101 @@
+//! Wait-for-k scheduling policies.
+//!
+//! The paper (§3.3) proposes choosing k_t adaptively for L-BFGS:
+//! `k_t = min{ k : |A_t(k) ∩ A_{t−1}| > m/β }` — wait for however many
+//! responses it takes until the overlap with the previous round's active
+//! set is large enough for the curvature-pair matrix `Š_t` to be full
+//! rank (condition (7)).
+
+/// Static policy: always wait for the same k.
+#[derive(Clone, Copy, Debug)]
+pub struct FixedK(pub usize);
+
+/// Adaptive overlap policy (paper §3.3).
+#[derive(Clone, Debug)]
+pub struct AdaptiveOverlapK {
+    /// Minimum overlap target: strictly more than m/β responders shared
+    /// with the previous round.
+    pub min_overlap: usize,
+    /// Floor/ceiling on k.
+    pub k_min: usize,
+    pub k_max: usize,
+}
+
+impl AdaptiveOverlapK {
+    pub fn new(m: usize, beta: f64, k_min: usize) -> Self {
+        let min_overlap = (m as f64 / beta).floor() as usize + 1;
+        AdaptiveOverlapK { min_overlap, k_min, k_max: m }
+    }
+
+    /// Given this round's arrival order (fastest first) and the previous
+    /// active set, the smallest k satisfying the overlap condition.
+    /// Falls back to `k_max` when the condition is unattainable.
+    pub fn pick_k(&self, arrival_order: &[usize], prev_active: &[usize]) -> usize {
+        let prev: std::collections::BTreeSet<usize> = prev_active.iter().copied().collect();
+        let mut overlap = 0usize;
+        for (idx, w) in arrival_order.iter().enumerate() {
+            if prev.contains(w) {
+                overlap += 1;
+            }
+            let k = idx + 1;
+            if k >= self.k_min && overlap >= self.min_overlap {
+                return k.min(self.k_max);
+            }
+        }
+        self.k_max.min(arrival_order.len())
+    }
+}
+
+/// Worst-case η for deterministic overlap (paper §3.3): when columns of X
+/// are independent, condition (7) holds if η ≥ ½ + 1/(2β).
+pub fn worst_case_eta(beta: f64) -> f64 {
+    0.5 + 1.0 / (2.0 * beta)
+}
+
+/// Expected-case η under i.i.d. delays: η ≥ 1/√β.
+pub fn expected_case_eta(beta: f64) -> f64 {
+    1.0 / beta.sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_waits_until_overlap() {
+        // m=8, β=2 → need overlap > 4, i.e. ≥ 5 shared responders.
+        let pol = AdaptiveOverlapK::new(8, 2.0, 2);
+        assert_eq!(pol.min_overlap, 5);
+        let prev = vec![0, 1, 2, 3, 4];
+        // arrivals: three non-members first, then members
+        let arrivals = vec![5, 6, 7, 0, 1, 2, 3, 4];
+        // need 5 members: k = 8
+        assert_eq!(pol.pick_k(&arrivals, &prev), 8);
+        // members arrive first: k = 5
+        let arrivals2 = vec![0, 1, 2, 3, 4, 5, 6, 7];
+        assert_eq!(pol.pick_k(&arrivals2, &prev), 5);
+    }
+
+    #[test]
+    fn adaptive_respects_k_min() {
+        let pol = AdaptiveOverlapK { min_overlap: 1, k_min: 3, k_max: 6 };
+        let prev = vec![0];
+        let arrivals = vec![0, 1, 2, 3, 4, 5];
+        assert_eq!(pol.pick_k(&arrivals, &prev), 3);
+    }
+
+    #[test]
+    fn adaptive_falls_back_to_kmax() {
+        let pol = AdaptiveOverlapK::new(4, 2.0, 1); // need ≥ 3 overlap
+        let prev = vec![0];
+        let arrivals = vec![1, 2, 3, 0];
+        assert_eq!(pol.pick_k(&arrivals, &prev), 4);
+    }
+
+    #[test]
+    fn eta_thresholds() {
+        assert!((worst_case_eta(2.0) - 0.75).abs() < 1e-12);
+        assert!((expected_case_eta(4.0) - 0.5).abs() < 1e-12);
+        assert!(expected_case_eta(2.0) < worst_case_eta(2.0));
+    }
+}

@@ -1,0 +1,13 @@
+//! Synthetic workload generators mirroring the paper's datasets.
+//!
+//! - [`synth`] — the §5.1 ridge ensemble (i.i.d. Gaussian design, linear
+//!   model + noise) and the §5.4 sparse-recovery LASSO ensemble.
+//! - [`movielens`] — MovieLens-like low-rank ratings with user/movie/
+//!   global biases (the real MovieLens-1M is not redistributable in this
+//!   offline environment; DESIGN.md §5 documents the substitution).
+//! - [`rcv1like`] — rcv1.binary-like sparse two-class documents with
+//!   power-law feature frequencies.
+
+pub mod movielens;
+pub mod rcv1like;
+pub mod synth;

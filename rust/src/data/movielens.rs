@@ -1,0 +1,156 @@
+//! MovieLens-like synthetic ratings (substitute for MovieLens-1M, which
+//! is not available offline — see DESIGN.md §5).
+//!
+//! Generative model matching the structure the paper's MF objective
+//! (eq. 12) assumes: `R_ij = clip(x_iᵀy_j + u_i + v_j + b + ε, 1, 5)`
+//! with low-rank user/movie factors, per-user/movie biases, and a
+//! popularity power law on which movies get rated. 80/20 split as in the
+//! paper.
+
+use crate::objectives::matfac::Rating;
+use crate::rng::{Normal, Pareto, Pcg64};
+use crate::rng::dist::Distribution;
+
+/// A generated ratings dataset.
+pub struct RatingsData {
+    pub train: Vec<Rating>,
+    pub test: Vec<Rating>,
+    pub n_users: usize,
+    pub n_movies: usize,
+    /// True latent rank used to generate.
+    pub rank: usize,
+    /// Global mean rating (use as the fixed bias b).
+    pub global_mean: f64,
+}
+
+/// Generate ratings: each user rates ~`ratings_per_user` movies chosen
+/// by a popularity power law; rating = biased low-rank model + N(0, σ²),
+/// clipped to [1, 5].
+pub fn generate(
+    n_users: usize,
+    n_movies: usize,
+    rank: usize,
+    ratings_per_user: usize,
+    sigma: f64,
+    seed: u64,
+) -> RatingsData {
+    let mut rng = Pcg64::with_stream(seed, 0x30f1);
+    let factor = Normal::new(0.0, (1.0 / rank as f64).sqrt());
+    let bias = Normal::new(0.0, 0.3);
+    let noise = Normal::new(0.0, sigma);
+    let xu: Vec<Vec<f64>> = (0..n_users)
+        .map(|_| (0..rank).map(|_| factor.sample(&mut rng)).collect())
+        .collect();
+    let ym: Vec<Vec<f64>> = (0..n_movies)
+        .map(|_| (0..rank).map(|_| factor.sample(&mut rng)).collect())
+        .collect();
+    let ub: Vec<f64> = (0..n_users).map(|_| bias.sample(&mut rng)).collect();
+    let vb: Vec<f64> = (0..n_movies).map(|_| bias.sample(&mut rng)).collect();
+    let b = 3.0;
+
+    // Movie popularity: Pareto weights → sampling distribution.
+    let pareto = Pareto::new(1.0, 1.2);
+    let mut weights: Vec<f64> = (0..n_movies).map(|_| pareto.sample(&mut rng)).collect();
+    let total: f64 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= total;
+    }
+    // cumulative for sampling
+    let mut cum = vec![0.0; n_movies];
+    let mut acc = 0.0;
+    for (i, w) in weights.iter().enumerate() {
+        acc += w;
+        cum[i] = acc;
+    }
+    let sample_movie = |rng: &mut Pcg64| -> usize {
+        let u = rng.next_f64();
+        cum.partition_point(|&c| c < u).min(n_movies - 1)
+    };
+
+    let mut all = Vec::new();
+    for user in 0..n_users {
+        let mut seen = vec![false; n_movies];
+        let target = ratings_per_user.min(n_movies);
+        let mut count = 0;
+        let mut attempts = 0;
+        while count < target && attempts < 50 * target {
+            attempts += 1;
+            let movie = sample_movie(&mut rng);
+            if seen[movie] {
+                continue;
+            }
+            seen[movie] = true;
+            let mean = crate::linalg::dot(&xu[user], &ym[movie]) + ub[user] + vb[movie] + b;
+            let value = (mean + noise.sample(&mut rng)).clamp(1.0, 5.0);
+            all.push(Rating { user, movie, value });
+            count += 1;
+        }
+    }
+    // 80/20 split
+    crate::rng::shuffle(&mut rng, &mut all);
+    let n_test = all.len() / 5;
+    let test = all[..n_test].to_vec();
+    let train = all[n_test..].to_vec();
+    let global_mean = if train.is_empty() {
+        3.0
+    } else {
+        train.iter().map(|r| r.value).sum::<f64>() / train.len() as f64
+    };
+    RatingsData { train, test, n_users, n_movies, rank, global_mean }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_split() {
+        let ds = generate(50, 30, 5, 10, 0.2, 1);
+        let total = ds.train.len() + ds.test.len();
+        assert_eq!(total, 50 * 10);
+        assert_eq!(ds.test.len(), total / 5);
+    }
+
+    #[test]
+    fn ratings_in_range_and_valid_ids() {
+        let ds = generate(20, 15, 3, 8, 0.5, 2);
+        for r in ds.train.iter().chain(&ds.test) {
+            assert!((1.0..=5.0).contains(&r.value));
+            assert!(r.user < 20 && r.movie < 15);
+        }
+    }
+
+    #[test]
+    fn no_duplicate_user_movie_pairs() {
+        let ds = generate(10, 20, 3, 10, 0.2, 3);
+        let mut pairs: Vec<(usize, usize)> = ds
+            .train
+            .iter()
+            .chain(&ds.test)
+            .map(|r| (r.user, r.movie))
+            .collect();
+        let before = pairs.len();
+        pairs.sort_unstable();
+        pairs.dedup();
+        assert_eq!(pairs.len(), before);
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let ds = generate(100, 50, 3, 10, 0.2, 4);
+        let mut counts = vec![0usize; 50];
+        for r in ds.train.iter().chain(&ds.test) {
+            counts[r.movie] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top5: usize = counts[..5].iter().sum();
+        let total: usize = counts.iter().sum();
+        assert!(top5 as f64 > 0.2 * total as f64, "top5={top5} of {total}");
+    }
+
+    #[test]
+    fn global_mean_near_three() {
+        let ds = generate(50, 40, 4, 10, 0.3, 5);
+        assert!((ds.global_mean - 3.0).abs() < 0.5, "mean={}", ds.global_mean);
+    }
+}

@@ -1,0 +1,153 @@
+//! rcv1.binary-like synthetic sparse document classification data
+//! (substitute for Reuters RCV1, unavailable offline — DESIGN.md §5).
+//!
+//! Matches the structural properties the paper's §5.3 experiment relies
+//! on: high-dimensional sparse tf-idf-like features with power-law
+//! frequencies, binary labels from a sparse ground-truth separator, and
+//! rows stored as `zᵢ = yᵢ·xᵢ` (label-scaled), which is the form the
+//! logistic objective consumes.
+
+use crate::linalg::Csr;
+use crate::rng::{Normal, Pareto, Pcg64};
+use crate::rng::dist::Distribution;
+
+/// Generated document dataset. Rows of `train`/`test` are `zᵢ = yᵢxᵢ`.
+pub struct DocsData {
+    pub train: Csr,
+    pub test: Csr,
+    /// Sparse ground-truth separator.
+    pub w_true: Vec<f64>,
+    pub n_features: usize,
+}
+
+/// Generate `n_docs` documents over `n_features` features with about
+/// `nnz_per_doc` non-zeros each; `label_noise` is the fraction of labels
+/// flipped. 1/7 of documents are held out (mirroring the paper's
+/// 100 000 of ~700 000).
+pub fn generate(
+    n_docs: usize,
+    n_features: usize,
+    nnz_per_doc: usize,
+    label_noise: f64,
+    seed: u64,
+) -> DocsData {
+    let mut rng = Pcg64::with_stream(seed, 0xdc5);
+    // Power-law feature popularity.
+    let pareto = Pareto::new(1.0, 1.1);
+    let weights: Vec<f64> = (0..n_features).map(|_| pareto.sample(&mut rng)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cum = vec![0.0; n_features];
+    let mut acc = 0.0;
+    for i in 0..n_features {
+        acc += weights[i] / total;
+        cum[i] = acc;
+    }
+    let sample_feature = |rng: &mut Pcg64| -> usize {
+        let u = rng.next_f64();
+        cum.partition_point(|&c| c < u).min(n_features - 1)
+    };
+    // Sparse ground truth on ~10% of features.
+    let support = crate::rng::sample_without_replacement(&mut rng, n_features, (n_features / 10).max(1));
+    let coef = Normal::new(0.0, 1.0);
+    let mut w_true = vec![0.0; n_features];
+    for &f in &support {
+        w_true[f] = coef.sample(&mut rng);
+    }
+
+    let tfidf = Normal::new(0.5, 0.2);
+    let mut triplets_train: Vec<(usize, usize, f64)> = Vec::new();
+    let mut triplets_test: Vec<(usize, usize, f64)> = Vec::new();
+    let n_test = n_docs / 7;
+    let mut train_row = 0usize;
+    let mut test_row = 0usize;
+    for doc in 0..n_docs {
+        // sample distinct features for this doc
+        let mut feats: Vec<usize> = Vec::with_capacity(nnz_per_doc);
+        let mut guard = 0;
+        while feats.len() < nnz_per_doc.min(n_features) && guard < 50 * nnz_per_doc {
+            guard += 1;
+            let f = sample_feature(&mut rng);
+            if !feats.contains(&f) {
+                feats.push(f);
+            }
+        }
+        let vals: Vec<f64> = feats.iter().map(|_| tfidf.sample(&mut rng).abs() + 0.05).collect();
+        // label from the ground truth separator (+ noise)
+        let margin: f64 = feats.iter().zip(&vals).map(|(&f, &v)| v * w_true[f]).sum();
+        let mut label = if margin >= 0.0 { 1.0 } else { -1.0 };
+        if rng.gen_bool(label_noise) {
+            label = -label;
+        }
+        let is_test = doc < n_test;
+        let row = if is_test { &mut test_row } else { &mut train_row };
+        for (&f, &v) in feats.iter().zip(&vals) {
+            let z = label * v;
+            if is_test {
+                triplets_test.push((*row, f, z));
+            } else {
+                triplets_train.push((*row, f, z));
+            }
+        }
+        *row += 1;
+    }
+    DocsData {
+        train: Csr::from_triplets(train_row, n_features, &triplets_train),
+        test: Csr::from_triplets(test_row, n_features, &triplets_test),
+        w_true,
+        n_features,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_split() {
+        let ds = generate(70, 40, 6, 0.05, 1);
+        assert_eq!(ds.test.rows(), 10);
+        assert_eq!(ds.train.rows(), 60);
+        assert_eq!(ds.train.cols(), 40);
+    }
+
+    #[test]
+    fn rows_are_sparse() {
+        let ds = generate(50, 200, 8, 0.05, 2);
+        for i in 0..ds.train.rows() {
+            let nnz = ds.train.row_iter(i).count();
+            assert!(nnz <= 8, "row {i} has {nnz} non-zeros");
+            assert!(nnz >= 1);
+        }
+    }
+
+    #[test]
+    fn ground_truth_separates_train_data() {
+        // with zero label noise, zᵢᵀw_true ≥ 0 for every row
+        let ds = generate(40, 30, 5, 0.0, 3);
+        let margins = ds.train.matvec(&ds.w_true);
+        assert!(margins.iter().all(|&m| m >= 0.0));
+    }
+
+    #[test]
+    fn label_noise_flips_some() {
+        let ds = generate(200, 30, 5, 0.3, 4);
+        let margins = ds.train.matvec(&ds.w_true);
+        let violated = margins.iter().filter(|&&m| m < 0.0).count();
+        assert!(violated > 10, "expected flipped labels, got {violated}");
+    }
+
+    #[test]
+    fn feature_popularity_skewed() {
+        let ds = generate(300, 100, 6, 0.05, 5);
+        let mut counts = vec![0usize; 100];
+        for i in 0..ds.train.rows() {
+            for (f, _) in ds.train.row_iter(i) {
+                counts[f] += 1;
+            }
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = counts[..10].iter().sum();
+        let total: usize = counts.iter().sum();
+        assert!(top10 as f64 > 0.3 * total as f64);
+    }
+}

@@ -1,0 +1,120 @@
+//! Dense synthetic ensembles (paper §5.1 and §5.4).
+
+use crate::linalg::Mat;
+use crate::rng::{Normal, Pcg64};
+use crate::rng::dist::Distribution;
+
+/// §5.1 ridge ensemble: `X ~ N(0,1)^{n×p}`, `w* ~ N(0,1)^p`,
+/// `y = Xw* + σ·z`. Returns (X, y, w*).
+pub fn gaussian_linear(n: usize, p: usize, sigma: f64, seed: u64) -> (Mat, Vec<f64>, Vec<f64>) {
+    let mut rng = Pcg64::with_stream(seed, 0xda7a);
+    let x = Mat::from_fn(n, p, |_, _| Normal::sample_standard(&mut rng));
+    let w_star: Vec<f64> = (0..p).map(|_| Normal::sample_standard(&mut rng)).collect();
+    let mut y = x.matvec(&w_star);
+    let noise = Normal::new(0.0, sigma);
+    for v in y.iter_mut() {
+        *v += noise.sample(&mut rng);
+    }
+    (x, y, w_star)
+}
+
+/// §5.4 LASSO sparse-recovery ensemble: `X ~ N(0,1)^{n×p}`, `w*` has
+/// `nnz` non-zeros drawn N(0, 4) at random coordinates,
+/// `y = Xw* + σ·z`. Returns (X, y, w*).
+pub fn sparse_recovery(
+    n: usize,
+    p: usize,
+    nnz: usize,
+    sigma: f64,
+    seed: u64,
+) -> (Mat, Vec<f64>, Vec<f64>) {
+    assert!(nnz <= p);
+    let mut rng = Pcg64::with_stream(seed, 0x5a55);
+    let x = Mat::from_fn(n, p, |_, _| Normal::sample_standard(&mut rng));
+    let support = crate::rng::sample_without_replacement(&mut rng, p, nnz);
+    let coef = Normal::new(0.0, 2.0); // N(0, 4) per the paper
+    let mut w_star = vec![0.0; p];
+    for &i in &support {
+        w_star[i] = coef.sample(&mut rng);
+    }
+    let mut y = x.matvec(&w_star);
+    let noise = Normal::new(0.0, sigma);
+    for v in y.iter_mut() {
+        *v += noise.sample(&mut rng);
+    }
+    (x, y, w_star)
+}
+
+/// Random train/test row split: returns (train_idx, test_idx) with
+/// `test_frac` of rows held out.
+pub fn split_rows(n: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    let n_test = ((n as f64) * test_frac).round() as usize;
+    let mut rng = Pcg64::with_stream(seed, 0x59e1);
+    let mut idx: Vec<usize> = (0..n).collect();
+    crate::rng::shuffle(&mut rng, &mut idx);
+    let test = idx[..n_test].to_vec();
+    let train = idx[n_test..].to_vec();
+    (train, test)
+}
+
+/// Extract the given rows of (X, y).
+pub fn take_rows(x: &Mat, y: &[f64], idx: &[usize]) -> (Mat, Vec<f64>) {
+    let mut xm = Mat::zeros(idx.len(), x.cols());
+    let mut ym = Vec::with_capacity(idx.len());
+    for (r, &i) in idx.iter().enumerate() {
+        xm.row_mut(r).copy_from_slice(x.row(i));
+        ym.push(y[i]);
+    }
+    (xm, ym)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_linear_shapes_and_noise() {
+        let (x, y, w) = gaussian_linear(50, 10, 0.0, 1);
+        assert_eq!(x.rows(), 50);
+        assert_eq!(x.cols(), 10);
+        assert_eq!(y.len(), 50);
+        assert_eq!(w.len(), 10);
+        // noiseless: y = Xw exactly
+        let y2 = x.matvec(&w);
+        crate::testutil::assert_allclose(&y, &y2, 1e-12, "noiseless");
+    }
+
+    #[test]
+    fn sparse_recovery_support_size() {
+        let (_, _, w) = sparse_recovery(20, 100, 7, 1.0, 2);
+        let nnz = w.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(nnz, 7);
+    }
+
+    #[test]
+    fn split_rows_partitions() {
+        let (train, test) = split_rows(100, 0.2, 3);
+        assert_eq!(test.len(), 20);
+        assert_eq!(train.len(), 80);
+        let mut all: Vec<usize> = train.iter().chain(&test).copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn take_rows_extracts() {
+        let (x, y, _) = gaussian_linear(10, 3, 0.1, 4);
+        let (xs, ys) = take_rows(&x, &y, &[2, 5]);
+        assert_eq!(xs.rows(), 2);
+        assert_eq!(xs.row(0), x.row(2));
+        assert_eq!(ys[1], y[5]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x1, y1, _) = gaussian_linear(5, 2, 0.5, 9);
+        let (x2, y2, _) = gaussian_linear(5, 2, 0.5, 9);
+        assert_eq!(x1.as_slice(), x2.as_slice());
+        assert_eq!(y1, y2);
+    }
+}

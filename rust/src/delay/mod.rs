@@ -1,0 +1,83 @@
+//! Straggler delay models (paper §5 experimental setups).
+//!
+//! A [`DelayModel`] answers "how many extra seconds does worker `i` take
+//! in iteration `t`?". The paper's experiments use:
+//! - exponential per-task latency, mean 10 ms (MovieLens, §5.2);
+//! - a bimodal Gaussian mixture — half the nodes ~0.5 s, half ~20 s
+//!   (logistic regression, §5.3);
+//! - a trimodal mixture (LASSO, §5.4);
+//! - a power-law number of background tasks per machine, capped at 50
+//!   (logistic regression, §5.3) — *persistent* per-node slowdown;
+//! - adversarial patterns (used by the deterministic-convergence tests:
+//!   the theory holds for arbitrary A_t sequences).
+
+pub mod models;
+
+pub use models::{
+    AdversarialDelay, BackgroundTasksDelay, ConstantDelay, ExponentialDelay, MinOfR,
+    MixtureDelay, NoDelay, TraceDelay,
+};
+
+use crate::config::DelaySpec;
+use crate::rng::Pcg64;
+
+/// Extra latency injected on top of a worker's compute time.
+pub trait DelayModel: Send {
+    /// Delay in seconds for worker `i` at iteration `t`.
+    fn sample(&mut self, worker: usize, iter: usize) -> f64;
+
+    /// Number of workers this model was configured for.
+    fn workers(&self) -> usize;
+}
+
+/// Build a delay model from an experiment's [`DelaySpec`].
+pub fn from_spec(spec: &DelaySpec, m: usize, seed: u64) -> Box<dyn DelayModel> {
+    match spec {
+        DelaySpec::None => Box::new(NoDelay::new(m)),
+        DelaySpec::Exponential { mean } => Box::new(ExponentialDelay::new(m, *mean, seed)),
+        DelaySpec::Bimodal => Box::new(MixtureDelay::paper_bimodal(m, seed)),
+        DelaySpec::Trimodal => Box::new(MixtureDelay::paper_trimodal(m, seed)),
+        DelaySpec::BackgroundTasks { alpha, cap, task_secs } => {
+            Box::new(BackgroundTasksDelay::new(m, *alpha, *cap, *task_secs, seed))
+        }
+        DelaySpec::Adversarial { slow_fraction, slow_secs } => {
+            let n_slow = ((m as f64) * slow_fraction).round() as usize;
+            let mut rng = Pcg64::with_stream(seed, 0xadfe);
+            let slow = crate::rng::sample_without_replacement(&mut rng, m, n_slow.min(m));
+            Box::new(AdversarialDelay::new(m, slow, *slow_secs))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_spec_dispatch() {
+        let m = 8;
+        for (spec, lo, hi) in [
+            (DelaySpec::None, 0.0, 0.0),
+            (DelaySpec::Exponential { mean: 0.01 }, 0.0, f64::INFINITY),
+            (DelaySpec::Bimodal, 0.0, f64::INFINITY),
+        ] {
+            let mut d = from_spec(&spec, m, 1);
+            assert_eq!(d.workers(), m);
+            for w in 0..m {
+                let v = d.sample(w, 0);
+                assert!(v >= lo && v <= hi);
+            }
+        }
+    }
+
+    #[test]
+    fn adversarial_spec_marks_fraction() {
+        let mut d = from_spec(
+            &DelaySpec::Adversarial { slow_fraction: 0.5, slow_secs: 9.0 },
+            8,
+            3,
+        );
+        let slow = (0..8).filter(|&w| d.sample(w, 0) > 8.0).count();
+        assert_eq!(slow, 4);
+    }
+}

@@ -1,0 +1,364 @@
+//! Concrete delay models.
+
+use super::DelayModel;
+use crate::rng::{Exponential, GaussianMixture, Pareto, Pcg64};
+use crate::rng::dist::Distribution;
+
+/// Zero injected delay.
+pub struct NoDelay {
+    m: usize,
+}
+
+impl NoDelay {
+    pub fn new(m: usize) -> Self {
+        NoDelay { m }
+    }
+}
+
+impl DelayModel for NoDelay {
+    fn sample(&mut self, _worker: usize, _iter: usize) -> f64 {
+        0.0
+    }
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+/// Same constant delay everywhere (useful in tests: makes arrival order
+/// deterministic up to tie-breaking).
+pub struct ConstantDelay {
+    m: usize,
+    secs: f64,
+}
+
+impl ConstantDelay {
+    pub fn new(m: usize, secs: f64) -> Self {
+        ConstantDelay { m, secs }
+    }
+}
+
+impl DelayModel for ConstantDelay {
+    fn sample(&mut self, _worker: usize, _iter: usize) -> f64 {
+        self.secs
+    }
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+/// i.i.d. exponential latency per (worker, iteration) — the MovieLens
+/// experiment's `Δ ~ exp(mean 10 ms)` (§5.2).
+pub struct ExponentialDelay {
+    m: usize,
+    dist: Exponential,
+    rng: Pcg64,
+}
+
+impl ExponentialDelay {
+    pub fn new(m: usize, mean_secs: f64, seed: u64) -> Self {
+        ExponentialDelay { m, dist: Exponential::with_mean(mean_secs), rng: Pcg64::with_stream(seed, 0xe4b) }
+    }
+}
+
+impl DelayModel for ExponentialDelay {
+    fn sample(&mut self, _worker: usize, _iter: usize) -> f64 {
+        self.dist.sample(&mut self.rng)
+    }
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+/// i.i.d. Gaussian-mixture latency, clipped at 0 (delays cannot be
+/// negative). Covers the paper's bimodal (§5.3) and trimodal (§5.4)
+/// communication-delay experiments.
+pub struct MixtureDelay {
+    m: usize,
+    dist: GaussianMixture,
+    rng: Pcg64,
+}
+
+impl MixtureDelay {
+    pub fn new(m: usize, dist: GaussianMixture, seed: u64) -> Self {
+        MixtureDelay { m, dist, rng: Pcg64::with_stream(seed, 0x617) }
+    }
+
+    /// §5.3: 0.5·N(0.5s, 0.2²) + 0.5·N(20s, 5²).
+    pub fn paper_bimodal(m: usize, seed: u64) -> Self {
+        Self::new(m, GaussianMixture::paper_bimodal(), seed)
+    }
+
+    /// §5.4: 0.8·N(0.2, 0.1²) + 0.1·N(0.6, 0.2²) + 0.1·N(1.0, 0.4²).
+    pub fn paper_trimodal(m: usize, seed: u64) -> Self {
+        Self::new(m, GaussianMixture::paper_trimodal(), seed)
+    }
+}
+
+impl DelayModel for MixtureDelay {
+    fn sample(&mut self, _worker: usize, _iter: usize) -> f64 {
+        self.dist.sample(&mut self.rng).max(0.0)
+    }
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+/// Power-law background load (§5.3): at construction each machine draws a
+/// number of dummy background tasks from a Pareto(α) law capped at `cap`;
+/// the tasks persist for the whole run, slowing every iteration of that
+/// machine proportionally. This produces the *persistent* straggler
+/// profile of Figures 12–13 (same machines are always slow).
+pub struct BackgroundTasksDelay {
+    tasks: Vec<usize>,
+    task_secs: f64,
+    rng: Pcg64,
+}
+
+impl BackgroundTasksDelay {
+    pub fn new(m: usize, alpha: f64, cap: usize, task_secs: f64, seed: u64) -> Self {
+        let mut rng = Pcg64::with_stream(seed, 0xb69);
+        let pareto = Pareto::new(1.0, alpha);
+        let tasks = (0..m)
+            .map(|_| {
+                // numbers of tasks ∈ {0, 1, …, cap}: Pareto ≥ 1 shifted
+                let t = pareto.sample(&mut rng).floor() as usize - 1;
+                t.min(cap)
+            })
+            .collect();
+        BackgroundTasksDelay { tasks, task_secs, rng }
+    }
+
+    /// Background tasks per node (diagnostics / Fig. 12 reproduction).
+    pub fn task_counts(&self) -> &[usize] {
+        &self.tasks
+    }
+}
+
+impl DelayModel for BackgroundTasksDelay {
+    fn sample(&mut self, worker: usize, _iter: usize) -> f64 {
+        // Each background task steals a CPU share (persistent,
+        // multiplicative jitter) plus an exponential per-iteration
+        // scheduling-noise term — so machines with similar load trade
+        // places across iterations (the fractional participation bands
+        // of the paper's Figure 12) while heavily-loaded machines stay
+        // clearly slow.
+        let jitter = 1.0 + 0.05 * (self.rng.next_f64() - 0.5);
+        let noise = -(1.0 - self.rng.next_f64()).max(1e-300).ln() * 1.5 * self.task_secs;
+        self.tasks[worker] as f64 * self.task_secs * jitter + noise
+    }
+    fn workers(&self) -> usize {
+        self.tasks.len()
+    }
+}
+
+/// Adversarial: a fixed subset of nodes is delayed by `slow_secs` every
+/// iteration. Used by the deterministic-convergence tests — the paper's
+/// guarantees hold for *arbitrary* straggler patterns, including this
+/// worst case where the same nodes never respond in time.
+pub struct AdversarialDelay {
+    m: usize,
+    slow: Vec<bool>,
+    slow_secs: f64,
+}
+
+impl AdversarialDelay {
+    pub fn new(m: usize, slow_workers: Vec<usize>, slow_secs: f64) -> Self {
+        let mut slow = vec![false; m];
+        for w in slow_workers {
+            slow[w] = true;
+        }
+        AdversarialDelay { m, slow, slow_secs }
+    }
+
+    /// Rotating adversary: delays a different window of ⌈fraction·m⌉
+    /// workers each iteration (worst case for replication).
+    pub fn rotating(m: usize, fraction: f64, slow_secs: f64) -> RotatingAdversary {
+        RotatingAdversary { m, n_slow: ((m as f64) * fraction).ceil() as usize, slow_secs }
+    }
+}
+
+impl DelayModel for AdversarialDelay {
+    fn sample(&mut self, worker: usize, _iter: usize) -> f64 {
+        if self.slow[worker] {
+            self.slow_secs
+        } else {
+            0.0
+        }
+    }
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+/// See [`AdversarialDelay::rotating`].
+pub struct RotatingAdversary {
+    m: usize,
+    n_slow: usize,
+    slow_secs: f64,
+}
+
+impl DelayModel for RotatingAdversary {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        let start = (iter * self.n_slow) % self.m;
+        let in_window = (0..self.n_slow).any(|o| (start + o) % self.m == worker);
+        if in_window {
+            self.slow_secs
+        } else {
+            0.0
+        }
+    }
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+/// Fastest-of-r wrapper: each logical worker's delay is the minimum of
+/// `r` independent draws from the inner model. Used to model the
+/// replication baseline under model parallelism: a partition held by r
+/// replicas responds as fast as its fastest copy (see
+/// `coordinator::bcd::replication_equivalent` for the wait-for-k
+/// mapping).
+pub struct MinOfR<D: DelayModel> {
+    inner: D,
+    r: usize,
+    m_logical: usize,
+}
+
+impl<D: DelayModel> MinOfR<D> {
+    /// `inner` must be sized for `r × m_logical` physical workers.
+    pub fn new(inner: D, r: usize) -> Self {
+        assert!(r >= 1);
+        let m_logical = inner.workers() / r;
+        assert_eq!(inner.workers(), r * m_logical, "inner model must cover r·P workers");
+        MinOfR { inner, r, m_logical }
+    }
+}
+
+impl<D: DelayModel> DelayModel for MinOfR<D> {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        (0..self.r)
+            .map(|c| self.inner.sample(worker + c * self.m_logical, iter))
+            .fold(f64::INFINITY, f64::min)
+    }
+    fn workers(&self) -> usize {
+        self.m_logical
+    }
+}
+
+/// Replay a recorded delay trace: `trace[t][i]` seconds; iterations past
+/// the end wrap around.
+pub struct TraceDelay {
+    trace: Vec<Vec<f64>>,
+}
+
+impl TraceDelay {
+    pub fn new(trace: Vec<Vec<f64>>) -> Self {
+        assert!(!trace.is_empty());
+        let m = trace[0].len();
+        assert!(trace.iter().all(|r| r.len() == m), "ragged trace");
+        TraceDelay { trace }
+    }
+}
+
+impl DelayModel for TraceDelay {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        self.trace[iter % self.trace.len()][worker]
+    }
+    fn workers(&self) -> usize {
+        self.trace[0].len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_mean_matches() {
+        let mut d = ExponentialDelay::new(4, 0.01, 7);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|t| d.sample(t % 4, t)).sum::<f64>() / n as f64;
+        assert!((mean - 0.01).abs() < 5e-4, "mean={mean}");
+    }
+
+    #[test]
+    fn mixture_never_negative() {
+        let mut d = MixtureDelay::paper_bimodal(4, 9);
+        assert!((0..10_000).all(|t| d.sample(t % 4, t) >= 0.0));
+    }
+
+    #[test]
+    fn background_tasks_persistent_per_node() {
+        let mut d = BackgroundTasksDelay::new(16, 1.5, 50, 0.05, 11);
+        assert!(d.task_counts().iter().all(|&t| t <= 50));
+        // heavily loaded nodes are consistently slower than idle ones
+        // (averaged over iterations; per-iteration noise can reorder
+        // near-equal loads but not a ≥10-task gap)
+        let counts = d.task_counts().to_vec();
+        if let (Some(&hi), Some(&lo)) = (
+            counts.iter().filter(|&&c| c >= 10).min(),
+            counts.iter().filter(|&&c| c <= 1).max(),
+        ) {
+            let hi_w = counts.iter().position(|&c| c == hi).unwrap();
+            let lo_w = counts.iter().position(|&c| c == lo).unwrap();
+            let mean = |d: &mut BackgroundTasksDelay, w: usize| -> f64 {
+                (0..200).map(|t| d.sample(w, t)).sum::<f64>() / 200.0
+            };
+            assert!(mean(&mut d, hi_w) > mean(&mut d, lo_w));
+        }
+    }
+
+    #[test]
+    fn background_tasks_power_law_is_skewed() {
+        let d = BackgroundTasksDelay::new(128, 1.5, 50, 0.05, 13);
+        let zero_ish = d.task_counts().iter().filter(|&&t| t == 0).count();
+        let heavy = d.task_counts().iter().filter(|&&t| t >= 10).count();
+        // majority of machines nearly idle, a heavy tail loaded
+        assert!(zero_ish > 50, "zero={zero_ish}");
+        assert!(heavy >= 2, "heavy={heavy}");
+    }
+
+    #[test]
+    fn adversarial_fixed_set() {
+        let mut d = AdversarialDelay::new(4, vec![1, 3], 5.0);
+        for t in 0..10 {
+            assert_eq!(d.sample(0, t), 0.0);
+            assert_eq!(d.sample(1, t), 5.0);
+            assert_eq!(d.sample(2, t), 0.0);
+            assert_eq!(d.sample(3, t), 5.0);
+        }
+    }
+
+    #[test]
+    fn rotating_adversary_moves() {
+        let mut d = AdversarialDelay::rotating(4, 0.5, 5.0);
+        let slow_at = |d: &mut RotatingAdversary, t: usize| -> Vec<usize> {
+            (0..4).filter(|&w| d.sample(w, t) > 0.0).collect()
+        };
+        let s0 = slow_at(&mut d, 0);
+        let s1 = slow_at(&mut d, 1);
+        assert_eq!(s0.len(), 2);
+        assert_eq!(s1.len(), 2);
+        assert_ne!(s0, s1);
+    }
+
+    #[test]
+    fn min_of_r_takes_fastest_copy() {
+        // 4 physical workers (2 logical × r=2); physical 0&2 are copies of
+        // logical 0, physical 1&3 of logical 1.
+        let inner = TraceDelay::new(vec![vec![5.0, 1.0, 2.0, 7.0]]);
+        let mut d = MinOfR::new(inner, 2);
+        assert_eq!(d.workers(), 2);
+        assert_eq!(d.sample(0, 0), 2.0); // min(5, 2)
+        assert_eq!(d.sample(1, 0), 1.0); // min(1, 7)
+    }
+
+    #[test]
+    fn trace_replays_and_wraps() {
+        let mut d = TraceDelay::new(vec![vec![0.1, 0.2], vec![0.3, 0.4]]);
+        assert_eq!(d.sample(1, 0), 0.2);
+        assert_eq!(d.sample(0, 1), 0.3);
+        assert_eq!(d.sample(0, 2), 0.1); // wrap
+        assert_eq!(d.workers(), 2);
+    }
+}

@@ -1,0 +1,75 @@
+//! i.i.d. Gaussian encoding ensemble.
+//!
+//! Entries drawn N(0, 1/n) so each row has expected unit norm, matching
+//! the paper's eq. (8)–(9) normalization `(1/(βηn))·S_AᵀS_A` with N(0,1)
+//! entries: our rows absorb the 1/√n. For large n the subset Grams
+//! concentrate in `[(1−√(1/(βη)))², (1+√(1/(βη)))²]`.
+
+use super::{split_dense, Encoding};
+use crate::config::Scheme;
+use crate::linalg::Mat;
+use crate::rng::{Normal, Pcg64};
+
+/// Build the Gaussian encoding: `⌈βn⌉ × n`, split into m row-blocks.
+pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
+    let total_rows = (beta * n as f64).round() as usize;
+    let mut rng = Pcg64::with_stream(seed, 0x6a55);
+    let sigma = 1.0 / (n as f64).sqrt();
+    let s = Mat::from_fn(total_rows, n, |_, _| sigma * Normal::sample_standard(&mut rng));
+    Encoding {
+        scheme: Scheme::Gaussian,
+        beta: total_rows as f64 / n as f64,
+        n,
+        blocks: split_dense(s, m),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symmetric_eigenvalues;
+
+    #[test]
+    fn dimensions_and_beta() {
+        let enc = build(64, 8, 2.0, 1);
+        assert_eq!(enc.total_rows(), 128);
+        assert_eq!(enc.n, 64);
+        assert_eq!(enc.workers(), 8);
+        assert!((enc.beta - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_have_near_unit_norm() {
+        let enc = build(256, 4, 2.0, 2);
+        let s = enc.stack(&[0, 1, 2, 3]);
+        let mut mean_norm2 = 0.0;
+        for i in 0..s.rows() {
+            mean_norm2 += crate::linalg::dot(s.row(i), s.row(i));
+        }
+        mean_norm2 /= s.rows() as f64;
+        assert!((mean_norm2 - 1.0).abs() < 0.05, "mean row norm² = {mean_norm2}");
+    }
+
+    #[test]
+    fn full_gram_concentrates_near_identity() {
+        // With all workers, G = (1/β)·SᵀS should have eigenvalues in a
+        // Marchenko–Pastur-ish band around 1.
+        let enc = build(96, 6, 3.0, 3);
+        let g = enc.gram_normalized(&[0, 1, 2, 3, 4, 5]);
+        let eigs = symmetric_eigenvalues(&g);
+        // Marchenko–Pastur band for aspect ratio 1/β = 1/3:
+        // [(1−√⅓)², (1+√⅓)²] ≈ [0.18, 2.49]; allow finite-n slack.
+        let (lo, hi) = (eigs[0], *eigs.last().unwrap());
+        assert!(lo > 0.05 && hi < 2.8, "spectrum [{lo:.3}, {hi:.3}] too wide");
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = build(32, 4, 2.0, 7);
+        let b = build(32, 4, 2.0, 7);
+        let (sa, sb) = (a.stack(&[0]), b.stack(&[0]));
+        assert_eq!(sa.as_slice(), sb.as_slice());
+        let c = build(32, 4, 2.0, 8);
+        assert_ne!(a.stack(&[0]).as_slice(), c.stack(&[0]).as_slice());
+    }
+}

@@ -1,0 +1,160 @@
+//! Column-subsampled Haar wavelet encoding (paper §4.2.1, "Example: Haar
+//! matrix").
+//!
+//! The orthonormal Haar matrix is defined recursively:
+//!
+//!   H_{2n} = (1/√2) · [ H_n ⊗ [1  1] ]
+//!                     [ I_n ⊗ [1 −1] ] ,   H_1 = [1].
+//!
+//! Given redundancy β, sample n columns of `H_N` (N = βn rounded to a
+//! power of two) and scale by √β so that `SᵀS = β·I` exactly. Haar
+//! columns have O(log N) non-zeros, giving the paper's
+//! `|B_I_k| ≤ βn·log(n)/m` memory bound.
+
+use super::{partition_bounds, Encoding, SMatrix};
+use crate::config::Scheme;
+use crate::linalg::Csr;
+use crate::rng::{sample_without_replacement, Pcg64};
+
+/// Triplets of the orthonormal Haar matrix of order `n` (power of two).
+pub fn haar_triplets(n: usize) -> Vec<(usize, usize, f64)> {
+    assert!(n.is_power_of_two(), "Haar order must be a power of two");
+    let mut t: Vec<(usize, usize, f64)> = vec![(0, 0, 1.0)];
+    let mut size = 1;
+    let inv_sqrt2 = std::f64::consts::FRAC_1_SQRT_2;
+    while size < n {
+        let mut next = Vec::with_capacity(2 * t.len() + 2 * size);
+        // Top half: H_size ⊗ [1 1] / √2
+        for &(i, j, v) in &t {
+            next.push((i, 2 * j, v * inv_sqrt2));
+            next.push((i, 2 * j + 1, v * inv_sqrt2));
+        }
+        // Bottom half: I_size ⊗ [1 −1] / √2
+        for i in 0..size {
+            next.push((size + i, 2 * i, inv_sqrt2));
+            next.push((size + i, 2 * i + 1, -inv_sqrt2));
+        }
+        t = next;
+        size *= 2;
+    }
+    t
+}
+
+/// Sibling-avoiding column sample: choose `n` of `nn` columns such that
+/// no two selected columns are a finest-level sibling pair {2i, 2i+1}.
+///
+/// Rationale: the fine-detail Haar row `i` has its entire mass on
+/// columns {2i, 2i+1}. If both survive the subsampling and that row is
+/// later erased with a straggling worker, the erased row captures a full
+/// coordinate direction and `λ_min(S_AᵀS_A)` collapses to 0. Picking at
+/// most one column per sibling pair caps every non-top row's selected
+/// mass at ½, so no single erased row can zero out a direction.
+/// Requires `n ≤ nn/2`, i.e. β ≥ 2 (rounded up by the power-of-two).
+fn sibling_avoiding_sample(rng: &mut Pcg64, nn: usize, n: usize) -> Vec<usize> {
+    assert!(n <= nn / 2, "sibling-avoiding Haar sample needs β ≥ 2 (n={n}, N={nn})");
+    let pairs = sample_without_replacement(rng, nn / 2, n);
+    let mut cols: Vec<usize> = pairs
+        .into_iter()
+        .map(|p| 2 * p + rng.gen_range(2)) // one side of each chosen pair
+        .collect();
+    cols.sort_unstable();
+    cols
+}
+
+/// Build the subsampled-Haar encoding for dimension n across m workers.
+pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
+    let target = ((beta * n as f64).ceil() as usize).max(2 * n);
+    let nn = target.next_power_of_two().max(2);
+    let mut rng = Pcg64::with_stream(seed, 0x4aa2);
+    let cols = sibling_avoiding_sample(&mut rng, nn, n);
+    let mut col_map = vec![usize::MAX; nn];
+    for (new, &old) in cols.iter().enumerate() {
+        col_map[old] = new;
+    }
+    let scale = (nn as f64 / n as f64).sqrt();
+    // Random column signs (FJLT trick, see hadamard.rs): decorrelate the
+    // coarse Haar rows from constant data columns.
+    let signs: Vec<f64> = (0..n).map(|_| if rng.gen_bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let triplets: Vec<(usize, usize, f64)> = haar_triplets(nn)
+        .into_iter()
+        .filter_map(|(i, j, v)| {
+            let nj = col_map[j];
+            (nj != usize::MAX).then(|| (i, nj, v * scale * signs[nj]))
+        })
+        .collect();
+    let s = Csr::from_triplets(nn, n, &triplets);
+    let bounds = partition_bounds(nn, m);
+    let blocks = bounds
+        .windows(2)
+        .map(|w| SMatrix::Sparse(s.row_block(w[0], w[1])))
+        .collect();
+    Encoding { scheme: Scheme::Haar, beta: nn as f64 / n as f64, n, blocks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn haar_dense(n: usize) -> Mat {
+        Csr::from_triplets(n, n, &haar_triplets(n)).to_dense()
+    }
+
+    #[test]
+    fn haar_2_matches_definition() {
+        let h = haar_dense(2);
+        let s = std::f64::consts::FRAC_1_SQRT_2;
+        crate::testutil::assert_allclose(h.as_slice(), &[s, s, s, -s], 1e-15, "H2");
+    }
+
+    #[test]
+    fn haar_is_orthonormal() {
+        for n in [2usize, 4, 8, 16, 64] {
+            let h = haar_dense(n);
+            let g = h.gram();
+            for i in 0..n {
+                for j in 0..n {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert!((g[(i, j)] - expect).abs() < 1e-12, "n={n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn haar_nnz_is_n_log_n(){
+        let n = 64;
+        let t = haar_triplets(n);
+        // nnz(N) = N(log2 N)... exact recurrence: nnz(2n)=2nnz(n)+2n
+        // → nnz(64) = 64·log2(64)/... compute directly: 448
+        assert_eq!(t.len(), 448);
+    }
+
+    #[test]
+    fn encoding_is_exact_tight_frame() {
+        let enc = build(24, 4, 2.0, 3);
+        let s = enc.stack(&[0, 1, 2, 3]);
+        let g = s.gram();
+        for i in 0..24 {
+            for j in 0..24 {
+                let expect = if i == j { enc.beta } else { 0.0 };
+                assert!((g[(i, j)] - expect).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocks_are_sparse() {
+        let enc = build(512, 8, 2.0, 5);
+        for b in &enc.blocks {
+            assert!(b.density() < 0.1, "density={}", b.density());
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let a = build(32, 4, 2.0, 7).stack(&[1]);
+        let b = build(32, 4, 2.0, 7).stack(&[1]);
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+}

@@ -1,0 +1,157 @@
+//! Column-subsampled Hadamard encoding (paper §4.2.2, used for the ridge
+//! experiment of Figure 7 with β = 2, encoded via FWHT).
+//!
+//! Take the Sylvester–Hadamard matrix `H_N` (N = 2^⌈log₂ βn⌉), keep `n`
+//! randomly chosen columns, scale by `1/√n`. Column-orthogonality of `H`
+//! makes this an *exact* tight frame: `SᵀS = (N/n)·I = β·I`, and rows have
+//! exactly unit norm. Encoding a vector is `O(N log N)` via FWHT.
+
+use super::{split_dense, Encoding};
+use crate::config::Scheme;
+use crate::linalg::fwht::{fwht, hadamard_entry};
+use crate::linalg::Mat;
+use crate::rng::{sample_without_replacement, Pcg64};
+
+/// Build the subsampled-Hadamard encoding.
+///
+/// The achieved β is `2^⌈log₂(βn)⌉ / n` (power-of-two rounding).
+pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
+    let (cols, nn) = column_sample(n, beta, seed);
+    let perm = row_permutation(nn, seed);
+    let signs = column_signs(n, seed);
+    let scale = 1.0 / (n as f64).sqrt();
+    // Two randomizations, both leaving SᵀS = β·I exact:
+    // 1. Rows are randomly permuted before blocking: Sylvester-Hadamard
+    //    is a tensor power (H_N = H_{N/m} ⊗ H_m under bit-split
+    //    indexing), so *consecutive* row blocks align with tensor factors
+    //    and dropping two blocks can annihilate a direction (rank loss).
+    //    The permutation — the matrix analogue of the paper's "insert
+    //    zero rows at random locations, then FWHT" recipe — destroys
+    //    that alignment.
+    // 2. Random column signs (the FJLT trick): raw Hadamard columns are
+    //    coherent with constant data columns (H·1 concentrates on one
+    //    row), so a worker block can see ~zero energy for a bias
+    //    feature; random signs spread every data direction evenly.
+    let s = Mat::from_fn(nn, n, |i, j| scale * signs[j] * hadamard_entry(perm[i], cols[j]));
+    Encoding {
+        scheme: Scheme::Hadamard,
+        beta: nn as f64 / n as f64,
+        n,
+        blocks: split_dense(s, m),
+    }
+}
+
+/// The row permutation used by [`build`] for (nn, seed).
+pub fn row_permutation(nn: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Pcg64::with_stream(seed, 0x4ad_0001);
+    let mut perm: Vec<usize> = (0..nn).collect();
+    crate::rng::shuffle(&mut rng, &mut perm);
+    perm
+}
+
+/// The random ±1 column signs used by [`build`] for (n, seed).
+pub fn column_signs(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Pcg64::with_stream(seed, 0x4ad_0002);
+    (0..n).map(|_| if rng.gen_bool(0.5) { 1.0 } else { -1.0 }).collect()
+}
+
+/// Fast encoding of a single column vector by FWHT: computes `S·x` in
+/// O(N log N) without materializing S. `cols` and `perm` must be the same
+/// column sample / row permutation used to build S ([`column_sample`],
+/// [`row_permutation`]).
+pub fn encode_fwht(
+    x: &[f64],
+    cols: &[usize],
+    perm: &[usize],
+    signs: &[f64],
+    nn: usize,
+) -> Vec<f64> {
+    assert_eq!(x.len(), cols.len());
+    let mut padded = vec![0.0; nn];
+    for (j, &c) in cols.iter().enumerate() {
+        padded[c] = x[j] * signs[j];
+    }
+    fwht(&mut padded);
+    let scale = 1.0 / (x.len() as f64).sqrt();
+    let mut out = vec![0.0; nn];
+    for (i, &p) in perm.iter().enumerate() {
+        out[i] = padded[p] * scale;
+    }
+    out
+}
+
+/// The sorted column sample for (n, β, seed) — exposed so the FWHT fast
+/// path and the materialized matrix agree.
+pub fn column_sample(n: usize, beta: f64, seed: u64) -> (Vec<usize>, usize) {
+    let target = (beta * n as f64).ceil() as usize;
+    let nn = target.next_power_of_two();
+    let mut rng = Pcg64::with_stream(seed, 0x4ad_u64);
+    let mut c = sample_without_replacement(&mut rng, nn, n);
+    c.sort_unstable();
+    (c, nn)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symmetric_eigenvalues;
+
+    #[test]
+    fn exact_tight_frame() {
+        let enc = build(24, 4, 2.0, 1);
+        // SᵀS = β·I exactly (columns of H are orthogonal).
+        let s = enc.stack(&[0, 1, 2, 3]);
+        let g = s.gram();
+        for i in 0..24 {
+            for j in 0..24 {
+                let expect = if i == j { enc.beta } else { 0.0 };
+                assert!((g[(i, j)] - expect).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_unit_norm() {
+        let enc = build(16, 2, 2.0, 3);
+        let s = enc.stack(&[0, 1]);
+        for i in 0..s.rows() {
+            let n2 = crate::linalg::dot(s.row(i), s.row(i));
+            assert!((n2 - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn beta_rounds_to_power_of_two() {
+        let enc = build(24, 4, 2.0, 1);
+        // βn = 48 → next pow2 = 64 → β = 64/24
+        assert!((enc.beta - 64.0 / 24.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fwht_fast_path_matches_matrix() {
+        let n = 12;
+        let (cols, nn) = column_sample(n, 2.0, 9);
+        let perm = row_permutation(nn, 9);
+        let signs = column_signs(n, 9);
+        let enc = build(n, 3, 2.0, 9);
+        let s = enc.stack(&[0, 1, 2]);
+        let mut rng = Pcg64::new(4);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+        let slow = s.matvec(&x);
+        let fast = encode_fwht(&x, &cols, &perm, &signs, nn);
+        crate::testutil::assert_allclose(&fast, &slow, 1e-10, "fwht encode");
+    }
+
+    #[test]
+    fn subset_spectrum_full_rank_with_prop8_plateau() {
+        let enc = build(32, 8, 2.0, 5);
+        // η = 0.75 > 1/β: the normalized Gram stays full rank…
+        let g = enc.gram_normalized(&[0, 1, 2, 3, 4, 5]);
+        let eigs = symmetric_eigenvalues(&g);
+        assert!(eigs[0] > 0.05, "rank-deficient subset: {eigs:?}");
+        // …and Proposition 8 pins n(1−β(1−η)) = 16 eigenvalues of the
+        // β-normalized Gram at exactly 1, i.e. at 1/η = 4/3 here.
+        let plateau = eigs.iter().filter(|&&e| (e - 1.0 / 0.75).abs() < 1e-9).count();
+        assert!(plateau >= 16, "plateau={plateau}, eigs={eigs:?}");
+    }
+}

@@ -1,0 +1,277 @@
+//! Encoding matrices (paper §4: Code Design).
+//!
+//! An encoding is a tall matrix `S ∈ R^{N×n}`, `N = βn`, partitioned into
+//! `m` row-blocks `S_i`, one per worker. Under data parallelism worker `i`
+//! stores `(S_i X, S_i y)`; under model parallelism it stores the column
+//! block `X S_iᵀ`. All constructions here produce (exactly or
+//! approximately) *tight frames*: `SᵀS = βI`, which preserves the original
+//! optimum when all workers respond (paper §4.1), while the block-RIP
+//! behaviour of submatrices `S_A` governs robustness when only `k` of `m`
+//! respond.
+//!
+//! Constructions:
+//! - [`gaussian`]    — i.i.d. N(0, 1/n) dense ensemble (eq. 8–9 scaling).
+//! - [`hadamard`]    — column-subsampled Sylvester–Hadamard (exact tight
+//!   frame; FWHT fast path, §4.2.2).
+//! - [`paley`]       — Paley conference-matrix ETF (β = 2).
+//! - [`steiner`]     — sparse Steiner ETF from (2,2,v)-Steiner systems.
+//! - [`haar`]        — column-subsampled Haar wavelet matrix (sparse).
+//! - uncoded / replication — identity partitioning, with or without
+//!   block duplication ([`replication`]).
+
+pub mod gaussian;
+pub mod haar;
+pub mod hadamard;
+pub mod paley;
+pub mod replication;
+pub mod spectrum;
+pub mod steiner;
+
+pub use replication::ReplicationMap;
+pub use spectrum::{SpectrumStats, SubsetSpectrum};
+
+use crate::config::Scheme;
+use crate::linalg::{Csr, Mat};
+use anyhow::Result;
+
+/// A worker's row-block `S_i`, stored dense or sparse depending on the
+/// construction.
+#[derive(Clone, Debug)]
+pub enum SMatrix {
+    Dense(Mat),
+    Sparse(Csr),
+}
+
+impl SMatrix {
+    pub fn rows(&self) -> usize {
+        match self {
+            SMatrix::Dense(m) => m.rows(),
+            SMatrix::Sparse(s) => s.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SMatrix::Dense(m) => m.cols(),
+            SMatrix::Sparse(s) => s.cols(),
+        }
+    }
+
+    /// y = S_i·x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            SMatrix::Dense(m) => m.matvec(x),
+            SMatrix::Sparse(s) => s.matvec(x),
+        }
+    }
+
+    /// y = S_iᵀ·x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            SMatrix::Dense(m) => m.matvec_t(x),
+            SMatrix::Sparse(s) => s.matvec_t(x),
+        }
+    }
+
+    /// Dense copy (tests, spectrum analysis, encoding small shards).
+    pub fn to_dense(&self) -> Mat {
+        match self {
+            SMatrix::Dense(m) => m.clone(),
+            SMatrix::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// S_i·X for a dense data matrix X (row-block of the encoded data).
+    pub fn encode_mat(&self, x: &Mat) -> Mat {
+        assert_eq!(self.cols(), x.rows(), "encode dim mismatch");
+        match self {
+            SMatrix::Dense(s) => s.matmul(x),
+            SMatrix::Sparse(s) => {
+                let mut out = Mat::zeros(s.rows(), x.cols());
+                for i in 0..s.rows() {
+                    for (j, v) in s.row_iter(i) {
+                        crate::linalg::axpy(v, x.row(j), out.row_mut(i));
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Fraction of non-zero entries (1.0 for dense).
+    pub fn density(&self) -> f64 {
+        match self {
+            SMatrix::Dense(_) => 1.0,
+            SMatrix::Sparse(s) => s.nnz() as f64 / (s.rows() * s.cols()) as f64,
+        }
+    }
+}
+
+/// A full encoding: the row-blocks `S_i`, one per worker.
+#[derive(Clone, Debug)]
+pub struct Encoding {
+    pub scheme: Scheme,
+    /// Achieved redundancy factor (total rows / n); constructions round
+    /// to feasible sizes so this can differ slightly from the request.
+    pub beta: f64,
+    /// Data dimension n (columns of S).
+    pub n: usize,
+    /// Per-worker row-blocks.
+    pub blocks: Vec<SMatrix>,
+}
+
+impl Encoding {
+    /// Build an encoding for scheme / dimension / workers / redundancy.
+    ///
+    /// `n` is the number of data rows (data parallelism) or model
+    /// coordinates (model parallelism). Replication is *not* built here —
+    /// it is a partitioning strategy, see [`ReplicationMap`]; requesting
+    /// it returns the identity encoding (the duplication happens at the
+    /// cluster layer).
+    pub fn build(scheme: Scheme, n: usize, m: usize, beta: f64, seed: u64) -> Result<Encoding> {
+        anyhow::ensure!(n > 0 && m > 0, "n and m must be positive");
+        anyhow::ensure!(beta >= 1.0, "β must be ≥ 1");
+        let enc = match scheme {
+            Scheme::Uncoded | Scheme::Replication => identity_encoding(n, m),
+            Scheme::Gaussian => gaussian::build(n, m, beta, seed),
+            Scheme::Hadamard => hadamard::build(n, m, beta, seed),
+            Scheme::Paley => paley::build(n, m)?,
+            Scheme::Steiner => steiner::build(n, m)?,
+            Scheme::Haar => haar::build(n, m, beta, seed),
+        };
+        debug_assert_eq!(enc.blocks.len(), m);
+        Ok(enc)
+    }
+
+    /// Number of workers m.
+    pub fn workers(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Total encoded rows N = Σᵢ rows(S_i).
+    pub fn total_rows(&self) -> usize {
+        self.blocks.iter().map(|b| b.rows()).sum()
+    }
+
+    /// Stack `S_A = [S_i]_{i∈A}` densely (spectrum analysis / tests).
+    pub fn stack(&self, subset: &[usize]) -> Mat {
+        let blocks: Vec<Mat> = subset.iter().map(|&i| self.blocks[i].to_dense()).collect();
+        let refs: Vec<&Mat> = blocks.iter().collect();
+        Mat::vstack(&refs)
+    }
+
+    /// Normalized Gram `G_A = (1/(ηβ))·S_Aᵀ S_A`, whose eigenvalue spread
+    /// around 1 is the ε of the block-RIP condition (Definition 1).
+    pub fn gram_normalized(&self, subset: &[usize]) -> Mat {
+        let sa = self.stack(subset);
+        let eta = subset.len() as f64 / self.workers() as f64;
+        let mut g = sa.gram();
+        g.scale_inplace(1.0 / (eta * self.beta));
+        g
+    }
+
+    /// Apply the full encoding to a data matrix: returns `S_i·X` per
+    /// worker.
+    pub fn encode_data(&self, x: &Mat) -> Vec<Mat> {
+        self.blocks.iter().map(|s| s.encode_mat(x)).collect()
+    }
+
+    /// Apply to a vector: returns `S_i·y` per worker.
+    pub fn encode_vec(&self, y: &[f64]) -> Vec<Vec<f64>> {
+        self.blocks.iter().map(|s| s.matvec(y)).collect()
+    }
+}
+
+/// Identity encoding: S = I split into m near-equal contiguous row blocks
+/// (the uncoded baseline).
+pub fn identity_encoding(n: usize, m: usize) -> Encoding {
+    let bounds = partition_bounds(n, m);
+    let blocks = bounds
+        .windows(2)
+        .map(|w| {
+            let (r0, r1) = (w[0], w[1]);
+            let triplets: Vec<(usize, usize, f64)> =
+                (r0..r1).map(|r| (r - r0, r, 1.0)).collect();
+            SMatrix::Sparse(Csr::from_triplets(r1 - r0, n, &triplets))
+        })
+        .collect();
+    Encoding { scheme: Scheme::Uncoded, beta: 1.0, n, blocks }
+}
+
+/// Boundaries that split `total` items into `m` near-equal contiguous
+/// chunks: returns m+1 offsets. Earlier chunks get the remainder.
+pub fn partition_bounds(total: usize, m: usize) -> Vec<usize> {
+    let base = total / m;
+    let rem = total % m;
+    let mut bounds = Vec::with_capacity(m + 1);
+    let mut acc = 0;
+    bounds.push(0);
+    for i in 0..m {
+        acc += base + usize::from(i < rem);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Split a dense matrix `S ∈ R^{N×n}` into m near-equal row-block
+/// [`SMatrix::Dense`] chunks.
+pub(crate) fn split_dense(s: Mat, m: usize) -> Vec<SMatrix> {
+    let bounds = partition_bounds(s.rows(), m);
+    bounds
+        .windows(2)
+        .map(|w| SMatrix::Dense(s.row_block(w[0], w[1])))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_bounds_cover_everything() {
+        assert_eq!(partition_bounds(10, 3), vec![0, 4, 7, 10]);
+        assert_eq!(partition_bounds(9, 3), vec![0, 3, 6, 9]);
+        assert_eq!(partition_bounds(2, 4), vec![0, 1, 2, 2, 2]);
+    }
+
+    #[test]
+    fn identity_encoding_blocks_are_identity_rows() {
+        let enc = identity_encoding(7, 3);
+        assert_eq!(enc.total_rows(), 7);
+        assert_eq!(enc.workers(), 3);
+        let x: Vec<f64> = (0..7).map(|i| i as f64).collect();
+        let encoded = enc.encode_vec(&x);
+        // Blocks are contiguous slices of x.
+        assert_eq!(encoded[0], vec![0.0, 1.0, 2.0]);
+        assert_eq!(encoded[1], vec![3.0, 4.0]);
+        assert_eq!(encoded[2], vec![5.0, 6.0]);
+    }
+
+    #[test]
+    fn build_rejects_bad_args() {
+        assert!(Encoding::build(Scheme::Gaussian, 0, 4, 2.0, 1).is_err());
+        assert!(Encoding::build(Scheme::Gaussian, 16, 4, 0.5, 1).is_err());
+    }
+
+    #[test]
+    fn stack_concatenates_subset_in_order() {
+        let enc = identity_encoding(6, 3);
+        let sa = enc.stack(&[2, 0]);
+        assert_eq!(sa.rows(), 4);
+        // first rows come from block 2 (rows 4..6 of I)
+        assert_eq!(sa[(0, 4)], 1.0);
+        assert_eq!(sa[(2, 0)], 1.0);
+    }
+
+    #[test]
+    fn encode_mat_dense_sparse_agree() {
+        let mut rng = crate::rng::Pcg64::new(5);
+        let x = Mat::from_fn(6, 4, |_, _| rng.next_f64() - 0.5);
+        let tri = vec![(0, 1, 2.0), (1, 3, -1.0), (1, 5, 0.5)];
+        let sp = Csr::from_triplets(2, 6, &tri);
+        let de = sp.to_dense();
+        let a = SMatrix::Sparse(sp).encode_mat(&x);
+        let b = SMatrix::Dense(de).encode_mat(&x);
+        crate::testutil::assert_allclose(a.as_slice(), b.as_slice(), 1e-12, "encode");
+    }
+}

@@ -1,0 +1,267 @@
+//! Paley equiangular tight frame (β = 2).
+//!
+//! Construction (Paley 1933; Goethals–Seidel 1967): take a prime
+//! `q ≡ 1 (mod 4)` and build the symmetric conference matrix `C` of order
+//! `N = q + 1` from the quadratic-residue (Legendre) symbol. `C` satisfies
+//! `C = Cᵀ`, `C·Cᵀ = q·I`, zero diagonal, ±1 off-diagonal. Then
+//!
+//!   P = (I + C/√q) / 2
+//!
+//! is an orthogonal projection of rank `N/2` with constant off-diagonal
+//! magnitude `1/(2√q)`. Factoring `P = V₁V₁ᵀ` through its unit-eigenvalue
+//! eigenvectors and scaling by √2 yields `S = √2·V₁ᵀ…` — concretely the
+//! `N` columns of `V₁ᵀ` are `N` unit vectors in `R^{N/2}` forming an ETF
+//! with redundancy 2 that meets the Welch bound `ω = 1/√(N−1)` with
+//! equality (Proposition 7).
+//!
+//! To hit an arbitrary data dimension `n`, we build the smallest feasible
+//! Paley frame with `N/2 ≥ n` and keep `n` coordinates — the paper's
+//! "bank of encoding matrices, subsample columns" trick (§5.2).
+
+use super::{split_dense, Encoding};
+use crate::config::Scheme;
+use crate::linalg::{symmetric_eigen, Mat};
+use anyhow::{bail, Result};
+
+/// Legendre symbol χ(a) over GF(q): 1 if a is a non-zero QR, −1 if
+/// non-residue, 0 if a ≡ 0.
+fn legendre(a: i64, q: i64) -> i64 {
+    let a = a.rem_euclid(q);
+    if a == 0 {
+        return 0;
+    }
+    // Euler's criterion: a^((q-1)/2) mod q ∈ {1, q-1}.
+    let r = modpow(a, (q - 1) / 2, q);
+    if r == 1 {
+        1
+    } else {
+        -1
+    }
+}
+
+fn modpow(mut b: i64, mut e: i64, m: i64) -> i64 {
+    let mut acc: i64 = 1;
+    b = b.rem_euclid(m);
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = acc.checked_mul(b).unwrap().rem_euclid(m);
+        }
+        b = b.checked_mul(b).unwrap().rem_euclid(m);
+        e >>= 1;
+    }
+    acc
+}
+
+fn is_prime(n: i64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    if n % 2 == 0 {
+        return n == 2;
+    }
+    let mut d = 3;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+/// Smallest prime q ≡ 1 (mod 4) with (q+1)/2 ≥ n.
+fn paley_prime_for(n: usize) -> Result<i64> {
+    let mut q = (2 * n).max(5) as i64 - 1;
+    // search upward; density of primes ≡ 1 mod 4 makes this fast
+    for _ in 0..100_000 {
+        if q % 4 == 1 && is_prime(q) {
+            return Ok(q);
+        }
+        q += 1;
+    }
+    bail!("no Paley prime found near n={n}")
+}
+
+/// Symmetric conference matrix of order q+1 (q prime, q ≡ 1 mod 4).
+pub fn conference_matrix(q: i64) -> Mat {
+    let n = (q + 1) as usize;
+    let mut c = Mat::zeros(n, n);
+    for j in 1..n {
+        c[(0, j)] = 1.0;
+        c[(j, 0)] = 1.0;
+    }
+    for i in 1..n {
+        for j in 1..n {
+            if i == j {
+                continue;
+            }
+            c[(i, j)] = legendre(i as i64 - j as i64, q) as f64;
+        }
+    }
+    c
+}
+
+/// The full (2n'×n') Paley ETF matrix for the smallest feasible frame,
+/// restricted to the first `n` coordinates. Rows are unit-norm frame
+/// vectors.
+pub fn paley_etf(n: usize) -> Result<Mat> {
+    let q = paley_prime_for(n)?;
+    let nn = (q + 1) as usize; // number of frame vectors
+    let half = nn / 2; // frame dimension
+    let c = conference_matrix(q);
+    // P = (I + C/√q)/2 — projection of rank nn/2.
+    let sq = (q as f64).sqrt();
+    let mut p = Mat::zeros(nn, nn);
+    for i in 0..nn {
+        for j in 0..nn {
+            p[(i, j)] = 0.5 * (if i == j { 1.0 } else { 0.0 } + c[(i, j)] / sq);
+        }
+    }
+    let (eigs, v) = symmetric_eigen(&p);
+    // Unit-eigenvalue eigenvectors are the last `half` columns (ascending).
+    debug_assert!(eigs[nn - half] > 0.9, "projection eigenvalues not 0/1: {eigs:?}");
+    // Frame vector for data coordinate direction: S has rows = frame
+    // vectors in R^half. Column j of V₁ᵀ ↔ frame vector j: S[j, :] =
+    // √2 · V[j, half..].
+    let mut s = Mat::zeros(nn, half);
+    for j in 0..nn {
+        for (d, col) in (nn - half..nn).enumerate() {
+            s[(j, d)] = std::f64::consts::SQRT_2 * v[(j, col)];
+        }
+    }
+    // Keep the first n coordinates (column subsample) if the frame
+    // dimension exceeds the requested n.
+    if half > n {
+        let idx: Vec<usize> = (0..n).collect();
+        Ok(s.select_cols(&idx))
+    } else {
+        Ok(s)
+    }
+}
+
+/// Build the Paley encoding split across m workers.
+///
+/// `beta` is the FRAME CONSTANT (SᵀS = β·I), which stays exactly 2 even
+/// after column restriction — a sub-block of 2·I is 2·I. The storage
+/// redundancy (rows/n) can be slightly larger due to the prime search.
+pub fn build(n: usize, m: usize) -> Result<Encoding> {
+    let s = paley_etf(n)?;
+    Ok(Encoding { scheme: Scheme::Paley, beta: 2.0, n, blocks: split_dense(s, m) })
+}
+
+/// Maximal inner product ω(F) between distinct unit rows — for ETF
+/// verification against the Welch bound (Proposition 7).
+pub fn max_coherence(s: &Mat) -> f64 {
+    let mut w: f64 = 0.0;
+    for i in 0..s.rows() {
+        for j in i + 1..s.rows() {
+            let ip = crate::linalg::dot(s.row(i), s.row(j)).abs();
+            w = w.max(ip);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legendre_symbol_small_cases() {
+        // QRs mod 13: {1,3,4,9,10,12}
+        assert_eq!(legendre(4, 13), 1);
+        assert_eq!(legendre(2, 13), -1);
+        assert_eq!(legendre(0, 13), 0);
+        assert_eq!(legendre(-1, 13), 1); // 12 is a QR mod 13
+    }
+
+    #[test]
+    fn primes() {
+        assert!(is_prime(13));
+        assert!(is_prime(2));
+        assert!(!is_prime(1));
+        assert!(!is_prime(15));
+        assert_eq!(paley_prime_for(7).unwrap(), 13); // (13+1)/2 = 7
+    }
+
+    #[test]
+    fn conference_matrix_property() {
+        let q = 13;
+        let c = conference_matrix(q);
+        let cct = c.matmul(&c.transpose());
+        for i in 0..14 {
+            for j in 0..14 {
+                let expect = if i == j { q as f64 } else { 0.0 };
+                assert!((cct[(i, j)] - expect).abs() < 1e-9, "({i},{j})={}", cct[(i, j)]);
+            }
+        }
+        // symmetric, zero diagonal
+        for i in 0..14 {
+            assert_eq!(c[(i, i)], 0.0);
+            for j in 0..14 {
+                assert_eq!(c[(i, j)], c[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn paley_is_tight_frame() {
+        let s = paley_etf(7).unwrap(); // q=13, 14 vectors in R^7
+        assert_eq!(s.rows(), 14);
+        assert_eq!(s.cols(), 7);
+        let g = s.gram();
+        for i in 0..7 {
+            for j in 0..7 {
+                let expect = if i == j { 2.0 } else { 0.0 };
+                assert!((g[(i, j)] - expect).abs() < 1e-8, "({i},{j})={}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn paley_rows_unit_norm() {
+        let s = paley_etf(7).unwrap();
+        for i in 0..s.rows() {
+            let n2 = crate::linalg::dot(s.row(i), s.row(i));
+            assert!((n2 - 1.0).abs() < 1e-9, "row {i}: {n2}");
+        }
+    }
+
+    #[test]
+    fn paley_meets_welch_bound_with_equality() {
+        // Proposition 7: ω(F) = √((β−1)/(βn−1)) iff ETF.
+        let s = paley_etf(7).unwrap();
+        let beta: f64 = 2.0;
+        let n: f64 = 7.0;
+        let welch = ((beta - 1.0) / (beta * n - 1.0)).sqrt();
+        let w = max_coherence(&s);
+        assert!((w - welch).abs() < 1e-9, "ω={w}, welch={welch}");
+        // and EVERY pair meets it (equiangular)
+        for i in 0..s.rows() {
+            for j in i + 1..s.rows() {
+                let ip = crate::linalg::dot(s.row(i), s.row(j)).abs();
+                assert!((ip - welch).abs() < 1e-8, "pair ({i},{j}): {ip}");
+            }
+        }
+    }
+
+    #[test]
+    fn build_partitions_workers() {
+        let enc = build(7, 7).unwrap();
+        assert_eq!(enc.workers(), 7);
+        assert_eq!(enc.total_rows(), 14);
+        assert!((enc.beta - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn column_restricted_frame_still_near_tight() {
+        // n=6 forces q=13 frame restricted to 6 of 7 coordinates.
+        let s = paley_etf(6).unwrap();
+        assert_eq!(s.cols(), 6);
+        let g = s.gram();
+        // Diagonal ≈ 2, off-diagonal small.
+        for i in 0..6 {
+            assert!((g[(i, i)] - 2.0).abs() < 1e-8);
+        }
+    }
+}

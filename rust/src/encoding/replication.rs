@@ -1,0 +1,110 @@
+//! Replication scheme support.
+//!
+//! The paper's replication baseline assigns each uncoded partition to
+//! `r` distinct workers; the master uses whichever copy of a partition
+//! arrives first in an iteration and discards duplicates. This is a
+//! *partition map*, not an encoding matrix: [`ReplicationMap`] records
+//! which partition each worker holds, and resolves a set of responding
+//! workers to the set of distinct partitions recovered.
+
+/// Maps m workers onto `partitions` replicated `r`-fold.
+#[derive(Clone, Debug)]
+pub struct ReplicationMap {
+    /// partition index held by each worker (len m).
+    worker_partition: Vec<usize>,
+    /// number of distinct partitions.
+    partitions: usize,
+}
+
+impl ReplicationMap {
+    /// m workers, replication factor r (m must be divisible by r).
+    /// Partition p is held by workers {p, p + m/r, p + 2m/r, …}, spreading
+    /// replicas across the machine range so correlated stragglers (racks)
+    /// hit distinct partitions.
+    pub fn new(m: usize, r: usize) -> Self {
+        assert!(r >= 1 && m % r == 0, "m={m} must be divisible by replication factor r={r}");
+        let partitions = m / r;
+        let worker_partition = (0..m).map(|w| w % partitions).collect();
+        ReplicationMap { worker_partition, partitions }
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.partitions
+    }
+
+    pub fn workers(&self) -> usize {
+        self.worker_partition.len()
+    }
+
+    /// Partition held by worker w.
+    pub fn partition_of(&self, w: usize) -> usize {
+        self.worker_partition[w]
+    }
+
+    /// Given responding workers, the distinct partitions recovered and,
+    /// for each, the first responding worker that supplied it (in the
+    /// order given — callers pass workers sorted by arrival time).
+    pub fn resolve(&self, responded: &[usize]) -> Vec<(usize, usize)> {
+        let mut seen = vec![false; self.partitions];
+        let mut out = Vec::new();
+        for &w in responded {
+            let p = self.worker_partition[w];
+            if !seen[p] {
+                seen[p] = true;
+                out.push((p, w));
+            }
+        }
+        out
+    }
+
+    /// Number of distinct partitions covered by a responding set.
+    pub fn coverage(&self, responded: &[usize]) -> usize {
+        self.resolve(responded).len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spread_assignment() {
+        let map = ReplicationMap::new(8, 2);
+        assert_eq!(map.partitions(), 4);
+        // replicas of partition 0 are workers 0 and 4
+        assert_eq!(map.partition_of(0), 0);
+        assert_eq!(map.partition_of(4), 0);
+        assert_eq!(map.partition_of(3), 3);
+        assert_eq!(map.partition_of(7), 3);
+    }
+
+    #[test]
+    fn resolve_dedups_in_arrival_order() {
+        let map = ReplicationMap::new(8, 2);
+        // worker 4 (partition 0) arrives before worker 0
+        let got = map.resolve(&[4, 0, 1, 5]);
+        assert_eq!(got, vec![(0, 4), (1, 1)]);
+    }
+
+    #[test]
+    fn full_response_covers_all() {
+        let map = ReplicationMap::new(12, 3);
+        let all: Vec<usize> = (0..12).collect();
+        assert_eq!(map.coverage(&all), 4);
+    }
+
+    #[test]
+    fn both_replicas_straggling_loses_partition() {
+        let map = ReplicationMap::new(8, 2);
+        // partitions of workers {1,2,3,5,6,7}: missing both 0 and 4 → no partition 0
+        let got = map.resolve(&[1, 2, 3, 5, 6, 7]);
+        assert!(got.iter().all(|&(p, _)| p != 0));
+        assert_eq!(map.coverage(&[1, 2, 3, 5, 6, 7]), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn indivisible_m_rejected() {
+        ReplicationMap::new(7, 2);
+    }
+}

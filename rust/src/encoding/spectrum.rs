@@ -1,0 +1,203 @@
+//! BRIP spectrum analysis (Definition 1, Figures 5–6).
+//!
+//! Samples random active sets `A ⊂ [m]` of size `k = ηm`, stacks
+//! `S_A = [S_i]_{i∈A}`, and reports the eigenvalue distribution of the
+//! normalized Gram `(1/(ηβ))·S_AᵀS_A`. The spread of these eigenvalues
+//! around 1 is the ε of the `(m, η, ε)`-BRIP condition; the paper's key
+//! empirical claim (Prop. 8 and Figs. 5–6) is that ETF constructions keep
+//! the *bulk* of the spectrum pinned at exactly 1.
+
+use super::Encoding;
+use crate::linalg::symmetric_eigenvalues;
+use crate::rng::{sample_without_replacement, Pcg64};
+
+/// Eigenvalue statistics pooled over sampled subsets.
+#[derive(Clone, Debug)]
+pub struct SpectrumStats {
+    pub scheme: String,
+    pub n: usize,
+    pub m: usize,
+    pub k: usize,
+    pub beta: f64,
+    /// Worst extremes over subsets → ε = max(1−λ_min, λ_max−1).
+    pub lambda_min: f64,
+    pub lambda_max: f64,
+    /// Fraction of all pooled eigenvalues within |λ−1| ≤ 0.05 — the
+    /// "bulk at 1" measure of Proposition 8.
+    pub bulk_at_one: f64,
+    /// All pooled (sorted) eigenvalues, for histogram plotting.
+    pub eigenvalues: Vec<f64>,
+    pub subsets_sampled: usize,
+}
+
+impl SpectrumStats {
+    /// ε of the empirical BRIP condition over the sampled subsets.
+    pub fn epsilon(&self) -> f64 {
+        (1.0 - self.lambda_min).max(self.lambda_max - 1.0)
+    }
+
+    /// Histogram of eigenvalues with `bins` uniform bins over [lo, hi].
+    pub fn histogram(&self, lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+        let mut h = vec![0usize; bins];
+        for &e in &self.eigenvalues {
+            if e < lo || e >= hi {
+                continue;
+            }
+            let b = ((e - lo) / (hi - lo) * bins as f64) as usize;
+            h[b.min(bins - 1)] += 1;
+        }
+        h
+    }
+
+    pub fn summary_row(&self) -> Vec<String> {
+        vec![
+            self.scheme.clone(),
+            format!("{}", self.n),
+            format!("{}/{}", self.k, self.m),
+            format!("{:.3}", self.beta),
+            format!("{:.4}", self.lambda_min),
+            format!("{:.4}", self.lambda_max),
+            format!("{:.4}", self.epsilon()),
+            format!("{:.1}%", 100.0 * self.bulk_at_one),
+        ]
+    }
+}
+
+/// Spectrum analyzer over random subsets.
+pub struct SubsetSpectrum<'a> {
+    encoding: &'a Encoding,
+    rng: Pcg64,
+}
+
+impl<'a> SubsetSpectrum<'a> {
+    pub fn new(encoding: &'a Encoding, seed: u64) -> Self {
+        SubsetSpectrum { encoding, rng: Pcg64::with_stream(seed, 0x5bec) }
+    }
+
+    /// Pool eigenvalues of `(1/(ηβ))·S_AᵀS_A` over `subsets` random A of
+    /// size k.
+    ///
+    /// ε comes from the Definition-1 normalization `(1/(ηβ))` (unbiased
+    /// around 1); the `bulk_at_one` plateau measure uses the
+    /// Proposition-8 normalization `(1/β)`, under which ETF plateau
+    /// eigenvalues are *exactly* 1. For an η-normalized eigenvalue λ the
+    /// β-normalized one is η·λ, so both come from one decomposition.
+    pub fn analyze(&mut self, k: usize, subsets: usize) -> SpectrumStats {
+        let m = self.encoding.workers();
+        assert!(k >= 1 && k <= m, "k must be in [1, m]");
+        let eta = k as f64 / m as f64;
+        let mut all = Vec::new();
+        let mut lmin = f64::INFINITY;
+        let mut lmax = f64::NEG_INFINITY;
+        for _ in 0..subsets {
+            let subset = sample_without_replacement(&mut self.rng, m, k);
+            let g = self.encoding.gram_normalized(&subset);
+            let eigs = symmetric_eigenvalues(&g);
+            lmin = lmin.min(eigs[0]);
+            lmax = lmax.max(*eigs.last().unwrap());
+            all.extend(eigs);
+        }
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let bulk = all.iter().filter(|&&e| (eta * e - 1.0).abs() <= 0.02).count() as f64
+            / all.len() as f64;
+        SpectrumStats {
+            scheme: self.encoding.scheme.name().to_string(),
+            n: self.encoding.n,
+            m,
+            k,
+            beta: self.encoding.beta,
+            lambda_min: lmin,
+            lambda_max: lmax,
+            bulk_at_one: bulk,
+            eigenvalues: all,
+            subsets_sampled: subsets,
+        }
+    }
+}
+
+/// Proposition 8 check: for an ETF with redundancy β and η ≥ 1 − 1/β, the
+/// normalized subset Gram has at least `n(1 − β(1−η))` eigenvalues equal
+/// to 1 (up to the (ηβ) normalization — exactly-1 eigenvalues of
+/// `(1/β)S_AᵀS_A` map to `1/η` here; this helper counts eigenvalues of
+/// the β-normalized Gram at 1).
+pub fn prop8_unit_eigen_count(encoding: &Encoding, subset: &[usize], tol: f64) -> usize {
+    let sa = encoding.stack(subset);
+    let mut g = sa.gram();
+    g.scale_inplace(1.0 / encoding.beta);
+    let eigs = symmetric_eigenvalues(&g);
+    eigs.iter().filter(|&&e| (e - 1.0).abs() <= tol).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::encoding::Encoding;
+
+    #[test]
+    fn full_subset_of_tight_frame_has_flat_spectrum() {
+        let enc = Encoding::build(Scheme::Hadamard, 16, 4, 2.0, 1).unwrap();
+        let mut an = SubsetSpectrum::new(&enc, 2);
+        let stats = an.analyze(4, 3); // k = m: S_A = S always
+        assert!(stats.epsilon() < 1e-9, "eps={}", stats.epsilon());
+        assert!((stats.bulk_at_one - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncoded_subsets_lose_rank() {
+        // identity encoding: any k < m drops rows → zero eigenvalues.
+        let enc = Encoding::build(Scheme::Uncoded, 12, 4, 1.0, 1).unwrap();
+        let mut an = SubsetSpectrum::new(&enc, 3);
+        let stats = an.analyze(3, 4);
+        assert!(stats.lambda_min.abs() < 1e-12, "λmin={}", stats.lambda_min);
+    }
+
+    #[test]
+    fn coded_subsets_stay_full_rank() {
+        // Hadamard β=2, η=3/4 ≥ 1/β: S_A keeps full column rank — in
+        // sharp contrast with the uncoded case where λ_min is exactly 0.
+        let enc = Encoding::build(Scheme::Hadamard, 32, 8, 2.0, 1).unwrap();
+        let mut an = SubsetSpectrum::new(&enc, 4);
+        let stats = an.analyze(6, 8);
+        assert!(stats.lambda_min > 1e-6, "λmin={}", stats.lambda_min);
+        assert!(stats.lambda_max < 3.0, "λmax={}", stats.lambda_max);
+    }
+
+    #[test]
+    fn prop8_etf_unit_eigen_count() {
+        // Steiner ETF v=4: n=6, β=8/3. η=3/4 ⇒ guarantee n(1−β(1−η)) =
+        // 6(1 − 8/3·1/4) = 6·(1/3) = 2 eigenvalues at 1.
+        let enc = Encoding::build(Scheme::Steiner, 6, 4, 2.0, 1).unwrap();
+        let count = prop8_unit_eigen_count(&enc, &[0, 1, 2], 1e-9);
+        assert!(count >= 2, "count={count}");
+    }
+
+    #[test]
+    fn histogram_bins_count_all_in_range() {
+        let enc = Encoding::build(Scheme::Gaussian, 24, 4, 2.0, 5).unwrap();
+        let mut an = SubsetSpectrum::new(&enc, 6);
+        let stats = an.analyze(3, 4);
+        let h = stats.histogram(0.0, 3.0, 30);
+        let total: usize = h.iter().sum();
+        let in_range = stats.eigenvalues.iter().filter(|&&e| (0.0..3.0).contains(&e)).count();
+        assert_eq!(total, in_range);
+    }
+
+    #[test]
+    fn etf_tighter_than_gaussian() {
+        // The paper's Fig. 5/6 claim: ETF spectra concentrate harder than
+        // iid Gaussian at the same (n, β, η).
+        let n = 28;
+        let m = 8;
+        let etf = Encoding::build(Scheme::Steiner, n, m, 2.0, 1).unwrap();
+        let gau = Encoding::build(Scheme::Gaussian, n, m, etf.beta, 1).unwrap();
+        let e1 = SubsetSpectrum::new(&etf, 9).analyze(6, 6);
+        let e2 = SubsetSpectrum::new(&gau, 9).analyze(6, 6);
+        assert!(
+            e1.epsilon() < e2.epsilon(),
+            "steiner ε={} vs gaussian ε={}",
+            e1.epsilon(),
+            e2.epsilon()
+        );
+    }
+}

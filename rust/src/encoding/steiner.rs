@@ -1,0 +1,215 @@
+//! Steiner equiangular tight frame (Fickus–Mixon–Tremain 2012), from
+//! (2,2,v)-Steiner systems — the sparse encoding used in the paper's
+//! logistic-regression and LASSO experiments (β = 2v/(v−1) ≈ 2).
+//!
+//! For `v` a power of two: let `H` be the v×v Sylvester–Hadamard matrix
+//! and `V ∈ {0,1}^{v × v(v−1)/2}` the incidence matrix of all 2-element
+//! subsets of `[v]` (each column has exactly two ones; each row exactly
+//! v−1 ones). Replace the j-th one in each *row* of `V` with the
+//! (j+1)-th column of `H` (skipping the all-ones first column) and scale
+//! by `1/√(v−1)`. The result is a `v² × v(v−1)/2` matrix with unit-norm
+//! rows, `SᵀS = β·I`, and constant coherence — an ETF.
+//!
+//! Sparsity: each row has v−1 non-zeros out of v(v−1)/2 columns, so the
+//! per-worker storage overhead matches the paper's `|B_I_k| ≤ 2n/m` bound.
+
+use super::{partition_bounds, Encoding, SMatrix};
+use crate::config::Scheme;
+use crate::linalg::fwht::hadamard_entry;
+use crate::linalg::Csr;
+use anyhow::{ensure, Result};
+
+/// Smallest power-of-two v with v(v−1)/2 ≥ n.
+fn steiner_v_for(n: usize) -> usize {
+    let mut v = 4usize;
+    while v * (v - 1) / 2 < n {
+        v *= 2;
+    }
+    v
+}
+
+/// Build the Steiner ETF encoding for data dimension n across m workers.
+///
+/// Chooses the smallest feasible v, constructs the v² × v(v−1)/2 frame,
+/// keeps the first n columns (paper's column-subsampling), and
+/// partitions the v row-*blocks* (v rows each) across workers —
+/// assigning half-blocks when m does not divide v, following the paper's
+/// footnote 3 observation that splitting blocks across machines helps.
+pub fn build(n: usize, m: usize) -> Result<Encoding> {
+    let v = steiner_v_for(n);
+    ensure!(v >= 2, "steiner needs v ≥ 2");
+    let total_rows = v * v;
+    // Enumerate 2-subsets {a,b} of [v] in lexicographic order == columns.
+    // col_of[a][b] for a<b.
+    let ncols_full = v * (v - 1) / 2;
+    let keep_cols = n.min(ncols_full);
+    let mut pair_of_col = Vec::with_capacity(ncols_full);
+    for a in 0..v {
+        for b in a + 1..v {
+            pair_of_col.push((a, b));
+        }
+    }
+    // For each row-block r (row r of V), the ones sit at columns whose
+    // pair contains r; the j-th such one (in column order) is replaced by
+    // Hadamard column j+1.
+    // Build triplets for the kept columns only.
+    let scale = 1.0 / ((v - 1) as f64).sqrt();
+    let mut block_col_rank = vec![0usize; v]; // per-block counter of ones seen
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    for (col, &(a, b)) in pair_of_col.iter().enumerate() {
+        for &blk in &[a, b] {
+            let rank = block_col_rank[blk];
+            block_col_rank[blk] += 1;
+            if col >= keep_cols {
+                continue; // counted for rank bookkeeping, but column dropped
+            }
+            let hcol = rank + 1; // skip all-ones column 0
+            debug_assert!(hcol < v);
+            for r in 0..v {
+                // Hadamard entry H[r, hcol]
+                let val = hadamard_entry(r, hcol) * scale;
+                triplets.push((blk * v + r, col, val));
+            }
+        }
+    }
+    // Spread rows across machines with a random permutation (the
+    // paper's footnote 3: "performance improves when the blocks are
+    // broken into multiple machines"). Column {a,b} has support only in
+    // Steiner blocks a and b; with machine-aligned blocks, two straggling
+    // machines can annihilate that column entirely (λ_min = 0 against a
+    // fixed adversary). Spreading each block's v rows over all machines
+    // removes that failure mode at the cost of a larger per-worker
+    // column support.
+    let mut rng = crate::rng::Pcg64::with_stream(0x57e1 ^ (v as u64), 0x57e1);
+    let mut perm: Vec<usize> = (0..total_rows).collect();
+    crate::rng::shuffle(&mut rng, &mut perm);
+    let mut inv = vec![0usize; total_rows];
+    for (new, &old) in perm.iter().enumerate() {
+        inv[old] = new;
+    }
+    // Random column signs (FJLT trick, same rationale as hadamard.rs):
+    // raw Steiner rows sum to a spike on the Hadamard DC rows, making
+    // constant data columns coherent with a few encoded rows. Signs
+    // preserve unit rows, SᵀS = β·I, and equiangularity exactly.
+    let signs: Vec<f64> =
+        (0..keep_cols).map(|_| if rng.gen_bool(0.5) { 1.0 } else { -1.0 }).collect();
+    let permuted: Vec<(usize, usize, f64)> =
+        triplets.into_iter().map(|(r, c, val)| (inv[r], c, val * signs[c])).collect();
+    let s_full = Csr::from_triplets(total_rows, keep_cols, &permuted);
+    let bounds = partition_bounds(total_rows, m);
+    let blocks: Vec<SMatrix> = bounds
+        .windows(2)
+        .map(|w| SMatrix::Sparse(s_full.row_block(w[0], w[1])))
+        .collect();
+    // β is the FRAME CONSTANT SᵀS = β·I — for Steiner that is
+    // 2v/(v−1) = v²/ncols_full, unchanged by column subsampling
+    // (sub-blocks of a scaled identity stay scaled identities). The
+    // storage redundancy rows/keep_cols can be larger.
+    let beta = total_rows as f64 / ncols_full as f64;
+    Ok(Encoding { scheme: Scheme::Steiner, beta, n: keep_cols, blocks })
+}
+
+/// The natural (v, n) pairs: v power of 2, n = v(v−1)/2 — sizes at which
+/// the Steiner frame needs no column subsampling.
+pub fn natural_sizes(max_v: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut v = 4;
+    while v <= max_v {
+        out.push((v, v * (v - 1) / 2));
+        v *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dot;
+
+    #[test]
+    fn v_selection() {
+        assert_eq!(steiner_v_for(6), 4); // 4·3/2 = 6
+        assert_eq!(steiner_v_for(7), 8); // 8·7/2 = 28
+        assert_eq!(steiner_v_for(28), 8);
+        assert_eq!(steiner_v_for(29), 16);
+    }
+
+    #[test]
+    fn natural_size_is_tight_frame() {
+        // v=4: S is 16×6 with β = 16/6 = 2v/(v−1) = 8/3.
+        let enc = build(6, 4).unwrap();
+        assert_eq!(enc.total_rows(), 16);
+        assert_eq!(enc.n, 6);
+        let s = enc.stack(&[0, 1, 2, 3]);
+        let g = s.gram();
+        let beta = 16.0 / 6.0;
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { beta } else { 0.0 };
+                assert!((g[(i, j)] - expect).abs() < 1e-9, "({i},{j})={}", g[(i, j)]);
+            }
+        }
+    }
+
+    #[test]
+    fn rows_unit_norm() {
+        let enc = build(6, 2).unwrap();
+        let s = enc.stack(&[0, 1]);
+        for i in 0..s.rows() {
+            let n2 = dot(s.row(i), s.row(i));
+            assert!((n2 - 1.0).abs() < 1e-12, "row {i}: {n2}");
+        }
+    }
+
+    #[test]
+    fn equiangular_at_natural_size() {
+        let enc = build(28, 4).unwrap(); // v=8, no subsampling
+        let s = enc.stack(&[0, 1, 2, 3]);
+        let beta = s.rows() as f64 / 28.0;
+        let welch = ((beta - 1.0) / (beta * 28.0 - 1.0)).sqrt();
+        let mut min_ip = f64::INFINITY;
+        let mut max_ip: f64 = 0.0;
+        for i in 0..s.rows() {
+            for j in i + 1..s.rows() {
+                let ip = dot(s.row(i), s.row(j)).abs();
+                min_ip = min_ip.min(ip);
+                max_ip = max_ip.max(ip);
+            }
+        }
+        // Steiner ETFs have inner products in {0, ±ω}? No — true ETFs have
+        // |<a_i,a_j>| = ω for ALL pairs. Verify constancy:
+        assert!((max_ip - welch).abs() < 1e-9, "max={max_ip} welch={welch}");
+        assert!((min_ip - welch).abs() < 1e-9, "min={min_ip} welch={welch}");
+    }
+
+    #[test]
+    fn sparsity_bound() {
+        // per-row nnz = v−1; density = (v−1)/(v(v−1)/2) = 2/v.
+        let enc = build(28, 4).unwrap(); // v=8
+        for b in &enc.blocks {
+            assert!(b.density() < 2.0 / 8.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn subsampled_still_near_tight() {
+        let enc = build(20, 4).unwrap(); // v=8, keep 20 of 28 columns
+        assert_eq!(enc.n, 20);
+        let s = enc.stack(&[0, 1, 2, 3]);
+        let g = s.gram();
+        // Column-subsampling an exact tight frame keeps G = β_full·I on
+        // the kept coordinates exactly.
+        let beta_full = 64.0 / 28.0;
+        for i in 0..20 {
+            for j in 0..20 {
+                let expect = if i == j { beta_full } else { 0.0 };
+                assert!((g[(i, j)] - expect).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn natural_sizes_list() {
+        assert_eq!(natural_sizes(16), vec![(4, 6), (8, 28), (16, 120)]);
+    }
+}

@@ -1,0 +1,53 @@
+//! # coded-opt — encoded distributed optimization
+//!
+//! Production-quality reproduction of *"Redundancy Techniques for Straggler
+//! Mitigation in Distributed Optimization and Learning"* (Karakus, Sun,
+//! Diggavi, Yin — 2018).
+//!
+//! The dataset is linearly encoded with a tall matrix `S ∈ R^{βn×n}`
+//! (redundancy factor `β ≥ 1`), partitioned across `m` workers; each
+//! iteration the master waits only for the fastest `k ≤ m` updates and
+//! treats stragglers as erasures. The code redundancy compensates for the
+//! lost updates, yielding *deterministic* convergence guarantees that hold
+//! for arbitrary (even adversarial) straggler patterns.
+//!
+//! ## Layout
+//!
+//! - [`linalg`] — dense/sparse linear algebra, FWHT, Cholesky, eigensolver.
+//! - [`rng`] — PCG64 PRNG and the distributions used by data generation and
+//!   straggler delay models.
+//! - [`encoding`] — the paper's encoding matrices (Paley / Hadamard /
+//!   Steiner ETFs, subsampled Haar, Gaussian) and spectrum analysis.
+//! - [`delay`] — straggler delay models (bimodal mixture, power-law
+//!   background tasks, exponential, adversarial, trace replay).
+//! - [`cluster`] — the simulated master/worker distributed substrate with
+//!   wait-for-`k` gather and interrupts.
+//! - [`coordinator`] — encoded gradient descent, L-BFGS, proximal gradient,
+//!   block coordinate descent, plus uncoded / replication / asynchronous
+//!   baselines.
+//! - [`objectives`] — ridge, LASSO, logistic regression, matrix
+//!   factorization.
+//! - [`data`] — synthetic workload generators mirroring the paper's
+//!   datasets.
+//! - [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them on the hot path.
+//! - [`metrics`] — timers, traces, histograms, writers.
+//! - [`config`] / [`cli`] — experiment configuration and launcher parsing.
+//! - [`testutil`] — a small property-testing framework (offline
+//!   environment: no external proptest).
+//! - [`bench`] — measurement harness used by `rust/benches/*`.
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod delay;
+pub mod encoding;
+pub mod linalg;
+pub mod metrics;
+pub mod objectives;
+pub mod rng;
+pub mod runtime;
+pub mod testutil;

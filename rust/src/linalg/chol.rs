@@ -1,0 +1,125 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used for (a) the matrix-factorization inner subproblems — each user /
+//! movie update is a small regularized least-squares solve, matching the
+//! paper's use of `numpy.linalg.solve` for instances with n < 500 — and
+//! (b) closed-form ridge solutions used as ground truth in tests.
+
+use super::mat::Mat;
+
+/// Lower-triangular Cholesky factor L with A = L·Lᵀ.
+///
+/// Returns `None` if A is not (numerically) positive definite.
+pub fn cholesky_factor(a: &Mat) -> Option<Mat> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky needs a square matrix");
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)];
+            for k in 0..j {
+                sum -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[(i, j)] = sum.sqrt();
+            } else {
+                l[(i, j)] = sum / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve A·x = b for SPD A via Cholesky. Returns `None` if not SPD.
+pub fn cholesky_solve(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky_factor(a)?;
+    let n = a.rows();
+    assert_eq!(b.len(), n);
+    // Forward substitution: L·y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut sum = b[i];
+        for k in 0..i {
+            sum -= l[(i, k)] * y[k];
+        }
+        y[i] = sum / l[(i, i)];
+    }
+    // Back substitution: Lᵀ·x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut sum = y[i];
+        for k in i + 1..n {
+            sum -= l[(k, i)] * x[k];
+        }
+        x[i] = sum / l[(i, i)];
+    }
+    Some(x)
+}
+
+/// Solve the regularized least-squares problem
+/// `min_w ‖A·w − b‖² + λ‖w‖²` via the normal equations
+/// `(AᵀA + λI)·w = Aᵀb`. This is the MF inner solver.
+pub fn ridge_solve(a: &Mat, b: &[f64], lambda: f64) -> Vec<f64> {
+    let mut g = a.gram();
+    for i in 0..g.rows() {
+        g[(i, i)] += lambda;
+    }
+    let atb = a.matvec_t(b);
+    cholesky_solve(&g, &atb).expect("ridge normal equations are SPD for λ>0")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = Mat::from_vec(3, 3, vec![4.0, 2.0, 0.0, 2.0, 5.0, 1.0, 0.0, 1.0, 3.0]);
+        let l = cholesky_factor(&a).unwrap();
+        let llt = l.matmul(&l.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((llt[(i, j)] - a[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_manual() {
+        let a = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let x = cholesky_solve(&a, &[1.0, 2.0]).unwrap();
+        // residual check
+        let r = a.matvec(&x);
+        assert!((r[0] - 1.0).abs() < 1e-12 && (r[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky_factor(&a).is_none());
+    }
+
+    #[test]
+    fn ridge_solve_matches_gradient_zero() {
+        // gradient of the ridge objective at the solution must vanish:
+        // 2Aᵀ(Aw−b) + 2λw = 0
+        let a = Mat::from_vec(4, 2, vec![1.0, 0.5, 0.0, 1.0, 2.0, -1.0, 1.0, 1.0]);
+        let b = [1.0, -1.0, 0.5, 2.0];
+        let lambda = 0.3;
+        let w = ridge_solve(&a, &b, lambda);
+        let resid = crate::linalg::sub(&a.matvec(&w), &b);
+        let mut grad = a.matvec_t(&resid);
+        crate::linalg::axpy(lambda, &w, &mut grad);
+        assert!(crate::linalg::norm2(&grad) < 1e-10, "grad={grad:?}");
+    }
+
+    #[test]
+    fn ridge_zero_matrix_gives_zero() {
+        let a = Mat::zeros(3, 2);
+        let w = ridge_solve(&a, &[1.0, 1.0, 1.0], 1.0);
+        assert!(crate::linalg::norm2(&w) < 1e-15);
+    }
+}

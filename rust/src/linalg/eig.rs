@@ -1,0 +1,302 @@
+//! Symmetric eigenvalue computation (cyclic Jacobi).
+//!
+//! Needed for the BRIP spectrum analysis of `S_Aᵀ S_A` (Definition 1,
+//! Figures 5–6) and for the theory-checkpoint tests on L-BFGS Hessian
+//! estimates. Jacobi is O(n³) per sweep but rock-solid for symmetric
+//! matrices up to the n ≈ 500 sizes the spectrum figures use.
+
+use super::mat::Mat;
+
+/// Full symmetric eigendecomposition A = V·diag(λ)·Vᵀ.
+///
+/// Returns eigenvalues ascending and the matrix V whose *columns* are the
+/// corresponding orthonormal eigenvectors. Cyclic Jacobi with accumulated
+/// rotations.
+pub fn symmetric_eigen(a: &Mat) -> (Vec<f64>, Mat) {
+    symmetric_eigen_tol(a, 1e-12, 64)
+}
+
+/// [`symmetric_eigen`] with explicit tolerance / sweep limit.
+pub fn symmetric_eigen_tol(a: &Mat, tol: f64, max_sweeps: usize) -> (Vec<f64>, Mat) {
+    let n = a.rows();
+    let mut m = prepared(a);
+    let mut v = Mat::eye(n);
+    let fro = m.fro_norm().max(1e-300);
+    for _ in 0..max_sweeps {
+        if offdiag_norm(&m) <= tol * fro {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let (c, s) = rotation(&m, p, q);
+                apply_rotation(&mut m, p, q, c, s);
+                // accumulate V ← V·J(p,q,θ)
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    // Sort eigenpairs ascending by eigenvalue.
+    let mut order: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    order.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    let eigs: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
+    let mut vs = Mat::zeros(n, n);
+    for (new_col, &old_col) in order.iter().enumerate() {
+        for r in 0..n {
+            vs[(r, new_col)] = v[(r, old_col)];
+        }
+    }
+    (eigs, vs)
+}
+
+fn prepared(a: &Mat) -> Mat {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigendecomposition needs a square matrix");
+    let mut m = a.clone();
+    // Symmetrize defensively (input may carry fp asymmetry).
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    m
+}
+
+fn offdiag_norm(m: &Mat) -> f64 {
+    let n = m.rows();
+    let mut off = 0.0;
+    for i in 0..n {
+        for j in i + 1..n {
+            off += m[(i, j)] * m[(i, j)];
+        }
+    }
+    off.sqrt()
+}
+
+fn rotation(m: &Mat, p: usize, q: usize) -> (f64, f64) {
+    let apq = m[(p, q)];
+    let app = m[(p, p)];
+    let aqq = m[(q, q)];
+    let theta = (aqq - app) / (2.0 * apq);
+    let t = if theta >= 0.0 {
+        1.0 / (theta + (1.0 + theta * theta).sqrt())
+    } else {
+        1.0 / (theta - (1.0 + theta * theta).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    (c, t * c)
+}
+
+fn apply_rotation(m: &mut Mat, p: usize, q: usize, c: f64, s: f64) {
+    let n = m.rows();
+    for k in 0..n {
+        let mkp = m[(k, p)];
+        let mkq = m[(k, q)];
+        m[(k, p)] = c * mkp - s * mkq;
+        m[(k, q)] = s * mkp + c * mkq;
+    }
+    for k in 0..n {
+        let mpk = m[(p, k)];
+        let mqk = m[(q, k)];
+        m[(p, k)] = c * mpk - s * mqk;
+        m[(q, k)] = s * mpk + c * mqk;
+    }
+}
+
+/// All eigenvalues of a symmetric matrix, ascending.
+///
+/// Cyclic Jacobi rotations until off-diagonal mass is below `tol` relative
+/// to the Frobenius norm (default 1e-12 via [`symmetric_eigenvalues`]).
+pub fn symmetric_eigenvalues_tol(a: &Mat, tol: f64, max_sweeps: usize) -> Vec<f64> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "eigenvalues need a square matrix");
+    let mut m = a.clone();
+    // Symmetrize defensively (input may carry fp asymmetry).
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let fro = m.fro_norm().max(1e-300);
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol * fro {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                // stable tan computation
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,θ)ᵀ · M · J(p,q,θ)
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+            }
+        }
+    }
+    let mut eigs: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    eigs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    eigs
+}
+
+/// All eigenvalues, ascending, with default tolerance.
+pub fn symmetric_eigenvalues(a: &Mat) -> Vec<f64> {
+    symmetric_eigenvalues_tol(a, 1e-12, 64)
+}
+
+/// Extreme eigenvalues (λ_min, λ_max) of a symmetric matrix.
+pub fn extreme_eigenvalues(a: &Mat) -> (f64, f64) {
+    let e = symmetric_eigenvalues(a);
+    (e[0], *e.last().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = symmetric_eigenvalues(&a);
+        assert!((e[0] - 1.0).abs() < 1e-10);
+        assert!((e[1] - 2.0).abs() < 1e-10);
+        assert!((e[2] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 1, 3
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = symmetric_eigenvalues(&a);
+        assert!((e[0] - 1.0).abs() < 1e-10 && (e[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn trace_and_det_preserved() {
+        // random symmetric 8×8; sum of eigenvalues = trace
+        let mut rng = crate::rng::Pcg64::new(3);
+        let n = 8;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_f64() - 0.5;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let e = symmetric_eigenvalues(&a);
+        let trace: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        assert!((e.iter().sum::<f64>() - trace).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gram_eigenvalues_nonnegative() {
+        let mut rng = crate::rng::Pcg64::new(5);
+        let a = Mat::from_fn(12, 6, |_, _| rng.next_f64() - 0.5);
+        let e = symmetric_eigenvalues(&a.gram());
+        assert!(e.iter().all(|&x| x > -1e-10), "e={e:?}");
+    }
+
+    #[test]
+    fn orthogonal_frame_gram_is_identity_spectrum() {
+        // Hadamard rows scaled to unit norm form a tight frame; the Gram of
+        // the full matrix has all eigenvalues equal to β = rows/cols... here
+        // square → all 1.
+        let n = 8;
+        let h = Mat::from_fn(n, n, |i, j| crate::linalg::fwht::hadamard_entry(i, j) / (n as f64).sqrt());
+        let e = symmetric_eigenvalues(&h.gram());
+        for v in e {
+            assert!((v - 1.0).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn eigen_reconstructs_matrix() {
+        let mut rng = crate::rng::Pcg64::new(17);
+        let n = 10;
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.next_f64() - 0.5;
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let (eigs, v) = symmetric_eigen(&a);
+        // A·V = V·diag(λ)
+        for col in 0..n {
+            let vc: Vec<f64> = (0..n).map(|r| v[(r, col)]).collect();
+            let av = a.matvec(&vc);
+            for r in 0..n {
+                assert!((av[r] - eigs[col] * vc[r]).abs() < 1e-8, "col {col}");
+            }
+        }
+        // V orthonormal
+        let vtv = v.gram();
+        for i in 0..n {
+            for j in 0..n {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv[(i, j)] - expect).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn eigen_values_match_eigenvalue_only_path() {
+        let a = Mat::from_vec(3, 3, vec![2.0, -1.0, 0.0, -1.0, 2.0, -1.0, 0.0, -1.0, 2.0]);
+        let (e1, _) = symmetric_eigen(&a);
+        let e2 = symmetric_eigenvalues(&a);
+        for (a, b) in e1.iter().zip(&e2) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_power_iteration_top_eigenvalue() {
+        let mut rng = crate::rng::Pcg64::new(7);
+        let a = Mat::from_fn(20, 10, |_, _| rng.next_f64() - 0.5);
+        let top_jacobi = *symmetric_eigenvalues(&a.gram()).last().unwrap();
+        let top_power = a.gram_spectral_norm(500, 11);
+        assert!((top_jacobi - top_power).abs() / top_jacobi < 1e-6);
+    }
+}

@@ -1,0 +1,109 @@
+//! Fast Walsh–Hadamard transform.
+//!
+//! The paper's §4.2.2 encodes with a column-subsampled (real, ±1/√n)
+//! Hadamard matrix applied through FWHT — O(n log n) instead of O(n²).
+
+/// In-place, unnormalized FWHT. `x.len()` must be a power of two.
+///
+/// After the call, `x = H·x` where `H` is the ±1 Sylvester-Hadamard
+/// matrix of order `x.len()`.
+pub fn fwht(x: &mut [f64]) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
+    let mut h = 1;
+    while h < n {
+        let step = h * 2;
+        for block in (0..n).step_by(step) {
+            for i in block..block + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+        }
+        h = step;
+    }
+}
+
+/// In-place orthonormal FWHT: `x = (1/√n)·H·x`, so the transform is its
+/// own inverse.
+pub fn fwht_normalized(x: &mut [f64]) {
+    let n = x.len();
+    fwht(x);
+    let s = 1.0 / (n as f64).sqrt();
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Entry (i, j) of the ±1 Sylvester-Hadamard matrix of order n
+/// (n a power of two): (−1)^{popcount(i & j)}.
+#[inline]
+pub fn hadamard_entry(i: usize, j: usize) -> f64 {
+    if (i & j).count_ones() % 2 == 0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn fwht_matches_explicit_matrix() {
+        let n = 8;
+        let h = Mat::from_fn(n, n, |i, j| hadamard_entry(i, j));
+        let x: Vec<f64> = (0..n).map(|i| (i as f64 + 1.0) * 0.5).collect();
+        let expect = h.matvec(&x);
+        let mut got = x.clone();
+        fwht(&mut got);
+        for (g, e) in got.iter().zip(&expect) {
+            assert!((g - e).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalized_fwht_is_involution() {
+        let x: Vec<f64> = (0..16).map(|i| (i as f64 * 0.7).cos()).collect();
+        let mut y = x.clone();
+        fwht_normalized(&mut y);
+        fwht_normalized(&mut y);
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalized_fwht_preserves_norm() {
+        let x: Vec<f64> = (0..32).map(|i| (i as f64).sin()).collect();
+        let n0 = crate::linalg::norm2(&x);
+        let mut y = x;
+        fwht_normalized(&mut y);
+        assert!((crate::linalg::norm2(&y) - n0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hadamard_rows_orthogonal() {
+        let n = 16;
+        for i in 0..n {
+            for j in 0..n {
+                let d: f64 = (0..n).map(|k| hadamard_entry(i, k) * hadamard_entry(j, k)).sum();
+                if i == j {
+                    assert_eq!(d, n as f64);
+                } else {
+                    assert_eq!(d, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_panics() {
+        let mut x = vec![1.0; 6];
+        fwht(&mut x);
+    }
+}

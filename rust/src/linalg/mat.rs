@@ -1,0 +1,316 @@
+//! Dense row-major matrix.
+
+use super::{axpy, dot};
+
+/// Dense `rows × cols` matrix, row-major `Vec<f64>` storage.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a generator f(row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Stack row-blocks vertically: `[M_i]_{i∈A}` in the paper's notation.
+    pub fn vstack(blocks: &[&Mat]) -> Self {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        assert!(blocks.iter().all(|b| b.cols == cols), "column mismatch in vstack");
+        let rows = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            data.extend_from_slice(&b.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw row-major buffer.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Copy a contiguous row range `[r0, r1)` into a new matrix.
+    pub fn row_block(&self, r0: usize, r1: usize) -> Mat {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Mat {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Copy selected columns into a new matrix (used for column-subsampled
+    /// Haar / Hadamard encodings).
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (jj, &j) in idx.iter().enumerate() {
+                dst[jj] = src[j];
+            }
+        }
+        out
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            y[i] = dot(self.row(i), x);
+        }
+        y
+    }
+
+    /// y = Aᵀ·x (no explicit transpose).
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            axpy(x[i], self.row(i), &mut y);
+        }
+        y
+    }
+
+    /// C = A·B.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul dim mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order: stream B rows, accumulate into C rows.
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[i * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                let crow = out.row_mut(i);
+                axpy(a, brow, crow);
+            }
+        }
+        out
+    }
+
+    /// Aᵀ as a new matrix.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Gram matrix AᵀA (symmetric, computed without forming Aᵀ).
+    pub fn gram(&self) -> Mat {
+        let n = self.cols;
+        let mut g = Mat::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(i);
+                for j in i..n {
+                    grow[j] += ri * row[j];
+                }
+            }
+        }
+        // Mirror the upper triangle.
+        for i in 0..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        dot(&self.data, &self.data).sqrt()
+    }
+
+    /// Scale every entry in place.
+    pub fn scale_inplace(&mut self, alpha: f64) {
+        for v in &mut self.data {
+            *v *= alpha;
+        }
+    }
+
+    /// Largest eigenvalue of AᵀA estimated by power iteration — the
+    /// smoothness constant `M` of quadratic losses.
+    pub fn gram_spectral_norm(&self, iters: usize, seed: u64) -> f64 {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        let mut v: Vec<f64> = (0..self.cols).map(|_| rng.next_f64() - 0.5).collect();
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let av = self.matvec(&v);
+            let mut atav = self.matvec_t(&av);
+            let n = super::norm2(&atav);
+            if n == 0.0 {
+                return 0.0;
+            }
+            super::scale(1.0 / n, &mut atav);
+            lambda = n;
+            v = atav;
+        }
+        lambda
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Mat {
+        Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let a = small();
+        assert_eq!(a.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn matvec_t_is_transpose_matvec() {
+        let a = small();
+        let at = a.transpose();
+        let x = vec![0.5, -1.5];
+        assert_eq!(a.matvec_t(&x), at.matvec(&x));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = small();
+        let i3 = Mat::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = small();
+        let b = Mat::from_vec(3, 2, vec![1.0, 0.0, 0.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c, Mat::from_vec(2, 2, vec![4.0, 5.0, 10.0, 11.0]));
+    }
+
+    #[test]
+    fn gram_matches_explicit_transpose_product() {
+        let a = small();
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((g[(i, j)] - g2[(i, j)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn vstack_stacks() {
+        let a = small();
+        let b = small();
+        let s = Mat::vstack(&[&a, &b]);
+        assert_eq!(s.rows(), 4);
+        assert_eq!(s.row(2), a.row(0));
+    }
+
+    #[test]
+    fn row_block_and_select_cols() {
+        let a = small();
+        let b = a.row_block(1, 2);
+        assert_eq!(b.as_slice(), &[4.0, 5.0, 6.0]);
+        let c = a.select_cols(&[2, 0]);
+        assert_eq!(c.as_slice(), &[3.0, 1.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn spectral_norm_of_identity_like() {
+        let a = Mat::eye(4);
+        let s = a.gram_spectral_norm(50, 1);
+        assert!((s - 1.0).abs() < 1e-9, "s={s}");
+    }
+
+    #[test]
+    fn spectral_norm_matches_known() {
+        // A = diag(3, 1) → ‖AᵀA‖ = 9.
+        let a = Mat::from_vec(2, 2, vec![3.0, 0.0, 0.0, 1.0]);
+        let s = a.gram_spectral_norm(100, 2);
+        assert!((s - 9.0).abs() < 1e-6, "s={s}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Dense and sparse linear-algebra substrate.
+//!
+//! The entire optimizer stack (encoding, objectives, coordinator math,
+//! spectrum analysis for Figures 5–6) runs on these primitives. Built from
+//! scratch for the offline environment; `f64` everywhere on the rust side
+//! (the AOT JAX/Pallas artifacts compute in `f32` and are validated against
+//! these reference ops in integration tests).
+
+pub mod chol;
+pub mod eig;
+pub mod fwht;
+pub mod mat;
+pub mod sparse;
+
+pub use chol::{cholesky_factor, cholesky_solve};
+pub use eig::{symmetric_eigen, symmetric_eigenvalues};
+pub use fwht::{fwht, fwht_normalized};
+pub use mat::Mat;
+pub use sparse::Csr;
+
+/// Dot product.
+///
+/// Kept as the naive strict-order loop: a 4-way-unrolled multi-
+/// accumulator variant was tried during the perf pass and REGRESSED the
+/// gather-round p50 by ~18% at the shipped shard shapes (bounds-check +
+/// register pressure beat the ILP win at p ≤ 128) — see EXPERIMENTS.md
+/// §Perf iteration 6.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Euclidean norm ‖x‖₂.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// y ← y + αx.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Elementwise x ← αx.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// z = x − y.
+pub fn sub(x: &[f64], y: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a - b).collect()
+}
+
+/// z = x + y.
+pub fn add(x: &[f64], y: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a + b).collect()
+}
+
+/// Soft-thresholding operator: sign(x)·max(|x|−τ, 0), the prox of τ‖·‖₁.
+#[inline]
+pub fn soft_threshold(x: f64, tau: f64) -> f64 {
+    if x > tau {
+        x - tau
+    } else if x < -tau {
+        x + tau
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_and_norm() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, -1.0], &mut y);
+        assert_eq!(y, vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let x = vec![1.0, -2.0, 3.5];
+        let y = vec![0.5, 0.5, 0.5];
+        assert_eq!(add(&sub(&x, &y), &y), x);
+    }
+}

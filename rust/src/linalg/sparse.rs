@@ -1,0 +1,259 @@
+//! Compressed sparse row (CSR) matrix.
+//!
+//! Used for the rcv1-like tf-idf document matrices (§5.3) and for the
+//! sparse encoding matrices (Steiner ETF blocks, subsampled Haar), where
+//! the paper's efficient-encoding scheme (§4.2.1) relies on workers
+//! touching only the non-zero column support `B_I(S)`.
+
+use super::mat::Mat;
+
+/// CSR sparse matrix with f64 values.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointer array, length rows+1.
+    indptr: Vec<usize>,
+    /// Column indices, length nnz.
+    indices: Vec<usize>,
+    /// Values, length nnz.
+    values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, triplets: &[(usize, usize, f64)]) -> Self {
+        let mut sorted: Vec<(usize, usize, f64)> = triplets.to_vec();
+        sorted.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<usize> = Vec::with_capacity(sorted.len());
+        let mut values: Vec<f64> = Vec::with_capacity(sorted.len());
+        let mut last: Option<(usize, usize)> = None;
+        for &(r, c, v) in &sorted {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            if last == Some((r, c)) {
+                // duplicate (r, c): sum values
+                *values.last_mut().unwrap() += v;
+                continue;
+            }
+            indices.push(c);
+            values.push(v);
+            indptr[r + 1] = indices.len();
+            last = Some((r, c));
+        }
+        // prefix-fill rows with no entries
+        for r in 1..=rows {
+            indptr[r] = indptr[r].max(indptr[r - 1]);
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Dense → CSR, dropping exact zeros.
+    pub fn from_dense(m: &Mat) -> Self {
+        let mut triplets = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    triplets.push((i, j, v));
+                }
+            }
+        }
+        Csr::from_triplets(m.rows(), m.cols(), &triplets)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Non-zeros of row i as (col, value) pairs.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        self.indices[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "csr matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        for i in 0..self.rows {
+            let mut acc = 0.0;
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                acc += self.values[idx] * x[self.indices[idx]];
+            }
+            y[i] = acc;
+        }
+        y
+    }
+
+    /// y = Aᵀ·x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "csr matvec_t dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue;
+            }
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                y[self.indices[idx]] += self.values[idx] * xi;
+            }
+        }
+        y
+    }
+
+    /// Contiguous row block [r0, r1) as a new CSR (worker shard extraction).
+    pub fn row_block(&self, r0: usize, r1: usize) -> Csr {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        let lo = self.indptr[r0];
+        let hi = self.indptr[r1];
+        let indptr: Vec<usize> = self.indptr[r0..=r1].iter().map(|p| p - lo).collect();
+        Csr {
+            rows: r1 - r0,
+            cols: self.cols,
+            indptr,
+            indices: self.indices[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
+    /// Column support of the matrix: sorted distinct non-zero columns —
+    /// the paper's `B_I(S)` (§4.2.1).
+    pub fn col_support(&self) -> Vec<usize> {
+        let mut cols = self.indices.clone();
+        cols.sort_unstable();
+        cols.dedup();
+        cols
+    }
+
+    /// Select columns (re-indexing to 0..idx.len()); cols absent from idx
+    /// are dropped. `idx` must be sorted & distinct.
+    pub fn select_cols(&self, idx: &[usize]) -> Csr {
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        let mut remap = vec![usize::MAX; self.cols];
+        for (new, &old) in idx.iter().enumerate() {
+            remap[old] = new;
+        }
+        let mut triplets = Vec::new();
+        for i in 0..self.rows {
+            for (c, v) in self.row_iter(i) {
+                if remap[c] != usize::MAX {
+                    triplets.push((i, remap[c], v));
+                }
+            }
+        }
+        Csr::from_triplets(self.rows, idx.len(), &triplets)
+    }
+
+    /// Densify (tests / small blocks only).
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            for (j, v) in self.row_iter(i) {
+                m[(i, j)] += v;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn example() -> Csr {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        Csr::from_triplets(3, 3, &[(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn roundtrip_dense() {
+        let a = example();
+        let d = a.to_dense();
+        let b = Csr::from_dense(&d);
+        assert_eq!(b.to_dense(), d);
+        assert_eq!(b.nnz(), 4);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = example();
+        let x = vec![1.0, -1.0, 0.5];
+        assert_eq!(a.matvec(&x), a.to_dense().matvec(&x));
+    }
+
+    #[test]
+    fn matvec_t_matches_dense() {
+        let a = example();
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(a.matvec_t(&x), a.to_dense().matvec_t(&x));
+    }
+
+    #[test]
+    fn empty_rows_are_fine() {
+        let a = example();
+        assert_eq!(a.row_iter(1).count(), 0);
+        assert_eq!(a.matvec(&[1.0, 1.0, 1.0])[1], 0.0);
+    }
+
+    #[test]
+    fn duplicates_sum() {
+        let a = Csr::from_triplets(1, 2, &[(0, 1, 2.0), (0, 1, 3.0)]);
+        assert_eq!(a.nnz(), 1);
+        assert_eq!(a.to_dense()[(0, 1)], 5.0);
+    }
+
+    #[test]
+    fn row_block_extracts_shard() {
+        let a = example();
+        let b = a.row_block(1, 3);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.to_dense().as_slice(), &[0.0, 0.0, 0.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn col_support_sorted_distinct() {
+        let a = example();
+        assert_eq!(a.col_support(), vec![0, 1, 2]);
+        let b = a.row_block(0, 1);
+        assert_eq!(b.col_support(), vec![0, 2]);
+    }
+
+    #[test]
+    fn select_cols_compacts() {
+        let a = example();
+        let b = a.select_cols(&[0, 2]);
+        assert_eq!(b.cols(), 2);
+        assert_eq!(b.to_dense().as_slice(), &[1.0, 2.0, 0.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn sparse_times_dense_consistency_large() {
+        // random-ish structured matrix, compare sparse vs dense paths
+        let mut trips = Vec::new();
+        for i in 0..40 {
+            for j in 0..30 {
+                if (i * 7 + j * 13) % 11 == 0 {
+                    trips.push((i, j, ((i + 1) * (j + 2)) as f64 * 0.01));
+                }
+            }
+        }
+        let a = Csr::from_triplets(40, 30, &trips);
+        let x: Vec<f64> = (0..30).map(|i| (i as f64 * 0.37).sin()).collect();
+        let ys = a.matvec(&x);
+        let yd = a.to_dense().matvec(&x);
+        for (s, d) in ys.iter().zip(&yd) {
+            assert!((s - d).abs() < 1e-12);
+        }
+    }
+}

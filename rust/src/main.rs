@@ -1,0 +1,210 @@
+//! `coded-opt` launcher binary.
+//!
+//! Subcommands:
+//! - `run --config exp.toml [--workers N --k K --scheme S --iters T]` —
+//!   run one data-parallel experiment (overrides apply on top of the
+//!   config file; all flags optional, defaults from
+//!   [`coded_opt::config::ExperimentConfig`]).
+//! - `spectrum [--scheme paley --n 128 --workers 16 --beta 2 --k 12]` —
+//!   print the subsampled-Gram eigenvalue summary (Figures 5–6 style).
+//! - `info` — build / artifact info.
+
+use anyhow::{bail, Result};
+use coded_opt::cli::Args;
+use coded_opt::cluster::SimCluster;
+use coded_opt::config::{Algorithm, ExperimentConfig, Scheme};
+use coded_opt::coordinator::{
+    build_data_parallel_with_runtime, run_gd, run_lbfgs, run_prox, GdConfig, LbfgsConfig,
+    ProxConfig,
+};
+use coded_opt::data::synth::{gaussian_linear, sparse_recovery};
+use coded_opt::encoding::{Encoding, SubsetSpectrum};
+use coded_opt::metrics::TableWriter;
+use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
+use coded_opt::runtime::ArtifactIndex;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("spectrum") => cmd_spectrum(&args),
+        Some("info") | None => cmd_info(),
+        Some(other) => bail!("unknown subcommand '{other}' (try: run, spectrum, info)"),
+    }
+}
+
+fn cmd_info() -> Result<()> {
+    println!("coded-opt {}", env!("CARGO_PKG_VERSION"));
+    println!("encoded distributed optimization (Karakus, Sun, Diggavi, Yin — 2018)");
+    let idx = ArtifactIndex::default_location()?;
+    if idx.is_empty() {
+        println!("artifacts: none (run `make artifacts` for the PJRT fast path)");
+    } else {
+        println!("artifacts ({}):", idx.len());
+        for a in idx.all() {
+            println!("  {:<24} {:<14} {}x{}", a.name, a.kind, a.rows, a.cols);
+        }
+    }
+    println!("subcommands: run, spectrum, info");
+    Ok(())
+}
+
+fn load_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(v) = args.get_usize("workers")? {
+        cfg.workers = v;
+    }
+    if let Some(v) = args.get_usize("k")? {
+        cfg.k = v;
+    }
+    if let Some(v) = args.get_usize("iters")? {
+        cfg.iterations = v;
+    }
+    if let Some(v) = args.get("scheme") {
+        cfg.scheme = Scheme::parse(v)?;
+    }
+    if let Some(v) = args.get("algorithm") {
+        cfg.algorithm = Algorithm::parse(v)?;
+    }
+    if let Some(v) = args.get_f64("beta")? {
+        cfg.beta = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    if args.has_flag("pjrt") {
+        cfg.use_pjrt = true;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    println!(
+        "experiment '{}': {:?} / {} — n={} p={} m={} k={} β={} iters={}",
+        cfg.name,
+        cfg.algorithm,
+        cfg.scheme.name(),
+        cfg.n,
+        cfg.p,
+        cfg.workers,
+        cfg.k,
+        cfg.beta,
+        cfg.iterations
+    );
+    if !cfg.brip_feasible() {
+        println!("note: η·β = {:.2} < 1 — below the strict BRIP threshold (Def. 1); \
+                  expect a looser approximation band.", cfg.eta() * cfg.beta);
+    }
+    let idx = if cfg.use_pjrt { Some(ArtifactIndex::default_location()?) } else { None };
+
+    let (x, y, w_star) = match cfg.algorithm {
+        Algorithm::ProxGradient => sparse_recovery(cfg.n, cfg.p, cfg.p / 12 + 1, 0.5, cfg.seed),
+        _ => gaussian_linear(cfg.n, cfg.p, 0.5, cfg.seed),
+    };
+    let dp = build_data_parallel_with_runtime(
+        &x,
+        &y,
+        cfg.scheme,
+        cfg.workers,
+        cfg.beta,
+        cfg.seed,
+        idx.as_ref(),
+    )?;
+    if cfg.use_pjrt {
+        println!("PJRT-backed workers: {}/{}", dp.pjrt_attached, cfg.workers);
+    }
+    let asm = dp.assembler.clone();
+    let delay = coded_opt::delay::from_spec(&cfg.delay, cfg.workers, cfg.seed);
+    let mut cluster = SimCluster::new(dp.workers, delay);
+
+    let trace = match cfg.algorithm {
+        Algorithm::Gd => {
+            let prob = RidgeProblem::new(x.clone(), y.clone(), cfg.lambda);
+            let step = if cfg.step_size > 0.0 { cfg.step_size } else { 1.0 / prob.smoothness() };
+            let gd = GdConfig {
+                k: cfg.k,
+                step,
+                iters: cfg.iterations,
+                lambda: cfg.lambda,
+                w0: None,
+            };
+            run_gd(&mut cluster, &asm, &gd, &cfg.name, &|w| (prob.objective(w), 0.0)).trace
+        }
+        Algorithm::Lbfgs => {
+            let prob = RidgeProblem::new(x.clone(), y.clone(), cfg.lambda);
+            let lb = LbfgsConfig {
+                k: cfg.k,
+                iters: cfg.iterations,
+                lambda: cfg.lambda,
+                memory: cfg.lbfgs_memory,
+                rho: 0.9,
+                w0: None,
+            };
+            run_lbfgs(&mut cluster, &asm, &lb, &cfg.name, &|w| (prob.objective(w), 0.0)).trace
+        }
+        Algorithm::ProxGradient => {
+            let prob = LassoProblem::new(x.clone(), y.clone(), cfg.lambda);
+            let step = if cfg.step_size > 0.0 { cfg.step_size } else { prob.default_step() };
+            let px = ProxConfig {
+                k: cfg.k,
+                step,
+                iters: cfg.iterations,
+                lambda: cfg.lambda,
+                w0: None,
+            };
+            let ws = w_star.clone();
+            run_prox(&mut cluster, &asm, &px, &cfg.name, &|w| {
+                let (_, _, f1) = coded_opt::metrics::f1_support(&ws, w, 1e-2);
+                (prob.objective(w), f1)
+            })
+            .trace
+        }
+        Algorithm::Bcd => {
+            bail!("model-parallel BCD runs live in examples/logistic_bcd.rs and benches/fig10*");
+        }
+    };
+    println!("\n{:>6} {:>16} {:>12} {:>10}", "iter", "objective", "metric", "time(s)");
+    let stride = (trace.len() / 12).max(1);
+    for r in trace.records.iter().step_by(stride) {
+        println!("{:>6} {:>16.8} {:>12.4} {:>10.2}", r.iter, r.objective, r.test_metric, r.time);
+    }
+    println!(
+        "\nfinal: objective {:.8}, metric {:.4}, total simulated time {:.2}s",
+        trace.final_objective(),
+        trace.final_test_metric(),
+        trace.total_time()
+    );
+    Ok(())
+}
+
+fn cmd_spectrum(args: &Args) -> Result<()> {
+    let n = args.get_usize("n")?.unwrap_or(120);
+    let m = args.get_usize("workers")?.unwrap_or(16);
+    let beta = args.get_f64("beta")?.unwrap_or(2.0);
+    let k = args.get_usize("k")?.unwrap_or(3 * m / 4);
+    let subsets = args.get_usize("subsets")?.unwrap_or(12);
+    let schemes: Vec<Scheme> = match args.get("scheme") {
+        Some(s) => vec![Scheme::parse(s)?],
+        None => vec![
+            Scheme::Gaussian,
+            Scheme::Paley,
+            Scheme::Hadamard,
+            Scheme::Steiner,
+            Scheme::Haar,
+        ],
+    };
+    let mut table = TableWriter::new(&["scheme", "n", "k/m", "β", "λmin", "λmax", "ε", "bulk@1"]);
+    for scheme in schemes {
+        let enc = Encoding::build(scheme, n, m, beta, 5)?;
+        let mut an = SubsetSpectrum::new(&enc, 11);
+        let stats = an.analyze(k, subsets);
+        table.row(&stats.summary_row());
+    }
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,144 @@
+//! Metrics: convergence traces, histograms, participation counters,
+//! and table/CSV writers used by the benchmark harness.
+
+pub mod histogram;
+pub mod trace;
+pub mod writer;
+
+pub use histogram::Histogram;
+pub use trace::{IterRecord, Trace};
+pub use writer::{write_csv, TableWriter};
+
+/// Per-node participation statistics — the empirical probability of the
+/// event {i ∈ A_t} plotted in the paper's Figures 12–13.
+#[derive(Clone, Debug)]
+pub struct Participation {
+    counts: Vec<usize>,
+    iterations: usize,
+}
+
+impl Participation {
+    pub fn new(m: usize) -> Self {
+        Participation { counts: vec![0; m], iterations: 0 }
+    }
+
+    /// Record the active set A_t of one iteration.
+    pub fn record(&mut self, active: &[usize]) {
+        self.iterations += 1;
+        for &i in active {
+            self.counts[i] += 1;
+        }
+    }
+
+    /// Fraction of iterations node i participated in.
+    pub fn fraction(&self, i: usize) -> f64 {
+        if self.iterations == 0 {
+            0.0
+        } else {
+            self.counts[i] as f64 / self.iterations as f64
+        }
+    }
+
+    pub fn fractions(&self) -> Vec<f64> {
+        (0..self.counts.len()).map(|i| self.fraction(i)).collect()
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.iterations
+    }
+
+    /// Coefficient of variation across nodes — 0 for perfectly uniform
+    /// participation; large for the skewed async profile of Fig. 13.
+    pub fn imbalance(&self) -> f64 {
+        let f = self.fractions();
+        let mean = f.iter().sum::<f64>() / f.len() as f64;
+        if mean == 0.0 {
+            return 0.0;
+        }
+        let var = f.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / f.len() as f64;
+        var.sqrt() / mean
+    }
+}
+
+/// Precision / recall / F1 of support recovery — the paper's LASSO
+/// sparsity metric (§5.4).
+pub fn f1_support(w_true: &[f64], w_hat: &[f64], tol: f64) -> (f64, f64, f64) {
+    assert_eq!(w_true.len(), w_hat.len());
+    let mut tp = 0usize;
+    let mut fp = 0usize;
+    let mut fn_ = 0usize;
+    for (t, h) in w_true.iter().zip(w_hat) {
+        let t_nz = t.abs() > tol;
+        let h_nz = h.abs() > tol;
+        match (t_nz, h_nz) {
+            (true, true) => tp += 1,
+            (false, true) => fp += 1,
+            (true, false) => fn_ += 1,
+            (false, false) => {}
+        }
+    }
+    let p = if tp + fp == 0 { 0.0 } else { tp as f64 / (tp + fp) as f64 };
+    let r = if tp + fn_ == 0 { 0.0 } else { tp as f64 / (tp + fn_) as f64 };
+    let f1 = if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) };
+    (p, r, f1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn participation_fractions() {
+        let mut p = Participation::new(3);
+        p.record(&[0, 1]);
+        p.record(&[0]);
+        p.record(&[0, 2]);
+        assert!((p.fraction(0) - 1.0).abs() < 1e-12);
+        assert!((p.fraction(1) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((p.fraction(2) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(p.iterations(), 3);
+    }
+
+    #[test]
+    fn imbalance_zero_for_uniform() {
+        let mut p = Participation::new(4);
+        for _ in 0..10 {
+            p.record(&[0, 1, 2, 3]);
+        }
+        assert!(p.imbalance() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_positive_for_skew() {
+        let mut p = Participation::new(2);
+        for _ in 0..10 {
+            p.record(&[0]);
+        }
+        assert!(p.imbalance() > 0.5);
+    }
+
+    #[test]
+    fn f1_perfect_recovery() {
+        let w = vec![0.0, 1.0, 0.0, -2.0];
+        let (p, r, f1) = f1_support(&w, &w, 1e-9);
+        assert_eq!((p, r, f1), (1.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn f1_partial() {
+        let wt = vec![1.0, 1.0, 0.0, 0.0];
+        let wh = vec![1.0, 0.0, 1.0, 0.0];
+        let (p, r, f1) = f1_support(&wt, &wh, 1e-9);
+        assert!((p - 0.5).abs() < 1e-12);
+        assert!((r - 0.5).abs() < 1e-12);
+        assert!((f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f1_empty_prediction() {
+        let wt = vec![1.0, 0.0];
+        let wh = vec![0.0, 0.0];
+        let (p, r, f1) = f1_support(&wt, &wh, 1e-9);
+        assert_eq!((p, r, f1), (0.0, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,150 @@
+//! Convergence traces: one record per outer iteration.
+
+/// A single iteration record.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IterRecord {
+    /// Outer iteration index t.
+    pub iter: usize,
+    /// Simulated wall-clock at the end of the iteration (seconds).
+    pub time: f64,
+    /// Objective value f(w_t) on the ORIGINAL (uncoded) problem — the
+    /// paper reports convergence in terms of the original objective.
+    pub objective: f64,
+    /// Optional generalization metric (test RMSE / error / F1).
+    pub test_metric: f64,
+    /// |A_t| actually waited for.
+    pub k_used: usize,
+}
+
+/// Trace of a full optimization run.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub records: Vec<IterRecord>,
+    pub label: String,
+}
+
+impl Trace {
+    pub fn new(label: &str) -> Self {
+        Trace { records: Vec::new(), label: label.to_string() }
+    }
+
+    pub fn push(&mut self, rec: IterRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn final_objective(&self) -> f64 {
+        self.records.last().map(|r| r.objective).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_test_metric(&self) -> f64 {
+        self.records.last().map(|r| r.test_metric).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.records.last().map(|r| r.time).unwrap_or(0.0)
+    }
+
+    /// First time the objective drops at/below `target`; None if never.
+    pub fn time_to_objective(&self, target: f64) -> Option<f64> {
+        self.records.iter().find(|r| r.objective <= target).map(|r| r.time)
+    }
+
+    /// Last record with time ≤ t (state of the run at wall/sim time t).
+    pub fn at_time(&self, t: f64) -> Option<&IterRecord> {
+        self.records.iter().take_while(|r| r.time <= t).last()
+    }
+
+    /// Objective at time t (NaN before the first record).
+    pub fn objective_at_time(&self, t: f64) -> f64 {
+        self.at_time(t).map(|r| r.objective).unwrap_or(f64::NAN)
+    }
+
+    /// Test metric at time t (NaN before the first record).
+    pub fn test_metric_at_time(&self, t: f64) -> f64 {
+        self.at_time(t).map(|r| r.test_metric).unwrap_or(f64::NAN)
+    }
+
+    /// Running mean of objective values up to each t — the quantity the
+    /// paper's Theorems 2/5 bound for the general convex case.
+    pub fn running_mean_objective(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(self.records.len());
+        let mut acc = 0.0;
+        for (i, r) in self.records.iter().enumerate() {
+            acc += r.objective;
+            out.push(acc / (i + 1) as f64);
+        }
+        out
+    }
+
+    /// Is the objective sequence non-divergent (bounded by c·f(w_0))?
+    pub fn bounded_by(&self, c: f64) -> bool {
+        if self.records.is_empty() {
+            return true;
+        }
+        let f0 = self.records[0].objective;
+        self.records.iter().all(|r| r.objective <= c * f0 + 1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(objs: &[f64]) -> Trace {
+        let mut t = Trace::new("test");
+        for (i, &o) in objs.iter().enumerate() {
+            t.push(IterRecord {
+                iter: i,
+                time: i as f64 * 0.5,
+                objective: o,
+                test_metric: 0.0,
+                k_used: 4,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn final_and_total() {
+        let t = mk(&[10.0, 5.0, 2.0]);
+        assert_eq!(t.final_objective(), 2.0);
+        assert_eq!(t.total_time(), 1.0);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn time_to_objective() {
+        let t = mk(&[10.0, 5.0, 2.0]);
+        assert_eq!(t.time_to_objective(5.0), Some(0.5));
+        assert_eq!(t.time_to_objective(1.0), None);
+    }
+
+    #[test]
+    fn at_time_queries() {
+        let t = mk(&[10.0, 5.0, 2.0]); // times 0.0, 0.5, 1.0
+        assert_eq!(t.objective_at_time(0.6), 5.0);
+        assert_eq!(t.objective_at_time(10.0), 2.0);
+        assert!(t.objective_at_time(-0.1).is_nan());
+    }
+
+    #[test]
+    fn running_mean() {
+        let t = mk(&[4.0, 2.0, 0.0]);
+        assert_eq!(t.running_mean_objective(), vec![4.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn bounded_by_checks_divergence() {
+        assert!(mk(&[1.0, 0.9, 0.5]).bounded_by(1.0));
+        assert!(!mk(&[1.0, 3.0]).bounded_by(2.0));
+        assert!(mk(&[]).bounded_by(1.0));
+    }
+}

@@ -1,0 +1,118 @@
+//! Output writers: CSV files and aligned console tables (the bench
+//! harness prints rows matching the paper's tables).
+
+use std::io::Write;
+use std::path::Path;
+
+use super::trace::Trace;
+
+/// Write one or more traces to a CSV file with columns
+/// `label,iter,time,objective,test_metric,k_used`.
+pub fn write_csv(path: &Path, traces: &[&Trace]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "label,iter,time,objective,test_metric,k_used")?;
+    for t in traces {
+        for r in &t.records {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.8e},{:.6},{}",
+                t.label, r.iter, r.time, r.objective, r.test_metric, r.k_used
+            )?;
+        }
+    }
+    Ok(())
+}
+
+/// Fixed-width console table builder.
+pub struct TableWriter {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableWriter {
+    pub fn new(headers: &[&str]) -> Self {
+        TableWriter {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                line.push_str(&format!("{:<w$}  ", cell, w = widths[c]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::trace::IterRecord;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Trace::new("hadamard");
+        t.push(IterRecord { iter: 0, time: 0.1, objective: 1.0, test_metric: 0.9, k_used: 4 });
+        t.push(IterRecord { iter: 1, time: 0.2, objective: 0.5, test_metric: 0.8, k_used: 4 });
+        let dir = std::env::temp_dir().join("coded_opt_test_csv");
+        let path = dir.join("trace.csv");
+        write_csv(&path, &[&t]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("label,iter"));
+        assert!(lines[1].starts_with("hadamard,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut tw = TableWriter::new(&["scheme", "rmse"]);
+        tw.row(&["hadamard".into(), "0.874".into()]);
+        tw.row(&["uncoded".into(), "0.898".into()]);
+        let s = tw.render();
+        assert!(s.contains("scheme"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_width() {
+        let mut tw = TableWriter::new(&["a", "b"]);
+        tw.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,171 @@
+//! ℓ₂-regularized logistic regression (paper §5.3):
+//! `f(w) = 1/n·Σᵢ log(1 + exp(−zᵢᵀw)) + λ‖w‖²`, where `zᵢ = yᵢxᵢ`.
+//!
+//! Under model parallelism this is `φ(Zw) + λ‖w‖²` with
+//! `φ(u) = 1/n·Σ log(1+e^{−uᵢ})` — the form used by encoded block
+//! coordinate descent (the feature dimension is partitioned).
+
+use crate::linalg::{dot, Csr};
+
+/// Numerically stable `log(1 + e^{−u})`.
+#[inline]
+pub fn log1p_exp_neg(u: f64) -> f64 {
+    if u > 0.0 {
+        (-u).exp().ln_1p()
+    } else {
+        -u + u.exp().ln_1p()
+    }
+}
+
+/// Stable logistic sigmoid σ(u) = 1/(1+e^{−u}).
+#[inline]
+pub fn sigmoid(u: f64) -> f64 {
+    if u >= 0.0 {
+        1.0 / (1.0 + (-u).exp())
+    } else {
+        let e = u.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Logistic regression problem. `z` holds the label-scaled samples
+/// `zᵢ = yᵢ·xᵢ` as rows (sparse, tf-idf-like).
+#[derive(Clone, Debug)]
+pub struct LogisticProblem {
+    pub z: Csr,
+    pub lambda: f64,
+}
+
+impl LogisticProblem {
+    pub fn new(z: Csr, lambda: f64) -> Self {
+        assert!(lambda >= 0.0);
+        LogisticProblem { z, lambda }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.z.rows()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.z.cols()
+    }
+
+    /// f(w) = φ(Zw) + λ‖w‖².
+    pub fn objective(&self, w: &[f64]) -> f64 {
+        let u = self.z.matvec(w);
+        self.phi(&u) + self.lambda * dot(w, w)
+    }
+
+    /// φ(u) = 1/n Σ log(1+e^{−uᵢ}).
+    pub fn phi(&self, u: &[f64]) -> f64 {
+        u.iter().map(|&ui| log1p_exp_neg(ui)).sum::<f64>() / u.len() as f64
+    }
+
+    /// ∇φ(u): elementwise `−σ(−uᵢ)/n`.
+    pub fn grad_phi(&self, u: &[f64]) -> Vec<f64> {
+        let n = u.len() as f64;
+        u.iter().map(|&ui| -sigmoid(-ui) / n).collect()
+    }
+
+    /// Full gradient ∇f(w) = Zᵀ∇φ(Zw) + 2λw.
+    pub fn gradient(&self, w: &[f64]) -> Vec<f64> {
+        let u = self.z.matvec(w);
+        let gphi = self.grad_phi(&u);
+        let mut g = self.z.matvec_t(&gphi);
+        crate::linalg::axpy(2.0 * self.lambda, w, &mut g);
+        g
+    }
+
+    /// Smoothness constant of φ∘Z: `λ_max(ZᵀZ)/(4n) + 2λ`.
+    pub fn smoothness(&self) -> f64 {
+        // power iteration on ZᵀZ without densifying
+        let mut v = vec![1.0; self.dim()];
+        let mut lam = 0.0;
+        for _ in 0..50 {
+            let zv = self.z.matvec(&v);
+            let mut ztzv = self.z.matvec_t(&zv);
+            let nrm = crate::linalg::norm2(&ztzv);
+            if nrm == 0.0 {
+                break;
+            }
+            crate::linalg::scale(1.0 / nrm, &mut ztzv);
+            v = ztzv;
+            lam = nrm;
+        }
+        lam / (4.0 * self.rows() as f64) + 2.0 * self.lambda
+    }
+
+    /// Classification error rate of w on label-scaled test rows
+    /// (an example is correct iff zᵢᵀw > 0).
+    pub fn error_rate(&self, w: &[f64], z_test: &Csr) -> f64 {
+        let u = z_test.matvec(w);
+        u.iter().filter(|&&ui| ui <= 0.0).count() as f64 / u.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rcv1like::generate;
+
+    #[test]
+    fn stable_helpers() {
+        assert!((log1p_exp_neg(0.0) - (2.0f64).ln()).abs() < 1e-12);
+        assert!(log1p_exp_neg(800.0) < 1e-300); // no overflow
+        assert!((log1p_exp_neg(-800.0) - 800.0).abs() < 1e-9);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-12);
+        assert!(sigmoid(-800.0) >= 0.0);
+        assert!((sigmoid(800.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let ds = generate(40, 12, 4, 0.4, 3);
+        let p = LogisticProblem::new(ds.train, 0.01);
+        let w: Vec<f64> = (0..12).map(|i| 0.05 * (i as f64) - 0.3).collect();
+        let g = p.gradient(&w);
+        let eps = 1e-6;
+        for i in 0..12 {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let fd = (p.objective(&wp) - p.objective(&wm)) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 1e-5, "coord {i}: {fd} vs {}", g[i]);
+        }
+    }
+
+    #[test]
+    fn objective_convex_along_segment() {
+        let ds = generate(30, 8, 3, 0.4, 5);
+        let p = LogisticProblem::new(ds.train, 0.1);
+        let w0 = vec![0.0; 8];
+        let w1 = vec![0.5; 8];
+        let mid: Vec<f64> = w0.iter().zip(&w1).map(|(a, b)| 0.5 * (a + b)).collect();
+        assert!(p.objective(&mid) <= 0.5 * p.objective(&w0) + 0.5 * p.objective(&w1) + 1e-12);
+    }
+
+    #[test]
+    fn gradient_descent_reduces_error() {
+        let ds = generate(200, 20, 6, 0.05, 7);
+        let p = LogisticProblem::new(ds.train, 1e-4);
+        let mut w = vec![0.0; 20];
+        let step = 1.0 / p.smoothness();
+        let initial_err = p.error_rate(&w, &ds.test);
+        for _ in 0..200 {
+            let g = p.gradient(&w);
+            for i in 0..w.len() {
+                w[i] -= step * g[i];
+            }
+        }
+        let err = p.error_rate(&w, &ds.test);
+        assert!(err < initial_err.min(0.35), "err={err}, initial={initial_err}");
+    }
+
+    #[test]
+    fn smoothness_positive() {
+        let ds = generate(20, 6, 2, 0.4, 9);
+        let p = LogisticProblem::new(ds.train, 0.01);
+        assert!(p.smoothness() > 0.0);
+    }
+}

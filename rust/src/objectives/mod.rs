@@ -1,0 +1,29 @@
+//! The paper's four evaluation objectives (§5): ridge regression, LASSO,
+//! logistic regression, and matrix factorization.
+//!
+//! Each module owns the *original* (uncoded) objective — used both to
+//! generate the distributed problem and to report convergence in terms of
+//! the original f(w), exactly as the paper's theorems do.
+
+pub mod lasso;
+pub mod logistic;
+pub mod matfac;
+pub mod ridge;
+
+pub use lasso::LassoProblem;
+pub use logistic::LogisticProblem;
+pub use matfac::MatFacProblem;
+pub use ridge::RidgeProblem;
+
+/// A smooth data-parallel objective of the paper's form
+/// `f(w) = 1/(2n)·‖Xw − y‖² + λ·h(w)` evaluated on the ORIGINAL data.
+pub trait QuadObjective {
+    /// f(w) on the original problem.
+    fn objective(&self, w: &[f64]) -> f64;
+    /// ∇f(w) on the original problem (smooth part + smooth regularizer).
+    fn gradient(&self, w: &[f64]) -> Vec<f64>;
+    /// Problem dimension p.
+    fn dim(&self) -> usize;
+    /// Number of data rows n.
+    fn rows(&self) -> usize;
+}

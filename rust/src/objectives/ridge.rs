@@ -1,0 +1,146 @@
+//! Ridge regression (paper §5.1):
+//! `f(w) = 1/(2n)·‖Xw − y‖² + (λ/2)·‖w‖²`.
+
+use super::QuadObjective;
+use crate::linalg::{axpy, cholesky_solve, dot, sub, Mat};
+
+/// Ridge regression problem on the original (uncoded) data.
+#[derive(Clone, Debug)]
+pub struct RidgeProblem {
+    pub x: Mat,
+    pub y: Vec<f64>,
+    pub lambda: f64,
+}
+
+impl RidgeProblem {
+    pub fn new(x: Mat, y: Vec<f64>, lambda: f64) -> Self {
+        assert_eq!(x.rows(), y.len(), "X/y row mismatch");
+        assert!(lambda >= 0.0);
+        RidgeProblem { x, y, lambda }
+    }
+
+    /// Closed-form solution via normal equations
+    /// `(XᵀX/n + λI)·w = Xᵀy/n` — ground truth for tests and for the
+    /// suboptimality axes of the Figure-7 bench.
+    pub fn solve_exact(&self) -> Vec<f64> {
+        let n = self.x.rows() as f64;
+        let mut g = self.x.gram();
+        g.scale_inplace(1.0 / n);
+        for i in 0..g.rows() {
+            g[(i, i)] += self.lambda;
+        }
+        let mut aty = self.x.matvec_t(&self.y);
+        crate::linalg::scale(1.0 / n, &mut aty);
+        cholesky_solve(&g, &aty).expect("ridge normal equations SPD")
+    }
+
+    /// Smoothness constant `M/n + λ` of the gradient (M = λ_max(XᵀX)).
+    pub fn smoothness(&self) -> f64 {
+        self.x.gram_spectral_norm(60, 0x5e) / self.x.rows() as f64 + self.lambda
+    }
+
+    /// Mean squared prediction error on held-out data.
+    pub fn test_mse(&self, w: &[f64], x_test: &Mat, y_test: &[f64]) -> f64 {
+        let r = sub(&x_test.matvec(w), y_test);
+        dot(&r, &r) / y_test.len() as f64
+    }
+}
+
+impl QuadObjective for RidgeProblem {
+    fn objective(&self, w: &[f64]) -> f64 {
+        let r = sub(&self.x.matvec(w), &self.y);
+        dot(&r, &r) / (2.0 * self.x.rows() as f64) + 0.5 * self.lambda * dot(w, w)
+    }
+
+    fn gradient(&self, w: &[f64]) -> Vec<f64> {
+        let r = sub(&self.x.matvec(w), &self.y);
+        let mut g = self.x.matvec_t(&r);
+        crate::linalg::scale(1.0 / self.x.rows() as f64, &mut g);
+        axpy(self.lambda, w, &mut g);
+        g
+    }
+
+    fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn rows(&self) -> usize {
+        self.x.rows()
+    }
+}
+
+/// Relative suboptimality `(f(w) − f*)/f*` — the y-axis of Figure 7.
+pub fn rel_subopt(f_w: f64, f_star: f64) -> f64 {
+    (f_w - f_star) / f_star.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_linear;
+    use crate::linalg::norm2;
+
+    fn small_problem() -> RidgeProblem {
+        let (x, y, _) = gaussian_linear(40, 8, 0.1, 7);
+        RidgeProblem::new(x, y, 0.05)
+    }
+
+    #[test]
+    fn gradient_vanishes_at_exact_solution() {
+        let p = small_problem();
+        let w = p.solve_exact();
+        let g = p.gradient(&w);
+        assert!(norm2(&g) < 1e-10, "‖∇f(w*)‖ = {}", norm2(&g));
+    }
+
+    #[test]
+    fn exact_solution_minimizes() {
+        let p = small_problem();
+        let w_star = p.solve_exact();
+        let f_star = p.objective(&w_star);
+        let mut rng = crate::rng::Pcg64::new(3);
+        for _ in 0..20 {
+            let w: Vec<f64> = (0..8).map(|_| rng.next_f64() - 0.5).collect();
+            assert!(p.objective(&w) >= f_star - 1e-12);
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = small_problem();
+        let w: Vec<f64> = (0..8).map(|i| 0.1 * i as f64 - 0.3).collect();
+        let g = p.gradient(&w);
+        let eps = 1e-6;
+        for i in 0..8 {
+            let mut wp = w.clone();
+            wp[i] += eps;
+            let mut wm = w.clone();
+            wm[i] -= eps;
+            let fd = (p.objective(&wp) - p.objective(&wm)) / (2.0 * eps);
+            assert!((fd - g[i]).abs() < 1e-5, "coord {i}: fd={fd} g={}", g[i]);
+        }
+    }
+
+    #[test]
+    fn smoothness_upper_bounds_gradient_lipschitz() {
+        let p = small_problem();
+        let m = p.smoothness();
+        let mut rng = crate::rng::Pcg64::new(11);
+        for _ in 0..10 {
+            let w1: Vec<f64> = (0..8).map(|_| rng.next_f64() - 0.5).collect();
+            let w2: Vec<f64> = (0..8).map(|_| rng.next_f64() - 0.5).collect();
+            let dg = sub(&p.gradient(&w1), &p.gradient(&w2));
+            let dw = sub(&w1, &w2);
+            assert!(norm2(&dg) <= m * norm2(&dw) * (1.0 + 1e-6));
+        }
+    }
+
+    #[test]
+    fn test_mse_zero_on_clean_fit() {
+        // noiseless data: exact solve with tiny λ recovers predictions
+        let (x, y, _) = gaussian_linear(60, 5, 0.0, 13);
+        let p = RidgeProblem::new(x.clone(), y.clone(), 1e-10);
+        let w = p.solve_exact();
+        assert!(p.test_mse(&w, &x, &y) < 1e-10);
+    }
+}

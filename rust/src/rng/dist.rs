@@ -1,0 +1,258 @@
+//! Probability distributions over [`Pcg64`].
+//!
+//! Exactly the set needed by the paper's experiments:
+//! - [`Normal`] — data matrices, noise (Box–Muller with caching).
+//! - [`Exponential`] — per-task latency (MovieLens experiment, §5.2).
+//! - [`Pareto`] — power-law number of background tasks (§5.3).
+//! - [`GaussianMixture`] — bimodal / trimodal communication delays
+//!   (§5.3, §5.4).
+//! - [`Uniform`] — generic ranges.
+
+use super::pcg::Pcg64;
+
+/// Common sampling interface.
+pub trait Distribution {
+    fn sample(&self, rng: &mut Pcg64) -> f64;
+}
+
+/// Normal(μ, σ²) via Box–Muller (both variates used, one cached).
+#[derive(Clone, Copy, Debug)]
+pub struct Normal {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "std must be non-negative");
+        Normal { mean, std }
+    }
+
+    pub fn standard() -> Self {
+        Normal { mean: 0.0, std: 1.0 }
+    }
+
+    /// One standard-normal variate.
+    #[inline]
+    pub fn sample_standard(rng: &mut Pcg64) -> f64 {
+        // Box–Muller; u1 bounded away from 0 so ln is finite.
+        let u1 = (rng.next_f64()).max(1e-300);
+        let u2 = rng.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+}
+
+impl Distribution for Normal {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.mean + self.std * Normal::sample_standard(rng)
+    }
+}
+
+/// Exponential(rate λ); mean 1/λ.
+#[derive(Clone, Copy, Debug)]
+pub struct Exponential {
+    pub rate: f64,
+}
+
+impl Exponential {
+    pub fn new(rate: f64) -> Self {
+        assert!(rate > 0.0, "rate must be positive");
+        Exponential { rate }
+    }
+
+    /// Construct from the mean (1/λ), which is how the paper states it
+    /// ("Δ ~ exp(10 ms)" means mean 10 ms).
+    pub fn with_mean(mean: f64) -> Self {
+        Self::new(1.0 / mean)
+    }
+}
+
+impl Distribution for Exponential {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        -(1.0 - rng.next_f64()).max(1e-300).ln() / self.rate
+    }
+}
+
+/// Pareto(x_min, α) — power-law tail P(X > x) = (x_min/x)^α.
+#[derive(Clone, Copy, Debug)]
+pub struct Pareto {
+    pub x_min: f64,
+    pub alpha: f64,
+}
+
+impl Pareto {
+    pub fn new(x_min: f64, alpha: f64) -> Self {
+        assert!(x_min > 0.0 && alpha > 0.0);
+        Pareto { x_min, alpha }
+    }
+}
+
+impl Distribution for Pareto {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let u = (1.0 - rng.next_f64()).max(1e-300);
+        self.x_min / u.powf(1.0 / self.alpha)
+    }
+}
+
+/// Uniform over [lo, hi).
+#[derive(Clone, Copy, Debug)]
+pub struct Uniform {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Uniform {
+    pub fn new(lo: f64, hi: f64) -> Self {
+        assert!(hi >= lo);
+        Uniform { lo, hi }
+    }
+}
+
+impl Distribution for Uniform {
+    #[inline]
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+}
+
+/// Finite mixture of normals: Σ qᵢ · N(μᵢ, σᵢ²).
+///
+/// The paper's logistic-regression experiment uses
+/// `0.5·N(0.5s, 0.2²) + 0.5·N(20s, 5²)` and the LASSO experiment a
+/// trimodal variant.
+#[derive(Clone, Debug)]
+pub struct GaussianMixture {
+    components: Vec<(f64, Normal)>, // (weight, component)
+}
+
+impl GaussianMixture {
+    /// Components as (weight, mean, std). Weights are normalized.
+    pub fn new(spec: &[(f64, f64, f64)]) -> Self {
+        assert!(!spec.is_empty());
+        let total: f64 = spec.iter().map(|s| s.0).sum();
+        assert!(total > 0.0);
+        let components = spec
+            .iter()
+            .map(|&(q, mu, sd)| (q / total, Normal::new(mu, sd)))
+            .collect();
+        GaussianMixture { components }
+    }
+
+    /// The paper's bimodal delay: q·N(μ1,σ1²) + (1−q)·N(μ2,σ2²)
+    /// with q=0.5, μ1=0.5 s, μ2=20 s, σ1=0.2 s, σ2=5 s (§5.3).
+    pub fn paper_bimodal() -> Self {
+        Self::new(&[(0.5, 0.5, 0.2), (0.5, 20.0, 5.0)])
+    }
+
+    /// The paper's trimodal LASSO delay (§5.4):
+    /// 0.8·N(0.2, 0.1²) + 0.1·N(0.6, 0.2²) + 0.1·N(1.0, 0.4²).
+    pub fn paper_trimodal() -> Self {
+        Self::new(&[(0.8, 0.2, 0.1), (0.1, 0.6, 0.2), (0.1, 1.0, 0.4)])
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.components.iter().map(|(q, n)| q * n.mean).sum()
+    }
+}
+
+impl Distribution for GaussianMixture {
+    fn sample(&self, rng: &mut Pcg64) -> f64 {
+        let mut u = rng.next_f64();
+        for (q, comp) in &self.components {
+            if u < *q {
+                return comp.sample(rng);
+            }
+            u -= q;
+        }
+        // Floating-point slack: fall through to the last component.
+        self.components.last().unwrap().1.sample(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn moments(f: impl Fn(&mut Pcg64) -> f64, n: usize, seed: u64) -> (f64, f64) {
+        let mut rng = Pcg64::new(seed);
+        let xs: Vec<f64> = (0..n).map(|_| f(&mut rng)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        (mean, var)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let d = Normal::new(3.0, 2.0);
+        let (mean, var) = moments(|r| d.sample(r), 200_000, 17);
+        assert!((mean - 3.0).abs() < 0.03, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let d = Exponential::with_mean(0.01); // the MovieLens exp(10ms) delay
+        let (mean, var) = moments(|r| d.sample(r), 200_000, 19);
+        assert!((mean - 0.01).abs() < 2e-4, "mean={mean}");
+        assert!((var - 1e-4).abs() < 1e-5, "var={var}");
+    }
+
+    #[test]
+    fn exponential_nonnegative() {
+        let d = Exponential::new(2.0);
+        let mut rng = Pcg64::new(23);
+        assert!((0..10_000).all(|_| d.sample(&mut rng) >= 0.0));
+    }
+
+    #[test]
+    fn pareto_respects_xmin_and_tail() {
+        let d = Pareto::new(1.0, 1.5); // the paper's α=1.5 background-task law
+        let mut rng = Pcg64::new(29);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.0));
+        // P(X > 4) = 4^{-1.5} = 0.125
+        let frac = xs.iter().filter(|&&x| x > 4.0).count() as f64 / n as f64;
+        assert!((frac - 0.125).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn uniform_bounds_and_mean() {
+        let d = Uniform::new(-2.0, 6.0);
+        let mut rng = Pcg64::new(31);
+        let xs: Vec<f64> = (0..50_000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (-2.0..6.0).contains(&x)));
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        assert!((mean - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn mixture_weights_normalize_and_mean_matches() {
+        let gm = GaussianMixture::new(&[(2.0, 0.0, 0.1), (2.0, 10.0, 0.1)]);
+        assert!((gm.mean() - 5.0).abs() < 1e-12);
+        let (mean, _) = moments(|r| gm.sample(r), 100_000, 37);
+        assert!((mean - 5.0).abs() < 0.1, "mean={mean}");
+    }
+
+    #[test]
+    fn paper_bimodal_is_bimodal() {
+        let gm = GaussianMixture::paper_bimodal();
+        let mut rng = Pcg64::new(41);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| gm.sample(&mut rng)).collect();
+        let fast = xs.iter().filter(|&&x| x < 2.0).count() as f64 / n as f64;
+        let slow = xs.iter().filter(|&&x| x > 10.0).count() as f64 / n as f64;
+        assert!((fast - 0.5).abs() < 0.02, "fast={fast}");
+        assert!((slow - 0.48).abs() < 0.04, "slow={slow}");
+    }
+
+    #[test]
+    fn paper_trimodal_mean() {
+        let gm = GaussianMixture::paper_trimodal();
+        let expect = 0.8 * 0.2 + 0.1 * 0.6 + 0.1 * 1.0;
+        assert!((gm.mean() - expect).abs() < 1e-12);
+    }
+}

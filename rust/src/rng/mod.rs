@@ -1,0 +1,97 @@
+//! Pseudo-random number generation substrate.
+//!
+//! The offline build environment has no `rand` crate, so we implement a
+//! small, well-tested PRNG stack ourselves: a PCG64 generator ([`Pcg64`])
+//! plus the distributions the paper's experiments need ([`dist`]):
+//! standard normal, exponential, Pareto (power law), and finite mixtures.
+
+pub mod dist;
+pub mod pcg;
+
+pub use dist::{Exponential, GaussianMixture, Normal, Pareto, Uniform};
+pub use pcg::Pcg64;
+
+/// Convenience: deterministic generator from a u64 seed.
+pub fn seeded(seed: u64) -> Pcg64 {
+    Pcg64::new(seed)
+}
+
+/// Fisher–Yates shuffle of a slice.
+pub fn shuffle<T>(rng: &mut Pcg64, xs: &mut [T]) {
+    let n = xs.len();
+    if n < 2 {
+        return;
+    }
+    for i in (1..n).rev() {
+        let j = rng.gen_range(i + 1);
+        xs.swap(i, j);
+    }
+}
+
+/// Sample `k` distinct indices from `0..n` (uniform without replacement).
+///
+/// Uses partial Fisher–Yates: O(n) memory, O(k) swaps. Panics if `k > n`.
+pub fn sample_without_replacement(rng: &mut Pcg64, n: usize, k: usize) -> Vec<usize> {
+    assert!(k <= n, "cannot sample {k} distinct items from {n}");
+    let mut pool: Vec<usize> = (0..n).collect();
+    for i in 0..k {
+        let j = i + rng.gen_range(n - i);
+        pool.swap(i, j);
+    }
+    pool.truncate(k);
+    pool
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = seeded(7);
+        let mut xs: Vec<usize> = (0..100).collect();
+        shuffle(&mut rng, &mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffle_handles_degenerate_sizes() {
+        let mut rng = seeded(1);
+        let mut empty: [u8; 0] = [];
+        shuffle(&mut rng, &mut empty);
+        let mut one = [42];
+        shuffle(&mut rng, &mut one);
+        assert_eq!(one, [42]);
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct_and_in_range() {
+        let mut rng = seeded(3);
+        for _ in 0..50 {
+            let s = sample_without_replacement(&mut rng, 20, 7);
+            assert_eq!(s.len(), 7);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 7, "indices must be distinct");
+            assert!(s.iter().all(|&i| i < 20));
+        }
+    }
+
+    #[test]
+    fn sample_full_is_permutation() {
+        let mut rng = seeded(9);
+        let mut s = sample_without_replacement(&mut rng, 10, 10);
+        s.sort_unstable();
+        assert_eq!(s, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn sample_more_than_n_panics() {
+        let mut rng = seeded(0);
+        let _ = sample_without_replacement(&mut rng, 3, 4);
+    }
+}

@@ -1,0 +1,145 @@
+//! PCG64 (PCG-XSL-RR 128/64) pseudo-random generator.
+//!
+//! Reference: O'Neill, "PCG: A Family of Simple Fast Space-Efficient
+//! Statistically Good Algorithms for Random Number Generation" (2014).
+//! 128-bit LCG state with an XSL-RR output permutation; period 2^128.
+
+/// Default LCG multiplier for the 128-bit PCG family.
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+/// A deterministic, seedable PRNG. Not cryptographic.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream constant fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e_39cb_94b9_5bdb)
+    }
+
+    /// Create a generator with an explicit stream selector; distinct
+    /// streams from the same seed are statistically independent.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut g = Pcg64 { state: 0, inc };
+        g.state = g.state.wrapping_mul(PCG_MULT).wrapping_add(g.inc);
+        g.state = g.state.wrapping_add(seed as u128);
+        g.state = g.state.wrapping_mul(PCG_MULT).wrapping_add(g.inc);
+        g
+    }
+
+    /// Next 64 uniformly random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `0..bound` (Lemire-style rejection, unbiased).
+    #[inline]
+    pub fn gen_range(&mut self, bound: usize) -> usize {
+        assert!(bound > 0, "gen_range bound must be positive");
+        let bound = bound as u64;
+        // Rejection sampling over the top bits to avoid modulo bias.
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return (v % bound) as usize;
+            }
+        }
+    }
+
+    /// Bernoulli(p).
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.next_f64() < p
+    }
+
+    /// Fork a child generator; children with different `stream_id`s are
+    /// independent of the parent and of each other. Used to hand each
+    /// simulated worker its own RNG.
+    pub fn fork(&mut self, stream_id: u64) -> Pcg64 {
+        Pcg64::with_stream(self.next_u64() ^ stream_id.wrapping_mul(0x9e37_79b9_7f4a_7c15), stream_id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut g = Pcg64::new(5);
+        for _ in 0..10_000 {
+            let x = g.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn f64_mean_is_near_half() {
+        let mut g = Pcg64::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| g.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_range_unbiased_over_small_bound() {
+        let mut g = Pcg64::new(13);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[g.gen_range(7)] += 1;
+        }
+        for &c in &counts {
+            let expected = n as f64 / 7.0;
+            assert!((c as f64 - expected).abs() < expected * 0.1, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn forked_streams_are_independent() {
+        let mut parent = Pcg64::new(99);
+        let mut a = parent.fork(1);
+        let mut b = parent.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn gen_bool_extremes() {
+        let mut g = Pcg64::new(21);
+        assert!((0..100).all(|_| !g.gen_bool(0.0)));
+        assert!((0..100).all(|_| g.gen_bool(1.0)));
+    }
+}

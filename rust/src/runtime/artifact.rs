@@ -1,0 +1,137 @@
+//! Artifact manifest: the index of AOT-compiled HLO modules produced by
+//! `python/compile/aot.py` (`artifacts/manifest.toml`).
+
+use crate::config::TomlDoc;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    /// Section name (unique id).
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: String,
+    /// Kind tag, e.g. "quad_grad" / "logistic_grad".
+    pub kind: String,
+    /// Shard shape this module was lowered for.
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Parsed manifest + artifacts directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactIndex {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+impl ArtifactIndex {
+    /// Load `<dir>/manifest.toml`. Missing manifest → empty index (the
+    /// framework falls back to native kernels).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.toml");
+        if !path.exists() {
+            return Ok(ArtifactIndex { dir: dir.to_path_buf(), artifacts: Vec::new() });
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (each `[section]` is one artifact).
+    pub fn parse(dir: &Path, text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut artifacts = Vec::new();
+        for name in doc.sections() {
+            let file = doc
+                .get_str(&name, "file")
+                .with_context(|| format!("artifact [{name}] missing 'file'"))?
+                .to_string();
+            let kind = doc
+                .get_str(&name, "kind")
+                .with_context(|| format!("artifact [{name}] missing 'kind'"))?
+                .to_string();
+            let rows = doc.get_i64(&name, "rows").unwrap_or(0) as usize;
+            let cols = doc.get_i64(&name, "cols").unwrap_or(0) as usize;
+            artifacts.push(ArtifactMeta { name: name.clone(), file, kind, rows, cols });
+        }
+        Ok(ArtifactIndex { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Default location: `$CODED_OPT_ARTIFACTS` or `./artifacts`.
+    pub fn default_location() -> Result<Self> {
+        let dir = std::env::var("CODED_OPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::load(Path::new(&dir))
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    /// Exact-shape lookup by kind.
+    pub fn find(&self, kind: &str, rows: usize, cols: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.rows == rows && a.cols == cols)
+    }
+
+    /// All artifacts of a kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[quad_grad_128x64]
+file = "quad_grad_128x64.hlo.txt"
+kind = "quad_grad"
+rows = 128
+cols = 64
+
+[quad_grad_64x32]
+file = "quad_grad_64x32.hlo.txt"
+kind = "quad_grad"
+rows = 64
+cols = 32
+"#;
+
+    #[test]
+    fn parse_and_find() {
+        let idx = ArtifactIndex::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(idx.len(), 2);
+        let a = idx.find("quad_grad", 128, 64).unwrap();
+        assert_eq!(a.file, "quad_grad_128x64.hlo.txt");
+        assert!(idx.find("quad_grad", 128, 65).is_none());
+        assert!(idx.find("other", 128, 64).is_none());
+        assert_eq!(idx.by_kind("quad_grad").len(), 2);
+    }
+
+    #[test]
+    fn missing_manifest_is_empty_index() {
+        let idx = ArtifactIndex::load(Path::new("/definitely/not/here")).unwrap();
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn missing_required_key_errors() {
+        let bad = "[a]\nkind = \"quad_grad\"\n";
+        assert!(ArtifactIndex::parse(Path::new("/tmp"), bad).is_err());
+    }
+}

@@ -1,0 +1,216 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` once at build time,
+//! lowering the L2 JAX functions (which call the L1 Pallas kernels) to
+//! **HLO text** under `artifacts/`, plus a `manifest.toml` index. This
+//! module loads the manifest, compiles each module on a PJRT CPU client
+//! (`xla` crate), and serves executions from the worker hot path — Python
+//! is never on the request path.
+//!
+//! Threading: `xla::PjRtClient` is `Rc`-based (not `Send`), so executors
+//! are created *lazily inside the thread that first uses them* (see
+//! [`GradExecutor`]): a worker is constructed with a [`GradSpec`]
+//! (plain data, trivially `Send`) and compiles on first call. The
+//! single-threaded [`crate::cluster::SimCluster`] path shares one client
+//! per thread via a thread-local.
+
+pub mod artifact;
+
+pub use artifact::{ArtifactIndex, ArtifactMeta};
+
+use crate::linalg::Mat;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+thread_local! {
+    /// One PJRT CPU client per thread (clients are Rc-based).
+    static CLIENT: RefCell<Option<Rc<xla::PjRtClient>>> = const { RefCell::new(None) };
+    /// Per-thread cache of compiled executables keyed by artifact path.
+    static EXE_CACHE: RefCell<std::collections::BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>> =
+        const { RefCell::new(std::collections::BTreeMap::new()) };
+}
+
+/// Get (or create) this thread's PJRT CPU client.
+pub fn thread_client() -> Result<Rc<xla::PjRtClient>> {
+    CLIENT.with(|c| {
+        let mut c = c.borrow_mut();
+        if c.is_none() {
+            *c = Some(Rc::new(xla::PjRtClient::cpu()?));
+        }
+        Ok(Rc::clone(c.as_ref().unwrap()))
+    })
+}
+
+/// Compile an HLO-text artifact on this thread's client (cached).
+pub fn compile_artifact(path: &Path) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    let key = path.to_string_lossy().to_string();
+    let cached = EXE_CACHE.with(|m| m.borrow().get(&key).cloned());
+    if let Some(exe) = cached {
+        return Ok(exe);
+    }
+    let client = thread_client()?;
+    let proto = xla::HloModuleProto::from_text_file(&key)
+        .with_context(|| format!("parsing HLO text {key}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = Rc::new(client.compile(&comp).with_context(|| format!("compiling {key}"))?);
+    EXE_CACHE.with(|m| m.borrow_mut().insert(key, Rc::clone(&exe)));
+    Ok(exe)
+}
+
+/// Plain-data description of a gradient executor: which artifact to run
+/// and the worker's shard, in f32. `Send`-safe by construction.
+#[derive(Clone, Debug)]
+pub struct GradSpec {
+    /// HLO text file for the `quad_grad` artifact with matching shape.
+    pub hlo_path: PathBuf,
+    /// Shard dimensions (encoded rows × model dim).
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major S̄·X in f32.
+    pub sx: Vec<f32>,
+    /// S̄·y in f32.
+    pub sy: Vec<f32>,
+}
+
+enum ExecState {
+    /// Not yet compiled on this thread.
+    Spec,
+    /// Compiled; device buffers for (sx, sy) pre-uploaded.
+    Ready {
+        exe: Rc<xla::PjRtLoadedExecutable>,
+        sx_buf: xla::PjRtBuffer,
+        sy_buf: xla::PjRtBuffer,
+    },
+    /// Compilation failed; native fallback forever.
+    Failed,
+}
+
+/// Executes the AOT `quad_grad` artifact:
+/// `r = S̄Xᵀ(S̄X·w − S̄y)` with `(S̄X, S̄y)` resident on device.
+pub struct GradExecutor {
+    spec: GradSpec,
+    state: ExecState,
+    /// Number of successful PJRT executions (metrics / tests).
+    pub calls: usize,
+}
+
+// SAFETY: `GradExecutor` is only `Send` in its `Spec`/`Failed` states,
+// which hold plain data. The `Ready` state (holding Rc'd PJRT objects) is
+// entered lazily inside `gradient()` and the executor is never moved
+// across threads afterwards: `cluster::threads` moves workers exactly
+// once, at spawn, before any task runs.
+unsafe impl Send for GradExecutor {}
+
+impl GradExecutor {
+    pub fn new(spec: GradSpec) -> Self {
+        GradExecutor { spec, state: ExecState::Spec, calls: 0 }
+    }
+
+    /// Build a spec from a shard if the index has a matching artifact.
+    pub fn from_index(index: &ArtifactIndex, sx: &Mat, sy: &[f64]) -> Option<Self> {
+        let meta = index.find("quad_grad", sx.rows(), sx.cols())?;
+        Some(GradExecutor::new(GradSpec {
+            hlo_path: index.dir().join(&meta.file),
+            rows: sx.rows(),
+            cols: sx.cols(),
+            sx: sx.as_slice().iter().map(|&v| v as f32).collect(),
+            sy: sy.iter().map(|&v| v as f32).collect(),
+        }))
+    }
+
+    fn ensure_ready(&mut self) -> Result<()> {
+        if matches!(self.state, ExecState::Ready { .. }) {
+            return Ok(());
+        }
+        if matches!(self.state, ExecState::Failed) {
+            return Err(anyhow!("PJRT compilation previously failed"));
+        }
+        let built = (|| -> Result<ExecState> {
+            let exe = compile_artifact(&self.spec.hlo_path)?;
+            let client = thread_client()?;
+            let sx_buf = client.buffer_from_host_buffer::<f32>(
+                &self.spec.sx,
+                &[self.spec.rows, self.spec.cols],
+                None,
+            )?;
+            let sy_buf =
+                client.buffer_from_host_buffer::<f32>(&self.spec.sy, &[self.spec.rows], None)?;
+            Ok(ExecState::Ready { exe, sx_buf, sy_buf })
+        })();
+        match built {
+            Ok(state) => {
+                self.state = state;
+                Ok(())
+            }
+            Err(e) => {
+                self.state = ExecState::Failed;
+                Err(e)
+            }
+        }
+    }
+
+    /// Expected model dimension.
+    pub fn dim(&self) -> usize {
+        self.spec.cols
+    }
+
+    /// Run the artifact: returns `r = S̄Xᵀ(S̄X·w − S̄y)` as f64.
+    pub fn gradient(&mut self, w: &[f64]) -> Result<Vec<f64>> {
+        if w.len() != self.spec.cols {
+            return Err(anyhow!("shape mismatch: w has {} != {}", w.len(), self.spec.cols));
+        }
+        self.ensure_ready()?;
+        let ExecState::Ready { exe, sx_buf, sy_buf } = &self.state else {
+            unreachable!("ensure_ready succeeded");
+        };
+        let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
+        let client = thread_client()?;
+        let w_buf = client.buffer_from_host_buffer::<f32>(&w32, &[w32.len()], None)?;
+        let result = exe.execute_b(&[sx_buf, sy_buf, &w_buf])?;
+        let lit = result[0][0].to_literal_sync()?;
+        let out = lit.to_tuple1()?;
+        let vals: Vec<f32> = out.to_vec()?;
+        self.calls += 1;
+        Ok(vals.into_iter().map(|v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT execution against real artifacts is covered by
+    // rust/tests/pjrt_integration.rs (needs `make artifacts` first).
+    // Here: spec plumbing only.
+
+    #[test]
+    fn spec_shape_mismatch_is_error_without_compiling() {
+        let spec = GradSpec {
+            hlo_path: PathBuf::from("/nonexistent.hlo.txt"),
+            rows: 4,
+            cols: 3,
+            sx: vec![0.0; 12],
+            sy: vec![0.0; 4],
+        };
+        let mut exec = GradExecutor::new(spec);
+        // wrong w length fails fast before touching PJRT
+        assert!(exec.gradient(&[0.0; 5]).is_err());
+        assert_eq!(exec.calls, 0);
+    }
+
+    #[test]
+    fn missing_artifact_fails_then_stays_failed() {
+        let spec = GradSpec {
+            hlo_path: PathBuf::from("/nonexistent.hlo.txt"),
+            rows: 2,
+            cols: 2,
+            sx: vec![0.0; 4],
+            sy: vec![0.0; 2],
+        };
+        let mut exec = GradExecutor::new(spec);
+        assert!(exec.gradient(&[0.0; 2]).is_err());
+        assert!(exec.gradient(&[0.0; 2]).is_err()); // Failed state persists
+    }
+}

@@ -1,0 +1,27 @@
+//! Test utilities, including a miniature property-testing framework.
+//!
+//! The offline environment has no `proptest` crate, so [`prop`] provides
+//! the subset we need: seeded value generators, a `run` driver that
+//! executes a property over many random cases, and greedy shrinking for
+//! failures so that counterexamples are small and readable.
+
+pub mod prop;
+
+pub use prop::{Gen, PropError, PropRunner};
+
+/// Assert two f64 slices are elementwise close.
+pub fn assert_allclose(a: &[f64], b: &[f64], atol: f64, ctx: &str) {
+    assert_eq!(a.len(), b.len(), "{ctx}: length mismatch {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= atol + 1e-9 * y.abs().max(x.abs()),
+            "{ctx}: index {i}: {x} vs {y} (atol={atol})"
+        );
+    }
+}
+
+/// Relative error ‖a−b‖/max(‖b‖, eps).
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    let diff = crate::linalg::sub(a, b);
+    crate::linalg::norm2(&diff) / crate::linalg::norm2(b).max(1e-12)
+}

@@ -1,0 +1,201 @@
+//! Mini property-testing framework (offline `proptest` stand-in).
+//!
+//! Usage (`no_run`: doctest binaries don't inherit the xla rpath
+//! rustflags; the same pattern is exercised by unit tests below):
+//! ```no_run
+//! use coded_opt::testutil::{Gen, PropRunner};
+//! PropRunner::new("k_le_m", 0xC0DE).cases(100).run(
+//!     |g| {
+//!         let m = g.usize_in(1, 64);
+//!         let k = g.usize_in(1, m);
+//!         (m, k)
+//!     },
+//!     |&(m, k)| {
+//!         if k <= m { Ok(()) } else { Err(format!("k={k} > m={m}")) }
+//!     },
+//! );
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Value generator handed to the case-builder closure.
+pub struct Gen {
+    rng: Pcg64,
+    /// Size budget in [0,1]; shrinking replays with smaller budgets.
+    size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Pcg64::new(seed), size }
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive), scaled down when shrinking.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = hi - lo;
+        let scaled = ((span as f64) * self.size).round() as usize;
+        lo + if scaled == 0 { 0 } else { self.rng.gen_range(scaled + 1) }
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Standard normal.
+    pub fn normal(&mut self) -> f64 {
+        crate::rng::Normal::sample_standard(&mut self.rng)
+    }
+
+    /// Vec of f64 in [lo, hi) with length in [min_len, max_len].
+    pub fn vec_f64(&mut self, min_len: usize, max_len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Bernoulli(p).
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Random subset of {0..n} of exactly size k.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        crate::rng::sample_without_replacement(&mut self.rng, n, k)
+    }
+
+    /// Access the raw RNG for bespoke generation.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Failure report from a property run.
+#[derive(Debug)]
+pub struct PropError {
+    pub property: String,
+    pub seed: u64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property '{}' failed (replay seed {:#x}): {}",
+            self.property, self.seed, self.message
+        )
+    }
+}
+
+/// Drives a property over many seeded cases with greedy size-shrinking.
+pub struct PropRunner {
+    name: String,
+    seed: u64,
+    cases: usize,
+}
+
+impl PropRunner {
+    pub fn new(name: &str, seed: u64) -> Self {
+        PropRunner { name: name.to_string(), seed, cases: 64 }
+    }
+
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Run `property` over `cases` inputs built by `build`. On failure,
+    /// retries the same case seed at smaller generator sizes to find a
+    /// smaller counterexample, then panics with the report.
+    pub fn run<T: std::fmt::Debug>(
+        &self,
+        mut build: impl FnMut(&mut Gen) -> T,
+        mut property: impl FnMut(&T) -> Result<(), String>,
+    ) {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let mut gen = Gen::new(case_seed, 1.0);
+            let value = build(&mut gen);
+            if let Err(msg) = property(&value) {
+                // Greedy shrink: replay the same seed with smaller budgets.
+                let mut best: (f64, String, String) = (1.0, msg, format!("{value:?}"));
+                for &size in &[0.5, 0.25, 0.1, 0.05, 0.01] {
+                    let mut g = Gen::new(case_seed, size);
+                    let v = build(&mut g);
+                    if let Err(m) = property(&v) {
+                        best = (size, m, format!("{v:?}"));
+                    }
+                }
+                let err = PropError {
+                    property: self.name.clone(),
+                    seed: case_seed,
+                    message: format!(
+                        "{} [shrunk size={}] counterexample: {}",
+                        best.1, best.0, best.2
+                    ),
+                };
+                panic!("{err}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        PropRunner::new("sum_commutes", 1).cases(50).run(
+            |g| (g.f64_in(-10.0, 10.0), g.f64_in(-10.0, 10.0)),
+            |&(a, b)| {
+                if (a + b - (b + a)).abs() < 1e-15 {
+                    Ok(())
+                } else {
+                    Err("non-commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "always_fails")]
+    fn failing_property_panics_with_name() {
+        PropRunner::new("always_fails", 2).cases(3).run(
+            |g| g.usize_in(0, 100),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn subset_has_exact_size() {
+        PropRunner::new("subset_size", 3).cases(50).run(
+            |g| {
+                let n = g.usize_in(1, 40);
+                let k = g.usize_in(0, n);
+                (n, k, g.subset(n, k))
+            },
+            |(n, k, s)| {
+                if s.len() != *k {
+                    return Err(format!("len {} != k {k}", s.len()));
+                }
+                if s.iter().any(|&i| i >= *n) {
+                    return Err("out of range".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_reduces_size() {
+        // Property that fails for vectors longer than 3; the shrunk
+        // counterexample reported should be small. We can't easily capture
+        // the panic message here, so just verify the mechanism doesn't
+        // crash on a passing run with small budgets.
+        let mut g = Gen::new(42, 0.01);
+        let v = g.vec_f64(0, 1000, 0.0, 1.0);
+        assert!(v.len() <= 10);
+    }
+}

@@ -1,0 +1,157 @@
+//! Ablations over the design choices DESIGN.md calls out: redundancy β,
+//! wait-fraction η, adaptive-k scheduling, and the two encoding
+//! randomizations (row permutation, column signs).
+
+use coded_opt::cluster::{Gather, SimCluster, Task};
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::schedule::AdaptiveOverlapK;
+use coded_opt::coordinator::{build_data_parallel, run_gd, GdConfig, KIND_GRADIENT};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::delay::{AdversarialDelay, MixtureDelay};
+use coded_opt::encoding::Encoding;
+use coded_opt::linalg::symmetric_eigenvalues;
+use coded_opt::objectives::{QuadObjective, RidgeProblem};
+
+/// β ablation: larger redundancy tightens the subset spectra (smaller
+/// ε) monotonically in the operating range.
+#[test]
+fn ablation_beta_tightens_spectrum() {
+    let n = 48;
+    let m = 8;
+    let k = 6;
+    let mut eps = Vec::new();
+    for beta in [1.5f64, 2.0, 3.0] {
+        let enc = Encoding::build(Scheme::Gaussian, n, m, beta, 11).unwrap();
+        let mut an = coded_opt::encoding::SubsetSpectrum::new(&enc, 5);
+        let stats = an.analyze(k, 10);
+        eps.push(stats.epsilon());
+    }
+    // monotone-ish tightening, and a solid overall improvement. (At these
+    // small n the Gaussian MP band keeps ε above 1 — ETFs, not raw ε<1,
+    // are what the theory uses; here we ablate the TREND in β.)
+    assert!(eps[1] < eps[0] + 0.05 && eps[2] < eps[1] + 0.05, "not monotone: {eps:?}");
+    assert!(eps[2] < 0.75 * eps[0], "β=3 should tighten ε vs β=1.5: {eps:?}");
+}
+
+/// η ablation: final GD suboptimality under a fixed adversary decreases
+/// as the master waits for more workers.
+#[test]
+fn ablation_eta_improves_approximation() {
+    let (x, y, _) = gaussian_linear(96, 12, 0.3, 3);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let f_star = prob.objective(&prob.solve_exact());
+    let step = 1.0 / prob.smoothness();
+    let mut subopts = Vec::new();
+    for k in [4usize, 6, 8] {
+        let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 3).unwrap();
+        let asm = dp.assembler.clone();
+        // rotating adversary so every k sees erasures
+        let delay = AdversarialDelay::rotating(8, 0.25, 1e6);
+        let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
+        let cfg = GdConfig { k, step, iters: 250, lambda: 0.05, w0: None };
+        let out = run_gd(&mut cluster, &asm, &cfg, "eta", &|w| (prob.objective(w), 0.0));
+        subopts.push((out.trace.final_objective() - f_star) / f_star);
+    }
+    assert!(
+        subopts[2] <= subopts[0] + 1e-9,
+        "k=8 subopt {} should beat k=4 {}",
+        subopts[2],
+        subopts[0]
+    );
+}
+
+/// Adaptive-k (paper §3.3): under bimodal delays, the adaptive overlap
+/// policy picks k ≥ the fixed overlap target and keeps the L-BFGS
+/// curvature overlap ≥ m/β in (almost) every round.
+#[test]
+fn ablation_adaptive_k_maintains_overlap() {
+    let m = 16;
+    let beta = 2.0;
+    let policy = AdaptiveOverlapK::new(m, beta, 4);
+    let (x, y, _) = gaussian_linear(128, 8, 0.3, 5);
+    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, m, beta, 5).unwrap();
+    let mut cluster = SimCluster::new(
+        dp.workers,
+        Box::new(MixtureDelay::paper_bimodal(m, 7)),
+    );
+    let w = vec![0.0; 8];
+    // probe with full gathers to see complete arrival orders, then ask
+    // the policy what k it WOULD have chosen, and verify overlap.
+    let mut prev_active: Vec<usize> = (0..m).collect();
+    let mut satisfied = 0;
+    let rounds = 20;
+    for t in 0..rounds {
+        let rr = cluster.round(m, &mut |_| Task {
+            iter: t,
+            kind: KIND_GRADIENT,
+            payload: w.clone(),
+            aux: vec![],
+        });
+        let order = rr.arrival_order();
+        let k = policy.pick_k(&order, &prev_active);
+        let chosen: std::collections::BTreeSet<usize> = order[..k].iter().copied().collect();
+        let overlap = prev_active.iter().filter(|i| chosen.contains(i)).count();
+        if overlap * 2 > m || k == m {
+            satisfied += 1; // overlap > m/β = m/2, or policy hit its cap
+        }
+        prev_active = order[..k].to_vec();
+    }
+    assert!(
+        satisfied >= rounds - 1,
+        "adaptive policy kept the overlap condition in only {satisfied}/{rounds} rounds"
+    );
+}
+
+/// Randomization ablation: the row permutation + column signs are what
+/// keep block-subsampled structured frames full-rank. Verify the
+/// *shipped* constructions never collapse where naive ones could: the
+/// minimum eigenvalue over all leave-two-out subsets stays positive for
+/// Hadamard at β=2, η=0.75.
+#[test]
+fn ablation_randomization_prevents_rank_collapse() {
+    let n = 32;
+    let m = 8;
+    let enc = Encoding::build(Scheme::Hadamard, n, m, 2.0, 13).unwrap();
+    // all C(8,2)=28 leave-two-out subsets — exhaustive worst case
+    let mut worst = f64::INFINITY;
+    for a in 0..m {
+        for b in a + 1..m {
+            let subset: Vec<usize> = (0..m).filter(|&i| i != a && i != b).collect();
+            let g = enc.gram_normalized(&subset);
+            let eigs = symmetric_eigenvalues(&g);
+            worst = worst.min(eigs[0]);
+        }
+    }
+    assert!(worst > 1e-3, "leave-two-out λmin = {worst}");
+}
+
+/// Encoding-vs-sketching sanity (paper §1 related work): encoding keeps
+/// the FULL optimum when all respond, unlike a k/m row-sketch which
+/// only approximates it. (Ablation of "why lift dimensions up instead
+/// of down".)
+#[test]
+fn ablation_encoding_beats_sketching_at_equal_compute() {
+    let (x, y, _) = gaussian_linear(96, 12, 0.5, 9);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let f_star = prob.objective(&prob.solve_exact());
+    // encoded, k=6 of 8 (compute ≈ 2·(6/8) = 1.5× data passes)
+    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 9).unwrap();
+    let asm = dp.assembler.clone();
+    let delay = AdversarialDelay::new(8, vec![0, 5], 1e6);
+    let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
+    let step = 1.0 / prob.smoothness();
+    let cfg = GdConfig { k: 6, step, iters: 300, lambda: 0.05, w0: None };
+    let out = run_gd(&mut cluster, &asm, &cfg, "enc", &|w| (prob.objective(w), 0.0));
+    let encoded_sub = (out.trace.final_objective() - f_star) / f_star;
+    // sketch: solve on a fixed 60% row subsample exactly
+    let keep = 58; // ≈ 0.6·96
+    let xs = x.row_block(0, keep);
+    let ys = y[..keep].to_vec();
+    let sketch = RidgeProblem::new(xs, ys, 0.05);
+    let w_sketch = sketch.solve_exact();
+    let sketch_sub = (prob.objective(&w_sketch) - f_star) / f_star;
+    assert!(
+        encoded_sub < sketch_sub,
+        "encoded {encoded_sub} should beat sketch {sketch_sub}"
+    );
+}

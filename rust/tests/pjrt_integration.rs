@@ -1,0 +1,148 @@
+//! Integration: rust PJRT runtime × AOT JAX/Pallas artifacts.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise). Verifies the
+//! full L3→L2→L1 bridge: HLO text written by `python/compile/aot.py` is
+//! loaded, compiled on the PJRT CPU client, executed with device-resident
+//! shard buffers, and its numerics match the rust-native kernel.
+
+use coded_opt::cluster::{SimCluster, Task, WorkerNode};
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::{QuadWorker, KIND_GRADIENT};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::delay::NoDelay;
+use coded_opt::linalg::Mat;
+use coded_opt::rng::Pcg64;
+use coded_opt::runtime::{ArtifactIndex, GradExecutor};
+use std::path::Path;
+
+fn artifacts() -> Option<ArtifactIndex> {
+    let dir = std::env::var("CODED_OPT_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let idx = ArtifactIndex::load(Path::new(&dir)).expect("manifest parse");
+    if idx.is_empty() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        None
+    } else {
+        Some(idx)
+    }
+}
+
+fn random_shard(rows: usize, cols: usize, seed: u64) -> (Mat, Vec<f64>) {
+    let mut rng = Pcg64::new(seed);
+    let sx = Mat::from_fn(rows, cols, |_, _| rng.next_f64() - 0.5);
+    let sy: Vec<f64> = (0..rows).map(|_| rng.next_f64() - 0.5).collect();
+    (sx, sy)
+}
+
+fn native_grad(sx: &Mat, sy: &[f64], w: &[f64]) -> Vec<f64> {
+    let mut resid = sx.matvec(w);
+    for (r, y) in resid.iter_mut().zip(sy) {
+        *r -= y;
+    }
+    sx.matvec_t(&resid)
+}
+
+#[test]
+fn pallas_artifact_matches_native_kernel() {
+    let Some(idx) = artifacts() else { return };
+    for &(rows, cols) in &[(64usize, 32usize), (128, 64), (256, 128)] {
+        let (sx, sy) = random_shard(rows, cols, 42 + rows as u64);
+        let mut exec = GradExecutor::from_index(&idx, &sx, &sy)
+            .unwrap_or_else(|| panic!("no artifact for {rows}x{cols}"));
+        let mut rng = Pcg64::new(7);
+        for trial in 0..3 {
+            let w: Vec<f64> = (0..cols).map(|_| rng.next_f64() - 0.5).collect();
+            let got = exec.gradient(&w).expect("pjrt exec");
+            let want = native_grad(&sx, &sy, &w);
+            let err = coded_opt::testutil::rel_err(&got, &want);
+            assert!(err < 1e-4, "{rows}x{cols} trial {trial}: rel err {err}");
+        }
+        assert_eq!(exec.calls, 3);
+    }
+}
+
+#[test]
+fn pallas_and_jnp_artifacts_agree() {
+    let Some(idx) = artifacts() else { return };
+    let Some(meta) = idx.find("quad_grad_jnp", 64, 32) else {
+        eprintln!("SKIP: no jnp cross-check artifact");
+        return;
+    };
+    let (sx, sy) = random_shard(64, 32, 11);
+    // pallas path
+    let mut pallas = GradExecutor::from_index(&idx, &sx, &sy).unwrap();
+    // jnp path: same spec, different HLO file
+    let mut jnp = GradExecutor::new(coded_opt::runtime::GradSpec {
+        hlo_path: idx.dir().join(&meta.file),
+        rows: 64,
+        cols: 32,
+        sx: sx.as_slice().iter().map(|&v| v as f32).collect(),
+        sy: sy.iter().map(|&v| v as f32).collect(),
+    });
+    let w: Vec<f64> = (0..32).map(|i| (i as f64 * 0.37).sin()).collect();
+    let a = pallas.gradient(&w).unwrap();
+    let b = jnp.gradient(&w).unwrap();
+    let err = coded_opt::testutil::rel_err(&a, &b);
+    assert!(err < 1e-5, "pallas vs jnp rel err {err}");
+}
+
+#[test]
+fn shape_mismatch_falls_back_cleanly() {
+    let Some(idx) = artifacts() else { return };
+    // 65 rows: no artifact → from_index returns None, worker uses native.
+    let (sx, sy) = random_shard(65, 32, 13);
+    assert!(GradExecutor::from_index(&idx, &sx, &sy).is_none());
+}
+
+#[test]
+fn quadworker_hot_path_runs_on_pjrt() {
+    let Some(idx) = artifacts() else { return };
+    let (sx, sy) = random_shard(64, 32, 17);
+    let mut worker = QuadWorker::new(sx.clone(), sy.clone());
+    worker.pjrt = GradExecutor::from_index(&idx, &sx, &sy);
+    assert!(worker.pjrt.is_some());
+    let w: Vec<f64> = (0..32).map(|i| 0.01 * i as f64).collect();
+    let task = Task { iter: 0, kind: KIND_GRADIENT, payload: w.clone(), aux: vec![] };
+    let got = worker.process(&task);
+    let want = native_grad(&sx, &sy, &w);
+    let err = coded_opt::testutil::rel_err(&got, &want);
+    assert!(err < 1e-4, "rel err {err}");
+    assert_eq!(worker.pjrt.as_ref().unwrap().calls, 1, "must have used PJRT");
+}
+
+#[test]
+fn encoded_gd_through_pjrt_converges() {
+    // Full stack: encoded data-parallel GD where every worker executes
+    // the AOT Pallas artifact for its gradient.
+    let Some(idx) = artifacts() else { return };
+    let m = 4;
+    let (x, y, _) = gaussian_linear(128, 32, 0.2, 23);
+    // β=2 → 256 encoded rows → 64×32 shards: matches quad_grad_64x32.
+    let dp = coded_opt::coordinator::build_data_parallel_with_runtime(
+        &x,
+        &y,
+        Scheme::Hadamard,
+        m,
+        2.0,
+        23,
+        Some(&idx),
+    )
+    .unwrap();
+    assert_eq!(dp.pjrt_attached, m, "all shards must match an artifact");
+    let asm = dp.assembler.clone();
+    let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(m)));
+    let prob = coded_opt::objectives::RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    use coded_opt::objectives::QuadObjective;
+    let f_star = prob.objective(&prob.solve_exact());
+    let cfg = coded_opt::coordinator::GdConfig {
+        k: m,
+        step: 1.0 / prob.smoothness(),
+        iters: 200,
+        lambda: 0.05,
+        w0: None,
+    };
+    let out = coded_opt::coordinator::run_gd(&mut cluster, &asm, &cfg, "pjrt-gd", &|w| {
+        (prob.objective(w), 0.0)
+    });
+    let sub = (out.trace.final_objective() - f_star) / f_star;
+    assert!(sub < 1e-5, "subopt {sub}");
+}

@@ -1,0 +1,286 @@
+//! Property-based invariants over the coordinator substrate (the
+//! mini-proptest framework from `coded_opt::testutil`): routing,
+//! batching, gather semantics, assembly, and worker state machines
+//! under randomized inputs.
+
+use coded_opt::cluster::{Gather, SimCluster, Task, WorkerNode};
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::bcd::BcdWorker;
+use coded_opt::coordinator::{build_data_parallel, GradAssembler, KIND_BCD_STEP, KIND_GRADIENT};
+use coded_opt::delay::TraceDelay;
+use coded_opt::encoding::{Encoding, ReplicationMap};
+use coded_opt::linalg::Mat;
+use coded_opt::testutil::PropRunner;
+
+struct Echo(usize);
+impl WorkerNode for Echo {
+    fn process(&mut self, task: &Task) -> Vec<f64> {
+        vec![self.0 as f64, task.iter as f64]
+    }
+}
+
+/// Gather invariant: for any m, k, delay pattern — exactly k responses,
+/// A_t ⊎ interrupted = [m], arrivals non-decreasing, elapsed = k-th
+/// arrival.
+#[test]
+fn prop_gather_partitions_workers() {
+    PropRunner::new("gather_partitions", 0xA11).cases(60).run(
+        |g| {
+            let m = g.usize_in(1, 24);
+            let k = g.usize_in(1, m);
+            let rounds = g.usize_in(1, 5);
+            let delays: Vec<Vec<f64>> = (0..rounds.max(1))
+                .map(|_| (0..m).map(|_| g.f64_in(0.0, 10.0)).collect())
+                .collect();
+            (m, k, rounds, delays)
+        },
+        |(m, k, rounds, delays)| {
+            let workers: Vec<Box<dyn WorkerNode>> =
+                (0..*m).map(|i| Box::new(Echo(i)) as Box<dyn WorkerNode>).collect();
+            let delay = TraceDelay::new(delays.clone());
+            let mut cluster = SimCluster::new(workers, Box::new(delay));
+            for t in 0..*rounds {
+                let rr = cluster.round(*k, &mut |_| Task {
+                    iter: t,
+                    kind: KIND_GRADIENT,
+                    payload: vec![],
+                    aux: vec![],
+                });
+                if rr.responses.len() != *k {
+                    return Err(format!("got {} responses, wanted {k}", rr.responses.len()));
+                }
+                let mut all = rr.active_set();
+                all.extend(rr.interrupted.iter());
+                all.sort_unstable();
+                if all != (0..*m).collect::<Vec<_>>() {
+                    return Err("A_t ⊎ A_tᶜ ≠ [m]".into());
+                }
+                for pair in rr.responses.windows(2) {
+                    if pair[1].arrival < pair[0].arrival {
+                        return Err("arrivals out of order".into());
+                    }
+                }
+                let last = rr.responses.last().unwrap().arrival;
+                if (rr.elapsed - last).abs() > 1e-12 {
+                    return Err("elapsed != k-th arrival".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Assembly invariant: with k = m (full gather) on any tight-frame
+/// scheme, the assembled gradient equals the exact (1/n)Xᵀ(Xw−y),
+/// regardless of response ARRIVAL ORDER.
+#[test]
+fn prop_full_gather_assembly_order_invariant() {
+    PropRunner::new("assembly_exact", 0xA12).cases(25).run(
+        |g| {
+            let n = 8 * g.usize_in(2, 6);
+            let p = g.usize_in(2, 8);
+            let m = [2usize, 4, 8][g.usize_in(0, 2)];
+            let scheme = [Scheme::Hadamard, Scheme::Haar, Scheme::Uncoded][g.usize_in(0, 2)];
+            let seed = g.usize_in(0, 1_000_000) as u64;
+            let w: Vec<f64> = (0..p).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            // random per-worker delays → random arrival order
+            let delays: Vec<f64> = (0..m).map(|_| g.f64_in(0.0, 5.0)).collect();
+            (n, p, m, scheme, seed, w, delays)
+        },
+        |(n, p, m, scheme, seed, w, delays)| {
+            let (x, y, _) = coded_opt::data::synth::gaussian_linear(*n, *p, 0.3, *seed);
+            let dp = build_data_parallel(&x, &y, *scheme, *m, 2.0, *seed).unwrap();
+            let asm = dp.assembler.clone();
+            let delay = TraceDelay::new(vec![delays.clone()]);
+            let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
+            let rr = cluster.round(*m, &mut |_| Task {
+                iter: 0,
+                kind: KIND_GRADIENT,
+                payload: w.clone(),
+                aux: vec![],
+            });
+            let g_est = asm.assemble(&rr.responses);
+            let resid = coded_opt::linalg::sub(&x.matvec(w), &y);
+            let mut g_exact = x.matvec_t(&resid);
+            coded_opt::linalg::scale(1.0 / *n as f64, &mut g_exact);
+            let err = coded_opt::testutil::rel_err(&g_est, &g_exact);
+            if err > 1e-8 {
+                return Err(format!("rel err {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Replication routing invariant: resolve() returns distinct partitions,
+/// each mapped worker actually holds that partition, respects arrival
+/// order, and coverage is monotone in the responder set.
+#[test]
+fn prop_replication_resolve() {
+    PropRunner::new("replication_resolve", 0xA13).cases(80).run(
+        |g| {
+            let r = [1usize, 2, 4][g.usize_in(0, 2)];
+            let parts = g.usize_in(1, 8);
+            let m = r * parts;
+            let k = g.usize_in(1, m);
+            let order = g.subset(m, k);
+            (m, r, order)
+        },
+        |(m, r, order)| {
+            let map = ReplicationMap::new(*m, *r);
+            let resolved = map.resolve(order);
+            let mut seen = std::collections::BTreeSet::new();
+            for &(p, w) in &resolved {
+                if map.partition_of(w) != p {
+                    return Err(format!("worker {w} does not hold partition {p}"));
+                }
+                if !seen.insert(p) {
+                    return Err(format!("partition {p} duplicated"));
+                }
+                if !order.contains(&w) {
+                    return Err(format!("worker {w} never responded"));
+                }
+            }
+            // monotonicity: adding responders can only add partitions
+            let partial = map.coverage(&order[..order.len() / 2]);
+            if partial > resolved.len() {
+                return Err("coverage not monotone".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Encoding invariant: every construction at every feasible size is an
+/// (approximate) tight frame — ‖(1/β)·SᵀS − I‖_F/√n small — and
+/// block shapes tile the full matrix.
+#[test]
+fn prop_encodings_are_tight_frames() {
+    PropRunner::new("tight_frames", 0xA14).cases(30).run(
+        |g| {
+            let scheme = [Scheme::Hadamard, Scheme::Haar, Scheme::Steiner, Scheme::Paley]
+                [g.usize_in(0, 3)];
+            let n = g.usize_in(6, 40);
+            let m = g.usize_in(1, 8);
+            let seed = g.usize_in(0, 1_000_000) as u64;
+            (scheme, n, m, seed)
+        },
+        |(scheme, n, m, seed)| {
+            let enc = Encoding::build(*scheme, *n, *m, 2.0, *seed)
+                .map_err(|e| format!("build failed: {e}"))?;
+            if enc.workers() != *m {
+                return Err("wrong worker count".into());
+            }
+            let rows: usize = enc.blocks.iter().map(|b| b.rows()).sum();
+            if rows != enc.total_rows() {
+                return Err("blocks don't tile".into());
+            }
+            let subset: Vec<usize> = (0..*m).collect();
+            let s = enc.stack(&subset);
+            let mut g_mat = s.gram();
+            g_mat.scale_inplace(1.0 / enc.beta);
+            let nn = enc.n;
+            let mut off = 0.0;
+            for i in 0..nn {
+                for j in 0..nn {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    let d = g_mat[(i, j)] - expect;
+                    off += d * d;
+                }
+            }
+            let fro = (off / nn as f64).sqrt();
+            if fro > 1e-6 {
+                return Err(format!("{scheme:?} n={nn}: ‖G−I‖/√n = {fro}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// BCD worker state machine: under a random accept/reject sequence the
+/// worker's v must equal a reference replay that applies exactly the
+/// accepted pending steps.
+#[test]
+fn prop_bcd_accept_state_machine() {
+    PropRunner::new("bcd_state", 0xA15).cases(40).run(
+        |g| {
+            let b = g.usize_in(1, 5);
+            let rounds = g.usize_in(1, 12);
+            let accept: Vec<bool> = (0..rounds).map(|_| g.bool_with(0.6)).collect();
+            let z: Vec<f64> = (0..3).map(|_| g.f64_in(-1.0, 1.0)).collect();
+            (b, rounds, accept, z)
+        },
+        |(b, rounds, accept, z)| {
+            // A = ones(3, b) so gradients are analytic; φ = identity/1.
+            let a = Mat::from_fn(3, *b, |_, _| 1.0);
+            let mut worker =
+                BcdWorker::new(a.clone(), 0.1, 0.0, Box::new(|u: &[f64]| u.to_vec()));
+            // reference state
+            let mut v_ref = vec![0.0; *b];
+            let mut pending_ref: Option<(usize, Vec<f64>)> = None;
+            let mut last_accept: i64 = -1;
+            for t in 0..*rounds {
+                let task = Task {
+                    iter: t,
+                    kind: KIND_BCD_STEP,
+                    payload: z.clone(),
+                    aux: vec![last_accept as f64],
+                };
+                let out = worker.process(&task);
+                // reference replay
+                if let Some((pr, pd)) = &pending_ref {
+                    if *pr as i64 == last_accept {
+                        for i in 0..*b {
+                            v_ref[i] += pd[i];
+                        }
+                    }
+                }
+                let xw = {
+                    let mut xw = a.matvec(&v_ref);
+                    coded_opt::linalg::axpy(1.0, z, &mut xw);
+                    xw
+                };
+                let grad = a.matvec_t(&xw);
+                pending_ref = Some((t, grad.iter().map(|g| -0.1 * g).collect()));
+                // compare returned v part
+                let v_got = &out[3..];
+                for i in 0..*b {
+                    if (v_got[i] - v_ref[i]).abs() > 1e-12 {
+                        return Err(format!("t={t}: v[{i}] {} vs ref {}", v_got[i], v_ref[i]));
+                    }
+                }
+                // master's accept decision for this round
+                if accept[t] {
+                    last_accept = t as i64;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Config validation invariant: any config the validator accepts has
+/// 1 ≤ k ≤ m and β ≥ 1; any it rejects violates one of them.
+#[test]
+fn prop_config_validation() {
+    PropRunner::new("config_validate", 0xA16).cases(100).run(
+        |g| {
+            let mut cfg = coded_opt::config::ExperimentConfig::default();
+            cfg.workers = g.usize_in(0, 40);
+            cfg.k = g.usize_in(0, 50);
+            cfg.beta = g.f64_in(0.0, 4.0);
+            cfg
+        },
+        |cfg| {
+            let ok = cfg.validate().is_ok();
+            let legal = cfg.workers >= 1 && cfg.k >= 1 && cfg.k <= cfg.workers && cfg.beta >= 1.0;
+            if ok != legal {
+                return Err(format!(
+                    "validate()={ok} but legality={legal} (m={}, k={}, β={})",
+                    cfg.workers, cfg.k, cfg.beta
+                ));
+            }
+            Ok(())
+        },
+    );
+}
