@@ -1,14 +1,15 @@
 //! Figure-14-style LASSO sparsity recovery: F1 score of the recovered
 //! support over (simulated) time, for uncoded k=m, uncoded k<m,
 //! replication, and Steiner-coded k<m under the trimodal delay mixture.
+//! Each variant is one [`Experiment`](coded_opt::driver::Experiment)
+//! running the [`Prox`] solver.
 //!
 //!     cargo run --release --example lasso_sparse_recovery
 
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, run_prox, ProxConfig};
 use coded_opt::data::synth::sparse_recovery;
 use coded_opt::delay::MixtureDelay;
+use coded_opt::driver::{Experiment, Problem, Prox};
 use coded_opt::metrics::f1_support;
 use coded_opt::objectives::LassoProblem;
 
@@ -32,18 +33,21 @@ fn main() -> anyhow::Result<()> {
         ("steiner (k<m)", Scheme::Steiner, k_partial),
     ];
     for (label, scheme, k) in runs {
-        let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 7)?;
-        let asm = dp.assembler.clone();
-        let delay = MixtureDelay::paper_trimodal(m, 23);
-        // delay-dominated regime, as on EC2: per-row compute ≪ stragglers
-        let mut cluster =
-            SimCluster::new(dp.workers, Box::new(delay)).with_timing(2e-4, 1e-3);
-        let w_ref = w_star.clone();
-        let cfg = ProxConfig { k, step, iters: 300, lambda, w0: None };
-        let out = run_prox(&mut cluster, &asm, &cfg, label, &|w| {
-            let (_, _, f1) = f1_support(&w_ref, w, 1e-2);
-            (prob.objective(w), f1)
-        });
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k)
+            .redundancy(2.0)
+            .seed(7)
+            .delay(|m| Box::new(MixtureDelay::paper_trimodal(m, 23)))
+            // delay-dominated regime, as on EC2: per-row compute ≪ stragglers
+            .timing(2e-4, 1e-3)
+            .label(label)
+            .eval(|w| {
+                let (_, _, f1) = f1_support(&w_star, w, 1e-2);
+                (prob.objective(w), f1)
+            })
+            .run(Prox::with_step(step).lambda(lambda).iters(300))?;
         println!(
             "{:<22} {:>6} {:>8.3} {:>10.4} {:>10.1}s",
             label,

@@ -1,16 +1,16 @@
 //! Figure-10/11-style logistic regression with encoded block coordinate
 //! descent (model parallelism) vs the asynchronous baseline, under
-//! power-law background-task stragglers.
+//! power-law background-task stragglers. The encoded runs and the async
+//! baseline all go through the same
+//! [`Experiment`](coded_opt::driver::Experiment) driver — only the
+//! solver differs.
 //!
 //!     cargo run --release --example logistic_bcd
 
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::bcd::{build_model_parallel, logistic_phi, run_bcd, BcdConfig};
-use coded_opt::coordinator::asynchronous::{run_async_bcd, AsyncBcdConfig};
 use coded_opt::data::rcv1like;
 use coded_opt::delay::BackgroundTasksDelay;
-use coded_opt::encoding::partition_bounds;
+use coded_opt::driver::{AsyncBcd, Bcd, Experiment, Problem};
 use coded_opt::objectives::LogisticProblem;
 
 fn main() -> anyhow::Result<()> {
@@ -33,16 +33,18 @@ fn main() -> anyhow::Result<()> {
         "scheme", "train obj", "test err", "sim time", "imbalance"
     );
     for scheme in [Scheme::Steiner, Scheme::Haar, Scheme::Uncoded] {
-        let mp = build_model_parallel(&x, scheme, m, 2.0, step, 1e-4, 13, logistic_phi())?;
-        let sbar = mp.sbar;
-        let delay = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 29);
-        // delay-dominated regime (paper §5.3: background tasks dominate)
-        let mut cluster =
-            SimCluster::new(mp.workers, Box::new(delay)).with_timing(1e-4, 1e-3);
-        let cfg = BcdConfig { k, iters: 300 };
-        let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, scheme.name(), &|w| {
-            (prob.objective(w), prob.error_rate(w, &ds.test))
-        });
+        let out = Experiment::new(Problem::logistic(&x))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k)
+            .redundancy(2.0)
+            .seed(13)
+            .delay(|m| Box::new(BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 29)))
+            // delay-dominated regime (paper §5.3: background tasks dominate)
+            .timing(1e-4, 1e-3)
+            .label(scheme.name())
+            .eval(|w| (prob.objective(w), prob.error_rate(w, &ds.test)))
+            .run(Bcd::with_step(step).lambda(1e-4).iters(300))?;
         println!(
             "{:<18} {:>12.4} {:>10.3} {:>10.1}s {:>12.3}",
             scheme.name(),
@@ -53,40 +55,22 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // ---- async baseline (Fig. 13's skewed participation)
-    let bounds = partition_bounds(feats, m);
-    let blocks: Vec<coded_opt::linalg::Mat> = bounds
-        .windows(2)
-        .map(|w| {
-            let idx: Vec<usize> = (w[0]..w[1]).collect();
-            x.select_cols(&idx)
-        })
-        .collect();
-    let grad_phi = |u: &[f64]| -> Vec<f64> {
-        let n = u.len() as f64;
-        u.iter().map(|&ui| -coded_opt::objectives::logistic::sigmoid(-ui) / n).collect()
-    };
-    let mut delay = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 29);
-    let cfg = AsyncBcdConfig {
-        step,
-        lambda: 1e-4,
-        updates: 300 * k,
-        secs_per_unit: 1e-4,
-        record_every: 60,
-    };
-    let eval = |v: &[Vec<f64>]| -> (f64, f64) {
-        let w: Vec<f64> = v.iter().flatten().copied().collect();
-        (prob.objective(&w), prob.error_rate(&w, &ds.test))
-    };
-    let (trace, _, part) =
-        run_async_bcd(&blocks, &grad_phi, n_train, &cfg, &mut delay, "async", &eval);
+    // ---- async baseline (Fig. 13's skewed participation): same driver,
+    // different solver — uncoded column blocks, no rounds, no encoding.
+    let out = Experiment::new(Problem::logistic(&x))
+        .workers(m)
+        .delay(|m| Box::new(BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 29)))
+        .timing(1e-4, 1e-3)
+        .label("async")
+        .eval(|w| (prob.objective(w), prob.error_rate(w, &ds.test)))
+        .run(AsyncBcd::with_step(step).lambda(1e-4).updates(300 * k).record_every(60))?;
     println!(
         "{:<18} {:>12.4} {:>10.3} {:>10.1}s {:>12.3}",
         "async (uncoded)",
-        trace.final_objective(),
-        trace.final_test_metric(),
-        trace.total_time(),
-        part.imbalance()
+        out.trace.final_objective(),
+        out.trace.final_test_metric(),
+        out.trace.total_time(),
+        out.participation.imbalance()
     );
     println!("\nShape notes (paper Figs. 10–13): the async baseline's participation is");
     println!("heavily skewed (imbalance ≫ encoded) — slow nodes contribute rare, stale");

@@ -1,15 +1,15 @@
 //! MovieLens-style matrix factorization (paper §5.2): alternating
 //! minimization where each large row/column subproblem is solved by
-//! DISTRIBUTED ENCODED L-BFGS, small ones locally (the paper's n<500
-//! rule).
+//! DISTRIBUTED ENCODED L-BFGS — one
+//! [`Experiment`](coded_opt::driver::Experiment) per subproblem — and
+//! small ones locally (the paper's n<500 rule).
 //!
 //!     cargo run --release --example matrix_factorization
 
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, run_lbfgs, LbfgsConfig};
 use coded_opt::data::movielens;
 use coded_opt::delay::ExponentialDelay;
+use coded_opt::driver::{Experiment, Lbfgs, Problem};
 use coded_opt::objectives::matfac::{LocalCholesky, MatFacProblem, SubSolver, Subproblem};
 use coded_opt::objectives::QuadObjective;
 
@@ -36,20 +36,18 @@ impl SubSolver for DistributedLbfgs {
         // eq-13 subproblem has unnormalized ‖Aw−b‖² + λ‖w‖²; our ridge
         // convention is 1/(2n)‖·‖² + λ/2‖·‖², so rescale λ.
         let lam = 2.0 * sub.lambda / n as f64;
-        let dp = build_data_parallel(&sub.a, &sub.b, self.scheme, self.m, 2.0, 1).unwrap();
-        let asm = dp.assembler.clone();
-        let delay = ExponentialDelay::new(self.m, 0.010, 5); // paper's exp(10ms)
-        let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
         let prob = coded_opt::objectives::RidgeProblem::new(sub.a.clone(), sub.b.clone(), lam);
-        let cfg = LbfgsConfig {
-            k: self.k,
-            iters: 15,
-            lambda: lam,
-            memory: 8,
-            rho: 0.9,
-            w0: None,
-        };
-        let out = run_lbfgs(&mut cluster, &asm, &cfg, "mf-sub", &|w| (prob.objective(w), 0.0));
+        let out = Experiment::new(Problem::least_squares(&sub.a, &sub.b))
+            .scheme(self.scheme)
+            .workers(self.m)
+            .wait_for(self.k)
+            .redundancy(2.0)
+            .seed(1)
+            .delay(|m| Box::new(ExponentialDelay::new(m, 0.010, 5))) // paper's exp(10ms)
+            .label("mf-sub")
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Lbfgs::new().iters(15).lambda(lam).memory(8))
+            .expect("mf subproblem solve");
         out.w
     }
 }

@@ -1,18 +1,20 @@
 //! Quickstart: encoded gradient descent on a ridge problem with
-//! bimodal stragglers, in ~30 lines of library use.
+//! bimodal stragglers, in a dozen lines of library use.
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Builds a Hadamard (β=2) encoding over 8 simulated workers, waits for
-//! the fastest 6 each round, and prints the convergence trace on the
-//! ORIGINAL objective — next to an uncoded baseline suffering the same
-//! stragglers.
+//! One [`Experiment`](coded_opt::driver::Experiment) describes the whole
+//! pipeline — problem, encoding scheme, worker count, wait-for-k gather,
+//! straggler delays, evaluation — and `.run(solver)` executes any
+//! algorithm through it. Here: a Hadamard (β=2) encoding over 8
+//! simulated workers, waiting for the fastest 6 each round, printing the
+//! convergence trace on the ORIGINAL objective — next to an uncoded
+//! baseline suffering the same stragglers.
 
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, run_gd, GdConfig};
 use coded_opt::data::synth::gaussian_linear;
 use coded_opt::delay::MixtureDelay;
+use coded_opt::driver::{Experiment, Gd, Problem};
 use coded_opt::objectives::{QuadObjective, RidgeProblem};
 
 fn main() -> anyhow::Result<()> {
@@ -24,21 +26,17 @@ fn main() -> anyhow::Result<()> {
     println!("{:<12} {:>10} {:>14} {:>12}", "scheme", "iters", "f(w_T)", "sim time");
 
     for scheme in [Scheme::Hadamard, Scheme::Uncoded] {
-        let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 42)?;
-        let asm = dp.assembler.clone();
-        // the paper's §5.3 bimodal delay: half the fleet ~0.5s, half ~20s
-        let delay = MixtureDelay::paper_bimodal(m, 7);
-        let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-        let cfg = GdConfig {
-            k,
-            step: 1.0 / prob.smoothness(),
-            iters: 200,
-            lambda: 0.05,
-            w0: None,
-        };
-        let out = run_gd(&mut cluster, &asm, &cfg, scheme.name(), &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k)
+            .redundancy(2.0)
+            .seed(42)
+            // the paper's §5.3 bimodal delay: half the fleet ~0.5s, half ~20s
+            .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 7)))
+            .label(scheme.name())
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(200))?;
         println!(
             "{:<12} {:>10} {:>14.6} {:>10.1}s",
             scheme.name(),

@@ -1,14 +1,14 @@
 //! Figure-7-style ridge experiment: uncoded vs replication vs Hadamard
 //! coded L-BFGS with k=3m/8 (the paper's k=12, m=32 operating point),
-//! under the bimodal straggler mixture.
+//! under the bimodal straggler mixture. Each run is one
+//! [`Experiment`](coded_opt::driver::Experiment).
 //!
 //!     cargo run --release --example ridge_regression
 
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, run_lbfgs, LbfgsConfig};
 use coded_opt::data::synth::gaussian_linear;
 use coded_opt::delay::MixtureDelay;
+use coded_opt::driver::{Experiment, Lbfgs, Problem};
 use coded_opt::metrics::TableWriter;
 use coded_opt::objectives::{QuadObjective, RidgeProblem};
 
@@ -24,14 +24,16 @@ fn main() -> anyhow::Result<()> {
 
     let mut table = TableWriter::new(&["scheme", "k", "final subopt", "stable?", "sim time (s)"]);
     for scheme in [Scheme::Uncoded, Scheme::Replication, Scheme::Hadamard] {
-        let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 5)?;
-        let asm = dp.assembler.clone();
-        let delay = MixtureDelay::paper_bimodal(m, 17);
-        let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-        let cfg = LbfgsConfig { k, iters: 50, lambda, memory: 10, rho: 0.9, w0: None };
-        let out = run_lbfgs(&mut cluster, &asm, &cfg, scheme.name(), &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k)
+            .redundancy(2.0)
+            .seed(5)
+            .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 17)))
+            .label(scheme.name())
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Lbfgs::new().iters(50).lambda(lambda))?;
         let sub = (out.trace.final_objective() - f_star) / f_star;
         table.row(&[
             scheme.name().into(),

@@ -6,21 +6,14 @@
 //!     cargo bench --bench fig07_ridge
 
 use coded_opt::bench::banner;
-use coded_opt::cluster::{Gather, SimCluster};
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, run_lbfgs, LbfgsConfig};
 use coded_opt::data::synth::gaussian_linear;
-use coded_opt::delay::{BackgroundTasksDelay, DelayModel};
+use coded_opt::delay::BackgroundTasksDelay;
+use coded_opt::driver::{Experiment, Lbfgs, Problem};
 use coded_opt::metrics::TableWriter;
 use coded_opt::objectives::{QuadObjective, RidgeProblem};
 
 const SECS_PER_UNIT: f64 = 2e-4;
-
-fn delay_for(m: usize, seed: u64) -> Box<dyn DelayModel> {
-    // persistent background-load stragglers: the regime where fixed-k
-    // uncoded permanently drops the same blocks
-    Box::new(BackgroundTasksDelay::new(m, 1.5, 50, 0.2, seed))
-}
 
 fn main() -> anyhow::Result<()> {
     banner("Figure 7", "ridge L-BFGS: convergence (left) and runtime vs η (right)");
@@ -32,20 +25,31 @@ fn main() -> anyhow::Result<()> {
     let f_star = prob.objective(&prob.solve_exact());
     println!("n={n} p={p} m={m} k={k} λ={lambda} β=2   f*={f_star:.6}\n");
 
+    // One experiment template per scheme; persistent background-load
+    // stragglers — the regime where fixed-k uncoded permanently drops
+    // the same blocks.
+    let run = |scheme: Scheme, k_run: usize, with_eval: bool| {
+        let mut exp = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k_run)
+            .redundancy(2.0)
+            .seed(5)
+            .delay(|m| Box::new(BackgroundTasksDelay::new(m, 1.5, 50, 0.2, 77)))
+            .timing(SECS_PER_UNIT, 1e-3)
+            .label(scheme.name());
+        if with_eval {
+            exp = exp.eval(|w| (prob.objective(w), 0.0));
+        }
+        exp.run(Lbfgs::new().iters(40).lambda(lambda))
+    };
+
     // ---- Left: evolution of (f−f*)/f* per iteration
     println!("LEFT: relative suboptimality vs iteration");
     println!("{:<6} {:>12} {:>12} {:>12}", "iter", "uncoded", "replication", "hadamard");
     let mut traces = Vec::new();
     for scheme in [Scheme::Uncoded, Scheme::Replication, Scheme::Hadamard] {
-        let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 5)?;
-        let asm = dp.assembler.clone();
-        let mut cluster =
-            SimCluster::new(dp.workers, delay_for(m, 77)).with_timing(SECS_PER_UNIT, 1e-3);
-        let cfg = LbfgsConfig { k, iters: 40, lambda, memory: 10, rho: 0.9, w0: None };
-        let out = run_lbfgs(&mut cluster, &asm, &cfg, scheme.name(), &|w| {
-            (prob.objective(w), 0.0)
-        });
-        traces.push(out.trace);
+        traces.push(run(scheme, k, true)?.trace);
     }
     for i in (0..40).step_by(4) {
         print!("{:<6}", i);
@@ -65,14 +69,8 @@ fn main() -> anyhow::Result<()> {
     for k_sweep in [8usize, 12, 16, 20, 24, 28, 32] {
         let mut row = vec![format!("{:.3}", k_sweep as f64 / m as f64), format!("{k_sweep}")];
         for scheme in [Scheme::Uncoded, Scheme::Replication, Scheme::Hadamard] {
-            let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 5)?;
-            let asm = dp.assembler.clone();
-            let mut cluster =
-                SimCluster::new(dp.workers, delay_for(m, 77)).with_timing(SECS_PER_UNIT, 1e-3);
-            let cfg =
-                LbfgsConfig { k: k_sweep, iters: 40, lambda, memory: 10, rho: 0.9, w0: None };
-            let _ = run_lbfgs(&mut cluster, &asm, &cfg, scheme.name(), &|_| (0.0, 0.0));
-            row.push(format!("{:.1}", cluster.clock()));
+            let out = run(scheme, k_sweep, false)?;
+            row.push(format!("{:.1}", out.trace.total_time()));
         }
         table.row(&row);
     }

@@ -1,20 +1,17 @@
 //! Figure 10: logistic regression (encoded BCD, model parallelism) —
 //! train/test error over TIME under the bimodal delay mixture
 //! (q=0.5: N(0.5s, 0.2²) + N(20s, 5²)), k/m = 0.5, β = 2.
-//! Schemes: Steiner, Haar, uncoded, replication(-equivalent), async.
+//! Schemes: Steiner, Haar, uncoded, replication(-equivalent), async —
+//! every run through the same [`Experiment`](coded_opt::driver::Experiment).
 //!
 //!     cargo bench --bench fig10_logistic_bimodal
 
 use coded_opt::bench::banner;
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::asynchronous::{run_async_bcd, AsyncBcdConfig};
-use coded_opt::coordinator::bcd::{
-    build_model_parallel, logistic_phi, replication_equivalent, run_bcd, BcdConfig,
-};
+use coded_opt::coordinator::bcd::replication_equivalent;
 use coded_opt::data::rcv1like;
 use coded_opt::delay::{MinOfR, MixtureDelay};
-use coded_opt::encoding::partition_bounds;
+use coded_opt::driver::{AsyncBcd, Bcd, Experiment, Problem};
 use coded_opt::metrics::Trace;
 use coded_opt::objectives::LogisticProblem;
 
@@ -27,7 +24,6 @@ fn main() -> anyhow::Result<()> {
     let (m, k) = (16usize, 8usize);
     let ds = rcv1like::generate(docs, feats, nnz, 0.05, 77);
     let x = ds.train.to_dense();
-    let n_train = ds.train.rows();
     let prob = LogisticProblem::new(ds.train.clone(), 1e-4);
     let step = 1.0 / prob.smoothness() / 4.0;
     let iters = 400;
@@ -44,71 +40,50 @@ fn main() -> anyhow::Result<()> {
         ("uncoded k=m", Scheme::Uncoded, m, 1.0, iters),
     ];
     for (label, scheme, k_run, beta, it) in sync_runs {
-        let mp = build_model_parallel(&x, scheme, m, beta, step, 1e-4, 13, logistic_phi())?;
-        let sbar = mp.sbar;
-        let delay = MixtureDelay::paper_bimodal(m, 29);
-        let mut cluster =
-            SimCluster::new(mp.workers, Box::new(delay)).with_timing(SECS_PER_UNIT, 1e-3);
-        let cfg = BcdConfig { k: k_run, iters: it };
-        let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, label, &|w| {
-            (prob.objective(w), prob.error_rate(w, &ds.test))
-        });
+        let out = Experiment::new(Problem::logistic(&x))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k_run)
+            .redundancy(beta)
+            .seed(13)
+            .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 29)))
+            .timing(SECS_PER_UNIT, 1e-3)
+            .label(label)
+            .eval(|w| (prob.objective(w), prob.error_rate(w, &ds.test)))
+            .run(Bcd::with_step(step).lambda(1e-4).iters(it))?;
         traces.push(out.trace);
     }
 
     // ---- replication-equivalent: P logical workers, fastest-of-2 delays
     {
         let (p_logical, k_logical) = replication_equivalent(m, 2, k);
-        let mp = build_model_parallel(
-            &x,
-            Scheme::Uncoded,
-            p_logical,
-            1.0,
-            step,
-            1e-4,
-            13,
-            logistic_phi(),
-        )?;
-        let sbar = mp.sbar;
-        let inner = MixtureDelay::paper_bimodal(2 * p_logical, 29);
-        let delay = MinOfR::new(inner, 2);
-        let mut cluster =
-            SimCluster::new(mp.workers, Box::new(delay)).with_timing(SECS_PER_UNIT, 1e-3);
-        let cfg = BcdConfig { k: k_logical, iters };
-        let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, "replication", &|w| {
-            (prob.objective(w), prob.error_rate(w, &ds.test))
-        });
+        let out = Experiment::new(Problem::logistic(&x))
+            .scheme(Scheme::Uncoded)
+            .workers(p_logical)
+            .wait_for(k_logical)
+            .redundancy(1.0)
+            .seed(13)
+            .delay(move |p| Box::new(MinOfR::new(MixtureDelay::paper_bimodal(2 * p, 29), 2)))
+            .timing(SECS_PER_UNIT, 1e-3)
+            .label("replication")
+            .eval(|w| (prob.objective(w), prob.error_rate(w, &ds.test)))
+            .run(Bcd::with_step(step).lambda(1e-4).iters(iters))?;
         traces.push(out.trace);
     }
 
     // ---- async baseline, same wall budget
     {
-        let bounds = partition_bounds(feats, m);
-        let blocks: Vec<coded_opt::linalg::Mat> = bounds
-            .windows(2)
-            .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
-            .collect();
-        let grad_phi = |u: &[f64]| -> Vec<f64> {
-            let n = u.len() as f64;
-            u.iter().map(|&ui| -coded_opt::objectives::logistic::sigmoid(-ui) / n).collect()
-        };
-        let mut delay = MixtureDelay::paper_bimodal(m, 29);
         let budget = traces.iter().map(|t| t.total_time()).fold(0.0, f64::max);
         // async applies ~1 update per mean-delay per worker; cap generously
-        let cfg = AsyncBcdConfig {
-            step,
-            lambda: 1e-4,
-            updates: 40_000,
-            secs_per_unit: SECS_PER_UNIT,
-            record_every: 200,
-        };
-        let eval = |v: &[Vec<f64>]| -> (f64, f64) {
-            let w: Vec<f64> = v.iter().flatten().copied().collect();
-            (prob.objective(&w), prob.error_rate(&w, &ds.test))
-        };
-        let (mut trace, _, _) =
-            run_async_bcd(&blocks, &grad_phi, n_train, &cfg, &mut delay, "async", &eval);
+        let out = Experiment::new(Problem::logistic(&x))
+            .workers(m)
+            .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 29)))
+            .timing(SECS_PER_UNIT, 1e-3)
+            .label("async")
+            .eval(|w| (prob.objective(w), prob.error_rate(w, &ds.test)))
+            .run(AsyncBcd::with_step(step).lambda(1e-4).updates(40_000).record_every(200))?;
         // truncate to the synchronized runs' wall budget for fairness
+        let mut trace = out.trace;
         trace.records.retain(|r| r.time <= budget);
         traces.push(trace);
     }

@@ -1,17 +1,16 @@
 //! Figure 11: logistic regression (encoded BCD) — train/test error over
 //! time when the number of background tasks per machine follows a power
 //! law (α = 1.5, capped at 50); k/m = 0.625 (the paper's k=80, m=128).
+//! Every run — coded, uncoded, async — goes through the same
+//! [`Experiment`](coded_opt::driver::Experiment).
 //!
 //!     cargo bench --bench fig11_logistic_powerlaw
 
 use coded_opt::bench::banner;
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::asynchronous::{run_async_bcd, AsyncBcdConfig};
-use coded_opt::coordinator::bcd::{build_model_parallel, logistic_phi, run_bcd, BcdConfig};
 use coded_opt::data::rcv1like;
 use coded_opt::delay::BackgroundTasksDelay;
-use coded_opt::encoding::partition_bounds;
+use coded_opt::driver::{AsyncBcd, Bcd, Experiment, Problem};
 use coded_opt::metrics::Trace;
 use coded_opt::objectives::LogisticProblem;
 
@@ -23,7 +22,6 @@ fn main() -> anyhow::Result<()> {
     let (m, k) = (16usize, 10usize); // k/m = 0.625 = paper's 80/128
     let ds = rcv1like::generate(docs, feats, nnz, 0.05, 77);
     let x = ds.train.to_dense();
-    let n_train = ds.train.rows();
     let prob = LogisticProblem::new(ds.train.clone(), 1e-4);
     let step = 1.0 / prob.smoothness() / 4.0;
     let iters = 400;
@@ -36,43 +34,30 @@ fn main() -> anyhow::Result<()> {
         ("uncoded k=m", Scheme::Uncoded, m, 1.0),
     ];
     for (label, scheme, k_run, beta) in sync_runs {
-        let mp = build_model_parallel(&x, scheme, m, beta, step, 1e-4, 13, logistic_phi())?;
-        let sbar = mp.sbar;
-        let delay = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31);
-        let mut cluster =
-            SimCluster::new(mp.workers, Box::new(delay)).with_timing(SECS_PER_UNIT, 1e-3);
-        let cfg = BcdConfig { k: k_run, iters };
-        let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, label, &|w| {
-            (prob.objective(w), prob.error_rate(w, &ds.test))
-        });
+        let out = Experiment::new(Problem::logistic(&x))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k_run)
+            .redundancy(beta)
+            .seed(13)
+            .delay(|m| Box::new(BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31)))
+            .timing(SECS_PER_UNIT, 1e-3)
+            .label(label)
+            .eval(|w| (prob.objective(w), prob.error_rate(w, &ds.test)))
+            .run(Bcd::with_step(step).lambda(1e-4).iters(iters))?;
         traces.push(out.trace);
     }
     // async under the same persistent background load, same wall budget
     {
-        let bounds = partition_bounds(feats, m);
-        let blocks: Vec<coded_opt::linalg::Mat> = bounds
-            .windows(2)
-            .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
-            .collect();
-        let grad_phi = |u: &[f64]| -> Vec<f64> {
-            let n = u.len() as f64;
-            u.iter().map(|&ui| -coded_opt::objectives::logistic::sigmoid(-ui) / n).collect()
-        };
-        let mut delay = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31);
         let budget = traces.iter().map(|t| t.total_time()).fold(0.0, f64::max);
-        let cfg = AsyncBcdConfig {
-            step,
-            lambda: 1e-4,
-            updates: 40_000,
-            secs_per_unit: SECS_PER_UNIT,
-            record_every: 200,
-        };
-        let eval = |v: &[Vec<f64>]| -> (f64, f64) {
-            let w: Vec<f64> = v.iter().flatten().copied().collect();
-            (prob.objective(&w), prob.error_rate(&w, &ds.test))
-        };
-        let (mut trace, _, _) =
-            run_async_bcd(&blocks, &grad_phi, n_train, &cfg, &mut delay, "async", &eval);
+        let out = Experiment::new(Problem::logistic(&x))
+            .workers(m)
+            .delay(|m| Box::new(BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31)))
+            .timing(SECS_PER_UNIT, 1e-3)
+            .label("async")
+            .eval(|w| (prob.objective(w), prob.error_rate(w, &ds.test)))
+            .run(AsyncBcd::with_step(step).lambda(1e-4).updates(40_000).record_every(200))?;
+        let mut trace = out.trace;
         trace.records.retain(|r| r.time <= budget);
         traces.push(trace);
     }

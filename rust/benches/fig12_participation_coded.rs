@@ -1,15 +1,15 @@
 //! Figure 12: fraction of iterations each worker participates in
 //! (empirical P{i ∈ A_t}) for Steiner-encoded BCD with k = 0.625·m under
-//! power-law background tasks.
+//! power-law background tasks — one
+//! [`Experiment`](coded_opt::driver::Experiment) run.
 //!
 //!     cargo bench --bench fig12_participation_coded
 
 use coded_opt::bench::banner;
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::bcd::{build_model_parallel, logistic_phi, run_bcd, BcdConfig};
 use coded_opt::data::rcv1like;
 use coded_opt::delay::BackgroundTasksDelay;
+use coded_opt::driver::{Bcd, Experiment, Problem};
 use coded_opt::objectives::LogisticProblem;
 
 fn main() -> anyhow::Result<()> {
@@ -18,16 +18,22 @@ fn main() -> anyhow::Result<()> {
     let (m, k) = (16usize, 10usize);
     let ds = rcv1like::generate(docs, feats, nnz, 0.05, 77);
     let x = ds.train.to_dense();
-    let n_train = ds.train.rows();
     let prob = LogisticProblem::new(ds.train.clone(), 1e-4);
     let step = 1.0 / prob.smoothness() / 4.0;
-    let mp = build_model_parallel(&x, Scheme::Steiner, m, 2.0, step, 1e-4, 13, logistic_phi())?;
-    let sbar = mp.sbar;
+    // One delay model: read the per-node background-task counts for the
+    // printout, then hand the same instance to the (single) run.
     let bg = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31);
     let tasks: Vec<usize> = bg.task_counts().to_vec();
-    let mut cluster = SimCluster::new(mp.workers, Box::new(bg)).with_timing(1e-4, 1e-3);
-    let cfg = BcdConfig { k, iters: 300 };
-    let out = run_bcd(&mut cluster, &sbar, n_train, feats, &cfg, "steiner", &|_| (0.0, 0.0));
+    let out = Experiment::new(Problem::logistic(&x))
+        .scheme(Scheme::Steiner)
+        .workers(m)
+        .wait_for(k)
+        .redundancy(2.0)
+        .seed(13)
+        .delay_model(Box::new(bg))
+        .timing(1e-4, 1e-3)
+        .label("steiner")
+        .run(Bcd::with_step(step).lambda(1e-4).iters(300))?;
     println!("\nnode  bg-tasks  participation fraction");
     for i in 0..m {
         let frac = out.participation.fraction(i);

@@ -1,14 +1,16 @@
 //! Figure 13: fraction of (asynchronous) updates performed by each node
 //! under the same power-law background load — the async counterpart of
-//! Figure 12. The horizontal reference is the uniform 1/m line.
+//! Figure 12, driven by the same
+//! [`Experiment`](coded_opt::driver::Experiment) API with the
+//! [`AsyncBcd`] solver. The horizontal reference is the uniform 1/m
+//! line.
 //!
 //!     cargo bench --bench fig13_participation_async
 
 use coded_opt::bench::banner;
-use coded_opt::coordinator::asynchronous::{run_async_bcd, AsyncBcdConfig};
 use coded_opt::data::rcv1like;
 use coded_opt::delay::BackgroundTasksDelay;
-use coded_opt::encoding::partition_bounds;
+use coded_opt::driver::{AsyncBcd, Experiment, Problem};
 use coded_opt::objectives::LogisticProblem;
 
 fn main() -> anyhow::Result<()> {
@@ -17,30 +19,18 @@ fn main() -> anyhow::Result<()> {
     let m = 16usize;
     let ds = rcv1like::generate(docs, feats, nnz, 0.05, 77);
     let x = ds.train.to_dense();
-    let n_train = ds.train.rows();
     let prob = LogisticProblem::new(ds.train.clone(), 1e-4);
     let step = 1.0 / prob.smoothness() / 4.0;
-    let bounds = partition_bounds(feats, m);
-    let blocks: Vec<coded_opt::linalg::Mat> = bounds
-        .windows(2)
-        .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
-        .collect();
-    let grad_phi = |u: &[f64]| -> Vec<f64> {
-        let n = u.len() as f64;
-        u.iter().map(|&ui| -coded_opt::objectives::logistic::sigmoid(-ui) / n).collect()
-    };
     let bg = BackgroundTasksDelay::new(m, 1.5, 50, 0.05, 31);
     let tasks: Vec<usize> = bg.task_counts().to_vec();
-    let mut delay = bg;
-    let cfg = AsyncBcdConfig {
-        step,
-        lambda: 1e-4,
-        updates: 4800, // 300 iterations × k=16-equivalent budget
-        secs_per_unit: 1e-4,
-        record_every: 1200,
-    };
-    let eval = |_: &[Vec<f64>]| (0.0, 0.0);
-    let (_, _, part) = run_async_bcd(&blocks, &grad_phi, n_train, &cfg, &mut delay, "async", &eval);
+    let out = Experiment::new(Problem::logistic(&x))
+        .workers(m)
+        .delay_model(Box::new(bg))
+        .timing(1e-4, 1e-3)
+        .label("async")
+        // 300 iterations × k=16-equivalent budget
+        .run(AsyncBcd::with_step(step).lambda(1e-4).updates(4800).record_every(1200))?;
+    let part = out.participation;
     let total: f64 = (0..m).map(|i| part.fraction(i)).sum();
     println!("\nnode  bg-tasks  update fraction   (uniform line = {:.4})", 1.0 / m as f64);
     for i in 0..m {

@@ -1,14 +1,15 @@
 //! Figure 14: LASSO sparsity-recovery F1 over time under the trimodal
-//! delay mixture — uncoded k=m, uncoded k<m, replication, Steiner k<m.
+//! delay mixture — uncoded k=m, uncoded k<m, replication, Steiner k<m,
+//! each one [`Experiment`](coded_opt::driver::Experiment) running the
+//! [`Prox`] solver.
 //!
 //!     cargo bench --bench fig14_lasso_f1
 
 use coded_opt::bench::banner;
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, run_prox, ProxConfig};
 use coded_opt::data::synth::sparse_recovery;
 use coded_opt::delay::MixtureDelay;
+use coded_opt::driver::{Experiment, Problem, Prox};
 use coded_opt::metrics::{f1_support, Trace};
 use coded_opt::objectives::LassoProblem;
 
@@ -34,17 +35,20 @@ fn main() -> anyhow::Result<()> {
     ];
     let mut traces: Vec<Trace> = Vec::new();
     for (label, scheme, k) in runs {
-        let dp = build_data_parallel(&x, &y, scheme, m, 2.0, 7)?;
-        let asm = dp.assembler.clone();
-        let delay = MixtureDelay::paper_trimodal(m, 23);
-        let mut cluster =
-            SimCluster::new(dp.workers, Box::new(delay)).with_timing(SECS_PER_UNIT, 1e-3);
-        let w_ref = w_star.clone();
-        let cfg = ProxConfig { k, step, iters, lambda, w0: None };
-        let out = run_prox(&mut cluster, &asm, &cfg, label, &|w| {
-            let (_, _, f1) = f1_support(&w_ref, w, 1e-2);
-            (prob.objective(w), f1)
-        });
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(m)
+            .wait_for(k)
+            .redundancy(2.0)
+            .seed(7)
+            .delay(|m| Box::new(MixtureDelay::paper_trimodal(m, 23)))
+            .timing(SECS_PER_UNIT, 1e-3)
+            .label(label)
+            .eval(|w| {
+                let (_, _, f1) = f1_support(&w_star, w, 1e-2);
+                (prob.objective(w), f1)
+            })
+            .run(Prox::with_step(step).lambda(lambda).iters(iters))?;
         traces.push(out.trace);
     }
 

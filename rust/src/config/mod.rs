@@ -21,6 +21,10 @@ pub enum Algorithm {
     ProxGradient,
     /// Encoded block coordinate descent (model parallelism, Thm 6).
     Bcd,
+    /// Asynchronous parameter-server GD baseline (Figs. 10–13).
+    AsyncGd,
+    /// Asynchronous BCD baseline (Figs. 10–13).
+    AsyncBcd,
 }
 
 impl Algorithm {
@@ -30,6 +34,8 @@ impl Algorithm {
             "lbfgs" | "l-bfgs" => Algorithm::Lbfgs,
             "prox" | "proximal_gradient" | "ista" => Algorithm::ProxGradient,
             "bcd" | "coordinate_descent" => Algorithm::Bcd,
+            "async_gd" | "async-gd" | "async" => Algorithm::AsyncGd,
+            "async_bcd" | "async-bcd" => Algorithm::AsyncBcd,
             other => bail!("unknown algorithm '{other}'"),
         })
     }
@@ -350,6 +356,8 @@ kind = "bimodal"
     fn algorithm_and_scheme_parsing() {
         assert_eq!(Algorithm::parse("L-BFGS").unwrap(), Algorithm::Lbfgs);
         assert_eq!(Scheme::parse("STEINER").unwrap(), Scheme::Steiner);
+        assert_eq!(Algorithm::parse("async_gd").unwrap(), Algorithm::AsyncGd);
+        assert_eq!(Algorithm::parse("async-bcd").unwrap(), Algorithm::AsyncBcd);
         assert!(Algorithm::parse("sgd?").is_err());
         assert!(Scheme::parse("fourier??").is_err());
     }

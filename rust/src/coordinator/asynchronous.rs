@@ -45,12 +45,29 @@ pub struct AsyncGdConfig {
     pub record_every: usize,
 }
 
+/// Legacy entry point. Prefer
+/// `Experiment::new(..).run(driver::AsyncGd::with_step(..))`, which owns
+/// the shard/delay wiring this function expects pre-assembled.
+#[deprecated(note = "use driver::Experiment with driver::AsyncGd instead")]
+pub fn run_async_gd(
+    shards: &[(Mat, Vec<f64>)],
+    delay: &mut dyn DelayModel,
+    n: usize,
+    p: usize,
+    cfg: &AsyncGdConfig,
+    label: &str,
+    eval: &super::EvalFn,
+) -> super::gd::RunOutput {
+    async_gd_loop(shards, delay, n, p, cfg, label, eval)
+}
+
 /// Async data-parallel gradient descent over uncoded partitions.
 ///
 /// `shards[i] = (X_i, y_i)`; the update applied on arrival of worker i's
 /// gradient (computed at the stale iterate it fetched) is
 /// `w ← w − step·(m/n)·X_iᵀ(X_i·w_stale − y_i) − step·λ·w`.
-pub fn run_async_gd(
+/// Called by the `driver::AsyncGd` solver.
+pub(crate) fn async_gd_loop(
     shards: &[(Mat, Vec<f64>)],
     delay: &mut dyn DelayModel,
     n: usize,
@@ -115,11 +132,29 @@ pub struct AsyncBcdConfig {
     pub record_every: usize,
 }
 
+/// Legacy entry point. Prefer
+/// `Experiment::new(..).run(driver::AsyncBcd::with_step(..))`, which
+/// owns the block/delay wiring this function expects pre-assembled and
+/// evaluates on the concatenated iterate like every other solver.
+#[deprecated(note = "use driver::Experiment with driver::AsyncBcd instead")]
+pub fn run_async_bcd(
+    blocks: &[Mat],
+    grad_phi: &dyn Fn(&[f64]) -> Vec<f64>,
+    n: usize,
+    cfg: &AsyncBcdConfig,
+    delay: &mut dyn DelayModel,
+    label: &str,
+    eval_w_blocks: &dyn Fn(&[Vec<f64>]) -> (f64, f64),
+) -> (Trace, Vec<Vec<f64>>, Participation) {
+    async_bcd_loop(blocks, grad_phi, n, cfg, delay, label, eval_w_blocks)
+}
+
 /// Async block coordinate descent: worker i owns uncoded column block
 /// `A_i = X_{:,Bi}` and coordinates `w_i`; on each completion it applies
 /// `w_i ← w_i − step·(A_iᵀ∇φ(u_stale) + 2λw_i)` against the aggregate it
 /// fetched before computing (staleness grows with its delay).
-pub fn run_async_bcd(
+/// Called by the `driver::AsyncBcd` solver.
+pub(crate) fn async_bcd_loop(
     blocks: &[Mat],
     grad_phi: &dyn Fn(&[f64]) -> Vec<f64>,
     n: usize,
@@ -209,7 +244,7 @@ mod tests {
             secs_per_unit: 1e-4,
             record_every: 100,
         };
-        let out = run_async_gd(&shards, &mut delay, 64, 8, &cfg, "async", &|w| {
+        let out = async_gd_loop(&shards, &mut delay, 64, 8, &cfg, "async", &|w| {
             (prob.objective(w), 0.0)
         });
         let sub = (out.trace.final_objective() - f_star) / f_star;
@@ -231,7 +266,7 @@ mod tests {
             secs_per_unit: 1e-4,
             record_every: 500,
         };
-        let out = run_async_gd(&shards, &mut delay, 64, 8, &cfg, "async-bg", &|w| {
+        let out = async_gd_loop(&shards, &mut delay, 64, 8, &cfg, "async-bg", &|w| {
             (prob.objective(w), 0.0)
         });
         assert!(
@@ -273,7 +308,7 @@ mod tests {
             let w: Vec<f64> = v.iter().flatten().copied().collect();
             (prob.objective(&w), 0.0)
         };
-        let (trace, _, _) = run_async_bcd(&blocks, &grad_phi, 40, &cfg, &mut delay, "abcd", &eval);
+        let (trace, _, _) = async_bcd_loop(&blocks, &grad_phi, 40, &cfg, &mut delay, "abcd", &eval);
         assert!(trace.final_objective() < 0.2 * f0, "{} vs {f0}", trace.final_objective());
     }
 }

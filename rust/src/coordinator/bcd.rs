@@ -151,9 +151,26 @@ pub struct BcdConfig {
     pub iters: usize,
 }
 
-/// Run encoded BCD. `block_sizes` come from `mp.sbar`; `eval` receives
-/// the reconstructed `w_t = S̄ᵀv_t` (master-visible state).
+/// Legacy entry point. Prefer
+/// `Experiment::new(..).run(driver::Bcd::with_step(..))`, which owns the
+/// problem→lift→cluster wiring this function expects pre-assembled.
+#[deprecated(note = "use driver::Experiment with driver::Bcd instead")]
 pub fn run_bcd(
+    cluster: &mut dyn Gather,
+    mp_sbar: &[SMatrix],
+    n: usize,
+    p: usize,
+    cfg: &BcdConfig,
+    label: &str,
+    eval: &super::EvalFn,
+) -> RunOutput {
+    bcd_loop(cluster, mp_sbar, n, p, cfg, label, eval)
+}
+
+/// Encoded BCD master loop. `block_sizes` come from `mp.sbar`; `eval`
+/// receives the reconstructed `w_t = S̄ᵀv_t` (master-visible state).
+/// Called by the `driver::Bcd` solver.
+pub(crate) fn bcd_loop(
     cluster: &mut dyn Gather,
     mp_sbar: &[SMatrix],
     n: usize,
@@ -300,7 +317,7 @@ mod tests {
         use crate::objectives::QuadObjective;
         let f_star = prob.objective(&prob.solve_exact());
         let cfg = BcdConfig { k: m, iters: 400 };
-        let out = run_bcd(&mut cluster, &sbar, 48, 12, &cfg, "bcd", &|w| {
+        let out = bcd_loop(&mut cluster, &sbar, 48, 12, &cfg, "bcd", &|w| {
             (prob.objective(w), 0.0)
         });
         let f_final = out.trace.final_objective();
@@ -334,7 +351,7 @@ mod tests {
         let f_star = prob.objective(&prob.solve_exact());
         let f0 = prob.objective(&vec![0.0; 16]);
         let cfg = BcdConfig { k: 6, iters: 600 };
-        let out = run_bcd(&mut cluster, &sbar, 40, 16, &cfg, "bcd-adv", &|w| {
+        let out = bcd_loop(&mut cluster, &sbar, 40, 16, &cfg, "bcd-adv", &|w| {
             (prob.objective(w), 0.0)
         });
         let f_final = out.trace.final_objective();
@@ -367,7 +384,7 @@ mod tests {
         let prob = crate::objectives::RidgeProblem::new(x, y, 0.0);
         use crate::objectives::QuadObjective;
         let cfg = BcdConfig { k: m, iters: 100 };
-        let out = run_bcd(&mut cluster, &sbar, 30, 8, &cfg, "bcd", &|w| {
+        let out = bcd_loop(&mut cluster, &sbar, 30, 8, &cfg, "bcd", &|w| {
             (prob.objective(w), 0.0)
         });
         // allow the tiny one-round-staleness transient at t=0→1
@@ -395,7 +412,7 @@ mod tests {
         let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
         let f0 = prob.objective(&vec![0.0; 24]);
         let cfg = BcdConfig { k: 4, iters: 150 };
-        let out = run_bcd(&mut cluster, &sbar, n_train, 24, &cfg, "bcd-log", &|w| {
+        let out = bcd_loop(&mut cluster, &sbar, n_train, 24, &cfg, "bcd-log", &|w| {
             (prob.objective(w), prob.error_rate(w, &ds.test))
         });
         assert!(

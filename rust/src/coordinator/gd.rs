@@ -26,19 +26,38 @@ pub struct GdConfig {
     pub w0: Option<Vec<f64>>,
 }
 
-/// Outcome of a run: the trace plus final iterate and participation.
+/// Solver-core outcome: the trace plus final iterate and participation.
+///
+/// This is what the algorithm loops (and the deprecated `run_*` shims)
+/// return; `driver::Experiment::run` wraps it into the richer
+/// `driver::RunOutput`, which additionally reports `pjrt_attached` and
+/// the achieved redundancy β. New code should consume the driver type.
 pub struct RunOutput {
     pub trace: Trace,
     pub w: Vec<f64>,
     pub participation: Participation,
 }
 
-/// Run encoded gradient descent on a gathered cluster.
+/// Legacy entry point. Prefer
+/// `Experiment::new(..).run(driver::Gd::with_step(..))`, which owns the
+/// problem→encoding→cluster wiring this function expects pre-assembled.
+#[deprecated(note = "use driver::Experiment with driver::Gd instead")]
+pub fn run_gd(
+    cluster: &mut dyn Gather,
+    assembler: &GradAssembler,
+    cfg: &GdConfig,
+    label: &str,
+    eval: &EvalFn,
+) -> RunOutput {
+    gd_loop(cluster, assembler, cfg, label, eval)
+}
+
+/// Encoded gradient-descent master loop on a gathered cluster.
 ///
 /// `eval` maps the iterate to (original objective, test metric) for the
 /// trace — convergence is reported on the ORIGINAL problem, as in the
-/// paper's theorems.
-pub fn run_gd(
+/// paper's theorems. Called by the `driver::Gd` solver.
+pub(crate) fn gd_loop(
     cluster: &mut dyn Gather,
     assembler: &GradAssembler,
     cfg: &GdConfig,
@@ -108,7 +127,7 @@ mod tests {
         let (prob, asm, mut cluster) = setup(64, 8, Scheme::Hadamard, 8, 3);
         let step = 1.0 / prob.smoothness();
         let f_star = prob.objective(&prob.solve_exact());
-        let out = run_gd(&mut cluster, &asm, &gd_cfg(8, step, 400), "gd", &|w| {
+        let out = gd_loop(&mut cluster, &asm, &gd_cfg(8, step, 400), "gd", &|w| {
             (prob.objective(w), 0.0)
         });
         let f_final = out.trace.final_objective();
@@ -131,7 +150,7 @@ mod tests {
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
         let step = 0.5 / prob.smoothness();
         let f_star = prob.objective(&prob.solve_exact());
-        let out = run_gd(&mut cluster, &asm, &gd_cfg(6, step, 600), "gd-adv", &|w| {
+        let out = gd_loop(&mut cluster, &asm, &gd_cfg(6, step, 600), "gd-adv", &|w| {
             (prob.objective(w), 0.0)
         });
         let f_final = out.trace.final_objective();
@@ -182,7 +201,7 @@ mod tests {
             let asm = dp.assembler.clone();
             let delay = AdversarialDelay::new(8, vec![1, 6], 1e6);
             let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-            let out = run_gd(&mut cluster, &asm, &gd_cfg(6, step, 500), "x", &|w| {
+            let out = gd_loop(&mut cluster, &asm, &gd_cfg(6, step, 500), "x", &|w| {
                 (prob.objective(w), 0.0)
             });
             finals.insert(format!("{scheme:?}"), out.trace.final_objective());
@@ -200,7 +219,7 @@ mod tests {
         // Theorem-5-style sanity: no divergence along the run.
         let (prob, asm, mut cluster) = setup(48, 6, Scheme::Steiner, 6, 13);
         let step = 0.8 / prob.smoothness();
-        let out = run_gd(&mut cluster, &asm, &gd_cfg(4, step, 200), "gd", &|w| {
+        let out = gd_loop(&mut cluster, &asm, &gd_cfg(4, step, 200), "gd", &|w| {
             (prob.objective(w), 0.0)
         });
         assert!(out.trace.bounded_by(1.05));
@@ -209,7 +228,7 @@ mod tests {
     #[test]
     fn trace_records_k_and_time_monotone() {
         let (prob, asm, mut cluster) = setup(32, 4, Scheme::Gaussian, 4, 17);
-        let out = run_gd(&mut cluster, &asm, &gd_cfg(3, 0.01, 10), "gd", &|w| {
+        let out = gd_loop(&mut cluster, &asm, &gd_cfg(3, 0.01, 10), "gd", &|w| {
             (prob.objective(w), 0.0)
         });
         assert_eq!(out.trace.len(), 10);

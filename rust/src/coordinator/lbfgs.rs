@@ -71,8 +71,23 @@ fn two_loop(pairs: &[Pair], g: &[f64]) -> Vec<f64> {
     q
 }
 
-/// Run encoded L-BFGS on a gathered cluster.
+/// Legacy entry point. Prefer
+/// `Experiment::new(..).run(driver::Lbfgs::new())`, which owns the
+/// problem→encoding→cluster wiring this function expects pre-assembled.
+#[deprecated(note = "use driver::Experiment with driver::Lbfgs instead")]
 pub fn run_lbfgs(
+    cluster: &mut dyn Gather,
+    assembler: &GradAssembler,
+    cfg: &LbfgsConfig,
+    label: &str,
+    eval: &EvalFn,
+) -> RunOutput {
+    lbfgs_loop(cluster, assembler, cfg, label, eval)
+}
+
+/// Encoded L-BFGS master loop on a gathered cluster. Called by the
+/// `driver::Lbfgs` solver.
+pub(crate) fn lbfgs_loop(
     cluster: &mut dyn Gather,
     assembler: &GradAssembler,
     cfg: &LbfgsConfig,
@@ -220,7 +235,7 @@ mod tests {
         let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 3).unwrap();
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(8)));
-        let out = run_lbfgs(&mut cluster, &asm, &lb_cfg(8, 60, 0.05), "lbfgs", &|w| {
+        let out = lbfgs_loop(&mut cluster, &asm, &lb_cfg(8, 60, 0.05), "lbfgs", &|w| {
             (prob.objective(w), 0.0)
         });
         let sub = (out.trace.final_objective() - f_star) / f_star;
@@ -237,7 +252,7 @@ mod tests {
         let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 5).unwrap();
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(8)));
-        let out_l = run_lbfgs(&mut cluster, &asm, &lb_cfg(8, 80, 0.05), "l", &|w| {
+        let out_l = lbfgs_loop(&mut cluster, &asm, &lb_cfg(8, 80, 0.05), "l", &|w| {
             (prob.objective(w), 0.0)
         });
         // GD run, same budget
@@ -246,7 +261,7 @@ mod tests {
         let mut cluster2 = SimCluster::new(dp2.workers, Box::new(NoDelay::new(8)));
         let step = 1.0 / prob.smoothness();
         let cfg = crate::coordinator::GdConfig { k: 8, step, iters: 80, lambda: 0.05, w0: None };
-        let out_g = crate::coordinator::run_gd(&mut cluster2, &asm2, &cfg, "g", &|w| {
+        let out_g = crate::coordinator::gd::gd_loop(&mut cluster2, &asm2, &cfg, "g", &|w| {
             (prob.objective(w), 0.0)
         });
         let it_l = out_l.trace.records.iter().position(|r| r.objective <= target);
@@ -272,7 +287,7 @@ mod tests {
             let asm = dp.assembler.clone();
             let delay = MixtureDelay::paper_bimodal(16, 11);
             let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-            let out = run_lbfgs(&mut cluster, &asm, &lb_cfg(6, 50, 0.05), "x", &|w| {
+            let out = lbfgs_loop(&mut cluster, &asm, &lb_cfg(6, 50, 0.05), "x", &|w| {
                 (prob.objective(w), 0.0)
             });
             subopts.insert(
@@ -303,7 +318,7 @@ mod tests {
         let asm = dp.assembler.clone();
         let delay = AdversarialDelay::rotating(8, 0.5, 1e6);
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-        let out = run_lbfgs(&mut cluster, &asm, &lb_cfg(4, 60, 0.05), "rot", &|w| {
+        let out = lbfgs_loop(&mut cluster, &asm, &lb_cfg(4, 60, 0.05), "rot", &|w| {
             (prob.objective(w), 0.0)
         });
         assert!(out.trace.final_objective().is_finite());

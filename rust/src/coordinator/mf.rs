@@ -7,10 +7,9 @@
 //! implements that hybrid and accumulates the simulated distributed
 //! time, which is what the Tables-2/3 "runtime" columns report.
 
-use super::{build_data_parallel, run_lbfgs, LbfgsConfig};
-use crate::cluster::{Gather, SimCluster};
 use crate::config::Scheme;
 use crate::delay::DelayModel;
+use crate::driver::{Experiment, Lbfgs, Problem};
 use crate::objectives::matfac::{LocalCholesky, SubSolver, Subproblem};
 use crate::objectives::QuadObjective;
 
@@ -70,22 +69,21 @@ impl<F: FnMut(usize) -> Box<dyn DelayModel>> SubSolver for DistributedMfSolver<F
             Scheme::Uncoded => (self.k, 1.0),
             _ => (self.k, 2.0),
         };
-        let dp = build_data_parallel(&sub.a, &sub.b, self.scheme, self.m, beta, 17).unwrap();
-        let asm = dp.assembler.clone();
         let delay = (self.delay_factory)(self.solve_counter);
-        let mut cluster =
-            SimCluster::new(dp.workers, delay).with_timing(self.secs_per_unit, 1e-4);
         let prob = crate::objectives::RidgeProblem::new(sub.a.clone(), sub.b.clone(), lam);
-        let cfg = LbfgsConfig {
-            k,
-            iters: self.inner_iters,
-            lambda: lam,
-            memory: 8,
-            rho: 0.9,
-            w0: None,
-        };
-        let out = run_lbfgs(&mut cluster, &asm, &cfg, "mf-sub", &|w| (prob.objective(w), 0.0));
-        self.sim_time += cluster.clock();
+        let out = Experiment::new(Problem::least_squares(&sub.a, &sub.b))
+            .scheme(self.scheme)
+            .workers(self.m)
+            .wait_for(k)
+            .redundancy(beta)
+            .seed(17)
+            .timing(self.secs_per_unit, 1e-4)
+            .delay_model(delay)
+            .label("mf-sub")
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Lbfgs::new().iters(self.inner_iters).lambda(lam).memory(8).rho(0.9))
+            .expect("mf inner solve");
+        self.sim_time += out.trace.total_time();
         out.w
     }
 }

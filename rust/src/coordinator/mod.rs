@@ -18,15 +18,11 @@
 //! - [`asynchronous`] — parameter-server-style async gradient descent and
 //!   async BCD (the Figures 10–13 comparison).
 //!
-//! ## Normalization convention
-//!
-//! Encoding constructions produce `SᵀS = β·I` (unit-norm tight frames).
-//! Worker shards store the *Parseval-normalized* blocks `S̄_i = S_i/√β`,
-//! so `S̄ᵀS̄ = I` and the encoded objective equals the original objective
-//! exactly when all workers respond — including the regularizer weighting
-//! (the paper's §4.1 optimality-preservation argument). When only k of m
-//! respond, the master rescales partial sums by `m/k` (unbiased under
-//! random A_t; the BRIP condition bounds the worst case).
+//! Most callers should not wire these pieces by hand: the
+//! [`crate::driver`] module owns the problem → encoding → cluster →
+//! solve → evaluate pipeline behind the `Experiment` builder, and its
+//! docs state the normalization convention (`S̄ᵀS̄ = I` Parseval shards,
+//! `m/k` partial-sum rescaling) that this module implements.
 
 pub mod asynchronous;
 pub mod bcd;
@@ -36,9 +32,11 @@ pub mod mf;
 pub mod prox;
 pub mod schedule;
 
-pub use gd::{run_gd, GdConfig};
-pub use lbfgs::{run_lbfgs, LbfgsConfig};
-pub use prox::{run_prox, ProxConfig};
+pub use gd::{GdConfig, RunOutput};
+pub use lbfgs::LbfgsConfig;
+pub use prox::ProxConfig;
+#[allow(deprecated)]
+pub use {gd::run_gd, lbfgs::run_lbfgs, prox::run_prox};
 
 use crate::cluster::{Task, WorkerNode};
 use crate::config::Scheme;
@@ -128,13 +126,27 @@ pub struct GradAssembler {
 }
 
 impl GradAssembler {
+    /// Worker → response index, built once per round. The chosen-worker
+    /// loops below would otherwise rescan the response list per chosen
+    /// worker — O(k²) payload lookups for a k-response round.
+    fn index_responses(&self, responses: &[crate::cluster::Response]) -> Vec<Option<usize>> {
+        let mut by_worker: Vec<Option<usize>> = vec![None; self.map.workers()];
+        for (i, r) in responses.iter().enumerate() {
+            if by_worker[r.worker].is_none() {
+                by_worker[r.worker] = Some(i);
+            }
+        }
+        by_worker
+    }
+
     /// Combine responses (arrival order) into `(m_eff/|distinct|)·(1/n)·Σ r`.
     pub fn assemble(&self, responses: &[crate::cluster::Response]) -> Vec<f64> {
         let order: Vec<usize> = responses.iter().map(|r| r.worker).collect();
         let chosen = self.map.resolve(&order);
+        let by_worker = self.index_responses(responses);
         let mut g = vec![0.0; self.p];
         for &(_, w) in &chosen {
-            let resp = responses.iter().find(|r| r.worker == w).unwrap();
+            let resp = &responses[by_worker[w].unwrap()];
             debug_assert_eq!(resp.payload.len(), self.p, "gradient payload length");
             crate::linalg::axpy(1.0, &resp.payload, &mut g);
         }
@@ -148,10 +160,10 @@ impl GradAssembler {
     pub fn assemble_quadform(&self, responses: &[crate::cluster::Response]) -> f64 {
         let order: Vec<usize> = responses.iter().map(|r| r.worker).collect();
         let chosen = self.map.resolve(&order);
+        let by_worker = self.index_responses(responses);
         let mut q = 0.0;
         for &(_, w) in &chosen {
-            let resp = responses.iter().find(|r| r.worker == w).unwrap();
-            q += resp.payload[0];
+            q += responses[by_worker[w].unwrap()].payload[0];
         }
         q * self.map.partitions() as f64 / (chosen.len().max(1) as f64 * self.n as f64)
     }

@@ -24,8 +24,24 @@ pub struct ProxConfig {
 
 pub use super::gd::RunOutput;
 
-/// Run encoded proximal gradient (ISTA) on a gathered cluster.
+/// Legacy entry point. Prefer
+/// `Experiment::new(..).run(driver::Prox::with_step(..))`, which owns
+/// the problem→encoding→cluster wiring this function expects
+/// pre-assembled.
+#[deprecated(note = "use driver::Experiment with driver::Prox instead")]
 pub fn run_prox(
+    cluster: &mut dyn Gather,
+    assembler: &GradAssembler,
+    cfg: &ProxConfig,
+    label: &str,
+    eval: &EvalFn,
+) -> RunOutput {
+    prox_loop(cluster, assembler, cfg, label, eval)
+}
+
+/// Encoded proximal-gradient (ISTA) master loop on a gathered cluster.
+/// Called by the `driver::Prox` solver.
+pub(crate) fn prox_loop(
     cluster: &mut dyn Gather,
     assembler: &GradAssembler,
     cfg: &ProxConfig,
@@ -82,7 +98,7 @@ mod tests {
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
         let cfg = ProxConfig { k: 4, step: alpha, iters: 80, lambda: 0.05, w0: None };
-        let out = run_prox(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
         let w_ref = prob.solve_ista(80);
         let err = crate::testutil::rel_err(&out.w, &w_ref);
         assert!(err < 1e-6, "rel err {err}");
@@ -98,7 +114,7 @@ mod tests {
         let delay = AdversarialDelay::new(8, vec![2, 5], 1e6);
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
         let cfg = ProxConfig { k: 6, step: alpha, iters: 250, lambda: 0.08, w0: None };
-        let out = run_prox(&mut cluster, &asm, &cfg, "prox-adv", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, "prox-adv", &|w| (prob.objective(w), 0.0));
         let (_, _, f1) = f1_support(&w_star, &out.w, 1e-2);
         assert!(f1 > 0.8, "f1={f1}");
     }
@@ -116,7 +132,7 @@ mod tests {
         let delay = AdversarialDelay::rotating(8, 0.25, 1e6);
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
         let cfg = ProxConfig { k: 6, step: alpha, iters: 120, lambda: 0.05, w0: None };
-        let out = run_prox(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
         for pair in out.trace.records.windows(2) {
             assert!(
                 pair[1].objective <= 1.6 * pair[0].objective + 1e-12,
@@ -136,7 +152,7 @@ mod tests {
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
         let cfg = ProxConfig { k: 3, step: alpha, iters: 150, lambda: 0.2, w0: None };
-        let out = run_prox(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
         let nnz = out.w.iter().filter(|&&v| v != 0.0).count();
         assert!(nnz < 40, "soft-thresholding must zero out coordinates (nnz={nnz})");
         assert!(nnz >= 1);

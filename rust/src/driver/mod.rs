@@ -1,0 +1,688 @@
+//! # Experiment driver — the one entry point for every solver
+//!
+//! The paper's central claim is that *oblivious* encoding composes with
+//! many first-order methods: gradient descent, L-BFGS, proximal
+//! gradient, block coordinate descent, and the asynchronous baselines
+//! all share the same problem → encoding → cluster → solve → evaluate
+//! pipeline. [`Experiment`] owns that wiring once, so benches, examples,
+//! tests, and the launcher describe *what* to run, not how to plumb it:
+//!
+//! ```no_run
+//! use coded_opt::config::Scheme;
+//! use coded_opt::data::synth::gaussian_linear;
+//! use coded_opt::delay::MixtureDelay;
+//! use coded_opt::driver::{Experiment, Gd, Problem};
+//! use coded_opt::objectives::{QuadObjective, RidgeProblem};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let (x, y, _) = gaussian_linear(512, 64, 0.5, 42);
+//! let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+//! let out = Experiment::new(Problem::least_squares(&x, &y))
+//!     .scheme(Scheme::Hadamard)
+//!     .workers(8)
+//!     .wait_for(6)
+//!     .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 7)))
+//!     .eval(|w| (prob.objective(w), 0.0))
+//!     .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(200))?;
+//! println!("f(w_T) = {:.6}", out.trace.final_objective());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! A [`Solver`] is any of [`Gd`], [`Lbfgs`], [`Prox`] (data parallelism),
+//! [`Bcd`] (model parallelism), or the [`AsyncGd`] / [`AsyncBcd`]
+//! parameter-server baselines; all six run through the same builder and
+//! return the same [`RunOutput`].
+//!
+//! ## Normalization convention
+//!
+//! Encoding constructions produce `SᵀS = β·I` (unit-norm tight frames).
+//! The driver hands each worker the *Parseval-normalized* block
+//! `S̄_i = S_i/√β`, so `S̄ᵀS̄ = I` and the encoded objective equals the
+//! original objective exactly when all `m` workers respond — including
+//! the regularizer weighting (the paper's §4.1 optimality-preservation
+//! argument). When only `k` of `m` respond, the assembled partial sums
+//! are rescaled by `m/k`, which is unbiased under random active sets
+//! `A_t`; the BRIP condition (Definition 1) bounds the worst case under
+//! adversarial ones. Convergence is always *evaluated* on the ORIGINAL
+//! objective, which is why [`Experiment::eval`] receives the plain
+//! iterate `w` (for model parallelism: the reconstruction `w = S̄ᵀv`).
+//!
+//! ## Straggler injection, engines, and the AOT runtime
+//!
+//! - [`Experiment::delay`] installs a straggler [`DelayModel`] factory
+//!   (called with the worker count `m` once per run, keeping repeated
+//!   runs of one experiment statistically independent but reproducible).
+//! - [`Experiment::engine`] picks the virtual-clock [`SimCluster`]
+//!   (deterministic; drives all paper figures) or the OS-thread
+//!   [`ThreadCluster`] (wall-clock, real interrupts).
+//! - [`Experiment::runtime`] attaches an AOT artifact index; workers
+//!   whose shard shape matches a compiled `quad_grad` module execute
+//!   their gradient hot path on PJRT, and [`RunOutput::pjrt_attached`]
+//!   reports how many did.
+
+pub mod solvers;
+
+pub use solvers::{AsyncBcd, AsyncGd, Bcd, Gd, Lbfgs, Prox, Solver};
+
+use std::cell::RefCell;
+
+use crate::cluster::{Gather, SimCluster, ThreadCluster, WorkerNode};
+use crate::config::{DelaySpec, Scheme};
+use crate::coordinator::bcd::{build_model_parallel, logistic_phi, quadratic_phi};
+use crate::coordinator::{build_data_parallel_with_runtime, EvalFn, GradAssembler};
+use crate::delay::{from_spec, DelayModel, NoDelay};
+use crate::encoding::{partition_bounds, SMatrix};
+use crate::linalg::Mat;
+use crate::metrics::{Participation, Trace};
+use crate::runtime::ArtifactIndex;
+use anyhow::Result;
+
+/// Loss over the linear predictor `u = Xw` — the φ of the paper's
+/// composite objective `f(w) = φ(Xw) + λh(w)`.
+#[derive(Clone, Copy, Debug)]
+pub enum Loss<'a> {
+    /// Least squares: `φ(u) = 1/(2n)·‖u − y‖²`.
+    Quadratic { y: &'a [f64] },
+    /// Logistic loss over label-scaled rows:
+    /// `φ(u) = 1/n·Σ log(1 + e^{−uᵢ})`.
+    Logistic,
+}
+
+/// The optimization problem an [`Experiment`] distributes: the data
+/// matrix plus the loss over its linear predictor.
+#[derive(Clone, Copy, Debug)]
+pub struct Problem<'a> {
+    x: &'a Mat,
+    loss: Loss<'a>,
+}
+
+impl<'a> Problem<'a> {
+    /// Least-squares problem on `(X, y)` — ridge / LASSO / quadratic BCD.
+    pub fn least_squares(x: &'a Mat, y: &'a [f64]) -> Self {
+        assert_eq!(x.rows(), y.len(), "X/y row mismatch");
+        Problem { x, loss: Loss::Quadratic { y } }
+    }
+
+    /// Logistic-regression problem on label-scaled rows (model-parallel
+    /// BCD and the async baseline; the labels are folded into `X`).
+    pub fn logistic(x: &'a Mat) -> Self {
+        Problem { x, loss: Loss::Logistic }
+    }
+
+    pub fn x(&self) -> &'a Mat {
+        self.x
+    }
+
+    pub fn loss(&self) -> Loss<'a> {
+        self.loss
+    }
+}
+
+/// Cluster engine selection.
+#[derive(Clone, Copy, Debug)]
+pub enum Engine {
+    /// Deterministic virtual-clock simulation ([`SimCluster`]).
+    Sim,
+    /// Real OS threads with wall-clock interrupts ([`ThreadCluster`]).
+    /// Injected delays are multiplied by `delay_scale` (scale the
+    /// paper's 20-second stragglers down to test-friendly milliseconds).
+    Threads { delay_scale: f64 },
+}
+
+/// How the experiment sources its straggler delays.
+enum DelayChoice<'a> {
+    /// No injected delay.
+    None,
+    /// Factory called with the worker count `m` once per run.
+    Factory(Box<dyn Fn(usize) -> Box<dyn DelayModel> + 'a>),
+    /// A pre-built model, usable for exactly one run.
+    Once(RefCell<Option<Box<dyn DelayModel>>>),
+    /// Config-driven spec, instantiated with (m, seed) per run.
+    Spec(DelaySpec, u64),
+}
+
+/// Unified result of an [`Experiment::run`]: the convergence trace on
+/// the original objective, the final iterate, per-node participation,
+/// and how many workers executed on the PJRT runtime.
+#[derive(Clone, Debug)]
+pub struct RunOutput {
+    pub trace: Trace,
+    /// Final iterate `w_T` (model parallelism: reconstructed `S̄ᵀv_T`).
+    pub w: Vec<f64>,
+    pub participation: Participation,
+    /// Workers whose shard matched an AOT artifact and ran on PJRT
+    /// (0 without [`Experiment::runtime`], and for model-parallel/async
+    /// solvers, which have no AOT kernel).
+    pub pjrt_attached: usize,
+    /// Achieved redundancy β (1.0 for uncoded/async runs; constructions
+    /// round to feasible sizes so this can differ from the request).
+    pub beta: f64,
+}
+
+/// Builder-style driver for one encoded-optimization experiment.
+///
+/// See the [module docs](self) for the full picture; construction starts
+/// from a [`Problem`] and every knob has a paper-faithful default:
+/// Hadamard scheme, `m = 8`, `k = m`, `β = 2`, seed 42, no injected
+/// delay, virtual-clock engine with the [`SimCluster`] default timing.
+pub struct Experiment<'a> {
+    problem: Problem<'a>,
+    scheme: Scheme,
+    m: usize,
+    k: Option<usize>,
+    beta: f64,
+    seed: u64,
+    label: String,
+    secs_per_unit: f64,
+    master_overhead: f64,
+    engine: Engine,
+    /// Whether `timing()` was explicitly configured (rejected loudly
+    /// under `Engine::Threads`, which measures wall-clock).
+    timing_set: bool,
+    runtime: Option<&'a ArtifactIndex>,
+    delay: DelayChoice<'a>,
+    #[allow(clippy::type_complexity)]
+    eval: Option<Box<dyn Fn(&[f64]) -> (f64, f64) + 'a>>,
+    w0: Option<Vec<f64>>,
+}
+
+impl<'a> Experiment<'a> {
+    pub fn new(problem: Problem<'a>) -> Self {
+        Experiment {
+            problem,
+            scheme: Scheme::Hadamard,
+            m: 8,
+            k: None,
+            beta: 2.0,
+            seed: 42,
+            label: String::new(),
+            // SimCluster's defaults, so driver runs are bit-identical to
+            // hand-wired `SimCluster::new(..)` runs.
+            secs_per_unit: 0.01,
+            master_overhead: 0.001,
+            engine: Engine::Sim,
+            timing_set: false,
+            runtime: None,
+            delay: DelayChoice::None,
+            eval: None,
+            w0: None,
+        }
+    }
+
+    /// Encoding scheme (paper §4). Default: Hadamard.
+    pub fn scheme(mut self, scheme: Scheme) -> Self {
+        self.scheme = scheme;
+        self
+    }
+
+    /// Worker count `m`. Default: 8.
+    pub fn workers(mut self, m: usize) -> Self {
+        self.m = m;
+        self
+    }
+
+    /// Wait-for-`k`: responses gathered per round before the rest are
+    /// interrupted. Default: `m` (full gather).
+    pub fn wait_for(mut self, k: usize) -> Self {
+        self.k = Some(k);
+        self
+    }
+
+    /// Redundancy factor `β ≥ 1`. Default: 2.
+    pub fn redundancy(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    /// Encoding / data seed. Default: 42.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Trace label. Default: the solver's name.
+    pub fn label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    /// Install a straggler-delay factory; it receives the worker count
+    /// `m` and is invoked once per [`run`](Self::run).
+    pub fn delay<F>(mut self, factory: F) -> Self
+    where
+        F: Fn(usize) -> Box<dyn DelayModel> + 'a,
+    {
+        self.delay = DelayChoice::Factory(Box::new(factory));
+        self
+    }
+
+    /// Install a pre-built delay model. Supports exactly one
+    /// [`run`](Self::run); use [`delay`](Self::delay) for reusable
+    /// experiments.
+    pub fn delay_model(mut self, model: Box<dyn DelayModel>) -> Self {
+        self.delay = DelayChoice::Once(RefCell::new(Some(model)));
+        self
+    }
+
+    /// Install a config-driven delay spec, instantiated with `(m, seed)`
+    /// per run.
+    pub fn delay_spec(mut self, spec: DelaySpec, seed: u64) -> Self {
+        self.delay = DelayChoice::Spec(spec, seed);
+        self
+    }
+
+    /// Simulated seconds per unit of worker cost and master per-round
+    /// overhead ([`SimCluster`] timing). Defaults: 0.01 / 0.001.
+    /// [`Engine::Sim`] only — [`Engine::Threads`] measures wall-clock,
+    /// so combining the two is rejected at run time.
+    pub fn timing(mut self, secs_per_unit: f64, master_overhead: f64) -> Self {
+        self.secs_per_unit = secs_per_unit;
+        self.master_overhead = master_overhead;
+        self.timing_set = true;
+        self
+    }
+
+    /// Cluster engine. Default: [`Engine::Sim`].
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Attach the AOT artifact index: matching shards execute their
+    /// gradient hot path on PJRT ([`RunOutput::pjrt_attached`] reports
+    /// how many).
+    pub fn runtime(mut self, index: &'a ArtifactIndex) -> Self {
+        self.runtime = Some(index);
+        self
+    }
+
+    /// Evaluation callback mapping the iterate to
+    /// `(original objective, test metric)` for the trace. Default:
+    /// `(0.0, 0.0)` (timing-only runs).
+    pub fn eval<F>(mut self, eval: F) -> Self
+    where
+        F: Fn(&[f64]) -> (f64, f64) + 'a,
+    {
+        self.eval = Some(Box::new(eval));
+        self
+    }
+
+    /// Initial iterate (defaults to 0). Supported by the data-parallel
+    /// solvers (`Gd`/`Lbfgs`/`Prox`); `Bcd` and the async baselines
+    /// always start from 0 and reject a warm start with an error.
+    pub fn w0(mut self, w0: Vec<f64>) -> Self {
+        self.w0 = Some(w0);
+        self
+    }
+
+    /// Effective wait-for-`k` (defaults to `m`).
+    pub fn effective_k(&self) -> usize {
+        self.k.unwrap_or(self.m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.m >= 1, "workers must be ≥ 1");
+        let k = self.effective_k();
+        anyhow::ensure!(
+            k >= 1 && k <= self.m,
+            "k must satisfy 1 ≤ k ≤ m (k={k}, m={})",
+            self.m
+        );
+        anyhow::ensure!(self.beta >= 1.0, "redundancy β must be ≥ 1 (got {})", self.beta);
+        Ok(())
+    }
+
+    /// Run a solver through the wired pipeline.
+    pub fn run(&self, solver: impl Solver) -> Result<RunOutput> {
+        self.validate()?;
+        let label =
+            if self.label.is_empty() { solver.name().to_string() } else { self.label.clone() };
+        let mut ctx = Ctx { exp: self, label, pjrt_attached: 0, beta: 1.0 };
+        let core = solver.solve(&mut ctx)?;
+        Ok(RunOutput {
+            trace: core.trace,
+            w: core.w,
+            participation: core.participation,
+            pjrt_attached: ctx.pjrt_attached,
+            beta: ctx.beta,
+        })
+    }
+
+    /// Escape hatch for harnesses that drive gather rounds manually
+    /// (microbenches, invariant tests): the fully wired data-parallel
+    /// cluster + assembler, without running a solver.
+    pub fn assemble_data_parallel(&self) -> Result<DataParallelParts> {
+        self.validate()?;
+        let mut ctx =
+            Ctx { exp: self, label: self.label.clone(), pjrt_attached: 0, beta: 1.0 };
+        let (cluster, assembler) = ctx.data_parallel()?;
+        Ok(DataParallelParts {
+            cluster,
+            assembler,
+            pjrt_attached: ctx.pjrt_attached,
+            beta: ctx.beta,
+        })
+    }
+
+}
+
+/// Wired data-parallel pipeline pieces (see
+/// [`Experiment::assemble_data_parallel`]).
+pub struct DataParallelParts {
+    pub cluster: Box<dyn Gather>,
+    pub assembler: GradAssembler,
+    pub pjrt_attached: usize,
+    pub beta: f64,
+}
+
+/// Wired model-parallel pipeline pieces, produced by
+/// [`Ctx::model_parallel`] for the [`Bcd`] solver (and any custom
+/// model-parallel [`Solver`] implementation).
+pub struct ModelParallelParts {
+    pub cluster: Box<dyn Gather>,
+    /// Parseval-normalized blocks `S̄_i` (reconstruct `w = S̄ᵀv`).
+    pub sbar: Vec<SMatrix>,
+    /// Data rows n and model dimension p.
+    pub n: usize,
+    pub p: usize,
+    pub beta: f64,
+}
+
+fn zero_eval(_w: &[f64]) -> (f64, f64) {
+    (0.0, 0.0)
+}
+
+/// The wiring context a [`Solver`] sees: accessors for the experiment's
+/// knobs plus on-demand builders for each parallelism mode. Solvers call
+/// only what they need; the driver records what was built
+/// (`pjrt_attached`, achieved β) for the [`RunOutput`].
+pub struct Ctx<'e, 'a> {
+    exp: &'e Experiment<'a>,
+    label: String,
+    pub(crate) pjrt_attached: usize,
+    pub(crate) beta: f64,
+}
+
+impl<'e, 'a> Ctx<'e, 'a> {
+    pub fn k(&self) -> usize {
+        self.exp.effective_k()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.exp.m
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.exp.seed
+    }
+
+    pub fn label(&self) -> &str {
+        &self.label
+    }
+
+    pub fn w0(&self) -> Option<Vec<f64>> {
+        self.exp.w0.clone()
+    }
+
+    /// Data rows n.
+    pub fn n(&self) -> usize {
+        self.exp.problem.x.rows()
+    }
+
+    /// Model dimension p.
+    pub fn p(&self) -> usize {
+        self.exp.problem.x.cols()
+    }
+
+    pub fn secs_per_unit(&self) -> f64 {
+        self.exp.secs_per_unit
+    }
+
+    /// The experiment's evaluation callback (`(0, 0)` when unset).
+    pub fn eval_fn(&self) -> &EvalFn<'_> {
+        match &self.exp.eval {
+            Some(f) => &**f,
+            None => &zero_eval,
+        }
+    }
+
+    /// Instantiate the experiment's straggler delay model.
+    pub fn delay_model(&self) -> Result<Box<dyn DelayModel>> {
+        let model = match &self.exp.delay {
+            DelayChoice::None => Box::new(NoDelay::new(self.exp.m)) as Box<dyn DelayModel>,
+            DelayChoice::Factory(f) => f(self.exp.m),
+            DelayChoice::Once(cell) => cell.borrow_mut().take().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "Experiment::delay_model supports a single run; \
+                     use Experiment::delay(factory) for repeated runs"
+                )
+            })?,
+            DelayChoice::Spec(spec, seed) => from_spec(spec, self.exp.m, *seed),
+        };
+        anyhow::ensure!(
+            model.workers() == self.exp.m,
+            "delay model sized for {} workers, experiment has m={}",
+            model.workers(),
+            self.exp.m
+        );
+        Ok(model)
+    }
+
+    /// Guard for solvers whose algorithm state always starts at 0
+    /// (BCD's lifted `v`, the async baselines): a configured warm start
+    /// would be silently ignored, so reject it loudly instead.
+    pub fn reject_w0(&self, who: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.exp.w0.is_none(),
+            "{who} always starts from 0 and does not support Experiment::w0"
+        );
+        Ok(())
+    }
+
+    /// Guard for the event-queue async solvers, which have no cluster
+    /// and therefore cannot honor [`Engine::Threads`].
+    pub fn require_sim_engine(&self, who: &str) -> Result<()> {
+        match self.exp.engine {
+            Engine::Sim => Ok(()),
+            Engine::Threads { .. } => anyhow::bail!(
+                "{who} simulates asynchrony on a virtual-time event queue \
+                 and does not support Engine::Threads"
+            ),
+        }
+    }
+
+    fn require_y(&self, who: &str) -> Result<&'a [f64]> {
+        match self.exp.problem.loss {
+            Loss::Quadratic { y } => Ok(y),
+            Loss::Logistic => anyhow::bail!(
+                "{who} need a least-squares problem (Problem::least_squares); \
+                 logistic regression runs model-parallel (Bcd / AsyncBcd)"
+            ),
+        }
+    }
+
+    fn cluster(&self, workers: Vec<Box<dyn WorkerNode>>) -> Result<Box<dyn Gather>> {
+        let delay = self.delay_model()?;
+        Ok(match self.exp.engine {
+            Engine::Sim => Box::new(
+                SimCluster::new(workers, delay)
+                    .with_timing(self.exp.secs_per_unit, self.exp.master_overhead),
+            ),
+            Engine::Threads { delay_scale } => {
+                anyhow::ensure!(
+                    !self.exp.timing_set,
+                    "Experiment::timing configures the virtual clock and is \
+                     ignored by Engine::Threads (wall-clock); drop one of the two"
+                );
+                Box::new(ThreadCluster::new(workers, delay).with_delay_scale(delay_scale))
+            }
+        })
+    }
+
+    /// Build the encoded data-parallel pipeline: worker shards
+    /// `(S̄_iX, S̄_iy)` behind a gathered cluster, plus the master-side
+    /// assembler.
+    pub fn data_parallel(&mut self) -> Result<(Box<dyn Gather>, GradAssembler)> {
+        let exp = self.exp;
+        let y = self.require_y("data-parallel solvers")?;
+        let dp = build_data_parallel_with_runtime(
+            exp.problem.x,
+            y,
+            exp.scheme,
+            exp.m,
+            exp.beta,
+            exp.seed,
+            exp.runtime,
+        )?;
+        self.pjrt_attached = dp.pjrt_attached;
+        self.beta = dp.beta;
+        let assembler = dp.assembler.clone();
+        Ok((self.cluster(dp.workers)?, assembler))
+    }
+
+    /// Build the encoded model-parallel pipeline: per-worker column
+    /// blocks `A_i = X·S̄_iᵀ` with the loss's `∇φ` baked in.
+    pub fn model_parallel(&mut self, step: f64, lambda: f64) -> Result<ModelParallelParts> {
+        let exp = self.exp;
+        let mp = match exp.problem.loss {
+            Loss::Quadratic { y } => build_model_parallel(
+                exp.problem.x,
+                exp.scheme,
+                exp.m,
+                exp.beta,
+                step,
+                lambda,
+                exp.seed,
+                quadratic_phi(y.to_vec()),
+            )?,
+            Loss::Logistic => build_model_parallel(
+                exp.problem.x,
+                exp.scheme,
+                exp.m,
+                exp.beta,
+                step,
+                lambda,
+                exp.seed,
+                logistic_phi(),
+            )?,
+        };
+        self.beta = mp.beta;
+        let (n, p) = (mp.n, mp.p);
+        Ok(ModelParallelParts {
+            cluster: self.cluster(mp.workers)?,
+            sbar: mp.sbar,
+            n,
+            p,
+            beta: mp.beta,
+        })
+    }
+
+    /// Uncoded row shards `(X_i, y_i)` for the async data-parallel
+    /// baseline.
+    pub fn uncoded_row_shards(&self) -> Result<Vec<(Mat, Vec<f64>)>> {
+        let y = self.require_y("async gradient descent")?;
+        let x = self.exp.problem.x;
+        let bounds = partition_bounds(x.rows(), self.exp.m);
+        Ok(bounds
+            .windows(2)
+            .map(|w| (x.row_block(w[0], w[1]), y[w[0]..w[1]].to_vec()))
+            .collect())
+    }
+
+    /// Uncoded column blocks `X_{:,B_i}` for the async model-parallel
+    /// baseline.
+    pub fn uncoded_col_blocks(&self) -> Vec<Mat> {
+        let x = self.exp.problem.x;
+        let bounds = partition_bounds(x.cols(), self.exp.m);
+        bounds
+            .windows(2)
+            .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
+            .collect()
+    }
+
+    /// `∇φ` of the problem's loss as a callable over the n-vector `Xw` —
+    /// the same factories the BCD workers are built from, so the coded
+    /// and async paths can never drift apart on the gradient formula.
+    pub fn grad_phi(&self) -> Box<dyn Fn(&[f64]) -> Vec<f64> + Send> {
+        match self.exp.problem.loss {
+            Loss::Quadratic { y } => quadratic_phi(y.to_vec())(),
+            Loss::Logistic => logistic_phi()(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_linear;
+    use crate::delay::ConstantDelay;
+
+    #[test]
+    fn defaults_and_validation() {
+        let (x, y, _) = gaussian_linear(32, 4, 0.2, 1);
+        let exp = Experiment::new(Problem::least_squares(&x, &y));
+        assert_eq!(exp.effective_k(), 8, "k defaults to m");
+        assert!(exp.validate().is_ok());
+        let bad = Experiment::new(Problem::least_squares(&x, &y)).workers(4).wait_for(5);
+        assert!(bad.validate().is_err(), "k > m must be rejected");
+        let bad = Experiment::new(Problem::least_squares(&x, &y)).redundancy(0.5);
+        assert!(bad.validate().is_err(), "β < 1 must be rejected");
+    }
+
+    #[test]
+    fn label_defaults_to_solver_name() {
+        let (x, y, _) = gaussian_linear(32, 4, 0.2, 3);
+        let exp = Experiment::new(Problem::least_squares(&x, &y)).workers(4).wait_for(4);
+        let out = exp.run(Gd::with_step(0.01).iters(3)).unwrap();
+        assert_eq!(out.trace.label, "gd");
+        let out = exp.label("custom").run(Gd::with_step(0.01).iters(3)).unwrap();
+        assert_eq!(out.trace.label, "custom");
+    }
+
+    #[test]
+    fn factory_delay_supports_repeated_runs() {
+        let (x, y, _) = gaussian_linear(32, 4, 0.2, 5);
+        let exp = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(4)
+            .wait_for(3)
+            .delay(|m| Box::new(ConstantDelay::new(m, 0.5)));
+        let a = exp.run(Gd::with_step(0.01).iters(4)).unwrap();
+        let b = exp.run(Gd::with_step(0.01).iters(4)).unwrap();
+        assert_eq!(a.w, b.w, "identical wiring must reproduce bit-identically");
+        assert_eq!(a.trace.len(), 4);
+    }
+
+    #[test]
+    fn one_shot_delay_model_errors_on_reuse() {
+        let (x, y, _) = gaussian_linear(32, 4, 0.2, 7);
+        let exp = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(4)
+            .delay_model(Box::new(ConstantDelay::new(4, 0.1)));
+        assert!(exp.run(Gd::with_step(0.01).iters(2)).is_ok());
+        let err = exp.run(Gd::with_step(0.01).iters(2)).unwrap_err();
+        assert!(err.to_string().contains("single run"), "got: {err}");
+    }
+
+    #[test]
+    fn logistic_problem_rejected_by_data_parallel_solvers() {
+        let (x, _, _) = gaussian_linear(32, 4, 0.2, 9);
+        let exp = Experiment::new(Problem::logistic(&x)).workers(4);
+        assert!(exp.run(Gd::with_step(0.01).iters(2)).is_err());
+        assert!(exp.run(Lbfgs::new().iters(2)).is_err());
+        assert!(exp.run(Prox::with_step(0.01).iters(2)).is_err());
+    }
+
+    #[test]
+    fn assemble_data_parallel_reports_parts() {
+        let (x, y, _) = gaussian_linear(32, 4, 0.2, 11);
+        let parts = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(4)
+            .assemble_data_parallel()
+            .unwrap();
+        assert_eq!(parts.cluster.workers(), 4);
+        assert_eq!(parts.assembler.p, 4);
+        assert_eq!(parts.pjrt_attached, 0, "no runtime attached");
+        assert!(parts.beta >= 1.0);
+    }
+}

@@ -1,0 +1,451 @@
+//! The [`Solver`] trait and its six implementations — the algorithm
+//! layer of the [`Experiment`](super::Experiment) driver.
+//!
+//! Data-parallel (encoded objective, Algorithms 1–2): [`Gd`], [`Lbfgs`],
+//! [`Prox`]. Model-parallel (Algorithms 3–4): [`Bcd`]. Parameter-server
+//! baselines (the Figures 10–13 comparison): [`AsyncGd`], [`AsyncBcd`].
+//!
+//! Each solver carries only its *algorithmic* hyper-parameters (step
+//! size, iteration budget, regularizer weight, …); everything about the
+//! distributed substrate — scheme, `m`, wait-for-`k`, redundancy,
+//! delays, engine, runtime — lives on the `Experiment` and is delivered
+//! through the [`Ctx`] wiring context.
+
+use super::Ctx;
+use crate::coordinator::asynchronous::{
+    async_bcd_loop, async_gd_loop, AsyncBcdConfig, AsyncGdConfig,
+};
+use crate::coordinator::bcd::{bcd_loop, BcdConfig};
+use crate::coordinator::gd::{gd_loop, GdConfig, RunOutput as CoreOutput};
+use crate::coordinator::lbfgs::{lbfgs_loop, LbfgsConfig};
+use crate::coordinator::prox::{prox_loop, ProxConfig};
+use anyhow::Result;
+
+/// An optimization algorithm runnable through
+/// [`Experiment::run`](super::Experiment::run).
+pub trait Solver {
+    /// Short name, used as the default trace label.
+    fn name(&self) -> &'static str;
+
+    /// Execute against the experiment's wiring context.
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput>;
+}
+
+impl<S: Solver + ?Sized> Solver for &S {
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
+        (**self).solve(ctx)
+    }
+}
+
+/// Encoded gradient descent (Theorem 2).
+#[derive(Clone, Copy, Debug)]
+pub struct Gd {
+    step: f64,
+    lambda: f64,
+    iters: usize,
+}
+
+impl Gd {
+    /// Fixed step size α (typically `1/M` for an `M`-smooth objective).
+    pub fn with_step(step: f64) -> Self {
+        Gd { step, lambda: 0.0, iters: 100 }
+    }
+
+    /// Smooth ℓ₂ regularizer weight (`h(w) = ‖w‖²/2`). Default 0.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Outer iterations T. Default 100.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+}
+
+impl Solver for Gd {
+    fn name(&self) -> &'static str {
+        "gd"
+    }
+
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
+        let (mut cluster, assembler) = ctx.data_parallel()?;
+        let cfg = GdConfig {
+            k: ctx.k(),
+            step: self.step,
+            iters: self.iters,
+            lambda: self.lambda,
+            w0: ctx.w0(),
+        };
+        Ok(gd_loop(cluster.as_mut(), &assembler, &cfg, ctx.label(), ctx.eval_fn()))
+    }
+}
+
+/// Encoded L-BFGS with overlap curvature pairs and exact line search
+/// over the fastest-k set (Theorem 4).
+#[derive(Clone, Copy, Debug)]
+pub struct Lbfgs {
+    lambda: f64,
+    iters: usize,
+    memory: usize,
+    rho: f64,
+}
+
+impl Default for Lbfgs {
+    fn default() -> Self {
+        Lbfgs { lambda: 0.0, iters: 100, memory: 10, rho: 0.9 }
+    }
+}
+
+impl Lbfgs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// ℓ₂ regularizer weight (the paper requires a quadratic regularizer
+    /// for L-BFGS). Default 0.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Outer iterations T (two gather rounds each). Default 100.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+
+    /// Memory length σ. Default 10.
+    pub fn memory(mut self, memory: usize) -> Self {
+        self.memory = memory;
+        self
+    }
+
+    /// Line-search back-off ρ ∈ (0, 1). Default 0.9.
+    pub fn rho(mut self, rho: f64) -> Self {
+        self.rho = rho;
+        self
+    }
+}
+
+impl Solver for Lbfgs {
+    fn name(&self) -> &'static str {
+        "lbfgs"
+    }
+
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
+        let (mut cluster, assembler) = ctx.data_parallel()?;
+        let cfg = LbfgsConfig {
+            k: ctx.k(),
+            iters: self.iters,
+            lambda: self.lambda,
+            memory: self.memory,
+            rho: self.rho,
+            w0: ctx.w0(),
+        };
+        Ok(lbfgs_loop(cluster.as_mut(), &assembler, &cfg, ctx.label(), ctx.eval_fn()))
+    }
+}
+
+/// Encoded proximal gradient / ISTA (Theorem 5) — the LASSO workhorse.
+#[derive(Clone, Copy, Debug)]
+pub struct Prox {
+    step: f64,
+    lambda: f64,
+    iters: usize,
+}
+
+impl Prox {
+    /// Step size α < 1/M.
+    pub fn with_step(step: f64) -> Self {
+        Prox { step, lambda: 0.0, iters: 100 }
+    }
+
+    /// ℓ₁ weight λ. Default 0.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Outer iterations T. Default 100.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+}
+
+impl Solver for Prox {
+    fn name(&self) -> &'static str {
+        "prox"
+    }
+
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
+        let (mut cluster, assembler) = ctx.data_parallel()?;
+        let cfg = ProxConfig {
+            k: ctx.k(),
+            step: self.step,
+            iters: self.iters,
+            lambda: self.lambda,
+            w0: ctx.w0(),
+        };
+        Ok(prox_loop(cluster.as_mut(), &assembler, &cfg, ctx.label(), ctx.eval_fn()))
+    }
+}
+
+/// Encoded block coordinate descent under model parallelism
+/// (Algorithms 3–4, Theorem 6).
+#[derive(Clone, Copy, Debug)]
+pub struct Bcd {
+    step: f64,
+    lambda: f64,
+    iters: usize,
+}
+
+impl Bcd {
+    /// Per-block step size α.
+    pub fn with_step(step: f64) -> Self {
+        Bcd { step, lambda: 0.0, iters: 100 }
+    }
+
+    /// Lifted ℓ₂ regularizer weight on `v` (block-separable `λ‖v‖²`).
+    /// Default 0.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Outer iterations T. Default 100.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.iters = iters;
+        self
+    }
+}
+
+impl Solver for Bcd {
+    fn name(&self) -> &'static str {
+        "bcd"
+    }
+
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
+        ctx.reject_w0("Bcd")?;
+        let parts = ctx.model_parallel(self.step, self.lambda)?;
+        let mut cluster = parts.cluster;
+        let cfg = BcdConfig { k: ctx.k(), iters: self.iters };
+        Ok(bcd_loop(
+            cluster.as_mut(),
+            &parts.sbar,
+            parts.n,
+            parts.p,
+            &cfg,
+            ctx.label(),
+            ctx.eval_fn(),
+        ))
+    }
+}
+
+/// Asynchronous parameter-server gradient descent over uncoded row
+/// shards (the Figures 10–13 baseline). Ignores `scheme` / `wait_for` /
+/// `runtime`: asynchrony has no rounds and no encoding.
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncGd {
+    step: f64,
+    lambda: f64,
+    updates: usize,
+    record_every: usize,
+}
+
+impl AsyncGd {
+    /// Per-update step size.
+    pub fn with_step(step: f64) -> Self {
+        AsyncGd { step, lambda: 0.0, updates: 1000, record_every: 100 }
+    }
+
+    /// ℓ₂ regularizer weight. Default 0.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Total worker updates to apply (comparable budget: iterations × k).
+    /// Default 1000.
+    pub fn updates(mut self, updates: usize) -> Self {
+        self.updates = updates;
+        self
+    }
+
+    /// Trace-point stride in updates. Default 100.
+    pub fn record_every(mut self, record_every: usize) -> Self {
+        self.record_every = record_every;
+        self
+    }
+}
+
+impl Solver for AsyncGd {
+    fn name(&self) -> &'static str {
+        "async-gd"
+    }
+
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
+        ctx.reject_w0("AsyncGd")?;
+        ctx.require_sim_engine("AsyncGd")?;
+        ctx.beta = 1.0;
+        let shards = ctx.uncoded_row_shards()?;
+        let mut delay = ctx.delay_model()?;
+        let cfg = AsyncGdConfig {
+            step: self.step,
+            lambda: self.lambda,
+            updates: self.updates,
+            secs_per_unit: ctx.secs_per_unit(),
+            record_every: self.record_every,
+        };
+        Ok(async_gd_loop(
+            &shards,
+            delay.as_mut(),
+            ctx.n(),
+            ctx.p(),
+            &cfg,
+            ctx.label(),
+            ctx.eval_fn(),
+        ))
+    }
+}
+
+/// Asynchronous block coordinate descent over uncoded column blocks.
+/// The evaluation callback receives the concatenated coordinate blocks
+/// as `w`, like every other solver.
+#[derive(Clone, Copy, Debug)]
+pub struct AsyncBcd {
+    step: f64,
+    lambda: f64,
+    updates: usize,
+    record_every: usize,
+}
+
+impl AsyncBcd {
+    /// Per-update step size.
+    pub fn with_step(step: f64) -> Self {
+        AsyncBcd { step, lambda: 0.0, updates: 1000, record_every: 100 }
+    }
+
+    /// Block regularizer weight. Default 0.
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = lambda;
+        self
+    }
+
+    /// Total block updates to apply. Default 1000.
+    pub fn updates(mut self, updates: usize) -> Self {
+        self.updates = updates;
+        self
+    }
+
+    /// Trace-point stride in updates. Default 100.
+    pub fn record_every(mut self, record_every: usize) -> Self {
+        self.record_every = record_every;
+        self
+    }
+}
+
+impl Solver for AsyncBcd {
+    fn name(&self) -> &'static str {
+        "async-bcd"
+    }
+
+    fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
+        ctx.reject_w0("AsyncBcd")?;
+        ctx.require_sim_engine("AsyncBcd")?;
+        ctx.beta = 1.0;
+        let blocks = ctx.uncoded_col_blocks();
+        let phi = ctx.grad_phi();
+        let mut delay = ctx.delay_model()?;
+        let cfg = AsyncBcdConfig {
+            step: self.step,
+            lambda: self.lambda,
+            updates: self.updates,
+            secs_per_unit: ctx.secs_per_unit(),
+            record_every: self.record_every,
+        };
+        let eval = ctx.eval_fn();
+        let eval_blocks = |v: &[Vec<f64>]| -> (f64, f64) {
+            let w: Vec<f64> = v.iter().flatten().copied().collect();
+            eval(&w)
+        };
+        let (trace, v, participation) = async_bcd_loop(
+            &blocks,
+            &*phi,
+            ctx.n(),
+            &cfg,
+            delay.as_mut(),
+            ctx.label(),
+            &eval_blocks,
+        );
+        let w: Vec<f64> = v.iter().flatten().copied().collect();
+        Ok(CoreOutput { trace, w, participation })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_linear;
+    use crate::driver::{Experiment, Problem};
+    use crate::objectives::{QuadObjective, RidgeProblem};
+
+    #[test]
+    fn gd_through_driver_descends() {
+        let (x, y, _) = gaussian_linear(48, 6, 0.3, 3);
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(4)
+            .wait_for(4)
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(50))
+            .unwrap();
+        let f0 = prob.objective(&vec![0.0; 6]);
+        assert!(out.trace.final_objective() < 0.5 * f0);
+        assert_eq!(out.trace.len(), 50);
+        assert_eq!(out.w.len(), 6);
+        assert_eq!(out.pjrt_attached, 0);
+        assert!((out.beta - 2.0).abs() < 0.5, "hadamard β ≈ 2, got {}", out.beta);
+    }
+
+    #[test]
+    fn bcd_through_driver_descends() {
+        let (x, y, _) = gaussian_linear(40, 8, 0.2, 5);
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+        let step = 0.5 * 40.0 / x.gram_spectral_norm(60, 3);
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(4)
+            .wait_for(4)
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Bcd::with_step(step).iters(80))
+            .unwrap();
+        let f0 = prob.objective(&vec![0.0; 8]);
+        assert!(out.trace.final_objective() < 0.5 * f0);
+        assert_eq!(out.w.len(), 8, "BCD returns the reconstructed w, not v");
+    }
+
+    #[test]
+    fn async_bcd_eval_sees_concatenated_w() {
+        let (x, y, _) = gaussian_linear(30, 6, 0.2, 7);
+        let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+        let step = 0.5 * 30.0 / x.gram_spectral_norm(60, 4);
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(3)
+            .timing(1e-4, 1e-3)
+            .eval(|w| {
+                assert_eq!(w.len(), 6);
+                (prob.objective(w), 0.0)
+            })
+            .run(AsyncBcd::with_step(step).updates(400).record_every(50))
+            .unwrap();
+        let f0 = prob.objective(&vec![0.0; 6]);
+        assert!(out.trace.final_objective() < 0.5 * f0);
+        assert_eq!(out.w.len(), 6);
+    }
+}

@@ -11,8 +11,44 @@
 //! lost updates, yielding *deterministic* convergence guarantees that hold
 //! for arbitrary (even adversarial) straggler patterns.
 //!
+//! ## Entry point: the [`driver`] module
+//!
+//! Every solver — encoded GD, L-BFGS, proximal gradient, BCD, and the
+//! asynchronous baselines — runs through one composable builder that owns
+//! the problem → encoding → cluster → solve → evaluate wiring:
+//!
+//! ```no_run
+//! use coded_opt::config::Scheme;
+//! use coded_opt::data::synth::gaussian_linear;
+//! use coded_opt::delay::MixtureDelay;
+//! use coded_opt::driver::{Experiment, Lbfgs, Problem};
+//! use coded_opt::objectives::{QuadObjective, RidgeProblem};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let (x, y, _) = gaussian_linear(1024, 256, 0.5, 99);
+//! let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+//! let out = Experiment::new(Problem::least_squares(&x, &y))
+//!     .scheme(Scheme::Hadamard)       // paper §4 encoding
+//!     .workers(32)                    // m
+//!     .wait_for(12)                   // k: fastest-k gather, rest erased
+//!     .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 17)))
+//!     .eval(|w| (prob.objective(w), 0.0))
+//!     .run(Lbfgs::new().lambda(0.05).iters(50))?;
+//! println!("final objective {:.6} after {:.1} simulated seconds",
+//!          out.trace.final_objective(), out.trace.total_time());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The driver's docs also state the normalization convention
+//! (`S̄ᵀS̄ = I` Parseval shards, `m/k` partial-sum rescaling) every layer
+//! below relies on.
+//!
 //! ## Layout
 //!
+//! - [`driver`] — the `Experiment` builder and the `Solver` trait with
+//!   its six implementations; the public API everything else goes
+//!   through.
 //! - [`linalg`] — dense/sparse linear algebra, FWHT, Cholesky, eigensolver.
 //! - [`rng`] — PCG64 PRNG and the distributions used by data generation and
 //!   straggler delay models.
@@ -22,9 +58,9 @@
 //!   background tasks, exponential, adversarial, trace replay).
 //! - [`cluster`] — the simulated master/worker distributed substrate with
 //!   wait-for-`k` gather and interrupts.
-//! - [`coordinator`] — encoded gradient descent, L-BFGS, proximal gradient,
-//!   block coordinate descent, plus uncoded / replication / asynchronous
-//!   baselines.
+//! - [`coordinator`] — the algorithm master loops and worker state
+//!   machines the driver dispatches to (plus deprecated `run_*` shims
+//!   kept for one release).
 //! - [`objectives`] — ridge, LASSO, logistic regression, matrix
 //!   factorization.
 //! - [`data`] — synthetic workload generators mirroring the paper's
@@ -44,6 +80,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod delay;
+pub mod driver;
 pub mod encoding;
 pub mod linalg;
 pub mod metrics;

@@ -2,12 +2,13 @@
 //! wait-fraction η, adaptive-k scheduling, and the two encoding
 //! randomizations (row permutation, column signs).
 
-use coded_opt::cluster::{Gather, SimCluster, Task};
+use coded_opt::cluster::{Gather, Task};
 use coded_opt::config::Scheme;
 use coded_opt::coordinator::schedule::AdaptiveOverlapK;
-use coded_opt::coordinator::{build_data_parallel, run_gd, GdConfig, KIND_GRADIENT};
+use coded_opt::coordinator::KIND_GRADIENT;
 use coded_opt::data::synth::gaussian_linear;
 use coded_opt::delay::{AdversarialDelay, MixtureDelay};
+use coded_opt::driver::{Experiment, Gd, Problem};
 use coded_opt::encoding::Encoding;
 use coded_opt::linalg::symmetric_eigenvalues;
 use coded_opt::objectives::{QuadObjective, RidgeProblem};
@@ -43,13 +44,18 @@ fn ablation_eta_improves_approximation() {
     let step = 1.0 / prob.smoothness();
     let mut subopts = Vec::new();
     for k in [4usize, 6, 8] {
-        let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 3).unwrap();
-        let asm = dp.assembler.clone();
-        // rotating adversary so every k sees erasures
-        let delay = AdversarialDelay::rotating(8, 0.25, 1e6);
-        let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-        let cfg = GdConfig { k, step, iters: 250, lambda: 0.05, w0: None };
-        let out = run_gd(&mut cluster, &asm, &cfg, "eta", &|w| (prob.objective(w), 0.0));
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(Scheme::Hadamard)
+            .workers(8)
+            .wait_for(k)
+            .redundancy(2.0)
+            .seed(3)
+            // rotating adversary so every k sees erasures
+            .delay(|m| Box::new(AdversarialDelay::rotating(m, 0.25, 1e6)))
+            .label("eta")
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Gd::with_step(step).lambda(0.05).iters(250))
+            .unwrap();
         subopts.push((out.trace.final_objective() - f_star) / f_star);
     }
     assert!(
@@ -69,11 +75,15 @@ fn ablation_adaptive_k_maintains_overlap() {
     let beta = 2.0;
     let policy = AdaptiveOverlapK::new(m, beta, 4);
     let (x, y, _) = gaussian_linear(128, 8, 0.3, 5);
-    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, m, beta, 5).unwrap();
-    let mut cluster = SimCluster::new(
-        dp.workers,
-        Box::new(MixtureDelay::paper_bimodal(m, 7)),
-    );
+    let mut parts = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(m)
+        .redundancy(beta)
+        .seed(5)
+        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 7)))
+        .assemble_data_parallel()
+        .unwrap();
+    let cluster = &mut parts.cluster;
     let w = vec![0.0; 8];
     // probe with full gathers to see complete arrival orders, then ask
     // the policy what k it WOULD have chosen, and verify overlap.
@@ -135,13 +145,18 @@ fn ablation_encoding_beats_sketching_at_equal_compute() {
     let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
     let f_star = prob.objective(&prob.solve_exact());
     // encoded, k=6 of 8 (compute ≈ 2·(6/8) = 1.5× data passes)
-    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 9).unwrap();
-    let asm = dp.assembler.clone();
-    let delay = AdversarialDelay::new(8, vec![0, 5], 1e6);
-    let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
     let step = 1.0 / prob.smoothness();
-    let cfg = GdConfig { k: 6, step, iters: 300, lambda: 0.05, w0: None };
-    let out = run_gd(&mut cluster, &asm, &cfg, "enc", &|w| (prob.objective(w), 0.0));
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(8)
+        .wait_for(6)
+        .redundancy(2.0)
+        .seed(9)
+        .delay(|m| Box::new(AdversarialDelay::new(m, vec![0, 5], 1e6)))
+        .label("enc")
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(step).lambda(0.05).iters(300))
+        .unwrap();
     let encoded_sub = (out.trace.final_objective() - f_star) / f_star;
     // sketch: solve on a fixed 60% row subsample exactly
     let keep = 58; // ≈ 0.6·96

@@ -1,0 +1,410 @@
+//! Driver smoke matrix: every encoding [`Scheme`] × every [`Solver`]
+//! through the [`Experiment`](coded_opt::driver::Experiment) API, plus
+//! bit-identical equivalence against the legacy `run_*` shims the driver
+//! replaces (those shims are deprecated and scheduled for removal; the
+//! equivalence tests pin the refactor until they go).
+
+#![allow(deprecated)] // the equivalence tests exercise the legacy shims
+
+use coded_opt::cluster::SimCluster;
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::bcd::{build_model_parallel, quadratic_phi};
+use coded_opt::coordinator::{build_data_parallel, GdConfig, LbfgsConfig, ProxConfig};
+use coded_opt::data::synth::{gaussian_linear, sparse_recovery};
+use coded_opt::delay::{MixtureDelay, NoDelay};
+use coded_opt::driver::{AsyncBcd, AsyncGd, Bcd, Experiment, Gd, Lbfgs, Problem, Prox};
+use coded_opt::encoding::partition_bounds;
+use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
+
+/// Dimensions every scheme construction accepts (Replication needs r|m;
+/// Paley/Steiner round to feasible internal sizes).
+const N: usize = 64;
+const P: usize = 8;
+const M: usize = 4;
+
+fn all_schemes() -> &'static [Scheme] {
+    Scheme::all()
+}
+
+// ---------------------------------------------------------------- matrix
+
+#[test]
+fn smoke_matrix_gd_all_schemes() {
+    let (x, y, _) = gaussian_linear(N, P, 0.3, 7);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let f0 = prob.objective(&vec![0.0; P]);
+    for &scheme in all_schemes() {
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(M)
+            .wait_for(M)
+            .redundancy(2.0)
+            .seed(7)
+            .label(scheme.name())
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Gd::with_step(0.5 / prob.smoothness()).lambda(0.05).iters(30))
+            .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        assert_eq!(out.trace.len(), 30, "{scheme:?}");
+        // full gather + conservative step ⇒ monotone descent on the
+        // ORIGINAL objective. Gaussian is only approximately tight
+        // (ETFs/Hadamard/Haar are exact), so it gets a looser slack.
+        let slack = if scheme == Scheme::Gaussian { 1e-4 * f0 } else { 1e-8 * f0 };
+        for pair in out.trace.records.windows(2) {
+            assert!(
+                pair[1].objective <= pair[0].objective + slack,
+                "{scheme:?}: ascent {} → {}",
+                pair[0].objective,
+                pair[1].objective
+            );
+        }
+        assert!(
+            out.trace.final_objective() < 0.9 * f0,
+            "{scheme:?}: no progress ({} vs f0 {f0})",
+            out.trace.final_objective()
+        );
+        assert!(out.beta >= 1.0, "{scheme:?}: achieved β {}", out.beta);
+    }
+}
+
+#[test]
+fn smoke_matrix_lbfgs_all_schemes() {
+    let (x, y, _) = gaussian_linear(N, P, 0.3, 9);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let f0 = prob.objective(&vec![0.0; P]);
+    for &scheme in all_schemes() {
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(M)
+            .wait_for(M)
+            .redundancy(2.0)
+            .seed(9)
+            .label(scheme.name())
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Lbfgs::new().iters(25).lambda(0.05))
+            .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        // ρ-damped exact line search on a quadratic: monotone descent
+        let slack = if scheme == Scheme::Gaussian { 1e-4 * f0 } else { 1e-8 * f0 };
+        for pair in out.trace.records.windows(2) {
+            assert!(
+                pair[1].objective <= pair[0].objective + slack,
+                "{scheme:?}: ascent {} → {}",
+                pair[0].objective,
+                pair[1].objective
+            );
+        }
+        assert!(
+            out.trace.final_objective() < 0.5 * f0,
+            "{scheme:?}: poor progress {} vs f0 {f0}",
+            out.trace.final_objective()
+        );
+    }
+}
+
+#[test]
+fn smoke_matrix_prox_all_schemes() {
+    let (x, y, _) = sparse_recovery(N, 24, 4, 0.1, 11);
+    let prob = LassoProblem::new(x.clone(), y.clone(), 0.05);
+    let f0 = prob.objective(&vec![0.0; 24]);
+    for &scheme in all_schemes() {
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(M)
+            .wait_for(M)
+            .redundancy(2.0)
+            .seed(11)
+            .label(scheme.name())
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Prox::with_step(0.5 * prob.default_step()).lambda(0.05).iters(40))
+            .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        let slack = if scheme == Scheme::Gaussian { 1e-4 * f0 } else { 1e-8 * f0 };
+        for pair in out.trace.records.windows(2) {
+            assert!(
+                pair[1].objective <= pair[0].objective + slack,
+                "{scheme:?}: ascent {} → {}",
+                pair[0].objective,
+                pair[1].objective
+            );
+        }
+        assert!(out.trace.final_objective() < f0, "{scheme:?}");
+    }
+}
+
+#[test]
+fn smoke_matrix_bcd_encoded_schemes() {
+    // Model parallelism lifts the coordinate space; Replication is a
+    // data-parallel partitioning strategy, so BCD runs the encoding
+    // schemes plus uncoded.
+    let (x, y, _) = gaussian_linear(40, 12, 0.2, 13);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+    let f0 = prob.objective(&vec![0.0; 12]);
+    let step = 0.5 * 40.0 / x.gram_spectral_norm(60, 5);
+    for scheme in [
+        Scheme::Uncoded,
+        Scheme::Gaussian,
+        Scheme::Paley,
+        Scheme::Hadamard,
+        Scheme::Steiner,
+        Scheme::Haar,
+    ] {
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(scheme)
+            .workers(M)
+            .wait_for(M)
+            .redundancy(2.0)
+            .seed(13)
+            .label(scheme.name())
+            .eval(|w| (prob.objective(w), 0.0))
+            .run(Bcd::with_step(step).iters(60))
+            .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        // monotone after the one-round-staleness transient at t=0→1
+        for pair in out.trace.records.windows(2).skip(1) {
+            assert!(
+                pair[1].objective <= pair[0].objective + 1e-8 * f0,
+                "{scheme:?}: ascent {} → {}",
+                pair[0].objective,
+                pair[1].objective
+            );
+        }
+        assert!(
+            out.trace.final_objective() < 0.7 * f0,
+            "{scheme:?}: poor progress {} vs f0 {f0}",
+            out.trace.final_objective()
+        );
+        assert_eq!(out.w.len(), 12, "{scheme:?}: w must be the original dim");
+    }
+}
+
+#[test]
+fn smoke_async_solvers() {
+    let (x, y, _) = gaussian_linear(N, P, 0.2, 15);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let f0 = prob.objective(&vec![0.0; P]);
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .workers(M)
+        .timing(1e-4, 1e-3)
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(
+            AsyncGd::with_step(0.3 / prob.smoothness())
+                .lambda(0.05)
+                .updates(2000)
+                .record_every(100),
+        )
+        .unwrap();
+    assert!(out.trace.final_objective() < 0.5 * f0, "async-gd {}", out.trace.final_objective());
+
+    let prob0 = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+    let step = 0.5 * N as f64 / x.gram_spectral_norm(60, 6);
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .workers(M)
+        .timing(1e-4, 1e-3)
+        .eval(|w| (prob0.objective(w), 0.0))
+        .run(AsyncBcd::with_step(step).updates(800).record_every(100))
+        .unwrap();
+    assert!(out.trace.final_objective() < 0.5 * f0, "async-bcd {}", out.trace.final_objective());
+}
+
+// ------------------------------------------- equivalence with legacy shims
+
+#[test]
+fn driver_gd_bit_identical_to_legacy() {
+    let (x, y, _) = gaussian_linear(N, P, 0.3, 21);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let step = 1.0 / prob.smoothness();
+    // legacy hand-wired pipeline
+    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, M, 2.0, 21).unwrap();
+    let asm = dp.assembler.clone();
+    let mut cluster =
+        SimCluster::new(dp.workers, Box::new(MixtureDelay::paper_bimodal(M, 5)));
+    let cfg = GdConfig { k: 3, step, iters: 40, lambda: 0.05, w0: None };
+    let legacy = coded_opt::coordinator::run_gd(&mut cluster, &asm, &cfg, "legacy", &|w| {
+        (prob.objective(w), 0.0)
+    });
+    // driver pipeline, identical wiring
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(M)
+        .wait_for(3)
+        .redundancy(2.0)
+        .seed(21)
+        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 5)))
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(step).lambda(0.05).iters(40))
+        .unwrap();
+    assert_eq!(out.w, legacy.w, "gd iterates must be bit-identical");
+    assert_eq!(out.trace.len(), legacy.trace.len());
+    for (a, b) in out.trace.records.iter().zip(&legacy.trace.records) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.time.to_bits(), b.time.to_bits());
+        assert_eq!(a.k_used, b.k_used);
+    }
+}
+
+#[test]
+fn driver_lbfgs_bit_identical_to_legacy() {
+    let (x, y, _) = gaussian_linear(N, P, 0.3, 23);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let dp = build_data_parallel(&x, &y, Scheme::Haar, M, 2.0, 23).unwrap();
+    let asm = dp.assembler.clone();
+    let mut cluster =
+        SimCluster::new(dp.workers, Box::new(MixtureDelay::paper_bimodal(M, 9)));
+    let cfg = LbfgsConfig { k: 3, iters: 30, lambda: 0.05, memory: 10, rho: 0.9, w0: None };
+    let legacy = coded_opt::coordinator::run_lbfgs(&mut cluster, &asm, &cfg, "legacy", &|w| {
+        (prob.objective(w), 0.0)
+    });
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Haar)
+        .workers(M)
+        .wait_for(3)
+        .redundancy(2.0)
+        .seed(23)
+        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 9)))
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Lbfgs::new().iters(30).lambda(0.05))
+        .unwrap();
+    assert_eq!(out.w, legacy.w, "lbfgs iterates must be bit-identical");
+}
+
+#[test]
+fn driver_prox_bit_identical_to_legacy() {
+    let (x, y, _) = sparse_recovery(N, 24, 4, 0.1, 25);
+    let prob = LassoProblem::new(x.clone(), y.clone(), 0.05);
+    let step = prob.default_step();
+    let dp = build_data_parallel(&x, &y, Scheme::Steiner, M, 2.0, 25).unwrap();
+    let asm = dp.assembler.clone();
+    let mut cluster =
+        SimCluster::new(dp.workers, Box::new(MixtureDelay::paper_trimodal(M, 3)));
+    let cfg = ProxConfig { k: 3, step, iters: 60, lambda: 0.05, w0: None };
+    let legacy = coded_opt::coordinator::run_prox(&mut cluster, &asm, &cfg, "legacy", &|w| {
+        (prob.objective(w), 0.0)
+    });
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Steiner)
+        .workers(M)
+        .wait_for(3)
+        .redundancy(2.0)
+        .seed(25)
+        .delay(|m| Box::new(MixtureDelay::paper_trimodal(m, 3)))
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Prox::with_step(step).lambda(0.05).iters(60))
+        .unwrap();
+    assert_eq!(out.w, legacy.w, "prox iterates must be bit-identical");
+}
+
+#[test]
+fn driver_bcd_bit_identical_to_legacy() {
+    let (x, y, _) = gaussian_linear(40, 12, 0.2, 27);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+    let step = 0.6 * 40.0 / x.gram_spectral_norm(60, 7);
+    let mp = build_model_parallel(
+        &x,
+        Scheme::Hadamard,
+        M,
+        2.0,
+        step,
+        0.0,
+        27,
+        quadratic_phi(y.clone()),
+    )
+    .unwrap();
+    let sbar = mp.sbar;
+    let mut cluster =
+        SimCluster::new(mp.workers, Box::new(MixtureDelay::paper_bimodal(M, 11)));
+    let cfg = coded_opt::coordinator::bcd::BcdConfig { k: 3, iters: 50 };
+    let legacy =
+        coded_opt::coordinator::bcd::run_bcd(&mut cluster, &sbar, 40, 12, &cfg, "legacy", &|w| {
+            (prob.objective(w), 0.0)
+        });
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(M)
+        .wait_for(3)
+        .redundancy(2.0)
+        .seed(27)
+        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 11)))
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Bcd::with_step(step).iters(50))
+        .unwrap();
+    assert_eq!(out.w, legacy.w, "bcd iterates must be bit-identical");
+}
+
+#[test]
+fn driver_async_gd_bit_identical_to_legacy() {
+    let (x, y, _) = gaussian_linear(N, P, 0.2, 29);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let step = 0.3 / prob.smoothness();
+    let bounds = partition_bounds(N, M);
+    let shards: Vec<_> = bounds
+        .windows(2)
+        .map(|w| (x.row_block(w[0], w[1]), y[w[0]..w[1]].to_vec()))
+        .collect();
+    let mut delay = NoDelay::new(M);
+    let cfg = coded_opt::coordinator::asynchronous::AsyncGdConfig {
+        step,
+        lambda: 0.05,
+        updates: 1500,
+        secs_per_unit: 1e-4,
+        record_every: 100,
+    };
+    let legacy = coded_opt::coordinator::asynchronous::run_async_gd(
+        &shards,
+        &mut delay,
+        N,
+        P,
+        &cfg,
+        "legacy",
+        &|w| (prob.objective(w), 0.0),
+    );
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .workers(M)
+        .timing(1e-4, 1e-3)
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(AsyncGd::with_step(step).lambda(0.05).updates(1500).record_every(100))
+        .unwrap();
+    assert_eq!(out.w, legacy.w, "async-gd iterates must be bit-identical");
+    assert_eq!(out.trace.len(), legacy.trace.len());
+}
+
+#[test]
+fn driver_async_bcd_bit_identical_to_legacy() {
+    let (x, y, _) = gaussian_linear(30, 12, 0.2, 31);
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+    let step = 0.5 * 30.0 / x.gram_spectral_norm(60, 8);
+    // legacy hand-wired pipeline: uncoded column blocks + quadratic ∇φ
+    let bounds = partition_bounds(12, M);
+    let blocks: Vec<_> = bounds
+        .windows(2)
+        .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
+        .collect();
+    let yc = y.clone();
+    let grad_phi = move |u: &[f64]| -> Vec<f64> {
+        let n = u.len() as f64;
+        u.iter().zip(&yc).map(|(ui, yi)| (ui - yi) / n).collect()
+    };
+    let mut delay = NoDelay::new(M);
+    let cfg = coded_opt::coordinator::asynchronous::AsyncBcdConfig {
+        step,
+        lambda: 0.0,
+        updates: 600,
+        secs_per_unit: 1e-4,
+        record_every: 100,
+    };
+    let eval = |v: &[Vec<f64>]| -> (f64, f64) {
+        let w: Vec<f64> = v.iter().flatten().copied().collect();
+        (prob.objective(&w), 0.0)
+    };
+    let (legacy_trace, legacy_v, _) = coded_opt::coordinator::asynchronous::run_async_bcd(
+        &blocks, &grad_phi, 30, &cfg, &mut delay, "legacy", &eval,
+    );
+    let legacy_w: Vec<f64> = legacy_v.iter().flatten().copied().collect();
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .workers(M)
+        .timing(1e-4, 1e-3)
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(AsyncBcd::with_step(step).updates(600).record_every(100))
+        .unwrap();
+    assert_eq!(out.w, legacy_w, "async-bcd iterates must be bit-identical");
+    assert_eq!(out.trace.len(), legacy_trace.len());
+    for (a, b) in out.trace.records.iter().zip(&legacy_trace.records) {
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+    }
+}

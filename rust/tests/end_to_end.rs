@@ -1,13 +1,13 @@
 //! End-to-end integration over the thread cluster: real OS-thread
-//! workers, wall-clock interrupts, all four algorithms, coded vs
-//! baselines. (The examples/ directory holds the human-facing drivers;
-//! these are the CI-grade assertions.)
+//! workers, wall-clock interrupts, all algorithms through the
+//! [`Experiment`](coded_opt::driver::Experiment) driver on
+//! [`Engine::Threads`], coded vs baselines. (The examples/ directory
+//! holds the human-facing drivers; these are the CI-grade assertions.)
 
-use coded_opt::cluster::ThreadCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, GdConfig, LbfgsConfig, ProxConfig};
 use coded_opt::data::synth::{gaussian_linear, sparse_recovery};
-use coded_opt::delay::{AdversarialDelay, MixtureDelay};
+use coded_opt::delay::{AdversarialDelay, ConstantDelay, MixtureDelay};
+use coded_opt::driver::{Engine, Experiment, Gd, Lbfgs, Problem, Prox};
 use coded_opt::metrics::f1_support;
 use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 
@@ -16,15 +16,19 @@ fn threaded_gd_with_real_interrupts() {
     let (x, y, _) = gaussian_linear(64, 8, 0.3, 3);
     let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
     let f_star = prob.objective(&prob.solve_exact());
-    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 4, 2.0, 3).unwrap();
-    let asm = dp.assembler.clone();
     // 2 workers are 30 ms stragglers; wait-for-2 of 4.
-    let delay = AdversarialDelay::new(4, vec![1, 3], 0.03);
-    let mut cluster = ThreadCluster::new(dp.workers, Box::new(delay));
-    let cfg = GdConfig { k: 2, step: 1.0 / prob.smoothness(), iters: 150, lambda: 0.05, w0: None };
-    let out = coded_opt::coordinator::run_gd(&mut cluster, &asm, &cfg, "threads", &|w| {
-        (prob.objective(w), 0.0)
-    });
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(4)
+        .wait_for(2)
+        .redundancy(2.0)
+        .seed(3)
+        .engine(Engine::Threads { delay_scale: 1.0 })
+        .delay(|m| Box::new(AdversarialDelay::new(m, vec![1, 3], 0.03)))
+        .label("threads")
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(150))
+        .unwrap();
     let sub = (out.trace.final_objective() - f_star) / f_star;
     assert!(sub < 0.3, "subopt {sub}");
     // stragglers were interrupted, not waited for
@@ -37,15 +41,19 @@ fn threaded_lbfgs_bimodal_delays() {
     let (x, y, _) = gaussian_linear(96, 12, 0.3, 5);
     let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
     let f_star = prob.objective(&prob.solve_exact());
-    let dp = build_data_parallel(&x, &y, Scheme::Haar, 8, 2.0, 5).unwrap();
-    let asm = dp.assembler.clone();
     // paper's bimodal delays scaled to milliseconds
-    let delay = MixtureDelay::paper_bimodal(8, 7);
-    let mut cluster = ThreadCluster::new(dp.workers, Box::new(delay)).with_delay_scale(1e-3);
-    let cfg = LbfgsConfig { k: 6, iters: 40, lambda: 0.05, memory: 10, rho: 0.9, w0: None };
-    let out = coded_opt::coordinator::run_lbfgs(&mut cluster, &asm, &cfg, "threads-lbfgs", &|w| {
-        (prob.objective(w), 0.0)
-    });
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Haar)
+        .workers(8)
+        .wait_for(6)
+        .redundancy(2.0)
+        .seed(5)
+        .engine(Engine::Threads { delay_scale: 1e-3 })
+        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 7)))
+        .label("threads-lbfgs")
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Lbfgs::new().iters(40).lambda(0.05))
+        .unwrap();
     let sub = (out.trace.final_objective() - f_star) / f_star;
     assert!(sub < 0.05, "subopt {sub}");
 }
@@ -54,14 +62,18 @@ fn threaded_lbfgs_bimodal_delays() {
 fn threaded_prox_lasso_recovery() {
     let (x, y, w_star) = sparse_recovery(96, 32, 5, 0.1, 7);
     let prob = LassoProblem::new(x.clone(), y.clone(), 0.08);
-    let dp = build_data_parallel(&x, &y, Scheme::Steiner, 6, 2.0, 7).unwrap();
-    let asm = dp.assembler.clone();
-    let delay = AdversarialDelay::new(6, vec![0], 0.02);
-    let mut cluster = ThreadCluster::new(dp.workers, Box::new(delay));
-    let cfg = ProxConfig { k: 4, step: prob.default_step(), iters: 150, lambda: 0.08, w0: None };
-    let out = coded_opt::coordinator::run_prox(&mut cluster, &asm, &cfg, "threads-prox", &|w| {
-        (prob.objective(w), 0.0)
-    });
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Steiner)
+        .workers(6)
+        .wait_for(4)
+        .redundancy(2.0)
+        .seed(7)
+        .engine(Engine::Threads { delay_scale: 1.0 })
+        .delay(|m| Box::new(AdversarialDelay::new(m, vec![0], 0.02)))
+        .label("threads-prox")
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Prox::with_step(prob.default_step()).lambda(0.08).iters(150))
+        .unwrap();
     let (_, _, f1) = f1_support(&w_star, &out.w, 1e-2);
     assert!(f1 > 0.7, "f1 {f1}");
 }
@@ -70,27 +82,30 @@ fn threaded_prox_lasso_recovery() {
 fn sim_and_thread_clusters_agree_on_final_iterate() {
     // Same problem, same A_t pattern (adversarial fixed stragglers make
     // the active sets deterministic): the two engines must produce the
-    // same optimization path.
+    // same optimization path — only the engine line differs between the
+    // two experiments.
     let (x, y, _) = gaussian_linear(48, 6, 0.2, 9);
     let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
-    let cfg = GdConfig { k: 3, step: 1.0 / prob.smoothness(), iters: 40, lambda: 0.05, w0: None };
-    // sim
-    let dp1 = build_data_parallel(&x, &y, Scheme::Hadamard, 4, 2.0, 9).unwrap();
-    let asm1 = dp1.assembler.clone();
-    let mut sim = coded_opt::cluster::SimCluster::new(
-        dp1.workers,
-        Box::new(AdversarialDelay::new(4, vec![2], 1e6)),
-    );
-    let out_sim = coded_opt::coordinator::run_gd(&mut sim, &asm1, &cfg, "sim", &|w| {
-        (prob.objective(w), 0.0)
-    });
-    // threads
-    let dp2 = build_data_parallel(&x, &y, Scheme::Hadamard, 4, 2.0, 9).unwrap();
-    let asm2 = dp2.assembler.clone();
-    let mut thr = ThreadCluster::new(dp2.workers, Box::new(AdversarialDelay::new(4, vec![2], 0.02)));
-    let out_thr = coded_opt::coordinator::run_gd(&mut thr, &asm2, &cfg, "thr", &|w| {
-        (prob.objective(w), 0.0)
-    });
+    let solver = Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(40);
+    let base = || {
+        Experiment::new(Problem::least_squares(&x, &y))
+            .scheme(Scheme::Hadamard)
+            .workers(4)
+            .wait_for(3)
+            .redundancy(2.0)
+            .seed(9)
+    };
+    let out_sim = base()
+        .delay(|m| Box::new(AdversarialDelay::new(m, vec![2], 1e6)))
+        .label("sim")
+        .run(solver)
+        .unwrap();
+    let out_thr = base()
+        .engine(Engine::Threads { delay_scale: 1.0 })
+        .delay(|m| Box::new(AdversarialDelay::new(m, vec![2], 0.02)))
+        .label("thr")
+        .run(solver)
+        .unwrap();
     let err = coded_opt::testutil::rel_err(&out_thr.w, &out_sim.w);
     assert!(err < 1e-9, "engines diverged: rel err {err}");
 }
@@ -98,17 +113,20 @@ fn sim_and_thread_clusters_agree_on_final_iterate() {
 #[test]
 fn thread_cluster_clock_reflects_waits() {
     let (x, y, _) = gaussian_linear(32, 4, 0.2, 11);
-    let dp = build_data_parallel(&x, &y, Scheme::Uncoded, 4, 1.0, 11).unwrap();
-    let asm = dp.assembler.clone();
-    // constant 10 ms delay on everyone
-    let delay = coded_opt::delay::ConstantDelay::new(4, 0.01);
-    let mut cluster = ThreadCluster::new(dp.workers, Box::new(delay));
     let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
-    let cfg = GdConfig { k: 4, step: 1e-3, iters: 5, lambda: 0.0, w0: None };
-    let out = coded_opt::coordinator::run_gd(&mut cluster, &asm, &cfg, "clock", &|w| {
-        (prob.objective(w), 0.0)
-    });
+    // constant 10 ms delay on everyone
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Uncoded)
+        .workers(4)
+        .wait_for(4)
+        .redundancy(1.0)
+        .seed(11)
+        .engine(Engine::Threads { delay_scale: 1.0 })
+        .delay(|m| Box::new(ConstantDelay::new(m, 0.01)))
+        .label("clock")
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(1e-3).iters(5))
+        .unwrap();
     // 5 rounds × ≥10 ms each
     assert!(out.trace.total_time() >= 0.05, "clock {}", out.trace.total_time());
-    drop(cluster); // clean shutdown joins workers
 }

@@ -5,11 +5,10 @@
 //! loaded, compiled on the PJRT CPU client, executed with device-resident
 //! shard buffers, and its numerics match the rust-native kernel.
 
-use coded_opt::cluster::{SimCluster, Task, WorkerNode};
+use coded_opt::cluster::{Task, WorkerNode};
 use coded_opt::config::Scheme;
 use coded_opt::coordinator::{QuadWorker, KIND_GRADIENT};
 use coded_opt::data::synth::gaussian_linear;
-use coded_opt::delay::NoDelay;
 use coded_opt::linalg::Mat;
 use coded_opt::rng::Pcg64;
 use coded_opt::runtime::{ArtifactIndex, GradExecutor};
@@ -112,37 +111,33 @@ fn quadworker_hot_path_runs_on_pjrt() {
 #[test]
 fn encoded_gd_through_pjrt_converges() {
     // Full stack: encoded data-parallel GD where every worker executes
-    // the AOT Pallas artifact for its gradient.
+    // the AOT Pallas artifact for its gradient — one Experiment with the
+    // runtime attached.
     let Some(idx) = artifacts() else { return };
     let m = 4;
     let (x, y, _) = gaussian_linear(128, 32, 0.2, 23);
-    // β=2 → 256 encoded rows → 64×32 shards: matches quad_grad_64x32.
-    let dp = coded_opt::coordinator::build_data_parallel_with_runtime(
-        &x,
-        &y,
-        Scheme::Hadamard,
-        m,
-        2.0,
-        23,
-        Some(&idx),
-    )
-    .unwrap();
-    assert_eq!(dp.pjrt_attached, m, "all shards must match an artifact");
-    let asm = dp.assembler.clone();
-    let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(m)));
     let prob = coded_opt::objectives::RidgeProblem::new(x.clone(), y.clone(), 0.05);
     use coded_opt::objectives::QuadObjective;
     let f_star = prob.objective(&prob.solve_exact());
-    let cfg = coded_opt::coordinator::GdConfig {
-        k: m,
-        step: 1.0 / prob.smoothness(),
-        iters: 200,
-        lambda: 0.05,
-        w0: None,
-    };
-    let out = coded_opt::coordinator::run_gd(&mut cluster, &asm, &cfg, "pjrt-gd", &|w| {
-        (prob.objective(w), 0.0)
-    });
+    // β=2 → 256 encoded rows → 64×32 shards: matches quad_grad_64x32.
+    let out = coded_opt::driver::Experiment::new(
+        coded_opt::driver::Problem::least_squares(&x, &y),
+    )
+    .scheme(Scheme::Hadamard)
+    .workers(m)
+    .wait_for(m)
+    .redundancy(2.0)
+    .seed(23)
+    .runtime(&idx)
+    .label("pjrt-gd")
+    .eval(|w| (prob.objective(w), 0.0))
+    .run(
+        coded_opt::driver::Gd::with_step(1.0 / prob.smoothness())
+            .lambda(0.05)
+            .iters(200),
+    )
+    .unwrap();
+    assert_eq!(out.pjrt_attached, m, "all shards must match an artifact");
     let sub = (out.trace.final_objective() - f_star) / f_star;
     assert!(sub < 1e-5, "subopt {sub}");
 }

@@ -6,8 +6,9 @@
 use coded_opt::cluster::{Gather, SimCluster, Task, WorkerNode};
 use coded_opt::config::Scheme;
 use coded_opt::coordinator::bcd::BcdWorker;
-use coded_opt::coordinator::{build_data_parallel, GradAssembler, KIND_BCD_STEP, KIND_GRADIENT};
+use coded_opt::coordinator::{KIND_BCD_STEP, KIND_GRADIENT};
 use coded_opt::delay::TraceDelay;
+use coded_opt::driver::{Experiment, Problem};
 use coded_opt::encoding::{Encoding, ReplicationMap};
 use coded_opt::linalg::Mat;
 use coded_opt::testutil::PropRunner;
@@ -89,10 +90,16 @@ fn prop_full_gather_assembly_order_invariant() {
         },
         |(n, p, m, scheme, seed, w, delays)| {
             let (x, y, _) = coded_opt::data::synth::gaussian_linear(*n, *p, 0.3, *seed);
-            let dp = build_data_parallel(&x, &y, *scheme, *m, 2.0, *seed).unwrap();
-            let asm = dp.assembler.clone();
-            let delay = TraceDelay::new(vec![delays.clone()]);
-            let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
+            let mut parts = Experiment::new(Problem::least_squares(&x, &y))
+                .scheme(*scheme)
+                .workers(*m)
+                .redundancy(2.0)
+                .seed(*seed)
+                .delay(|_| Box::new(TraceDelay::new(vec![delays.clone()])))
+                .assemble_data_parallel()
+                .unwrap();
+            let asm = parts.assembler.clone();
+            let cluster = &mut parts.cluster;
             let rr = cluster.round(*m, &mut |_| Task {
                 iter: 0,
                 kind: KIND_GRADIENT,

@@ -1,10 +1,11 @@
 //! Theory checkpoints: each of the paper's formal statements, verified
 //! numerically on concrete instances (DESIGN.md §7).
 
-use coded_opt::cluster::{Gather, SimCluster, Task};
+use coded_opt::cluster::{Gather, Task};
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::{build_data_parallel, KIND_GRADIENT};
+use coded_opt::coordinator::KIND_GRADIENT;
 use coded_opt::data::synth::gaussian_linear;
+use coded_opt::driver::{Experiment, Gd, Problem};
 use coded_opt::delay::AdversarialDelay;
 use coded_opt::encoding::{paley, spectrum, Encoding};
 use coded_opt::linalg::{symmetric_eigenvalues, Mat};
@@ -128,15 +129,18 @@ fn theorem2_linear_convergence_band() {
     let (x, y, _) = gaussian_linear(96, 8, 0.3, 11);
     let prob = RidgeProblem::new(x.clone(), y.clone(), 0.1);
     let f_star = prob.objective(&prob.solve_exact());
-    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 11).unwrap();
-    let asm = dp.assembler.clone();
-    let delay = AdversarialDelay::rotating(8, 0.25, 1e6);
-    let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
     let step = 1.0 / prob.smoothness();
-    let cfg = coded_opt::coordinator::GdConfig { k: 6, step, iters: 300, lambda: 0.1, w0: None };
-    let out = coded_opt::coordinator::run_gd(&mut cluster, &asm, &cfg, "thm2", &|w| {
-        (prob.objective(w), 0.0)
-    });
+    let out = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(8)
+        .wait_for(6)
+        .redundancy(2.0)
+        .seed(11)
+        .delay(|m| Box::new(AdversarialDelay::rotating(m, 0.25, 1e6)))
+        .label("thm2")
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(step).lambda(0.1).iters(300))
+        .unwrap();
     // early-phase contraction: subopt at t=50 well below subopt at t=0
     let sub0 = out.trace.records[0].objective - f_star;
     let sub50 = out.trace.records[50].objective - f_star;
@@ -154,10 +158,15 @@ fn lemma3_pair_curvature_bounds() {
     let (x, y, _) = gaussian_linear(64, 8, 0.3, 13);
     let lambda = 0.05;
     let m = 8;
-    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, m, 2.0, 13).unwrap();
-    let asm = dp.assembler.clone();
-    let mut cluster =
-        SimCluster::new(dp.workers, Box::new(AdversarialDelay::rotating(m, 0.25, 1e6)));
+    let mut parts = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(m)
+        .redundancy(2.0)
+        .seed(13)
+        .delay(|m| Box::new(AdversarialDelay::rotating(m, 0.25, 1e6)))
+        .assemble_data_parallel()
+        .unwrap();
+    let (cluster, asm) = (&mut parts.cluster, &parts.assembler);
     // Drive a few gradient iterates and form pairs the way L-BFGS does.
     let mut rng = Pcg64::new(17);
     let mut w: Vec<f64> = (0..8).map(|_| rng.next_f64() - 0.5).collect();

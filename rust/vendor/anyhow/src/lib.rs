@@ -1,0 +1,162 @@
+//! Minimal, API-compatible stand-in for the `anyhow` crate, covering the
+//! subset `coded-opt` uses: [`Error`], [`Result`], [`anyhow!`], [`bail!`],
+//! [`ensure!`], and the [`Context`] extension trait for `Result`/`Option`.
+//!
+//! The offline build environment has no crates.io registry; this vendored
+//! crate keeps the dependency surface identical so the real `anyhow` can
+//! be swapped back in by editing one line of `rust/Cargo.toml`.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Boxed dynamic error with an optional source chain, mirroring
+/// `anyhow::Error` for the operations used here. Deliberately does NOT
+/// implement `std::error::Error`, so the blanket `From<E: Error>` impl
+/// below is coherent (same trick as the real crate).
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a plain message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Error { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The chain's root message (diagnostics).
+    pub fn root_cause_message(&self) -> String {
+        match &self.source {
+            Some(s) => s.to_string(),
+            None => self.msg.clone(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source.as_deref().map(|s| s as &dyn StdError);
+        while let Some(s) = src {
+            write!(f, "\n\nCaused by:\n    {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let r: Result<()> = Err(io_err()).with_context(|| "reading thing".to_string());
+        let e = r.unwrap_err();
+        assert!(e.to_string().contains("reading thing"));
+        assert!(format!("{e:?}").contains("gone"));
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("missing key");
+        assert_eq!(r.unwrap_err().to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative: {x}");
+            if x == 0 {
+                bail!("zero");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero");
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+    }
+}
