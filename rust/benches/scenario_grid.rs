@@ -1,0 +1,52 @@
+//! Scenario stress grid: encoded vs uncoded across the built-in
+//! adversarial scenario library (time-varying degradation,
+//! rack-correlated slowdowns, crash/rejoin, heterogeneous hardware) —
+//! the "arbitrary sequences of delay patterns" axis of the paper's
+//! sample-path guarantees, as a sweep instead of a single delay model.
+//!
+//!     cargo bench --bench scenario_grid
+
+use coded_opt::bench::banner;
+use coded_opt::config::{Algorithm, Scheme};
+use coded_opt::scenario::{run_grid, summary_table, GridSpec, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "Scenario grid",
+        "Scheme × Solver × Scenario sweep on the deterministic SimCluster",
+    );
+    let spec = GridSpec {
+        schemes: vec![Scheme::Uncoded, Scheme::Replication, Scheme::Hadamard, Scheme::Haar],
+        algorithms: Algorithm::synchronous().to_vec(),
+        scenarios: Scenario::builtin_names()
+            .iter()
+            .map(|n| Scenario::builtin(n).unwrap())
+            .collect(),
+        n: 512,
+        p: 64,
+        m: 8,
+        k: 6,
+        beta: 2.0,
+        iters: 60,
+        seed: 42,
+        lambda: 0.05,
+    };
+    println!(
+        "{} cells: n={} p={} m={} k={} β={} iters={}\n",
+        spec.cells(),
+        spec.n,
+        spec.p,
+        spec.m,
+        spec.k,
+        spec.beta,
+        spec.iters
+    );
+    let cells = run_grid(&spec)?;
+    summary_table(&cells).print();
+    println!(
+        "\nPaper shape: the encoded schemes keep converging under every scenario \
+         (crash windows are erasures the redundancy absorbs), while uncoded \
+         fixed-k is biased whenever the same blocks keep dropping."
+    );
+    Ok(())
+}

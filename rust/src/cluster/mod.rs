@@ -14,6 +14,15 @@
 //! - [`threads::ThreadCluster`] — real OS threads, std::mpsc messaging,
 //!   `AtomicU64` interrupt lines, wall-clock timing. Drives the examples
 //!   and the PJRT-backed end-to-end run.
+//!
+//! Both engines support heterogeneous per-worker compute speeds
+//! (`with_speeds`) and crash semantics: an infinite injected delay
+//! ([`crate::delay::CRASHED`], produced e.g. by a
+//! [`crate::scenario`] crash window) means the worker cannot respond
+//! this round — `SimCluster` gives it an infinite arrival time,
+//! `ThreadCluster` never dispatches to it — and the wait-for-k gather
+//! erases it exactly like any other straggler (the paper's
+//! stragglers-as-erasures model; each round asserts ≥ k live workers).
 
 pub mod sim;
 pub mod threads;

@@ -1,11 +1,16 @@
 //! Virtual-clock cluster simulation.
 //!
 //! Single-threaded and fully deterministic: per round, each worker's
-//! hypothetical finish time is `cost·secs_per_unit + delay(i, t)`; the k
-//! smallest arrivals form A_t, *only those workers actually execute*
+//! hypothetical finish time is `cost·secs_per_unit·speed_i + delay(i, t)`;
+//! the k smallest arrivals form A_t, *only those workers actually execute*
 //! (stragglers are interrupted before completing, exactly like the
 //! paper's Algorithm 1 line 6), and the round advances the virtual clock
 //! by the k-th arrival time plus a fixed master overhead.
+//!
+//! An infinite delay ([`crate::delay::CRASHED`]) marks a worker as
+//! crashed for the round: it can never make the fastest-k set, which is
+//! exactly the paper's erasure semantics. The round asserts that at
+//! least `k` live workers remain.
 
 use super::{Gather, Response, RoundResult, Task, WorkerNode};
 use crate::delay::DelayModel;
@@ -18,6 +23,9 @@ pub struct SimCluster {
     pub secs_per_unit: f64,
     /// Master-side per-round overhead (broadcast + step computation).
     pub master_overhead: f64,
+    /// Per-worker compute-speed multiplier (≥ 1 means slower hardware;
+    /// scales the simulated compute time, not the injected delay).
+    speed: Vec<f64>,
     clock: f64,
     iter: usize,
 }
@@ -25,11 +33,13 @@ pub struct SimCluster {
 impl SimCluster {
     pub fn new(workers: Vec<Box<dyn WorkerNode>>, delay: Box<dyn DelayModel>) -> Self {
         assert_eq!(workers.len(), delay.workers(), "delay model sized for wrong m");
+        let m = workers.len();
         SimCluster {
             workers,
             delay,
             secs_per_unit: 0.01,
             master_overhead: 0.001,
+            speed: vec![1.0; m],
             clock: 0.0,
             iter: 0,
         }
@@ -38,6 +48,17 @@ impl SimCluster {
     pub fn with_timing(mut self, secs_per_unit: f64, master_overhead: f64) -> Self {
         self.secs_per_unit = secs_per_unit;
         self.master_overhead = master_overhead;
+        self
+    }
+
+    /// Heterogeneous per-worker compute-speed multipliers.
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> Self {
+        assert_eq!(speeds.len(), self.workers.len(), "one speed per worker");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "speed multipliers must be finite and > 0"
+        );
+        self.speed = speeds;
         self
     }
 
@@ -59,12 +80,20 @@ impl Gather for SimCluster {
         // Arrival time of each worker if it were allowed to finish.
         let mut arrivals: Vec<(f64, usize)> = (0..m)
             .map(|i| {
-                let t = self.workers[i].cost() * self.secs_per_unit
+                let t = self.workers[i].cost() * self.secs_per_unit * self.speed[i]
                     + self.delay.sample(i, self.iter);
+                debug_assert!(!t.is_nan(), "NaN arrival for worker {i}");
                 (t, i)
             })
             .collect();
         arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Crashed workers (infinite delay) can never be waited for.
+        let live = arrivals.iter().take_while(|(t, _)| t.is_finite()).count();
+        assert!(
+            k <= live,
+            "round {}: k={k} but only {live} live (non-crashed) workers of m={m}",
+            self.iter
+        );
         let winners = &arrivals[..k];
         let elapsed = winners.last().unwrap().0;
         let mut responses = Vec::with_capacity(k);
@@ -183,6 +212,41 @@ mod tests {
     fn k_zero_rejected() {
         let mut c = mk_cluster(3, Box::new(NoDelay::new(3)));
         c.round(0, &mut |_| task(0));
+    }
+
+    #[test]
+    fn speeds_reorder_arrivals() {
+        // equal costs, worker 0 on 10× slower hardware → always last
+        let mut c = mk_cluster(3, Box::new(NoDelay::new(3)))
+            .with_timing(1.0, 0.0)
+            .with_speeds(vec![10.0, 1.0, 1.0]);
+        let rr = c.round(2, &mut |_| task(0));
+        assert_eq!(rr.interrupted, vec![0]);
+        assert!((rr.elapsed - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crashed_workers_are_erased_and_rejoin() {
+        // worker 1 crashed (infinite delay) in round 0, back in round 1
+        let delay = crate::delay::TraceDelay::new(vec![
+            vec![0.0, f64::INFINITY, 0.0],
+            vec![0.0, 0.0, 0.0],
+        ]);
+        let mut c = mk_cluster(3, Box::new(delay));
+        let r0 = c.round(2, &mut |_| task(0));
+        assert_eq!(r0.active_set(), vec![0, 2]);
+        assert!(r0.interrupted.contains(&1));
+        assert!(r0.elapsed.is_finite() && c.clock().is_finite());
+        let r1 = c.round(3, &mut |_| task(1));
+        assert_eq!(r1.active_set(), vec![0, 1, 2], "crashed worker rejoins");
+    }
+
+    #[test]
+    #[should_panic(expected = "live")]
+    fn waiting_for_a_crashed_worker_panics() {
+        let delay = crate::delay::TraceDelay::new(vec![vec![0.0, f64::INFINITY]]);
+        let mut c = mk_cluster(2, Box::new(delay));
+        c.round(2, &mut |_| task(0));
     }
 
     #[test]

@@ -45,6 +45,16 @@ pub struct ThreadCluster {
     /// Injected delays are multiplied by this factor (scale the paper's
     /// 20-second stragglers down to test-friendly milliseconds).
     pub delay_scale: f64,
+    /// Per-worker compute-speed multiplier (≥ 1 means slower hardware).
+    /// Real compute cannot be slowed down, so a worker at speed `s`
+    /// sleeps an extra `(s − 1)·cost·compute_unit` seconds per task —
+    /// the ms-scale mirror of `SimCluster`'s compute scaling.
+    speeds: Vec<f64>,
+    /// Per-worker [`WorkerNode::cost`], captured at construction.
+    costs: Vec<f64>,
+    /// Emulated seconds of compute per unit of cost for the speed
+    /// handicap (default 1 ms).
+    pub compute_unit: f64,
     started: Instant,
     iter: usize,
 }
@@ -53,6 +63,7 @@ impl ThreadCluster {
     pub fn new(workers: Vec<Box<dyn WorkerNode>>, delay: Box<dyn DelayModel>) -> Self {
         assert_eq!(workers.len(), delay.workers(), "delay model sized for wrong m");
         let m = workers.len();
+        let costs: Vec<f64> = workers.iter().map(|w| w.cost()).collect();
         let (res_tx, res_rx) = channel::<ResultMsg>();
         let mut task_txs = Vec::with_capacity(m);
         let mut abort_iter = Vec::with_capacity(m);
@@ -77,6 +88,9 @@ impl ThreadCluster {
             handles,
             delay,
             delay_scale: 1.0,
+            speeds: vec![1.0; m],
+            costs,
+            compute_unit: 1e-3,
             started: Instant::now(),
             iter: 0,
         }
@@ -84,6 +98,26 @@ impl ThreadCluster {
 
     pub fn with_delay_scale(mut self, scale: f64) -> Self {
         self.delay_scale = scale;
+        self
+    }
+
+    /// Heterogeneous per-worker compute-speed multipliers (see the
+    /// `speeds` field for the sleep-handicap semantics).
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> Self {
+        assert_eq!(speeds.len(), self.task_txs.len(), "one speed per worker");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "speed multipliers must be finite and > 0"
+        );
+        self.speeds = speeds;
+        self
+    }
+
+    /// Emulated seconds of compute per unit of cost used by the speed
+    /// handicap. Default 1 ms.
+    pub fn with_compute_unit(mut self, secs: f64) -> Self {
+        assert!(secs.is_finite() && secs >= 0.0);
+        self.compute_unit = secs;
         self
     }
 }
@@ -109,7 +143,9 @@ fn worker_loop(
                 interrupted = true;
                 break;
             }
-            std::thread::sleep(SLEEP_CHUNK.min(deadline - Instant::now()));
+            // saturating: the deadline may pass between the loop check
+            // and the subtraction
+            std::thread::sleep(SLEEP_CHUNK.min(deadline.saturating_duration_since(Instant::now())));
         }
         if interrupted || abort.load(Ordering::Acquire) == iter {
             continue; // drop the task; master moved on without us
@@ -129,12 +165,27 @@ impl Gather for ThreadCluster {
         assert!(k >= 1 && k <= m, "k={k} out of range for m={m}");
         let iter = self.iter;
         let round_start = Instant::now();
+        // A crashed worker (infinite injected delay) is never dispatched:
+        // it cannot respond this round, exactly like a real dead node.
+        let mut dispatched = vec![false; m];
         for i in 0..m {
+            let delay = self.delay.sample(i, iter);
+            if !delay.is_finite() {
+                continue;
+            }
+            let handicap = (self.speeds[i] - 1.0).max(0.0) * self.costs[i] * self.compute_unit;
             let task = task_for(i);
             debug_assert_eq!(task.iter, iter, "task iter mismatch");
-            let delay = self.delay.sample(i, iter) * self.delay_scale;
-            self.task_txs[i].send(Msg::Run(task, delay)).expect("worker alive");
+            self.task_txs[i]
+                .send(Msg::Run(task, delay * self.delay_scale + handicap))
+                .expect("worker alive");
+            dispatched[i] = true;
         }
+        let live = dispatched.iter().filter(|&&d| d).count();
+        assert!(
+            k <= live,
+            "round {iter}: k={k} but only {live} live (non-crashed) workers of m={m}"
+        );
         let mut responses: Vec<Response> = Vec::with_capacity(k);
         let mut responded = vec![false; m];
         while responses.len() < k {
@@ -149,11 +200,14 @@ impl Gather for ThreadCluster {
                 arrival: round_start.elapsed().as_secs_f64(),
             });
         }
-        // Interrupt the stragglers (A_tᶜ).
+        // Interrupt the stragglers (A_tᶜ); crashed workers never got the
+        // task, so there is nothing to abort, but they are still erased.
         let mut interrupted = Vec::with_capacity(m - k);
         for i in 0..m {
             if !responded[i] {
-                self.abort_iter[i].store(iter as u64, Ordering::Release);
+                if dispatched[i] {
+                    self.abort_iter[i].store(iter as u64, Ordering::Release);
+                }
                 interrupted.push(i);
             }
         }
@@ -254,6 +308,45 @@ mod tests {
             }
         }
         assert!(c.clock() > 0.0);
+    }
+
+    #[test]
+    fn crashed_worker_is_never_dispatched_and_rejoins() {
+        // worker 2 crashed (infinite delay) for round 0 only
+        let delay = crate::delay::TraceDelay::new(vec![
+            vec![0.0, 0.0, f64::INFINITY],
+            vec![0.0, 0.0, 0.0],
+        ]);
+        let mut c = mk(3, Box::new(delay));
+        let r0 = c.round(2, &mut |_| task(0, vec![]));
+        assert_eq!(r0.active_set(), vec![0, 1]);
+        assert!(r0.interrupted.contains(&2));
+        let r1 = c.round(3, &mut |_| task(1, vec![]));
+        assert_eq!(r1.active_set(), vec![0, 1, 2], "crashed worker rejoins");
+        for r in &r1.responses {
+            assert_eq!(r.payload[1], 1.0, "fresh iter tag after rejoin");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "live")]
+    fn waiting_for_a_crashed_worker_panics() {
+        let delay = crate::delay::TraceDelay::new(vec![vec![0.0, f64::INFINITY]]);
+        let mut c = mk(2, Box::new(delay));
+        c.round(2, &mut |_| task(0, vec![]));
+    }
+
+    #[test]
+    fn speed_handicap_slows_a_worker() {
+        // worker 0 at 100× speed handicap with a 1 ms compute unit →
+        // ~0.1 s extra sleep; k=1 of 2 ⇒ worker 1 always wins.
+        let mut c = mk(2, Box::new(NoDelay::new(2)))
+            .with_speeds(vec![101.0, 1.0])
+            .with_compute_unit(1e-3);
+        for t in 0..3 {
+            let rr = c.round(1, &mut |_| task(t, vec![]));
+            assert_eq!(rr.active_set(), vec![1], "iter {t}");
+        }
     }
 
     #[test]

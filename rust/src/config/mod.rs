@@ -39,6 +39,23 @@ impl Algorithm {
             other => bail!("unknown algorithm '{other}'"),
         })
     }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algorithm::Gd => "gd",
+            Algorithm::Lbfgs => "lbfgs",
+            Algorithm::ProxGradient => "prox",
+            Algorithm::Bcd => "bcd",
+            Algorithm::AsyncGd => "async_gd",
+            Algorithm::AsyncBcd => "async_bcd",
+        }
+    }
+
+    /// The synchronous wait-for-k algorithms (everything the scenario
+    /// grid can sweep).
+    pub fn synchronous() -> &'static [Algorithm] {
+        &[Algorithm::Gd, Algorithm::Lbfgs, Algorithm::ProxGradient, Algorithm::Bcd]
+    }
 }
 
 /// Encoding scheme selector (paper §4).
@@ -165,6 +182,10 @@ pub struct ExperimentConfig {
     /// L-BFGS memory σ.
     pub lbfgs_memory: usize,
     pub delay: DelaySpec,
+    /// Full straggler scenario ([`crate::scenario::Scenario`], parsed
+    /// from `[scenario.*]` sections). When set, the launcher installs it
+    /// instead of the plain `delay` spec.
+    pub scenario: Option<crate::scenario::Scenario>,
     /// Use the PJRT runtime (AOT artifacts) for worker compute when the
     /// shard shape matches a compiled artifact; fall back to native rust
     /// kernels otherwise.
@@ -188,6 +209,7 @@ impl Default for ExperimentConfig {
             step_size: 0.0,
             lbfgs_memory: 10,
             delay: DelaySpec::Exponential { mean: 0.001 },
+            scenario: None,
             use_pjrt: false,
         }
     }
@@ -242,6 +264,15 @@ impl ExperimentConfig {
         }
         if doc.has_section("delay") {
             cfg.delay = DelaySpec::parse(doc, "delay")?;
+        }
+        // Any scenario.* section means the user wants a scenario —
+        // Scenario::from_doc errors loudly if the [scenario] header is
+        // missing (the flat parser creates no parent tables), instead of
+        // silently dropping the adversarial part of the experiment.
+        if doc.has_section("scenario")
+            || doc.sections().iter().any(|s| s.starts_with("scenario."))
+        {
+            cfg.scenario = Some(crate::scenario::Scenario::from_doc(doc)?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -350,6 +381,53 @@ kind = "bimodal"
         cfg.beta = 1.0;
         cfg.validate().unwrap();
         assert!(cfg.brip_feasible());
+    }
+
+    #[test]
+    fn scenario_section_parses_into_config() {
+        let text = r#"
+[experiment]
+name = "sc-run"
+
+[scenario]
+name = "one-crash"
+
+[scenario.t0]
+transform = "crash"
+workers = "0"
+start = 2
+end = 4
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        let cfg = ExperimentConfig::from_doc(&doc).unwrap();
+        let sc = cfg.scenario.expect("scenario parsed");
+        assert_eq!(sc.name, "one-crash");
+        assert_eq!(sc.transforms.len(), 1);
+        // configs without a [scenario] section keep None
+        let plain = TomlDoc::parse("[experiment]\nname = \"x\"\n").unwrap();
+        assert!(ExperimentConfig::from_doc(&plain).unwrap().scenario.is_none());
+        // an orphan [scenario.t0] without the [scenario] header is a loud
+        // error, not a silently dropped adversary
+        let orphan = TomlDoc::parse(
+            "[experiment]\nname = \"x\"\n[scenario.t0]\ntransform = \"crash\"\nworkers = \"0\"\n",
+        )
+        .unwrap();
+        assert!(ExperimentConfig::from_doc(&orphan).is_err());
+    }
+
+    #[test]
+    fn algorithm_names_roundtrip() {
+        for a in [
+            Algorithm::Gd,
+            Algorithm::Lbfgs,
+            Algorithm::ProxGradient,
+            Algorithm::Bcd,
+            Algorithm::AsyncGd,
+            Algorithm::AsyncBcd,
+        ] {
+            assert_eq!(Algorithm::parse(a.name()).unwrap(), a);
+        }
+        assert_eq!(Algorithm::synchronous().len(), 4);
     }
 
     #[test]

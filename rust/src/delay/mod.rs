@@ -10,6 +10,12 @@
 //!   (logistic regression, §5.3) — *persistent* per-node slowdown;
 //! - adversarial patterns (used by the deterministic-convergence tests:
 //!   the theory holds for arbitrary A_t sequences).
+//!
+//! Composable *transforms* over these models — time-varying phases,
+//! rack-correlated slowdowns, crash/rejoin windows, record/replay — live
+//! in [`crate::scenario`]. A [`CRASHED`] (infinite) delay marks a worker
+//! as dead for the round; both cluster engines map it onto the paper's
+//! stragglers-as-erasures semantics.
 
 pub mod models;
 
@@ -20,6 +26,17 @@ pub use models::{
 
 use crate::config::DelaySpec;
 use crate::rng::Pcg64;
+
+/// Sentinel delay meaning "this worker is crashed for the round": an
+/// unbounded delay, so the wait-for-k gather erases the worker exactly
+/// like any other straggler. `SimCluster` gives crashed workers an
+/// infinite arrival time; `ThreadCluster` never dispatches to them.
+pub const CRASHED: f64 = f64::INFINITY;
+
+/// Whether a sampled delay marks the worker as crashed.
+pub fn is_crashed(delay: f64) -> bool {
+    delay.is_infinite()
+}
 
 /// Extra latency injected on top of a worker's compute time.
 pub trait DelayModel: Send {

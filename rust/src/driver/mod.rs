@@ -53,6 +53,11 @@
 //! - [`Experiment::delay`] installs a straggler [`DelayModel`] factory
 //!   (called with the worker count `m` once per run, keeping repeated
 //!   runs of one experiment statistically independent but reproducible).
+//! - [`Experiment::scenario`] installs a named [`Scenario`] — a base
+//!   delay spec plus composable transforms (time-varying phases,
+//!   rack-correlated slowdowns, crash/rejoin windows, per-worker delay
+//!   scaling) and a per-worker compute [`SpeedProfile`] — on either
+//!   engine. See [`crate::scenario`] for the DSL.
 //! - [`Experiment::engine`] picks the virtual-clock [`SimCluster`]
 //!   (deterministic; drives all paper figures) or the OS-thread
 //!   [`ThreadCluster`] (wall-clock, real interrupts).
@@ -76,6 +81,7 @@ use crate::encoding::{partition_bounds, SMatrix};
 use crate::linalg::Mat;
 use crate::metrics::{Participation, Trace};
 use crate::runtime::ArtifactIndex;
+use crate::scenario::{Scenario, SpeedProfile};
 use anyhow::Result;
 
 /// Loss over the linear predictor `u = Xw` — the φ of the paper's
@@ -140,6 +146,9 @@ enum DelayChoice<'a> {
     Once(RefCell<Option<Box<dyn DelayModel>>>),
     /// Config-driven spec, instantiated with (m, seed) per run.
     Spec(DelaySpec, u64),
+    /// A named scenario (base spec + transform stack), instantiated with
+    /// (m, experiment seed) per run.
+    Scenario(Scenario),
 }
 
 /// Unified result of an [`Experiment::run`]: the convergence trace on
@@ -182,6 +191,13 @@ pub struct Experiment<'a> {
     timing_set: bool,
     runtime: Option<&'a ArtifactIndex>,
     delay: DelayChoice<'a>,
+    /// Per-worker compute-speed multipliers, resolved with `m` at
+    /// cluster-build time.
+    speeds: SpeedProfile,
+    /// Extra seed mixed into the speed-profile resolution (set by
+    /// [`Experiment::scenario`] so the scenario seed also moves the
+    /// slow-worker set).
+    speed_seed: u64,
     #[allow(clippy::type_complexity)]
     eval: Option<Box<dyn Fn(&[f64]) -> (f64, f64) + 'a>>,
     w0: Option<Vec<f64>>,
@@ -205,6 +221,8 @@ impl<'a> Experiment<'a> {
             timing_set: false,
             runtime: None,
             delay: DelayChoice::None,
+            speeds: SpeedProfile::Uniform,
+            speed_seed: 0,
             eval: None,
             w0: None,
         }
@@ -269,6 +287,23 @@ impl<'a> Experiment<'a> {
     /// per run.
     pub fn delay_spec(mut self, spec: DelaySpec, seed: u64) -> Self {
         self.delay = DelayChoice::Spec(spec, seed);
+        self
+    }
+
+    /// Install a straggler [`Scenario`]: its delay stack replaces any
+    /// previous delay choice, and its [`SpeedProfile`] is installed as
+    /// the cluster's per-worker compute speeds. Reusable across runs
+    /// (rebuilt with `(m, seed)` each time).
+    pub fn scenario(mut self, scenario: &Scenario) -> Self {
+        self.speeds = scenario.speeds.clone();
+        self.speed_seed = scenario.seed;
+        self.delay = DelayChoice::Scenario(scenario.clone());
+        self
+    }
+
+    /// Per-worker compute-speed multipliers without a full scenario.
+    pub fn speeds(mut self, profile: SpeedProfile) -> Self {
+        self.speeds = profile;
         self
     }
 
@@ -459,6 +494,7 @@ impl<'e, 'a> Ctx<'e, 'a> {
                 )
             })?,
             DelayChoice::Spec(spec, seed) => from_spec(spec, self.exp.m, *seed),
+            DelayChoice::Scenario(sc) => sc.build_delay(self.exp.m, self.exp.seed)?,
         };
         anyhow::ensure!(
             model.workers() == self.exp.m,
@@ -492,6 +528,35 @@ impl<'e, 'a> Ctx<'e, 'a> {
         }
     }
 
+    /// Guard for the event-queue async solvers against scenario features
+    /// only the cluster engines implement. Crash windows: the wait-for-k
+    /// engines re-sample a crashed worker every round so it rejoins when
+    /// the window closes, but the async event queue schedules the
+    /// worker's next completion at +∞ the first time it samples inside
+    /// the window — the worker starves forever instead of rejoining.
+    /// Speed profiles: per-worker compute speeds are applied by
+    /// `Ctx::cluster`, which the async solvers never build — a non-trivial
+    /// profile would be silently dropped, misrepresenting the scenario.
+    pub fn reject_unsupported_scenario(&self, who: &str) -> Result<()> {
+        if let DelayChoice::Scenario(sc) = &self.exp.delay {
+            anyhow::ensure!(
+                !sc.has_crash(),
+                "scenario '{}' has a crash window, which {who} cannot honor: a \
+                 crashed worker would starve forever on the async event queue \
+                 instead of rejoining; run crash scenarios on the wait-for-k \
+                 solvers (gd / lbfgs / prox / bcd)",
+                sc.name
+            );
+        }
+        anyhow::ensure!(
+            self.exp.speeds == SpeedProfile::Uniform,
+            "{who} has no cluster, so per-worker compute speeds would be \
+             silently ignored; speed profiles need the wait-for-k solvers \
+             (gd / lbfgs / prox / bcd)"
+        );
+        Ok(())
+    }
+
     fn require_y(&self, who: &str) -> Result<&'a [f64]> {
         match self.exp.problem.loss {
             Loss::Quadratic { y } => Ok(y),
@@ -504,10 +569,15 @@ impl<'e, 'a> Ctx<'e, 'a> {
 
     fn cluster(&self, workers: Vec<Box<dyn WorkerNode>>) -> Result<Box<dyn Gather>> {
         let delay = self.delay_model()?;
+        let speeds = self
+            .exp
+            .speeds
+            .resolve(self.exp.m, self.exp.seed ^ self.exp.speed_seed.wrapping_mul(0x9e37_79b9))?;
         Ok(match self.exp.engine {
             Engine::Sim => Box::new(
                 SimCluster::new(workers, delay)
-                    .with_timing(self.exp.secs_per_unit, self.exp.master_overhead),
+                    .with_timing(self.exp.secs_per_unit, self.exp.master_overhead)
+                    .with_speeds(speeds),
             ),
             Engine::Threads { delay_scale } => {
                 anyhow::ensure!(
@@ -515,7 +585,11 @@ impl<'e, 'a> Ctx<'e, 'a> {
                     "Experiment::timing configures the virtual clock and is \
                      ignored by Engine::Threads (wall-clock); drop one of the two"
                 );
-                Box::new(ThreadCluster::new(workers, delay).with_delay_scale(delay_scale))
+                Box::new(
+                    ThreadCluster::new(workers, delay)
+                        .with_delay_scale(delay_scale)
+                        .with_speeds(speeds),
+                )
             }
         })
     }
@@ -671,6 +745,39 @@ mod tests {
         assert!(exp.run(Gd::with_step(0.01).iters(2)).is_err());
         assert!(exp.run(Lbfgs::new().iters(2)).is_err());
         assert!(exp.run(Prox::with_step(0.01).iters(2)).is_err());
+    }
+
+    #[test]
+    fn scenario_is_reusable_and_deterministic() {
+        let (x, y, _) = gaussian_linear(64, 8, 0.2, 2);
+        let sc = crate::scenario::Scenario::builtin("crash-rejoin").unwrap();
+        let exp = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(8)
+            .wait_for(6)
+            .scenario(&sc);
+        let a = exp.run(Gd::with_step(0.01).iters(20)).unwrap();
+        let b = exp.run(Gd::with_step(0.01).iters(20)).unwrap();
+        assert_eq!(a.w, b.w, "scenario runs must be bit-identical");
+        assert_eq!(a.trace.len(), 20);
+        assert!(a.trace.records.iter().all(|r| r.k_used == 6));
+        assert!(a.trace.total_time().is_finite());
+    }
+
+    #[test]
+    fn speed_profile_excludes_slow_worker() {
+        use crate::scenario::SpeedProfile;
+        let (x, y, _) = gaussian_linear(32, 4, 0.2, 3);
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(4)
+            .wait_for(3)
+            .speeds(SpeedProfile::PerWorker(vec![1.0, 1.0, 1.0, 50.0]))
+            .run(Gd::with_step(0.01).iters(10))
+            .unwrap();
+        assert_eq!(
+            out.participation.fraction(3),
+            0.0,
+            "a 50× slower worker can never make the fastest-3 set"
+        );
     }
 
     #[test]

@@ -293,6 +293,7 @@ impl Solver for AsyncGd {
     fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
         ctx.reject_w0("AsyncGd")?;
         ctx.require_sim_engine("AsyncGd")?;
+        ctx.reject_unsupported_scenario("AsyncGd")?;
         ctx.beta = 1.0;
         let shards = ctx.uncoded_row_shards()?;
         let mut delay = ctx.delay_model()?;
@@ -359,6 +360,7 @@ impl Solver for AsyncBcd {
     fn solve(&self, ctx: &mut Ctx<'_, '_>) -> Result<CoreOutput> {
         ctx.reject_w0("AsyncBcd")?;
         ctx.require_sim_engine("AsyncBcd")?;
+        ctx.reject_unsupported_scenario("AsyncBcd")?;
         ctx.beta = 1.0;
         let blocks = ctx.uncoded_col_blocks();
         let phi = ctx.grad_phi();
@@ -428,6 +430,37 @@ mod tests {
         let f0 = prob.objective(&vec![0.0; 8]);
         assert!(out.trace.final_objective() < 0.5 * f0);
         assert_eq!(out.w.len(), 8, "BCD returns the reconstructed w, not v");
+    }
+
+    #[test]
+    fn async_solvers_reject_crash_scenarios() {
+        // A crashed worker would starve forever on the async event queue
+        // (it never re-samples after being scheduled at +inf), so crash
+        // scenarios must be rejected loudly, not silently misrun.
+        let (x, y, _) = gaussian_linear(30, 6, 0.2, 11);
+        let sc = crate::scenario::Scenario::builtin("crash-rejoin").unwrap();
+        let exp = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(3)
+            .scenario(&sc);
+        let err = exp.run(AsyncGd::with_step(0.01).updates(50)).unwrap_err();
+        assert!(err.to_string().contains("crash"), "got: {err}");
+        let err = exp.run(AsyncBcd::with_step(0.01).updates(50)).unwrap_err();
+        assert!(err.to_string().contains("crash"), "got: {err}");
+        // non-uniform compute speeds are applied by the cluster engines,
+        // which async solvers never build — also rejected, not dropped
+        let hetero = crate::scenario::Scenario::builtin("hetero-speed").unwrap();
+        let err = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(3)
+            .scenario(&hetero)
+            .run(AsyncGd::with_step(0.01).updates(50))
+            .unwrap_err();
+        assert!(err.to_string().contains("speed"), "got: {err}");
+        // crash-free, uniform-speed scenarios are fine
+        let ok = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(3)
+            .scenario(&crate::scenario::Scenario::builtin("rack-correlated").unwrap())
+            .run(AsyncGd::with_step(0.01).updates(50));
+        assert!(ok.is_ok(), "{:?}", ok.err().map(|e| e.to_string()));
     }
 
     #[test]

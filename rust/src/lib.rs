@@ -44,6 +44,49 @@
 //! (`S̄ᵀS̄ = I` Parseval shards, `m/k` partial-sum rescaling) every layer
 //! below relies on.
 //!
+//! ## Straggler scenarios
+//!
+//! The paper's guarantees are *sample-path*: they hold "for arbitrary
+//! sequences of delay patterns or distributions on the nodes". The
+//! [`scenario`] module makes such sequences first-class: a
+//! [`scenario::Scenario`] is a named, seedable description — a base
+//! delay spec plus composable transforms (time-varying phases,
+//! rack-correlated slowdowns, crash/rejoin windows, per-worker delay
+//! scaling) and a per-worker compute-speed profile — pluggable into any
+//! experiment:
+//!
+//! ```no_run
+//! use coded_opt::config::DelaySpec;
+//! use coded_opt::data::synth::gaussian_linear;
+//! use coded_opt::driver::{Experiment, Gd, Problem};
+//! use coded_opt::scenario::{Scenario, WorkerSet};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let (x, y, _) = gaussian_linear(512, 64, 0.5, 42);
+//! // a quarter of the fleet crashes for rounds [5, 15) and rejoins
+//! let sc = Scenario::new("crash-rejoin")
+//!     .base(DelaySpec::Exponential { mean: 0.005 })
+//!     .crash(WorkerSet::Fraction(0.25), 5, 15);
+//! let out = Experiment::new(Problem::least_squares(&x, &y))
+//!     .workers(8)
+//!     .wait_for(6)
+//!     .scenario(&sc)
+//!     .run(Gd::with_step(0.01).iters(100))?;
+//! println!("survived the crash window: {:.1}s", out.trace.total_time());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Crash/rejoin maps directly onto the paper's erasure model: a crash is
+//! an *unbounded delay* over a round window, so the crashed node simply
+//! never makes the fastest-`k` set `A_t` while the window is open — no
+//! new coordinator logic, and Theorem 2's arbitrary-`A_t` guarantee
+//! covers it. Scenarios are also constructible from TOML (schema in the
+//! [`scenario`] docs, via the `[scenario.*]` sections of an experiment
+//! config) and runnable as a Scheme × Solver × Scenario grid with the
+//! `coded-opt scenario` subcommand; `rust/tests/golden_traces.rs` pins
+//! the grid's traces bit-for-bit against checked-in fixtures.
+//!
 //! ## Layout
 //!
 //! - [`driver`] — the `Experiment` builder and the `Solver` trait with
@@ -56,6 +99,9 @@
 //!   Steiner ETFs, subsampled Haar, Gaussian) and spectrum analysis.
 //! - [`delay`] — straggler delay models (bimodal mixture, power-law
 //!   background tasks, exponential, adversarial, trace replay).
+//! - [`scenario`] — the scenario engine: composable delay transforms,
+//!   record/replay, the TOML scenario DSL, and the Scheme × Solver ×
+//!   Scenario grid runner behind `coded-opt scenario`.
 //! - [`cluster`] — the simulated master/worker distributed substrate with
 //!   wait-for-`k` gather and interrupts.
 //! - [`coordinator`] — the algorithm master loops and worker state
@@ -87,4 +133,5 @@ pub mod metrics;
 pub mod objectives;
 pub mod rng;
 pub mod runtime;
+pub mod scenario;
 pub mod testutil;

@@ -9,6 +9,13 @@
 //!   async_bcd.
 //! - `spectrum [--scheme paley --n 128 --workers 16 --beta 2 --k 12]` —
 //!   print the subsampled-Gram eigenvalue summary (Figures 5–6 style).
+//! - `scenario [--schemes hadamard,uncoded --algorithms gd,lbfgs|all
+//!   --scenarios crash-rejoin,rack-correlated | --scenario-file sc.toml]
+//!   [--n N --p P --workers M --k K --beta B --iters T --seed S
+//!   --out dir] [--list]` — sweep a Scheme × Solver × Scenario grid on
+//!   the deterministic SimCluster and print per-cell results
+//!   (`--out` also writes per-cell trace CSVs and canonical bit-exact
+//!   traces).
 //! - `info` — build / artifact info.
 
 use anyhow::{bail, Result};
@@ -20,14 +27,16 @@ use coded_opt::encoding::{Encoding, SubsetSpectrum};
 use coded_opt::metrics::TableWriter;
 use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 use coded_opt::runtime::ArtifactIndex;
+use coded_opt::scenario::{canonical_trace, run_grid, summary_table, GridSpec, Scenario};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("spectrum") => cmd_spectrum(&args),
+        Some("scenario") => cmd_scenario(&args),
         Some("info") | None => cmd_info(),
-        Some(other) => bail!("unknown subcommand '{other}' (try: run, spectrum, info)"),
+        Some(other) => bail!("unknown subcommand '{other}' (try: run, spectrum, scenario, info)"),
     }
 }
 
@@ -94,8 +103,11 @@ fn base_experiment<'a>(
         .wait_for(cfg.k)
         .redundancy(cfg.beta)
         .seed(cfg.seed)
-        .delay_spec(cfg.delay.clone(), cfg.seed)
         .label(&cfg.name);
+    exp = match &cfg.scenario {
+        Some(sc) => exp.scenario(sc),
+        None => exp.delay_spec(cfg.delay.clone(), cfg.seed),
+    };
     if let Some(idx) = idx {
         exp = exp.runtime(idx);
     }
@@ -116,9 +128,20 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.beta,
         cfg.iterations
     );
+    if let Some(sc) = &cfg.scenario {
+        println!(
+            "scenario '{}': {} transform(s), seed {}",
+            sc.name,
+            sc.transforms.len(),
+            sc.seed
+        );
+    }
     if !cfg.brip_feasible() {
-        println!("note: η·β = {:.2} < 1 — below the strict BRIP threshold (Def. 1); \
-                  expect a looser approximation band.", cfg.eta() * cfg.beta);
+        println!(
+            "note: η·β = {:.2} < 1 — below the strict BRIP threshold (Def. 1); \
+             expect a looser approximation band.",
+            cfg.eta() * cfg.beta
+        );
     }
     let idx = if cfg.use_pjrt { Some(ArtifactIndex::default_location()?) } else { None };
     if cfg.use_pjrt
@@ -262,5 +285,105 @@ fn cmd_spectrum(args: &Args) -> Result<()> {
         table.row(&stats.summary_row());
     }
     table.print();
+    Ok(())
+}
+
+fn csv_list(s: &str) -> Vec<&str> {
+    s.split(',').map(|t| t.trim()).filter(|t| !t.is_empty()).collect()
+}
+
+/// Sweep a Scheme × Solver × Scenario grid on the deterministic
+/// SimCluster and print per-cell results.
+fn cmd_scenario(args: &Args) -> Result<()> {
+    if args.has_flag("list") {
+        println!("built-in scenarios:");
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::builtin(name).unwrap();
+            println!("  {:<16} {} transform(s)", name, sc.transforms.len());
+        }
+        return Ok(());
+    }
+    let mut spec = GridSpec::small();
+    if let Some(s) = args.get("schemes") {
+        spec.schemes =
+            csv_list(s).into_iter().map(Scheme::parse).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(s) = args.get("algorithms") {
+        spec.algorithms = if s == "all" {
+            Algorithm::synchronous().to_vec()
+        } else {
+            csv_list(s).into_iter().map(Algorithm::parse).collect::<Result<Vec<_>>>()?
+        };
+    }
+    // --scenarios (builtin names) and --scenario-file (TOML) REPLACE the
+    // default scenario set; given together they combine.
+    let mut scenarios = Vec::new();
+    if let Some(s) = args.get("scenarios") {
+        for name in csv_list(s) {
+            scenarios.push(Scenario::builtin(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario '{name}' (builtins: {}; or use --scenario-file)",
+                    Scenario::builtin_names().join(", ")
+                )
+            })?);
+        }
+    }
+    if let Some(path) = args.get("scenario-file") {
+        scenarios.push(Scenario::from_file(path)?);
+    }
+    if !scenarios.is_empty() {
+        spec.scenarios = scenarios;
+    }
+    if let Some(v) = args.get_usize("n")? {
+        spec.n = v;
+    }
+    if let Some(v) = args.get_usize("p")? {
+        spec.p = v;
+    }
+    if let Some(v) = args.get_usize("workers")? {
+        spec.m = v;
+    }
+    if let Some(v) = args.get_usize("k")? {
+        spec.k = v;
+    }
+    if let Some(v) = args.get_f64("beta")? {
+        spec.beta = v;
+    }
+    if let Some(v) = args.get_usize("iters")? {
+        spec.iters = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        spec.seed = v as u64;
+    }
+    println!(
+        "scenario grid: {} scheme(s) × {} solver(s) × {} scenario(s) = {} cells \
+         (n={} p={} m={} k={} β={} iters={} seed={})",
+        spec.schemes.len(),
+        spec.algorithms.len(),
+        spec.scenarios.len(),
+        spec.cells(),
+        spec.n,
+        spec.p,
+        spec.m,
+        spec.k,
+        spec.beta,
+        spec.iters,
+        spec.seed
+    );
+    let cells = run_grid(&spec)?;
+    summary_table(&cells).print();
+    if let Some(dir) = args.get("out") {
+        let dir = std::path::Path::new(dir);
+        std::fs::create_dir_all(dir)?;
+        for cell in &cells {
+            let stem = cell.stem();
+            coded_opt::metrics::write_csv(
+                &dir.join(format!("{stem}.csv")),
+                &[&cell.out.trace],
+            )?;
+            std::fs::write(dir.join(format!("{stem}.trace")), canonical_trace(cell))?;
+        }
+        println!("wrote {} trace pairs to {}", cells.len(), dir.display());
+    }
     Ok(())
 }

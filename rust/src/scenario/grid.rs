@@ -1,0 +1,243 @@
+//! Scheme × Solver × Scenario grid runner (the `coded-opt scenario`
+//! subcommand and the golden-trace regression suite).
+//!
+//! Every cell runs on the deterministic virtual-clock [`SimCluster`]
+//! through the `driver::Experiment` pipeline, so a grid is a pure
+//! function of its [`GridSpec`]: running it twice yields bit-identical
+//! [`RunOutput`]s, and [`canonical_trace`] serializes a cell's trace with
+//! exact f64 bit patterns for golden-fixture comparison.
+
+use super::Scenario;
+use crate::config::{Algorithm, Scheme};
+use crate::data::synth::gaussian_linear;
+use crate::driver::{self, Experiment, Problem, RunOutput};
+use crate::objectives::{LassoProblem, QuadObjective, RidgeProblem};
+use anyhow::{bail, Result};
+
+/// The grid to sweep. All cells share one synthetic least-squares
+/// problem generated from `(n, p, seed)`.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub schemes: Vec<Scheme>,
+    pub algorithms: Vec<Algorithm>,
+    pub scenarios: Vec<Scenario>,
+    /// Data rows / model dimension.
+    pub n: usize,
+    pub p: usize,
+    /// Workers / wait-for-k / redundancy.
+    pub m: usize,
+    pub k: usize,
+    pub beta: f64,
+    /// Outer iterations per cell.
+    pub iters: usize,
+    pub seed: u64,
+    pub lambda: f64,
+}
+
+impl GridSpec {
+    /// A small, fast default grid (CLI defaults; CI smoke).
+    pub fn small() -> Self {
+        GridSpec {
+            schemes: vec![Scheme::Hadamard, Scheme::Uncoded],
+            algorithms: vec![Algorithm::Gd, Algorithm::Lbfgs],
+            scenarios: vec![
+                Scenario::builtin("crash-rejoin").unwrap(),
+                Scenario::builtin("rack-correlated").unwrap(),
+            ],
+            n: 64,
+            p: 8,
+            m: 8,
+            k: 6,
+            beta: 2.0,
+            iters: 15,
+            seed: 42,
+            lambda: 0.05,
+        }
+    }
+
+    /// Number of cells.
+    pub fn cells(&self) -> usize {
+        self.schemes.len() * self.algorithms.len() * self.scenarios.len()
+    }
+}
+
+/// One completed grid cell.
+pub struct GridCell {
+    pub scheme: Scheme,
+    pub algorithm: Algorithm,
+    pub scenario: String,
+    pub out: RunOutput,
+}
+
+impl GridCell {
+    /// `scheme__algorithm__scenario` (stable fixture / file stem).
+    pub fn stem(&self) -> String {
+        format!("{}__{}__{}", self.scheme.name(), self.algorithm.name(), self.scenario)
+    }
+
+    /// Smallest per-worker participation fraction — 0% means some worker
+    /// was erased in every round (e.g. a permanent straggler), values
+    /// below 100% under crash scenarios show the erasure window working.
+    pub fn min_participation(&self) -> f64 {
+        self.out
+            .participation
+            .fractions()
+            .into_iter()
+            .fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Aligned summary table of completed cells — one renderer shared by the
+/// `coded-opt scenario` subcommand and the `scenario_grid` bench.
+pub fn summary_table(cells: &[GridCell]) -> crate::metrics::TableWriter {
+    let mut table = crate::metrics::TableWriter::new(&[
+        "scheme", "solver", "scenario", "final f", "sim time", "min part",
+    ]);
+    for cell in cells {
+        table.row(&[
+            cell.scheme.name().to_string(),
+            cell.algorithm.name().to_string(),
+            cell.scenario.clone(),
+            format!("{:.6e}", cell.out.trace.final_objective()),
+            format!("{:.2}s", cell.out.trace.total_time()),
+            format!("{:.0}%", 100.0 * cell.min_participation()),
+        ]);
+    }
+    table
+}
+
+/// Run the full grid on the deterministic [`SimCluster`] engine.
+///
+/// Supports the synchronous wait-for-k solvers (gd, lbfgs, prox, bcd);
+/// the event-queue async baselines have no round structure for the
+/// scenario windows to key on and are rejected.
+pub fn run_grid(spec: &GridSpec) -> Result<Vec<GridCell>> {
+    anyhow::ensure!(spec.k >= 1 && spec.k <= spec.m, "grid k out of range");
+    let (x, y, _) = gaussian_linear(spec.n, spec.p, 0.5, spec.seed);
+    let ridge = RidgeProblem::new(x.clone(), y.clone(), spec.lambda);
+    let lasso = LassoProblem::new(x.clone(), y.clone(), spec.lambda);
+    let bcd_step = 0.5 * spec.n as f64 / x.gram_spectral_norm(60, spec.seed);
+    let mut cells = Vec::with_capacity(spec.cells());
+    for scenario in &spec.scenarios {
+        for &scheme in &spec.schemes {
+            for &algorithm in &spec.algorithms {
+                let label =
+                    format!("{}/{}/{}", scheme.name(), algorithm.name(), scenario.name);
+                let exp = Experiment::new(Problem::least_squares(&x, &y))
+                    .scheme(scheme)
+                    .workers(spec.m)
+                    .wait_for(spec.k)
+                    .redundancy(spec.beta)
+                    .seed(spec.seed)
+                    .scenario(scenario)
+                    .label(&label);
+                let out = match algorithm {
+                    Algorithm::Gd => exp
+                        .eval(|w| (ridge.objective(w), 0.0))
+                        .run(
+                            driver::Gd::with_step(1.0 / ridge.smoothness())
+                                .lambda(spec.lambda)
+                                .iters(spec.iters),
+                        )?,
+                    Algorithm::Lbfgs => exp
+                        .eval(|w| (ridge.objective(w), 0.0))
+                        .run(driver::Lbfgs::new().lambda(spec.lambda).iters(spec.iters))?,
+                    Algorithm::ProxGradient => exp
+                        .eval(|w| (lasso.objective(w), 0.0))
+                        .run(
+                            driver::Prox::with_step(0.5 * lasso.default_step())
+                                .lambda(spec.lambda)
+                                .iters(spec.iters),
+                        )?,
+                    Algorithm::Bcd => exp
+                        .eval(|w| (ridge.objective(w), 0.0))
+                        .run(driver::Bcd::with_step(bcd_step).iters(spec.iters))?,
+                    Algorithm::AsyncGd | Algorithm::AsyncBcd => bail!(
+                        "the scenario grid drives the synchronous wait-for-k solvers \
+                         (gd, lbfgs, prox, bcd); async baselines have no gather rounds"
+                    ),
+                };
+                cells.push(GridCell {
+                    scheme,
+                    algorithm,
+                    scenario: scenario.name.clone(),
+                    out,
+                });
+            }
+        }
+    }
+    Ok(cells)
+}
+
+/// Serialize one cell's run bit-exactly: each trace record's floats as
+/// hex `f64::to_bits`, plus a human-readable echo for diff-reading, and
+/// the final iterate. Two runs produce the same string iff the traces
+/// are bit-identical.
+pub fn canonical_trace(cell: &GridCell) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "# scheme={} algorithm={} scenario={} records={}\n",
+        cell.scheme.name(),
+        cell.algorithm.name(),
+        cell.scenario,
+        cell.out.trace.len()
+    ));
+    for r in &cell.out.trace.records {
+        s.push_str(&format!(
+            "{} {:016x} {:016x} {:016x} {} # t={:.6e} f={:.9e}\n",
+            r.iter,
+            r.time.to_bits(),
+            r.objective.to_bits(),
+            r.test_metric.to_bits(),
+            r.k_used,
+            r.time,
+            r.objective
+        ));
+    }
+    s.push_str("w");
+    for v in &cell.out.w {
+        s.push_str(&format!(" {:016x}", v.to_bits()));
+    }
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> GridSpec {
+        GridSpec {
+            schemes: vec![Scheme::Hadamard],
+            algorithms: vec![Algorithm::Gd],
+            scenarios: vec![Scenario::builtin("crash-rejoin").unwrap()],
+            n: 32,
+            p: 4,
+            m: 8,
+            k: 6,
+            beta: 2.0,
+            iters: 8,
+            seed: 7,
+            lambda: 0.05,
+        }
+    }
+
+    #[test]
+    fn grid_runs_and_serializes() {
+        let cells = run_grid(&tiny_spec()).unwrap();
+        assert_eq!(cells.len(), 1);
+        let cell = &cells[0];
+        assert_eq!(cell.out.trace.len(), 8);
+        assert_eq!(cell.stem(), "hadamard__gd__crash-rejoin");
+        let s = canonical_trace(cell);
+        assert!(s.starts_with("# scheme=hadamard"));
+        assert_eq!(s.lines().count(), 1 + 8 + 1);
+    }
+
+    #[test]
+    fn async_algorithms_rejected() {
+        let mut spec = tiny_spec();
+        spec.algorithms = vec![Algorithm::AsyncGd];
+        assert!(run_grid(&spec).is_err());
+    }
+}

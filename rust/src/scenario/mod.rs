@@ -1,0 +1,744 @@
+//! Scenario engine: named, seedable descriptions of adversarial and
+//! time-varying straggler patterns.
+//!
+//! The paper's central claim is *deterministic, sample-path* convergence
+//! of encoded optimization "for arbitrary sequences of delay patterns or
+//! distributions on the nodes". A [`Scenario`] makes such a sequence a
+//! first-class, reproducible object: a base [`DelaySpec`] plus an ordered
+//! stack of [`Transform`]s (time-varying phases, rack-correlated
+//! slowdowns, crash/rejoin windows, per-worker delay scaling) and an
+//! optional per-worker compute [`SpeedProfile`], all derived
+//! deterministically from a seed.
+//!
+//! Scenarios are
+//! - buildable in code via the builder API
+//!   (`Scenario::new("x").base(..).crash(..)`),
+//! - constructible from TOML ([`Scenario::from_doc`] /
+//!   [`Scenario::from_file`], schema below),
+//! - pluggable into `driver::Experiment` via `Experiment::scenario`
+//!   (both `SimCluster` and `ThreadCluster`),
+//! - runnable as a Scheme × Solver × Scenario grid via [`grid`] and the
+//!   `coded-opt scenario` CLI subcommand.
+//!
+//! ## TOML schema
+//!
+//! One scenario per document; everything lives under `scenario.*`
+//! sections (the flat `config::toml` subset — no arrays, index lists are
+//! comma-separated strings):
+//!
+//! ```toml
+//! [scenario]
+//! name = "crash-then-degrade"
+//! seed = 7                      # mixed into the experiment seed
+//!
+//! [scenario.base]               # any [delay] spec; default: none
+//! kind = "exponential"
+//! mean = 0.01
+//!
+//! # transform sections apply in lexicographic section-name order;
+//! # prefix them to control ordering.
+//! [scenario.t0-crash]
+//! transform = "crash"
+//! workers = "0,3"               # or: fraction = 0.25 (seed-chosen set)
+//! start = 5                     # gather rounds [start, end)
+//! end = 15
+//!
+//! [scenario.t1-degrade]
+//! transform = "phase"
+//! start = 20
+//! end = 1000000
+//! factor = 4.0
+//! extra_secs = 0.02
+//!
+//! [scenario.t2-racks]
+//! transform = "rack"
+//! racks = 4
+//! prob = 0.3
+//! slow_secs = 0.5
+//!
+//! [scenario.t3-scale]
+//! transform = "scale"
+//! fraction = 0.5                # or: workers = "1,2"
+//! factor = 3.0
+//!
+//! [scenario.speeds]             # per-worker COMPUTE speed (cluster layer)
+//! kind = "two_tier"             # or "per_worker" with factors = "1,2,1,4"
+//! slow_fraction = 0.25
+//! factor = 3.0
+//! ```
+//!
+//! ## Crash/rejoin and the paper's erasure model
+//!
+//! A crash is modeled as an *unbounded delay* ([`crate::delay::CRASHED`]
+//! = +∞) over a round window. Because the coordinator already treats
+//! every straggler as an erasure — wait for the fastest `k`, interrupt
+//! the rest — a crashed node is just a worker that never makes `A_t`
+//! while the window is open, and no new coordinator logic is needed; the
+//! redundancy `β` covers the lost updates exactly as Theorem 2's
+//! arbitrary-`A_t` guarantee promises. The engines only have to ensure
+//! `k` live (non-crashed) workers remain, which they assert per round.
+
+pub mod grid;
+pub mod record;
+pub mod transforms;
+
+pub use grid::{canonical_trace, run_grid, summary_table, GridCell, GridSpec};
+pub use record::{DelayRecorder, TapeHandle};
+pub use transforms::{
+    unit_hash, CrashWindowDelay, PhasedDelay, RackCorrelatedDelay, WorkerScaleDelay,
+};
+
+use crate::config::{DelaySpec, TomlDoc};
+use crate::delay::{from_spec, DelayModel, TraceDelay};
+use crate::rng::{sample_without_replacement, Pcg64};
+use anyhow::{bail, ensure, Context, Result};
+
+/// A set of workers, either explicit or a seed-resolved fraction of `m`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WorkerSet {
+    /// Explicit worker indices.
+    List(Vec<usize>),
+    /// `round(fraction · m)` workers sampled without replacement from the
+    /// scenario's seed stream.
+    Fraction(f64),
+}
+
+impl WorkerSet {
+    /// Resolve to concrete indices for `m` workers.
+    pub fn resolve(&self, m: usize, rng: &mut Pcg64) -> Result<Vec<usize>> {
+        match self {
+            WorkerSet::List(ws) => {
+                for &w in ws {
+                    ensure!(w < m, "worker {w} out of range for m={m}");
+                }
+                Ok(ws.clone())
+            }
+            WorkerSet::Fraction(f) => {
+                ensure!((0.0..=1.0).contains(f), "worker fraction must be in [0, 1]");
+                let k = ((m as f64) * f).round() as usize;
+                Ok(sample_without_replacement(rng, m, k.min(m)))
+            }
+        }
+    }
+}
+
+/// One delay transform layered over the base model (see [`transforms`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Transform {
+    /// Multiply by `factor` and add `extra_secs` inside rounds
+    /// `[start, end)`.
+    Phase { start: usize, end: usize, factor: f64, extra_secs: f64 },
+    /// Rack-correlated slowdown: `racks` contiguous racks, each slow with
+    /// probability `prob` per round, adding `slow_secs`.
+    Rack { racks: usize, prob: f64, slow_secs: f64 },
+    /// Crash the given workers for rounds `[start, end)` (delay = +∞).
+    Crash { workers: WorkerSet, start: usize, end: usize },
+    /// Multiply the given workers' delays by `factor`.
+    Scale { workers: WorkerSet, factor: f64 },
+}
+
+/// Per-worker compute-speed multipliers, applied at the cluster layer
+/// (`SimCluster` scales simulated compute time; `ThreadCluster` adds a
+/// proportional sleep handicap).
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum SpeedProfile {
+    /// All workers at speed 1.
+    #[default]
+    Uniform,
+    /// Explicit multiplier per worker (≥ 1 means slower).
+    PerWorker(Vec<f64>),
+    /// A seed-chosen `slow_fraction` of workers runs `factor`× slower.
+    TwoTier { slow_fraction: f64, factor: f64 },
+}
+
+impl SpeedProfile {
+    /// Resolve to one multiplier per worker.
+    pub fn resolve(&self, m: usize, seed: u64) -> Result<Vec<f64>> {
+        match self {
+            SpeedProfile::Uniform => Ok(vec![1.0; m]),
+            SpeedProfile::PerWorker(f) => {
+                ensure!(f.len() == m, "speed profile sized for {} workers, m={m}", f.len());
+                ensure!(
+                    f.iter().all(|s| s.is_finite() && *s > 0.0),
+                    "speed multipliers must be finite and > 0"
+                );
+                Ok(f.clone())
+            }
+            SpeedProfile::TwoTier { slow_fraction, factor } => {
+                ensure!(
+                    (0.0..=1.0).contains(slow_fraction),
+                    "slow_fraction must be in [0, 1]"
+                );
+                ensure!(factor.is_finite() && *factor > 0.0, "speed factor must be > 0");
+                let k = ((m as f64) * slow_fraction).round() as usize;
+                let mut rng = Pcg64::with_stream(seed, 0x5eed);
+                let slow = sample_without_replacement(&mut rng, m, k.min(m));
+                let mut speeds = vec![1.0; m];
+                for w in slow {
+                    speeds[w] = *factor;
+                }
+                Ok(speeds)
+            }
+        }
+    }
+}
+
+/// A named, seedable straggler scenario. See the [module docs](self).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    /// Mixed into the experiment seed so the same scenario yields
+    /// distinct (but reproducible) realizations across scenarios.
+    pub seed: u64,
+    /// Base delay distribution the transforms layer over.
+    pub base: DelaySpec,
+    /// A recorded delay tape replayed instead of `base` (builder-only;
+    /// see [`record`]).
+    pub replay: Option<Vec<Vec<f64>>>,
+    /// Transforms, applied in order (each wraps everything before it).
+    pub transforms: Vec<Transform>,
+    /// Per-worker compute-speed multipliers for the cluster layer.
+    pub speeds: SpeedProfile,
+}
+
+impl Scenario {
+    pub fn new(name: &str) -> Self {
+        Scenario {
+            name: name.to_string(),
+            seed: 0,
+            base: DelaySpec::None,
+            replay: None,
+            transforms: Vec::new(),
+            speeds: SpeedProfile::Uniform,
+        }
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn base(mut self, spec: DelaySpec) -> Self {
+        self.base = spec;
+        self
+    }
+
+    /// Replay a recorded delay tape (`tape[iter][worker]`) instead of the
+    /// base spec.
+    pub fn replay(mut self, tape: Vec<Vec<f64>>) -> Self {
+        self.replay = Some(tape);
+        self
+    }
+
+    pub fn phase(mut self, start: usize, end: usize, factor: f64, extra_secs: f64) -> Self {
+        self.transforms.push(Transform::Phase { start, end, factor, extra_secs });
+        self
+    }
+
+    pub fn rack_slowdown(mut self, racks: usize, prob: f64, slow_secs: f64) -> Self {
+        self.transforms.push(Transform::Rack { racks, prob, slow_secs });
+        self
+    }
+
+    pub fn crash(mut self, workers: WorkerSet, start: usize, end: usize) -> Self {
+        self.transforms.push(Transform::Crash { workers, start, end });
+        self
+    }
+
+    pub fn scale(mut self, workers: WorkerSet, factor: f64) -> Self {
+        self.transforms.push(Transform::Scale { workers, factor });
+        self
+    }
+
+    pub fn speeds(mut self, profile: SpeedProfile) -> Self {
+        self.speeds = profile;
+        self
+    }
+
+    /// Whether any transform can produce an infinite (crash) delay. The
+    /// wait-for-k engines handle crashes; the event-queue async baselines
+    /// would starve the crashed worker forever instead.
+    pub fn has_crash(&self) -> bool {
+        self.transforms.iter().any(|t| matches!(t, Transform::Crash { .. }))
+    }
+
+    /// The scenario's effective seed under an experiment seed.
+    pub fn mixed_seed(&self, exp_seed: u64) -> u64 {
+        exp_seed ^ self.seed.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+    }
+
+    /// Check every transform's parameters, returning loud errors instead
+    /// of letting bad TOML reach the constructor asserts. Called by
+    /// [`Scenario::build_delay`]; also useful right after parsing.
+    pub fn validate(&self) -> Result<()> {
+        let name = &self.name;
+        for (i, t) in self.transforms.iter().enumerate() {
+            match t {
+                Transform::Phase { start, end, factor, extra_secs } => {
+                    ensure!(
+                        start < end,
+                        "scenario '{name}' transform #{i}: empty phase window [{start}, {end})"
+                    );
+                    ensure!(
+                        factor.is_finite() && *factor >= 0.0,
+                        "scenario '{name}' transform #{i}: phase factor must be finite \
+                         and ≥ 0 (got {factor})"
+                    );
+                    ensure!(
+                        *extra_secs >= 0.0,
+                        "scenario '{name}' transform #{i}: extra_secs must be ≥ 0 \
+                         (got {extra_secs})"
+                    );
+                }
+                Transform::Rack { racks, prob, slow_secs } => {
+                    ensure!(*racks >= 1, "scenario '{name}' transform #{i}: racks must be ≥ 1");
+                    ensure!(
+                        (0.0..=1.0).contains(prob),
+                        "scenario '{name}' transform #{i}: rack prob must be in [0, 1] \
+                         (got {prob})"
+                    );
+                    ensure!(
+                        *slow_secs >= 0.0,
+                        "scenario '{name}' transform #{i}: slow_secs must be ≥ 0 \
+                         (got {slow_secs})"
+                    );
+                }
+                Transform::Crash { start, end, .. } => {
+                    ensure!(
+                        start < end,
+                        "scenario '{name}' transform #{i}: empty crash window [{start}, {end})"
+                    );
+                }
+                Transform::Scale { factor, .. } => {
+                    ensure!(
+                        factor.is_finite() && *factor >= 0.0,
+                        "scenario '{name}' transform #{i}: scale factor must be finite \
+                         and ≥ 0 (got {factor})"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Build the delay model for `m` workers under `exp_seed`
+    /// (deterministic: same scenario + seed + m ⇒ same model).
+    pub fn build_delay(&self, m: usize, exp_seed: u64) -> Result<Box<dyn DelayModel>> {
+        ensure!(m >= 1, "scenario needs at least one worker");
+        self.validate()?;
+        let seed = self.mixed_seed(exp_seed);
+        let mut model: Box<dyn DelayModel> = match &self.replay {
+            Some(tape) => {
+                ensure!(!tape.is_empty(), "scenario '{}': empty replay tape", self.name);
+                ensure!(
+                    tape[0].len() == m,
+                    "scenario '{}': replay tape is for {} workers, experiment has m={m}",
+                    self.name,
+                    tape[0].len()
+                );
+                Box::new(TraceDelay::new(tape.clone()))
+            }
+            None => from_spec(&self.base, m, seed),
+        };
+        for (i, t) in self.transforms.iter().enumerate() {
+            // Each transform draws from its own stream, keyed by its
+            // position in the stack, so no two transforms share draws.
+            // (Reordering transforms therefore changes the realization —
+            // a scenario is identified by its full ordered stack + seed.)
+            let mut rng = Pcg64::with_stream(seed, 0x5ce0_0000 + i as u64);
+            model = match t {
+                Transform::Phase { start, end, factor, extra_secs } => Box::new(
+                    PhasedDelay::new(model, *start, *end, *factor, *extra_secs),
+                ),
+                Transform::Rack { racks, prob, slow_secs } => Box::new(
+                    RackCorrelatedDelay::new(model, (*racks).min(m), *prob, *slow_secs, seed),
+                ),
+                Transform::Crash { workers, start, end } => {
+                    let ws = workers.resolve(m, &mut rng).map_err(|e| {
+                        anyhow::anyhow!("scenario '{}' crash set: {e}", self.name)
+                    })?;
+                    Box::new(CrashWindowDelay::new(model, &ws, *start, *end))
+                }
+                Transform::Scale { workers, factor } => {
+                    let ws = workers.resolve(m, &mut rng).map_err(|e| {
+                        anyhow::anyhow!("scenario '{}' scale set: {e}", self.name)
+                    })?;
+                    let mut factors = vec![1.0; m];
+                    for w in ws {
+                        factors[w] = *factor;
+                    }
+                    Box::new(WorkerScaleDelay::new(model, factors))
+                }
+            };
+        }
+        Ok(model)
+    }
+
+    // ------------------------------------------------------------ TOML
+
+    /// Parse a scenario from a TOML document (schema in the
+    /// [module docs](self)).
+    pub fn from_doc(doc: &TomlDoc) -> Result<Scenario> {
+        ensure!(doc.has_section("scenario"), "missing [scenario] section");
+        let mut sc = Scenario::new(doc.get_str("scenario", "name").unwrap_or("unnamed"));
+        if let Some(seed) = doc.get_i64("scenario", "seed") {
+            sc.seed = seed as u64;
+        }
+        if doc.has_section("scenario.base") {
+            sc.base = DelaySpec::parse(doc, "scenario.base")?;
+        }
+        if doc.has_section("scenario.speeds") {
+            sc.speeds = parse_speeds(doc, "scenario.speeds")?;
+        }
+        for section in doc.sections() {
+            let Some(rest) = section.strip_prefix("scenario.") else {
+                continue;
+            };
+            if rest == "base" || rest == "speeds" {
+                continue;
+            }
+            sc.transforms.push(parse_transform(doc, &section)?);
+        }
+        Ok(sc)
+    }
+
+    pub fn from_file(path: &str) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {path}"))?;
+        let doc = TomlDoc::parse(&text)?;
+        Self::from_doc(&doc)
+    }
+
+    // -------------------------------------------------------- builtins
+
+    /// Names of the built-in scenario library (CLI + golden suite).
+    pub fn builtin_names() -> &'static [&'static str] {
+        &[
+            "baseline",
+            "warmup-degrade",
+            "rack-correlated",
+            "crash-rejoin",
+            "hetero-speed",
+            "random-half",
+        ]
+    }
+
+    /// A built-in scenario by name (see [`Scenario::builtin_names`]).
+    pub fn builtin(name: &str) -> Option<Scenario> {
+        let exp = DelaySpec::Exponential { mean: 0.005 };
+        Some(match name {
+            // plain i.i.d. exponential latency, no transforms
+            "baseline" => Scenario::new("baseline").base(exp),
+            // quiet warm-up, then a sustained 4× degradation with a
+            // 20 ms floor — the time-varying-distribution case
+            "warmup-degrade" => Scenario::new("warmup-degrade")
+                .base(exp)
+                .phase(0, 10, 0.25, 0.0)
+                .phase(10, usize::MAX, 4.0, 0.02),
+            // 4 racks, each independently slow 30% of rounds
+            "rack-correlated" => Scenario::new("rack-correlated")
+                .base(exp)
+                .rack_slowdown(4, 0.3, 0.5),
+            // a quarter of the fleet crashes for rounds [5, 15) and
+            // rejoins — the erasure-window case
+            "crash-rejoin" => Scenario::new("crash-rejoin")
+                .base(exp)
+                .crash(WorkerSet::Fraction(0.25), 5, 15),
+            // heterogeneous hardware on both axes: one seed-chosen
+            // quarter of the fleet sees 2× the injected latency, and an
+            // independently drawn quarter computes 4× slower (the two
+            // sets come from unrelated streams and generally differ, so
+            // up to half the fleet is degraded on one axis each)
+            "hetero-speed" => Scenario::new("hetero-speed")
+                .base(exp)
+                .scale(WorkerSet::Fraction(0.25), 2.0)
+                .speeds(SpeedProfile::TwoTier { slow_fraction: 0.25, factor: 4.0 }),
+            // every round an (unpredictable) half of the fleet stalls —
+            // one rack per worker makes the rack coin per-worker
+            "random-half" => Scenario::new("random-half")
+                .base(exp)
+                .rack_slowdown(usize::MAX, 0.5, 0.3),
+            _ => return None,
+        })
+    }
+}
+
+fn parse_index_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad worker index '{tok}'"))
+        })
+        .collect()
+}
+
+fn parse_f64_list(s: &str) -> Result<Vec<f64>> {
+    s.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad factor '{tok}'"))
+        })
+        .collect()
+}
+
+/// Worker set from a section: `workers = "0,3"` or `fraction = 0.25`.
+fn parse_worker_set(doc: &TomlDoc, section: &str) -> Result<WorkerSet> {
+    if let Some(ws) = doc.get_str(section, "workers") {
+        return Ok(WorkerSet::List(parse_index_list(ws)?));
+    }
+    if let Some(f) = doc.get_f64(section, "fraction") {
+        return Ok(WorkerSet::Fraction(f));
+    }
+    bail!("[{section}] needs either workers = \"i,j,…\" or fraction = x")
+}
+
+/// Non-negative integer key with default (negative values error instead
+/// of wrapping through an `as usize` cast).
+fn get_nonneg(doc: &TomlDoc, section: &str, key: &str, default: usize) -> Result<usize> {
+    match doc.get_i64(section, key) {
+        None => Ok(default),
+        Some(v) if v >= 0 => Ok(v as usize),
+        Some(v) => bail!("[{section}] {key} must be ≥ 0 (got {v})"),
+    }
+}
+
+fn parse_transform(doc: &TomlDoc, section: &str) -> Result<Transform> {
+    let kind = doc
+        .get_str(section, "transform")
+        .ok_or_else(|| anyhow::anyhow!("[{section}] missing 'transform' key"))?;
+    Ok(match kind {
+        "phase" => Transform::Phase {
+            start: get_nonneg(doc, section, "start", 0)?,
+            end: get_nonneg(doc, section, "end", usize::MAX)?,
+            factor: doc.get_f64(section, "factor").unwrap_or(1.0),
+            extra_secs: doc.get_f64(section, "extra_secs").unwrap_or(0.0),
+        },
+        "rack" => Transform::Rack {
+            racks: get_nonneg(doc, section, "racks", 2)?,
+            prob: doc.get_f64(section, "prob").unwrap_or(0.25),
+            slow_secs: doc.get_f64(section, "slow_secs").unwrap_or(1.0),
+        },
+        "crash" => Transform::Crash {
+            workers: parse_worker_set(doc, section)?,
+            start: get_nonneg(doc, section, "start", 0)?,
+            end: get_nonneg(doc, section, "end", usize::MAX)?,
+        },
+        "scale" => Transform::Scale {
+            workers: parse_worker_set(doc, section)?,
+            factor: doc.get_f64(section, "factor").unwrap_or(2.0),
+        },
+        other => bail!("[{section}]: unknown transform '{other}'"),
+    })
+}
+
+fn parse_speeds(doc: &TomlDoc, section: &str) -> Result<SpeedProfile> {
+    let kind = doc.get_str(section, "kind").unwrap_or("uniform");
+    Ok(match kind {
+        "uniform" => SpeedProfile::Uniform,
+        "per_worker" => {
+            let f = doc
+                .get_str(section, "factors")
+                .ok_or_else(|| anyhow::anyhow!("[{section}] per_worker needs factors"))?;
+            SpeedProfile::PerWorker(parse_f64_list(f)?)
+        }
+        "two_tier" => SpeedProfile::TwoTier {
+            slow_fraction: doc.get_f64(section, "slow_fraction").unwrap_or(0.25),
+            factor: doc.get_f64(section, "factor").unwrap_or(2.0),
+        },
+        other => bail!("[{section}]: unknown speeds kind '{other}'"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_builds_deterministic_model() {
+        let sc = Scenario::new("t")
+            .seed(3)
+            .base(DelaySpec::Exponential { mean: 0.01 })
+            .phase(0, 5, 0.5, 0.0)
+            .crash(WorkerSet::List(vec![1]), 2, 4);
+        let sample_all = |sc: &Scenario| -> Vec<u64> {
+            let mut d = sc.build_delay(4, 42).unwrap();
+            let mut out = Vec::new();
+            for t in 0..8 {
+                for w in 0..4 {
+                    out.push(d.sample(w, t).to_bits());
+                }
+            }
+            out
+        };
+        assert_eq!(sample_all(&sc), sample_all(&sc), "same seed ⇒ bit-identical");
+        let mut d = sc.build_delay(4, 42).unwrap();
+        assert!(d.sample(1, 2).is_infinite(), "crash window");
+        assert!(d.sample(1, 4).is_finite(), "rejoin");
+        assert!(sc.has_crash());
+    }
+
+    #[test]
+    fn scenario_seed_changes_realization() {
+        let base = Scenario::new("a").base(DelaySpec::Exponential { mean: 0.01 });
+        let mut d0 = base.clone().seed(1).build_delay(4, 42).unwrap();
+        let mut d1 = base.seed(2).build_delay(4, 42).unwrap();
+        let diff = (0..16).filter(|&i| d0.sample(i % 4, i / 4) != d1.sample(i % 4, i / 4)).count();
+        assert!(diff > 8, "seeds must decorrelate realizations");
+    }
+
+    #[test]
+    fn fraction_crash_resolves_to_rounded_count() {
+        let sc = Scenario::new("c").crash(WorkerSet::Fraction(0.25), 0, 10);
+        let mut d = sc.build_delay(8, 7).unwrap();
+        let crashed = (0..8).filter(|&w| d.sample(w, 0).is_infinite()).count();
+        assert_eq!(crashed, 2);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let text = r#"
+[scenario]
+name = "mixed"
+seed = 11
+
+[scenario.base]
+kind = "exponential"
+mean = 0.02
+
+[scenario.t0-crash]
+transform = "crash"
+workers = "0,2"
+start = 1
+end = 3
+
+[scenario.t1-phase]
+transform = "phase"
+start = 5
+end = 9
+factor = 2.0
+extra_secs = 0.1
+
+[scenario.t2-rack]
+transform = "rack"
+racks = 2
+prob = 0.5
+slow_secs = 0.3
+
+[scenario.speeds]
+kind = "two_tier"
+slow_fraction = 0.5
+factor = 3.0
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        let sc = Scenario::from_doc(&doc).unwrap();
+        assert_eq!(sc.name, "mixed");
+        assert_eq!(sc.seed, 11);
+        assert_eq!(sc.base, DelaySpec::Exponential { mean: 0.02 });
+        assert_eq!(sc.transforms.len(), 3);
+        assert_eq!(
+            sc.transforms[0],
+            Transform::Crash { workers: WorkerSet::List(vec![0, 2]), start: 1, end: 3 }
+        );
+        assert!(matches!(sc.transforms[1], Transform::Phase { .. }));
+        assert!(matches!(sc.transforms[2], Transform::Rack { .. }));
+        let speeds = sc.speeds.resolve(4, 9).unwrap();
+        assert_eq!(speeds.iter().filter(|&&s| s == 3.0).count(), 2);
+        // and the whole thing builds
+        let mut d = sc.build_delay(4, 1).unwrap();
+        assert!(d.sample(0, 1).is_infinite());
+        assert!(d.sample(1, 1).is_finite());
+    }
+
+    #[test]
+    fn bad_values_error_instead_of_panicking() {
+        // empty phase window → build_delay error, not a constructor panic
+        let sc = Scenario::new("bad").phase(3, 3, 1.0, 0.0);
+        assert!(sc.build_delay(4, 1).is_err());
+        // racks = 0 → error
+        let sc = Scenario::new("bad").rack_slowdown(0, 0.5, 1.0);
+        assert!(sc.build_delay(4, 1).is_err());
+        // prob out of range → error
+        let sc = Scenario::new("bad").rack_slowdown(2, 1.5, 1.0);
+        assert!(sc.build_delay(4, 1).is_err());
+        // negative TOML integers → parse error, not a wrapping cast
+        let doc = TomlDoc::parse(
+            "[scenario]\nname = \"x\"\n[scenario.t]\ntransform = \"phase\"\nstart = -1\n",
+        )
+        .unwrap();
+        assert!(Scenario::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn toml_errors_are_loud() {
+        let no_scenario = TomlDoc::parse("[delay]\nkind = \"none\"\n").unwrap();
+        assert!(Scenario::from_doc(&no_scenario).is_err());
+        let bad = TomlDoc::parse(
+            "[scenario]\nname = \"x\"\n[scenario.t]\ntransform = \"nope\"\n",
+        )
+        .unwrap();
+        assert!(Scenario::from_doc(&bad).is_err());
+        let missing_set = TomlDoc::parse(
+            "[scenario]\nname = \"x\"\n[scenario.t]\ntransform = \"crash\"\n",
+        )
+        .unwrap();
+        assert!(Scenario::from_doc(&missing_set).is_err());
+    }
+
+    #[test]
+    fn example_scenario_file_parses_and_builds() {
+        let path =
+            concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/scenarios/crash_degrade.toml");
+        let sc = Scenario::from_file(path).unwrap();
+        assert_eq!(sc.name, "crash-degrade");
+        assert_eq!(sc.seed, 7);
+        assert_eq!(sc.transforms.len(), 3);
+        assert!(sc.has_crash());
+        assert!(matches!(sc.speeds, SpeedProfile::TwoTier { .. }));
+        let mut d = sc.build_delay(8, 1).unwrap();
+        let crashed_at_6 = (0..8).filter(|&w| d.sample(w, 6).is_infinite()).count();
+        assert_eq!(crashed_at_6, 2, "fraction 0.25 of 8 crashes inside the window");
+    }
+
+    #[test]
+    fn builtins_all_build() {
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::builtin(name).unwrap_or_else(|| panic!("missing builtin {name}"));
+            assert_eq!(&sc.name, name);
+            let mut d = sc.build_delay(8, 42).unwrap();
+            for t in 0..20 {
+                for w in 0..8 {
+                    let v = d.sample(w, t);
+                    assert!(v >= 0.0, "{name}: negative delay {v}");
+                }
+            }
+            let speeds = sc.speeds.resolve(8, 42).unwrap();
+            assert_eq!(speeds.len(), 8);
+        }
+        assert!(Scenario::builtin("no-such").is_none());
+    }
+
+    #[test]
+    fn crash_rejoin_keeps_six_of_eight_alive() {
+        // The golden grid runs m=8, k=6: the builtin crash window must
+        // never take more than 2 workers down.
+        let sc = Scenario::builtin("crash-rejoin").unwrap();
+        let mut d = sc.build_delay(8, 1234).unwrap();
+        for t in 0..25 {
+            let live = (0..8).filter(|&w| d.sample(w, t).is_finite()).count();
+            assert!(live >= 6, "round {t}: only {live} live");
+        }
+    }
+
+    #[test]
+    fn replay_scenario_reproduces_tape() {
+        let tape = vec![vec![0.1, 0.2], vec![0.3, 0.4]];
+        let sc = Scenario::new("r").replay(tape.clone());
+        let mut d = sc.build_delay(2, 99).unwrap();
+        assert_eq!(d.sample(1, 0), 0.2);
+        assert_eq!(d.sample(0, 1), 0.3);
+        // wrong width is rejected
+        assert!(sc.build_delay(3, 99).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Delay-trace record/replay.
+//!
+//! [`DelayRecorder`] wraps any [`DelayModel`] and tapes every sampled
+//! `(worker, iter) → delay` onto a shared [`TapeHandle`]. After a run the
+//! tape replays through [`crate::delay::TraceDelay`], reproducing the
+//! exact same straggler pattern against a different scheme / solver /
+//! engine — the "same adversary, different code" comparison the paper's
+//! sample-path guarantees are about.
+
+use std::sync::{Arc, Mutex};
+
+use crate::delay::{DelayModel, TraceDelay};
+
+/// Shared handle onto a recorded delay tape (`tape[iter][worker]`).
+/// Entries never sampled in an iteration are `NaN`.
+#[derive(Clone)]
+pub struct TapeHandle {
+    tape: Arc<Mutex<Vec<Vec<f64>>>>,
+    m: usize,
+}
+
+impl TapeHandle {
+    /// Copy of the tape recorded so far.
+    pub fn snapshot(&self) -> Vec<Vec<f64>> {
+        self.tape.lock().unwrap().clone()
+    }
+
+    /// Number of iterations recorded so far.
+    pub fn len(&self) -> usize {
+        self.tape.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Build a replaying [`TraceDelay`] from the tape. Unsampled entries
+    /// (workers never asked in an iteration, e.g. because the engine
+    /// skipped a crashed worker) are replayed as `hole_secs`.
+    pub fn replay(&self, hole_secs: f64) -> TraceDelay {
+        let mut tape = self.snapshot();
+        assert!(!tape.is_empty(), "cannot replay an empty delay tape");
+        for row in tape.iter_mut() {
+            for v in row.iter_mut() {
+                if v.is_nan() {
+                    *v = hole_secs;
+                }
+            }
+        }
+        TraceDelay::new(tape)
+    }
+}
+
+/// Recording wrapper: delegates to the inner model and tapes the result.
+pub struct DelayRecorder {
+    inner: Box<dyn DelayModel>,
+    handle: TapeHandle,
+}
+
+impl DelayRecorder {
+    /// Wrap `inner`; the returned [`TapeHandle`] stays valid after the
+    /// recorder (and the cluster owning it) is dropped.
+    pub fn new(inner: Box<dyn DelayModel>) -> (Self, TapeHandle) {
+        let m = inner.workers();
+        let handle = TapeHandle { tape: Arc::new(Mutex::new(Vec::new())), m };
+        (DelayRecorder { inner, handle: handle.clone() }, handle)
+    }
+}
+
+impl DelayModel for DelayRecorder {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        let d = self.inner.sample(worker, iter);
+        let mut tape = self.handle.tape.lock().unwrap();
+        while tape.len() <= iter {
+            let m = self.handle.m;
+            tape.push(vec![f64::NAN; m]);
+        }
+        tape[iter][worker] = d;
+        d
+    }
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::ExponentialDelay;
+
+    #[test]
+    fn record_then_replay_is_bit_identical() {
+        let (mut rec, tape) =
+            DelayRecorder::new(Box::new(ExponentialDelay::new(3, 0.01, 5)));
+        let mut original = Vec::new();
+        for t in 0..4 {
+            for w in 0..3 {
+                original.push(rec.sample(w, t));
+            }
+        }
+        assert_eq!(tape.len(), 4);
+        let mut replay = tape.replay(0.0);
+        let mut replayed = Vec::new();
+        for t in 0..4 {
+            for w in 0..3 {
+                replayed.push(replay.sample(w, t));
+            }
+        }
+        assert_eq!(
+            original.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            replayed.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn holes_are_patched_on_replay() {
+        let (mut rec, tape) =
+            DelayRecorder::new(Box::new(ExponentialDelay::new(2, 0.01, 7)));
+        rec.sample(0, 0); // worker 1 never sampled at iter 0
+        let mut replay = tape.replay(9.0);
+        assert_eq!(replay.sample(1, 0), 9.0);
+        assert!(replay.sample(0, 0).is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "empty delay tape")]
+    fn empty_tape_cannot_replay() {
+        let (_rec, tape) = DelayRecorder::new(Box::new(ExponentialDelay::new(2, 0.01, 9)));
+        let _ = tape.replay(0.0);
+    }
+}

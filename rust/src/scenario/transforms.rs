@@ -1,0 +1,283 @@
+//! Composable delay transforms: wrappers layered over any base
+//! [`DelayModel`] to produce time-varying, correlated, or adversarial
+//! straggler patterns while staying fully deterministic.
+//!
+//! Every wrapper samples its inner model *first* and then modifies the
+//! result, so the base model's RNG stream advances identically whether or
+//! not a transform is active — adding a crash window does not perturb the
+//! delays other workers see.
+
+use crate::delay::{DelayModel, CRASHED};
+
+/// Stateless hash of `(seed, a, b)` to a uniform f64 in [0, 1)
+/// (splitmix64-style finalizer). Used by transforms whose per-iteration
+/// randomness must not depend on the order in which workers are sampled.
+pub fn unit_hash(seed: u64, a: u64, b: u64) -> f64 {
+    let mut z = seed
+        ^ a.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ b.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Time-varying phase: inside gather rounds `[start, end)` the base delay
+/// is multiplied by `factor` and `extra_secs` is added (e.g. a warm-up
+/// phase at `factor < 1`, or a degradation phase at `factor > 1`).
+pub struct PhasedDelay {
+    inner: Box<dyn DelayModel>,
+    start: usize,
+    end: usize,
+    factor: f64,
+    extra_secs: f64,
+}
+
+impl PhasedDelay {
+    pub fn new(
+        inner: Box<dyn DelayModel>,
+        start: usize,
+        end: usize,
+        factor: f64,
+        extra_secs: f64,
+    ) -> Self {
+        assert!(start < end, "phase window must be non-empty (start={start}, end={end})");
+        assert!(factor >= 0.0 && factor.is_finite(), "phase factor must be finite and ≥ 0");
+        assert!(extra_secs >= 0.0, "phase extra_secs must be ≥ 0");
+        PhasedDelay { inner, start, end, factor, extra_secs }
+    }
+}
+
+impl DelayModel for PhasedDelay {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        let d = self.inner.sample(worker, iter);
+        // A crash (infinite delay) from an inner transform passes through
+        // unchanged: factor 0.0 would otherwise produce inf·0 = NaN.
+        if !d.is_finite() {
+            return d;
+        }
+        if iter >= self.start && iter < self.end {
+            d * self.factor + self.extra_secs
+        } else {
+            d
+        }
+    }
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+}
+
+/// Rack-correlated slowdowns: workers are grouped into `racks` contiguous
+/// racks; each (iteration, rack) pair independently suffers a shared
+/// `slow_secs` hit with probability `prob`. The coin flips come from
+/// [`unit_hash`], so they are a pure function of `(seed, iter, rack)` —
+/// identical regardless of engine or sampling order.
+pub struct RackCorrelatedDelay {
+    inner: Box<dyn DelayModel>,
+    m: usize,
+    racks: usize,
+    prob: f64,
+    slow_secs: f64,
+    seed: u64,
+}
+
+impl RackCorrelatedDelay {
+    pub fn new(
+        inner: Box<dyn DelayModel>,
+        racks: usize,
+        prob: f64,
+        slow_secs: f64,
+        seed: u64,
+    ) -> Self {
+        let m = inner.workers();
+        assert!(racks >= 1 && racks <= m, "racks must satisfy 1 ≤ racks ≤ m");
+        assert!((0.0..=1.0).contains(&prob), "rack slowdown prob must be in [0, 1]");
+        assert!(slow_secs >= 0.0, "rack slow_secs must be ≥ 0");
+        RackCorrelatedDelay { inner, m, racks, prob, slow_secs, seed }
+    }
+
+    /// Rack of worker `w` (contiguous blocks of near-equal size).
+    pub fn rack_of(&self, worker: usize) -> usize {
+        worker * self.racks / self.m
+    }
+}
+
+impl DelayModel for RackCorrelatedDelay {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        let d = self.inner.sample(worker, iter);
+        let rack = self.rack_of(worker);
+        if unit_hash(self.seed, iter as u64, rack as u64) < self.prob {
+            d + self.slow_secs
+        } else {
+            d
+        }
+    }
+    fn workers(&self) -> usize {
+        self.m
+    }
+}
+
+/// Crash/rejoin window: the given workers are *crashed* (their delay is
+/// [`CRASHED`] = +∞) during gather rounds `[start, end)` and behave
+/// normally outside it. A crash is just an unbounded delay, so the
+/// stragglers-as-erasures coordinator handles it with no extra logic —
+/// the crashed worker simply never makes the fastest-k set while the
+/// window is open, and rejoins A_t candidates once it closes.
+pub struct CrashWindowDelay {
+    inner: Box<dyn DelayModel>,
+    crashed: Vec<bool>,
+    start: usize,
+    end: usize,
+}
+
+impl CrashWindowDelay {
+    pub fn new(inner: Box<dyn DelayModel>, workers: &[usize], start: usize, end: usize) -> Self {
+        assert!(start < end, "crash window must be non-empty (start={start}, end={end})");
+        let m = inner.workers();
+        let mut crashed = vec![false; m];
+        for &w in workers {
+            assert!(w < m, "crashed worker {w} out of range for m={m}");
+            crashed[w] = true;
+        }
+        CrashWindowDelay { inner, crashed, start, end }
+    }
+}
+
+impl DelayModel for CrashWindowDelay {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        // Sample first to keep the base RNG stream aligned with the
+        // crash-free counterfactual.
+        let d = self.inner.sample(worker, iter);
+        if self.crashed[worker] && iter >= self.start && iter < self.end {
+            CRASHED
+        } else {
+            d
+        }
+    }
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+}
+
+/// Per-worker multiplicative delay scaling (heterogeneous node quality on
+/// the *injected latency* axis; compute-speed heterogeneity lives at the
+/// cluster layer, see `SimCluster::with_speeds`).
+pub struct WorkerScaleDelay {
+    inner: Box<dyn DelayModel>,
+    factors: Vec<f64>,
+}
+
+impl WorkerScaleDelay {
+    pub fn new(inner: Box<dyn DelayModel>, factors: Vec<f64>) -> Self {
+        assert_eq!(factors.len(), inner.workers(), "one scale factor per worker");
+        assert!(
+            factors.iter().all(|f| f.is_finite() && *f >= 0.0),
+            "scale factors must be finite and ≥ 0"
+        );
+        WorkerScaleDelay { inner, factors }
+    }
+}
+
+impl DelayModel for WorkerScaleDelay {
+    fn sample(&mut self, worker: usize, iter: usize) -> f64 {
+        let d = self.inner.sample(worker, iter);
+        // Crashes pass through unscaled (avoid inf·0 = NaN at factor 0).
+        if !d.is_finite() {
+            return d;
+        }
+        d * self.factors[worker]
+    }
+    fn workers(&self) -> usize {
+        self.inner.workers()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delay::ConstantDelay;
+
+    fn base(m: usize, secs: f64) -> Box<dyn DelayModel> {
+        Box::new(ConstantDelay::new(m, secs))
+    }
+
+    #[test]
+    fn unit_hash_is_deterministic_and_uniformish() {
+        assert_eq!(unit_hash(1, 2, 3), unit_hash(1, 2, 3));
+        assert_ne!(unit_hash(1, 2, 3), unit_hash(1, 2, 4));
+        let n = 10_000;
+        let mean: f64 =
+            (0..n).map(|i| unit_hash(7, i as u64, 0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+        assert!((0..n).all(|i| (0.0..1.0).contains(&unit_hash(9, i as u64, 1))));
+    }
+
+    #[test]
+    fn phase_applies_only_inside_window() {
+        let mut d = PhasedDelay::new(base(2, 1.0), 5, 10, 3.0, 0.5);
+        assert_eq!(d.sample(0, 4), 1.0);
+        assert_eq!(d.sample(0, 5), 3.5);
+        assert_eq!(d.sample(1, 9), 3.5);
+        assert_eq!(d.sample(1, 10), 1.0);
+        assert_eq!(d.workers(), 2);
+    }
+
+    #[test]
+    fn rack_groups_are_contiguous_and_move_together() {
+        let mut d = RackCorrelatedDelay::new(base(8, 0.0), 4, 0.5, 2.0, 11);
+        assert_eq!(d.rack_of(0), 0);
+        assert_eq!(d.rack_of(1), 0);
+        assert_eq!(d.rack_of(7), 3);
+        for t in 0..50 {
+            // rack-mates always agree
+            assert_eq!(d.sample(0, t), d.sample(1, t), "iter {t}");
+            assert_eq!(d.sample(6, t), d.sample(7, t), "iter {t}");
+        }
+        // some iteration separates rack 0 from rack 3 (correlated ≠ global)
+        assert!(
+            (0..200).any(|t| d.sample(0, t) != d.sample(7, t)),
+            "racks never diverged"
+        );
+        // roughly prob fraction of (iter, rack) pairs are slow
+        let slow = (0..400).filter(|&t| d.sample(0, t) > 0.0).count();
+        assert!((120..=280).contains(&slow), "slow={slow}");
+    }
+
+    #[test]
+    fn crash_window_is_infinite_then_rejoins() {
+        let mut d = CrashWindowDelay::new(base(3, 0.1), &[1], 2, 4);
+        assert_eq!(d.sample(1, 1), 0.1);
+        assert!(d.sample(1, 2).is_infinite());
+        assert!(d.sample(1, 3).is_infinite());
+        assert_eq!(d.sample(1, 4), 0.1, "worker must rejoin after the window");
+        assert_eq!(d.sample(0, 2), 0.1, "others unaffected");
+    }
+
+    #[test]
+    fn worker_scale_is_per_worker() {
+        let mut d = WorkerScaleDelay::new(base(3, 2.0), vec![1.0, 0.5, 3.0]);
+        assert_eq!(d.sample(0, 0), 2.0);
+        assert_eq!(d.sample(1, 0), 1.0);
+        assert_eq!(d.sample(2, 0), 6.0);
+    }
+
+    #[test]
+    fn crashes_pass_through_multiplicative_transforms_unscathed() {
+        // factor 0.0 ("perfectly quiet phase") over a crash window must
+        // not turn +inf into inf·0 = NaN.
+        let crash = CrashWindowDelay::new(base(2, 0.1), &[0], 0, 10);
+        let mut d = PhasedDelay::new(Box::new(crash), 0, 10, 0.0, 0.0);
+        assert!(d.sample(0, 3).is_infinite(), "crash preserved, not NaN");
+        assert_eq!(d.sample(1, 3), 0.0, "live worker scaled normally");
+        let crash = CrashWindowDelay::new(base(2, 0.1), &[0], 0, 10);
+        let mut d = WorkerScaleDelay::new(Box::new(crash), vec![0.0, 2.0]);
+        assert!(d.sample(0, 3).is_infinite());
+        assert_eq!(d.sample(1, 3), 0.2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_phase_window_rejected() {
+        let _ = PhasedDelay::new(base(2, 0.0), 5, 5, 1.0, 0.0);
+    }
+}

@@ -1,0 +1,192 @@
+//! Frame invariants across ALL encoders over a size sweep, via the
+//! mini property-testing framework (`coded_opt::testutil::prop`):
+//!
+//! - Parseval tightness `SᵀS = β̂·I` (exact for the structured
+//!   constructions at the *achieved* β̂, statistical for Gaussian);
+//! - row-norm / equiangularity / Welch-bound coherence for the ETFs
+//!   (Paley, Steiner) at their natural sizes;
+//! - erasure-spectrum sanity over random active sets via
+//!   `encoding::spectrum`.
+
+use coded_opt::config::Scheme;
+use coded_opt::encoding::{paley, Encoding, SubsetSpectrum};
+use coded_opt::linalg::dot;
+use coded_opt::testutil::PropRunner;
+
+/// Schemes whose construction yields an *exact* tight frame at the
+/// achieved redundancy (identity included: β̂ = 1).
+const EXACT_SCHEMES: &[Scheme] = &[
+    Scheme::Uncoded,
+    Scheme::Replication,
+    Scheme::Hadamard,
+    Scheme::Haar,
+    Scheme::Paley,
+    Scheme::Steiner,
+];
+
+fn full_stack(enc: &Encoding) -> coded_opt::linalg::Mat {
+    let all: Vec<usize> = (0..enc.workers()).collect();
+    enc.stack(&all)
+}
+
+#[test]
+fn prop_structured_schemes_are_exact_parseval_frames() {
+    PropRunner::new("parseval_exact", 0xF7A3E).cases(36).run(
+        |g| {
+            let scheme = EXACT_SCHEMES[g.usize_in(0, EXACT_SCHEMES.len() - 1)];
+            let n = g.usize_in(8, 40);
+            let m = g.usize_in(1, 6);
+            let seed = g.usize_in(0, 1000) as u64;
+            (scheme, n, m, seed)
+        },
+        |&(scheme, n, m, seed)| {
+            let enc = Encoding::build(scheme, n, m, 2.0, seed)
+                .map_err(|e| format!("{scheme:?} n={n} m={m}: {e}"))?;
+            let s = full_stack(&enc);
+            if s.cols() != enc.n {
+                return Err(format!("{scheme:?}: stacked cols {} != n {}", s.cols(), enc.n));
+            }
+            let g = s.gram();
+            let beta = enc.beta;
+            let tol = 1e-8 * beta.max(1.0);
+            for i in 0..g.rows() {
+                for j in 0..g.cols() {
+                    let expect = if i == j { beta } else { 0.0 };
+                    if (g[(i, j)] - expect).abs() > tol {
+                        return Err(format!(
+                            "{scheme:?} n={n} m={m} seed={seed}: G[{i},{j}]={} vs {expect} \
+                             (β̂={beta})",
+                            g[(i, j)]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gaussian_gram_concentrates_at_beta() {
+    PropRunner::new("parseval_gaussian", 0x6A55).cases(24).run(
+        |g| {
+            let n = g.usize_in(32, 96);
+            let m = g.usize_in(1, 6);
+            let seed = g.usize_in(0, 1000) as u64;
+            (n, m, seed)
+        },
+        |&(n, m, seed)| {
+            let enc = Encoding::build(Scheme::Gaussian, n, m, 2.0, seed)
+                .map_err(|e| e.to_string())?;
+            let s = full_stack(&enc);
+            let gram = s.gram();
+            let beta = enc.beta;
+            // diagonal mean: E = β, sd ≈ √(2β)/n — 20% is a ≥ 8σ band
+            let diag_mean: f64 =
+                (0..n).map(|i| gram[(i, i)]).sum::<f64>() / n as f64;
+            if (diag_mean - beta).abs() > 0.2 * beta {
+                return Err(format!("diag mean {diag_mean} vs β {beta} (n={n} seed={seed})"));
+            }
+            // off-diagonal mean |·|: E ≈ √(2β/(πn)) ≤ 0.2 for n ≥ 32
+            let mut off_sum = 0.0;
+            let mut off_cnt = 0usize;
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    off_sum += gram[(i, j)].abs();
+                    off_cnt += 1;
+                }
+            }
+            let off_mean = off_sum / off_cnt as f64;
+            if !off_mean.is_finite() || off_mean > 0.4 {
+                return Err(format!("off-diag mean {off_mean} too large (n={n} seed={seed})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_etf_rows_unit_norm_and_welch_equiangular() {
+    // natural sizes: Paley n = (q+1)/2; Steiner n = v(v−1)/2 — at these
+    // sizes the constructions are exact ETFs with unit-norm rows and
+    // every pair meeting the Welch bound with equality.
+    let cases: &[(Scheme, usize)] =
+        &[(Scheme::Paley, 7), (Scheme::Paley, 9), (Scheme::Steiner, 6), (Scheme::Steiner, 28)];
+    PropRunner::new("etf_welch", 0xE7F).cases(16).run(
+        |g| {
+            let (scheme, n) = cases[g.usize_in(0, cases.len() - 1)];
+            let m = g.usize_in(1, 4);
+            (scheme, n, m)
+        },
+        |&(scheme, n, m)| {
+            let enc = Encoding::build(scheme, n, m, 2.0, 1).map_err(|e| e.to_string())?;
+            let s = full_stack(&enc);
+            let rows = s.rows();
+            let beta = rows as f64 / n as f64;
+            for i in 0..rows {
+                let n2 = dot(s.row(i), s.row(i));
+                if (n2 - 1.0).abs() > 1e-8 {
+                    return Err(format!("{scheme:?} n={n}: row {i} norm² = {n2}"));
+                }
+            }
+            let welch = ((beta - 1.0) / (beta * n as f64 - 1.0)).sqrt();
+            for i in 0..rows {
+                for j in (i + 1)..rows {
+                    let ip = dot(s.row(i), s.row(j)).abs();
+                    if (ip - welch).abs() > 1e-8 {
+                        return Err(format!(
+                            "{scheme:?} n={n}: |<{i},{j}>| = {ip}, welch = {welch}"
+                        ));
+                    }
+                }
+            }
+            // and the library helper agrees
+            let w = paley::max_coherence(&s);
+            if (w - welch).abs() > 1e-8 {
+                return Err(format!("max_coherence {w} vs welch {welch}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_erasure_spectrum_sanity_all_schemes() {
+    let all = Scheme::all();
+    PropRunner::new("erasure_spectrum", 0x5BEC).cases(30).run(
+        |g| {
+            let scheme = all[g.usize_in(0, all.len() - 1)];
+            let n = g.usize_in(12, 36);
+            let m = g.usize_in(2, 8);
+            let k = g.usize_in(1, m);
+            let seed = g.usize_in(0, 500) as u64;
+            (scheme, n, m, k, seed)
+        },
+        |&(scheme, n, m, k, seed)| {
+            let enc =
+                Encoding::build(scheme, n, m, 2.0, seed).map_err(|e| e.to_string())?;
+            let stats = SubsetSpectrum::new(&enc, seed ^ 0xabc).analyze(k, 4);
+            if stats.eigenvalues.iter().any(|e| !e.is_finite()) {
+                return Err("non-finite eigenvalue".into());
+            }
+            // Grams are PSD: eigenvalues ≥ 0 up to numerics
+            if stats.lambda_min < -1e-8 {
+                return Err(format!("λmin = {} < 0", stats.lambda_min));
+            }
+            if stats.lambda_max < stats.lambda_min {
+                return Err("λmax < λmin".into());
+            }
+            if !(0.0..=1.0).contains(&stats.bulk_at_one) {
+                return Err(format!("bulk_at_one = {}", stats.bulk_at_one));
+            }
+            if stats.epsilon() < -1e-12 || !stats.epsilon().is_finite() {
+                return Err(format!("ε = {}", stats.epsilon()));
+            }
+            // k = m with an exact tight frame ⇒ flat spectrum at 1
+            if k == m && scheme != Scheme::Gaussian && stats.epsilon() > 1e-7 {
+                return Err(format!("{scheme:?}: full-gather ε = {}", stats.epsilon()));
+            }
+            Ok(())
+        },
+    );
+}

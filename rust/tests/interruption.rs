@@ -1,0 +1,131 @@
+//! Interruption semantics for `ThreadCluster`: a worker aborted
+//! mid-round must never contribute a stale payload to a later round's
+//! aggregation — the regression guard for the abort/iter sentinel logic
+//! in `cluster/threads.rs` (the paper's footnote 1: the master's
+//! interrupt signal makes the worker drop, not delay, its result).
+
+use coded_opt::cluster::{Gather, Task, ThreadCluster, WorkerNode};
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::{build_data_parallel, KIND_GRADIENT};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::delay::TraceDelay;
+use coded_opt::objectives::{QuadObjective, RidgeProblem};
+
+/// Echoes `(id, iter)` so the master can audit exactly which round each
+/// payload was computed for.
+struct TagWorker {
+    id: usize,
+}
+
+impl WorkerNode for TagWorker {
+    fn process(&mut self, task: &Task) -> Vec<f64> {
+        vec![self.id as f64, task.iter as f64]
+    }
+}
+
+fn tag_cluster(m: usize, delay: TraceDelay) -> ThreadCluster {
+    let workers: Vec<Box<dyn WorkerNode>> =
+        (0..m).map(|id| Box::new(TagWorker { id }) as Box<dyn WorkerNode>).collect();
+    ThreadCluster::new(workers, Box::new(delay))
+}
+
+fn task(iter: usize) -> Task {
+    Task { iter, kind: 0, payload: vec![], aux: vec![] }
+}
+
+#[test]
+fn aborted_worker_never_leaks_a_stale_payload() {
+    // Round 0: worker 2 sleeps 40 ms, k=2 of 3 ⇒ it is aborted
+    // mid-sleep. Rounds 1..6 are full gathers with zero delay, racing
+    // the woken worker's (dropped) round-0 task against fresh ones.
+    let m = 3;
+    let mut rows = vec![vec![0.0, 0.0, 0.04]];
+    rows.extend(std::iter::repeat(vec![0.0; m]).take(6));
+    let mut c = tag_cluster(m, TraceDelay::new(rows));
+    let r0 = c.round(2, &mut |_| task(0));
+    assert_eq!(r0.active_set(), vec![0, 1]);
+    assert_eq!(r0.interrupted, vec![2]);
+    for t in 1..7 {
+        let rr = c.round(m, &mut |_| task(t));
+        assert_eq!(rr.responses.len(), m, "round {t}");
+        let mut seen = vec![false; m];
+        for r in &rr.responses {
+            assert_eq!(
+                r.payload[1], t as f64,
+                "round {t}: worker {} delivered a payload computed for round {}",
+                r.worker, r.payload[1]
+            );
+            assert!(!seen[r.worker], "round {t}: duplicate response from {}", r.worker);
+            seen[r.worker] = true;
+        }
+    }
+}
+
+#[test]
+fn repeated_interruptions_never_cross_rounds() {
+    // A different worker stalls every round (rotating straggler); every
+    // gathered payload must still carry its own round's tag.
+    let m = 4;
+    let rounds = 12;
+    let rows: Vec<Vec<f64>> = (0..rounds)
+        .map(|t| (0..m).map(|w| if w == t % m { 0.02 } else { 0.0 }).collect())
+        .collect();
+    let mut c = tag_cluster(m, TraceDelay::new(rows));
+    for t in 0..rounds {
+        let rr = c.round(m - 1, &mut |_| task(t));
+        assert_eq!(rr.responses.len(), m - 1);
+        for r in &rr.responses {
+            assert_eq!(r.payload[1], t as f64, "round {t}, worker {}", r.worker);
+        }
+        assert!(!rr.interrupted.is_empty());
+    }
+}
+
+#[test]
+fn stale_gradients_never_reach_the_assembler() {
+    // End-to-end version against the real `QuadWorker`/`GradAssembler`
+    // path: round 0 aborts a straggler that was handed iterate w0; round
+    // 1 is a full gather on a DIFFERENT iterate w1. If the sentinel
+    // logic ever let the stale (w0-based, or duplicated) payload through,
+    // the assembled full-gather gradient could not equal the exact
+    // gradient at w1.
+    let (x, y, _) = gaussian_linear(48, 6, 0.3, 17);
+    let m = 4;
+    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, m, 2.0, 17).unwrap();
+    let asm = dp.assembler.clone();
+    let delay = TraceDelay::new(vec![
+        vec![0.03, 0.0, 0.0, 0.0],
+        vec![0.0; 4],
+        vec![0.0; 4],
+    ]);
+    let mut cluster = ThreadCluster::new(dp.workers, Box::new(delay));
+    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
+
+    let w0: Vec<f64> = (0..6).map(|i| 0.3 * i as f64 - 0.7).collect();
+    let r0 = cluster.round(3, &mut |_| Task {
+        iter: 0,
+        kind: KIND_GRADIENT,
+        payload: w0.clone(),
+        aux: vec![],
+    });
+    assert_eq!(r0.interrupted, vec![0], "worker 0 must be the round-0 straggler");
+
+    for (t, shift) in [(1usize, 0.11), (2usize, -0.23)] {
+        let wt: Vec<f64> = w0.iter().map(|v| v + shift).collect();
+        let rr = cluster.round(4, &mut |_| Task {
+            iter: t,
+            kind: KIND_GRADIENT,
+            payload: wt.clone(),
+            aux: vec![],
+        });
+        assert_eq!(rr.responses.len(), 4, "round {t}");
+        let g = asm.assemble(&rr.responses);
+        let g_exact = prob.gradient(&wt);
+        let err = coded_opt::testutil::rel_err(&g, &g_exact);
+        assert!(
+            err < 1e-9,
+            "round {t}: assembled gradient off by {err} — a stale or duplicate \
+             payload leaked into the aggregation"
+        );
+    }
+}
