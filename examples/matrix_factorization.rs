@@ -71,7 +71,13 @@ fn main() -> anyhow::Result<()> {
         counts: (0, 0),
     };
     println!("\n{:<7} {:>12} {:>12} {:>12}", "epoch", "train RMSE", "test RMSE", "objective");
-    println!("{:<7} {:>12.4} {:>12.4} {:>12.1}", 0, mf.rmse(&ds.train), mf.rmse(&ds.test), mf.objective(&ds.train));
+    println!(
+        "{:<7} {:>12.4} {:>12.4} {:>12.1}",
+        0,
+        mf.rmse(&ds.train),
+        mf.rmse(&ds.test),
+        mf.objective(&ds.train)
+    );
     for epoch in 1..=5 {
         mf.als_epoch(&mut solver);
         println!(

@@ -32,7 +32,8 @@ fn main() -> anyhow::Result<()> {
         seed: 7,
     };
     for k in [1usize, 4, 6] {
-        let mut table = TableWriter::new(&["", "uncoded", "replication", "gaussian", "paley", "hadamard"]);
+        let mut table =
+            TableWriter::new(&["", "uncoded", "replication", "gaussian", "paley", "hadamard"]);
         let mut train_row = vec!["train RMSE".to_string()];
         let mut test_row = vec!["test RMSE".to_string()];
         let mut time_row = vec!["runtime".to_string()];
@@ -51,7 +52,9 @@ fn main() -> anyhow::Result<()> {
     }
     // full-batch reference (paper's caption: uncoded k = m)
     let (train, test, time) = mf_experiment(&base);
-    println!("\nfull-batch reference (uncoded, k = m = 8): train {train:.3} / test {test:.3} / {time:.1}s");
+    println!(
+        "\nfull-batch reference (uncoded, k=m=8): train {train:.3} / test {test:.3} / {time:.1}s"
+    );
     println!("\nPaper shape (Table 2): at k=1 coded schemes hold test RMSE close to the");
     println!("k=m reference while uncoded/replication degrade; runtimes grow with k.");
     Ok(())

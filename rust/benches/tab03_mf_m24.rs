@@ -49,7 +49,9 @@ fn main() -> anyhow::Result<()> {
         table.print();
     }
     let (train, test, time) = mf_experiment(&base);
-    println!("\nfull-batch reference (uncoded, k = m = 24): train {train:.3} / test {test:.3} / {time:.1}s");
+    println!(
+        "\nfull-batch reference (uncoded, k=m=24): train {train:.3} / test {test:.3} / {time:.1}s"
+    );
     println!("\nPaper shape (Table 3): same ordering as Table 2 at larger m — coded");
     println!("schemes closest to full-batch RMSE at small k.");
     Ok(())

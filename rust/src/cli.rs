@@ -57,14 +57,18 @@ impl Args {
     pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
         match self.get(key) {
             None => Ok(None),
-            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'"))?)),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{key} expects an integer, got '{v}'")
+            })?)),
         }
     }
 
     pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
         match self.get(key) {
             None => Ok(None),
-            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'"))?)),
+            Some(v) => Ok(Some(v.parse().map_err(|_| {
+                anyhow::anyhow!("--{key} expects a number, got '{v}'")
+            })?)),
         }
     }
 

@@ -52,7 +52,9 @@ impl TomlDoc {
                 bail!("line {}: empty key", lineno + 1);
             }
             let value = parse_value(val_str)
-                .ok_or_else(|| anyhow::anyhow!("line {}: cannot parse value '{val_str}'", lineno + 1))?;
+                .ok_or_else(|| {
+                    anyhow::anyhow!("line {}: cannot parse value '{val_str}'", lineno + 1)
+                })?;
             doc.sections.entry(current.clone()).or_default().insert(key, value);
         }
         Ok(doc)

@@ -47,7 +47,8 @@ pub fn generate(
         cum.partition_point(|&c| c < u).min(n_features - 1)
     };
     // Sparse ground truth on ~10% of features.
-    let support = crate::rng::sample_without_replacement(&mut rng, n_features, (n_features / 10).max(1));
+    let support =
+        crate::rng::sample_without_replacement(&mut rng, n_features, (n_features / 10).max(1));
     let coef = Normal::new(0.0, 1.0);
     let mut w_true = vec![0.0; n_features];
     for &f in &support {

@@ -56,7 +56,11 @@ pub struct ExponentialDelay {
 
 impl ExponentialDelay {
     pub fn new(m: usize, mean_secs: f64, seed: u64) -> Self {
-        ExponentialDelay { m, dist: Exponential::with_mean(mean_secs), rng: Pcg64::with_stream(seed, 0xe4b) }
+        ExponentialDelay {
+            m,
+            dist: Exponential::with_mean(mean_secs),
+            rng: Pcg64::with_stream(seed, 0xe4b),
+        }
     }
 }
 

@@ -243,7 +243,9 @@ mod tests {
         // the full matrix has all eigenvalues equal to β = rows/cols... here
         // square → all 1.
         let n = 8;
-        let h = Mat::from_fn(n, n, |i, j| crate::linalg::fwht::hadamard_entry(i, j) / (n as f64).sqrt());
+        let h = Mat::from_fn(n, n, |i, j| {
+            crate::linalg::fwht::hadamard_entry(i, j) / (n as f64).sqrt()
+        });
         let e = symmetric_eigenvalues(&h.gram());
         for v in e {
             assert!((v - 1.0).abs() < 1e-10);

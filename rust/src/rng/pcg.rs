@@ -71,7 +71,10 @@ impl Pcg64 {
     /// independent of the parent and of each other. Used to hand each
     /// simulated worker its own RNG.
     pub fn fork(&mut self, stream_id: u64) -> Pcg64 {
-        Pcg64::with_stream(self.next_u64() ^ stream_id.wrapping_mul(0x9e37_79b9_7f4a_7c15), stream_id)
+        Pcg64::with_stream(
+            self.next_u64() ^ stream_id.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            stream_id,
+        )
     }
 }
 
