@@ -73,5 +73,32 @@ fn main() -> anyhow::Result<()> {
         out.trace.final_objective(),
         out.trace.total_time()
     );
+
+    // Compute-kernel threading: the linalg kernels run on a
+    // deterministic chunk pool (coded_opt::linalg::par). Results are
+    // BIT-IDENTICAL at any thread count — the knob only trades
+    // wall-clock for cores — so cranking it cannot move a trace. It is
+    // process-global: set it via `Experiment::threads(n)`, by calling
+    // `coded_opt::linalg::par::set_threads`, or with the
+    // CODED_OPT_THREADS environment variable. Kernel timings
+    // live in `coded-opt bench` (BENCH_hotpath.json, schema
+    // `coded-opt/bench-v1` — see coded_opt::bench), which CI gates
+    // against bench/baseline.json.
+    let eight = Experiment::new(Problem::least_squares(&x, &y))
+        .workers(m)
+        .wait_for(k)
+        .seed(42)
+        .threads(8)
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(50))?;
+    let one = Experiment::new(Problem::least_squares(&x, &y))
+        .workers(m)
+        .wait_for(k)
+        .seed(42)
+        .threads(1)
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(50))?;
+    assert_eq!(one.w, eight.w, "kernel threading must never move a result");
+    println!("\nthreads=1 and threads=8 runs are bit-identical (deterministic chunk pool)");
     Ok(())
 }

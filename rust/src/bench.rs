@@ -1,11 +1,40 @@
 //! Benchmark harness (criterion stand-in for the offline environment).
 //!
 //! Used by the `rust/benches/*` binaries (declared with `harness = false`)
-//! to produce stable timing summaries and the paper-table output rows.
+//! to produce stable timing summaries and the paper-table output rows,
+//! and by the `coded-opt bench` subcommand to emit the machine-readable
+//! `BENCH_*.json` reports that CI's perf job gates on.
+//!
+//! ## `BENCH_*.json` schema (`coded-opt/bench-v1`)
+//!
+//! ```json
+//! {
+//!   "schema": "coded-opt/bench-v1",
+//!   "threads": 8,
+//!   "entries": [
+//!     {
+//!       "name": "encode_hadamard_1024x512",
+//!       "mean_secs": 1.2e-3, "p50_secs": 1.1e-3, "p95_secs": 1.9e-3,
+//!       "iters": 30,
+//!       "baseline_mean_secs": 9.8e-3,
+//!       "speedup": 8.2
+//!     }
+//!   ]
+//! }
+//! ```
+//!
+//! Entries that measure a fast kernel against its in-process naive
+//! reference carry `baseline_mean_secs`/`speedup`; plain entries omit
+//! them. The CI regression gate ([`BenchReport::compare`]) only ever
+//! compares **speedup ratios** — fast kernel vs. the reference kernel
+//! timed in the same process — because those are machine-independent,
+//! unlike absolute seconds. Future PRs should extend this schema (new
+//! entry names) rather than invent a new format.
 
 use std::time::Instant;
 
 use crate::metrics::Histogram;
+use anyhow::{bail, Context, Result};
 
 /// Timing statistics from [`run_bench`].
 #[derive(Clone, Debug)]
@@ -76,6 +105,360 @@ pub fn banner(fig: &str, desc: &str) {
     println!("================================================================");
 }
 
+/// One row of a [`BenchReport`].
+#[derive(Clone, Debug)]
+pub struct BenchEntry {
+    pub name: String,
+    pub mean_secs: f64,
+    pub p50_secs: f64,
+    pub p95_secs: f64,
+    pub iters: usize,
+    /// The in-process naive-reference timing (speedup denominator) for
+    /// paired fast-vs-reference measurements; `None` for plain timings.
+    pub baseline_mean_secs: Option<f64>,
+}
+
+impl BenchEntry {
+    /// Speedup of the fast kernel over its in-process reference.
+    pub fn speedup(&self) -> Option<f64> {
+        self.baseline_mean_secs.map(|b| b / self.mean_secs.max(1e-12))
+    }
+}
+
+/// Machine-readable bench report (schema `coded-opt/bench-v1`).
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub threads: usize,
+    pub entries: Vec<BenchEntry>,
+}
+
+/// Schema tag written into / required from every report.
+pub const BENCH_SCHEMA: &str = "coded-opt/bench-v1";
+
+impl BenchReport {
+    pub fn new(threads: usize) -> Self {
+        BenchReport { threads, entries: Vec::new() }
+    }
+
+    /// Record a plain timing.
+    pub fn push(&mut self, stats: &BenchStats) {
+        self.entries.push(BenchEntry {
+            name: stats.name.clone(),
+            mean_secs: stats.mean_secs,
+            p50_secs: stats.p50_secs,
+            p95_secs: stats.p95_secs,
+            iters: stats.iters,
+            baseline_mean_secs: None,
+        });
+    }
+
+    /// Record a paired fast-vs-reference timing under `name`.
+    pub fn push_pair(&mut self, name: &str, fast: &BenchStats, reference: &BenchStats) {
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            mean_secs: fast.mean_secs,
+            p50_secs: fast.p50_secs,
+            p95_secs: fast.p95_secs,
+            iters: fast.iters,
+            baseline_mean_secs: Some(reference.mean_secs),
+        });
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&BenchEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Serialize to the `coded-opt/bench-v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema\": \"{BENCH_SCHEMA}\",\n"));
+        out.push_str(&format!("  \"threads\": {},\n", self.threads));
+        out.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            out.push_str("    {");
+            out.push_str(&format!("\"name\": \"{}\", ", json::escape(&e.name)));
+            out.push_str(&format!("\"mean_secs\": {:e}, ", e.mean_secs));
+            out.push_str(&format!("\"p50_secs\": {:e}, ", e.p50_secs));
+            out.push_str(&format!("\"p95_secs\": {:e}, ", e.p95_secs));
+            out.push_str(&format!("\"iters\": {}", e.iters));
+            if let Some(b) = e.baseline_mean_secs {
+                out.push_str(&format!(", \"baseline_mean_secs\": {b:e}"));
+                out.push_str(&format!(", \"speedup\": {:.3}", e.speedup().unwrap()));
+            }
+            out.push('}');
+            out.push_str(if i + 1 < self.entries.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse a `coded-opt/bench-v1` document.
+    pub fn parse_json(text: &str) -> Result<BenchReport> {
+        let root = json::parse(text)?;
+        let obj = root.as_object().context("bench report: root must be an object")?;
+        let schema = json::get(obj, "schema")
+            .and_then(|v| v.as_str())
+            .context("bench report: missing schema")?;
+        if schema != BENCH_SCHEMA {
+            bail!("bench report: unknown schema '{schema}' (want {BENCH_SCHEMA})");
+        }
+        let threads = json::get(obj, "threads").and_then(|v| v.as_f64()).unwrap_or(1.0) as usize;
+        let entries_v = json::get(obj, "entries")
+            .and_then(|v| v.as_array())
+            .context("bench report: missing entries array")?;
+        let mut entries = Vec::with_capacity(entries_v.len());
+        for v in entries_v {
+            let e = v.as_object().context("bench entry must be an object")?;
+            let name = json::get(e, "name")
+                .and_then(|v| v.as_str())
+                .context("bench entry: missing name")?
+                .to_string();
+            let num = |key: &str| -> f64 {
+                json::get(e, key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+            };
+            entries.push(BenchEntry {
+                name,
+                mean_secs: num("mean_secs"),
+                p50_secs: num("p50_secs"),
+                p95_secs: num("p95_secs"),
+                iters: num("iters") as usize,
+                baseline_mean_secs: json::get(e, "baseline_mean_secs").and_then(|v| v.as_f64()),
+            });
+        }
+        Ok(BenchReport { threads, entries })
+    }
+
+    /// Regression gate: every baseline entry that records a speedup must
+    /// be matched by a measured entry whose speedup is at least
+    /// `(1 − tolerance) ×` the baseline's. Returns the list of
+    /// regressions (empty = pass). Only dimensionless speedups are
+    /// gated — absolute seconds vary with the runner hardware.
+    pub fn compare(&self, baseline: &BenchReport, tolerance: f64) -> Vec<String> {
+        let mut regressions = Vec::new();
+        for base in &baseline.entries {
+            let Some(base_speedup) = base.speedup() else { continue };
+            let floor = base_speedup * (1.0 - tolerance);
+            match self.entry(&base.name).and_then(|e| e.speedup()) {
+                None => regressions.push(format!(
+                    "{}: baseline records a {base_speedup:.2}x speedup but the \
+                     measured report has no such paired entry",
+                    base.name
+                )),
+                Some(got) if got < floor => regressions.push(format!(
+                    "{}: speedup {got:.2}x < floor {floor:.2}x \
+                     (baseline {base_speedup:.2}x, tolerance {tolerance})",
+                    base.name
+                )),
+                Some(_) => {}
+            }
+        }
+        regressions
+    }
+}
+
+/// Minimal JSON subset parser (objects / arrays / strings / numbers /
+/// bool / null) — enough for the bench schema; no serde offline.
+mod json {
+    use anyhow::{bail, Result};
+
+    #[derive(Clone, Debug)]
+    pub enum Value {
+        Object(Vec<(String, Value)>),
+        Array(Vec<Value>),
+        Str(String),
+        Num(f64),
+        Bool(bool),
+        Null,
+    }
+
+    impl Value {
+        pub fn as_object(&self) -> Option<&[(String, Value)]> {
+            match self {
+                Value::Object(kv) => Some(kv),
+                _ => None,
+            }
+        }
+
+        pub fn as_array(&self) -> Option<&[Value]> {
+            match self {
+                Value::Array(a) => Some(a),
+                _ => None,
+            }
+        }
+
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(x) => Some(*x),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn get<'a>(obj: &'a [(String, Value)], key: &str) -> Option<&'a Value> {
+        obj.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Escape a string for embedding in a JSON document (quotes,
+    /// backslashes, and the control characters the parser understands).
+    pub fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                '\t' => out.push_str("\\t"),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let bytes = text.as_bytes();
+        let mut pos = 0;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], pos: &mut usize) {
+        while *pos < b.len() && (b[*pos] as char).is_ascii_whitespace() {
+            *pos += 1;
+        }
+    }
+
+    fn expect(b: &[u8], pos: &mut usize, ch: u8) -> Result<()> {
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != ch {
+            bail!("expected '{}' at byte {pos}", ch as char);
+        }
+        *pos += 1;
+        Ok(())
+    }
+
+    fn parse_value(b: &[u8], pos: &mut usize) -> Result<Value> {
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b'{') => {
+                *pos += 1;
+                let mut kv = Vec::new();
+                skip_ws(b, pos);
+                if b.get(*pos) == Some(&b'}') {
+                    *pos += 1;
+                    return Ok(Value::Object(kv));
+                }
+                loop {
+                    skip_ws(b, pos);
+                    let key = parse_string(b, pos)?;
+                    expect(b, pos, b':')?;
+                    let val = parse_value(b, pos)?;
+                    kv.push((key, val));
+                    skip_ws(b, pos);
+                    match b.get(*pos) {
+                        Some(b',') => *pos += 1,
+                        Some(b'}') => {
+                            *pos += 1;
+                            return Ok(Value::Object(kv));
+                        }
+                        _ => bail!("expected ',' or '}}' at byte {pos}"),
+                    }
+                }
+            }
+            Some(b'[') => {
+                *pos += 1;
+                let mut arr = Vec::new();
+                skip_ws(b, pos);
+                if b.get(*pos) == Some(&b']') {
+                    *pos += 1;
+                    return Ok(Value::Array(arr));
+                }
+                loop {
+                    arr.push(parse_value(b, pos)?);
+                    skip_ws(b, pos);
+                    match b.get(*pos) {
+                        Some(b',') => *pos += 1,
+                        Some(b']') => {
+                            *pos += 1;
+                            return Ok(Value::Array(arr));
+                        }
+                        _ => bail!("expected ',' or ']' at byte {pos}"),
+                    }
+                }
+            }
+            Some(b'"') => Ok(Value::Str(parse_string(b, pos)?)),
+            Some(b't') => keyword(b, pos, "true", Value::Bool(true)),
+            Some(b'f') => keyword(b, pos, "false", Value::Bool(false)),
+            Some(b'n') => keyword(b, pos, "null", Value::Null),
+            Some(_) => {
+                let start = *pos;
+                while *pos < b.len()
+                    && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    *pos += 1;
+                }
+                let s = std::str::from_utf8(&b[start..*pos])?;
+                Ok(Value::Num(s.parse::<f64>().map_err(|_| {
+                    anyhow::anyhow!("bad number '{s}' at byte {start}")
+                })?))
+            }
+            None => bail!("unexpected end of input"),
+        }
+    }
+
+    fn keyword(b: &[u8], pos: &mut usize, word: &str, value: Value) -> Result<Value> {
+        if b[*pos..].starts_with(word.as_bytes()) {
+            *pos += word.len();
+            Ok(value)
+        } else {
+            bail!("bad literal at byte {pos}")
+        }
+    }
+
+    fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+        if b.get(*pos) != Some(&b'"') {
+            bail!("expected string at byte {pos}");
+        }
+        *pos += 1;
+        let mut out: Vec<u8> = Vec::new();
+        while *pos < b.len() {
+            match b[*pos] {
+                b'"' => {
+                    *pos += 1;
+                    return Ok(String::from_utf8(out)?);
+                }
+                b'\\' => {
+                    *pos += 1;
+                    match b.get(*pos) {
+                        Some(b'"') => out.push(b'"'),
+                        Some(b'\\') => out.push(b'\\'),
+                        Some(b'n') => out.push(b'\n'),
+                        Some(b't') => out.push(b'\t'),
+                        other => bail!("unsupported escape {other:?}"),
+                    }
+                    *pos += 1;
+                }
+                c => {
+                    // multi-byte UTF-8 passes through byte-wise
+                    out.push(c);
+                    *pos += 1;
+                }
+            }
+        }
+        bail!("unterminated string")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -97,5 +480,60 @@ mod tests {
         assert!(fmt_secs(5e-6).ends_with("µs"));
         assert!(fmt_secs(5e-3).ends_with("ms"));
         assert!(fmt_secs(5.0).ends_with('s'));
+    }
+
+    fn stats(name: &str, mean: f64) -> BenchStats {
+        BenchStats {
+            name: name.to_string(),
+            mean_secs: mean,
+            p50_secs: mean,
+            p95_secs: mean * 1.2,
+            iters: 10,
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let mut r = BenchReport::new(8);
+        r.push(&stats("fwht_8192", 1e-4));
+        r.push(&stats("tricky \"name\" with \\ and n=8", 1e-4));
+        r.push_pair("gram_512", &stats("gram fast", 1e-3), &stats("gram naive", 4e-3));
+        let text = r.to_json();
+        let back = BenchReport::parse_json(&text).unwrap();
+        assert_eq!(back.threads, 8);
+        assert_eq!(back.entries.len(), 3);
+        assert!(back.entry("fwht_8192").unwrap().speedup().is_none());
+        assert!(back.entry("tricky \"name\" with \\ and n=8").is_some(), "escaped roundtrip");
+        let g = back.entry("gram_512").unwrap();
+        assert!((g.speedup().unwrap() - 4.0).abs() < 1e-6, "{:?}", g.speedup());
+    }
+
+    #[test]
+    fn compare_gates_on_speedup_ratios_only() {
+        let mut baseline = BenchReport::new(4);
+        baseline.push_pair("gram_512", &stats("f", 1e-3), &stats("n", 4e-3)); // 4x
+        baseline.push(&stats("fwht_8192", 1e-4)); // informational, never gated
+        // Same speedup on a 10x slower machine: passes.
+        let mut slow = BenchReport::new(4);
+        slow.push_pair("gram_512", &stats("f", 1e-2), &stats("n", 4e-2));
+        assert!(slow.compare(&baseline, 0.25).is_empty());
+        // Speedup collapsed to 2x (< 4x·0.75): fails.
+        let mut bad = BenchReport::new(4);
+        bad.push_pair("gram_512", &stats("f", 2e-3), &stats("n", 4e-3));
+        let regressions = bad.compare(&baseline, 0.25);
+        assert_eq!(regressions.len(), 1, "{regressions:?}");
+        // A missing paired entry is a failure, not a silent pass.
+        let empty = BenchReport::new(4);
+        assert_eq!(empty.compare(&baseline, 0.25).len(), 1);
+    }
+
+    #[test]
+    fn parse_json_rejects_garbage() {
+        assert!(BenchReport::parse_json("{}").is_err());
+        assert!(BenchReport::parse_json("not json").is_err());
+        assert!(BenchReport::parse_json(
+            "{\"schema\": \"other/v9\", \"entries\": []}"
+        )
+        .is_err());
     }
 }

@@ -293,7 +293,7 @@ mod tests {
             u.iter().zip(&yc).map(|(ui, yi)| (ui - yi) / n as f64).collect()
         };
         let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
-        let f0 = prob.objective(&vec![0.0; 12]);
+        let f0 = prob.objective(&[0.0; 12]);
         let step = 0.5 * 40.0 / x.gram_spectral_norm(60, 4);
         let cfg = AsyncBcdConfig {
             step,

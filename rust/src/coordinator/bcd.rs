@@ -19,10 +19,85 @@ use super::gd::RunOutput;
 use super::KIND_BCD_STEP;
 use crate::cluster::{Gather, Task, WorkerNode};
 use crate::config::Scheme;
-use crate::encoding::{Encoding, SMatrix};
+use crate::encoding::{Encoder, Encoding, SMatrix};
 use crate::linalg::{Csr, Mat};
 use crate::metrics::{IterRecord, Participation, Trace};
 use anyhow::Result;
+
+/// How the master maps the lifted iterate `v = (v_1, …, v_m)` back to
+/// `w = S̄ᵀv` — the per-iteration reconstruction the trace evaluation
+/// and the final iterate go through.
+#[derive(Clone, Debug)]
+pub enum Reconstruction {
+    /// Per-block dense/sparse `Σᵢ S̄ᵢᵀvᵢ` (the legacy `run_bcd` path).
+    Blocks(Vec<SMatrix>),
+    /// Structured full-generator `S̄ᵀ·concat(v)` via
+    /// [`Encoder::apply_t`]: one FWHT / CSR pass instead of `m` dense
+    /// block products. Differs from the block path only by the
+    /// documented ≤1e-12 reordering of the sum.
+    Fast {
+        /// The (unnormalized) encoding; blocks partition its rows in
+        /// worker order, so concatenating `vᵢ` matches its row order.
+        enc: Encoding,
+        /// Parseval normalization 1/√β applied after the transpose.
+        norm: f64,
+    },
+}
+
+impl Reconstruction {
+    /// Per-worker coordinate-block sizes `b_i`.
+    pub fn block_sizes(&self) -> Vec<usize> {
+        match self {
+            Reconstruction::Blocks(sbar) => sbar.iter().map(|s| s.rows()).collect(),
+            Reconstruction::Fast { enc, .. } => enc.blocks.iter().map(|b| b.rows()).collect(),
+        }
+    }
+
+    /// Model dimension p.
+    pub fn dim(&self) -> usize {
+        match self {
+            Reconstruction::Blocks(sbar) => sbar.first().map_or(0, |s| s.cols()),
+            Reconstruction::Fast { enc, .. } => enc.n,
+        }
+    }
+
+    /// Parseval-normalized dense blocks `S̄_i` — materialized on demand
+    /// (spectrum analysis / debugging / the legacy per-block path); the
+    /// master loop itself never needs them.
+    pub fn sbar_blocks(&self) -> Vec<SMatrix> {
+        match self {
+            Reconstruction::Blocks(sbar) => sbar.clone(),
+            Reconstruction::Fast { enc, norm } => enc
+                .blocks
+                .iter()
+                .map(|s| {
+                    let mut dense = s.to_dense();
+                    dense.scale_inplace(*norm);
+                    SMatrix::Dense(dense)
+                })
+                .collect(),
+        }
+    }
+
+    /// `w = S̄ᵀv` from the per-worker blocks.
+    pub fn reconstruct(&self, v: &[Vec<f64>]) -> Vec<f64> {
+        match self {
+            Reconstruction::Blocks(sbar) => {
+                let mut w = vec![0.0; self.dim()];
+                for (s, vi) in sbar.iter().zip(v) {
+                    crate::linalg::axpy(1.0, &s.matvec_t(vi), &mut w);
+                }
+                w
+            }
+            Reconstruction::Fast { enc, norm } => {
+                let flat = v.concat();
+                let mut w = enc.apply_t(&flat);
+                crate::linalg::scale(*norm, &mut w);
+                w
+            }
+        }
+    }
+}
 
 /// Per-coordinate-block worker state.
 pub struct BcdWorker {
@@ -95,8 +170,11 @@ impl WorkerNode for BcdWorker {
 /// Assembled model-parallel problem.
 pub struct ModelParallel {
     pub workers: Vec<Box<dyn WorkerNode>>,
-    /// Parseval-normalized blocks S̄_i (for reconstructing w = S̄ᵀv).
-    pub sbar: Vec<SMatrix>,
+    /// Structured w = S̄ᵀv reconstruction for the master loop. Dense
+    /// normalized blocks are NOT materialized here — callers that need
+    /// them (spectrum analysis, the legacy per-block path) ask
+    /// [`Reconstruction::sbar_blocks`], which builds them on demand.
+    pub recon: Reconstruction,
     /// Data rows n and model dim p.
     pub n: usize,
     pub p: usize,
@@ -122,20 +200,18 @@ pub fn build_model_parallel(
     let enc = Encoding::build(scheme, p, m, beta, seed)?;
     let norm = 1.0 / enc.beta.sqrt();
     let xt = x.transpose(); // p × n
+    // A_i = X·S̄_iᵀ = (S̄_i·Xᵀ)ᵀ, encoded through the structured full-S
+    // path (FWHT / CSR) where the scheme has one.
+    let si_xt_blocks = enc.encode_data(&xt); // b_i × n each
     let mut workers: Vec<Box<dyn WorkerNode>> = Vec::with_capacity(m);
-    let mut sbar = Vec::with_capacity(m);
-    for s in &enc.blocks {
-        // A_i = X·S̄_iᵀ = (S̄_i·Xᵀ)ᵀ
-        let mut si_xt = s.encode_mat(&xt); // b_i × n
+    for mut si_xt in si_xt_blocks {
         si_xt.scale_inplace(norm);
         let a = si_xt.transpose(); // n × b_i
         workers.push(Box::new(BcdWorker::new(a, step, lambda, grad_phi())));
-        // store normalized S̄_i for w reconstruction
-        let mut dense = s.to_dense();
-        dense.scale_inplace(norm);
-        sbar.push(SMatrix::Dense(dense));
     }
-    Ok(ModelParallel { workers, sbar, n: x.rows(), p, beta: enc.beta })
+    let beta_achieved = enc.beta;
+    let recon = Reconstruction::Fast { enc, norm };
+    Ok(ModelParallel { workers, recon, n: x.rows(), p, beta: beta_achieved })
 }
 
 /// Dense copy of a sparse data matrix (helper for logistic model
@@ -153,7 +229,9 @@ pub struct BcdConfig {
 
 /// Legacy entry point. Prefer
 /// `Experiment::new(..).run(driver::Bcd::with_step(..))`, which owns the
-/// problem→lift→cluster wiring this function expects pre-assembled.
+/// problem→lift→cluster wiring this function expects pre-assembled (and
+/// reconstructs through the structured [`Reconstruction::Fast`] path;
+/// this shim keeps the per-block sum).
 #[deprecated(note = "use driver::Experiment with driver::Bcd instead")]
 pub fn run_bcd(
     cluster: &mut dyn Gather,
@@ -164,15 +242,16 @@ pub fn run_bcd(
     label: &str,
     eval: &super::EvalFn,
 ) -> RunOutput {
-    bcd_loop(cluster, mp_sbar, n, p, cfg, label, eval)
+    let recon = Reconstruction::Blocks(mp_sbar.to_vec());
+    bcd_loop(cluster, &recon, n, p, cfg, label, eval)
 }
 
-/// Encoded BCD master loop. `block_sizes` come from `mp.sbar`; `eval`
-/// receives the reconstructed `w_t = S̄ᵀv_t` (master-visible state).
-/// Called by the `driver::Bcd` solver.
+/// Encoded BCD master loop. `eval` receives the reconstructed
+/// `w_t = S̄ᵀv_t` (master-visible state). Called by the `driver::Bcd`
+/// solver with a [`Reconstruction::Fast`].
 pub(crate) fn bcd_loop(
     cluster: &mut dyn Gather,
-    mp_sbar: &[SMatrix],
+    recon: &Reconstruction,
     n: usize,
     p: usize,
     cfg: &BcdConfig,
@@ -181,8 +260,8 @@ pub(crate) fn bcd_loop(
 ) -> RunOutput {
     let m = cluster.workers();
     assert!(cfg.k >= 1 && cfg.k <= m);
-    assert_eq!(mp_sbar.len(), m);
-    let block_sizes: Vec<usize> = mp_sbar.iter().map(|s| s.rows()).collect();
+    let block_sizes = recon.block_sizes();
+    assert_eq!(block_sizes.len(), m);
     // Master state: per-worker u_i (n) and v_i snapshots, accept rounds.
     let mut u: Vec<Vec<f64>> = (0..m).map(|_| vec![0.0; n]).collect();
     let mut v: Vec<Vec<f64>> = block_sizes.iter().map(|&b| vec![0.0; b]).collect();
@@ -216,12 +295,10 @@ pub(crate) fn bcd_loop(
             v[i].copy_from_slice(v_new);
             last_accept[i] = t as f64;
         }
-        // Reconstruct w = Σ S̄_iᵀ v_i for evaluation.
-        let mut w = vec![0.0; p];
-        for (s, vi) in mp_sbar.iter().zip(&v) {
-            let wi = s.matvec_t(vi);
-            crate::linalg::axpy(1.0, &wi, &mut w);
-        }
+        // Reconstruct w = S̄ᵀv for evaluation (structured apply_t on the
+        // fast path: one FWHT / CSR pass instead of m block products).
+        let w = recon.reconstruct(&v);
+        debug_assert_eq!(w.len(), p);
         let (objective, test_metric) = eval(&w);
         trace.push(IterRecord {
             iter: t,
@@ -232,10 +309,7 @@ pub(crate) fn bcd_loop(
         });
     }
     // final w
-    let mut w = vec![0.0; p];
-    for (s, vi) in mp_sbar.iter().zip(&v) {
-        crate::linalg::axpy(1.0, &s.matvec_t(vi), &mut w);
-    }
+    let w = recon.reconstruct(&v);
     RunOutput { trace, w, participation }
 }
 
@@ -311,13 +385,13 @@ mod tests {
             quadratic_phi(y.clone()),
         )
         .unwrap();
-        let sbar = mp.sbar;
+        let recon = mp.recon;
         let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
         let prob = crate::objectives::RidgeProblem::new(x.clone(), y.clone(), 0.0);
         use crate::objectives::QuadObjective;
         let f_star = prob.objective(&prob.solve_exact());
         let cfg = BcdConfig { k: m, iters: 400 };
-        let out = bcd_loop(&mut cluster, &sbar, 48, 12, &cfg, "bcd", &|w| {
+        let out = bcd_loop(&mut cluster, &recon, 48, 12, &cfg, "bcd", &|w| {
             (prob.objective(w), 0.0)
         });
         let f_final = out.trace.final_objective();
@@ -343,15 +417,15 @@ mod tests {
             quadratic_phi(y.clone()),
         )
         .unwrap();
-        let sbar = mp.sbar;
+        let recon = mp.recon;
         let delay = AdversarialDelay::new(m, vec![1, 4], 1e6);
         let mut cluster = SimCluster::new(mp.workers, Box::new(delay));
         let prob = crate::objectives::RidgeProblem::new(x.clone(), y.clone(), 0.0);
         use crate::objectives::QuadObjective;
         let f_star = prob.objective(&prob.solve_exact());
-        let f0 = prob.objective(&vec![0.0; 16]);
+        let f0 = prob.objective(&[0.0; 16]);
         let cfg = BcdConfig { k: 6, iters: 600 };
-        let out = bcd_loop(&mut cluster, &sbar, 40, 16, &cfg, "bcd-adv", &|w| {
+        let out = bcd_loop(&mut cluster, &recon, 40, 16, &cfg, "bcd-adv", &|w| {
             (prob.objective(w), 0.0)
         });
         let f_final = out.trace.final_objective();
@@ -379,12 +453,12 @@ mod tests {
             quadratic_phi(y.clone()),
         )
         .unwrap();
-        let sbar = mp.sbar;
+        let recon = mp.recon;
         let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
         let prob = crate::objectives::RidgeProblem::new(x, y, 0.0);
         use crate::objectives::QuadObjective;
         let cfg = BcdConfig { k: m, iters: 100 };
-        let out = bcd_loop(&mut cluster, &sbar, 30, 8, &cfg, "bcd", &|w| {
+        let out = bcd_loop(&mut cluster, &recon, 30, 8, &cfg, "bcd", &|w| {
             (prob.objective(w), 0.0)
         });
         // allow the tiny one-round-staleness transient at t=0→1
@@ -408,11 +482,11 @@ mod tests {
         let step = 2.0; // logistic φ is 1/(4n)-smooth per unit ‖X‖²; generous but stable here
         let mp = build_model_parallel(&x, Scheme::Steiner, m, 2.0, step, 1e-4, 15, logistic_phi())
             .unwrap();
-        let sbar = mp.sbar;
+        let recon = mp.recon;
         let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
-        let f0 = prob.objective(&vec![0.0; 24]);
+        let f0 = prob.objective(&[0.0; 24]);
         let cfg = BcdConfig { k: 4, iters: 150 };
-        let out = bcd_loop(&mut cluster, &sbar, n_train, 24, &cfg, "bcd-log", &|w| {
+        let out = bcd_loop(&mut cluster, &recon, n_train, 24, &cfg, "bcd-log", &|w| {
             (prob.objective(w), prob.error_rate(w, &ds.test))
         });
         assert!(
@@ -442,15 +516,18 @@ mod tests {
         // not apply the step.
         let a = Mat::eye(3);
         let mut w = BcdWorker::new(a, 0.1, 0.0, Box::new(|u: &[f64]| u.to_vec()));
-        let t0 = Task { iter: 0, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![-1.0] };
+        let t0 =
+            Task { iter: 0, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![-1.0] };
         let _ = w.process(&t0); // computes pending for round 0
         let v_before = w.v.clone();
         // master says: last accepted round = −1 (round 0 was erased)
-        let t1 = Task { iter: 1, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![-1.0] };
+        let t1 =
+            Task { iter: 1, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![-1.0] };
         let _ = w.process(&t1);
         assert_eq!(w.v, v_before, "discarded step must not mutate v");
         // now accept round 1: the round-1 pending applies at round 2
-        let t2 = Task { iter: 2, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![1.0] };
+        let t2 =
+            Task { iter: 2, kind: KIND_BCD_STEP, payload: vec![1.0, 1.0, 1.0], aux: vec![1.0] };
         let _ = w.process(&t2);
         assert_ne!(w.v, v_before, "accepted step must apply");
     }

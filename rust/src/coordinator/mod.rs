@@ -77,11 +77,11 @@ impl QuadWorker {
     }
 
     /// Native gradient kernel: r = S̄Xᵀ(S̄X·w − S̄y), residual computed
-    /// into the reusable scratch buffer (fused matvec−y pass).
+    /// into the reusable scratch buffer by the fused (and chunk-parallel,
+    /// see `linalg::par`) `matvec_sub` kernel — bit-identical to the
+    /// sequential dot-minus-y sweep at any thread count.
     fn native_gradient(&mut self, w: &[f64]) -> Vec<f64> {
-        for i in 0..self.sx.rows() {
-            self.resid[i] = crate::linalg::dot(self.sx.row(i), w) - self.sy[i];
-        }
+        self.sx.matvec_sub(w, &self.sy, &mut self.resid);
         self.sx.matvec_t(&self.resid)
     }
 }
@@ -248,14 +248,16 @@ pub fn build_data_parallel_with_runtime(
         _ => {
             let enc = Encoding::build(scheme, n, m, beta, seed)?;
             let norm = 1.0 / enc.beta.sqrt();
+            // Structure-aware encode: FWHT / CSR full-S paths where the
+            // scheme has them, dense per-block products as the fallback.
+            let sx_blocks = enc.encode_data(x);
+            let sy_blocks = enc.encode_vec(y);
             let mut pjrt_attached = 0;
-            let workers: Vec<Box<dyn WorkerNode>> = enc
-                .blocks
-                .iter()
-                .map(|s| {
-                    let mut sx = s.encode_mat(x);
+            let workers: Vec<Box<dyn WorkerNode>> = sx_blocks
+                .into_iter()
+                .zip(sy_blocks)
+                .map(|(mut sx, mut sy)| {
                     sx.scale_inplace(norm);
-                    let mut sy = s.matvec(y);
                     crate::linalg::scale(norm, &mut sy);
                     let mut worker = QuadWorker::new(sx, sy);
                     if let Some(idx) = runtime {

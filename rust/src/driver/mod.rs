@@ -77,7 +77,7 @@ use crate::config::{DelaySpec, Scheme};
 use crate::coordinator::bcd::{build_model_parallel, logistic_phi, quadratic_phi};
 use crate::coordinator::{build_data_parallel_with_runtime, EvalFn, GradAssembler};
 use crate::delay::{from_spec, DelayModel, NoDelay};
-use crate::encoding::{partition_bounds, SMatrix};
+use crate::encoding::partition_bounds;
 use crate::linalg::Mat;
 use crate::metrics::{Participation, Trace};
 use crate::runtime::ArtifactIndex;
@@ -198,6 +198,9 @@ pub struct Experiment<'a> {
     /// [`Experiment::scenario`] so the scenario seed also moves the
     /// slow-worker set).
     speed_seed: u64,
+    /// Compute-kernel worker threads ([`crate::linalg::par`]); None
+    /// keeps the process-wide setting.
+    threads: Option<usize>,
     #[allow(clippy::type_complexity)]
     eval: Option<Box<dyn Fn(&[f64]) -> (f64, f64) + 'a>>,
     w0: Option<Vec<f64>>,
@@ -223,6 +226,7 @@ impl<'a> Experiment<'a> {
             delay: DelayChoice::None,
             speeds: SpeedProfile::Uniform,
             speed_seed: 0,
+            threads: None,
             eval: None,
             w0: None,
         }
@@ -324,6 +328,18 @@ impl<'a> Experiment<'a> {
         self
     }
 
+    /// Compute-kernel worker threads for the deterministic chunk pool
+    /// ([`crate::linalg::par`]). The setting is **process-global**
+    /// (applied at [`run`](Self::run) time via
+    /// [`par::set_threads`](crate::linalg::par::set_threads)); results
+    /// are bit-identical at any value — the knob only trades wall-clock
+    /// for cores. Default: the `CODED_OPT_THREADS` environment variable,
+    /// then `available_parallelism`.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
     /// Attach the AOT artifact index: matching shards execute their
     /// gradient hot path on PJRT ([`RunOutput::pjrt_attached`] reports
     /// how many).
@@ -371,6 +387,9 @@ impl<'a> Experiment<'a> {
     /// Run a solver through the wired pipeline.
     pub fn run(&self, solver: impl Solver) -> Result<RunOutput> {
         self.validate()?;
+        if let Some(n) = self.threads {
+            crate::linalg::par::set_threads(n);
+        }
         let label =
             if self.label.is_empty() { solver.name().to_string() } else { self.label.clone() };
         let mut ctx = Ctx { exp: self, label, pjrt_attached: 0, beta: 1.0 };
@@ -416,8 +435,10 @@ pub struct DataParallelParts {
 /// model-parallel [`Solver`] implementation).
 pub struct ModelParallelParts {
     pub cluster: Box<dyn Gather>,
-    /// Parseval-normalized blocks `S̄_i` (reconstruct `w = S̄ᵀv`).
-    pub sbar: Vec<SMatrix>,
+    /// Structured `w = S̄ᵀv` reconstruction (the master-loop hot path);
+    /// `recon.sbar_blocks()` materializes the normalized dense blocks on
+    /// demand for spectrum/debug use.
+    pub recon: crate::coordinator::bcd::Reconstruction,
     /// Data rows n and model dimension p.
     pub n: usize,
     pub p: usize,
@@ -645,7 +666,7 @@ impl<'e, 'a> Ctx<'e, 'a> {
         let (n, p) = (mp.n, mp.p);
         Ok(ModelParallelParts {
             cluster: self.cluster(mp.workers)?,
-            sbar: mp.sbar,
+            recon: mp.recon,
             n,
             p,
             beta: mp.beta,
@@ -665,14 +686,12 @@ impl<'e, 'a> Ctx<'e, 'a> {
     }
 
     /// Uncoded column blocks `X_{:,B_i}` for the async model-parallel
-    /// baseline.
+    /// baseline — contiguous ranges, so each block is a straight per-row
+    /// memcpy with no index buffer.
     pub fn uncoded_col_blocks(&self) -> Vec<Mat> {
         let x = self.exp.problem.x;
         let bounds = partition_bounds(x.cols(), self.exp.m);
-        bounds
-            .windows(2)
-            .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
-            .collect()
+        bounds.windows(2).map(|w| x.col_block(w[0], w[1])).collect()
     }
 
     /// `∇φ` of the problem's loss as a callable over the n-vector `Xw` —

@@ -238,7 +238,7 @@ impl Solver for Bcd {
         let cfg = BcdConfig { k: ctx.k(), iters: self.iters };
         Ok(bcd_loop(
             cluster.as_mut(),
-            &parts.sbar,
+            &parts.recon,
             parts.n,
             parts.p,
             &cfg,
@@ -408,7 +408,7 @@ mod tests {
             .eval(|w| (prob.objective(w), 0.0))
             .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(50))
             .unwrap();
-        let f0 = prob.objective(&vec![0.0; 6]);
+        let f0 = prob.objective(&[0.0; 6]);
         assert!(out.trace.final_objective() < 0.5 * f0);
         assert_eq!(out.trace.len(), 50);
         assert_eq!(out.w.len(), 6);
@@ -427,7 +427,7 @@ mod tests {
             .eval(|w| (prob.objective(w), 0.0))
             .run(Bcd::with_step(step).iters(80))
             .unwrap();
-        let f0 = prob.objective(&vec![0.0; 8]);
+        let f0 = prob.objective(&[0.0; 8]);
         assert!(out.trace.final_objective() < 0.5 * f0);
         assert_eq!(out.w.len(), 8, "BCD returns the reconstructed w, not v");
     }
@@ -477,7 +477,7 @@ mod tests {
             })
             .run(AsyncBcd::with_step(step).updates(400).record_every(50))
             .unwrap();
-        let f0 = prob.objective(&vec![0.0; 6]);
+        let f0 = prob.objective(&[0.0; 6]);
         assert!(out.trace.final_objective() < 0.5 * f0);
         assert_eq!(out.w.len(), 6);
     }

@@ -5,7 +5,7 @@
 //! entries: our rows absorb the 1/√n. For large n the subset Grams
 //! concentrate in `[(1−√(1/(βη)))², (1+√(1/(βη)))²]`.
 
-use super::{split_dense, Encoding};
+use super::{split_dense, Encoding, FastS};
 use crate::config::Scheme;
 use crate::linalg::Mat;
 use crate::rng::{Normal, Pcg64};
@@ -21,6 +21,8 @@ pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
         beta: total_rows as f64 / n as f64,
         n,
         blocks: split_dense(s, m),
+        // i.i.d. ensembles have no exploitable structure: dense fallback.
+        fast: FastS::Dense,
     }
 }
 

@@ -11,7 +11,7 @@
 //! columns have O(log N) non-zeros, giving the paper's
 //! `|B_I_k| ≤ βn·log(n)/m` memory bound.
 
-use super::{partition_bounds, Encoding, SMatrix};
+use super::{partition_bounds, Encoding, FastS, SMatrix};
 use crate::config::Scheme;
 use crate::linalg::Csr;
 use crate::rng::{sample_without_replacement, Pcg64};
@@ -88,7 +88,7 @@ pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
         .windows(2)
         .map(|w| SMatrix::Sparse(s.row_block(w[0], w[1])))
         .collect();
-    Encoding { scheme: Scheme::Haar, beta: nn as f64 / n as f64, n, blocks }
+    Encoding { scheme: Scheme::Haar, beta: nn as f64 / n as f64, n, blocks, fast: FastS::Sparse(s) }
 }
 
 #[cfg(test)]
@@ -122,7 +122,7 @@ mod tests {
     }
 
     #[test]
-    fn haar_nnz_is_n_log_n(){
+    fn haar_nnz_is_n_log_n() {
         let n = 64;
         let t = haar_triplets(n);
         // nnz(N) = N(log2 N)... exact recurrence: nnz(2n)=2nnz(n)+2n

@@ -6,19 +6,80 @@
 //! makes this an *exact* tight frame: `SᵀS = (N/n)·I = β·I`, and rows have
 //! exactly unit norm. Encoding a vector is `O(N log N)` via FWHT.
 
-use super::{split_dense, Encoding};
+use super::{split_dense, Encoding, FastS};
 use crate::config::Scheme;
 use crate::linalg::fwht::{fwht, hadamard_entry};
 use crate::linalg::Mat;
 use crate::rng::{sample_without_replacement, Pcg64};
 
+/// The structured subsampled-Hadamard operator: the full generator
+/// `S[i][j] = signs[j]·H[perm[i]][cols[j]]/√n` applied through FWHT in
+/// `O(N log N)` instead of the `O(N·n)` dense product — the paper's
+/// §4.2.2 efficient-encoding mechanism. Carried by
+/// [`Encoding::fast`](super::Encoding) so [`super::Encoder::apply`] /
+/// [`super::Encoder::apply_t`] never touch the dense blocks.
+#[derive(Clone, Debug)]
+pub struct FwhtOp {
+    cols: Vec<usize>,
+    perm: Vec<usize>,
+    signs: Vec<f64>,
+    nn: usize,
+}
+
+impl FwhtOp {
+    /// The operator for (n, β, seed) — the same sample/permutation/signs
+    /// [`build`] materializes, so the two agree to rounding.
+    pub fn new(n: usize, beta: f64, seed: u64) -> FwhtOp {
+        let (cols, nn) = column_sample(n, beta, seed);
+        let perm = row_permutation(nn, seed);
+        let signs = column_signs(n, seed);
+        FwhtOp { cols, perm, signs, nn }
+    }
+
+    /// Encoded rows N (a power of two).
+    pub fn encoded_rows(&self) -> usize {
+        self.nn
+    }
+
+    /// Data dimension n.
+    pub fn dim(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// S·x via scatter → FWHT → permuted gather: O(N log N).
+    pub fn apply(&self, x: &[f64]) -> Vec<f64> {
+        encode_fwht(x, &self.cols, &self.perm, &self.signs, self.nn)
+    }
+
+    /// Sᵀ·u. Since the Sylvester–Hadamard matrix is symmetric,
+    /// `(Sᵀu)_j = signs[j]/√n · (H·ũ)[cols[j]]` with `ũ[perm[i]] = u_i` —
+    /// one permutation scatter, one FWHT, one column gather.
+    pub fn apply_t(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.nn, "apply_t length mismatch");
+        let mut padded = vec![0.0; self.nn];
+        for (&p, &ui) in self.perm.iter().zip(u) {
+            padded[p] = ui;
+        }
+        fwht(&mut padded);
+        let scale = 1.0 / (self.dim() as f64).sqrt();
+        self.cols
+            .iter()
+            .zip(&self.signs)
+            .map(|(&c, &s)| s * scale * padded[c])
+            .collect()
+    }
+}
+
 /// Build the subsampled-Hadamard encoding.
 ///
-/// The achieved β is `2^⌈log₂(βn)⌉ / n` (power-of-two rounding).
+/// The achieved β is `2^⌈log₂(βn)⌉ / n` (power-of-two rounding). The
+/// dense blocks are materialized for spectrum analysis and per-block
+/// access; the encode hot path runs through the [`FwhtOp`] stored in
+/// [`Encoding::fast`](super::Encoding).
 pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
-    let (cols, nn) = column_sample(n, beta, seed);
-    let perm = row_permutation(nn, seed);
-    let signs = column_signs(n, seed);
+    let op = FwhtOp::new(n, beta, seed);
+    let (cols, nn) = (&op.cols, op.nn);
+    let (perm, signs) = (&op.perm, &op.signs);
     let scale = 1.0 / (n as f64).sqrt();
     // Two randomizations, both leaving SᵀS = β·I exact:
     // 1. Rows are randomly permuted before blocking: Sylvester-Hadamard
@@ -38,6 +99,7 @@ pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
         beta: nn as f64 / n as f64,
         n,
         blocks: split_dense(s, m),
+        fast: FastS::Fwht(op),
     }
 }
 
@@ -140,6 +202,19 @@ mod tests {
         let slow = s.matvec(&x);
         let fast = encode_fwht(&x, &cols, &perm, &signs, nn);
         crate::testutil::assert_allclose(&fast, &slow, 1e-10, "fwht encode");
+    }
+
+    #[test]
+    fn fwht_op_apply_and_apply_t_match_matrix() {
+        let n = 12;
+        let op = FwhtOp::new(n, 2.0, 9);
+        let enc = build(n, 3, 2.0, 9);
+        let s = enc.stack(&[0, 1, 2]);
+        let mut rng = Pcg64::new(11);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+        crate::testutil::assert_allclose(&op.apply(&x), &s.matvec(&x), 1e-10, "op apply");
+        let u: Vec<f64> = (0..op.encoded_rows()).map(|_| rng.next_f64() - 0.5).collect();
+        crate::testutil::assert_allclose(&op.apply_t(&u), &s.matvec_t(&u), 1e-10, "op apply_t");
     }
 
     #[test]

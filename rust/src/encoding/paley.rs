@@ -18,7 +18,7 @@
 //! Paley frame with `N/2 ≥ n` and keep `n` coordinates — the paper's
 //! "bank of encoding matrices, subsample columns" trick (§5.2).
 
-use super::{split_dense, Encoding};
+use super::{split_dense, Encoding, FastS};
 use crate::config::Scheme;
 use crate::linalg::{symmetric_eigen, Mat};
 use anyhow::{bail, Result};
@@ -146,7 +146,15 @@ pub fn paley_etf(n: usize) -> Result<Mat> {
 /// redundancy (rows/n) can be slightly larger due to the prime search.
 pub fn build(n: usize, m: usize) -> Result<Encoding> {
     let s = paley_etf(n)?;
-    Ok(Encoding { scheme: Scheme::Paley, beta: 2.0, n, blocks: split_dense(s, m) })
+    Ok(Encoding {
+        scheme: Scheme::Paley,
+        beta: 2.0,
+        n,
+        blocks: split_dense(s, m),
+        // eigendecomposition-derived frame: no fast structure, dense
+        // fallback.
+        fast: FastS::Dense,
+    })
 }
 
 /// Maximal inner product ω(F) between distinct unit rows — for ETF

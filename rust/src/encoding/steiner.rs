@@ -13,7 +13,7 @@
 //! Sparsity: each row has v−1 non-zeros out of v(v−1)/2 columns, so the
 //! per-worker storage overhead matches the paper's `|B_I_k| ≤ 2n/m` bound.
 
-use super::{partition_bounds, Encoding, SMatrix};
+use super::{partition_bounds, Encoding, FastS, SMatrix};
 use crate::config::Scheme;
 use crate::linalg::fwht::hadamard_entry;
 use crate::linalg::Csr;
@@ -106,7 +106,13 @@ pub fn build(n: usize, m: usize) -> Result<Encoding> {
     // (sub-blocks of a scaled identity stay scaled identities). The
     // storage redundancy rows/keep_cols can be larger.
     let beta = total_rows as f64 / ncols_full as f64;
-    Ok(Encoding { scheme: Scheme::Steiner, beta, n: keep_cols, blocks })
+    Ok(Encoding {
+        scheme: Scheme::Steiner,
+        beta,
+        n: keep_cols,
+        blocks,
+        fast: FastS::Sparse(s_full),
+    })
 }
 
 /// The natural (v, n) pairs: v power of 2, n = v(v−1)/2 — sizes at which

@@ -87,6 +87,39 @@
 //! `coded-opt scenario` subcommand; `rust/tests/golden_traces.rs` pins
 //! the grid's traces bit-for-bit against checked-in fixtures.
 //!
+//! ## The compute data plane: deterministic parallel kernels
+//!
+//! The [`linalg`] kernels (`matvec` / `matvec_t` / `matmul` / `gram`,
+//! dense and CSR) are cache-blocked and run on a dependency-free chunked
+//! thread pool ([`linalg::par`]) with one hard contract: **results are
+//! bit-identical at any thread count**. Chunk geometry and the
+//! fixed-chunk tree-reduction shape depend only on problem size, never
+//! on scheduling, so the golden-trace fixtures cannot move when the
+//! thread knob does (CI re-runs the suite at 1 and 8 threads to prove
+//! it). Set the knob with `Experiment::threads(n)`,
+//! [`linalg::par::set_threads`], or the `CODED_OPT_THREADS` environment
+//! variable; it only trades wall-clock for cores.
+//!
+//! ## Structured fast encoding
+//!
+//! The [`encoding::Encoder`] trait (`apply` = `S·x`, `apply_t` = `Sᵀ·x`)
+//! is the paper's §4.2 efficient-encoding mechanism as an interface:
+//! Hadamard encodes through FWHT in `O(N log N)`, the sparse Steiner /
+//! Haar / identity generators through one CSR product in `O(nnz)`, and
+//! dense materialization ([`encoding::FastS::Dense`]) is only the
+//! fallback for the unstructured ensembles (Gaussian, Paley).
+//! `Encoding::encode_data` / `encode_vec`, the data-parallel worker
+//! build, and BCD's `w = S̄ᵀv` reconstruction all route through it.
+//!
+//! ## Benchmarks and the perf gate
+//!
+//! `coded-opt bench` times the hot paths against the preserved naive
+//! kernels (`linalg::mat::reference`) and emits a machine-readable
+//! report (`BENCH_hotpath.json`, schema `coded-opt/bench-v1` — see
+//! [`bench`] for the field reference). CI's `perf` job fails when any
+//! gated kernel's *speedup ratio* drops >25% below the checked-in
+//! `bench/baseline.json`; extend that schema, don't invent a new one.
+//!
 //! ## Layout
 //!
 //! - [`driver`] — the `Experiment` builder and the `Solver` trait with

@@ -1,6 +1,20 @@
 //! Dense row-major matrix.
+//!
+//! The kernels (`matvec` / `matvec_t` / `matmul` / `gram`) are
+//! cache-blocked and parallelized over the deterministic chunk pool in
+//! [`super::par`]. Every kernel keeps the *naive per-element accumulation
+//! order* (ascending `k` / row index), so results are bit-identical to
+//! the single-threaded reference at any thread count — the chunking only
+//! partitions independent output elements, never a floating-point sum.
+//! The pre-existing naive kernels are preserved in [`reference`] as the
+//! equivalence referee and the denominator of the `coded-opt bench`
+//! speedup gate.
 
-use super::{axpy, dot};
+use super::{axpy, dot, par};
+
+/// k-tile length for [`Mat::matmul`]: a `KB × cols` panel of the right
+/// operand stays cache-hot while it is reused across a chunk's rows.
+const KB: usize = 64;
 
 /// Dense `rows × cols` matrix, row-major `Vec<f64>` storage.
 #[derive(Clone, Debug, PartialEq)]
@@ -94,56 +108,130 @@ impl Mat {
         }
     }
 
+    /// Copy a contiguous column range `[c0, c1)` into a new matrix — a
+    /// straight per-row memcpy, with no index indirection. Use this for
+    /// blocked column partitioning ([`select_cols`](Self::select_cols)
+    /// handles arbitrary column subsets).
+    pub fn col_block(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let width = c1 - c0;
+        let mut data = Vec::with_capacity(self.rows * width);
+        for i in 0..self.rows {
+            data.extend_from_slice(&self.data[i * self.cols + c0..i * self.cols + c1]);
+        }
+        Mat { rows: self.rows, cols: width, data }
+    }
+
     /// Copy selected columns into a new matrix (used for column-subsampled
-    /// Haar / Hadamard encodings).
+    /// Haar / Hadamard encodings and BCD column sampling): one gather pass
+    /// per row appended straight into the output buffer — no zero-fill and
+    /// no per-element destination indexing.
     pub fn select_cols(&self, idx: &[usize]) -> Mat {
-        let mut out = Mat::zeros(self.rows, idx.len());
+        let mut data = Vec::with_capacity(self.rows * idx.len());
         for i in 0..self.rows {
             let src = self.row(i);
-            let dst = out.row_mut(i);
-            for (jj, &j) in idx.iter().enumerate() {
-                dst[jj] = src[j];
-            }
+            data.extend(idx.iter().map(|&j| src[j]));
         }
-        out
+        Mat { rows: self.rows, cols: idx.len(), data }
     }
 
     /// y = A·x.
+    ///
+    /// Output rows are independent, so the kernel parallelizes over
+    /// fixed row chunks with each `y[i]` computed by the same `dot` as
+    /// the reference — bit-identical at any thread count.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols, "matvec dim mismatch");
         let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            y[i] = dot(self.row(i), x);
-        }
+        let data = &self.data;
+        let cols = self.cols;
+        par::par_chunks_mut(&mut y, par::CHUNK, cols, |ci, yc| {
+            let r0 = ci * par::CHUNK;
+            for (dy, i) in yc.iter_mut().zip(r0..) {
+                *dy = dot(&data[i * cols..(i + 1) * cols], x);
+            }
+        });
         y
     }
 
+    /// out = A·x − b, the fused residual kernel of the worker gradient
+    /// hot path. Same chunking and per-element order as
+    /// [`matvec`](Self::matvec).
+    pub fn matvec_sub(&self, x: &[f64], b: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec_sub dim mismatch");
+        assert_eq!(b.len(), self.rows, "matvec_sub rhs mismatch");
+        assert_eq!(out.len(), self.rows, "matvec_sub out mismatch");
+        let data = &self.data;
+        let cols = self.cols;
+        par::par_chunks_mut(out, par::CHUNK, cols, |ci, oc| {
+            let r0 = ci * par::CHUNK;
+            for (dy, i) in oc.iter_mut().zip(r0..) {
+                *dy = dot(&data[i * cols..(i + 1) * cols], x) - b[i];
+            }
+        });
+    }
+
     /// y = Aᵀ·x (no explicit transpose).
+    ///
+    /// Parallelized over fixed *column* chunks: each `y[j]` accumulates
+    /// its contributions in ascending row order — exactly the reference
+    /// `axpy` sweep's per-element order — so the result is bit-identical
+    /// to the sequential kernel at any thread count, and each pass
+    /// streams only its column stripe of A.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
         let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            axpy(x[i], self.row(i), &mut y);
-        }
+        let data = &self.data;
+        let cols = self.cols;
+        par::par_chunks_mut(&mut y, par::CHUNK, self.rows, |ci, yc| {
+            let j0 = ci * par::CHUNK;
+            for (i, &xi) in x.iter().enumerate() {
+                let stripe = &data[i * cols + j0..i * cols + j0 + yc.len()];
+                for (dy, &a) in yc.iter_mut().zip(stripe) {
+                    *dy += xi * a;
+                }
+            }
+        });
         y
     }
 
     /// C = A·B.
+    ///
+    /// Cache-blocked ikj: parallel over fixed row chunks of C (disjoint
+    /// output), k-tiled so a `KB × cols` panel of B stays hot across the
+    /// chunk's rows. Tiles advance in ascending k, so each `C[i][j]`
+    /// accumulates in exactly the reference ikj order — bit-identical at
+    /// any thread count.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
-        // ikj loop order: stream B rows, accumulate into C rows.
-        for i in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self.data[i * self.cols + k];
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = other.row(k);
-                let crow = out.row_mut(i);
-                axpy(a, brow, crow);
-            }
+        let bcols = other.cols;
+        let kdim = self.cols;
+        if bcols == 0 || kdim == 0 {
+            return out;
         }
+        let a = &self.data;
+        let b = &other.data;
+        par::par_chunks_mut(out.as_mut_slice(), par::CHUNK * bcols, kdim, |ci, cchunk| {
+            let i0 = ci * par::CHUNK;
+            let mut k0 = 0;
+            while k0 < kdim {
+                let k1 = (k0 + KB).min(kdim);
+                for (di, crow) in cchunk.chunks_mut(bcols).enumerate() {
+                    let arow = &a[(i0 + di) * kdim..(i0 + di + 1) * kdim];
+                    for (off, &aik) in arow[k0..k1].iter().enumerate() {
+                        // same zero-skip as the reference kernel (also
+                        // keeps −0.0 outputs bit-stable)
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let k = k0 + off;
+                        axpy(aik, &b[k * bcols..(k + 1) * bcols], crow);
+                    }
+                }
+                k0 = k1;
+            }
+        });
         out
     }
 
@@ -159,21 +247,53 @@ impl Mat {
     }
 
     /// Gram matrix AᵀA (symmetric, computed without forming Aᵀ).
+    ///
+    /// Parallel over fixed row chunks of G (disjoint upper-triangle
+    /// output); each chunk streams the data rows in ascending order, so
+    /// every `G[i][j]` accumulates in exactly the reference order —
+    /// bit-identical at any thread count. Chunking re-streams A once per
+    /// G-row chunk, which only pays off when the chunks actually run on
+    /// parallel threads — the single-thread / small-work case takes a
+    /// one-pass sweep instead (same per-element order, same bits).
     pub fn gram(&self) -> Mat {
         let n = self.cols;
         let mut g = Mat::zeros(n, n);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for i in 0..n {
-                let ri = row[i];
-                if ri == 0.0 {
-                    continue;
-                }
-                let grow = g.row_mut(i);
-                for j in i..n {
-                    grow[j] += ri * row[j];
+        if n == 0 {
+            return g;
+        }
+        let rows = self.rows;
+        let work = rows / 2 + 1;
+        if par::threads() <= 1 || (n * n).saturating_mul(work) < par::PAR_THRESHOLD {
+            for r in 0..rows {
+                let row = &self.data[r * n..(r + 1) * n];
+                for (i, &ri) in row.iter().enumerate() {
+                    if ri == 0.0 {
+                        continue;
+                    }
+                    let grow = &mut g.data[i * n..(i + 1) * n];
+                    for (dst, &rj) in grow[i..].iter_mut().zip(&row[i..]) {
+                        *dst += ri * rj;
+                    }
                 }
             }
+        } else {
+            let data = &self.data;
+            par::par_chunks_mut(g.as_mut_slice(), par::CHUNK * n, work, |ci, gchunk| {
+                let i0 = ci * par::CHUNK;
+                for r in 0..rows {
+                    let row = &data[r * n..(r + 1) * n];
+                    for (di, grow) in gchunk.chunks_mut(n).enumerate() {
+                        let i = i0 + di;
+                        let ri = row[i];
+                        if ri == 0.0 {
+                            continue;
+                        }
+                        for (dst, &rj) in grow[i..].iter_mut().zip(&row[i..]) {
+                            *dst += ri * rj;
+                        }
+                    }
+                }
+            });
         }
         // Mirror the upper triangle.
         for i in 0..n {
@@ -232,6 +352,76 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
+/// The pre-blocking naive kernels, kept verbatim as the referee: the
+/// kernel-equivalence property tests pin the blocked/parallel kernels
+/// bit-identical to these, and `coded-opt bench` times them as the
+/// denominator of its speedup gate.
+pub mod reference {
+    use super::Mat;
+    use crate::linalg::{axpy, dot};
+
+    /// Naive y = A·x (row sweep of dots).
+    pub fn matvec(a: &Mat, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), a.cols(), "matvec dim mismatch");
+        let mut y = vec![0.0; a.rows()];
+        for (i, dy) in y.iter_mut().enumerate() {
+            *dy = dot(a.row(i), x);
+        }
+        y
+    }
+
+    /// Naive y = Aᵀ·x (axpy sweep over rows).
+    pub fn matvec_t(a: &Mat, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), a.rows(), "matvec_t dim mismatch");
+        let mut y = vec![0.0; a.cols()];
+        for (i, &xi) in x.iter().enumerate() {
+            axpy(xi, a.row(i), &mut y);
+        }
+        y
+    }
+
+    /// Naive ikj C = A·B.
+    pub fn matmul(a: &Mat, other: &Mat) -> Mat {
+        assert_eq!(a.cols(), other.rows(), "matmul dim mismatch");
+        let mut out = Mat::zeros(a.rows(), other.cols());
+        for i in 0..a.rows() {
+            for k in 0..a.cols() {
+                let aik = a[(i, k)];
+                if aik == 0.0 {
+                    continue;
+                }
+                axpy(aik, other.row(k), out.row_mut(i));
+            }
+        }
+        out
+    }
+
+    /// Naive upper-triangle G = AᵀA.
+    pub fn gram(a: &Mat) -> Mat {
+        let n = a.cols();
+        let mut g = Mat::zeros(n, n);
+        for r in 0..a.rows() {
+            let row = a.row(r);
+            for i in 0..n {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(i);
+                for j in i..n {
+                    grow[j] += ri * row[j];
+                }
+            }
+        }
+        for i in 0..n {
+            for j in 0..i {
+                g[(i, j)] = g[(j, i)];
+            }
+        }
+        g
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,6 +442,17 @@ mod tests {
         let at = a.transpose();
         let x = vec![0.5, -1.5];
         assert_eq!(a.matvec_t(&x), at.matvec(&x));
+    }
+
+    #[test]
+    fn matvec_sub_fuses_residual() {
+        let a = small();
+        let x = vec![1.0, -1.0, 2.0];
+        let b = vec![0.5, -0.5];
+        let mut out = vec![0.0; 2];
+        a.matvec_sub(&x, &b, &mut out);
+        let want: Vec<f64> = a.matvec(&x).iter().zip(&b).map(|(v, bi)| v - bi).collect();
+        assert_eq!(out, want);
     }
 
     #[test]
@@ -282,6 +483,20 @@ mod tests {
     }
 
     #[test]
+    fn blocked_kernels_bit_equal_reference_beyond_one_chunk() {
+        // Sizes past CHUNK and KB so the tiled/parallel paths engage.
+        let mut rng = crate::rng::Pcg64::new(9);
+        let a = Mat::from_fn(150, 130, |_, _| rng.next_f64() - 0.5);
+        let b = Mat::from_fn(130, 70, |_, _| rng.next_f64() - 0.5);
+        let x: Vec<f64> = (0..130).map(|_| rng.next_f64() - 0.5).collect();
+        let xt: Vec<f64> = (0..150).map(|_| rng.next_f64() - 0.5).collect();
+        assert_eq!(a.matvec(&x), reference::matvec(&a, &x));
+        assert_eq!(a.matvec_t(&xt), reference::matvec_t(&a, &xt));
+        assert_eq!(a.matmul(&b), reference::matmul(&a, &b));
+        assert_eq!(a.gram(), reference::gram(&a));
+    }
+
+    #[test]
     fn vstack_stacks() {
         let a = small();
         let b = small();
@@ -297,6 +512,17 @@ mod tests {
         assert_eq!(b.as_slice(), &[4.0, 5.0, 6.0]);
         let c = a.select_cols(&[2, 0]);
         assert_eq!(c.as_slice(), &[3.0, 1.0, 6.0, 4.0]);
+    }
+
+    #[test]
+    fn col_block_matches_select_cols() {
+        let a = small();
+        let b = a.col_block(1, 3);
+        assert_eq!(b.as_slice(), &[2.0, 3.0, 5.0, 6.0]);
+        let idx: Vec<usize> = (1..3).collect();
+        assert_eq!(b, a.select_cols(&idx));
+        assert_eq!(a.col_block(2, 2).rows(), 2);
+        assert_eq!(a.col_block(2, 2).cols(), 0);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub mod chol;
 pub mod eig;
 pub mod fwht;
 pub mod mat;
+pub mod par;
 pub mod sparse;
 
 pub use chol::{cholesky_factor, cholesky_solve};
@@ -20,17 +21,18 @@ pub use sparse::Csr;
 
 /// Dot product.
 ///
-/// Kept as the naive strict-order loop: a 4-way-unrolled multi-
+/// Kept as the naive strict-order sweep: a 4-way-unrolled multi-
 /// accumulator variant was tried during the perf pass and REGRESSED the
 /// gather-round p50 by ~18% at the shipped shard shapes (bounds-check +
 /// register pressure beat the ILP win at p ≤ 128) — see EXPERIMENTS.md
-/// §Perf iteration 6.
+/// §Perf iteration 6. The zipped form accumulates in exactly the same
+/// order (parallel kernels depend on that for bit-identity).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut acc = 0.0;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
+    for (x, y) in a.iter().zip(b) {
+        acc += x * y;
     }
     acc
 }
@@ -45,8 +47,8 @@ pub fn norm2(x: &[f64]) -> f64 {
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
     }
 }
 

@@ -1,0 +1,247 @@
+//! Deterministic chunked parallelism for the compute kernels.
+//!
+//! Dependency-free (std-only) worker scheduling with one hard contract:
+//! **results are bit-identical at any thread count**, including 1. The
+//! golden-trace suite (`rust/tests/golden_traces.rs`) is the referee —
+//! CI runs it at 1 and 8 threads and the fixtures must not move.
+//!
+//! Two primitives deliver that contract:
+//!
+//! - [`par_chunks_mut`] — split a mutable output buffer into *fixed-size*
+//!   chunks and hand each chunk to exactly one worker. Chunk geometry
+//!   depends only on the buffer length and the chunk size, never on the
+//!   thread count, and every output element is written by a single chunk,
+//!   so the result cannot depend on scheduling. This covers every kernel
+//!   whose output elements are independent (`matvec` rows, `matvec_t`
+//!   columns, `matmul` row blocks, `gram` row blocks).
+//! - [`tree_reduce`] — for genuine reductions (e.g. the sparse CSR
+//!   transpose-scatter, where output elements receive contributions from
+//!   many rows): evaluate per-chunk partials in parallel, then combine
+//!   them in a *fixed pairwise binary tree over chunk index*
+//!   `((p0+p1)+(p2+p3))+…`. The tree shape depends only on the chunk
+//!   count, so the floating-point summation order — and therefore the
+//!   bits — are the same at every thread count. (The tree order differs
+//!   from a strict sequential sweep by ordinary rounding; callers
+//!   document the ≤1e-12 contract where they use it.)
+//!
+//! Work below [`PAR_THRESHOLD`] element·work units runs inline — the
+//! solver loops issue many small kernel calls per round and must not pay
+//! thread wake-ups for them. The eligibility test depends only on the
+//! problem size, never on the thread count, so it cannot break the
+//! determinism contract.
+//!
+//! The thread count resolves, in priority order: [`set_threads`] (the
+//! `Experiment::threads` knob), the `CODED_OPT_THREADS` environment
+//! variable, then `std::thread::available_parallelism()`, capped at
+//! [`MAX_THREADS`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Hard cap on worker threads.
+pub const MAX_THREADS: usize = 16;
+
+/// Fixed chunk length (rows / columns) used by the dense kernels. Chunk
+/// geometry must never depend on the thread count — this constant is the
+/// determinism anchor.
+pub const CHUNK: usize = 64;
+
+/// Minimum `out.len() × work_per_item` before a kernel goes parallel
+/// (≈ flops). Workers are scoped threads spawned per call — simple and
+/// safe, but spawn+join costs tens of microseconds — so the threshold
+/// sits around half a millisecond of sequential work (~1M flops): below
+/// it the spawn overhead would rival the parallel win, above it the
+/// overhead amortizes to a few percent. The cutoff depends only on
+/// problem size, never on the thread count, so it cannot perturb the
+/// determinism contract.
+pub const PAR_THRESHOLD: usize = 1 << 20;
+
+/// 0 = unresolved; resolved lazily on first use.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// Set the process-wide worker-thread count (clamped to
+/// `1..=MAX_THREADS`). Results are bit-identical at any setting; this
+/// knob only trades wall-clock for cores.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+}
+
+/// The resolved worker-thread count.
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    let resolved = std::env::var("CODED_OPT_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        })
+        .clamp(1, MAX_THREADS);
+    THREADS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Run `body(chunk_index, chunk)` over fixed-size chunks of `out`,
+/// in parallel when the work is large enough.
+///
+/// `chunk` is the chunk length in elements (the last chunk may be
+/// shorter); `work_per_item` is the approximate cost of producing one
+/// output element, used only for the inline-vs-parallel decision. Each
+/// chunk is processed by exactly one thread, so as long as `body` writes
+/// only through the chunk it was handed (it cannot do otherwise — the
+/// chunks are disjoint `&mut` slices) the result is independent of the
+/// thread count.
+pub fn par_chunks_mut<T, F>(out: &mut [T], chunk: usize, work_per_item: usize, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk > 0, "chunk length must be positive");
+    let nchunks = out.len().div_ceil(chunk);
+    let nthreads = threads().min(nchunks);
+    if nthreads <= 1 || out.len().saturating_mul(work_per_item) < PAR_THRESHOLD {
+        for (ci, c) in out.chunks_mut(chunk).enumerate() {
+            body(ci, c);
+        }
+        return;
+    }
+    // Work-stealing over a shared chunk iterator: assignment of chunks to
+    // threads is racy, but each chunk runs exactly once on exactly one
+    // thread, so output bits are schedule-independent. (`worker` is
+    // declared before `scope` so the spawned threads' borrows of it
+    // outlive `'scope`.)
+    let queue = Mutex::new(out.chunks_mut(chunk).enumerate());
+    let worker = || loop {
+        let job = queue.lock().unwrap().next();
+        match job {
+            Some((ci, c)) => body(ci, c),
+            None => break,
+        }
+    };
+    std::thread::scope(|scope| {
+        for _ in 1..nthreads {
+            scope.spawn(&worker);
+        }
+        worker();
+    });
+}
+
+/// Deterministic fixed-chunk tree reduction into a `len`-vector.
+///
+/// `eval(ci, slot)` must write chunk `ci`'s partial result (a full
+/// `len`-vector) into `slot`; partials are evaluated in parallel
+/// (`work_per_item` gates inlining exactly like [`par_chunks_mut`]) and
+/// then pairwise-combined in a fixed binary tree over the chunk index:
+/// stride-1 pairs first (`p0+=p1`, `p2+=p3`, …), then stride 2, and so
+/// on. The tree shape depends only on `nchunks`, so the summation order
+/// is identical at every thread count.
+pub fn tree_reduce<F>(nchunks: usize, len: usize, work_per_item: usize, eval: F) -> Vec<f64>
+where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert!(nchunks >= 1, "tree_reduce needs at least one chunk");
+    if len == 0 {
+        return Vec::new();
+    }
+    let mut partials = vec![0.0f64; nchunks * len];
+    par_chunks_mut(&mut partials, len, work_per_item, eval);
+    let mut stride = 1;
+    while stride < nchunks {
+        let mut i = 0;
+        while i + stride < nchunks {
+            let (head, tail) = partials.split_at_mut((i + stride) * len);
+            let dst = &mut head[i * len..(i + 1) * len];
+            for (d, s) in dst.iter_mut().zip(&tail[..len]) {
+                *d += s;
+            }
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    partials.truncate(len);
+    partials
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serializes the tests that mutate the process-global thread knob
+    /// (cargo runs the unit tests of this binary concurrently).
+    static KNOB: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn chunks_cover_output_exactly_once() {
+        let mut out = vec![0u32; 1000];
+        par_chunks_mut(&mut out, 64, PAR_THRESHOLD, |_, c| {
+            for v in c.iter_mut() {
+                *v += 1; // every element must be touched exactly once
+            }
+        });
+        assert!(out.iter().all(|&v| v == 1));
+    }
+
+    #[test]
+    fn chunk_indices_map_to_offsets() {
+        let mut out = vec![0usize; 300];
+        par_chunks_mut(&mut out, 64, PAR_THRESHOLD, |ci, c| {
+            for (k, v) in c.iter_mut().enumerate() {
+                *v = ci * 64 + k;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i);
+        }
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let _guard = KNOB.lock().unwrap();
+        let eval = |ci: usize, slot: &mut [f64]| {
+            for (k, v) in slot.iter_mut().enumerate() {
+                *v = ((ci * 31 + k) as f64 * 0.37).sin();
+            }
+        };
+        let before = threads();
+        set_threads(1);
+        let a = tree_reduce(13, 17, PAR_THRESHOLD, eval);
+        set_threads(8);
+        let b = tree_reduce(13, 17, PAR_THRESHOLD, eval);
+        set_threads(before);
+        assert_eq!(a, b, "tree reduction must be thread-count invariant");
+    }
+
+    #[test]
+    fn tree_reduce_matches_pairwise_hand_sum() {
+        // 3 chunks of scalars: tree = (p0 + p1) + p2.
+        let got = tree_reduce(3, 1, usize::MAX, |ci, slot| slot[0] = [1.0, 2.0, 4.0][ci]);
+        assert_eq!(got, vec![7.0]);
+    }
+
+    #[test]
+    fn single_chunk_is_identity() {
+        let got = tree_reduce(1, 4, 0, |_, slot| slot.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]));
+        assert_eq!(got, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn empty_output_is_fine() {
+        let mut out: Vec<f64> = Vec::new();
+        par_chunks_mut(&mut out, 8, 1, |_, _| panic!("no chunks expected"));
+        assert!(tree_reduce(4, 0, 1, |_, _| ()).is_empty());
+    }
+
+    #[test]
+    fn set_threads_clamps() {
+        let _guard = KNOB.lock().unwrap();
+        let before = threads();
+        set_threads(0);
+        assert_eq!(threads(), 1);
+        set_threads(10_000);
+        assert_eq!(threads(), MAX_THREADS);
+        set_threads(before);
+    }
+}

@@ -6,6 +6,7 @@
 //! touching only the non-zero column support `B_I(S)`.
 
 use super::mat::Mat;
+use super::par;
 
 /// CSR sparse matrix with f64 values.
 #[derive(Clone, Debug)]
@@ -81,24 +82,68 @@ impl Csr {
     }
 
     /// y = A·x.
+    ///
+    /// Output rows are independent, so the kernel parallelizes over
+    /// fixed row chunks (each `y[i]` accumulated in the same ascending
+    /// non-zero order as the sequential sweep — bit-identical at any
+    /// thread count). The inline/parallel decision keys on the average
+    /// row fill, never on the thread count.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols, "csr matvec dim mismatch");
         let mut y = vec![0.0; self.rows];
-        for i in 0..self.rows {
-            let mut acc = 0.0;
-            for idx in self.indptr[i]..self.indptr[i + 1] {
-                acc += self.values[idx] * x[self.indices[idx]];
+        let fill = self.nnz() / self.rows.max(1);
+        par::par_chunks_mut(&mut y, par::CHUNK, fill, |ci, yc| {
+            let r0 = ci * par::CHUNK;
+            for (dy, i) in yc.iter_mut().zip(r0..) {
+                let mut acc = 0.0;
+                for idx in self.indptr[i]..self.indptr[i + 1] {
+                    acc += self.values[idx] * x[self.indices[idx]];
+                }
+                *dy = acc;
             }
-            y[i] = acc;
-        }
+        });
         y
     }
 
     /// y = Aᵀ·x.
+    ///
+    /// The transpose-scatter is a genuine reduction (many rows write the
+    /// same output column), so large inputs run a fixed-chunk tree
+    /// reduction ([`par::tree_reduce`]): per-row-chunk partials, combined
+    /// pairwise in ascending chunk order. Bit-identical at any thread
+    /// count; differs from the strict sequential row sweep only by the
+    /// deterministic tree summation order (≤ rounding — callers that
+    /// compare against dense references use a 1e-12 band).
+    ///
+    /// Eligibility depends only on the matrix shape, never the thread
+    /// count: small-nnz inputs (the per-worker shard sizes) keep the
+    /// sequential sweep, and so do *wide* sparse matrices where the
+    /// `nchunks × cols` dense partials would dwarf the `O(nnz)` useful
+    /// work (e.g. log-fill Haar generators at large n — the partial
+    /// buffers would be orders of magnitude larger than the input).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows, "csr matvec_t dim mismatch");
-        let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
+        let nchunks = self.rows.div_ceil(par::CHUNK).max(1);
+        let partial_cost = nchunks.saturating_mul(self.cols);
+        if self.nnz() < par::PAR_THRESHOLD
+            || nchunks <= 1
+            || partial_cost / 4 > self.nnz()
+        {
+            let mut y = vec![0.0; self.cols];
+            self.scatter_rows(0, self.rows, x, &mut y);
+            return y;
+        }
+        let fill = self.nnz() / self.rows.max(1);
+        par::tree_reduce(nchunks, self.cols, fill, |ci, slot| {
+            let r0 = ci * par::CHUNK;
+            let r1 = (r0 + par::CHUNK).min(self.rows);
+            self.scatter_rows(r0, r1, x, slot);
+        })
+    }
+
+    /// Sequential transpose-scatter of rows `[r0, r1)` into `y`.
+    fn scatter_rows(&self, r0: usize, r1: usize, x: &[f64], y: &mut [f64]) {
+        for i in r0..r1 {
             let xi = x[i];
             if xi == 0.0 {
                 continue;
@@ -107,7 +152,6 @@ impl Csr {
                 y[self.indices[idx]] += self.values[idx] * xi;
             }
         }
-        y
     }
 
     /// Contiguous row block [r0, r1) as a new CSR (worker shard extraction).

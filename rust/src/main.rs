@@ -9,6 +9,15 @@
 //!   async_bcd.
 //! - `spectrum [--scheme paley --n 128 --workers 16 --beta 2 --k 12]` —
 //!   print the subsampled-Gram eigenvalue summary (Figures 5–6 style).
+//! - `bench [--json] [--out BENCH_hotpath.json]
+//!   [--compare bench/baseline.json --tolerance 0.25] [--threads N]
+//!   [--fast]` — time the compute hot paths (structured encode, blocked
+//!   parallel gram/matmul/matvec_t, worker gradient) against the naive
+//!   reference kernels kept in `linalg::mat::reference`, emit the
+//!   `coded-opt/bench-v1` JSON report, and optionally gate on a
+//!   checked-in baseline: only *speedup ratios* are compared (fast vs
+//!   reference timed in the same process), because absolute seconds are
+//!   machine-dependent.
 //! - `scenario [--schemes hadamard,uncoded --algorithms gd,lbfgs|all
 //!   --scenarios crash-rejoin,rack-correlated | --scenario-file sc.toml]
 //!   [--n N --p P --workers M --k K --beta B --iters T --seed S
@@ -19,13 +28,16 @@
 //! - `info` — build / artifact info.
 
 use anyhow::{bail, Result};
+use coded_opt::bench::{banner, run_bench, BenchReport};
 use coded_opt::cli::Args;
 use coded_opt::config::{Algorithm, ExperimentConfig, Scheme};
 use coded_opt::data::synth::{gaussian_linear, sparse_recovery};
 use coded_opt::driver::{AsyncBcd, AsyncGd, Bcd, Experiment, Gd, Lbfgs, Problem, Prox};
 use coded_opt::encoding::{Encoding, SubsetSpectrum};
+use coded_opt::linalg::{mat::reference, par, Mat};
 use coded_opt::metrics::TableWriter;
 use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
+use coded_opt::rng::Pcg64;
 use coded_opt::runtime::ArtifactIndex;
 use coded_opt::scenario::{canonical_trace, run_grid, summary_table, GridSpec, Scenario};
 
@@ -35,8 +47,11 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("spectrum") => cmd_spectrum(&args),
         Some("scenario") => cmd_scenario(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") | None => cmd_info(),
-        Some(other) => bail!("unknown subcommand '{other}' (try: run, spectrum, scenario, info)"),
+        Some(other) => {
+            bail!("unknown subcommand '{other}' (try: run, spectrum, scenario, bench, info)")
+        }
     }
 }
 
@@ -52,7 +67,143 @@ fn cmd_info() -> Result<()> {
             println!("  {:<24} {:<14} {}x{}", a.name, a.kind, a.rows, a.cols);
         }
     }
-    println!("subcommands: run, spectrum, info");
+    println!("subcommands: run, spectrum, scenario, bench, info");
+    Ok(())
+}
+
+/// Hot-path kernel benchmarks with a machine-readable report and an
+/// optional speedup-ratio regression gate (see `.github/workflows/ci.yml`
+/// for the refresh procedure).
+fn cmd_bench(args: &Args) -> Result<()> {
+    if let Some(t) = args.get_usize("threads")? {
+        par::set_threads(t);
+    }
+    let quick = args.has_flag("fast");
+    let (warmup, iters) = if quick { (2, 8) } else { (5, 30) };
+    banner(
+        "hotpath",
+        "fast kernels vs the naive pre-blocking reference (linalg::mat::reference)",
+    );
+    println!("threads: {}\n", par::threads());
+    let mut report = BenchReport::new(par::threads());
+    let mut rng = Pcg64::new(1);
+
+    // ---- structured Hadamard encode: 1024×512 generator applied to a
+    //      512×128 data matrix (FWHT path vs dense per-block products)
+    {
+        let x = Mat::from_fn(512, 128, |_, _| rng.next_f64() - 0.5);
+        let enc = Encoding::build(Scheme::Hadamard, 512, 16, 2.0, 3)?;
+        let dense_blocks: Vec<Mat> = enc.blocks.iter().map(|b| b.to_dense()).collect();
+        let fast = run_bench("encode hadamard 1024x512 (fwht)", warmup, iters, || {
+            std::hint::black_box(enc.encode_data(&x));
+        });
+        let naive = run_bench("encode hadamard 1024x512 (dense)", warmup, iters, || {
+            for b in &dense_blocks {
+                std::hint::black_box(reference::matmul(b, &x));
+            }
+        });
+        report.push_pair("encode_hadamard_1024x512", &fast, &naive);
+    }
+
+    // ---- gram (the BRIP spectrum-analysis inner loop)
+    {
+        let a = Mat::from_fn(512, 512, |_, _| rng.next_f64() - 0.5);
+        let fast = run_bench("gram 512x512 (blocked+par)", warmup, iters, || {
+            std::hint::black_box(a.gram());
+        });
+        let naive = run_bench("gram 512x512 (naive)", warmup, iters, || {
+            std::hint::black_box(reference::gram(&a));
+        });
+        report.push_pair("gram_512x512", &fast, &naive);
+    }
+
+    // ---- matmul and matvec_t (informational pairs; not in the gate
+    //      baseline because small parallel margins are machine-noisy)
+    {
+        let a = Mat::from_fn(384, 384, |_, _| rng.next_f64() - 0.5);
+        let b = Mat::from_fn(384, 384, |_, _| rng.next_f64() - 0.5);
+        let fast = run_bench("matmul 384^3 (blocked+par)", warmup, iters, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        let naive = run_bench("matmul 384^3 (naive ikj)", warmup, iters, || {
+            std::hint::black_box(reference::matmul(&a, &b));
+        });
+        report.push_pair("matmul_384", &fast, &naive);
+
+        let big = Mat::from_fn(4096, 512, |_, _| rng.next_f64() - 0.5);
+        let xt: Vec<f64> = (0..4096).map(|_| rng.next_f64() - 0.5).collect();
+        let fast = run_bench("matvec_t 4096x512 (stripe-par)", warmup, iters, || {
+            std::hint::black_box(big.matvec_t(&xt));
+        });
+        let naive = run_bench("matvec_t 4096x512 (naive axpy)", warmup, iters, || {
+            std::hint::black_box(reference::matvec_t(&big, &xt));
+        });
+        report.push_pair("matvec_t_4096x512", &fast, &naive);
+    }
+
+    // ---- worker gradient kernel at a shipped shard shape
+    {
+        let sx = Mat::from_fn(512, 128, |_, _| rng.next_f64() - 0.5);
+        let sy: Vec<f64> = (0..512).map(|_| rng.next_f64() - 0.5).collect();
+        let w: Vec<f64> = (0..128).map(|_| rng.next_f64() - 0.5).collect();
+        let mut resid = vec![0.0; 512];
+        let fast = run_bench("quad_grad 512x128 (fused)", warmup, iters * 4, || {
+            sx.matvec_sub(&w, &sy, &mut resid);
+            std::hint::black_box(sx.matvec_t(&resid));
+        });
+        let naive = run_bench("quad_grad 512x128 (naive)", warmup, iters * 4, || {
+            let mut r = reference::matvec(&sx, &w);
+            for (ri, yi) in r.iter_mut().zip(&sy) {
+                *ri -= yi;
+            }
+            std::hint::black_box(reference::matvec_t(&sx, &r));
+        });
+        report.push_pair("quad_grad_512x128", &fast, &naive);
+    }
+
+    // ---- FWHT throughput (informational single)
+    {
+        let mut buf: Vec<f64> = (0..8192).map(|i| (i as f64 * 0.37).sin()).collect();
+        let s = run_bench("FWHT n=8192", warmup, iters * 4, || {
+            coded_opt::linalg::fwht(&mut buf);
+        });
+        report.push(&s);
+    }
+
+    println!();
+    for e in &report.entries {
+        if let Some(s) = e.speedup() {
+            println!("{:<28} speedup {:.2}x", e.name, s);
+        }
+    }
+
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, report.to_json())?;
+        println!("\nwrote {path}");
+    } else if args.has_flag("json") {
+        println!("\n{}", report.to_json());
+    }
+
+    if let Some(baseline_path) = args.get("compare") {
+        let tolerance = args.get_f64("tolerance")?.unwrap_or(0.25);
+        let text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow::anyhow!("reading baseline {baseline_path}: {e}"))?;
+        let baseline = BenchReport::parse_json(&text)?;
+        let regressions = report.compare(&baseline, tolerance);
+        if regressions.is_empty() {
+            let gated = baseline.entries.iter().filter(|e| e.speedup().is_some()).count();
+            println!("perf gate: ok ({gated} gated speedup(s), tolerance {tolerance})");
+        } else {
+            for r in &regressions {
+                eprintln!("perf regression: {r}");
+            }
+            bail!(
+                "perf gate failed: {} kernel(s) regressed >{:.0}%",
+                regressions.len(),
+                tolerance * 100.0
+            );
+        }
+    }
     Ok(())
 }
 
