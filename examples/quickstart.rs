@@ -100,5 +100,29 @@ fn main() -> anyhow::Result<()> {
         .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(50))?;
     assert_eq!(one.w, eight.w, "kernel threading must never move a result");
     println!("\nthreads=1 and threads=8 runs are bit-identical (deterministic chunk pool)");
+
+    // Out-of-core: the same experiment can read its dataset from a
+    // shard directory instead of memory. A sharded dataset is a
+    // manifest.json (schema `coded-opt/shard-v1`: rows/cols, targets
+    // flag, per-shard file + row range + checksum) plus shard-*.bin
+    // row blocks; the encoded worker partitions are then assembled
+    // block-by-block (coded_opt::encoding::stream) and the resulting
+    // trace is BIT-IDENTICAL to the in-memory run — the streaming
+    // encoders continue the exact floating-point accumulation order of
+    // the dense kernels. CLI mirror: `coded-opt shard` / `coded-opt
+    // encode` / `coded-opt run --source DIR`.
+    let dir = std::env::temp_dir().join(format!("coded-opt-quickstart-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    coded_opt::data::shard::shard_dataset(&x, Some(&y), &dir, 64)?;
+    let src = coded_opt::data::ShardedSource::open(&dir)?;
+    let sharded = Experiment::sharded(src)
+        .workers(m)
+        .wait_for(k)
+        .seed(42)
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(50))?;
+    assert_eq!(one.w, sharded.w, "sharded and in-memory runs must agree bit-for-bit");
+    println!("sharded-source run is bit-identical to the in-memory run (8 shards of 64 rows)");
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }

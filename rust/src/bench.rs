@@ -257,8 +257,10 @@ impl BenchReport {
 }
 
 /// Minimal JSON subset parser (objects / arrays / strings / numbers /
-/// bool / null) — enough for the bench schema; no serde offline.
-mod json {
+/// bool / null) — no serde offline. Shared by the bench schema here and
+/// the shard manifests in [`crate::data::shard`]; extend it rather than
+/// growing a second parser.
+pub mod json {
     use anyhow::{bail, Result};
 
     #[derive(Clone, Debug)]
@@ -296,6 +298,13 @@ mod json {
         pub fn as_f64(&self) -> Option<f64> {
             match self {
                 Value::Num(x) => Some(*x),
+                _ => None,
+            }
+        }
+
+        pub fn as_bool(&self) -> Option<bool> {
+            match self {
+                Value::Bool(b) => Some(*b),
                 _ => None,
             }
         }

@@ -78,15 +78,18 @@ impl Gather for SimCluster {
         let m = self.workers.len();
         assert!(k >= 1 && k <= m, "k={k} out of range for m={m}");
         // Arrival time of each worker if it were allowed to finish.
+        // Delays pass through `sanitize_delay` (NaN → crashed, negatives
+        // clamped) and the sort uses the total order, so a pathological
+        // delay composition can never panic the release-build sort —
+        // `sort_by(partial_cmp(..).unwrap())` did, once the debug_assert
+        // was compiled out.
         let mut arrivals: Vec<(f64, usize)> = (0..m)
             .map(|i| {
-                let t = self.workers[i].cost() * self.secs_per_unit * self.speed[i]
-                    + self.delay.sample(i, self.iter);
-                debug_assert!(!t.is_nan(), "NaN arrival for worker {i}");
-                (t, i)
+                let d = crate::delay::sanitize_delay(self.delay.sample(i, self.iter));
+                (self.workers[i].cost() * self.secs_per_unit * self.speed[i] + d, i)
             })
             .collect();
-        arrivals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         // Crashed workers (infinite delay) can never be waited for.
         let live = arrivals.iter().take_while(|(t, _)| t.is_finite()).count();
         assert!(
@@ -247,6 +250,45 @@ mod tests {
         let delay = crate::delay::TraceDelay::new(vec![vec![0.0, f64::INFINITY]]);
         let mut c = mk_cluster(2, Box::new(delay));
         c.round(2, &mut |_| task(0));
+    }
+
+    #[test]
+    fn nan_delay_is_an_erasure_not_a_panic() {
+        // A delay model that leaks NaN (e.g. a hand-edited replay tape,
+        // or a transform composing 0·∞) must behave like a crash: the
+        // worker is erased for the round, the sort never sees NaN, and
+        // the clock stays finite. The old partial_cmp().unwrap() sort
+        // panicked here in release builds (the debug_assert guarding it
+        // is compiled out).
+        struct NanDelay;
+        impl crate::delay::DelayModel for NanDelay {
+            fn sample(&mut self, worker: usize, _iter: usize) -> f64 {
+                if worker == 1 {
+                    f64::NAN
+                } else {
+                    0.0
+                }
+            }
+            fn workers(&self) -> usize {
+                3
+            }
+        }
+        let mut c = mk_cluster(3, Box::new(NanDelay));
+        let rr = c.round(2, &mut |_| task(0));
+        assert_eq!(rr.active_set(), vec![0, 2], "NaN worker erased");
+        assert!(rr.interrupted.contains(&1));
+        assert!(rr.elapsed.is_finite() && c.clock().is_finite());
+    }
+
+    #[test]
+    fn negative_delays_clamp_to_zero() {
+        let delay = crate::delay::TraceDelay::new(vec![vec![-5.0, 0.0]]);
+        let mut c = mk_cluster(2, Box::new(delay)).with_timing(0.1, 0.0);
+        let rr = c.round(2, &mut |_| task(0));
+        // both arrivals = compute floor 0.1; a negative delay must not
+        // let a worker arrive before its compute finishes
+        assert!((rr.elapsed - 0.1).abs() < 1e-12, "elapsed {}", rr.elapsed);
+        assert!(rr.responses.iter().all(|r| (r.arrival - 0.1).abs() < 1e-12));
     }
 
     #[test]

@@ -169,7 +169,10 @@ impl Gather for ThreadCluster {
         // it cannot respond this round, exactly like a real dead node.
         let mut dispatched = vec![false; m];
         for i in 0..m {
-            let delay = self.delay.sample(i, iter);
+            // sanitize: NaN → crashed, negatives clamped — same boundary
+            // rule as SimCluster, so a pathological composition behaves
+            // identically on both engines.
+            let delay = crate::delay::sanitize_delay(self.delay.sample(i, iter));
             if !delay.is_finite() {
                 continue;
             }

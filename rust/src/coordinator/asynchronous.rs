@@ -15,18 +15,26 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::delay::DelayModel;
+use crate::delay::{sanitize_delay, DelayModel};
 use crate::linalg::Mat;
 use crate::metrics::{IterRecord, Participation, Trace};
 
-/// Ordered f64 key for the event queue.
-#[derive(PartialEq, PartialOrd)]
+/// Ordered f64 key for the event queue. Total order (`f64::total_cmp`),
+/// so a pathological delay can never panic the heap's internal
+/// comparisons — the same boundary rule as the cluster engines' arrival
+/// sort (delays additionally pass through [`sanitize_delay`] before
+/// entering the queue, mapping NaN to +∞).
+#[derive(PartialEq)]
 struct Time(f64);
 impl Eq for Time {}
-#[allow(clippy::derive_ord_xor_partial_ord)]
+impl PartialOrd for Time {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
 impl Ord for Time {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.partial_cmp(other).unwrap()
+        self.0.total_cmp(&other.0)
     }
 }
 
@@ -84,7 +92,10 @@ pub(crate) fn async_gd_loop(
     let mut stale: Vec<Vec<f64>> = Vec::with_capacity(m);
     let mut clock;
     for i in 0..m {
-        let dur = shards[i].0.rows() as f64 * cfg.secs_per_unit + delay.sample(i, 0);
+        // sanitize: NaN → +∞ (the worker never completes — starvation,
+        // not a heap panic; crash windows are rejected at the driver)
+        let dur =
+            shards[i].0.rows() as f64 * cfg.secs_per_unit + sanitize_delay(delay.sample(i, 0));
         queue.push((Reverse(Time(dur)), i));
         stale.push(w.clone());
     }
@@ -106,7 +117,8 @@ pub(crate) fn async_gd_loop(
         participation.record(&[i]);
         // worker fetches the fresh iterate and starts over
         stale[i] = w.clone();
-        let dur = xi.rows() as f64 * cfg.secs_per_unit + delay.sample(i, upd + 1);
+        let dur =
+            xi.rows() as f64 * cfg.secs_per_unit + sanitize_delay(delay.sample(i, upd + 1));
         queue.push((Reverse(Time(clock + dur)), i));
         if upd % cfg.record_every == 0 || upd + 1 == cfg.updates {
             let (objective, test_metric) = eval(&w);
@@ -174,7 +186,7 @@ pub(crate) fn async_bcd_loop(
     let mut clock;
     for i in 0..m {
         let dur = (blocks[i].rows() * blocks[i].cols()) as f64 / 1000.0 * cfg.secs_per_unit
-            + delay.sample(i, 0);
+            + sanitize_delay(delay.sample(i, 0));
         queue.push((Reverse(Time(dur)), i));
     }
     let mut trace = Trace::new(label);
@@ -204,7 +216,7 @@ pub(crate) fn async_bcd_loop(
         }
         fetched[i] = z;
         let dur = (blocks[i].rows() * blocks[i].cols()) as f64 / 1000.0 * cfg.secs_per_unit
-            + delay.sample(i, upd + 1);
+            + sanitize_delay(delay.sample(i, upd + 1));
         queue.push((Reverse(Time(clock + dur)), i));
         if upd % cfg.record_every == 0 || upd + 1 == cfg.updates {
             let (objective, test_metric) = eval_w_blocks(&v);

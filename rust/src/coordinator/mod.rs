@@ -198,6 +198,61 @@ pub fn build_data_parallel(
     build_data_parallel_with_runtime(x, y, scheme, m, beta, seed, None)
 }
 
+/// Parseval-normalize encoded blocks and box them into [`QuadWorker`]s,
+/// attaching PJRT executors where the artifact index matches. The ONE
+/// assembly path shared by the in-memory and streamed builders — the
+/// sharded-vs-in-memory bit-identity contract rides on both going
+/// through identical code from the encoded blocks onward.
+fn assemble_coded_workers(
+    sx_blocks: Vec<Mat>,
+    sy_blocks: Vec<Vec<f64>>,
+    norm: f64,
+    runtime: Option<&crate::runtime::ArtifactIndex>,
+) -> (Vec<Box<dyn WorkerNode>>, usize) {
+    let mut pjrt_attached = 0;
+    let workers: Vec<Box<dyn WorkerNode>> = sx_blocks
+        .into_iter()
+        .zip(sy_blocks)
+        .map(|(mut sx, mut sy)| {
+            sx.scale_inplace(norm);
+            crate::linalg::scale(norm, &mut sy);
+            let mut worker = QuadWorker::new(sx, sy);
+            if let Some(idx) = runtime {
+                worker.pjrt =
+                    crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
+                pjrt_attached += usize::from(worker.pjrt.is_some());
+            }
+            Box::new(worker) as Box<dyn WorkerNode>
+        })
+        .collect();
+    (workers, pjrt_attached)
+}
+
+/// Duplicate per-partition shards onto their replica holders (see
+/// [`ReplicationMap`]) — shared by the in-memory and streamed
+/// replication builders.
+fn assemble_replicated_workers(
+    shards: &[(Mat, Vec<f64>)],
+    map: &ReplicationMap,
+    m: usize,
+    runtime: Option<&crate::runtime::ArtifactIndex>,
+) -> (Vec<Box<dyn WorkerNode>>, usize) {
+    let mut pjrt_attached = 0;
+    let workers: Vec<Box<dyn WorkerNode>> = (0..m)
+        .map(|w| {
+            let p = map.partition_of(w);
+            let mut worker = QuadWorker::new(shards[p].0.clone(), shards[p].1.clone());
+            if let Some(idx) = runtime {
+                worker.pjrt =
+                    crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
+                pjrt_attached += usize::from(worker.pjrt.is_some());
+            }
+            Box::new(worker) as Box<dyn WorkerNode>
+        })
+        .collect();
+    (workers, pjrt_attached)
+}
+
 /// [`build_data_parallel`] with an optional AOT artifact index: workers
 /// whose shard shape matches a compiled `quad_grad` artifact execute
 /// their gradient hot path on PJRT (lazy per-thread compilation); the
@@ -224,19 +279,8 @@ pub fn build_data_parallel_with_runtime(
             let shards: Vec<(Mat, Vec<f64>)> = (0..parts)
                 .map(|p| (enc.blocks[p].encode_mat(x), enc.blocks[p].matvec(y)))
                 .collect();
-            let mut pjrt_attached = 0;
-            let workers: Vec<Box<dyn WorkerNode>> = (0..m)
-                .map(|w| {
-                    let p = map.partition_of(w);
-                    let mut worker = QuadWorker::new(shards[p].0.clone(), shards[p].1.clone());
-                    if let Some(idx) = runtime {
-                        worker.pjrt =
-                            crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
-                        pjrt_attached += usize::from(worker.pjrt.is_some());
-                    }
-                    Box::new(worker) as Box<dyn WorkerNode>
-                })
-                .collect();
+            let (workers, pjrt_attached) =
+                assemble_replicated_workers(&shards, &map, m, runtime);
             Ok(DataParallel {
                 workers,
                 assembler: GradAssembler { n, p: x.cols(), map },
@@ -252,25 +296,83 @@ pub fn build_data_parallel_with_runtime(
             // scheme has them, dense per-block products as the fallback.
             let sx_blocks = enc.encode_data(x);
             let sy_blocks = enc.encode_vec(y);
-            let mut pjrt_attached = 0;
-            let workers: Vec<Box<dyn WorkerNode>> = sx_blocks
-                .into_iter()
-                .zip(sy_blocks)
-                .map(|(mut sx, mut sy)| {
-                    sx.scale_inplace(norm);
-                    crate::linalg::scale(norm, &mut sy);
-                    let mut worker = QuadWorker::new(sx, sy);
-                    if let Some(idx) = runtime {
-                        worker.pjrt =
-                            crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
-                        pjrt_attached += usize::from(worker.pjrt.is_some());
-                    }
-                    Box::new(worker) as Box<dyn WorkerNode>
-                })
-                .collect();
+            let (workers, pjrt_attached) =
+                assemble_coded_workers(sx_blocks, sy_blocks, norm, runtime);
             Ok(DataParallel {
                 workers,
                 assembler: GradAssembler { n, p: x.cols(), map: ReplicationMap::new(m, 1) },
+                scheme,
+                beta: enc.beta,
+                pjrt_attached,
+            })
+        }
+    }
+}
+
+/// [`build_data_parallel_with_runtime`] over a streamed
+/// [`BlockSource`](crate::data::shard::BlockSource): encoded worker
+/// shards are assembled block-by-block via
+/// [`crate::encoding::stream::encode_data_streamed`], so the input
+/// dataset is never materialized as one `Mat` — peak resident data is
+/// one source block plus the per-worker shards being built.
+///
+/// Bit-identity contract: given a source streaming the same rows as an
+/// in-memory `(X, y)`, the workers (and therefore every trace computed
+/// through them) are **bit-identical** to
+/// [`build_data_parallel_with_runtime`] on that `(X, y)` — the
+/// streaming encoders continue the exact floating-point fold of the
+/// dense kernels (see `encoding::stream`), and everything after the
+/// encode (normalization, worker construction, PJRT attach) is the
+/// same code.
+pub fn build_data_parallel_streamed(
+    src: &dyn crate::data::shard::BlockSource,
+    scheme: Scheme,
+    m: usize,
+    beta: f64,
+    seed: u64,
+    runtime: Option<&crate::runtime::ArtifactIndex>,
+) -> Result<DataParallel> {
+    use crate::data::shard::assemble_targets;
+    use crate::encoding::stream::{encode_data_streamed, encode_vec_streamed};
+    let n = src.rows();
+    anyhow::ensure!(
+        src.has_targets(),
+        "data-parallel workers need targets y; the sharded dataset has none"
+    );
+    match scheme {
+        Scheme::Replication => {
+            let r = beta.round() as usize;
+            anyhow::ensure!(r >= 1 && m % r == 0, "replication needs r|m (r={r}, m={m})");
+            let map = ReplicationMap::new(m, r);
+            let parts = map.partitions();
+            let enc = crate::encoding::identity_encoding(n, parts);
+            let sx = encode_data_streamed(&enc, src)?;
+            let y = assemble_targets(src)?;
+            let shards: Vec<(Mat, Vec<f64>)> = sx
+                .into_iter()
+                .enumerate()
+                .map(|(p, sxp)| (sxp, enc.blocks[p].matvec(&y)))
+                .collect();
+            let (workers, pjrt_attached) =
+                assemble_replicated_workers(&shards, &map, m, runtime);
+            Ok(DataParallel {
+                workers,
+                assembler: GradAssembler { n, p: src.cols(), map },
+                scheme,
+                beta: r as f64,
+                pjrt_attached,
+            })
+        }
+        _ => {
+            let enc = Encoding::build(scheme, n, m, beta, seed)?;
+            let norm = 1.0 / enc.beta.sqrt();
+            let sx_blocks = encode_data_streamed(&enc, src)?;
+            let sy_blocks = encode_vec_streamed(&enc, src)?;
+            let (workers, pjrt_attached) =
+                assemble_coded_workers(sx_blocks, sy_blocks, norm, runtime);
+            Ok(DataParallel {
+                workers,
+                assembler: GradAssembler { n, p: src.cols(), map: ReplicationMap::new(m, 1) },
                 scheme,
                 beta: enc.beta,
                 pjrt_attached,

@@ -7,7 +7,14 @@
 //!   offline environment; DESIGN.md §5 documents the substitution).
 //! - [`rcv1like`] — rcv1.binary-like sparse two-class documents with
 //!   power-law feature frequencies.
+//! - [`shard`] — the out-of-core row-shard format (versioned binary
+//!   shards + JSON manifest) and the [`shard::BlockSource`] streaming
+//!   contract consumed by [`crate::encoding::stream`] and the driver's
+//!   sharded data path.
 
 pub mod movielens;
 pub mod rcv1like;
+pub mod shard;
 pub mod synth;
+
+pub use shard::{BlockSource, Manifest, MatSource, ShardStream, ShardWriter, ShardedSource};

@@ -1,0 +1,885 @@
+//! Out-of-core row-shard storage: the versioned on-disk format behind
+//! the paper's §4.2 "efficient mechanisms for encoding large-scale
+//! data" at dataset sizes that never fit one memory image.
+//!
+//! A *sharded dataset* is a directory containing
+//! - `manifest.json` — schema `coded-opt/shard-v1`: global shape
+//!   (`rows`, `cols`), targets flag, and one entry per shard file
+//!   (name, starting row, row count, payload checksum);
+//! - `shard-NNNNN.bin` — consecutive row blocks of the design matrix
+//!   `X` (row-major little-endian f64) plus, when targets are present,
+//!   the matching slice of `y`.
+//!
+//! ## Shard file layout (version 1)
+//!
+//! ```text
+//! offset  size          field
+//! 0       4             magic  b"CSHD"
+//! 4       4             u32 LE version (= 1)
+//! 8       8             u64 LE row0   (global row of the first row)
+//! 16      8             u64 LE rows   (rows in this shard)
+//! 24      8             u64 LE cols
+//! 32      1             has_targets (0 / 1)
+//! 33      rows·cols·8   X block, row-major f64 LE
+//! …       rows·8        y block (present iff has_targets)
+//! ```
+//!
+//! [`ShardWriter`] splits any row stream into fixed-size shards;
+//! [`ShardStream`] / [`ShardedSource`] read them back one block at a
+//! time. The [`BlockSource`] trait is the streaming contract the
+//! encode layer ([`crate::encoding::stream`]) and the driver's sharded
+//! data path consume: blocks arrive in ascending row order, and a
+//! source can be iterated any number of times (the FWHT encode path
+//! makes one pass per column panel). A consumer of this interface
+//! holds at most one block of the *input* at a time — the interface has
+//! no whole-matrix accessor — so whatever it builds (encoded worker
+//! partitions, streamed statistics) is assembled without the `n × p`
+//! input ever existing in memory.
+
+use std::fs;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::bench::json;
+use crate::linalg::Mat;
+use anyhow::{ensure, Context, Result};
+
+/// Manifest schema tag (bump [`SHARD_VERSION`] and this together).
+pub const SHARD_SCHEMA: &str = "coded-opt/shard-v1";
+
+/// Binary shard-file version.
+pub const SHARD_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 4] = b"CSHD";
+const MANIFEST_FILE: &str = "manifest.json";
+
+/// A re-iterable source of contiguous row blocks of `(X, y)`.
+///
+/// The streaming contract every out-of-core consumer relies on:
+/// - blocks cover rows `0..rows()` exactly once, in ascending order;
+/// - each callback sees one block of at most [`max_block_rows`] rows
+///   (`x.cols() == cols()`, `y.len() == x.rows()` when
+///   [`has_targets`], else `y` is empty);
+/// - the source can be re-iterated (multi-pass encodes).
+///
+/// [`max_block_rows`]: BlockSource::max_block_rows
+/// [`has_targets`]: BlockSource::has_targets
+pub trait BlockSource {
+    /// Total data rows n.
+    fn rows(&self) -> usize;
+
+    /// Data columns p.
+    fn cols(&self) -> usize;
+
+    /// Whether blocks carry a target slice `y`.
+    fn has_targets(&self) -> bool;
+
+    /// Upper bound on the rows of any yielded block — the resident-set
+    /// bound of the streaming pipeline.
+    fn max_block_rows(&self) -> usize;
+
+    /// Stream the blocks in ascending row order:
+    /// `f(row0, x_block, y_block)`.
+    fn for_each_block(
+        &self,
+        f: &mut dyn FnMut(usize, &Mat, &[f64]) -> Result<()>,
+    ) -> Result<()>;
+}
+
+/// Assemble the full target vector `y` from a source (n floats — the
+/// one full-length buffer the streaming pipeline keeps; it is O(n),
+/// never O(n·p)).
+pub fn assemble_targets(src: &dyn BlockSource) -> Result<Vec<f64>> {
+    ensure!(src.has_targets(), "data source has no target vector y");
+    let mut y = Vec::with_capacity(src.rows());
+    src.for_each_block(&mut |row0, _x, yb| {
+        ensure!(row0 == y.len(), "target blocks out of order");
+        y.extend_from_slice(yb);
+        Ok(())
+    })?;
+    ensure!(y.len() == src.rows(), "target stream short: {} of {}", y.len(), src.rows());
+    Ok(y)
+}
+
+/// In-memory [`BlockSource`]: view an existing `(X, y)` as a stream of
+/// `block_rows`-row blocks. The equivalence referee for the sharded
+/// path (same blocks, no files) and the bench harness's source.
+pub struct MatSource<'a> {
+    x: &'a Mat,
+    y: Option<&'a [f64]>,
+    block_rows: usize,
+}
+
+impl<'a> MatSource<'a> {
+    pub fn new(x: &'a Mat, y: Option<&'a [f64]>, block_rows: usize) -> Self {
+        assert!(block_rows >= 1, "block_rows must be ≥ 1");
+        if let Some(y) = y {
+            assert_eq!(y.len(), x.rows(), "X/y row mismatch");
+        }
+        MatSource { x, y, block_rows }
+    }
+}
+
+impl BlockSource for MatSource<'_> {
+    fn rows(&self) -> usize {
+        self.x.rows()
+    }
+
+    fn cols(&self) -> usize {
+        self.x.cols()
+    }
+
+    fn has_targets(&self) -> bool {
+        self.y.is_some()
+    }
+
+    fn max_block_rows(&self) -> usize {
+        self.block_rows.min(self.x.rows().max(1))
+    }
+
+    fn for_each_block(
+        &self,
+        f: &mut dyn FnMut(usize, &Mat, &[f64]) -> Result<()>,
+    ) -> Result<()> {
+        let n = self.x.rows();
+        let mut r0 = 0;
+        while r0 < n {
+            let r1 = (r0 + self.block_rows).min(n);
+            let xb = self.x.row_block(r0, r1);
+            let yb: &[f64] = match self.y {
+                Some(y) => &y[r0..r1],
+                None => &[],
+            };
+            f(r0, &xb, yb)?;
+            r0 = r1;
+        }
+        Ok(())
+    }
+}
+
+/// One shard file's manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardMeta {
+    /// File name relative to the dataset directory.
+    pub file: String,
+    /// Global row of the shard's first row.
+    pub row0: usize,
+    /// Rows in this shard.
+    pub rows: usize,
+    /// FNV-1a 64 checksum of the payload bytes (X then y).
+    pub checksum: u64,
+}
+
+/// The dataset manifest (`manifest.json`, schema `coded-opt/shard-v1`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub rows: usize,
+    pub cols: usize,
+    pub has_targets: bool,
+    /// The writer's shard-row target: every shard has exactly this many
+    /// rows except possibly the last.
+    pub shard_rows: usize,
+    pub shards: Vec<ShardMeta>,
+}
+
+impl Manifest {
+    /// Serialize to the `coded-opt/shard-v1` JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"schema\": \"{SHARD_SCHEMA}\",\n"));
+        out.push_str(&format!("  \"version\": {},\n", SHARD_VERSION));
+        out.push_str(&format!("  \"rows\": {},\n", self.rows));
+        out.push_str(&format!("  \"cols\": {},\n", self.cols));
+        out.push_str(&format!("  \"has_targets\": {},\n", self.has_targets));
+        out.push_str(&format!("  \"shard_rows\": {},\n", self.shard_rows));
+        out.push_str("  \"shards\": [\n");
+        for (i, s) in self.shards.iter().enumerate() {
+            // checksum as a hex string: the minimal JSON parser reads
+            // numbers as f64, which cannot hold a full 64-bit hash.
+            out.push_str(&format!(
+                "    {{\"file\": \"{}\", \"row0\": {}, \"rows\": {}, \
+                 \"checksum\": \"{:016x}\"}}{}",
+                json::escape(&s.file),
+                s.row0,
+                s.rows,
+                s.checksum,
+                if i + 1 < self.shards.len() { ",\n" } else { "\n" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Parse and structurally validate a manifest document.
+    pub fn parse_json(text: &str) -> Result<Manifest> {
+        let root = json::parse(text)?;
+        let obj = root.as_object().context("shard manifest: root must be an object")?;
+        let schema = json::get(obj, "schema")
+            .and_then(|v| v.as_str())
+            .context("shard manifest: missing schema")?;
+        ensure!(
+            schema == SHARD_SCHEMA,
+            "shard manifest: unknown schema '{schema}' (want {SHARD_SCHEMA})"
+        );
+        let version = json::get(obj, "version")
+            .and_then(|v| v.as_f64())
+            .context("shard manifest: missing version")? as u32;
+        ensure!(
+            version == SHARD_VERSION,
+            "shard manifest: unsupported version {version} (want {SHARD_VERSION})"
+        );
+        let num = |key: &str| -> Result<usize> {
+            Ok(json::get(obj, key)
+                .and_then(|v| v.as_f64())
+                .with_context(|| format!("shard manifest: missing {key}"))? as usize)
+        };
+        let rows = num("rows")?;
+        let cols = num("cols")?;
+        let shard_rows = num("shard_rows")?;
+        let has_targets = json::get(obj, "has_targets")
+            .and_then(|v| v.as_bool())
+            .context("shard manifest: missing has_targets")?;
+        let shards_v = json::get(obj, "shards")
+            .and_then(|v| v.as_array())
+            .context("shard manifest: missing shards array")?;
+        let mut shards = Vec::with_capacity(shards_v.len());
+        for v in shards_v {
+            let e = v.as_object().context("shard entry must be an object")?;
+            let file = json::get(e, "file")
+                .and_then(|v| v.as_str())
+                .context("shard entry: missing file")?
+                .to_string();
+            ensure!(
+                !file.contains('/') && !file.contains(".."),
+                "shard entry: file name '{file}' must be a plain name inside the dataset dir"
+            );
+            let fld = |key: &str| -> Result<f64> {
+                json::get(e, key)
+                    .and_then(|v| v.as_f64())
+                    .with_context(|| format!("shard entry: missing {key}"))
+            };
+            let checksum_hex = json::get(e, "checksum")
+                .and_then(|v| v.as_str())
+                .context("shard entry: missing checksum")?;
+            let checksum = u64::from_str_radix(checksum_hex, 16)
+                .with_context(|| format!("shard entry: bad checksum '{checksum_hex}'"))?;
+            shards.push(ShardMeta {
+                file,
+                row0: fld("row0")? as usize,
+                rows: fld("rows")? as usize,
+                checksum,
+            });
+        }
+        let m = Manifest { rows, cols, has_targets, shard_rows, shards };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural invariants: shards tile `0..rows` contiguously in
+    /// order, each at most `shard_rows` rows.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.cols >= 1, "shard manifest: cols must be ≥ 1");
+        ensure!(self.shard_rows >= 1, "shard manifest: shard_rows must be ≥ 1");
+        let mut next = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            ensure!(
+                s.row0 == next,
+                "shard manifest: shard #{i} starts at row {} (expected {next})",
+                s.row0
+            );
+            ensure!(s.rows >= 1, "shard manifest: shard #{i} is empty");
+            ensure!(
+                s.rows <= self.shard_rows,
+                "shard manifest: shard #{i} has {} rows > shard_rows {}",
+                s.rows,
+                self.shard_rows
+            );
+            next += s.rows;
+        }
+        ensure!(
+            next == self.rows,
+            "shard manifest: shards cover {next} rows, dataset declares {}",
+            self.rows
+        );
+        Ok(())
+    }
+}
+
+/// FNV-1a 64-bit over a byte stream (manifest payload checksums; fast,
+/// dependency-free, and good enough to catch truncation / corruption —
+/// not a cryptographic integrity guarantee).
+fn fnv1a64(acc: u64, bytes: &[u8]) -> u64 {
+    let mut h = acc;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Seed value for [`fnv1a64`] (the standard offset basis).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+fn f64s_to_le_bytes(vals: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn le_bytes_to_f64s(bytes: &[u8], out: &mut Vec<f64>) {
+    debug_assert_eq!(bytes.len() % 8, 0);
+    out.clear();
+    out.reserve(bytes.len() / 8);
+    for c in bytes.chunks_exact(8) {
+        out.push(f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]));
+    }
+}
+
+/// Streaming shard writer: feed it row blocks of any size (in order);
+/// it re-chunks them into `shard_rows`-row shard files and produces the
+/// manifest. Peak resident data: one shard buffer.
+pub struct ShardWriter {
+    dir: PathBuf,
+    cols: usize,
+    shard_rows: usize,
+    has_targets: bool,
+    /// Buffered rows not yet flushed (≤ shard_rows · cols values).
+    xbuf: Vec<f64>,
+    ybuf: Vec<f64>,
+    rows_written: usize,
+    shards: Vec<ShardMeta>,
+    finished: bool,
+}
+
+impl ShardWriter {
+    /// Create a writer into `dir` (created if missing; an existing
+    /// manifest there is an error — shard sets are immutable).
+    pub fn create(
+        dir: impl AsRef<Path>,
+        cols: usize,
+        shard_rows: usize,
+        has_targets: bool,
+    ) -> Result<ShardWriter> {
+        ensure!(cols >= 1, "shard writer: cols must be ≥ 1");
+        ensure!(shard_rows >= 1, "shard writer: shard_rows must be ≥ 1");
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating shard dir {}", dir.display()))?;
+        let manifest = dir.join(MANIFEST_FILE);
+        ensure!(
+            !manifest.exists(),
+            "shard dir {} already holds a dataset (shard sets are immutable; \
+             write to a fresh directory)",
+            dir.display()
+        );
+        Ok(ShardWriter {
+            dir,
+            cols,
+            shard_rows,
+            has_targets,
+            xbuf: Vec::new(),
+            ybuf: Vec::new(),
+            rows_written: 0,
+            shards: Vec::new(),
+            finished: false,
+        })
+    }
+
+    /// Append a row block (and its target slice when the writer was
+    /// created with targets).
+    pub fn append(&mut self, x: &Mat, y: &[f64]) -> Result<()> {
+        ensure!(!self.finished, "shard writer already finished");
+        ensure!(
+            x.cols() == self.cols,
+            "shard writer: block has {} cols, want {}",
+            x.cols(),
+            self.cols
+        );
+        if self.has_targets {
+            ensure!(y.len() == x.rows(), "shard writer: y block length mismatch");
+        } else {
+            ensure!(y.is_empty(), "shard writer: unexpected targets (created without)");
+        }
+        self.xbuf.extend_from_slice(x.as_slice());
+        self.ybuf.extend_from_slice(y);
+        while self.xbuf.len() >= self.shard_rows * self.cols {
+            self.flush_shard(self.shard_rows)?;
+        }
+        Ok(())
+    }
+
+    /// Flush the first `rows` buffered rows into the next shard file.
+    fn flush_shard(&mut self, rows: usize) -> Result<()> {
+        let nvals = rows * self.cols;
+        let file = format!("shard-{:05}.bin", self.shards.len());
+        let path = self.dir.join(&file);
+        let f = fs::File::create(&path)
+            .with_context(|| format!("creating shard file {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&SHARD_VERSION.to_le_bytes())?;
+        w.write_all(&(self.rows_written as u64).to_le_bytes())?;
+        w.write_all(&(rows as u64).to_le_bytes())?;
+        w.write_all(&(self.cols as u64).to_le_bytes())?;
+        w.write_all(&[u8::from(self.has_targets)])?;
+        let mut bytes = Vec::new();
+        f64s_to_le_bytes(&self.xbuf[..nvals], &mut bytes);
+        let mut checksum = fnv1a64(FNV_OFFSET, &bytes);
+        w.write_all(&bytes)?;
+        if self.has_targets {
+            f64s_to_le_bytes(&self.ybuf[..rows], &mut bytes);
+            checksum = fnv1a64(checksum, &bytes);
+            w.write_all(&bytes)?;
+        }
+        w.flush()?;
+        self.xbuf.drain(..nvals);
+        if self.has_targets {
+            self.ybuf.drain(..rows);
+        }
+        self.shards.push(ShardMeta { file, row0: self.rows_written, rows, checksum });
+        self.rows_written += rows;
+        Ok(())
+    }
+
+    /// Flush the tail shard, write `manifest.json`, and return the
+    /// manifest.
+    pub fn finish(mut self) -> Result<Manifest> {
+        ensure!(!self.finished, "shard writer already finished");
+        let tail_rows = self.xbuf.len() / self.cols;
+        if tail_rows > 0 {
+            self.flush_shard(tail_rows)?;
+        }
+        ensure!(self.rows_written > 0, "shard writer: no rows appended");
+        self.finished = true;
+        let manifest = Manifest {
+            rows: self.rows_written,
+            cols: self.cols,
+            has_targets: self.has_targets,
+            shard_rows: self.shard_rows,
+            shards: std::mem::take(&mut self.shards),
+        };
+        manifest.validate()?;
+        fs::write(self.dir.join(MANIFEST_FILE), manifest.to_json())
+            .with_context(|| format!("writing manifest in {}", self.dir.display()))?;
+        Ok(manifest)
+    }
+}
+
+/// Shard an in-memory dataset: the general writer entry point
+/// (`coded-opt shard` uses the fully streaming generator in
+/// [`super::synth`] instead where one exists).
+pub fn shard_dataset(
+    x: &Mat,
+    y: Option<&[f64]>,
+    dir: impl AsRef<Path>,
+    shard_rows: usize,
+) -> Result<Manifest> {
+    let mut w = ShardWriter::create(&dir, x.cols(), shard_rows, y.is_some())?;
+    // Feed in shard-sized blocks so the writer buffer stays small.
+    let src = MatSource::new(x, y, shard_rows);
+    src.for_each_block(&mut |_r0, xb, yb| w.append(xb, yb))?;
+    w.finish()
+}
+
+/// One decoded block from a [`ShardStream`].
+pub struct ShardBlock {
+    /// Global row of the block's first row.
+    pub row0: usize,
+    pub x: Mat,
+    /// Empty when the dataset has no targets.
+    pub y: Vec<f64>,
+}
+
+/// Sequential reader over a sharded dataset: yields one [`ShardBlock`]
+/// per shard file, verifying headers and checksums against the
+/// manifest. Construct via [`ShardedSource::stream`].
+pub struct ShardStream<'a> {
+    source: &'a ShardedSource,
+    next: usize,
+}
+
+impl Iterator for ShardStream<'_> {
+    type Item = Result<ShardBlock>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.next >= self.source.manifest.shards.len() {
+            return None;
+        }
+        let i = self.next;
+        self.next += 1;
+        Some(self.source.read_shard(i))
+    }
+}
+
+/// An opened sharded dataset: the manifest plus the directory, usable
+/// as a re-iterable [`BlockSource`]. Opening reads ONLY the manifest;
+/// shard payloads are read one block at a time during streaming, so
+/// peak resident data is one shard, not the dataset.
+#[derive(Clone, Debug)]
+pub struct ShardedSource {
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl ShardedSource {
+    /// Open a dataset directory (reads + validates `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<ShardedSource> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join(MANIFEST_FILE);
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading shard manifest {}", path.display()))?;
+        // (map_err, not with_context: the inner error is already an
+        // anyhow::Error, and Context is only for std errors / options)
+        let manifest = Manifest::parse_json(&text)
+            .map_err(|e| e.context(format!("parsing shard manifest {}", path.display())))?;
+        Ok(ShardedSource { dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Iterate the shards once, in row order.
+    pub fn stream(&self) -> ShardStream<'_> {
+        ShardStream { source: self, next: 0 }
+    }
+
+    /// Read + verify shard `i`.
+    fn read_shard(&self, i: usize) -> Result<ShardBlock> {
+        let meta = &self.manifest.shards[i];
+        let path = self.dir.join(&meta.file);
+        let f = fs::File::open(&path)
+            .with_context(|| format!("opening shard {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let mut head = [0u8; 33];
+        r.read_exact(&mut head)
+            .with_context(|| format!("reading shard header {}", path.display()))?;
+        ensure!(&head[0..4] == MAGIC, "shard {}: bad magic", meta.file);
+        let version = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
+        ensure!(
+            version == SHARD_VERSION,
+            "shard {}: unsupported version {version} (want {SHARD_VERSION})",
+            meta.file
+        );
+        let rd_u64 = |o: usize| {
+            u64::from_le_bytes([
+                head[o],
+                head[o + 1],
+                head[o + 2],
+                head[o + 3],
+                head[o + 4],
+                head[o + 5],
+                head[o + 6],
+                head[o + 7],
+            ]) as usize
+        };
+        let (row0, rows, cols) = (rd_u64(8), rd_u64(16), rd_u64(24));
+        let has_targets = head[32] != 0;
+        ensure!(
+            row0 == meta.row0 && rows == meta.rows,
+            "shard {}: header rows [{row0}, {row0}+{rows}) disagree with manifest \
+             [{}, {}+{})",
+            meta.file,
+            meta.row0,
+            meta.row0,
+            meta.rows
+        );
+        ensure!(
+            cols == self.manifest.cols && has_targets == self.manifest.has_targets,
+            "shard {}: header shape disagrees with manifest",
+            meta.file
+        );
+        let mut bytes = vec![0u8; rows * cols * 8];
+        r.read_exact(&mut bytes)
+            .with_context(|| format!("reading shard payload {}", path.display()))?;
+        let mut checksum = fnv1a64(FNV_OFFSET, &bytes);
+        let mut xvals = Vec::new();
+        le_bytes_to_f64s(&bytes, &mut xvals);
+        let x = Mat::from_vec(rows, cols, xvals);
+        let mut y = Vec::new();
+        if has_targets {
+            let mut ybytes = vec![0u8; rows * 8];
+            r.read_exact(&mut ybytes)
+                .with_context(|| format!("reading shard targets {}", path.display()))?;
+            checksum = fnv1a64(checksum, &ybytes);
+            le_bytes_to_f64s(&ybytes, &mut y);
+        }
+        let mut tail = [0u8; 1];
+        ensure!(
+            r.read(&mut tail)? == 0,
+            "shard {}: trailing bytes after declared payload",
+            meta.file
+        );
+        ensure!(
+            checksum == meta.checksum,
+            "shard {}: checksum mismatch (file corrupt or manifest stale)",
+            meta.file
+        );
+        Ok(ShardBlock { row0, x, y })
+    }
+
+    /// Load the entire dataset into memory (tests / small datasets /
+    /// explicit opt-out of streaming). NOT used by the streaming encode
+    /// or driver paths — those consume [`BlockSource`] blocks.
+    pub fn load_dense(&self) -> Result<(Mat, Option<Vec<f64>>)> {
+        let mut x = Mat::zeros(self.manifest.rows, self.manifest.cols);
+        let mut y =
+            if self.manifest.has_targets { Some(vec![0.0; self.manifest.rows]) } else { None };
+        for block in self.stream() {
+            let b = block?;
+            for r in 0..b.x.rows() {
+                x.row_mut(b.row0 + r).copy_from_slice(b.x.row(r));
+            }
+            if let Some(y) = y.as_mut() {
+                y[b.row0..b.row0 + b.y.len()].copy_from_slice(&b.y);
+            }
+        }
+        Ok((x, y))
+    }
+
+    /// Largest eigenvalue of `XᵀX` by streamed power iteration — the
+    /// smoothness-constant estimate for step-size defaults on sharded
+    /// runs (`Σ_b X_bᵀ(X_b·v)` per iteration; O(p + block) memory).
+    /// Matches [`Mat::gram_spectral_norm`] to power-iteration accuracy,
+    /// not bit-for-bit (the fold crosses block boundaries).
+    pub fn gram_spectral_norm(&self, iters: usize, seed: u64) -> Result<f64> {
+        let p = self.manifest.cols;
+        let mut rng = crate::rng::Pcg64::new(seed);
+        let mut v: Vec<f64> = (0..p).map(|_| rng.next_f64() - 0.5).collect();
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let mut atav = vec![0.0; p];
+            for block in self.stream() {
+                let b = block?;
+                let u = b.x.matvec(&v);
+                let part = b.x.matvec_t(&u);
+                crate::linalg::axpy(1.0, &part, &mut atav);
+            }
+            let norm = crate::linalg::norm2(&atav);
+            if norm == 0.0 {
+                return Ok(0.0);
+            }
+            crate::linalg::scale(1.0 / norm, &mut atav);
+            lambda = norm;
+            v = atav;
+        }
+        Ok(lambda)
+    }
+
+    /// `1/(2n)·‖Xw − y‖²` computed in one streaming pass — the
+    /// least-squares data term of ridge / LASSO objectives for sharded
+    /// runs, without materializing `X`. Accumulates residual energy in
+    /// ascending row order (one sequential fold).
+    pub fn half_mse(&self, w: &[f64]) -> Result<f64> {
+        ensure!(self.manifest.has_targets, "dataset has no targets: cannot evaluate");
+        ensure!(w.len() == self.manifest.cols, "iterate length mismatch");
+        let mut acc = 0.0;
+        for block in self.stream() {
+            let b = block?;
+            let pred = b.x.matvec(w);
+            for (p, yi) in pred.iter().zip(&b.y) {
+                let r = p - yi;
+                acc += r * r;
+            }
+        }
+        Ok(acc / (2.0 * self.manifest.rows as f64))
+    }
+}
+
+impl BlockSource for ShardedSource {
+    fn rows(&self) -> usize {
+        self.manifest.rows
+    }
+
+    fn cols(&self) -> usize {
+        self.manifest.cols
+    }
+
+    fn has_targets(&self) -> bool {
+        self.manifest.has_targets
+    }
+
+    fn max_block_rows(&self) -> usize {
+        self.manifest.shard_rows
+    }
+
+    fn for_each_block(
+        &self,
+        f: &mut dyn FnMut(usize, &Mat, &[f64]) -> Result<()>,
+    ) -> Result<()> {
+        for block in self.stream() {
+            let b = block?;
+            f(b.row0, &b.x, &b.y)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_linear;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("coded-opt-shard-test-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn write_stream_roundtrip_is_bit_identical() {
+        let (x, y, _) = gaussian_linear(53, 7, 0.3, 11);
+        let dir = tmpdir("roundtrip");
+        let manifest = shard_dataset(&x, Some(&y), &dir, 8).unwrap();
+        assert_eq!(manifest.rows, 53);
+        assert_eq!(manifest.cols, 7);
+        assert_eq!(manifest.shards.len(), 7, "⌈53/8⌉ shards");
+        assert_eq!(manifest.shards.last().unwrap().rows, 5, "tail shard");
+        let src = ShardedSource::open(&dir).unwrap();
+        assert_eq!(src.manifest(), &manifest);
+        let (x2, y2) = src.load_dense().unwrap();
+        assert_eq!(x.as_slice(), x2.as_slice(), "X bits must survive the disk trip");
+        assert_eq!(y, y2.unwrap(), "y bits must survive the disk trip");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn blocks_are_bounded_and_ordered() {
+        let (x, y, _) = gaussian_linear(40, 3, 0.1, 3);
+        let dir = tmpdir("bounded");
+        shard_dataset(&x, Some(&y), &dir, 16).unwrap();
+        let src = ShardedSource::open(&dir).unwrap();
+        let mut next = 0;
+        src.for_each_block(&mut |row0, xb, yb| {
+            assert_eq!(row0, next, "ascending contiguous blocks");
+            assert!(xb.rows() <= src.max_block_rows(), "resident set bounded by shard size");
+            assert_eq!(yb.len(), xb.rows());
+            next += xb.rows();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(next, 40);
+        // multi-pass: a second full iteration sees the same rows
+        let mut passes = 0;
+        src.for_each_block(&mut |_, xb, _| {
+            passes += xb.rows();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(passes, 40);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let (x, y, _) = gaussian_linear(20, 4, 0.1, 5);
+        let dir = tmpdir("corrupt");
+        let manifest = shard_dataset(&x, Some(&y), &dir, 8).unwrap();
+        let victim = dir.join(&manifest.shards[1].file);
+        let mut bytes = fs::read(&victim).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        fs::write(&victim, &bytes).unwrap();
+        let src = ShardedSource::open(&dir).unwrap();
+        let err = src.load_dense().unwrap_err();
+        assert!(err.to_string().contains("checksum"), "got: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_json_roundtrip_and_validation() {
+        let m = Manifest {
+            rows: 10,
+            cols: 3,
+            has_targets: true,
+            shard_rows: 6,
+            shards: vec![
+                ShardMeta { file: "shard-00000.bin".into(), row0: 0, rows: 6, checksum: 1 },
+                ShardMeta { file: "shard-00001.bin".into(), row0: 6, rows: 4, checksum: 2 },
+            ],
+        };
+        let back = Manifest::parse_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+        // non-contiguous shards rejected
+        let mut bad = m.clone();
+        bad.shards[1].row0 = 7;
+        assert!(bad.validate().is_err());
+        // wrong total rejected
+        let mut bad = m.clone();
+        bad.rows = 11;
+        assert!(bad.validate().is_err());
+        // path traversal rejected
+        let evil = m.to_json().replace("shard-00001.bin", "../evil.bin");
+        assert!(Manifest::parse_json(&evil).is_err());
+    }
+
+    #[test]
+    fn writer_rechunks_arbitrary_append_sizes() {
+        let (x, y, _) = gaussian_linear(30, 5, 0.2, 7);
+        let dir = tmpdir("rechunk");
+        let mut w = ShardWriter::create(&dir, 5, 12, true).unwrap();
+        // feed blocks of irregular sizes: 1, 2, 3, … rows
+        let mut r0 = 0;
+        let mut step = 1;
+        while r0 < 30 {
+            let r1 = (r0 + step).min(30);
+            w.append(&x.row_block(r0, r1), &y[r0..r1]).unwrap();
+            r0 = r1;
+            step += 1;
+        }
+        let manifest = w.finish().unwrap();
+        assert_eq!(manifest.shards.len(), 3, "30 rows at 12/shard → 12+12+6");
+        let (x2, y2) = ShardedSource::open(&dir).unwrap().load_dense().unwrap();
+        assert_eq!(x.as_slice(), x2.as_slice());
+        assert_eq!(y, y2.unwrap());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn existing_dataset_is_not_overwritten() {
+        let (x, y, _) = gaussian_linear(10, 2, 0.1, 9);
+        let dir = tmpdir("immutable");
+        shard_dataset(&x, Some(&y), &dir, 4).unwrap();
+        let err = shard_dataset(&x, Some(&y), &dir, 4).unwrap_err();
+        assert!(err.to_string().contains("immutable"), "got: {err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn half_mse_matches_in_memory() {
+        let (x, y, _) = gaussian_linear(25, 4, 0.3, 13);
+        let dir = tmpdir("mse");
+        shard_dataset(&x, Some(&y), &dir, 8).unwrap();
+        let src = ShardedSource::open(&dir).unwrap();
+        let w = vec![0.3, -0.1, 0.2, 0.5];
+        let pred = x.matvec(&w);
+        let exact: f64 =
+            pred.iter().zip(&y).map(|(p, yi)| (p - yi) * (p - yi)).sum::<f64>() / 50.0;
+        let got = src.half_mse(&w).unwrap();
+        assert!((got - exact).abs() <= 1e-12 * exact.abs().max(1.0), "{got} vs {exact}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mat_source_streams_without_targets() {
+        let (x, _, _) = gaussian_linear(9, 2, 0.1, 1);
+        let src = MatSource::new(&x, None, 4);
+        assert!(!src.has_targets());
+        assert!(assemble_targets(&src).is_err());
+        let mut rows = 0;
+        src.for_each_block(&mut |_, xb, yb| {
+            assert!(yb.is_empty());
+            rows += xb.rows();
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(rows, 9);
+    }
+}

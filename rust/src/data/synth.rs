@@ -45,6 +45,55 @@ pub fn sparse_recovery(
     (x, y, w_star)
 }
 
+/// [`gaussian_linear`] streamed straight to a shard directory,
+/// **bit-identical** to the in-memory ensemble without ever holding the
+/// full `X`. Returns the manifest and `w*`.
+///
+/// The in-memory generator draws one PRNG stream in the order
+/// `X` (row-major) → `w*` → per-row noise. Streaming replays exactly
+/// that order with two cursors over the same stream:
+/// - pass 1 advances a throwaway cursor through the `n·p` design draws
+///   (one shard buffer at a time), then draws `w*` — leaving the cursor
+///   parked exactly where the noise draws begin;
+/// - pass 2 re-draws the design rows shard-by-shard from a fresh
+///   cursor, computes `y = X_shard·w*` with the same per-row dot, and
+///   adds noise from the parked pass-1 cursor.
+///
+/// Peak resident data: one `shard_rows × p` block plus `w*`.
+pub fn gaussian_linear_shard_to(
+    dir: impl AsRef<std::path::Path>,
+    n: usize,
+    p: usize,
+    sigma: f64,
+    seed: u64,
+    shard_rows: usize,
+) -> anyhow::Result<(crate::data::shard::Manifest, Vec<f64>)> {
+    use crate::data::shard::ShardWriter;
+    anyhow::ensure!(n > 0 && p > 0, "n and p must be positive");
+    // Pass 1: advance past the n·p design draws, then take w*.
+    let mut rng_noise = Pcg64::with_stream(seed, 0xda7a);
+    for _ in 0..n * p {
+        let _ = Normal::sample_standard(&mut rng_noise);
+    }
+    let w_star: Vec<f64> = (0..p).map(|_| Normal::sample_standard(&mut rng_noise)).collect();
+    // rng_noise is now parked at the first noise draw.
+    let mut rng_x = Pcg64::with_stream(seed, 0xda7a);
+    let noise = Normal::new(0.0, sigma);
+    let mut writer = ShardWriter::create(dir, p, shard_rows, true)?;
+    let mut r0 = 0;
+    while r0 < n {
+        let rows = shard_rows.min(n - r0);
+        let xb = Mat::from_fn(rows, p, |_, _| Normal::sample_standard(&mut rng_x));
+        let mut yb = xb.matvec(&w_star);
+        for v in yb.iter_mut() {
+            *v += noise.sample(&mut rng_noise);
+        }
+        writer.append(&xb, &yb)?;
+        r0 += rows;
+    }
+    Ok((writer.finish()?, w_star))
+}
+
 /// Random train/test row split: returns (train_idx, test_idx) with
 /// `test_frac` of rows held out.
 pub fn split_rows(n: usize, test_frac: f64, seed: u64) -> (Vec<usize>, Vec<usize>) {
@@ -108,6 +157,23 @@ mod tests {
         assert_eq!(xs.rows(), 2);
         assert_eq!(xs.row(0), x.row(2));
         assert_eq!(ys[1], y[5]);
+    }
+
+    #[test]
+    fn streamed_generation_is_bit_identical_to_in_memory() {
+        let (n, p, sigma, seed) = (37, 5, 0.4, 21);
+        let (x, y, w) = gaussian_linear(n, p, sigma, seed);
+        let dir = std::env::temp_dir()
+            .join(format!("coded-opt-synth-stream-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (manifest, w2) = gaussian_linear_shard_to(&dir, n, p, sigma, seed, 8).unwrap();
+        assert_eq!(manifest.rows, n);
+        assert_eq!(w, w2, "w* must replay bit-identically");
+        let (x2, y2) =
+            crate::data::shard::ShardedSource::open(&dir).unwrap().load_dense().unwrap();
+        assert_eq!(x.as_slice(), x2.as_slice(), "streamed X bits");
+        assert_eq!(y, y2.unwrap(), "streamed y bits");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -38,6 +38,22 @@ pub fn is_crashed(delay: f64) -> bool {
     delay.is_infinite()
 }
 
+/// Normalize a sampled delay at the cluster boundary: NaN (e.g. a
+/// hand-edited replay tape, or a future transform composing `0·∞`)
+/// becomes [`CRASHED`] — an unusable sample is an erasure, which the
+/// wait-for-k gather already handles deterministically — and negative
+/// delays clamp to 0 (time travel would reorder arrivals below the
+/// compute floor). Finite non-negative samples and `+∞` pass through
+/// unchanged. Both engines call this on every sample, so a NaN can
+/// never reach `SimCluster`'s arrival sort (which additionally uses the
+/// total order `f64::total_cmp`, not a panicking `partial_cmp`).
+pub fn sanitize_delay(delay: f64) -> f64 {
+    if delay.is_nan() {
+        return CRASHED;
+    }
+    delay.max(0.0)
+}
+
 /// Extra latency injected on top of a worker's compute time.
 pub trait DelayModel: Send {
     /// Delay in seconds for worker `i` at iteration `t`.

@@ -75,7 +75,10 @@ use std::cell::RefCell;
 use crate::cluster::{Gather, SimCluster, ThreadCluster, WorkerNode};
 use crate::config::{DelaySpec, Scheme};
 use crate::coordinator::bcd::{build_model_parallel, logistic_phi, quadratic_phi};
-use crate::coordinator::{build_data_parallel_with_runtime, EvalFn, GradAssembler};
+use crate::coordinator::{
+    build_data_parallel_streamed, build_data_parallel_with_runtime, EvalFn, GradAssembler,
+};
+use crate::data::shard::{BlockSource, ShardedSource};
 use crate::delay::{from_spec, DelayModel, NoDelay};
 use crate::encoding::partition_bounds;
 use crate::linalg::Mat;
@@ -123,6 +126,28 @@ impl<'a> Problem<'a> {
     pub fn loss(&self) -> Loss<'a> {
         self.loss
     }
+}
+
+/// Where an [`Experiment`] reads its dataset from.
+///
+/// - [`DataSource::InMemory`] — a borrowed [`Problem`] (the historical
+///   path; every solver supported).
+/// - [`DataSource::Sharded`] — an out-of-core
+///   [`ShardedSource`]: the encoded worker shards are
+///   assembled block-by-block from disk
+///   ([`crate::encoding::stream`]) and the input matrix is never
+///   materialized as one `Mat`. Sharded datasets carry targets and are
+///   least-squares problems; they drive the data-parallel solvers
+///   ([`Gd`] / [`Lbfgs`] / [`Prox`]) and the [`AsyncGd`] baseline.
+///   [`Bcd`] / [`AsyncBcd`] need *column* access (model parallelism)
+///   and reject a sharded source with a loud error.
+///
+/// Bit-identity: a sharded run produces traces bit-identical to the
+/// same experiment run from the equivalent in-memory dataset (same
+/// seed / scheme / solver) — pinned by `rust/tests/shard_pipeline.rs`.
+pub enum DataSource<'a> {
+    InMemory(Problem<'a>),
+    Sharded(ShardedSource),
 }
 
 /// Cluster engine selection.
@@ -176,7 +201,7 @@ pub struct RunOutput {
 /// Hadamard scheme, `m = 8`, `k = m`, `β = 2`, seed 42, no injected
 /// delay, virtual-clock engine with the [`SimCluster`] default timing.
 pub struct Experiment<'a> {
-    problem: Problem<'a>,
+    source: DataSource<'a>,
     scheme: Scheme,
     m: usize,
     k: Option<usize>,
@@ -208,8 +233,16 @@ pub struct Experiment<'a> {
 
 impl<'a> Experiment<'a> {
     pub fn new(problem: Problem<'a>) -> Self {
+        Self::data_source(DataSource::InMemory(problem))
+    }
+
+    /// Construct from any [`DataSource`] — the in-memory [`Problem`]
+    /// path ([`Experiment::new`] is sugar for it) or an out-of-core
+    /// [`ShardedSource`] whose worker shards are encoded
+    /// block-by-block from disk.
+    pub fn data_source(source: DataSource<'a>) -> Self {
         Experiment {
-            problem,
+            source,
             scheme: Scheme::Hadamard,
             m: 8,
             k: None,
@@ -230,6 +263,11 @@ impl<'a> Experiment<'a> {
             eval: None,
             w0: None,
         }
+    }
+
+    /// Sugar for [`Experiment::data_source`] with a sharded dataset.
+    pub fn sharded(source: ShardedSource) -> Self {
+        Self::data_source(DataSource::Sharded(source))
     }
 
     /// Encoding scheme (paper §4). Default: Hadamard.
@@ -483,12 +521,18 @@ impl<'e, 'a> Ctx<'e, 'a> {
 
     /// Data rows n.
     pub fn n(&self) -> usize {
-        self.exp.problem.x.rows()
+        match &self.exp.source {
+            DataSource::InMemory(prob) => prob.x.rows(),
+            DataSource::Sharded(src) => src.rows(),
+        }
     }
 
     /// Model dimension p.
     pub fn p(&self) -> usize {
-        self.exp.problem.x.cols()
+        match &self.exp.source {
+            DataSource::InMemory(prob) => prob.x.cols(),
+            DataSource::Sharded(src) => src.cols(),
+        }
     }
 
     pub fn secs_per_unit(&self) -> f64 {
@@ -578,8 +622,22 @@ impl<'e, 'a> Ctx<'e, 'a> {
         Ok(())
     }
 
-    fn require_y(&self, who: &str) -> Result<&'a [f64]> {
-        match self.exp.problem.loss {
+    /// The in-memory problem, or a loud error naming the solver when
+    /// the experiment reads from a sharded source.
+    fn require_in_memory(&self, who: &str) -> Result<&'e Problem<'a>> {
+        let exp: &'e Experiment<'a> = self.exp;
+        match &exp.source {
+            DataSource::InMemory(prob) => Ok(prob),
+            DataSource::Sharded(_) => anyhow::bail!(
+                "{who} needs column access to the data matrix, which a sharded \
+                 (row-streamed) source cannot provide; load the dataset in \
+                 memory (Experiment::new) for this solver"
+            ),
+        }
+    }
+
+    fn require_y(&self, prob: &Problem<'a>, who: &str) -> Result<&'a [f64]> {
+        match prob.loss {
             Loss::Quadratic { y } => Ok(y),
             Loss::Logistic => anyhow::bail!(
                 "{who} need a least-squares problem (Problem::least_squares); \
@@ -617,19 +675,34 @@ impl<'e, 'a> Ctx<'e, 'a> {
 
     /// Build the encoded data-parallel pipeline: worker shards
     /// `(S̄_iX, S̄_iy)` behind a gathered cluster, plus the master-side
-    /// assembler.
+    /// assembler. A sharded source streams its blocks through
+    /// [`build_data_parallel_streamed`] — the input matrix is never
+    /// materialized, and the resulting workers are bit-identical to the
+    /// in-memory build of the same rows.
     pub fn data_parallel(&mut self) -> Result<(Box<dyn Gather>, GradAssembler)> {
         let exp = self.exp;
-        let y = self.require_y("data-parallel solvers")?;
-        let dp = build_data_parallel_with_runtime(
-            exp.problem.x,
-            y,
-            exp.scheme,
-            exp.m,
-            exp.beta,
-            exp.seed,
-            exp.runtime,
-        )?;
+        let dp = match &exp.source {
+            DataSource::InMemory(prob) => {
+                let y = self.require_y(prob, "data-parallel solvers")?;
+                build_data_parallel_with_runtime(
+                    prob.x,
+                    y,
+                    exp.scheme,
+                    exp.m,
+                    exp.beta,
+                    exp.seed,
+                    exp.runtime,
+                )?
+            }
+            DataSource::Sharded(src) => build_data_parallel_streamed(
+                src,
+                exp.scheme,
+                exp.m,
+                exp.beta,
+                exp.seed,
+                exp.runtime,
+            )?,
+        };
         self.pjrt_attached = dp.pjrt_attached;
         self.beta = dp.beta;
         let assembler = dp.assembler.clone();
@@ -638,11 +711,14 @@ impl<'e, 'a> Ctx<'e, 'a> {
 
     /// Build the encoded model-parallel pipeline: per-worker column
     /// blocks `A_i = X·S̄_iᵀ` with the loss's `∇φ` baked in.
+    /// Model parallelism partitions *columns*, which a row-streamed
+    /// sharded source cannot serve — rejected with a loud error.
     pub fn model_parallel(&mut self, step: f64, lambda: f64) -> Result<ModelParallelParts> {
         let exp = self.exp;
-        let mp = match exp.problem.loss {
+        let prob = self.require_in_memory("model-parallel BCD")?;
+        let mp = match prob.loss {
             Loss::Quadratic { y } => build_model_parallel(
-                exp.problem.x,
+                prob.x,
                 exp.scheme,
                 exp.m,
                 exp.beta,
@@ -652,7 +728,7 @@ impl<'e, 'a> Ctx<'e, 'a> {
                 quadratic_phi(y.to_vec()),
             )?,
             Loss::Logistic => build_model_parallel(
-                exp.problem.x,
+                prob.x,
                 exp.scheme,
                 exp.m,
                 exp.beta,
@@ -674,34 +750,64 @@ impl<'e, 'a> Ctx<'e, 'a> {
     }
 
     /// Uncoded row shards `(X_i, y_i)` for the async data-parallel
-    /// baseline.
+    /// baseline. A sharded source assembles each partition from its
+    /// streamed blocks (partition boundaries are row ranges, so each
+    /// shard lands in exactly the partitions it overlaps) — bit-identical
+    /// rows to the in-memory `row_block` slicing.
     pub fn uncoded_row_shards(&self) -> Result<Vec<(Mat, Vec<f64>)>> {
-        let y = self.require_y("async gradient descent")?;
-        let x = self.exp.problem.x;
-        let bounds = partition_bounds(x.rows(), self.exp.m);
-        Ok(bounds
-            .windows(2)
-            .map(|w| (x.row_block(w[0], w[1]), y[w[0]..w[1]].to_vec()))
-            .collect())
+        match &self.exp.source {
+            DataSource::InMemory(prob) => {
+                let y = self.require_y(prob, "async gradient descent")?;
+                let x = prob.x;
+                let bounds = partition_bounds(x.rows(), self.exp.m);
+                Ok(bounds
+                    .windows(2)
+                    .map(|w| (x.row_block(w[0], w[1]), y[w[0]..w[1]].to_vec()))
+                    .collect())
+            }
+            DataSource::Sharded(src) => {
+                anyhow::ensure!(
+                    src.has_targets(),
+                    "async gradient descent needs targets y; the sharded dataset has none"
+                );
+                let bounds = partition_bounds(src.rows(), self.exp.m);
+                let mut parts: Vec<(Mat, Vec<f64>)> = bounds
+                    .windows(2)
+                    .map(|w| (Mat::zeros(w[1] - w[0], src.cols()), vec![0.0; w[1] - w[0]]))
+                    .collect();
+                src.for_each_block(&mut |row0, xb, yb| {
+                    for r in 0..xb.rows() {
+                        let g = row0 + r; // global row → partition index
+                        let pi = bounds.partition_point(|&b| b <= g) - 1;
+                        let local = g - bounds[pi];
+                        parts[pi].0.row_mut(local).copy_from_slice(xb.row(r));
+                        parts[pi].1[local] = yb[r];
+                    }
+                    Ok(())
+                })?;
+                Ok(parts)
+            }
+        }
     }
 
     /// Uncoded column blocks `X_{:,B_i}` for the async model-parallel
     /// baseline — contiguous ranges, so each block is a straight per-row
-    /// memcpy with no index buffer.
-    pub fn uncoded_col_blocks(&self) -> Vec<Mat> {
-        let x = self.exp.problem.x;
+    /// memcpy with no index buffer. Column access ⇒ in-memory only.
+    pub fn uncoded_col_blocks(&self) -> Result<Vec<Mat>> {
+        let x = self.require_in_memory("async BCD")?.x;
         let bounds = partition_bounds(x.cols(), self.exp.m);
-        bounds.windows(2).map(|w| x.col_block(w[0], w[1])).collect()
+        Ok(bounds.windows(2).map(|w| x.col_block(w[0], w[1])).collect())
     }
 
     /// `∇φ` of the problem's loss as a callable over the n-vector `Xw` —
     /// the same factories the BCD workers are built from, so the coded
     /// and async paths can never drift apart on the gradient formula.
-    pub fn grad_phi(&self) -> Box<dyn Fn(&[f64]) -> Vec<f64> + Send> {
-        match self.exp.problem.loss {
+    pub fn grad_phi(&self) -> Result<Box<dyn Fn(&[f64]) -> Vec<f64> + Send>> {
+        let prob = self.require_in_memory("model-parallel solvers")?;
+        Ok(match prob.loss {
             Loss::Quadratic { y } => quadratic_phi(y.to_vec())(),
             Loss::Logistic => logistic_phi()(),
-        }
+        })
     }
 }
 

@@ -362,8 +362,8 @@ impl Solver for AsyncBcd {
         ctx.require_sim_engine("AsyncBcd")?;
         ctx.reject_unsupported_scenario("AsyncBcd")?;
         ctx.beta = 1.0;
-        let blocks = ctx.uncoded_col_blocks();
-        let phi = ctx.grad_phi();
+        let blocks = ctx.uncoded_col_blocks()?;
+        let phi = ctx.grad_phi()?;
         let mut delay = ctx.delay_model()?;
         let cfg = AsyncBcdConfig {
             step: self.step,

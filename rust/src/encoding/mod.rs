@@ -26,6 +26,7 @@ pub mod paley;
 pub mod replication;
 pub mod spectrum;
 pub mod steiner;
+pub mod stream;
 
 pub use hadamard::FwhtOp;
 pub use replication::ReplicationMap;

@@ -39,17 +39,25 @@ fn legendre(a: i64, q: i64) -> i64 {
     }
 }
 
-fn modpow(mut b: i64, mut e: i64, m: i64) -> i64 {
-    let mut acc: i64 = 1;
-    b = b.rem_euclid(m);
+/// `b^e mod m` by square-and-multiply. Intermediates are widened to
+/// `i128`: `b, acc < m ≤ i64::MAX < 2^63`, so every product is below
+/// `2^126` and cannot overflow — the previous `i64::checked_mul(..)
+/// .unwrap()` panicked for any modulus above `√i64::MAX ≈ 3.04e9`
+/// (`b·b` overflows i64), which a large Paley prime reaches.
+fn modpow(b: i64, mut e: i64, m: i64) -> i64 {
+    assert!(m > 0, "modpow modulus must be positive");
+    debug_assert!(e >= 0, "modpow exponent must be non-negative");
+    let m128 = m as i128;
+    let mut acc: i128 = 1;
+    let mut b128 = (b as i128).rem_euclid(m128);
     while e > 0 {
         if e & 1 == 1 {
-            acc = acc.checked_mul(b).unwrap().rem_euclid(m);
+            acc = (acc * b128).rem_euclid(m128);
         }
-        b = b.checked_mul(b).unwrap().rem_euclid(m);
+        b128 = (b128 * b128).rem_euclid(m128);
         e >>= 1;
     }
-    acc
+    acc as i64
 }
 
 fn is_prime(n: i64) -> bool {
@@ -60,7 +68,8 @@ fn is_prime(n: i64) -> bool {
         return n == 2;
     }
     let mut d = 3;
-    while d * d <= n {
+    // overflow-safe trial division (d·d would overflow i64 near its max)
+    while d <= n / d {
         if n % d == 0 {
             return false;
         }
@@ -107,6 +116,13 @@ pub fn conference_matrix(q: i64) -> Mat {
 pub fn paley_etf(n: usize) -> Result<Mat> {
     let q = paley_prime_for(n)?;
     let nn = (q + 1) as usize; // number of frame vectors
+    // Proper error path instead of an OOM abort: the construction
+    // materializes the nn×nn conference matrix and eigendecomposes it.
+    anyhow::ensure!(
+        nn <= 1 << 14,
+        "Paley frame of order {nn} (n={n}) exceeds the dense eigendecomposition \
+         budget; use a structured scheme (hadamard/haar) at this size"
+    );
     let half = nn / 2; // frame dimension
     let c = conference_matrix(q);
     // P = (I + C/√q)/2 — projection of rank nn/2.
@@ -181,6 +197,29 @@ mod tests {
         assert_eq!(legendre(2, 13), -1);
         assert_eq!(legendre(0, 13), 0);
         assert_eq!(legendre(-1, 13), 1); // 12 is a QR mod 13
+    }
+
+    #[test]
+    fn modpow_survives_primes_beyond_the_i64_square_root() {
+        // Regression: q = 3_037_000_537 is the smallest prime ≡ 1 mod 4
+        // above √i64::MAX; the old i64 intermediate overflowed on b·b
+        // for any such modulus and panicked. With i128 intermediates the
+        // Legendre symbol is well-defined arbitrarily close to i64::MAX.
+        let q: i64 = 3_037_000_537;
+        // Fermat: a^(q−1) ≡ 1 for a ≢ 0
+        assert_eq!(modpow(2, q - 1, q), 1);
+        assert_eq!(modpow(q - 1, q - 1, q), 1);
+        // Euler's criterion lands in {1, q−1}
+        let e = modpow(2, (q - 1) / 2, q);
+        assert_eq!(e, 1, "2 is a quadratic residue mod this q");
+        // a perfect square is always a residue
+        let a: i64 = 123_456_789;
+        assert_eq!(legendre(a.wrapping_mul(a).rem_euclid(q), q), 1);
+        assert_eq!(legendre(a, q) * legendre(a, q), 1, "χ(a)² = 1 for a ≠ 0");
+        // multiplicativity χ(a)·χ(b) = χ(ab) exercises the full range
+        let b: i64 = 2_999_999_999;
+        let ab = ((a as i128 * b as i128).rem_euclid(q as i128)) as i64;
+        assert_eq!(legendre(a, q) * legendre(b, q), legendre(ab, q));
     }
 
     #[test]

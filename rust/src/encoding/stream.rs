@@ -1,0 +1,331 @@
+//! Streaming block encoder: apply any [`Encoding`] to a dataset that
+//! arrives as row blocks ([`BlockSource`]) instead of one materialized
+//! `Mat` — the out-of-core half of the paper's §4.2 "efficient
+//! mechanisms for encoding large-scale data".
+//!
+//! Column view of the algebra: `S·X = Σ_b S[:, rows_b] · X_b` over the
+//! source's row blocks `X_b`. Each fast path consumes that sum without
+//! ever holding `X`:
+//! - **FWHT** (Hadamard): full encode columns are needed before the
+//!   transform, so the encoder makes one pass over the source per
+//!   *column panel* ([`PANEL_COLS`] columns), reassembling exact
+//!   columns (an `O(n)` buffer) and applying the same
+//!   [`FwhtOp::apply`](super::FwhtOp::apply) as the in-memory path.
+//! - **CSR** (Steiner / Haar / identity): each block accumulates the
+//!   entries whose column falls inside the block's row range, in the
+//!   same ascending order as the in-memory sweep.
+//! - **Dense** (Gaussian / Paley): each block continues the per-element
+//!   ascending-`k` fold of [`Mat::matmul`].
+//!
+//! ## Bit-identity contract
+//!
+//! Every path accumulates each output element in *exactly* the
+//! floating-point order of the corresponding in-memory
+//! [`Encoding::encode_data`] kernel (the FWHT path reassembles exact
+//! column bits; the dense/CSR paths continue the same left-to-right
+//! fold across block boundaries). [`encode_data_streamed`] is therefore
+//! **bit-identical** to `enc.encode_data(&x)` for every scheme — the
+//! property `rust/tests/shard_pipeline.rs` pins, and the reason a
+//! sharded experiment's trace matches its in-memory twin bit-for-bit.
+//!
+//! Peak resident data: one source block, one `O(n)` column panel /
+//! target buffer, and the encoded worker partitions themselves (the
+//! product being built) — never the `n × p` input.
+
+use super::{Encoding, FastS, SMatrix};
+use crate::data::shard::{assemble_targets, BlockSource};
+use crate::linalg::{axpy, par, Csr, Mat};
+use anyhow::{ensure, Result};
+
+/// Minimum columns reassembled per streaming pass on the FWHT path.
+///
+/// The FWHT transform needs a *complete* encode column before it can
+/// run, so this path fundamentally carries a `Θ(n)` buffer (one column
+/// is already `n` floats — that, not the shard size, is the FWHT
+/// path's memory floor). The width knob only trades passes for memory
+/// above that floor: the panel is `width · n` floats, the source is
+/// re-read `⌈p / width⌉` times, and the width grows past this minimum
+/// only while the panel stays within the source's one-block budget
+/// (`max_block_rows · cols` floats), so wide shards buy fewer passes.
+/// At the floor, memory is `PANEL_COLS · n` floats — independent of
+/// `p`, but up to `PANEL_COLS×` one shard for very tall datasets.
+pub const PANEL_COLS: usize = 32;
+
+/// Resolved FWHT panel width for a source: at least [`PANEL_COLS`]
+/// (see its doc for the Θ(n) memory floor), at most `p`, growing with
+/// the one-shard memory budget in between.
+fn panel_width(src: &dyn BlockSource) -> usize {
+    let p = src.cols().max(1);
+    let budget = src.max_block_rows().saturating_mul(p);
+    // max-then-min (not clamp: PANEL_COLS may exceed p for narrow data)
+    (budget / src.rows().max(1)).max(PANEL_COLS).min(p)
+}
+
+/// `out += S[:, k0..k0+xb.rows()] · xb`, continuing [`Mat::matmul`]'s
+/// per-element ascending-`k` fold (same zero-skip, same `axpy` row
+/// update) so that accumulating block-by-block over a full row stream
+/// reproduces the in-memory product bit-for-bit.
+fn acc_dense_block(s: &Mat, k0: usize, xb: &Mat, out: &mut Mat) {
+    debug_assert_eq!(s.rows(), out.rows());
+    debug_assert_eq!(xb.cols(), out.cols());
+    let p = xb.cols();
+    let kblk = xb.rows();
+    if p == 0 || kblk == 0 {
+        return;
+    }
+    par::par_chunks_mut(out.as_mut_slice(), par::CHUNK * p, kblk, |ci, cchunk| {
+        let i0 = ci * par::CHUNK;
+        for (di, crow) in cchunk.chunks_mut(p).enumerate() {
+            let srow = &s.row(i0 + di)[k0..k0 + kblk];
+            for (off, &aik) in srow.iter().enumerate() {
+                // same zero-skip as Mat::matmul (keeps −0.0 bit-stable)
+                if aik == 0.0 {
+                    continue;
+                }
+                axpy(aik, xb.row(off), crow);
+            }
+        }
+    });
+}
+
+/// `out += S[:, k0..k0+xb.rows()] · xb` for a CSR block: the entries of
+/// each row whose column lands in the block's range, in the same
+/// ascending-column order as [`SMatrix::encode_mat`]'s sweep (the
+/// binary-searched start changes where iteration begins, never the
+/// in-range entry order, so bit-identity is untouched — while avoiding
+/// an O(nnz) prefix rescan per source block).
+fn acc_sparse_block(s: &Csr, k0: usize, xb: &Mat, out: &mut Mat) {
+    debug_assert_eq!(s.rows(), out.rows());
+    let k1 = k0 + xb.rows();
+    for i in 0..s.rows() {
+        let orow = out.row_mut(i);
+        for (j, v) in s.row_iter_from(i, k0) {
+            if j >= k1 {
+                // CSR rows are column-sorted: nothing further in range.
+                break;
+            }
+            axpy(v, xb.row(j - k0), orow);
+        }
+    }
+}
+
+/// Apply the full encoding to a streamed data matrix: returns `S_i·X`
+/// per worker, bit-identical to [`Encoding::encode_data`] on the
+/// equivalent in-memory `X` (see the [module docs](self)).
+pub fn encode_data_streamed(enc: &Encoding, src: &dyn BlockSource) -> Result<Vec<Mat>> {
+    ensure!(
+        enc.n == src.rows(),
+        "encode dim mismatch: encoding for n={}, source has {} rows",
+        enc.n,
+        src.rows()
+    );
+    let p = src.cols();
+    let mut outs: Vec<Mat> = enc.blocks.iter().map(|b| Mat::zeros(b.rows(), p)).collect();
+    match &enc.fast {
+        FastS::Fwht(op) => {
+            let n = src.rows();
+            let width = panel_width(src);
+            let mut j0 = 0;
+            while j0 < p {
+                let j1 = (j0 + width).min(p);
+                let cb = j1 - j0;
+                // column-major panel: cols[c·n + row] = X[row, j0+c]
+                let mut cols = vec![0.0; cb * n];
+                src.for_each_block(&mut |row0, xb, _y| {
+                    for r in 0..xb.rows() {
+                        let xrow = xb.row(r);
+                        for (c, dst) in cols.chunks_mut(n).enumerate() {
+                            dst[row0 + r] = xrow[j0 + c];
+                        }
+                    }
+                    Ok(())
+                })?;
+                for (c, col) in cols.chunks(n).enumerate() {
+                    // identical to the in-memory path from here: exact
+                    // column bits → same FWHT → same block scatter
+                    let enc_col = op.apply(col);
+                    let j = j0 + c;
+                    let mut r = 0;
+                    for out in &mut outs {
+                        for local in 0..out.rows() {
+                            out[(local, j)] = enc_col[r];
+                            r += 1;
+                        }
+                    }
+                }
+                j0 = j1;
+            }
+        }
+        FastS::Sparse(_) | FastS::Dense => {
+            src.for_each_block(&mut |row0, xb, _y| {
+                for (b, out) in enc.blocks.iter().zip(&mut outs) {
+                    match b {
+                        SMatrix::Dense(s) => acc_dense_block(s, row0, xb, out),
+                        SMatrix::Sparse(s) => acc_sparse_block(s, row0, xb, out),
+                    }
+                }
+                Ok(())
+            })?;
+        }
+    }
+    Ok(outs)
+}
+
+/// Encode the streamed target vector: returns `S_i·y` per worker,
+/// bit-identical to [`Encoding::encode_vec`]. `y` is the one
+/// full-length (`O(n)`) buffer the streaming pipeline assembles.
+pub fn encode_vec_streamed(enc: &Encoding, src: &dyn BlockSource) -> Result<Vec<Vec<f64>>> {
+    let y = assemble_targets(src)?;
+    ensure!(y.len() == enc.n, "encode_vec dim mismatch");
+    Ok(enc.encode_vec(&y))
+}
+
+/// Encode a streamed dataset and write the Parseval-normalized worker
+/// partitions `(S̄_iX, S̄_iy)`, one shard dataset per worker
+/// (`worker-NNN/` under `out_dir`). The normalization is the same
+/// `1/√β` scaling the driver's worker build applies to the same
+/// streamed encode output, and the round-trip test in this module pins
+/// the written bits to it — `coded-opt encode` goes through here, so
+/// the on-disk partitions cannot drift from what `run` computes.
+pub fn write_encoded_partitions(
+    enc: &Encoding,
+    src: &dyn BlockSource,
+    out_dir: &std::path::Path,
+) -> Result<Vec<crate::data::shard::Manifest>> {
+    let norm = 1.0 / enc.beta.sqrt();
+    let mut sx = encode_data_streamed(enc, src)?;
+    let sy: Option<Vec<Vec<f64>>> =
+        if src.has_targets() { Some(encode_vec_streamed(enc, src)?) } else { None };
+    std::fs::create_dir_all(out_dir)?;
+    let mut manifests = Vec::with_capacity(sx.len());
+    for (w, sxw) in sx.iter_mut().enumerate() {
+        sxw.scale_inplace(norm);
+        let yw: Option<Vec<f64>> = sy.as_ref().map(|sy| {
+            let mut v = sy[w].clone();
+            crate::linalg::scale(norm, &mut v);
+            v
+        });
+        let dir = out_dir.join(format!("worker-{w:03}"));
+        let rows = sxw.rows().max(1);
+        manifests.push(crate::data::shard::shard_dataset(
+            &*sxw,
+            yw.as_deref(),
+            &dir,
+            rows.min(src.max_block_rows()),
+        )?);
+    }
+    Ok(manifests)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Scheme;
+    use crate::data::shard::MatSource;
+    use crate::rng::Pcg64;
+
+    fn random_mat(n: usize, p: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(n, p, |_, _| rng.next_f64() - 0.5)
+    }
+
+    #[test]
+    fn streamed_encode_is_bit_identical_for_every_scheme() {
+        let (n, p, m) = (48, 9, 4);
+        let x = random_mat(n, p, 5);
+        for scheme in [
+            Scheme::Uncoded,
+            Scheme::Gaussian,
+            Scheme::Hadamard,
+            Scheme::Paley,
+            Scheme::Steiner,
+            Scheme::Haar,
+        ] {
+            let enc = Encoding::build(scheme, n, m, 2.0, 7).unwrap();
+            let dense = enc.encode_data(&x);
+            for block_rows in [1, 7, 16, 48, 100] {
+                let src = MatSource::new(&x, None, block_rows);
+                let streamed = encode_data_streamed(&enc, &src).unwrap();
+                assert_eq!(streamed.len(), dense.len());
+                for (sb, db) in streamed.iter().zip(&dense) {
+                    assert_eq!(
+                        sb.as_slice(),
+                        db.as_slice(),
+                        "{scheme:?} block_rows={block_rows}: streamed encode must be \
+                         bit-identical to the in-memory encode"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_encode_vec_is_bit_identical() {
+        let n = 40;
+        let x = random_mat(n, 3, 9);
+        let mut rng = Pcg64::new(13);
+        let y: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+        for scheme in [Scheme::Hadamard, Scheme::Gaussian, Scheme::Steiner] {
+            let enc = Encoding::build(scheme, n, 4, 2.0, 3).unwrap();
+            let dense = enc.encode_vec(&y);
+            let src = MatSource::new(&x, Some(&y), 11);
+            let streamed = encode_vec_streamed(&enc, &src).unwrap();
+            assert_eq!(streamed, dense, "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn panel_boundary_column_counts_are_exact() {
+        // p > PANEL_COLS forces multiple passes; p not a multiple of the
+        // panel width exercises the tail panel.
+        let (n, p, m) = (32, PANEL_COLS + 5, 4);
+        let x = random_mat(n, p, 17);
+        let enc = Encoding::build(Scheme::Hadamard, n, m, 2.0, 1).unwrap();
+        let dense = enc.encode_data(&x);
+        let src = MatSource::new(&x, None, 10);
+        let streamed = encode_data_streamed(&enc, &src).unwrap();
+        for (sb, db) in streamed.iter().zip(&dense) {
+            assert_eq!(sb.as_slice(), db.as_slice());
+        }
+    }
+
+    #[test]
+    fn written_partitions_roundtrip_with_driver_normalization() {
+        use crate::data::shard::ShardedSource;
+        let n = 24;
+        let x = random_mat(n, 5, 21);
+        let mut rng = Pcg64::new(23);
+        let y: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+        let enc = Encoding::build(Scheme::Hadamard, n, 3, 2.0, 9).unwrap();
+        let src = MatSource::new(&x, Some(&y), 7);
+        let dir = std::env::temp_dir()
+            .join(format!("coded-opt-stream-parts-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let manifests = write_encoded_partitions(&enc, &src, &dir).unwrap();
+        assert_eq!(manifests.len(), 3);
+        // expected bits: the streamed encode scaled by 1/√β — exactly
+        // what the driver's worker build stores for the same source
+        let norm = 1.0 / enc.beta.sqrt();
+        let sx = encode_data_streamed(&enc, &src).unwrap();
+        let sy = encode_vec_streamed(&enc, &src).unwrap();
+        for w in 0..3 {
+            let part = ShardedSource::open(dir.join(format!("worker-{w:03}"))).unwrap();
+            let (px, py) = part.load_dense().unwrap();
+            let mut want_x = sx[w].clone();
+            want_x.scale_inplace(norm);
+            let mut want_y = sy[w].clone();
+            crate::linalg::scale(norm, &mut want_y);
+            assert_eq!(px.as_slice(), want_x.as_slice(), "worker {w} S̄X bits");
+            assert_eq!(py.unwrap(), want_y, "worker {w} S̄y bits");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dim_mismatch_is_rejected() {
+        let x = random_mat(20, 4, 1);
+        let enc = Encoding::build(Scheme::Gaussian, 24, 4, 2.0, 1).unwrap();
+        let src = MatSource::new(&x, None, 8);
+        assert!(encode_data_streamed(&enc, &src).is_err());
+    }
+}

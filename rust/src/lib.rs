@@ -111,6 +111,50 @@
 //! `Encoding::encode_data` / `encode_vec`, the data-parallel worker
 //! build, and BCD's `w = S̄ᵀv` reconstruction all route through it.
 //!
+//! ## Out-of-core data: shards and the streaming encoder
+//!
+//! Datasets that do not fit one memory image live on disk as a *shard
+//! directory* ([`data::shard`]): `manifest.json` (schema
+//! `coded-opt/shard-v1` — global shape, targets flag, one entry per
+//! shard file with starting row, row count, and payload checksum) plus
+//! `shard-NNNNN.bin` files holding consecutive row blocks of `X` (and
+//! `y`) as little-endian f64. The [`data::shard::BlockSource`] trait is
+//! the streaming contract: blocks arrive in ascending row order, are
+//! bounded by the shard size, and a source can be re-iterated.
+//!
+//! [`encoding::stream`] applies any [`encoding::Encoder`] shard-by-shard
+//! — FWHT via column panels, CSR and dense generators by continuing the
+//! exact per-element accumulation order of the in-memory kernels across
+//! block boundaries — so the streamed encode is **bit-identical** to
+//! `Encoding::encode_data` on the equivalent matrix, and a sharded
+//! experiment's trace is bit-identical to its in-memory twin
+//! (`rust/tests/shard_pipeline.rs` pins both). Wire a sharded dataset
+//! into the driver with `Experiment::sharded(ShardedSource::open(dir)?)`
+//! (or [`driver::DataSource`] explicitly); the data-parallel solvers
+//! (`Gd` / `Lbfgs` / `Prox`) and `AsyncGd` stream it, while the
+//! model-parallel solvers (`Bcd` / `AsyncBcd`) need column access and
+//! reject it loudly. On the command line:
+//!
+//! ```text
+//! coded-opt shard  --out shards/ --n 1000000 --p 64 --shard-rows 8192
+//! coded-opt encode --source shards/ --out encoded/ --scheme hadamard --workers 16
+//! coded-opt run    --source shards/ --algorithm gd --workers 16 --k 12
+//! ```
+//!
+//! The `shard` generator streams (the full matrix never exists in the
+//! process); `encode` writes the Parseval-normalized worker partitions
+//! `(S̄_iX, S̄_iy)` as one shard dataset per worker plus an
+//! `encoding.json` (schema `coded-opt/encode-v1`).
+//!
+//! Scope of the memory claim: it is the **input** `X` that is never
+//! materialized on the sharded path (only shard-bounded blocks plus
+//! `O(n)` column-panel/target buffers). The encoded worker partitions
+//! are the *product* and are resident — one per worker in this
+//! in-process simulation, exactly as on the in-memory path; in a real
+//! deployment each worker holds only its own partition (the unit
+//! `coded-opt encode` writes out). Eliding the generator's dense blocks
+//! for structured schemes is the next step (see ROADMAP).
+//!
 //! ## Benchmarks and the perf gate
 //!
 //! `coded-opt bench` times the hot paths against the preserved naive
@@ -143,7 +187,7 @@
 //! - [`objectives`] — ridge, LASSO, logistic regression, matrix
 //!   factorization.
 //! - [`data`] — synthetic workload generators mirroring the paper's
-//!   datasets.
+//!   datasets, plus the out-of-core shard format ([`data::shard`]).
 //! - [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them on the hot path.
 //! - [`metrics`] — timers, traces, histograms, writers.

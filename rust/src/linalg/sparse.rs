@@ -81,6 +81,18 @@ impl Csr {
         self.indices[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
     }
 
+    /// Non-zeros of row i with column ≥ `col0`, in ascending column
+    /// order — binary-searched start (columns are sorted within a row),
+    /// so a consumer sweeping ascending column ranges (the streamed
+    /// block encoder) skips straight to its range instead of rescanning
+    /// the row prefix per block.
+    pub fn row_iter_from(&self, i: usize, col0: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        let start = lo + self.indices[lo..hi].partition_point(|&c| c < col0);
+        self.indices[start..hi].iter().copied().zip(self.values[start..hi].iter().copied())
+    }
+
     /// y = A·x.
     ///
     /// Output rows are independent, so the kernel parallelizes over
@@ -218,6 +230,18 @@ mod tests {
         //  [0, 0, 0],
         //  [3, 4, 0]]
         Csr::from_triplets(3, 3, &[(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn row_iter_from_starts_at_the_column_bound() {
+        let a = example();
+        let all: Vec<(usize, f64)> = a.row_iter(0).collect();
+        assert_eq!(all, vec![(0, 1.0), (2, 2.0)]);
+        assert_eq!(a.row_iter_from(0, 0).collect::<Vec<_>>(), all, "col0=0 = full row");
+        assert_eq!(a.row_iter_from(0, 1).collect::<Vec<_>>(), vec![(2, 2.0)]);
+        assert_eq!(a.row_iter_from(0, 3).count(), 0, "past the last column");
+        assert_eq!(a.row_iter_from(1, 0).count(), 0, "empty row");
+        assert_eq!(a.row_iter_from(2, 1).collect::<Vec<_>>(), vec![(1, 4.0)]);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! `coded-opt` launcher binary.
 //!
 //! Subcommands:
-//! - `run --config exp.toml [--workers N --k K --scheme S --iters T]` —
+//! - `run --config exp.toml [--workers N --k K --scheme S --iters T
+//!   --step A --lambda L]` —
 //!   run one experiment through the [`coded_opt::driver::Experiment`]
 //!   API (overrides apply on top of the config file; all flags optional,
 //!   defaults from [`coded_opt::config::ExperimentConfig`]). Every
@@ -25,17 +26,39 @@
 //!   the deterministic SimCluster and print per-cell results
 //!   (`--out` also writes per-cell trace CSVs and canonical bit-exact
 //!   traces).
+//! - `shard --out DIR [--dataset gaussian|sparse --n N --p P --sigma S
+//!   --seed S --shard-rows R --nnz K]` — generate a synthetic dataset
+//!   straight into the out-of-core shard format (`manifest.json` +
+//!   `shard-*.bin`, schema `coded-opt/shard-v1`). The gaussian ensemble
+//!   streams shard-by-shard and never materializes the full matrix.
+//! - `encode --source DIR --out DIR [--scheme S --workers M --beta B
+//!   --seed S]` — apply an encoding scheme to a sharded dataset
+//!   block-by-block (FWHT / CSR fast paths included) and write the
+//!   Parseval-normalized worker partitions `(S̄_iX, S̄_iy)` as one shard
+//!   dataset per worker.
+//! - `run --source DIR …` — run an experiment whose worker shards are
+//!   encoded from the sharded dataset instead of an in-memory matrix
+//!   (gd / lbfgs / prox / async_gd). Bit-identity to the in-memory run
+//!   holds for the *pipeline* (same solver + step ⇒ same trace, pinned
+//!   by `rust/tests/shard_pipeline.rs`); CLI *default* steps are
+//!   derived from a streamed spectral-norm estimate whose last bits
+//!   differ from the in-memory estimate, so pass an explicit `--step`
+//!   when diffing CLI traces bit-for-bit (prox also reports no F1
+//!   metric — there is no known `w*` on the sharded path).
 //! - `info` — build / artifact info.
 
 use anyhow::{bail, Result};
 use coded_opt::bench::{banner, run_bench, BenchReport};
 use coded_opt::cli::Args;
 use coded_opt::config::{Algorithm, ExperimentConfig, Scheme};
-use coded_opt::data::synth::{gaussian_linear, sparse_recovery};
-use coded_opt::driver::{AsyncBcd, AsyncGd, Bcd, Experiment, Gd, Lbfgs, Problem, Prox};
-use coded_opt::encoding::{Encoding, SubsetSpectrum};
-use coded_opt::linalg::{mat::reference, par, Mat};
-use coded_opt::metrics::TableWriter;
+use coded_opt::data::shard::{shard_dataset, BlockSource, MatSource, ShardedSource};
+use coded_opt::data::synth::{gaussian_linear, gaussian_linear_shard_to, sparse_recovery};
+use coded_opt::driver::{
+    AsyncBcd, AsyncGd, Bcd, DataSource, Experiment, Gd, Lbfgs, Problem, Prox,
+};
+use coded_opt::encoding::{stream, Encoding, FastS, SubsetSpectrum};
+use coded_opt::linalg::{dot, mat::reference, par, Mat};
+use coded_opt::metrics::{TableWriter, Trace};
 use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 use coded_opt::rng::Pcg64;
 use coded_opt::runtime::ArtifactIndex;
@@ -47,11 +70,14 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("spectrum") => cmd_spectrum(&args),
         Some("scenario") => cmd_scenario(&args),
+        Some("shard") => cmd_shard(&args),
+        Some("encode") => cmd_encode(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") | None => cmd_info(),
-        Some(other) => {
-            bail!("unknown subcommand '{other}' (try: run, spectrum, scenario, bench, info)")
-        }
+        Some(other) => bail!(
+            "unknown subcommand '{other}' \
+             (try: run, spectrum, scenario, shard, encode, bench, info)"
+        ),
     }
 }
 
@@ -67,7 +93,105 @@ fn cmd_info() -> Result<()> {
             println!("  {:<24} {:<14} {}x{}", a.name, a.kind, a.rows, a.cols);
         }
     }
-    println!("subcommands: run, spectrum, scenario, bench, info");
+    println!("subcommands: run, spectrum, scenario, shard, encode, bench, info");
+    Ok(())
+}
+
+/// Generate a synthetic dataset straight into the shard-v1 format.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let Some(out) = args.get("out") else { bail!("shard: --out DIR is required") };
+    let n = args.get_usize("n")?.unwrap_or(4096);
+    let p = args.get_usize("p")?.unwrap_or(64);
+    let sigma = args.get_f64("sigma")?.unwrap_or(0.5);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let shard_rows = args.get_usize("shard-rows")?.unwrap_or(1024);
+    let dataset = args.get("dataset").unwrap_or("gaussian");
+    let manifest = match dataset {
+        "gaussian" => {
+            // fully streaming: the full X never exists in this process
+            let (manifest, _w_star) =
+                gaussian_linear_shard_to(out, n, p, sigma, seed, shard_rows)?;
+            manifest
+        }
+        "sparse" => {
+            // the sparse-recovery ensemble draws w* support before the
+            // noise, so it is generated in memory and then sharded
+            let nnz = args.get_usize("nnz")?.unwrap_or(p / 12 + 1);
+            let (x, y, _) = sparse_recovery(n, p, nnz, sigma, seed);
+            shard_dataset(&x, Some(&y), out, shard_rows)?
+        }
+        other => bail!("shard: unknown --dataset '{other}' (gaussian, sparse)"),
+    };
+    println!(
+        "sharded '{dataset}' dataset: n={} p={} → {} shard(s) of ≤{} rows in {}",
+        manifest.rows,
+        manifest.cols,
+        manifest.shards.len(),
+        manifest.shard_rows,
+        out
+    );
+    println!("manifest: {}/manifest.json (schema coded-opt/shard-v1)", out);
+    Ok(())
+}
+
+/// Apply an encoding to a sharded dataset block-by-block and write the
+/// Parseval-normalized worker partitions, each as its own shard dataset.
+fn cmd_encode(args: &Args) -> Result<()> {
+    let Some(source) = args.get("source") else { bail!("encode: --source DIR is required") };
+    let Some(out) = args.get("out") else { bail!("encode: --out DIR is required") };
+    let scheme = Scheme::parse(args.get("scheme").unwrap_or("hadamard"))?;
+    let m = args.get_usize("workers")?.unwrap_or(8);
+    let beta = args.get_f64("beta")?.unwrap_or(2.0);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    if scheme == Scheme::Replication {
+        bail!(
+            "encode: replication is a partitioning strategy, not an encoding \
+             (duplication happens at the cluster layer); use `run --source` \
+             with --scheme replication instead"
+        );
+    }
+    let src = ShardedSource::open(source)?;
+    let n = src.rows();
+    let enc = Encoding::build(scheme, n, m, beta, seed)?;
+    let fast = match &enc.fast {
+        FastS::Fwht(_) => "fwht",
+        FastS::Sparse(_) => "csr",
+        FastS::Dense => "dense",
+    };
+    println!(
+        "encoding {} rows × {} cols with {} (β={:.3}, fast path: {fast}) for {m} workers",
+        n,
+        src.cols(),
+        scheme.name(),
+        enc.beta
+    );
+    let out_dir = std::path::Path::new(out);
+    // one normalization + write path, shared with the test suite (see
+    // encoding::stream::write_encoded_partitions)
+    let manifests = stream::write_encoded_partitions(&enc, &src, out_dir)?;
+    let has_targets = src.has_targets();
+    let worker_dirs: Vec<String> =
+        (0..manifests.len()).map(|w| format!("worker-{w:03}")).collect();
+    // top-level metadata tying the partitions back to the encoding
+    let mut meta = String::from("{\n");
+    meta.push_str("  \"schema\": \"coded-opt/encode-v1\",\n");
+    meta.push_str(&format!("  \"scheme\": \"{}\",\n", scheme.name()));
+    meta.push_str(&format!("  \"beta\": {:.6},\n", enc.beta));
+    meta.push_str(&format!("  \"n\": {n},\n"));
+    meta.push_str(&format!("  \"p\": {},\n", src.cols()));
+    meta.push_str(&format!("  \"workers\": {m},\n"));
+    meta.push_str(&format!("  \"seed\": {seed},\n"));
+    meta.push_str("  \"normalized\": true,\n");
+    meta.push_str(&format!(
+        "  \"partitions\": [{}]\n",
+        worker_dirs.iter().map(|d| format!("\"{d}\"")).collect::<Vec<_>>().join(", ")
+    ));
+    meta.push_str("}\n");
+    std::fs::write(out_dir.join("encoding.json"), meta)?;
+    println!(
+        "wrote {m} normalized worker partition(s) (S̄_iX{}) under {out} + encoding.json",
+        if has_targets { ", S̄_iy" } else { "" }
+    );
     Ok(())
 }
 
@@ -103,6 +227,28 @@ fn cmd_bench(args: &Args) -> Result<()> {
             }
         });
         report.push_pair("encode_hadamard_1024x512", &fast, &naive);
+    }
+
+    // ---- streamed shard encode (the out-of-core hot path): the FWHT
+    //      column-panel encoder vs the dense block-accumulation fallback
+    //      over the SAME block stream — dimensionless, like every gated
+    //      pair. Same workload naming as the in-memory pair above: the
+    //      1024×512 generator S applied to a 512×128 data matrix, here
+    //      streamed as 8 row blocks of 64 (a miniature shard layout;
+    //      the kernels only ever see one block at a time).
+    {
+        let x = Mat::from_fn(512, 128, |_, _| rng.next_f64() - 0.5);
+        let enc = Encoding::build(Scheme::Hadamard, 512, 16, 2.0, 3)?;
+        let mut dense_enc = enc.clone();
+        dense_enc.fast = FastS::Dense;
+        let src = MatSource::new(&x, None, 64);
+        let fast = run_bench("shard encode 1024x512 (fwht stream)", warmup, iters, || {
+            std::hint::black_box(stream::encode_data_streamed(&enc, &src).unwrap());
+        });
+        let naive = run_bench("shard encode 1024x512 (dense stream)", warmup, iters, || {
+            std::hint::black_box(stream::encode_data_streamed(&dense_enc, &src).unwrap());
+        });
+        report.push_pair("shard_encode_hadamard_1024x512", &fast, &naive);
     }
 
     // ---- gram (the BRIP spectrum-analysis inner loop)
@@ -230,6 +376,12 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_f64("beta")? {
         cfg.beta = v;
     }
+    if let Some(v) = args.get_f64("step")? {
+        cfg.step_size = v;
+    }
+    if let Some(v) = args.get_f64("lambda")? {
+        cfg.lambda = v;
+    }
     if let Some(v) = args.get_usize("seed")? {
         cfg.seed = v as u64;
     }
@@ -240,15 +392,17 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-/// One wired pipeline for every algorithm: the Experiment owns the
-/// encoding, cluster, delays, and (optionally) the PJRT runtime.
-fn base_experiment<'a>(
+/// One wired pipeline for every algorithm AND every data source: the
+/// Experiment owns the encoding, cluster, delays, and (optionally) the
+/// PJRT runtime. The in-memory (`cmd_run`) and sharded
+/// (`cmd_run_sharded`) paths both go through here, so a new config knob
+/// can never apply to one and silently skip the other.
+fn base_source<'a>(
     cfg: &ExperimentConfig,
-    x: &'a coded_opt::linalg::Mat,
-    y: &'a [f64],
+    source: DataSource<'a>,
     idx: Option<&'a ArtifactIndex>,
 ) -> Experiment<'a> {
-    let mut exp = Experiment::new(Problem::least_squares(x, y))
+    let mut exp = Experiment::data_source(source)
         .scheme(cfg.scheme)
         .workers(cfg.workers)
         .wait_for(cfg.k)
@@ -265,8 +419,159 @@ fn base_experiment<'a>(
     exp
 }
 
+/// [`base_source`] over a borrowed in-memory `(X, y)`.
+fn base_experiment<'a>(
+    cfg: &ExperimentConfig,
+    x: &'a coded_opt::linalg::Mat,
+    y: &'a [f64],
+    idx: Option<&'a ArtifactIndex>,
+) -> Experiment<'a> {
+    base_source(cfg, DataSource::InMemory(Problem::least_squares(x, y)), idx)
+}
+
+/// Print a convergence trace the way `coded-opt run` reports it.
+fn print_trace(trace: &Trace) {
+    println!("\n{:>6} {:>16} {:>12} {:>10}", "iter", "objective", "metric", "time(s)");
+    let stride = (trace.len() / 12).max(1);
+    for r in trace.records.iter().step_by(stride) {
+        println!("{:>6} {:>16.8} {:>12.4} {:>10.2}", r.iter, r.objective, r.test_metric, r.time);
+    }
+    println!(
+        "\nfinal: objective {:.8}, metric {:.4}, total simulated time {:.2}s",
+        trace.final_objective(),
+        trace.final_test_metric(),
+        trace.total_time()
+    );
+}
+
+/// `coded-opt run --source DIR`: the experiment's worker shards are
+/// encoded block-by-block from the sharded dataset; the full matrix is
+/// never materialized in this process. Objectives are evaluated by
+/// streaming passes over the shards.
+fn cmd_run_sharded(mut cfg: ExperimentConfig, dir: &str) -> Result<()> {
+    let src = ShardedSource::open(dir)?;
+    cfg.n = src.rows();
+    cfg.p = src.cols();
+    cfg.validate()?;
+    println!(
+        "experiment '{}' from sharded source {dir}: {:?} / {} — n={} p={} ({} shards) \
+         m={} k={} β={} iters={}",
+        cfg.name,
+        cfg.algorithm,
+        cfg.scheme.name(),
+        cfg.n,
+        cfg.p,
+        src.manifest().shards.len(),
+        cfg.workers,
+        cfg.k,
+        cfg.beta,
+        cfg.iterations
+    );
+    if !cfg.brip_feasible() {
+        println!(
+            "note: η·β = {:.2} < 1 — below the strict BRIP threshold (Def. 1); \
+             expect a looser approximation band.",
+            cfg.eta() * cfg.beta
+        );
+    }
+    let idx = if cfg.use_pjrt { Some(ArtifactIndex::default_location()?) } else { None };
+    let n = cfg.n as f64;
+    let lambda = cfg.lambda;
+    let eval_src = src.clone();
+    let out = match cfg.algorithm {
+        Algorithm::Gd | Algorithm::Lbfgs | Algorithm::AsyncGd => {
+            // ridge objective, streamed: 1/(2n)·‖Xw−y‖² + λ/2·‖w‖²
+            let eval = move |w: &[f64]| -> (f64, f64) {
+                // loud: mid-run shard corruption must abort the run, not
+                // degrade into a silent NaN objective column
+                let mse = eval_src
+                    .half_mse(w)
+                    .unwrap_or_else(|e| panic!("sharded eval failed mid-run: {e}"));
+                (mse + 0.5 * lambda * dot(w, w), 0.0)
+            };
+            // The default-step smoothness estimate costs 60 streaming
+            // passes over the shards — only pay for it when a default
+            // step is actually needed (Lbfgs line-searches; --step
+            // overrides it for gd/async_gd).
+            let smoothness = || -> Result<f64> {
+                Ok(src.gram_spectral_norm(60, 0x5e)? / n + lambda)
+            };
+            match cfg.algorithm {
+                Algorithm::Gd => {
+                    let step = if cfg.step_size > 0.0 {
+                        cfg.step_size
+                    } else {
+                        1.0 / smoothness()?
+                    };
+                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+                        .eval(eval)
+                        .run(Gd::with_step(step).lambda(lambda).iters(cfg.iterations))?
+                }
+                Algorithm::Lbfgs => {
+                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+                        .eval(eval)
+                        .run(
+                            Lbfgs::new()
+                                .iters(cfg.iterations)
+                                .lambda(lambda)
+                                .memory(cfg.lbfgs_memory),
+                        )?
+                }
+                _ => {
+                    let step = if cfg.step_size > 0.0 {
+                        cfg.step_size
+                    } else {
+                        0.3 / smoothness()?
+                    };
+                    let updates = cfg.iterations * cfg.k;
+                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+                        .eval(eval)
+                        .run(
+                            AsyncGd::with_step(step)
+                                .lambda(lambda)
+                                .updates(updates)
+                                .record_every((updates / 50).max(1)),
+                        )?
+                }
+            }
+        }
+        Algorithm::ProxGradient => {
+            // LASSO objective, streamed: 1/(2n)·‖Xw−y‖² + λ·‖w‖₁
+            let eval = move |w: &[f64]| -> (f64, f64) {
+                // loud on mid-run shard corruption (see the ridge eval)
+                let mse = eval_src
+                    .half_mse(w)
+                    .unwrap_or_else(|e| panic!("sharded eval failed mid-run: {e}"));
+                (mse + lambda * w.iter().map(|v| v.abs()).sum::<f64>(), 0.0)
+            };
+            let step = if cfg.step_size > 0.0 {
+                cfg.step_size
+            } else {
+                // same expression shape as LassoProblem::default_step
+                1.0 / (src.gram_spectral_norm(60, 0x1a)? / n).max(1e-12)
+            };
+            base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+                .eval(eval)
+                .run(Prox::with_step(step).lambda(lambda).iters(cfg.iterations))?
+        }
+        Algorithm::Bcd | Algorithm::AsyncBcd => bail!(
+            "{:?} runs model-parallel (column access) and cannot read a sharded \
+             (row-streamed) source; load the dataset in memory instead",
+            cfg.algorithm
+        ),
+    };
+    if cfg.use_pjrt {
+        println!("PJRT-backed workers: {}/{}", out.pjrt_attached, cfg.workers);
+    }
+    print_trace(&out.trace);
+    Ok(())
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    if let Some(dir) = args.get("source") {
+        return cmd_run_sharded(cfg, dir);
+    }
     println!(
         "experiment '{}': {:?} / {} — n={} p={} m={} k={} β={} iters={}",
         cfg.name,
@@ -397,18 +702,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if cfg.use_pjrt {
         println!("PJRT-backed workers: {}/{}", out.pjrt_attached, cfg.workers);
     }
-    let trace = out.trace;
-    println!("\n{:>6} {:>16} {:>12} {:>10}", "iter", "objective", "metric", "time(s)");
-    let stride = (trace.len() / 12).max(1);
-    for r in trace.records.iter().step_by(stride) {
-        println!("{:>6} {:>16.8} {:>12.4} {:>10.2}", r.iter, r.objective, r.test_metric, r.time);
-    }
-    println!(
-        "\nfinal: objective {:.8}, metric {:.4}, total simulated time {:.2}s",
-        trace.final_objective(),
-        trace.final_test_metric(),
-        trace.total_time()
-    );
+    print_trace(&out.trace);
     Ok(())
 }
 

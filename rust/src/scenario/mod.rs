@@ -336,6 +336,19 @@ impl Scenario {
                     self.name,
                     tape[0].len()
                 );
+                // NaN marks an unsampled hole in a raw recorder snapshot
+                // (see record::TapeHandle); replaying one silently would
+                // smuggle NaN into delay composition, so reject it here
+                // and point at the patching API.
+                for (t, row) in tape.iter().enumerate() {
+                    ensure!(
+                        row.iter().all(|v| !v.is_nan()),
+                        "scenario '{}': replay tape has an unsampled NaN hole at \
+                         iteration {t}; build the tape with TapeHandle::replay(hole_secs) \
+                         or patch the holes before replaying",
+                        self.name
+                    );
+                }
                 Box::new(TraceDelay::new(tape.clone()))
             }
             None => from_spec(&self.base, m, seed),

@@ -7,6 +7,12 @@
 //!   checkout self-seeds; commit the generated files to pin behavior.
 //! - Set `BLESS=1` to regenerate all fixtures after an intentional
 //!   change to coordinator/driver numerics.
+//! - Set `GOLDEN_STRICT=1` to FAIL on any blessed fixture instead:
+//!   auto-blessing silently passes when no fixtures exist at all, so a
+//!   comparison run that would bless anything is a run that compared
+//!   nothing. CI sets it on every golden pass after the first (the
+//!   cross-process re-run and both thread-invariance runs), which turns
+//!   "fixtures quietly regenerated" into a hard failure.
 //! - `scenario_grid_is_bit_deterministic` holds unconditionally: the
 //!   same grid run twice in-process must serialize identically, which is
 //!   the determinism claim of the paper's sample-path guarantees made
@@ -69,11 +75,24 @@ fn golden_traces_match_fixtures() {
     let dir = fixtures_dir();
     fs::create_dir_all(&dir).expect("create fixtures dir");
     let bless = std::env::var("BLESS").is_ok();
+    let strict = std::env::var("GOLDEN_STRICT").is_ok_and(|v| v != "0" && !v.is_empty());
+    assert!(
+        !(bless && strict),
+        "BLESS and GOLDEN_STRICT are mutually exclusive: strict mode exists to \
+         prove no fixture was (re)generated"
+    );
     let mut blessed = 0usize;
     for cell in &cells {
         let path = dir.join(format!("{}.trace", cell.stem()));
         let got = canonical_trace(cell);
         if bless || !path.exists() {
+            assert!(
+                !strict,
+                "GOLDEN_STRICT=1: fixture {} is missing — this run would bless it \
+                 and compare nothing. A strict pass needs the full committed (or \
+                 previously blessed) fixture set.",
+                path.display()
+            );
             fs::write(&path, &got).expect("write fixture");
             blessed += 1;
             continue;
