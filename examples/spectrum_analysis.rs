@@ -4,7 +4,7 @@
 //!     cargo run --release --example spectrum_analysis
 
 use coded_opt::config::Scheme;
-use coded_opt::encoding::{Encoding, SubsetSpectrum};
+use coded_opt::encoding::{EncodingOp, SubsetSpectrum};
 use coded_opt::metrics::TableWriter;
 
 fn main() -> anyhow::Result<()> {
@@ -23,7 +23,7 @@ fn main() -> anyhow::Result<()> {
             Scheme::Steiner,
             Scheme::Haar,
         ] {
-            let enc = Encoding::build(scheme, n, m, beta, 5)?;
+            let enc = EncodingOp::build(scheme, n, m, beta, 5)?;
             let mut an = SubsetSpectrum::new(&enc, 11);
             let stats = an.analyze(k, 12);
             table.row(&stats.summary_row());

@@ -91,12 +91,12 @@ fn main() -> anyhow::Result<()> {
     // ---- encoding construction (amortized once per experiment)
     run_bench("build hadamard encoding 1024x512 m=16", 2, 10, || {
         std::hint::black_box(
-            coded_opt::encoding::Encoding::build(Scheme::Hadamard, 512, 16, 2.0, 3).unwrap(),
+            coded_opt::encoding::EncodingOp::build(Scheme::Hadamard, 512, 16, 2.0, 3).unwrap(),
         );
     });
     run_bench("build steiner  encoding n=496 m=16", 2, 10, || {
         std::hint::black_box(
-            coded_opt::encoding::Encoding::build(Scheme::Steiner, 496, 16, 2.0, 3).unwrap(),
+            coded_opt::encoding::EncodingOp::build(Scheme::Steiner, 496, 16, 2.0, 3).unwrap(),
         );
     });
     Ok(())

@@ -53,22 +53,6 @@ pub struct AsyncGdConfig {
     pub record_every: usize,
 }
 
-/// Legacy entry point. Prefer
-/// `Experiment::new(..).run(driver::AsyncGd::with_step(..))`, which owns
-/// the shard/delay wiring this function expects pre-assembled.
-#[deprecated(note = "use driver::Experiment with driver::AsyncGd instead")]
-pub fn run_async_gd(
-    shards: &[(Mat, Vec<f64>)],
-    delay: &mut dyn DelayModel,
-    n: usize,
-    p: usize,
-    cfg: &AsyncGdConfig,
-    label: &str,
-    eval: &super::EvalFn,
-) -> super::gd::RunOutput {
-    async_gd_loop(shards, delay, n, p, cfg, label, eval)
-}
-
 /// Async data-parallel gradient descent over uncoded partitions.
 ///
 /// `shards[i] = (X_i, y_i)`; the update applied on arrival of worker i's
@@ -142,23 +126,6 @@ pub struct AsyncBcdConfig {
     pub updates: usize,
     pub secs_per_unit: f64,
     pub record_every: usize,
-}
-
-/// Legacy entry point. Prefer
-/// `Experiment::new(..).run(driver::AsyncBcd::with_step(..))`, which
-/// owns the block/delay wiring this function expects pre-assembled and
-/// evaluates on the concatenated iterate like every other solver.
-#[deprecated(note = "use driver::Experiment with driver::AsyncBcd instead")]
-pub fn run_async_bcd(
-    blocks: &[Mat],
-    grad_phi: &dyn Fn(&[f64]) -> Vec<f64>,
-    n: usize,
-    cfg: &AsyncBcdConfig,
-    delay: &mut dyn DelayModel,
-    label: &str,
-    eval_w_blocks: &dyn Fn(&[Vec<f64>]) -> (f64, f64),
-) -> (Trace, Vec<Vec<f64>>, Participation) {
-    async_bcd_loop(blocks, grad_phi, n, cfg, delay, label, eval_w_blocks)
 }
 
 /// Async block coordinate descent: worker i owns uncoded column block

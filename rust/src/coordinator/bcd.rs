@@ -19,83 +19,68 @@ use super::gd::RunOutput;
 use super::KIND_BCD_STEP;
 use crate::cluster::{Gather, Task, WorkerNode};
 use crate::config::Scheme;
-use crate::encoding::{Encoder, Encoding, SMatrix};
+use crate::encoding::{Encoder, EncodingOp, SMatrix};
 use crate::linalg::{Csr, Mat};
 use crate::metrics::{IterRecord, Participation, Trace};
 use anyhow::Result;
 
 /// How the master maps the lifted iterate `v = (v_1, …, v_m)` back to
 /// `w = S̄ᵀv` — the per-iteration reconstruction the trace evaluation
-/// and the final iterate go through.
+/// and the final iterate go through: the structured full-generator
+/// `S̄ᵀ·concat(v)` via [`Encoder::apply_t`] — one FWHT / CSR pass for
+/// structured schemes, per-use regenerated blocks for the dense
+/// ensembles. No dense row of S̄ is stored across iterations.
 #[derive(Clone, Debug)]
-pub enum Reconstruction {
-    /// Per-block dense/sparse `Σᵢ S̄ᵢᵀvᵢ` (the legacy `run_bcd` path).
-    Blocks(Vec<SMatrix>),
-    /// Structured full-generator `S̄ᵀ·concat(v)` via
-    /// [`Encoder::apply_t`]: one FWHT / CSR pass instead of `m` dense
-    /// block products. Differs from the block path only by the
-    /// documented ≤1e-12 reordering of the sum.
-    Fast {
-        /// The (unnormalized) encoding; blocks partition its rows in
-        /// worker order, so concatenating `vᵢ` matches its row order.
-        enc: Encoding,
-        /// Parseval normalization 1/√β applied after the transpose.
-        norm: f64,
-    },
+pub struct Reconstruction {
+    /// The (unnormalized) lazy operator; its row blocks partition the
+    /// lifted coordinates in worker order, so concatenating `vᵢ`
+    /// matches its row order.
+    pub op: EncodingOp,
+    /// Parseval normalization 1/√β applied after the transpose.
+    pub norm: f64,
 }
 
 impl Reconstruction {
     /// Per-worker coordinate-block sizes `b_i`.
     pub fn block_sizes(&self) -> Vec<usize> {
-        match self {
-            Reconstruction::Blocks(sbar) => sbar.iter().map(|s| s.rows()).collect(),
-            Reconstruction::Fast { enc, .. } => enc.blocks.iter().map(|b| b.rows()).collect(),
-        }
+        (0..self.op.workers()).map(|i| self.op.block_rows(i)).collect()
     }
 
     /// Model dimension p.
     pub fn dim(&self) -> usize {
-        match self {
-            Reconstruction::Blocks(sbar) => sbar.first().map_or(0, |s| s.cols()),
-            Reconstruction::Fast { enc, .. } => enc.n,
-        }
+        self.op.n
     }
 
     /// Parseval-normalized dense blocks `S̄_i` — materialized on demand
-    /// (spectrum analysis / debugging / the legacy per-block path); the
-    /// master loop itself never needs them.
+    /// (spectrum analysis / debugging); the master loop itself never
+    /// holds them. Goes through the block visitor so a dense-ensemble
+    /// generator (Paley) builds its frame once, not once per block.
     pub fn sbar_blocks(&self) -> Vec<SMatrix> {
-        match self {
-            Reconstruction::Blocks(sbar) => sbar.clone(),
-            Reconstruction::Fast { enc, norm } => enc
-                .blocks
-                .iter()
-                .map(|s| {
-                    let mut dense = s.to_dense();
-                    dense.scale_inplace(*norm);
-                    SMatrix::Dense(dense)
-                })
-                .collect(),
-        }
+        let mut out = Vec::with_capacity(self.op.workers());
+        self.op
+            .for_each_row_block(&mut |_i, b| {
+                let mut dense = b.to_dense();
+                dense.scale_inplace(self.norm);
+                out.push(SMatrix::Dense(dense));
+                Ok(())
+            })
+            .expect("in-memory block visit cannot fail");
+        out
     }
 
     /// `w = S̄ᵀv` from the per-worker blocks.
+    ///
+    /// Per-use generation applies here too: structured schemes run one
+    /// FWHT/CSR pass; the dense ensembles regenerate their blocks for
+    /// this call and drop them (Paley: one frame build per iteration —
+    /// the price of never storing dense rows across iterations, bounded
+    /// by the construction's size guard and by BCD's modest lifted
+    /// dimension βp).
     pub fn reconstruct(&self, v: &[Vec<f64>]) -> Vec<f64> {
-        match self {
-            Reconstruction::Blocks(sbar) => {
-                let mut w = vec![0.0; self.dim()];
-                for (s, vi) in sbar.iter().zip(v) {
-                    crate::linalg::axpy(1.0, &s.matvec_t(vi), &mut w);
-                }
-                w
-            }
-            Reconstruction::Fast { enc, norm } => {
-                let flat = v.concat();
-                let mut w = enc.apply_t(&flat);
-                crate::linalg::scale(*norm, &mut w);
-                w
-            }
-        }
+        let flat = v.concat();
+        let mut w = self.op.apply_t(&flat);
+        crate::linalg::scale(self.norm, &mut w);
+        w
     }
 }
 
@@ -172,7 +157,7 @@ pub struct ModelParallel {
     pub workers: Vec<Box<dyn WorkerNode>>,
     /// Structured w = S̄ᵀv reconstruction for the master loop. Dense
     /// normalized blocks are NOT materialized here — callers that need
-    /// them (spectrum analysis, the legacy per-block path) ask
+    /// them (spectrum analysis, debugging) ask
     /// [`Reconstruction::sbar_blocks`], which builds them on demand.
     pub recon: Reconstruction,
     /// Data rows n and model dim p.
@@ -197,11 +182,12 @@ pub fn build_model_parallel(
     grad_phi: impl Fn() -> Box<dyn Fn(&[f64]) -> Vec<f64> + Send>,
 ) -> Result<ModelParallel> {
     let p = x.cols();
-    let enc = Encoding::build(scheme, p, m, beta, seed)?;
+    let enc = EncodingOp::build(scheme, p, m, beta, seed)?;
     let norm = 1.0 / enc.beta.sqrt();
     let xt = x.transpose(); // p × n
     // A_i = X·S̄_iᵀ = (S̄_i·Xᵀ)ᵀ, encoded through the structured full-S
-    // path (FWHT / CSR) where the scheme has one.
+    // path (FWHT / CSR) where the scheme has one; dense ensembles
+    // regenerate one block at a time.
     let si_xt_blocks = enc.encode_data(&xt); // b_i × n each
     let mut workers: Vec<Box<dyn WorkerNode>> = Vec::with_capacity(m);
     for mut si_xt in si_xt_blocks {
@@ -210,7 +196,7 @@ pub fn build_model_parallel(
         workers.push(Box::new(BcdWorker::new(a, step, lambda, grad_phi())));
     }
     let beta_achieved = enc.beta;
-    let recon = Reconstruction::Fast { enc, norm };
+    let recon = Reconstruction { op: enc, norm };
     Ok(ModelParallel { workers, recon, n: x.rows(), p, beta: beta_achieved })
 }
 
@@ -220,35 +206,17 @@ pub fn csr_to_dense(z: &Csr) -> Mat {
     z.to_dense()
 }
 
-/// Configuration for [`run_bcd`].
+/// Configuration for the encoded-BCD master loop (driven by
+/// `driver::Bcd`).
 #[derive(Clone, Debug)]
 pub struct BcdConfig {
     pub k: usize,
     pub iters: usize,
 }
 
-/// Legacy entry point. Prefer
-/// `Experiment::new(..).run(driver::Bcd::with_step(..))`, which owns the
-/// problem→lift→cluster wiring this function expects pre-assembled (and
-/// reconstructs through the structured [`Reconstruction::Fast`] path;
-/// this shim keeps the per-block sum).
-#[deprecated(note = "use driver::Experiment with driver::Bcd instead")]
-pub fn run_bcd(
-    cluster: &mut dyn Gather,
-    mp_sbar: &[SMatrix],
-    n: usize,
-    p: usize,
-    cfg: &BcdConfig,
-    label: &str,
-    eval: &super::EvalFn,
-) -> RunOutput {
-    let recon = Reconstruction::Blocks(mp_sbar.to_vec());
-    bcd_loop(cluster, &recon, n, p, cfg, label, eval)
-}
-
 /// Encoded BCD master loop. `eval` receives the reconstructed
 /// `w_t = S̄ᵀv_t` (master-visible state). Called by the `driver::Bcd`
-/// solver with a [`Reconstruction::Fast`].
+/// solver with a [`Reconstruction`].
 pub(crate) fn bcd_loop(
     cluster: &mut dyn Gather,
     recon: &Reconstruction,

@@ -10,7 +10,8 @@ use super::{EvalFn, GradAssembler, KIND_GRADIENT};
 use crate::cluster::{Gather, Task};
 use crate::metrics::{IterRecord, Participation, Trace};
 
-/// Configuration for [`run_gd`].
+/// Configuration for the encoded-GD master loop (driven by
+/// `driver::Gd`).
 #[derive(Clone, Debug)]
 pub struct GdConfig {
     /// Wait-for-k.
@@ -28,28 +29,14 @@ pub struct GdConfig {
 
 /// Solver-core outcome: the trace plus final iterate and participation.
 ///
-/// This is what the algorithm loops (and the deprecated `run_*` shims)
-/// return; `driver::Experiment::run` wraps it into the richer
-/// `driver::RunOutput`, which additionally reports `pjrt_attached` and
-/// the achieved redundancy β. New code should consume the driver type.
+/// This is what the algorithm loops return; `driver::Experiment::run`
+/// wraps it into the richer `driver::RunOutput`, which additionally
+/// reports `pjrt_attached` and the achieved redundancy β. Code outside
+/// the driver should consume the driver type.
 pub struct RunOutput {
     pub trace: Trace,
     pub w: Vec<f64>,
     pub participation: Participation,
-}
-
-/// Legacy entry point. Prefer
-/// `Experiment::new(..).run(driver::Gd::with_step(..))`, which owns the
-/// problem→encoding→cluster wiring this function expects pre-assembled.
-#[deprecated(note = "use driver::Experiment with driver::Gd instead")]
-pub fn run_gd(
-    cluster: &mut dyn Gather,
-    assembler: &GradAssembler,
-    cfg: &GdConfig,
-    label: &str,
-    eval: &EvalFn,
-) -> RunOutput {
-    gd_loop(cluster, assembler, cfg, label, eval)
 }
 
 /// Encoded gradient-descent master loop on a gathered cluster.

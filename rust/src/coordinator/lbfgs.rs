@@ -21,7 +21,8 @@ use crate::cluster::{Gather, Task};
 use crate::linalg::{axpy, dot, scale, sub};
 use crate::metrics::{IterRecord, Participation, Trace};
 
-/// Configuration for [`run_lbfgs`].
+/// Configuration for the encoded-L-BFGS master loop (driven by
+/// `driver::Lbfgs`).
 #[derive(Clone, Debug)]
 pub struct LbfgsConfig {
     pub k: usize,
@@ -69,20 +70,6 @@ fn two_loop(pairs: &[Pair], g: &[f64]) -> Vec<f64> {
     }
     scale(-1.0, &mut q);
     q
-}
-
-/// Legacy entry point. Prefer
-/// `Experiment::new(..).run(driver::Lbfgs::new())`, which owns the
-/// problem→encoding→cluster wiring this function expects pre-assembled.
-#[deprecated(note = "use driver::Experiment with driver::Lbfgs instead")]
-pub fn run_lbfgs(
-    cluster: &mut dyn Gather,
-    assembler: &GradAssembler,
-    cfg: &LbfgsConfig,
-    label: &str,
-    eval: &EvalFn,
-) -> RunOutput {
-    lbfgs_loop(cluster, assembler, cfg, label, eval)
 }
 
 /// Encoded L-BFGS master loop on a gathered cluster. Called by the

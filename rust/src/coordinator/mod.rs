@@ -35,12 +35,10 @@ pub mod schedule;
 pub use gd::{GdConfig, RunOutput};
 pub use lbfgs::LbfgsConfig;
 pub use prox::ProxConfig;
-#[allow(deprecated)]
-pub use {gd::run_gd, lbfgs::run_lbfgs, prox::run_prox};
 
 use crate::cluster::{Task, WorkerNode};
 use crate::config::Scheme;
-use crate::encoding::{Encoding, ReplicationMap};
+use crate::encoding::{EncodingOp, ReplicationMap};
 use crate::linalg::Mat;
 use anyhow::Result;
 
@@ -274,10 +272,14 @@ pub fn build_data_parallel_with_runtime(
             anyhow::ensure!(r >= 1 && m % r == 0, "replication needs r|m (r={r}, m={m})");
             let map = ReplicationMap::new(m, r);
             let parts = map.partitions();
-            let enc = crate::encoding::identity_encoding(n, parts);
-            // partition p's shard, duplicated to each holder
+            let enc = EncodingOp::identity(n, parts);
+            // partition p's shard, duplicated to each holder (identity
+            // blocks are O(rows) CSR slices produced on demand)
             let shards: Vec<(Mat, Vec<f64>)> = (0..parts)
-                .map(|p| (enc.blocks[p].encode_mat(x), enc.blocks[p].matvec(y)))
+                .map(|p| {
+                    let block = enc.row_block(p);
+                    (block.encode_mat(x), block.matvec(y))
+                })
                 .collect();
             let (workers, pjrt_attached) =
                 assemble_replicated_workers(&shards, &map, m, runtime);
@@ -290,10 +292,11 @@ pub fn build_data_parallel_with_runtime(
             })
         }
         _ => {
-            let enc = Encoding::build(scheme, n, m, beta, seed)?;
+            let enc = EncodingOp::build(scheme, n, m, beta, seed)?;
             let norm = 1.0 / enc.beta.sqrt();
             // Structure-aware encode: FWHT / CSR full-S paths where the
-            // scheme has them, dense per-block products as the fallback.
+            // scheme has them, per-use regenerated dense blocks as the
+            // fallback — no dense row of S is ever stored.
             let sx_blocks = enc.encode_data(x);
             let sy_blocks = enc.encode_vec(y);
             let (workers, pjrt_attached) =
@@ -345,13 +348,13 @@ pub fn build_data_parallel_streamed(
             anyhow::ensure!(r >= 1 && m % r == 0, "replication needs r|m (r={r}, m={m})");
             let map = ReplicationMap::new(m, r);
             let parts = map.partitions();
-            let enc = crate::encoding::identity_encoding(n, parts);
+            let enc = EncodingOp::identity(n, parts);
             let sx = encode_data_streamed(&enc, src)?;
             let y = assemble_targets(src)?;
             let shards: Vec<(Mat, Vec<f64>)> = sx
                 .into_iter()
                 .enumerate()
-                .map(|(p, sxp)| (sxp, enc.blocks[p].matvec(&y)))
+                .map(|(p, sxp)| (sxp, enc.row_block(p).matvec(&y)))
                 .collect();
             let (workers, pjrt_attached) =
                 assemble_replicated_workers(&shards, &map, m, runtime);
@@ -364,7 +367,7 @@ pub fn build_data_parallel_streamed(
             })
         }
         _ => {
-            let enc = Encoding::build(scheme, n, m, beta, seed)?;
+            let enc = EncodingOp::build(scheme, n, m, beta, seed)?;
             let norm = 1.0 / enc.beta.sqrt();
             let sx_blocks = encode_data_streamed(&enc, src)?;
             let sy_blocks = encode_vec_streamed(&enc, src)?;

@@ -10,7 +10,8 @@ use crate::cluster::{Gather, Task};
 use crate::linalg::soft_threshold;
 use crate::metrics::{IterRecord, Participation, Trace};
 
-/// Configuration for [`run_prox`].
+/// Configuration for the encoded proximal-gradient master loop
+/// (driven by `driver::Prox`).
 #[derive(Clone, Debug)]
 pub struct ProxConfig {
     pub k: usize,
@@ -23,21 +24,6 @@ pub struct ProxConfig {
 }
 
 pub use super::gd::RunOutput;
-
-/// Legacy entry point. Prefer
-/// `Experiment::new(..).run(driver::Prox::with_step(..))`, which owns
-/// the problem→encoding→cluster wiring this function expects
-/// pre-assembled.
-#[deprecated(note = "use driver::Experiment with driver::Prox instead")]
-pub fn run_prox(
-    cluster: &mut dyn Gather,
-    assembler: &GradAssembler,
-    cfg: &ProxConfig,
-    label: &str,
-    eval: &EvalFn,
-) -> RunOutput {
-    prox_loop(cluster, assembler, cfg, label, eval)
-}
 
 /// Encoded proximal-gradient (ISTA) master loop on a gathered cluster.
 /// Called by the `driver::Prox` solver.

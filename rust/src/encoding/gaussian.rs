@@ -4,32 +4,57 @@
 //! the paper's eq. (8)–(9) normalization `(1/(βηn))·S_AᵀS_A` with N(0,1)
 //! entries: our rows absorb the 1/√n. For large n the subset Grams
 //! concentrate in `[(1−√(1/(βη)))², (1+√(1/(βη)))²]`.
+//!
+//! The ensemble is *lazy*: lowering stores only the seed, and
+//! `dense_rows` regenerates any row range on demand by jumping the
+//! PCG stream ([`Pcg64::advance`]) to the range's first entry — each
+//! standard-normal draw consumes exactly two `next_u64` steps (one
+//! Box–Muller pair, cosine variate only), so rows `r0..r1` start
+//! `2·r0·n` steps into the stream and the regenerated block is
+//! bit-identical to the corresponding slice of a one-pass eager draw.
 
-use super::{split_dense, Encoding, FastS};
+use super::{partition_bounds, EncodingOp, Generator};
 use crate::config::Scheme;
 use crate::linalg::Mat;
 use crate::rng::{Normal, Pcg64};
 
-/// Build the Gaussian encoding: `⌈βn⌉ × n`, split into m row-blocks.
-pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
+/// The Gaussian entry stream selector (fixed so regeneration and the
+/// historical eager construction read the same stream).
+const STREAM: u64 = 0x6a55;
+
+/// Lower the Gaussian descriptor: `⌈βn⌉ × n` in m row-blocks, no entry
+/// generated until a block is used.
+pub(crate) fn lower(n: usize, m: usize, beta: f64, seed: u64) -> EncodingOp {
     let total_rows = (beta * n as f64).round() as usize;
-    let mut rng = Pcg64::with_stream(seed, 0x6a55);
-    let sigma = 1.0 / (n as f64).sqrt();
-    let s = Mat::from_fn(total_rows, n, |_, _| sigma * Normal::sample_standard(&mut rng));
-    Encoding {
+    EncodingOp {
         scheme: Scheme::Gaussian,
         beta: total_rows as f64 / n as f64,
         n,
-        blocks: split_dense(s, m),
-        // i.i.d. ensembles have no exploitable structure: dense fallback.
-        fast: FastS::Dense,
+        bounds: partition_bounds(total_rows, m),
+        gen: Generator::Gaussian { seed },
     }
+}
+
+/// Regenerate rows `r0..r1` of the seeded `N×n` ensemble — bit-identical
+/// to the same rows of a single front-to-back draw (each entry costs two
+/// PCG steps; [`Pcg64::advance`] jumps the stream in O(log) time).
+pub(crate) fn dense_rows(n: usize, seed: u64, r0: usize, r1: usize) -> Mat {
+    let mut rng = Pcg64::with_stream(seed, STREAM);
+    rng.advance(2 * (r0 as u128) * (n as u128));
+    let sigma = 1.0 / (n as f64).sqrt();
+    let block = Mat::from_fn(r1 - r0, n, |_, _| sigma * Normal::sample_standard(&mut rng));
+    super::probe::record_dense(r1 - r0, n);
+    block
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::symmetric_eigenvalues;
+
+    fn build(n: usize, m: usize, beta: f64, seed: u64) -> EncodingOp {
+        lower(n, m, beta, seed)
+    }
 
     #[test]
     fn dimensions_and_beta() {
@@ -38,6 +63,26 @@ mod tests {
         assert_eq!(enc.n, 64);
         assert_eq!(enc.workers(), 8);
         assert!((enc.beta - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_regeneration_matches_one_pass_draw() {
+        // The lazy per-block regeneration must reproduce the bits of a
+        // single front-to-back draw of the full N×n ensemble — the
+        // contract that keeps every fixture pinned to the old eager
+        // construction.
+        let (n, total) = (13, 29);
+        let mut rng = Pcg64::with_stream(7, STREAM);
+        let sigma = 1.0 / (n as f64).sqrt();
+        let eager = Mat::from_fn(total, n, |_, _| sigma * Normal::sample_standard(&mut rng));
+        for (r0, r1) in [(0usize, 5usize), (5, 6), (11, 29), (0, 29)] {
+            let lazy = dense_rows(n, 7, r0, r1);
+            assert_eq!(
+                lazy.as_slice(),
+                eager.row_block(r0, r1).as_slice(),
+                "rows {r0}..{r1} must regenerate bit-identically"
+            );
+        }
     }
 
     #[test]

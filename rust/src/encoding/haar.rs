@@ -11,7 +11,7 @@
 //! columns have O(log N) non-zeros, giving the paper's
 //! `|B_I_k| ≤ βn·log(n)/m` memory bound.
 
-use super::{partition_bounds, Encoding, FastS, SMatrix};
+use super::{partition_bounds, EncodingOp, Generator};
 use crate::config::Scheme;
 use crate::linalg::Csr;
 use crate::rng::{sample_without_replacement, Pcg64};
@@ -61,8 +61,10 @@ fn sibling_avoiding_sample(rng: &mut Pcg64, nn: usize, n: usize) -> Vec<usize> {
     cols
 }
 
-/// Build the subsampled-Haar encoding for dimension n across m workers.
-pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
+/// Lower the subsampled-Haar descriptor for dimension n across m
+/// workers: one sparse CSR generator of O(n log n) non-zeros, nothing
+/// dense anywhere.
+pub(crate) fn lower(n: usize, m: usize, beta: f64, seed: u64) -> EncodingOp {
     let target = ((beta * n as f64).ceil() as usize).max(2 * n);
     let nn = target.next_power_of_two().max(2);
     let mut rng = Pcg64::with_stream(seed, 0x4aa2);
@@ -83,12 +85,13 @@ pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
         })
         .collect();
     let s = Csr::from_triplets(nn, n, &triplets);
-    let bounds = partition_bounds(nn, m);
-    let blocks = bounds
-        .windows(2)
-        .map(|w| SMatrix::Sparse(s.row_block(w[0], w[1])))
-        .collect();
-    Encoding { scheme: Scheme::Haar, beta: nn as f64 / n as f64, n, blocks, fast: FastS::Sparse(s) }
+    EncodingOp {
+        scheme: Scheme::Haar,
+        beta: nn as f64 / n as f64,
+        n,
+        bounds: partition_bounds(nn, m),
+        gen: Generator::Sparse(s),
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +133,10 @@ mod tests {
         assert_eq!(t.len(), 448);
     }
 
+    fn build(n: usize, m: usize, beta: f64, seed: u64) -> EncodingOp {
+        lower(n, m, beta, seed)
+    }
+
     #[test]
     fn encoding_is_exact_tight_frame() {
         let enc = build(24, 4, 2.0, 3);
@@ -146,7 +153,8 @@ mod tests {
     #[test]
     fn blocks_are_sparse() {
         let enc = build(512, 8, 2.0, 5);
-        for b in &enc.blocks {
+        for i in 0..enc.workers() {
+            let b = enc.row_block(i);
             assert!(b.density() < 0.1, "density={}", b.density());
         }
     }

@@ -5,8 +5,14 @@
 //! randomly chosen columns, scale by `1/√n`. Column-orthogonality of `H`
 //! makes this an *exact* tight frame: `SᵀS = (N/n)·I = β·I`, and rows have
 //! exactly unit norm. Encoding a vector is `O(N log N)` via FWHT.
+//!
+//! The scheme is pure operator: lowering builds only the [`FwhtOp`]
+//! (column sample, row permutation, signs — three O(N) vectors), and no
+//! dense row of `S` exists on any encode path. [`FwhtOp::dense_rows`]
+//! can materialize an explicit dense view (spectrum analysis, test
+//! referees) from the closed-form entry `signs[j]·H[perm[i]][cols[j]]/√n`.
 
-use super::{split_dense, Encoding, FastS};
+use super::{partition_bounds, EncodingOp, Generator};
 use crate::config::Scheme;
 use crate::linalg::fwht::{fwht, hadamard_entry};
 use crate::linalg::Mat;
@@ -15,9 +21,9 @@ use crate::rng::{sample_without_replacement, Pcg64};
 /// The structured subsampled-Hadamard operator: the full generator
 /// `S[i][j] = signs[j]·H[perm[i]][cols[j]]/√n` applied through FWHT in
 /// `O(N log N)` instead of the `O(N·n)` dense product — the paper's
-/// §4.2.2 efficient-encoding mechanism. Carried by
-/// [`Encoding::fast`](super::Encoding) so [`super::Encoder::apply`] /
-/// [`super::Encoder::apply_t`] never touch the dense blocks.
+/// §4.2.2 efficient-encoding mechanism. Carried by the Hadamard
+/// [`EncodingOp`] so [`super::Encoder::apply`] /
+/// [`super::Encoder::apply_t`] never touch dense rows.
 #[derive(Clone, Debug)]
 pub struct FwhtOp {
     cols: Vec<usize>,
@@ -27,8 +33,7 @@ pub struct FwhtOp {
 }
 
 impl FwhtOp {
-    /// The operator for (n, β, seed) — the same sample/permutation/signs
-    /// [`build`] materializes, so the two agree to rounding.
+    /// The operator for (n, β, seed).
     pub fn new(n: usize, beta: f64, seed: u64) -> FwhtOp {
         let (cols, nn) = column_sample(n, beta, seed);
         let perm = row_permutation(nn, seed);
@@ -68,42 +73,49 @@ impl FwhtOp {
             .map(|(&c, &s)| s * scale * padded[c])
             .collect()
     }
-}
 
-/// Build the subsampled-Hadamard encoding.
-///
-/// The achieved β is `2^⌈log₂(βn)⌉ / n` (power-of-two rounding). The
-/// dense blocks are materialized for spectrum analysis and per-block
-/// access; the encode hot path runs through the [`FwhtOp`] stored in
-/// [`Encoding::fast`](super::Encoding).
-pub fn build(n: usize, m: usize, beta: f64, seed: u64) -> Encoding {
-    let op = FwhtOp::new(n, beta, seed);
-    let (cols, nn) = (&op.cols, op.nn);
-    let (perm, signs) = (&op.perm, &op.signs);
-    let scale = 1.0 / (n as f64).sqrt();
-    // Two randomizations, both leaving SᵀS = β·I exact:
-    // 1. Rows are randomly permuted before blocking: Sylvester-Hadamard
-    //    is a tensor power (H_N = H_{N/m} ⊗ H_m under bit-split
-    //    indexing), so *consecutive* row blocks align with tensor factors
-    //    and dropping two blocks can annihilate a direction (rank loss).
-    //    The permutation — the matrix analogue of the paper's "insert
-    //    zero rows at random locations, then FWHT" recipe — destroys
-    //    that alignment.
-    // 2. Random column signs (the FJLT trick): raw Hadamard columns are
-    //    coherent with constant data columns (H·1 concentrates on one
-    //    row), so a worker block can see ~zero energy for a bias
-    //    feature; random signs spread every data direction evenly.
-    let s = Mat::from_fn(nn, n, |i, j| scale * signs[j] * hadamard_entry(perm[i], cols[j]));
-    Encoding {
-        scheme: Scheme::Hadamard,
-        beta: nn as f64 / n as f64,
-        n,
-        blocks: split_dense(s, m),
-        fast: FastS::Fwht(op),
+    /// Explicit dense view of rows `r0..r1` of `S`, from the closed-form
+    /// entry — used by spectrum analysis and test referees only; the
+    /// encode paths apply through FWHT and never call this. Recorded by
+    /// the [`super::probe`] counters like every dense materialization.
+    pub fn dense_rows(&self, r0: usize, r1: usize) -> Mat {
+        let scale = 1.0 / (self.dim() as f64).sqrt();
+        let block = Mat::from_fn(r1 - r0, self.dim(), |i, j| {
+            scale * self.signs[j] * hadamard_entry(self.perm[r0 + i], self.cols[j])
+        });
+        super::probe::record_dense(r1 - r0, self.dim());
+        block
     }
 }
 
-/// The row permutation used by [`build`] for (nn, seed).
+/// Lower the subsampled-Hadamard descriptor to its lazy operator.
+///
+/// The achieved β is `2^⌈log₂(βn)⌉ / n` (power-of-two rounding). Two
+/// randomizations, both leaving SᵀS = β·I exact:
+/// 1. Rows are randomly permuted before blocking: Sylvester–Hadamard
+///    is a tensor power (H_N = H_{N/m} ⊗ H_m under bit-split
+///    indexing), so *consecutive* row blocks align with tensor factors
+///    and dropping two blocks can annihilate a direction (rank loss).
+///    The permutation — the matrix analogue of the paper's "insert
+///    zero rows at random locations, then FWHT" recipe — destroys
+///    that alignment.
+/// 2. Random column signs (the FJLT trick): raw Hadamard columns are
+///    coherent with constant data columns (H·1 concentrates on one
+///    row), so a worker block can see ~zero energy for a bias
+///    feature; random signs spread every data direction evenly.
+pub(crate) fn lower(n: usize, m: usize, beta: f64, seed: u64) -> EncodingOp {
+    let op = FwhtOp::new(n, beta, seed);
+    let nn = op.nn;
+    EncodingOp {
+        scheme: Scheme::Hadamard,
+        beta: nn as f64 / n as f64,
+        n,
+        bounds: partition_bounds(nn, m),
+        gen: Generator::Fwht(op),
+    }
+}
+
+/// The row permutation the lowered operator uses for (nn, seed).
 pub fn row_permutation(nn: usize, seed: u64) -> Vec<usize> {
     let mut rng = Pcg64::with_stream(seed, 0x4ad_0001);
     let mut perm: Vec<usize> = (0..nn).collect();
@@ -111,7 +123,7 @@ pub fn row_permutation(nn: usize, seed: u64) -> Vec<usize> {
     perm
 }
 
-/// The random ±1 column signs used by [`build`] for (n, seed).
+/// The random ±1 column signs the lowered operator uses for (n, seed).
 pub fn column_signs(n: usize, seed: u64) -> Vec<f64> {
     let mut rng = Pcg64::with_stream(seed, 0x4ad_0002);
     (0..n).map(|_| if rng.gen_bool(0.5) { 1.0 } else { -1.0 }).collect()
@@ -143,7 +155,7 @@ pub fn encode_fwht(
 }
 
 /// The sorted column sample for (n, β, seed) — exposed so the FWHT fast
-/// path and the materialized matrix agree.
+/// path and a materialized referee matrix agree.
 pub fn column_sample(n: usize, beta: f64, seed: u64) -> (Vec<usize>, usize) {
     let target = (beta * n as f64).ceil() as usize;
     let nn = target.next_power_of_two();
@@ -157,6 +169,10 @@ pub fn column_sample(n: usize, beta: f64, seed: u64) -> (Vec<usize>, usize) {
 mod tests {
     use super::*;
     use crate::linalg::symmetric_eigenvalues;
+
+    fn build(n: usize, m: usize, beta: f64, seed: u64) -> EncodingOp {
+        lower(n, m, beta, seed)
+    }
 
     #[test]
     fn exact_tight_frame() {
@@ -215,6 +231,38 @@ mod tests {
         crate::testutil::assert_allclose(&op.apply(&x), &s.matvec(&x), 1e-10, "op apply");
         let u: Vec<f64> = (0..op.encoded_rows()).map(|_| rng.next_f64() - 0.5).collect();
         crate::testutil::assert_allclose(&op.apply_t(&u), &s.matvec_t(&u), 1e-10, "op apply_t");
+    }
+
+    #[test]
+    fn dense_rows_match_an_independent_referee() {
+        // The referee is built here from the published closed form —
+        // NOT through dense_rows or stack (which routes through
+        // dense_rows), so a sign/permutation/scale slip in dense_rows
+        // cannot cancel out of the comparison.
+        let n = 12;
+        let enc = build(n, 3, 2.0, 9);
+        let super::super::Generator::Fwht(op) = &enc.gen else {
+            panic!("hadamard must lower to an FWHT generator");
+        };
+        let scale = 1.0 / (n as f64).sqrt();
+        let referee = Mat::from_fn(op.nn, n, |i, j| {
+            scale * op.signs[j] * hadamard_entry(op.perm[i], op.cols[j])
+        });
+        let rows = op.dense_rows(0, op.encoded_rows());
+        assert_eq!(rows.as_slice(), referee.as_slice(), "closed form referee");
+        let mid = op.dense_rows(3, 7);
+        assert_eq!(mid.as_slice(), referee.row_block(3, 7).as_slice());
+        // ...and the FWHT apply (an entirely different computation:
+        // scatter → butterfly → gather) agrees with the referee matrix,
+        // closing the loop on the closed form itself.
+        let mut rng = Pcg64::new(2);
+        let x: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
+        crate::testutil::assert_allclose(
+            &op.apply(&x),
+            &referee.matvec(&x),
+            1e-10,
+            "fwht apply vs closed-form referee",
+        );
     }
 
     #[test]

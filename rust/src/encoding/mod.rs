@@ -1,4 +1,4 @@
-//! Encoding matrices (paper §4: Code Design).
+//! Encoding operators (paper §4: Code Design).
 //!
 //! An encoding is a tall matrix `S ∈ R^{N×n}`, `N = βn`, partitioned into
 //! `m` row-blocks `S_i`, one per worker. Under data parallelism worker `i`
@@ -8,6 +8,29 @@
 //! optimum when all workers respond (paper §4.1), while the block-RIP
 //! behaviour of submatrices `S_A` governs robustness when only `k` of `m`
 //! respond.
+//!
+//! ## Operator-first design
+//!
+//! The paper's schemes are *operators*, not matrices (§4.2 "efficient
+//! mechanisms for encoding large-scale data"), and the API mirrors that:
+//! a [`SchemeSpec`] is a pure descriptor (scheme, `n`, `m`, β, seed) that
+//! [`SchemeSpec::lower`]s to a lazy [`EncodingOp`]. The operator exposes
+//! `apply` (`S·x`), `apply_t` (`Sᵀ·x`), and [`EncodingOp::row_block`]
+//! (`S_i` on demand); **no dense row block of `S` is stored anywhere**:
+//!
+//! - Hadamard applies through FWHT in `O(N log N)` and the sparse
+//!   Steiner / Haar / identity generators through one CSR product in
+//!   `O(nnz)` — these structured schemes never materialize a dense block
+//!   on any encode path (asserted by the [`probe`] counters in
+//!   `rust/tests/lazy_encoding.rs`).
+//! - The unstructured ensembles (Gaussian, Paley) regenerate each dense
+//!   block *per use* from the seed — Gaussian by jumping the PCG stream
+//!   to the block's first entry ([`crate::rng::Pcg64::advance`]), Paley
+//!   by rebuilding its (size-guarded) frame — and the block is dropped
+//!   when the use ends. Encoding memory therefore scales with one block
+//!   (Gaussian) or one transient frame (Paley), never with a *stored*
+//!   `N×n` matrix, and every regeneration is bit-identical to the old
+//!   eager one-pass construction.
 //!
 //! Constructions:
 //! - [`gaussian`]    — i.i.d. N(0, 1/n) dense ensemble (eq. 8–9 scaling).
@@ -36,6 +59,42 @@ use crate::config::Scheme;
 use crate::linalg::{Csr, Mat};
 use anyhow::Result;
 
+/// Thread-local accounting of dense generator material — the
+/// block-generation probe behind the "structured schemes never allocate
+/// a dense S block" acceptance test.
+///
+/// Every site that materializes dense rows of a generator `S`
+/// (per-block Gaussian regeneration, the Paley frame build, an explicit
+/// dense view of Hadamard rows for spectrum analysis) records the bytes
+/// here. The counter is thread-local so concurrently running tests
+/// cannot race each other; reset it, drive an encode path, and read it
+/// back on the same thread.
+pub mod probe {
+    use std::cell::Cell;
+
+    thread_local! {
+        static DENSE_BYTES: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Zero this thread's dense-generation counter.
+    pub fn reset() {
+        DENSE_BYTES.with(|c| c.set(0));
+    }
+
+    /// Dense generator bytes materialized on this thread since the last
+    /// [`reset`].
+    pub fn dense_bytes() -> u64 {
+        DENSE_BYTES.with(|c| c.get())
+    }
+
+    /// Record a freshly generated `rows × cols` dense block of `S`.
+    pub(crate) fn record_dense(rows: usize, cols: usize) {
+        DENSE_BYTES.with(|c| {
+            c.set(c.get() + (rows as u64) * (cols as u64) * std::mem::size_of::<f64>() as u64)
+        });
+    }
+}
+
 /// Structured application of an encoding operator: `S·x` / `Sᵀ·x`
 /// without materializing the dense generator where structure allows.
 ///
@@ -43,8 +102,8 @@ use anyhow::Result;
 /// large-scale data" made into an interface: the Hadamard scheme applies
 /// through FWHT in `O(N log N)`, the sparse Steiner / Haar / identity
 /// schemes through one CSR product in `O(nnz)`, and only the
-/// unstructured ensembles (Gaussian, Paley) fall back to the dense
-/// per-block product.
+/// unstructured ensembles (Gaussian, Paley) fall back to per-use
+/// regenerated dense blocks.
 pub trait Encoder {
     /// `S·x` — encode a data-dimension vector to `N = βn` encoded rows.
     fn apply(&self, x: &[f64]) -> Vec<f64>;
@@ -54,25 +113,8 @@ pub trait Encoder {
     fn apply_t(&self, x: &[f64]) -> Vec<f64>;
 }
 
-/// The structured form of a full generator `S`, carried alongside the
-/// per-worker row blocks. Dense materialization is the *fallback*, not
-/// the default: constructions with exploitable structure record it here
-/// and the encode hot paths ([`Encoding::encode_data`],
-/// [`Encoding::encode_vec`], [`Encoder::apply`], [`Encoder::apply_t`])
-/// dispatch on it.
-#[derive(Clone, Debug)]
-pub enum FastS {
-    /// FWHT-able subsampled Hadamard (O(N log N) apply).
-    Fwht(FwhtOp),
-    /// One CSR for the whole generator (sparse constructions: Steiner,
-    /// subsampled Haar, identity/replication partitioning).
-    Sparse(Csr),
-    /// No exploitable structure — fall back to the dense blocks
-    /// (Gaussian, Paley).
-    Dense,
-}
-
-/// A worker's row-block `S_i`, stored dense or sparse depending on the
+/// A worker's row-block `S_i`, produced on demand by
+/// [`EncodingOp::row_block`] — dense or sparse depending on the
 /// construction.
 #[derive(Clone, Debug)]
 pub enum SMatrix {
@@ -145,59 +187,257 @@ impl SMatrix {
     }
 }
 
-/// A full encoding: the row-blocks `S_i`, one per worker, plus the
-/// structured form of the full generator for the fast encode paths.
-#[derive(Clone, Debug)]
-pub struct Encoding {
+impl Encoder for SMatrix {
+    fn apply(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec(x)
+    }
+
+    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
+        self.matvec_t(x)
+    }
+}
+
+/// A pure scheme descriptor: everything needed to *name* an encoding
+/// without building anything. [`SchemeSpec::lower`] turns it into the
+/// lazy [`EncodingOp`]; until then it is a handful of integers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemeSpec {
     pub scheme: Scheme,
-    /// Achieved redundancy factor (total rows / n); constructions round
-    /// to feasible sizes so this can differ slightly from the request.
+    /// Data dimension n (columns of S): data rows under data
+    /// parallelism, model coordinates under model parallelism.
+    pub n: usize,
+    /// Worker count m (row-block partitions of S).
+    pub m: usize,
+    /// Requested redundancy β ≥ 1; constructions round to feasible sizes
+    /// so the achieved [`EncodingOp::beta`] can differ slightly.
+    pub beta: f64,
+    /// Construction seed (column sample, row permutation, signs, or the
+    /// Gaussian entry stream).
+    pub seed: u64,
+}
+
+impl SchemeSpec {
+    /// Describe an encoding. No validation or construction happens here;
+    /// [`lower`](SchemeSpec::lower) validates and resolves sizes.
+    pub fn new(scheme: Scheme, n: usize, m: usize, beta: f64, seed: u64) -> SchemeSpec {
+        SchemeSpec { scheme, n, m, beta, seed }
+    }
+
+    /// Lower the descriptor to a lazy [`EncodingOp`]: validate the
+    /// parameters, resolve the achieved β and row-block boundaries, and
+    /// build the scheme's *generator* — an `FwhtOp` for Hadamard, one
+    /// CSR for the sparse constructions, and only a seed for the dense
+    /// ensembles (their blocks are regenerated per use). Replication is
+    /// *not* an encoding — it is a partitioning strategy (see
+    /// [`ReplicationMap`]); requesting it lowers to the identity
+    /// operator and the duplication happens at the cluster layer.
+    pub fn lower(&self) -> Result<EncodingOp> {
+        anyhow::ensure!(self.n > 0 && self.m > 0, "n and m must be positive");
+        anyhow::ensure!(self.beta >= 1.0, "β must be ≥ 1");
+        let op = match self.scheme {
+            Scheme::Uncoded | Scheme::Replication => EncodingOp::identity(self.n, self.m),
+            Scheme::Gaussian => gaussian::lower(self.n, self.m, self.beta, self.seed),
+            Scheme::Hadamard => hadamard::lower(self.n, self.m, self.beta, self.seed),
+            Scheme::Paley => paley::lower(self.n, self.m)?,
+            Scheme::Steiner => steiner::lower(self.n, self.m)?,
+            Scheme::Haar => haar::lower(self.n, self.m, self.beta, self.seed),
+        };
+        debug_assert_eq!(op.workers(), self.m);
+        Ok(op)
+    }
+}
+
+/// The structured fast path an [`EncodingOp`] answers through —
+/// compiler-checked dispatch for the callers that branch on it (the
+/// CLI's memory notes, the spectrum analyzer's dense-frame cache,
+/// tests). Use [`FastPath::name`] for display.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FastPath {
+    /// `O(N log N)` FWHT apply (Hadamard).
+    Fwht,
+    /// One CSR sweep in `O(nnz)` (Steiner / Haar / identity).
+    Csr,
+    /// Per-use regenerated dense blocks (Gaussian, Paley).
+    Dense,
+}
+
+impl FastPath {
+    /// Display label: `"fwht"` / `"csr"` / `"dense"`.
+    pub fn name(self) -> &'static str {
+        match self {
+            FastPath::Fwht => "fwht",
+            FastPath::Csr => "csr",
+            FastPath::Dense => "dense",
+        }
+    }
+}
+
+/// How an [`EncodingOp`] produces the entries of `S`. Private on
+/// purpose: consumers see `apply`/`apply_t`/`row_block`, not the
+/// representation.
+#[derive(Clone, Debug)]
+pub(crate) enum Generator {
+    /// FWHT-able subsampled Hadamard (O(N log N) apply; dense rows only
+    /// ever exist as explicit on-demand views for spectrum analysis).
+    Fwht(FwhtOp),
+    /// One CSR for the whole generator (sparse constructions: Steiner,
+    /// subsampled Haar, identity/replication partitioning). Row blocks
+    /// are O(nnz) slices, never dense.
+    Sparse(Csr),
+    /// i.i.d. Gaussian ensemble: blocks are regenerated per use from the
+    /// seed (PCG stream jump to the block's first entry), bit-identical
+    /// to a one-pass eager draw.
+    Gaussian { seed: u64 },
+    /// Paley ETF: the frame is rebuilt (conference matrix +
+    /// eigendecomposition, size-guarded at lower time) per use and
+    /// dropped after. Inherently dense-transient — the construction has
+    /// no sub-quadratic representation.
+    Paley,
+}
+
+/// A lazy encoding operator: scheme metadata, row-block boundaries, and
+/// a private generator — never a stored dense `S`.
+///
+/// Dense blocks of unstructured schemes are produced on demand by
+/// [`row_block`](EncodingOp::row_block) /
+/// [`for_each_row_block`](EncodingOp::for_each_row_block) and dropped
+/// after use; structured schemes answer every encode path through FWHT /
+/// CSR without materializing anything dense.
+#[derive(Clone, Debug)]
+pub struct EncodingOp {
+    pub scheme: Scheme,
+    /// Achieved redundancy / frame constant (total rows / n for the
+    /// subsampled constructions; exactly 2 for Paley). Constructions
+    /// round to feasible sizes so this can differ from the request.
     pub beta: f64,
     /// Data dimension n (columns of S).
     pub n: usize,
-    /// Per-worker row-blocks.
-    pub blocks: Vec<SMatrix>,
-    /// Structured full-S operator ([`FastS::Dense`] when the
-    /// construction has no exploitable structure).
-    pub fast: FastS,
+    /// m+1 row offsets: block i spans rows `bounds[i]..bounds[i+1]`.
+    pub(crate) bounds: Vec<usize>,
+    pub(crate) gen: Generator,
 }
 
-impl Encoding {
-    /// Build an encoding for scheme / dimension / workers / redundancy.
-    ///
-    /// `n` is the number of data rows (data parallelism) or model
-    /// coordinates (model parallelism). Replication is *not* built here —
-    /// it is a partitioning strategy, see [`ReplicationMap`]; requesting
-    /// it returns the identity encoding (the duplication happens at the
-    /// cluster layer).
-    pub fn build(scheme: Scheme, n: usize, m: usize, beta: f64, seed: u64) -> Result<Encoding> {
-        anyhow::ensure!(n > 0 && m > 0, "n and m must be positive");
-        anyhow::ensure!(beta >= 1.0, "β must be ≥ 1");
-        let enc = match scheme {
-            Scheme::Uncoded | Scheme::Replication => identity_encoding(n, m),
-            Scheme::Gaussian => gaussian::build(n, m, beta, seed),
-            Scheme::Hadamard => hadamard::build(n, m, beta, seed),
-            Scheme::Paley => paley::build(n, m)?,
-            Scheme::Steiner => steiner::build(n, m)?,
-            Scheme::Haar => haar::build(n, m, beta, seed),
-        };
-        debug_assert_eq!(enc.blocks.len(), m);
-        Ok(enc)
+impl EncodingOp {
+    /// [`SchemeSpec::new`] + [`SchemeSpec::lower`] in one call — the
+    /// idiom for call sites that already hold the five knobs.
+    pub fn build(scheme: Scheme, n: usize, m: usize, beta: f64, seed: u64) -> Result<EncodingOp> {
+        SchemeSpec::new(scheme, n, m, beta, seed).lower()
+    }
+
+    /// Identity operator: S = I split into m near-equal contiguous row
+    /// blocks (the uncoded baseline and the replication substrate).
+    pub fn identity(n: usize, m: usize) -> EncodingOp {
+        let triplets: Vec<(usize, usize, f64)> = (0..n).map(|r| (r, r, 1.0)).collect();
+        let full = Csr::from_triplets(n, n, &triplets);
+        EncodingOp {
+            scheme: Scheme::Uncoded,
+            beta: 1.0,
+            n,
+            bounds: partition_bounds(n, m),
+            gen: Generator::Sparse(full),
+        }
     }
 
     /// Number of workers m.
     pub fn workers(&self) -> usize {
-        self.blocks.len()
+        self.bounds.len() - 1
     }
 
     /// Total encoded rows N = Σᵢ rows(S_i).
     pub fn total_rows(&self) -> usize {
-        self.blocks.iter().map(|b| b.rows()).sum()
+        *self.bounds.last().unwrap()
     }
 
-    /// Stack `S_A = [S_i]_{i∈A}` densely (spectrum analysis / tests).
+    /// Rows of worker i's block S_i.
+    pub fn block_rows(&self, i: usize) -> usize {
+        self.bounds[i + 1] - self.bounds[i]
+    }
+
+    /// The m+1 row offsets partitioning `0..total_rows()` into blocks.
+    pub fn block_bounds(&self) -> &[usize] {
+        &self.bounds
+    }
+
+    /// The structured fast path this operator answers through.
+    pub fn fast_path(&self) -> FastPath {
+        match &self.gen {
+            Generator::Fwht(_) => FastPath::Fwht,
+            Generator::Sparse(_) => FastPath::Csr,
+            Generator::Gaussian { .. } | Generator::Paley => FastPath::Dense,
+        }
+    }
+
+    /// Worker i's row block `S_i`, produced on demand: an O(nnz) CSR
+    /// slice for sparse generators, a regenerated dense block for the
+    /// dense ensembles (bit-identical across calls), and an explicit
+    /// dense view for Hadamard (spectrum analysis / streaming referees —
+    /// the encode paths never call this for FWHT).
+    pub fn row_block(&self, i: usize) -> SMatrix {
+        let (r0, r1) = (self.bounds[i], self.bounds[i + 1]);
+        match &self.gen {
+            Generator::Sparse(s) => SMatrix::Sparse(s.row_block(r0, r1)),
+            Generator::Fwht(op) => SMatrix::Dense(op.dense_rows(r0, r1)),
+            Generator::Gaussian { seed } => {
+                SMatrix::Dense(gaussian::dense_rows(self.n, *seed, r0, r1))
+            }
+            Generator::Paley => SMatrix::Dense(self.dense_full().row_block(r0, r1)),
+        }
+    }
+
+    /// Visit every row block in worker order, generating each on demand
+    /// and dropping it when the callback returns. Paley regenerates its
+    /// frame once per visit (not once per block); everything else goes
+    /// through [`row_block`](EncodingOp::row_block).
+    pub fn for_each_row_block(
+        &self,
+        f: &mut dyn FnMut(usize, &SMatrix) -> Result<()>,
+    ) -> Result<()> {
+        if let Generator::Paley = &self.gen {
+            let full = self.dense_full();
+            for i in 0..self.workers() {
+                let b = SMatrix::Dense(full.row_block(self.bounds[i], self.bounds[i + 1]));
+                f(i, &b)?;
+            }
+            return Ok(());
+        }
+        for i in 0..self.workers() {
+            let b = self.row_block(i);
+            f(i, &b)?;
+        }
+        Ok(())
+    }
+
+    /// The full dense `S` of an unstructured generator — the transient
+    /// the dense ensembles regenerate per use. Panics for structured
+    /// generators, which must never take a dense path.
+    fn dense_full(&self) -> Mat {
+        match &self.gen {
+            Generator::Gaussian { seed } => {
+                gaussian::dense_rows(self.n, *seed, 0, self.total_rows())
+            }
+            Generator::Paley => paley::paley_etf(self.n)
+                .expect("Paley feasibility was validated when the spec was lowered"),
+            _ => unreachable!("structured generators have no dense_full path"),
+        }
+    }
+
+    /// Stack `S_A = [S_i]_{i∈A}` densely (spectrum analysis / tests);
+    /// the materialization is this call's explicit product. Paley
+    /// builds its (monolithic) frame once and slices it; every other
+    /// generator — including Gaussian, whose stream jump makes a block
+    /// regeneration exactly proportional to the block — produces only
+    /// the requested blocks.
     pub fn stack(&self, subset: &[usize]) -> Mat {
-        let blocks: Vec<Mat> = subset.iter().map(|&i| self.blocks[i].to_dense()).collect();
+        let blocks: Vec<Mat> = match &self.gen {
+            Generator::Paley => {
+                let full = self.dense_full();
+                subset
+                    .iter()
+                    .map(|&i| full.row_block(self.bounds[i], self.bounds[i + 1]))
+                    .collect()
+            }
+            _ => subset.iter().map(|&i| self.row_block(i).to_dense()).collect(),
+        };
         let refs: Vec<&Mat> = blocks.iter().collect();
         Mat::vstack(&refs)
     }
@@ -205,8 +445,15 @@ impl Encoding {
     /// Normalized Gram `G_A = (1/(ηβ))·S_Aᵀ S_A`, whose eigenvalue spread
     /// around 1 is the ε of the block-RIP condition (Definition 1).
     pub fn gram_normalized(&self, subset: &[usize]) -> Mat {
-        let sa = self.stack(subset);
-        let eta = subset.len() as f64 / self.workers() as f64;
+        self.gram_normalized_of(&self.stack(subset), subset.len())
+    }
+
+    /// [`gram_normalized`](EncodingOp::gram_normalized) from an
+    /// already-stacked `S_A` with `|A| = k` — the one place the
+    /// `1/(ηβ)` Definition-1 normalization lives, shared with the
+    /// spectrum analyzer's cached-frame path so the two cannot drift.
+    pub fn gram_normalized_of(&self, sa: &Mat, k: usize) -> Mat {
+        let eta = k as f64 / self.workers() as f64;
         let mut g = sa.gram();
         g.scale_inplace(1.0 / (eta * self.beta));
         g
@@ -216,17 +463,16 @@ impl Encoding {
     /// worker.
     ///
     /// Structure-aware: the FWHT path encodes column-by-column in
-    /// `O(p·N log N)` instead of the dense `O(p·N·n)` block products
-    /// (≤ rounding-level difference from the dense path); sparse
-    /// generators already encode block-wise in `O(nnz·p)`. The dense
-    /// per-block product is the fallback.
+    /// `O(p·N log N)`, the CSR path sweeps the generator's rows in
+    /// `O(nnz·p)` — neither materializes a dense block. The dense
+    /// ensembles regenerate one block at a time, multiply, and drop it.
     pub fn encode_data(&self, x: &Mat) -> Vec<Mat> {
         assert_eq!(self.n, x.rows(), "encode dim mismatch");
-        match &self.fast {
-            FastS::Fwht(op) => {
-                let p = x.cols();
+        let p = x.cols();
+        match &self.gen {
+            Generator::Fwht(op) => {
                 let mut outs: Vec<Mat> =
-                    self.blocks.iter().map(|b| Mat::zeros(b.rows(), p)).collect();
+                    (0..self.workers()).map(|i| Mat::zeros(self.block_rows(i), p)).collect();
                 let mut col = vec![0.0; x.rows()];
                 for j in 0..p {
                     for (i, c) in col.iter_mut().enumerate() {
@@ -243,8 +489,28 @@ impl Encoding {
                 }
                 outs
             }
-            FastS::Sparse(_) | FastS::Dense => {
-                self.blocks.iter().map(|s| s.encode_mat(x)).collect()
+            Generator::Sparse(s) => {
+                let mut outs: Vec<Mat> =
+                    (0..self.workers()).map(|i| Mat::zeros(self.block_rows(i), p)).collect();
+                for (i, out) in outs.iter_mut().enumerate() {
+                    let r0 = self.bounds[i];
+                    for local in 0..out.rows() {
+                        let orow = out.row_mut(local);
+                        for (j, v) in s.row_iter(r0 + local) {
+                            crate::linalg::axpy(v, x.row(j), orow);
+                        }
+                    }
+                }
+                outs
+            }
+            Generator::Gaussian { .. } | Generator::Paley => {
+                let mut outs = Vec::with_capacity(self.workers());
+                self.for_each_row_block(&mut |_i, b| {
+                    outs.push(b.encode_mat(x));
+                    Ok(())
+                })
+                .expect("in-memory block visit cannot fail");
+                outs
             }
         }
     }
@@ -252,33 +518,37 @@ impl Encoding {
     /// Apply to a vector: returns `S_i·y` per worker (one structured
     /// full-S apply sliced at the block boundaries where possible).
     pub fn encode_vec(&self, y: &[f64]) -> Vec<Vec<f64>> {
-        match &self.fast {
-            FastS::Fwht(_) | FastS::Sparse(_) => {
+        match &self.gen {
+            Generator::Fwht(_) | Generator::Sparse(_) => {
                 let full = self.apply(y);
-                let mut out = Vec::with_capacity(self.blocks.len());
-                let mut r = 0;
-                for b in &self.blocks {
-                    out.push(full[r..r + b.rows()].to_vec());
-                    r += b.rows();
-                }
+                self.bounds.windows(2).map(|w| full[w[0]..w[1]].to_vec()).collect()
+            }
+            Generator::Gaussian { .. } | Generator::Paley => {
+                let mut out = Vec::with_capacity(self.workers());
+                self.for_each_row_block(&mut |_i, b| {
+                    out.push(b.matvec(y));
+                    Ok(())
+                })
+                .expect("in-memory block visit cannot fail");
                 out
             }
-            FastS::Dense => self.blocks.iter().map(|s| s.matvec(y)).collect(),
         }
     }
 }
 
-impl Encoder for Encoding {
+impl Encoder for EncodingOp {
     fn apply(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n, "apply dim mismatch");
-        match &self.fast {
-            FastS::Fwht(op) => op.apply(x),
-            FastS::Sparse(s) => s.matvec(x),
-            FastS::Dense => {
+        match &self.gen {
+            Generator::Fwht(op) => op.apply(x),
+            Generator::Sparse(s) => s.matvec(x),
+            Generator::Gaussian { .. } | Generator::Paley => {
                 let mut out = Vec::with_capacity(self.total_rows());
-                for b in &self.blocks {
+                self.for_each_row_block(&mut |_i, b| {
                     out.extend(b.matvec(x));
-                }
+                    Ok(())
+                })
+                .expect("in-memory block visit cannot fail");
                 out
             }
         }
@@ -286,44 +556,22 @@ impl Encoder for Encoding {
 
     fn apply_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.total_rows(), "apply_t dim mismatch");
-        match &self.fast {
-            FastS::Fwht(op) => op.apply_t(x),
-            FastS::Sparse(s) => s.matvec_t(x),
-            FastS::Dense => {
+        match &self.gen {
+            Generator::Fwht(op) => op.apply_t(x),
+            Generator::Sparse(s) => s.matvec_t(x),
+            Generator::Gaussian { .. } | Generator::Paley => {
                 let mut out = vec![0.0; self.n];
-                let mut r = 0;
-                for b in &self.blocks {
-                    let part = b.matvec_t(&x[r..r + b.rows()]);
+                let bounds = &self.bounds;
+                self.for_each_row_block(&mut |i, b| {
+                    let part = b.matvec_t(&x[bounds[i]..bounds[i + 1]]);
                     crate::linalg::axpy(1.0, &part, &mut out);
-                    r += b.rows();
-                }
+                    Ok(())
+                })
+                .expect("in-memory block visit cannot fail");
                 out
             }
         }
     }
-}
-
-impl Encoder for SMatrix {
-    fn apply(&self, x: &[f64]) -> Vec<f64> {
-        self.matvec(x)
-    }
-
-    fn apply_t(&self, x: &[f64]) -> Vec<f64> {
-        self.matvec_t(x)
-    }
-}
-
-/// Identity encoding: S = I split into m near-equal contiguous row blocks
-/// (the uncoded baseline).
-pub fn identity_encoding(n: usize, m: usize) -> Encoding {
-    let triplets: Vec<(usize, usize, f64)> = (0..n).map(|r| (r, r, 1.0)).collect();
-    let full = Csr::from_triplets(n, n, &triplets);
-    let bounds = partition_bounds(n, m);
-    let blocks = bounds
-        .windows(2)
-        .map(|w| SMatrix::Sparse(full.row_block(w[0], w[1])))
-        .collect();
-    Encoding { scheme: Scheme::Uncoded, beta: 1.0, n, blocks, fast: FastS::Sparse(full) }
 }
 
 /// Boundaries that split `total` items into `m` near-equal contiguous
@@ -341,16 +589,6 @@ pub fn partition_bounds(total: usize, m: usize) -> Vec<usize> {
     bounds
 }
 
-/// Split a dense matrix `S ∈ R^{N×n}` into m near-equal row-block
-/// [`SMatrix::Dense`] chunks.
-pub(crate) fn split_dense(s: Mat, m: usize) -> Vec<SMatrix> {
-    let bounds = partition_bounds(s.rows(), m);
-    bounds
-        .windows(2)
-        .map(|w| SMatrix::Dense(s.row_block(w[0], w[1])))
-        .collect()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,8 +601,8 @@ mod tests {
     }
 
     #[test]
-    fn identity_encoding_blocks_are_identity_rows() {
-        let enc = identity_encoding(7, 3);
+    fn identity_op_blocks_are_identity_rows() {
+        let enc = EncodingOp::identity(7, 3);
         assert_eq!(enc.total_rows(), 7);
         assert_eq!(enc.workers(), 3);
         let x: Vec<f64> = (0..7).map(|i| i as f64).collect();
@@ -376,14 +614,28 @@ mod tests {
     }
 
     #[test]
-    fn build_rejects_bad_args() {
-        assert!(Encoding::build(Scheme::Gaussian, 0, 4, 2.0, 1).is_err());
-        assert!(Encoding::build(Scheme::Gaussian, 16, 4, 0.5, 1).is_err());
+    fn lower_rejects_bad_args() {
+        assert!(EncodingOp::build(Scheme::Gaussian, 0, 4, 2.0, 1).is_err());
+        assert!(EncodingOp::build(Scheme::Gaussian, 16, 4, 0.5, 1).is_err());
+        assert!(SchemeSpec::new(Scheme::Hadamard, 16, 0, 2.0, 1).lower().is_err());
+    }
+
+    #[test]
+    fn spec_is_a_pure_descriptor() {
+        // Constructing and copying a spec generates nothing.
+        probe::reset();
+        let spec = SchemeSpec::new(Scheme::Gaussian, 64, 4, 2.0, 9);
+        let spec2 = spec;
+        assert_eq!(spec, spec2);
+        let op = spec.lower().unwrap();
+        assert_eq!(probe::dense_bytes(), 0, "lowering stores no dense blocks");
+        assert_eq!(op.workers(), 4);
+        assert_eq!(op.total_rows(), 128);
     }
 
     #[test]
     fn stack_concatenates_subset_in_order() {
-        let enc = identity_encoding(6, 3);
+        let enc = EncodingOp::identity(6, 3);
         let sa = enc.stack(&[2, 0]);
         assert_eq!(sa.rows(), 4);
         // first rows come from block 2 (rows 4..6 of I)
@@ -393,7 +645,7 @@ mod tests {
 
     #[test]
     fn identity_fast_ops_are_the_identity() {
-        let enc = identity_encoding(7, 3);
+        let enc = EncodingOp::identity(7, 3);
         let x: Vec<f64> = (0..7).map(|i| i as f64 - 3.0).collect();
         assert_eq!(enc.apply(&x), x);
         assert_eq!(enc.apply_t(&x), x);
@@ -406,10 +658,10 @@ mod tests {
     fn fast_encode_data_matches_dense_blocks() {
         let mut rng = crate::rng::Pcg64::new(3);
         let x = Mat::from_fn(24, 5, |_, _| rng.next_f64() - 0.5);
-        let enc = Encoding::build(Scheme::Hadamard, 24, 4, 2.0, 7).unwrap();
+        let enc = EncodingOp::build(Scheme::Hadamard, 24, 4, 2.0, 7).unwrap();
         let fast = enc.encode_data(&x);
-        for (f, b) in fast.iter().zip(&enc.blocks) {
-            let dense = b.encode_mat(&x);
+        for (i, f) in fast.iter().enumerate() {
+            let dense = enc.row_block(i).encode_mat(&x);
             crate::testutil::assert_allclose(f.as_slice(), dense.as_slice(), 1e-10, "encode");
         }
     }

@@ -18,10 +18,15 @@
 //! Paley frame with `N/2 ≥ n` and keep `n` coordinates — the paper's
 //! "bank of encoding matrices, subsample columns" trick (§5.2).
 
-use super::{split_dense, Encoding, FastS};
+use super::{partition_bounds, EncodingOp, Generator};
 use crate::config::Scheme;
 use crate::linalg::{symmetric_eigen, Mat};
 use anyhow::{bail, Result};
+
+/// Largest conference-matrix order the dense eigendecomposition-based
+/// construction will attempt (the frame build materializes and
+/// decomposes an nn×nn matrix).
+const MAX_PALEY_ORDER: usize = 1 << 14;
 
 /// Legendre symbol χ(a) over GF(q): 1 if a is a non-zero QR, −1 if
 /// non-residue, 0 if a ≡ 0.
@@ -91,6 +96,18 @@ fn paley_prime_for(n: usize) -> Result<i64> {
     bail!("no Paley prime found near n={n}")
 }
 
+/// Shared feasibility guard for the dense eigendecomposition-based
+/// construction — called at lower time (loud, early) and again by
+/// [`paley_etf`] so a hand-built call cannot bypass it.
+fn check_order(nn: usize, n: usize) -> Result<()> {
+    anyhow::ensure!(
+        nn <= MAX_PALEY_ORDER,
+        "Paley frame of order {nn} (n={n}) exceeds the dense eigendecomposition \
+         budget; use a structured scheme (hadamard/haar) at this size"
+    );
+    Ok(())
+}
+
 /// Symmetric conference matrix of order q+1 (q prime, q ≡ 1 mod 4).
 pub fn conference_matrix(q: i64) -> Mat {
     let n = (q + 1) as usize;
@@ -118,11 +135,7 @@ pub fn paley_etf(n: usize) -> Result<Mat> {
     let nn = (q + 1) as usize; // number of frame vectors
     // Proper error path instead of an OOM abort: the construction
     // materializes the nn×nn conference matrix and eigendecomposes it.
-    anyhow::ensure!(
-        nn <= 1 << 14,
-        "Paley frame of order {nn} (n={n}) exceeds the dense eigendecomposition \
-         budget; use a structured scheme (hadamard/haar) at this size"
-    );
+    check_order(nn, n)?;
     let half = nn / 2; // frame dimension
     let c = conference_matrix(q);
     // P = (I + C/√q)/2 — projection of rank nn/2.
@@ -147,29 +160,36 @@ pub fn paley_etf(n: usize) -> Result<Mat> {
     }
     // Keep the first n coordinates (column subsample) if the frame
     // dimension exceeds the requested n.
-    if half > n {
+    let s = if half > n {
         let idx: Vec<usize> = (0..n).collect();
-        Ok(s.select_cols(&idx))
+        s.select_cols(&idx)
     } else {
-        Ok(s)
-    }
+        s
+    };
+    super::probe::record_dense(s.rows(), s.cols());
+    Ok(s)
 }
 
-/// Build the Paley encoding split across m workers.
+/// Lower the Paley descriptor: validate feasibility (prime search +
+/// dense-eigendecomposition size guard) and record the row-block
+/// boundaries — the frame itself is regenerated per use by the
+/// [`EncodingOp`]'s dense paths and dropped after (the construction has
+/// no sub-quadratic representation, so its memory story is "transient",
+/// not "structured").
 ///
 /// `beta` is the FRAME CONSTANT (SᵀS = β·I), which stays exactly 2 even
 /// after column restriction — a sub-block of 2·I is 2·I. The storage
 /// redundancy (rows/n) can be slightly larger due to the prime search.
-pub fn build(n: usize, m: usize) -> Result<Encoding> {
-    let s = paley_etf(n)?;
-    Ok(Encoding {
+pub(crate) fn lower(n: usize, m: usize) -> Result<EncodingOp> {
+    let q = paley_prime_for(n)?;
+    let nn = (q + 1) as usize;
+    check_order(nn, n)?;
+    Ok(EncodingOp {
         scheme: Scheme::Paley,
         beta: 2.0,
         n,
-        blocks: split_dense(s, m),
-        // eigendecomposition-derived frame: no fast structure, dense
-        // fallback.
-        fast: FastS::Dense,
+        bounds: partition_bounds(nn, m),
+        gen: Generator::Paley,
     })
 }
 
@@ -293,11 +313,15 @@ mod tests {
     }
 
     #[test]
-    fn build_partitions_workers() {
-        let enc = build(7, 7).unwrap();
+    fn lower_partitions_workers() {
+        let enc = lower(7, 7).unwrap();
         assert_eq!(enc.workers(), 7);
         assert_eq!(enc.total_rows(), 14);
         assert!((enc.beta - 2.0).abs() < 1e-12);
+        // the lowered bounds agree with the regenerated frame's shape
+        let s = paley_etf(7).unwrap();
+        assert_eq!(s.rows(), enc.total_rows());
+        assert_eq!(s.cols(), enc.n);
     }
 
     #[test]

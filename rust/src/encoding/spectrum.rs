@@ -7,7 +7,7 @@
 //! empirical claim (Prop. 8 and Figs. 5–6) is that ETF constructions keep
 //! the *bulk* of the spectrum pinned at exactly 1.
 
-use super::Encoding;
+use super::{EncodingOp, FastPath};
 use crate::linalg::symmetric_eigenvalues;
 use crate::rng::{sample_without_replacement, Pcg64};
 
@@ -64,14 +64,48 @@ impl SpectrumStats {
 }
 
 /// Spectrum analyzer over random subsets.
+///
+/// Spectrum analysis is an *explicitly dense* consumer of the lazy
+/// [`EncodingOp`]: it stacks `S_A` per sampled subset. For the dense
+/// ensembles (Gaussian, Paley) the analyzer materializes the full frame
+/// ONCE at construction and slices it per subset — regenerating per
+/// subset would rebuild Paley's eigendecomposition `subsets` times for
+/// identical bits. Structured schemes still produce their (sparse /
+/// closed-form) blocks on demand per subset.
 pub struct SubsetSpectrum<'a> {
-    encoding: &'a Encoding,
+    encoding: &'a EncodingOp,
     rng: Pcg64,
+    /// The one explicit dense materialization for dense-ensemble
+    /// generators (`None` for structured schemes).
+    full: Option<crate::linalg::Mat>,
 }
 
 impl<'a> SubsetSpectrum<'a> {
-    pub fn new(encoding: &'a Encoding, seed: u64) -> Self {
-        SubsetSpectrum { encoding, rng: Pcg64::with_stream(seed, 0x5bec) }
+    pub fn new(encoding: &'a EncodingOp, seed: u64) -> Self {
+        let full = (encoding.fast_path() == FastPath::Dense).then(|| {
+            let all: Vec<usize> = (0..encoding.workers()).collect();
+            encoding.stack(&all)
+        });
+        SubsetSpectrum { encoding, rng: Pcg64::with_stream(seed, 0x5bec), full }
+    }
+
+    /// `(1/(ηβ))·S_AᵀS_A` for a subset — from the cached full frame when
+    /// one exists (bit-identical to [`EncodingOp::gram_normalized`]:
+    /// `stack` slices the same regenerated frame at the same bounds).
+    fn subset_gram(&self, subset: &[usize]) -> crate::linalg::Mat {
+        match &self.full {
+            None => self.encoding.gram_normalized(subset),
+            Some(full) => {
+                let b = self.encoding.block_bounds();
+                let blocks: Vec<crate::linalg::Mat> =
+                    subset.iter().map(|&i| full.row_block(b[i], b[i + 1])).collect();
+                let refs: Vec<&crate::linalg::Mat> = blocks.iter().collect();
+                let sa = crate::linalg::Mat::vstack(&refs);
+                // the 1/(ηβ) normalization lives on the op — shared with
+                // gram_normalized so the two paths cannot drift
+                self.encoding.gram_normalized_of(&sa, subset.len())
+            }
+        }
     }
 
     /// Pool eigenvalues of `(1/(ηβ))·S_AᵀS_A` over `subsets` random A of
@@ -91,7 +125,7 @@ impl<'a> SubsetSpectrum<'a> {
         let mut lmax = f64::NEG_INFINITY;
         for _ in 0..subsets {
             let subset = sample_without_replacement(&mut self.rng, m, k);
-            let g = self.encoding.gram_normalized(&subset);
+            let g = self.subset_gram(&subset);
             let eigs = symmetric_eigenvalues(&g);
             lmin = lmin.min(eigs[0]);
             lmax = lmax.max(*eigs.last().unwrap());
@@ -120,7 +154,7 @@ impl<'a> SubsetSpectrum<'a> {
 /// to 1 (up to the (ηβ) normalization — exactly-1 eigenvalues of
 /// `(1/β)S_AᵀS_A` map to `1/η` here; this helper counts eigenvalues of
 /// the β-normalized Gram at 1).
-pub fn prop8_unit_eigen_count(encoding: &Encoding, subset: &[usize], tol: f64) -> usize {
+pub fn prop8_unit_eigen_count(encoding: &EncodingOp, subset: &[usize], tol: f64) -> usize {
     let sa = encoding.stack(subset);
     let mut g = sa.gram();
     g.scale_inplace(1.0 / encoding.beta);
@@ -132,11 +166,11 @@ pub fn prop8_unit_eigen_count(encoding: &Encoding, subset: &[usize], tol: f64) -
 mod tests {
     use super::*;
     use crate::config::Scheme;
-    use crate::encoding::Encoding;
+    use crate::encoding::EncodingOp;
 
     #[test]
     fn full_subset_of_tight_frame_has_flat_spectrum() {
-        let enc = Encoding::build(Scheme::Hadamard, 16, 4, 2.0, 1).unwrap();
+        let enc = EncodingOp::build(Scheme::Hadamard, 16, 4, 2.0, 1).unwrap();
         let mut an = SubsetSpectrum::new(&enc, 2);
         let stats = an.analyze(4, 3); // k = m: S_A = S always
         assert!(stats.epsilon() < 1e-9, "eps={}", stats.epsilon());
@@ -146,7 +180,7 @@ mod tests {
     #[test]
     fn uncoded_subsets_lose_rank() {
         // identity encoding: any k < m drops rows → zero eigenvalues.
-        let enc = Encoding::build(Scheme::Uncoded, 12, 4, 1.0, 1).unwrap();
+        let enc = EncodingOp::build(Scheme::Uncoded, 12, 4, 1.0, 1).unwrap();
         let mut an = SubsetSpectrum::new(&enc, 3);
         let stats = an.analyze(3, 4);
         assert!(stats.lambda_min.abs() < 1e-12, "λmin={}", stats.lambda_min);
@@ -156,7 +190,7 @@ mod tests {
     fn coded_subsets_stay_full_rank() {
         // Hadamard β=2, η=3/4 ≥ 1/β: S_A keeps full column rank — in
         // sharp contrast with the uncoded case where λ_min is exactly 0.
-        let enc = Encoding::build(Scheme::Hadamard, 32, 8, 2.0, 1).unwrap();
+        let enc = EncodingOp::build(Scheme::Hadamard, 32, 8, 2.0, 1).unwrap();
         let mut an = SubsetSpectrum::new(&enc, 4);
         let stats = an.analyze(6, 8);
         assert!(stats.lambda_min > 1e-6, "λmin={}", stats.lambda_min);
@@ -167,14 +201,14 @@ mod tests {
     fn prop8_etf_unit_eigen_count() {
         // Steiner ETF v=4: n=6, β=8/3. η=3/4 ⇒ guarantee n(1−β(1−η)) =
         // 6(1 − 8/3·1/4) = 6·(1/3) = 2 eigenvalues at 1.
-        let enc = Encoding::build(Scheme::Steiner, 6, 4, 2.0, 1).unwrap();
+        let enc = EncodingOp::build(Scheme::Steiner, 6, 4, 2.0, 1).unwrap();
         let count = prop8_unit_eigen_count(&enc, &[0, 1, 2], 1e-9);
         assert!(count >= 2, "count={count}");
     }
 
     #[test]
     fn histogram_bins_count_all_in_range() {
-        let enc = Encoding::build(Scheme::Gaussian, 24, 4, 2.0, 5).unwrap();
+        let enc = EncodingOp::build(Scheme::Gaussian, 24, 4, 2.0, 5).unwrap();
         let mut an = SubsetSpectrum::new(&enc, 6);
         let stats = an.analyze(3, 4);
         let h = stats.histogram(0.0, 3.0, 30);
@@ -189,8 +223,8 @@ mod tests {
         // iid Gaussian at the same (n, β, η).
         let n = 28;
         let m = 8;
-        let etf = Encoding::build(Scheme::Steiner, n, m, 2.0, 1).unwrap();
-        let gau = Encoding::build(Scheme::Gaussian, n, m, etf.beta, 1).unwrap();
+        let etf = EncodingOp::build(Scheme::Steiner, n, m, 2.0, 1).unwrap();
+        let gau = EncodingOp::build(Scheme::Gaussian, n, m, etf.beta, 1).unwrap();
         let e1 = SubsetSpectrum::new(&etf, 9).analyze(6, 6);
         let e2 = SubsetSpectrum::new(&gau, 9).analyze(6, 6);
         assert!(

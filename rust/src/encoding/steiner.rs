@@ -13,7 +13,7 @@
 //! Sparsity: each row has v−1 non-zeros out of v(v−1)/2 columns, so the
 //! per-worker storage overhead matches the paper's `|B_I_k| ≤ 2n/m` bound.
 
-use super::{partition_bounds, Encoding, FastS, SMatrix};
+use super::{partition_bounds, EncodingOp, Generator};
 use crate::config::Scheme;
 use crate::linalg::fwht::hadamard_entry;
 use crate::linalg::Csr;
@@ -28,14 +28,15 @@ fn steiner_v_for(n: usize) -> usize {
     v
 }
 
-/// Build the Steiner ETF encoding for data dimension n across m workers.
+/// Lower the Steiner descriptor for data dimension n across m workers.
 ///
-/// Chooses the smallest feasible v, constructs the v² × v(v−1)/2 frame,
-/// keeps the first n columns (paper's column-subsampling), and
-/// partitions the v row-*blocks* (v rows each) across workers —
+/// Chooses the smallest feasible v, constructs the v² × v(v−1)/2 frame
+/// as ONE sparse CSR generator (≈ 2·nnz values — there is nothing dense
+/// to elide), keeps the first n columns (paper's column-subsampling),
+/// and partitions the v row-*blocks* (v rows each) across workers —
 /// assigning half-blocks when m does not divide v, following the paper's
 /// footnote 3 observation that splitting blocks across machines helps.
-pub fn build(n: usize, m: usize) -> Result<Encoding> {
+pub(crate) fn lower(n: usize, m: usize) -> Result<EncodingOp> {
     let v = steiner_v_for(n);
     ensure!(v >= 2, "steiner needs v ≥ 2");
     let total_rows = v * v;
@@ -96,22 +97,17 @@ pub fn build(n: usize, m: usize) -> Result<Encoding> {
     let permuted: Vec<(usize, usize, f64)> =
         triplets.into_iter().map(|(r, c, val)| (inv[r], c, val * signs[c])).collect();
     let s_full = Csr::from_triplets(total_rows, keep_cols, &permuted);
-    let bounds = partition_bounds(total_rows, m);
-    let blocks: Vec<SMatrix> = bounds
-        .windows(2)
-        .map(|w| SMatrix::Sparse(s_full.row_block(w[0], w[1])))
-        .collect();
     // β is the FRAME CONSTANT SᵀS = β·I — for Steiner that is
     // 2v/(v−1) = v²/ncols_full, unchanged by column subsampling
     // (sub-blocks of a scaled identity stay scaled identities). The
     // storage redundancy rows/keep_cols can be larger.
     let beta = total_rows as f64 / ncols_full as f64;
-    Ok(Encoding {
+    Ok(EncodingOp {
         scheme: Scheme::Steiner,
         beta,
         n: keep_cols,
-        blocks,
-        fast: FastS::Sparse(s_full),
+        bounds: partition_bounds(total_rows, m),
+        gen: Generator::Sparse(s_full),
     })
 }
 
@@ -143,7 +139,7 @@ mod tests {
     #[test]
     fn natural_size_is_tight_frame() {
         // v=4: S is 16×6 with β = 16/6 = 2v/(v−1) = 8/3.
-        let enc = build(6, 4).unwrap();
+        let enc = lower(6, 4).unwrap();
         assert_eq!(enc.total_rows(), 16);
         assert_eq!(enc.n, 6);
         let s = enc.stack(&[0, 1, 2, 3]);
@@ -159,7 +155,7 @@ mod tests {
 
     #[test]
     fn rows_unit_norm() {
-        let enc = build(6, 2).unwrap();
+        let enc = lower(6, 2).unwrap();
         let s = enc.stack(&[0, 1]);
         for i in 0..s.rows() {
             let n2 = dot(s.row(i), s.row(i));
@@ -169,7 +165,7 @@ mod tests {
 
     #[test]
     fn equiangular_at_natural_size() {
-        let enc = build(28, 4).unwrap(); // v=8, no subsampling
+        let enc = lower(28, 4).unwrap(); // v=8, no subsampling
         let s = enc.stack(&[0, 1, 2, 3]);
         let beta = s.rows() as f64 / 28.0;
         let welch = ((beta - 1.0) / (beta * 28.0 - 1.0)).sqrt();
@@ -191,15 +187,15 @@ mod tests {
     #[test]
     fn sparsity_bound() {
         // per-row nnz = v−1; density = (v−1)/(v(v−1)/2) = 2/v.
-        let enc = build(28, 4).unwrap(); // v=8
-        for b in &enc.blocks {
-            assert!(b.density() < 2.0 / 8.0 + 1e-9);
+        let enc = lower(28, 4).unwrap(); // v=8
+        for i in 0..enc.workers() {
+            assert!(enc.row_block(i).density() < 2.0 / 8.0 + 1e-9);
         }
     }
 
     #[test]
     fn subsampled_still_near_tight() {
-        let enc = build(20, 4).unwrap(); // v=8, keep 20 of 28 columns
+        let enc = lower(20, 4).unwrap(); // v=8, keep 20 of 28 columns
         assert_eq!(enc.n, 20);
         let s = enc.stack(&[0, 1, 2, 3]);
         let g = s.gram();

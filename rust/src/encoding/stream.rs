@@ -1,4 +1,4 @@
-//! Streaming block encoder: apply any [`Encoding`] to a dataset that
+//! Streaming block encoder: apply any [`EncodingOp`] to a dataset that
 //! arrives as row blocks ([`BlockSource`]) instead of one materialized
 //! `Mat` — the out-of-core half of the paper's §4.2 "efficient
 //! mechanisms for encoding large-scale data".
@@ -11,31 +11,38 @@
 //!   *column panel* ([`PANEL_COLS`] columns), reassembling exact
 //!   columns (an `O(n)` buffer) and applying the same
 //!   [`FwhtOp::apply`](super::FwhtOp::apply) as the in-memory path.
-//! - **CSR** (Steiner / Haar / identity): each block accumulates the
-//!   entries whose column falls inside the block's row range, in the
-//!   same ascending order as the in-memory sweep.
-//! - **Dense** (Gaussian / Paley): each block continues the per-element
-//!   ascending-`k` fold of [`Mat::matmul`].
+//! - **CSR** (Steiner / Haar / identity): the one sparse generator is
+//!   swept row-range by row-range; each source block contributes the
+//!   entries whose column falls inside the block, in the same ascending
+//!   order as the in-memory sweep.
+//! - **Dense** (Gaussian / Paley): one generator block is regenerated at
+//!   a time (worker-outer loop, one source pass per block) and dropped
+//!   after its fold — the operator-first memory story: the input is one
+//!   shard, the generator is one block, and neither is ever whole.
 //!
 //! ## Bit-identity contract
 //!
 //! Every path accumulates each output element in *exactly* the
 //! floating-point order of the corresponding in-memory
-//! [`Encoding::encode_data`] kernel (the FWHT path reassembles exact
+//! [`EncodingOp::encode_data`] kernel (the FWHT path reassembles exact
 //! column bits; the dense/CSR paths continue the same left-to-right
-//! fold across block boundaries). [`encode_data_streamed`] is therefore
+//! fold across block boundaries, and dense blocks regenerate
+//! bit-identically from the seed). [`encode_data_streamed`] is therefore
 //! **bit-identical** to `enc.encode_data(&x)` for every scheme — the
 //! property `rust/tests/shard_pipeline.rs` pins, and the reason a
 //! sharded experiment's trace matches its in-memory twin bit-for-bit.
 //!
 //! Peak resident data: one source block, one `O(n)` column panel /
-//! target buffer, and the encoded worker partitions themselves (the
-//! product being built) — never the `n × p` input.
+//! target buffer, at most one regenerated generator block, and the
+//! encoded worker partitions themselves when a caller asks for all of
+//! them at once ([`write_encoded_partitions`] instead streams CSR/dense
+//! partitions out shard-by-shard and never holds more than one output
+//! shard).
 
-use super::{Encoding, FastS, SMatrix};
-use crate::data::shard::{assemble_targets, BlockSource};
+use super::{EncodingOp, Generator, SMatrix};
+use crate::data::shard::{assemble_targets, BlockSource, ShardWriter};
 use crate::linalg::{axpy, par, Csr, Mat};
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Minimum columns reassembled per streaming pass on the FWHT path.
 ///
@@ -88,18 +95,18 @@ fn acc_dense_block(s: &Mat, k0: usize, xb: &Mat, out: &mut Mat) {
     });
 }
 
-/// `out += S[:, k0..k0+xb.rows()] · xb` for a CSR block: the entries of
-/// each row whose column lands in the block's range, in the same
+/// `out += S[row0+local, k0..k0+xb.rows()] · xb` for the generator rows
+/// `row0..row0+out.rows()` of the one sparse generator: each row's
+/// entries whose column lands in the source block's range, in the same
 /// ascending-column order as [`SMatrix::encode_mat`]'s sweep (the
 /// binary-searched start changes where iteration begins, never the
 /// in-range entry order, so bit-identity is untouched — while avoiding
 /// an O(nnz) prefix rescan per source block).
-fn acc_sparse_block(s: &Csr, k0: usize, xb: &Mat, out: &mut Mat) {
-    debug_assert_eq!(s.rows(), out.rows());
+fn acc_sparse_rows(s: &Csr, row0: usize, k0: usize, xb: &Mat, out: &mut Mat) {
     let k1 = k0 + xb.rows();
-    for i in 0..s.rows() {
-        let orow = out.row_mut(i);
-        for (j, v) in s.row_iter_from(i, k0) {
+    for local in 0..out.rows() {
+        let orow = out.row_mut(local);
+        for (j, v) in s.row_iter_from(row0 + local, k0) {
             if j >= k1 {
                 // CSR rows are column-sorted: nothing further in range.
                 break;
@@ -110,9 +117,14 @@ fn acc_sparse_block(s: &Csr, k0: usize, xb: &Mat, out: &mut Mat) {
 }
 
 /// Apply the full encoding to a streamed data matrix: returns `S_i·X`
-/// per worker, bit-identical to [`Encoding::encode_data`] on the
+/// per worker, bit-identical to [`EncodingOp::encode_data`] on the
 /// equivalent in-memory `X` (see the [module docs](self)).
-pub fn encode_data_streamed(enc: &Encoding, src: &dyn BlockSource) -> Result<Vec<Mat>> {
+///
+/// Pass budget: one source pass per FWHT column panel, one pass total
+/// for CSR generators, and one pass per *worker block* for the dense
+/// ensembles (the price of holding only one regenerated block at a
+/// time; sources are re-iterable by contract).
+pub fn encode_data_streamed(enc: &EncodingOp, src: &dyn BlockSource) -> Result<Vec<Mat>> {
     ensure!(
         enc.n == src.rows(),
         "encode dim mismatch: encoding for n={}, source has {} rows",
@@ -120,9 +132,10 @@ pub fn encode_data_streamed(enc: &Encoding, src: &dyn BlockSource) -> Result<Vec
         src.rows()
     );
     let p = src.cols();
-    let mut outs: Vec<Mat> = enc.blocks.iter().map(|b| Mat::zeros(b.rows(), p)).collect();
-    match &enc.fast {
-        FastS::Fwht(op) => {
+    match &enc.gen {
+        Generator::Fwht(op) => {
+            let mut outs: Vec<Mat> =
+                (0..enc.workers()).map(|i| Mat::zeros(enc.block_rows(i), p)).collect();
             let n = src.rows();
             let width = panel_width(src);
             let mut j0 = 0;
@@ -155,26 +168,116 @@ pub fn encode_data_streamed(enc: &Encoding, src: &dyn BlockSource) -> Result<Vec
                 }
                 j0 = j1;
             }
+            Ok(outs)
         }
-        FastS::Sparse(_) | FastS::Dense => {
-            src.for_each_block(&mut |row0, xb, _y| {
-                for (b, out) in enc.blocks.iter().zip(&mut outs) {
-                    match b {
-                        SMatrix::Dense(s) => acc_dense_block(s, row0, xb, out),
-                        SMatrix::Sparse(s) => acc_sparse_block(s, row0, xb, out),
-                    }
+        Generator::Sparse(s) => {
+            let mut outs: Vec<Mat> =
+                (0..enc.workers()).map(|i| Mat::zeros(enc.block_rows(i), p)).collect();
+            let bounds = enc.block_bounds().to_vec();
+            src.for_each_block(&mut |k0, xb, _y| {
+                for (i, out) in outs.iter_mut().enumerate() {
+                    acc_sparse_rows(s, bounds[i], k0, xb, out);
                 }
+                Ok(())
+            })?;
+            Ok(outs)
+        }
+        Generator::Gaussian { .. } | Generator::Paley => {
+            // Worker-outer: regenerate one block, fold the whole source
+            // through it, drop it. m source passes, one live block.
+            let mut outs: Vec<Mat> = Vec::with_capacity(enc.workers());
+            enc.for_each_row_block(&mut |_i, b| {
+                let sb = match b {
+                    SMatrix::Dense(m) => m,
+                    SMatrix::Sparse(_) => unreachable!("dense generator yields dense blocks"),
+                };
+                let mut out = Mat::zeros(sb.rows(), p);
+                src.for_each_block(&mut |k0, xb, _y| {
+                    acc_dense_block(sb, k0, xb, &mut out);
+                    Ok(())
+                })?;
+                outs.push(out);
+                Ok(())
+            })?;
+            Ok(outs)
+        }
+    }
+}
+
+/// Encode generator rows `r0..r1` (global row indices of `S`) against a
+/// streamed source: `S[r0..r1, :]·X` — the row-range primitive behind
+/// the shard-by-shard partition writer. CSR sweeps the one generator;
+/// dense ensembles regenerate exactly these rows from the seed. The
+/// FWHT path computes whole columns at once and has no row-range form —
+/// callers must use [`encode_data_streamed`] there.
+pub fn encode_rows_streamed(
+    enc: &EncodingOp,
+    src: &dyn BlockSource,
+    r0: usize,
+    r1: usize,
+) -> Result<Mat> {
+    ensure!(enc.n == src.rows(), "encode dim mismatch");
+    ensure!(r0 <= r1 && r1 <= enc.total_rows(), "row range out of bounds");
+    let p = src.cols();
+    let mut out = Mat::zeros(r1 - r0, p);
+    match &enc.gen {
+        Generator::Fwht(_) => bail!(
+            "the FWHT panel encoder completes whole columns across all row blocks \
+             at once; a row-range encode has no fast path (column-chunked \
+             write-out is a ROADMAP item)"
+        ),
+        Generator::Sparse(s) => {
+            src.for_each_block(&mut |k0, xb, _y| {
+                acc_sparse_rows(s, r0, k0, xb, &mut out);
+                Ok(())
+            })?;
+        }
+        Generator::Gaussian { seed } => {
+            let sb = super::gaussian::dense_rows(enc.n, *seed, r0, r1);
+            src.for_each_block(&mut |k0, xb, _y| {
+                acc_dense_block(&sb, k0, xb, &mut out);
+                Ok(())
+            })?;
+        }
+        Generator::Paley => {
+            // transient full frame per range — inherent to the
+            // eigendecomposition-derived construction (size-guarded at
+            // lower time), dropped before the source pass begins
+            let sb = super::paley::paley_etf(enc.n)?.row_block(r0, r1);
+            src.for_each_block(&mut |k0, xb, _y| {
+                acc_dense_block(&sb, k0, xb, &mut out);
                 Ok(())
             })?;
         }
     }
+    Ok(out)
+}
+
+/// Dense-fold referee: encode a streamed source through explicitly
+/// materialized per-worker dense blocks, continuing the [`Mat::matmul`]
+/// fold across block boundaries. Used by `coded-opt bench` as the
+/// denominator of the FWHT-vs-dense streamed pair (blocks are
+/// materialized by the caller, outside the timed region) and by tests
+/// as an equivalence referee.
+pub fn encode_data_streamed_with_dense_blocks(
+    blocks: &[Mat],
+    src: &dyn BlockSource,
+) -> Result<Vec<Mat>> {
+    let p = src.cols();
+    let mut outs: Vec<Mat> = blocks.iter().map(|b| Mat::zeros(b.rows(), p)).collect();
+    src.for_each_block(&mut |k0, xb, _y| {
+        for (b, out) in blocks.iter().zip(&mut outs) {
+            acc_dense_block(b, k0, xb, out);
+        }
+        Ok(())
+    })?;
     Ok(outs)
 }
 
 /// Encode the streamed target vector: returns `S_i·y` per worker,
-/// bit-identical to [`Encoding::encode_vec`]. `y` is the one
+/// bit-identical to [`EncodingOp::encode_vec`]. `y` is the one
 /// full-length (`O(n)`) buffer the streaming pipeline assembles.
-pub fn encode_vec_streamed(enc: &Encoding, src: &dyn BlockSource) -> Result<Vec<Vec<f64>>> {
+pub fn encode_vec_streamed(enc: &EncodingOp, src: &dyn BlockSource) -> Result<Vec<Vec<f64>>> {
     let y = assemble_targets(src)?;
     ensure!(y.len() == enc.n, "encode_vec dim mismatch");
     Ok(enc.encode_vec(&y))
@@ -187,32 +290,92 @@ pub fn encode_vec_streamed(enc: &Encoding, src: &dyn BlockSource) -> Result<Vec<
 /// streamed encode output, and the round-trip test in this module pins
 /// the written bits to it — `coded-opt encode` goes through here, so
 /// the on-disk partitions cannot drift from what `run` computes.
+///
+/// Memory: CSR and dense-generator schemes stream each partition out
+/// **shard-by-shard** through a [`ShardWriter`] — resident output is
+/// one shard (plus one regenerated generator row-range; Paley keeps its
+/// one per-call frame resident for the write, see below), at the cost
+/// of one source pass per output shard. The FWHT panel path completes
+/// output columns across *all* workers at once, so it still assembles
+/// every partition before writing (an honest exception; the
+/// column-chunked writer is a ROADMAP item — callers printing memory
+/// expectations should branch on [`EncodingOp::fast_path`]).
 pub fn write_encoded_partitions(
-    enc: &Encoding,
+    enc: &EncodingOp,
     src: &dyn BlockSource,
     out_dir: &std::path::Path,
 ) -> Result<Vec<crate::data::shard::Manifest>> {
     let norm = 1.0 / enc.beta.sqrt();
-    let mut sx = encode_data_streamed(enc, src)?;
+    std::fs::create_dir_all(out_dir)?;
+    // S̄y per worker: O(N) floats total — assembled up front either way.
     let sy: Option<Vec<Vec<f64>>> =
         if src.has_targets() { Some(encode_vec_streamed(enc, src)?) } else { None };
-    std::fs::create_dir_all(out_dir)?;
-    let mut manifests = Vec::with_capacity(sx.len());
-    for (w, sxw) in sx.iter_mut().enumerate() {
-        sxw.scale_inplace(norm);
-        let yw: Option<Vec<f64>> = sy.as_ref().map(|sy| {
-            let mut v = sy[w].clone();
-            crate::linalg::scale(norm, &mut v);
-            v
-        });
+    let m = enc.workers();
+    let mut manifests = Vec::with_capacity(m);
+    if let Generator::Fwht(_) = &enc.gen {
+        let mut sx = encode_data_streamed(enc, src)?;
+        for (w, sxw) in sx.iter_mut().enumerate() {
+            sxw.scale_inplace(norm);
+            let yw: Option<Vec<f64>> = sy.as_ref().map(|sy| {
+                let mut v = sy[w].clone();
+                crate::linalg::scale(norm, &mut v);
+                v
+            });
+            let dir = out_dir.join(format!("worker-{w:03}"));
+            let rows = sxw.rows().max(1);
+            manifests.push(crate::data::shard::shard_dataset(
+                &*sxw,
+                yw.as_deref(),
+                &dir,
+                rows.min(src.max_block_rows()),
+            )?);
+        }
+        return Ok(manifests);
+    }
+    // Paley's row-range generation rebuilds the whole frame (conference
+    // matrix + eigendecomposition); per-chunk or per-worker rebuilds of
+    // identical bits would swamp the write, so build it ONCE per encode
+    // call and slice it — one use, one generation, and the transient
+    // peaks at the same full-frame size paley_etf reaches internally
+    // anyway. Gaussian stays per-chunk (its PCG-jump regeneration is
+    // O(chunk), so per-chunk keeps the smaller chunk×n generator slice).
+    let paley_full: Option<Mat> = match &enc.gen {
+        Generator::Paley => Some(super::paley::paley_etf(enc.n)?),
+        _ => None,
+    };
+    for w in 0..m {
+        let (r0, r1) = (enc.block_bounds()[w], enc.block_bounds()[w + 1]);
+        let shard_rows = (r1 - r0).max(1).min(src.max_block_rows());
         let dir = out_dir.join(format!("worker-{w:03}"));
-        let rows = sxw.rows().max(1);
-        manifests.push(crate::data::shard::shard_dataset(
-            &*sxw,
-            yw.as_deref(),
-            &dir,
-            rows.min(src.max_block_rows()),
-        )?);
+        let mut writer = ShardWriter::create(&dir, src.cols(), shard_rows, sy.is_some())?;
+        let mut c0 = r0;
+        while c0 < r1 {
+            let c1 = (c0 + shard_rows).min(r1);
+            let mut chunk = match &paley_full {
+                Some(full) => {
+                    let sb = full.row_block(c0, c1);
+                    let mut out = Mat::zeros(c1 - c0, src.cols());
+                    src.for_each_block(&mut |k0, xb, _y| {
+                        acc_dense_block(&sb, k0, xb, &mut out);
+                        Ok(())
+                    })?;
+                    out
+                }
+                None => encode_rows_streamed(enc, src, c0, c1)?,
+            };
+            chunk.scale_inplace(norm);
+            let ychunk: Vec<f64> = match &sy {
+                Some(sy) => {
+                    let mut v = sy[w][c0 - r0..c1 - r0].to_vec();
+                    crate::linalg::scale(norm, &mut v);
+                    v
+                }
+                None => Vec::new(),
+            };
+            writer.append(&chunk, &ychunk)?;
+            c0 = c1;
+        }
+        manifests.push(writer.finish()?);
     }
     Ok(manifests)
 }
@@ -241,7 +404,7 @@ mod tests {
             Scheme::Steiner,
             Scheme::Haar,
         ] {
-            let enc = Encoding::build(scheme, n, m, 2.0, 7).unwrap();
+            let enc = EncodingOp::build(scheme, n, m, 2.0, 7).unwrap();
             let dense = enc.encode_data(&x);
             for block_rows in [1, 7, 16, 48, 100] {
                 let src = MatSource::new(&x, None, block_rows);
@@ -260,13 +423,64 @@ mod tests {
     }
 
     #[test]
+    fn row_range_encode_matches_full_encode() {
+        let (n, p, m) = (40, 5, 3);
+        let x = random_mat(n, p, 19);
+        for scheme in [Scheme::Uncoded, Scheme::Gaussian, Scheme::Steiner, Scheme::Paley] {
+            let enc = EncodingOp::build(scheme, n, m, 2.0, 3).unwrap();
+            let src = MatSource::new(&x, None, 11);
+            let full = encode_data_streamed(&enc, &src).unwrap();
+            for w in 0..m {
+                let (r0, r1) = (enc.block_bounds()[w], enc.block_bounds()[w + 1]);
+                // whole block in one range
+                let got = encode_rows_streamed(&enc, &src, r0, r1).unwrap();
+                assert_eq!(got.as_slice(), full[w].as_slice(), "{scheme:?} worker {w}");
+                // and in two chunks — the writer's shard-by-shard shape
+                if r1 - r0 >= 2 {
+                    let mid = r0 + (r1 - r0) / 2;
+                    let a = encode_rows_streamed(&enc, &src, r0, mid).unwrap();
+                    let b = encode_rows_streamed(&enc, &src, mid, r1).unwrap();
+                    let stacked = Mat::vstack(&[&a, &b]);
+                    assert_eq!(
+                        stacked.as_slice(),
+                        full[w].as_slice(),
+                        "{scheme:?} worker {w}: chunked == whole"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_blocks_referee_matches_fast_paths() {
+        let (n, p, m) = (32, 6, 4);
+        let x = random_mat(n, p, 23);
+        for scheme in [Scheme::Hadamard, Scheme::Haar] {
+            let enc = EncodingOp::build(scheme, n, m, 2.0, 5).unwrap();
+            let blocks: Vec<Mat> =
+                (0..m).map(|i| enc.row_block(i).to_dense()).collect();
+            let src = MatSource::new(&x, None, 9);
+            let fast = encode_data_streamed(&enc, &src).unwrap();
+            let referee = encode_data_streamed_with_dense_blocks(&blocks, &src).unwrap();
+            for (f, r) in fast.iter().zip(&referee) {
+                crate::testutil::assert_allclose(
+                    f.as_slice(),
+                    r.as_slice(),
+                    1e-12,
+                    &format!("{scheme:?} fast vs dense-blocks referee"),
+                );
+            }
+        }
+    }
+
+    #[test]
     fn streamed_encode_vec_is_bit_identical() {
         let n = 40;
         let x = random_mat(n, 3, 9);
         let mut rng = Pcg64::new(13);
         let y: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
         for scheme in [Scheme::Hadamard, Scheme::Gaussian, Scheme::Steiner] {
-            let enc = Encoding::build(scheme, n, 4, 2.0, 3).unwrap();
+            let enc = EncodingOp::build(scheme, n, 4, 2.0, 3).unwrap();
             let dense = enc.encode_vec(&y);
             let src = MatSource::new(&x, Some(&y), 11);
             let streamed = encode_vec_streamed(&enc, &src).unwrap();
@@ -280,7 +494,7 @@ mod tests {
         // panel width exercises the tail panel.
         let (n, p, m) = (32, PANEL_COLS + 5, 4);
         let x = random_mat(n, p, 17);
-        let enc = Encoding::build(Scheme::Hadamard, n, m, 2.0, 1).unwrap();
+        let enc = EncodingOp::build(Scheme::Hadamard, n, m, 2.0, 1).unwrap();
         let dense = enc.encode_data(&x);
         let src = MatSource::new(&x, None, 10);
         let streamed = encode_data_streamed(&enc, &src).unwrap();
@@ -296,36 +510,56 @@ mod tests {
         let x = random_mat(n, 5, 21);
         let mut rng = Pcg64::new(23);
         let y: Vec<f64> = (0..n).map(|_| rng.next_f64() - 0.5).collect();
-        let enc = Encoding::build(Scheme::Hadamard, n, 3, 2.0, 9).unwrap();
-        let src = MatSource::new(&x, Some(&y), 7);
-        let dir = std::env::temp_dir()
-            .join(format!("coded-opt-stream-parts-{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
-        let manifests = write_encoded_partitions(&enc, &src, &dir).unwrap();
-        assert_eq!(manifests.len(), 3);
-        // expected bits: the streamed encode scaled by 1/√β — exactly
-        // what the driver's worker build stores for the same source
-        let norm = 1.0 / enc.beta.sqrt();
-        let sx = encode_data_streamed(&enc, &src).unwrap();
-        let sy = encode_vec_streamed(&enc, &src).unwrap();
-        for w in 0..3 {
-            let part = ShardedSource::open(dir.join(format!("worker-{w:03}"))).unwrap();
-            let (px, py) = part.load_dense().unwrap();
-            let mut want_x = sx[w].clone();
-            want_x.scale_inplace(norm);
-            let mut want_y = sy[w].clone();
-            crate::linalg::scale(norm, &mut want_y);
-            assert_eq!(px.as_slice(), want_x.as_slice(), "worker {w} S̄X bits");
-            assert_eq!(py.unwrap(), want_y, "worker {w} S̄y bits");
+        // CSR and FWHT paths both pinned: the incremental shard-by-shard
+        // writer and the all-partitions FWHT fallback must write the same
+        // bits the driver's worker build computes.
+        for scheme in [Scheme::Hadamard, Scheme::Steiner, Scheme::Gaussian] {
+            let enc = EncodingOp::build(scheme, n, 3, 2.0, 9).unwrap();
+            let src = MatSource::new(&x, Some(&y), 7);
+            let dir = std::env::temp_dir().join(format!(
+                "coded-opt-stream-parts-{}-{}",
+                enc.scheme.name(),
+                std::process::id()
+            ));
+            let _ = std::fs::remove_dir_all(&dir);
+            let manifests = write_encoded_partitions(&enc, &src, &dir).unwrap();
+            assert_eq!(manifests.len(), 3);
+            // expected bits: the streamed encode scaled by 1/√β — exactly
+            // what the driver's worker build stores for the same source
+            let norm = 1.0 / enc.beta.sqrt();
+            let sx = encode_data_streamed(&enc, &src).unwrap();
+            let sy = encode_vec_streamed(&enc, &src).unwrap();
+            for w in 0..3 {
+                let part = ShardedSource::open(dir.join(format!("worker-{w:03}"))).unwrap();
+                let (px, py) = part.load_dense().unwrap();
+                let mut want_x = sx[w].clone();
+                want_x.scale_inplace(norm);
+                let mut want_y = sy[w].clone();
+                crate::linalg::scale(norm, &mut want_y);
+                assert_eq!(px.as_slice(), want_x.as_slice(), "{scheme:?} worker {w} S̄X bits");
+                assert_eq!(py.unwrap(), want_y, "{scheme:?} worker {w} S̄y bits");
+                if enc.fast_path() != crate::encoding::FastPath::Fwht {
+                    // incremental path: the partition really was written in
+                    // source-shard-sized shards, not one monolith
+                    let expect_shards =
+                        enc.block_rows(w).div_ceil(src.max_block_rows());
+                    assert_eq!(
+                        part.manifest().shards.len(),
+                        expect_shards.max(1),
+                        "{scheme:?} worker {w}: shard-by-shard flush"
+                    );
+                }
+            }
+            let _ = std::fs::remove_dir_all(&dir);
         }
-        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn dim_mismatch_is_rejected() {
         let x = random_mat(20, 4, 1);
-        let enc = Encoding::build(Scheme::Gaussian, 24, 4, 2.0, 1).unwrap();
+        let enc = EncodingOp::build(Scheme::Gaussian, 24, 4, 2.0, 1).unwrap();
         let src = MatSource::new(&x, None, 8);
         assert!(encode_data_streamed(&enc, &src).is_err());
+        assert!(encode_rows_streamed(&enc, &src, 0, 4).is_err());
     }
 }

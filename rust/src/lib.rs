@@ -100,16 +100,36 @@
 //! [`linalg::par::set_threads`], or the `CODED_OPT_THREADS` environment
 //! variable; it only trades wall-clock for cores.
 //!
-//! ## Structured fast encoding
+//! ## Operator-first encoding: `SchemeSpec` → `EncodingOp`
 //!
-//! The [`encoding::Encoder`] trait (`apply` = `S·x`, `apply_t` = `Sᵀ·x`)
-//! is the paper's §4.2 efficient-encoding mechanism as an interface:
-//! Hadamard encodes through FWHT in `O(N log N)`, the sparse Steiner /
-//! Haar / identity generators through one CSR product in `O(nnz)`, and
-//! dense materialization ([`encoding::FastS::Dense`]) is only the
-//! fallback for the unstructured ensembles (Gaussian, Paley).
-//! `Encoding::encode_data` / `encode_vec`, the data-parallel worker
-//! build, and BCD's `w = S̄ᵀv` reconstruction all route through it.
+//! The paper's schemes are *operators*, not matrices (§4.2 "efficient
+//! mechanisms for encoding large-scale data"), and the API mirrors
+//! that. An [`encoding::SchemeSpec`] is a pure descriptor — scheme,
+//! `n`, `m`, β, seed — that [`lower`](encoding::SchemeSpec::lower)s to
+//! a lazy [`encoding::EncodingOp`] exposing the [`encoding::Encoder`]
+//! trait (`apply` = `S·x`, `apply_t` = `Sᵀ·x`) plus on-demand
+//! [`row_block(i)`](encoding::EncodingOp::row_block). **No dense row
+//! block of `S` is stored anywhere**, so encoding state scales with
+//! `O(n)`, not `N×n`:
+//!
+//! - *Structured schemes* — Hadamard applies through FWHT in
+//!   `O(N log N)`; Steiner / Haar / identity sweep one CSR in
+//!   `O(nnz)`. These never materialize a dense block on any encode
+//!   path, a claim made executable by the [`encoding::probe`]
+//!   block-generation counters (`rust/tests/lazy_encoding.rs`).
+//! - *Dense ensembles* — Gaussian regenerates any block bit-identically
+//!   from the seed by jumping the PCG stream
+//!   ([`rng::Pcg64::advance`]); Paley rebuilds its size-guarded frame.
+//!   Blocks exist only *while in use* and are dropped after — per-use
+//!   generation, never a resident `N×n` matrix.
+//!
+//! `EncodingOp::encode_data` / `encode_vec`, the data-parallel worker
+//! build, BCD's per-iteration `w = S̄ᵀv` reconstruction, and the
+//! streamed encoders all route through the operator. Dense views exist
+//! only where analysis explicitly asks for them
+//! ([`stack`](encoding::EncodingOp::stack) for spectrum analysis,
+//! `sbar_blocks` for debugging) — those calls ARE the materialization,
+//! and the probe counts them.
 //!
 //! ## Out-of-core data: shards and the streaming encoder
 //!
@@ -122,11 +142,12 @@
 //! the streaming contract: blocks arrive in ascending row order, are
 //! bounded by the shard size, and a source can be re-iterated.
 //!
-//! [`encoding::stream`] applies any [`encoding::Encoder`] shard-by-shard
-//! — FWHT via column panels, CSR and dense generators by continuing the
-//! exact per-element accumulation order of the in-memory kernels across
-//! block boundaries — so the streamed encode is **bit-identical** to
-//! `Encoding::encode_data` on the equivalent matrix, and a sharded
+//! [`encoding::stream`] applies any [`encoding::EncodingOp`]
+//! shard-by-shard — FWHT via column panels, CSR and per-use regenerated
+//! dense generators by continuing the exact per-element accumulation
+//! order of the in-memory kernels across block boundaries — so the
+//! streamed encode is **bit-identical** to
+//! `EncodingOp::encode_data` on the equivalent matrix, and a sharded
 //! experiment's trace is bit-identical to its in-memory twin
 //! (`rust/tests/shard_pipeline.rs` pins both). Wire a sharded dataset
 //! into the driver with `Experiment::sharded(ShardedSource::open(dir)?)`
@@ -146,14 +167,17 @@
 //! `(S̄_iX, S̄_iy)` as one shard dataset per worker plus an
 //! `encoding.json` (schema `coded-opt/encode-v1`).
 //!
-//! Scope of the memory claim: it is the **input** `X` that is never
-//! materialized on the sharded path (only shard-bounded blocks plus
-//! `O(n)` column-panel/target buffers). The encoded worker partitions
-//! are the *product* and are resident — one per worker in this
-//! in-process simulation, exactly as on the in-memory path; in a real
-//! deployment each worker holds only its own partition (the unit
-//! `coded-opt encode` writes out). Eliding the generator's dense blocks
-//! for structured schemes is the next step (see ROADMAP).
+//! Scope of the memory claim: neither the **input** `X` (shard-bounded
+//! blocks plus `O(n)` column-panel/target buffers only) nor the
+//! **generator** `S` (lazy operator, see above) is ever whole in
+//! memory on the sharded path. The encoded worker partitions are the
+//! *product*: `coded-opt encode` streams CSR/dense partitions to disk
+//! shard-by-shard (resident output = one shard), while the FWHT panel
+//! path still assembles all partitions before write-out — an honest
+//! exception the CLI prints, since the panel encoder completes output
+//! columns across every worker at once (column-chunked writer: see
+//! ROADMAP). Driver runs keep all partitions resident by design — they
+//! *are* the simulated workers' shards.
 //!
 //! ## Benchmarks and the perf gate
 //!
@@ -172,8 +196,9 @@
 //! - [`linalg`] — dense/sparse linear algebra, FWHT, Cholesky, eigensolver.
 //! - [`rng`] — PCG64 PRNG and the distributions used by data generation and
 //!   straggler delay models.
-//! - [`encoding`] — the paper's encoding matrices (Paley / Hadamard /
-//!   Steiner ETFs, subsampled Haar, Gaussian) and spectrum analysis.
+//! - [`encoding`] — the paper's encoding schemes as lazy operators
+//!   (`SchemeSpec` → `EncodingOp`; Paley / Hadamard / Steiner ETFs,
+//!   subsampled Haar, Gaussian) and spectrum analysis.
 //! - [`delay`] — straggler delay models (bimodal mixture, power-law
 //!   background tasks, exponential, adversarial, trace replay).
 //! - [`scenario`] — the scenario engine: composable delay transforms,
@@ -182,8 +207,8 @@
 //! - [`cluster`] — the simulated master/worker distributed substrate with
 //!   wait-for-`k` gather and interrupts.
 //! - [`coordinator`] — the algorithm master loops and worker state
-//!   machines the driver dispatches to (plus deprecated `run_*` shims
-//!   kept for one release).
+//!   machines the driver dispatches to ([`driver::Experiment`] is the
+//!   sole entry point; the old `run_*` shims are gone).
 //! - [`objectives`] — ridge, LASSO, logistic regression, matrix
 //!   factorization.
 //! - [`data`] — synthetic workload generators mirroring the paper's

@@ -67,6 +67,32 @@ impl Pcg64 {
         self.next_f64() < p
     }
 
+    /// Jump the generator forward by `delta` steps of [`next_u64`] in
+    /// `O(log delta)` (Brown, "Random Number Generation with Arbitrary
+    /// Strides", 1994 — the standard LCG advance by repeated squaring of
+    /// the affine map). `advance(k)` leaves the generator in exactly the
+    /// state `k` calls to `next_u64` would: this is what lets a lazily
+    /// regenerated Gaussian encoding block start its draw mid-stream and
+    /// still be bit-identical to the one-pass eager construction.
+    ///
+    /// [`next_u64`]: Pcg64::next_u64
+    pub fn advance(&mut self, mut delta: u128) {
+        let mut acc_mult: u128 = 1;
+        let mut acc_plus: u128 = 0;
+        let mut cur_mult = PCG_MULT;
+        let mut cur_plus = self.inc;
+        while delta > 0 {
+            if delta & 1 == 1 {
+                acc_mult = acc_mult.wrapping_mul(cur_mult);
+                acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+            }
+            cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+            cur_mult = cur_mult.wrapping_mul(cur_mult);
+            delta >>= 1;
+        }
+        self.state = acc_mult.wrapping_mul(self.state).wrapping_add(acc_plus);
+    }
+
     /// Fork a child generator; children with different `stream_id`s are
     /// independent of the parent and of each other. Used to hand each
     /// simulated worker its own RNG.
@@ -137,6 +163,35 @@ mod tests {
         let mut b = parent.fork(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert!(same < 2);
+    }
+
+    #[test]
+    fn advance_matches_stepping() {
+        for &(seed, stream) in &[(42u64, 0xda3e_39cb_94b9_5bdbu64), (7, 0x6a55), (0, 1)] {
+            for &k in &[0u128, 1, 2, 63, 64, 1000, 123_457] {
+                let mut stepped = Pcg64::with_stream(seed, stream);
+                for _ in 0..k {
+                    stepped.next_u64();
+                }
+                let mut jumped = Pcg64::with_stream(seed, stream);
+                jumped.advance(k);
+                assert_eq!(
+                    jumped.next_u64(),
+                    stepped.next_u64(),
+                    "advance({k}) != {k} steps (seed={seed})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn advance_composes() {
+        let mut a = Pcg64::new(9);
+        a.advance(100);
+        a.advance(23);
+        let mut b = Pcg64::new(9);
+        b.advance(123);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

@@ -9,7 +9,7 @@ use coded_opt::coordinator::KIND_GRADIENT;
 use coded_opt::data::synth::gaussian_linear;
 use coded_opt::delay::{AdversarialDelay, MixtureDelay};
 use coded_opt::driver::{Experiment, Gd, Problem};
-use coded_opt::encoding::Encoding;
+use coded_opt::encoding::EncodingOp;
 use coded_opt::linalg::symmetric_eigenvalues;
 use coded_opt::objectives::{QuadObjective, RidgeProblem};
 
@@ -22,7 +22,7 @@ fn ablation_beta_tightens_spectrum() {
     let k = 6;
     let mut eps = Vec::new();
     for beta in [1.5f64, 2.0, 3.0] {
-        let enc = Encoding::build(Scheme::Gaussian, n, m, beta, 11).unwrap();
+        let enc = EncodingOp::build(Scheme::Gaussian, n, m, beta, 11).unwrap();
         let mut an = coded_opt::encoding::SubsetSpectrum::new(&enc, 5);
         let stats = an.analyze(k, 10);
         eps.push(stats.epsilon());
@@ -121,7 +121,7 @@ fn ablation_adaptive_k_maintains_overlap() {
 fn ablation_randomization_prevents_rank_collapse() {
     let n = 32;
     let m = 8;
-    let enc = Encoding::build(Scheme::Hadamard, n, m, 2.0, 13).unwrap();
+    let enc = EncodingOp::build(Scheme::Hadamard, n, m, 2.0, 13).unwrap();
     // all C(8,2)=28 leave-two-out subsets — exhaustive worst case
     let mut worst = f64::INFINITY;
     for a in 0..m {

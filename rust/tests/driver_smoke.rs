@@ -1,19 +1,14 @@
-//! Driver smoke matrix: every encoding [`Scheme`] × every [`Solver`]
-//! through the [`Experiment`](coded_opt::driver::Experiment) API, plus
-//! bit-identical equivalence against the legacy `run_*` shims the driver
-//! replaces (those shims are deprecated and scheduled for removal; the
-//! equivalence tests pin the refactor until they go).
+//! Driver smoke matrix: every encoding [`Scheme`] × every solver
+//! through the [`Experiment`](coded_opt::driver::Experiment) API.
+//!
+//! The legacy `run_*` shims (and their bit-equivalence tests) are gone:
+//! `Experiment` is the sole entry point, and the golden-trace suite
+//! (`rust/tests/golden_traces.rs`) is what pins driver numerics across
+//! refactors.
 
-#![allow(deprecated)] // the equivalence tests exercise the legacy shims
-
-use coded_opt::cluster::SimCluster;
 use coded_opt::config::Scheme;
-use coded_opt::coordinator::bcd::{build_model_parallel, quadratic_phi};
-use coded_opt::coordinator::{build_data_parallel, GdConfig, LbfgsConfig, ProxConfig};
 use coded_opt::data::synth::{gaussian_linear, sparse_recovery};
-use coded_opt::delay::{MixtureDelay, NoDelay};
 use coded_opt::driver::{AsyncBcd, AsyncGd, Bcd, Experiment, Gd, Lbfgs, Problem, Prox};
-use coded_opt::encoding::partition_bounds;
 use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 
 /// Dimensions every scheme construction accepts (Replication needs r|m;
@@ -201,216 +196,4 @@ fn smoke_async_solvers() {
         .run(AsyncBcd::with_step(step).updates(800).record_every(100))
         .unwrap();
     assert!(out.trace.final_objective() < 0.5 * f0, "async-bcd {}", out.trace.final_objective());
-}
-
-// ------------------------------------------- equivalence with legacy shims
-
-#[test]
-fn driver_gd_bit_identical_to_legacy() {
-    let (x, y, _) = gaussian_linear(N, P, 0.3, 21);
-    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
-    let step = 1.0 / prob.smoothness();
-    // legacy hand-wired pipeline
-    let dp = build_data_parallel(&x, &y, Scheme::Hadamard, M, 2.0, 21).unwrap();
-    let asm = dp.assembler.clone();
-    let mut cluster =
-        SimCluster::new(dp.workers, Box::new(MixtureDelay::paper_bimodal(M, 5)));
-    let cfg = GdConfig { k: 3, step, iters: 40, lambda: 0.05, w0: None };
-    let legacy = coded_opt::coordinator::run_gd(&mut cluster, &asm, &cfg, "legacy", &|w| {
-        (prob.objective(w), 0.0)
-    });
-    // driver pipeline, identical wiring
-    let out = Experiment::new(Problem::least_squares(&x, &y))
-        .scheme(Scheme::Hadamard)
-        .workers(M)
-        .wait_for(3)
-        .redundancy(2.0)
-        .seed(21)
-        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 5)))
-        .eval(|w| (prob.objective(w), 0.0))
-        .run(Gd::with_step(step).lambda(0.05).iters(40))
-        .unwrap();
-    assert_eq!(out.w, legacy.w, "gd iterates must be bit-identical");
-    assert_eq!(out.trace.len(), legacy.trace.len());
-    for (a, b) in out.trace.records.iter().zip(&legacy.trace.records) {
-        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
-        assert_eq!(a.time.to_bits(), b.time.to_bits());
-        assert_eq!(a.k_used, b.k_used);
-    }
-}
-
-#[test]
-fn driver_lbfgs_bit_identical_to_legacy() {
-    let (x, y, _) = gaussian_linear(N, P, 0.3, 23);
-    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
-    let dp = build_data_parallel(&x, &y, Scheme::Haar, M, 2.0, 23).unwrap();
-    let asm = dp.assembler.clone();
-    let mut cluster =
-        SimCluster::new(dp.workers, Box::new(MixtureDelay::paper_bimodal(M, 9)));
-    let cfg = LbfgsConfig { k: 3, iters: 30, lambda: 0.05, memory: 10, rho: 0.9, w0: None };
-    let legacy = coded_opt::coordinator::run_lbfgs(&mut cluster, &asm, &cfg, "legacy", &|w| {
-        (prob.objective(w), 0.0)
-    });
-    let out = Experiment::new(Problem::least_squares(&x, &y))
-        .scheme(Scheme::Haar)
-        .workers(M)
-        .wait_for(3)
-        .redundancy(2.0)
-        .seed(23)
-        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 9)))
-        .eval(|w| (prob.objective(w), 0.0))
-        .run(Lbfgs::new().iters(30).lambda(0.05))
-        .unwrap();
-    assert_eq!(out.w, legacy.w, "lbfgs iterates must be bit-identical");
-}
-
-#[test]
-fn driver_prox_bit_identical_to_legacy() {
-    let (x, y, _) = sparse_recovery(N, 24, 4, 0.1, 25);
-    let prob = LassoProblem::new(x.clone(), y.clone(), 0.05);
-    let step = prob.default_step();
-    let dp = build_data_parallel(&x, &y, Scheme::Steiner, M, 2.0, 25).unwrap();
-    let asm = dp.assembler.clone();
-    let mut cluster =
-        SimCluster::new(dp.workers, Box::new(MixtureDelay::paper_trimodal(M, 3)));
-    let cfg = ProxConfig { k: 3, step, iters: 60, lambda: 0.05, w0: None };
-    let legacy = coded_opt::coordinator::run_prox(&mut cluster, &asm, &cfg, "legacy", &|w| {
-        (prob.objective(w), 0.0)
-    });
-    let out = Experiment::new(Problem::least_squares(&x, &y))
-        .scheme(Scheme::Steiner)
-        .workers(M)
-        .wait_for(3)
-        .redundancy(2.0)
-        .seed(25)
-        .delay(|m| Box::new(MixtureDelay::paper_trimodal(m, 3)))
-        .eval(|w| (prob.objective(w), 0.0))
-        .run(Prox::with_step(step).lambda(0.05).iters(60))
-        .unwrap();
-    assert_eq!(out.w, legacy.w, "prox iterates must be bit-identical");
-}
-
-#[test]
-fn driver_bcd_bit_identical_to_legacy() {
-    let (x, y, _) = gaussian_linear(40, 12, 0.2, 27);
-    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
-    let step = 0.6 * 40.0 / x.gram_spectral_norm(60, 7);
-    let mp = build_model_parallel(
-        &x,
-        Scheme::Hadamard,
-        M,
-        2.0,
-        step,
-        0.0,
-        27,
-        quadratic_phi(y.clone()),
-    )
-    .unwrap();
-    // materialize the normalized dense blocks the legacy shim expects
-    let sbar = mp.recon.sbar_blocks();
-    let mut cluster =
-        SimCluster::new(mp.workers, Box::new(MixtureDelay::paper_bimodal(M, 11)));
-    let cfg = coded_opt::coordinator::bcd::BcdConfig { k: 3, iters: 50 };
-    let legacy =
-        coded_opt::coordinator::bcd::run_bcd(&mut cluster, &sbar, 40, 12, &cfg, "legacy", &|w| {
-            (prob.objective(w), 0.0)
-        });
-    let out = Experiment::new(Problem::least_squares(&x, &y))
-        .scheme(Scheme::Hadamard)
-        .workers(M)
-        .wait_for(3)
-        .redundancy(2.0)
-        .seed(27)
-        .delay(|m| Box::new(MixtureDelay::paper_bimodal(m, 11)))
-        .eval(|w| (prob.objective(w), 0.0))
-        .run(Bcd::with_step(step).iters(50))
-        .unwrap();
-    // The lifted dynamics (v, u, pending steps) are bit-identical; only
-    // the final w = S̄ᵀv reconstruction differs, because the driver path
-    // goes through the structured full-generator apply_t (one FWHT pass)
-    // while the legacy shim sums per-block products — a documented
-    // reordering of the same sum, so compare within rounding.
-    coded_opt::testutil::assert_allclose(&out.w, &legacy.w, 1e-12, "bcd iterates");
-}
-
-#[test]
-fn driver_async_gd_bit_identical_to_legacy() {
-    let (x, y, _) = gaussian_linear(N, P, 0.2, 29);
-    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.05);
-    let step = 0.3 / prob.smoothness();
-    let bounds = partition_bounds(N, M);
-    let shards: Vec<_> = bounds
-        .windows(2)
-        .map(|w| (x.row_block(w[0], w[1]), y[w[0]..w[1]].to_vec()))
-        .collect();
-    let mut delay = NoDelay::new(M);
-    let cfg = coded_opt::coordinator::asynchronous::AsyncGdConfig {
-        step,
-        lambda: 0.05,
-        updates: 1500,
-        secs_per_unit: 1e-4,
-        record_every: 100,
-    };
-    let legacy = coded_opt::coordinator::asynchronous::run_async_gd(
-        &shards,
-        &mut delay,
-        N,
-        P,
-        &cfg,
-        "legacy",
-        &|w| (prob.objective(w), 0.0),
-    );
-    let out = Experiment::new(Problem::least_squares(&x, &y))
-        .workers(M)
-        .timing(1e-4, 1e-3)
-        .eval(|w| (prob.objective(w), 0.0))
-        .run(AsyncGd::with_step(step).lambda(0.05).updates(1500).record_every(100))
-        .unwrap();
-    assert_eq!(out.w, legacy.w, "async-gd iterates must be bit-identical");
-    assert_eq!(out.trace.len(), legacy.trace.len());
-}
-
-#[test]
-fn driver_async_bcd_bit_identical_to_legacy() {
-    let (x, y, _) = gaussian_linear(30, 12, 0.2, 31);
-    let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
-    let step = 0.5 * 30.0 / x.gram_spectral_norm(60, 8);
-    // legacy hand-wired pipeline: uncoded column blocks + quadratic ∇φ
-    let bounds = partition_bounds(12, M);
-    let blocks: Vec<_> = bounds
-        .windows(2)
-        .map(|w| x.select_cols(&(w[0]..w[1]).collect::<Vec<_>>()))
-        .collect();
-    let yc = y.clone();
-    let grad_phi = move |u: &[f64]| -> Vec<f64> {
-        let n = u.len() as f64;
-        u.iter().zip(&yc).map(|(ui, yi)| (ui - yi) / n).collect()
-    };
-    let mut delay = NoDelay::new(M);
-    let cfg = coded_opt::coordinator::asynchronous::AsyncBcdConfig {
-        step,
-        lambda: 0.0,
-        updates: 600,
-        secs_per_unit: 1e-4,
-        record_every: 100,
-    };
-    let eval = |v: &[Vec<f64>]| -> (f64, f64) {
-        let w: Vec<f64> = v.iter().flatten().copied().collect();
-        (prob.objective(&w), 0.0)
-    };
-    let (legacy_trace, legacy_v, _) = coded_opt::coordinator::asynchronous::run_async_bcd(
-        &blocks, &grad_phi, 30, &cfg, &mut delay, "legacy", &eval,
-    );
-    let legacy_w: Vec<f64> = legacy_v.iter().flatten().copied().collect();
-    let out = Experiment::new(Problem::least_squares(&x, &y))
-        .workers(M)
-        .timing(1e-4, 1e-3)
-        .eval(|w| (prob.objective(w), 0.0))
-        .run(AsyncBcd::with_step(step).updates(600).record_every(100))
-        .unwrap();
-    assert_eq!(out.w, legacy_w, "async-bcd iterates must be bit-identical");
-    assert_eq!(out.trace.len(), legacy_trace.len());
-    for (a, b) in out.trace.records.iter().zip(&legacy_trace.records) {
-        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
-    }
 }

@@ -9,7 +9,7 @@
 //!   `encoding::spectrum`.
 
 use coded_opt::config::Scheme;
-use coded_opt::encoding::{paley, Encoding, SubsetSpectrum};
+use coded_opt::encoding::{paley, EncodingOp, SubsetSpectrum};
 use coded_opt::linalg::dot;
 use coded_opt::testutil::PropRunner;
 
@@ -24,7 +24,7 @@ const EXACT_SCHEMES: &[Scheme] = &[
     Scheme::Steiner,
 ];
 
-fn full_stack(enc: &Encoding) -> coded_opt::linalg::Mat {
+fn full_stack(enc: &EncodingOp) -> coded_opt::linalg::Mat {
     let all: Vec<usize> = (0..enc.workers()).collect();
     enc.stack(&all)
 }
@@ -40,7 +40,7 @@ fn prop_structured_schemes_are_exact_parseval_frames() {
             (scheme, n, m, seed)
         },
         |&(scheme, n, m, seed)| {
-            let enc = Encoding::build(scheme, n, m, 2.0, seed)
+            let enc = EncodingOp::build(scheme, n, m, 2.0, seed)
                 .map_err(|e| format!("{scheme:?} n={n} m={m}: {e}"))?;
             let s = full_stack(&enc);
             if s.cols() != enc.n {
@@ -76,7 +76,7 @@ fn prop_gaussian_gram_concentrates_at_beta() {
             (n, m, seed)
         },
         |&(n, m, seed)| {
-            let enc = Encoding::build(Scheme::Gaussian, n, m, 2.0, seed)
+            let enc = EncodingOp::build(Scheme::Gaussian, n, m, 2.0, seed)
                 .map_err(|e| e.to_string())?;
             let s = full_stack(&enc);
             let gram = s.gram();
@@ -119,7 +119,7 @@ fn prop_etf_rows_unit_norm_and_welch_equiangular() {
             (scheme, n, m)
         },
         |&(scheme, n, m)| {
-            let enc = Encoding::build(scheme, n, m, 2.0, 1).map_err(|e| e.to_string())?;
+            let enc = EncodingOp::build(scheme, n, m, 2.0, 1).map_err(|e| e.to_string())?;
             let s = full_stack(&enc);
             let rows = s.rows();
             let beta = rows as f64 / n as f64;
@@ -164,7 +164,7 @@ fn prop_erasure_spectrum_sanity_all_schemes() {
         },
         |&(scheme, n, m, k, seed)| {
             let enc =
-                Encoding::build(scheme, n, m, 2.0, seed).map_err(|e| e.to_string())?;
+                EncodingOp::build(scheme, n, m, 2.0, seed).map_err(|e| e.to_string())?;
             let stats = SubsetSpectrum::new(&enc, seed ^ 0xabc).analyze(k, 4);
             if stats.eigenvalues.iter().any(|e| !e.is_finite()) {
                 return Err("non-finite eigenvalue".into());

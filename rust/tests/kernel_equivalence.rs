@@ -19,7 +19,7 @@
 use std::sync::Mutex;
 
 use coded_opt::config::Scheme;
-use coded_opt::encoding::{Encoder, Encoding};
+use coded_opt::encoding::{Encoder, EncodingOp};
 use coded_opt::linalg::mat::reference;
 use coded_opt::linalg::{par, Csr, Mat};
 use coded_opt::rng::Pcg64;
@@ -150,7 +150,7 @@ fn every_scheme_apply_paths_match_stacked_dense() {
     let (n, m, beta, seed) = (48, 4, 2.0, 21);
     let mut rng = Pcg64::new(5);
     for &scheme in Scheme::all() {
-        let enc = Encoding::build(scheme, n, m, beta, seed)
+        let enc = EncodingOp::build(scheme, n, m, beta, seed)
             .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
         let subset: Vec<usize> = (0..enc.workers()).collect();
         let s = enc.stack(&subset);
@@ -170,11 +170,11 @@ fn every_scheme_fast_encode_matches_naive_dense_encode() {
     let mut rng = Pcg64::new(9);
     let x = random_mat(&mut rng, n, 6);
     for &scheme in Scheme::all() {
-        let enc = Encoding::build(scheme, n, m, beta, seed).unwrap();
+        let enc = EncodingOp::build(scheme, n, m, beta, seed).unwrap();
         let fast = enc.encode_data(&x);
         assert_eq!(fast.len(), enc.workers());
-        for (f, b) in fast.iter().zip(&enc.blocks) {
-            let naive = reference::matmul(&b.to_dense(), &x);
+        for (i, f) in fast.iter().enumerate() {
+            let naive = reference::matmul(&enc.row_block(i).to_dense(), &x);
             assert_allclose(f.as_slice(), naive.as_slice(), 1e-12, &format!("{scheme:?}"));
         }
     }
@@ -187,7 +187,7 @@ fn fast_encode_thread_invariant() {
     let mut rng = Pcg64::new(31);
     let x = random_mat(&mut rng, 96, 8);
     for scheme in [Scheme::Hadamard, Scheme::Haar, Scheme::Steiner, Scheme::Gaussian] {
-        let enc = Encoding::build(scheme, 96, 6, 2.0, 3).unwrap();
+        let enc = EncodingOp::build(scheme, 96, 6, 2.0, 3).unwrap();
         let mut outs: Vec<Vec<Mat>> = Vec::new();
         for &t in &THREAD_SWEEP {
             par::set_threads(t);

@@ -9,7 +9,7 @@ use coded_opt::coordinator::bcd::BcdWorker;
 use coded_opt::coordinator::{KIND_BCD_STEP, KIND_GRADIENT};
 use coded_opt::delay::TraceDelay;
 use coded_opt::driver::{Experiment, Problem};
-use coded_opt::encoding::{Encoding, ReplicationMap};
+use coded_opt::encoding::{EncodingOp, ReplicationMap};
 use coded_opt::linalg::Mat;
 use coded_opt::testutil::PropRunner;
 
@@ -173,12 +173,12 @@ fn prop_encodings_are_tight_frames() {
             (scheme, n, m, seed)
         },
         |(scheme, n, m, seed)| {
-            let enc = Encoding::build(*scheme, *n, *m, 2.0, *seed)
+            let enc = EncodingOp::build(*scheme, *n, *m, 2.0, *seed)
                 .map_err(|e| format!("build failed: {e}"))?;
             if enc.workers() != *m {
                 return Err("wrong worker count".into());
             }
-            let rows: usize = enc.blocks.iter().map(|b| b.rows()).sum();
+            let rows: usize = (0..enc.workers()).map(|i| enc.block_rows(i)).sum();
             if rows != enc.total_rows() {
                 return Err("blocks don't tile".into());
             }

@@ -24,7 +24,7 @@ use coded_opt::data::synth::gaussian_linear;
 use coded_opt::delay::MixtureDelay;
 use coded_opt::driver::{AsyncGd, Bcd, Experiment, Gd, Lbfgs, Problem, Prox, Solver};
 use coded_opt::encoding::stream::encode_data_streamed;
-use coded_opt::encoding::Encoding;
+use coded_opt::encoding::EncodingOp;
 use coded_opt::linalg::Mat;
 use coded_opt::metrics::Trace;
 use coded_opt::objectives::{QuadObjective, RidgeProblem};
@@ -84,7 +84,7 @@ fn streamed_encode_from_disk_matches_dense_for_every_scheme() {
         Scheme::Steiner,
         Scheme::Haar,
     ] {
-        let enc = Encoding::build(scheme, 48, 4, 2.0, 11).unwrap();
+        let enc = EncodingOp::build(scheme, 48, 4, 2.0, 11).unwrap();
         let dense = enc.encode_data(&x);
         let streamed = encode_data_streamed(&enc, &src).unwrap();
         for (w, (sb, db)) in streamed.iter().zip(&dense).enumerate() {

@@ -7,7 +7,7 @@ use coded_opt::coordinator::KIND_GRADIENT;
 use coded_opt::data::synth::gaussian_linear;
 use coded_opt::driver::{Experiment, Gd, Problem};
 use coded_opt::delay::AdversarialDelay;
-use coded_opt::encoding::{paley, spectrum, Encoding};
+use coded_opt::encoding::{paley, spectrum, EncodingOp};
 use coded_opt::linalg::{symmetric_eigenvalues, Mat};
 use coded_opt::objectives::{QuadObjective, RidgeProblem};
 use coded_opt::rng::{sample_without_replacement, Pcg64};
@@ -17,7 +17,7 @@ use coded_opt::rng::{sample_without_replacement, Pcg64};
 #[test]
 fn brip_epsilon_below_one_for_etfs() {
     for (scheme, n) in [(Scheme::Steiner, 28), (Scheme::Hadamard, 32)] {
-        let enc = Encoding::build(scheme, n, 8, 2.0, 5).unwrap();
+        let enc = EncodingOp::build(scheme, n, 8, 2.0, 5).unwrap();
         let mut an = spectrum::SubsetSpectrum::new(&enc, 7);
         let stats = an.analyze(6, 10); // η = 0.75 ≥ 1/β = 0.5
         assert!(
@@ -37,7 +37,7 @@ fn brip_epsilon_below_one_for_etfs() {
 /// bulk claim, not the worst case.
 #[test]
 fn haar_bulk_concentrates_even_if_extremes_escape() {
-    let enc = Encoding::build(Scheme::Haar, 32, 8, 2.0, 5).unwrap();
+    let enc = EncodingOp::build(Scheme::Haar, 32, 8, 2.0, 5).unwrap();
     let mut an = spectrum::SubsetSpectrum::new(&enc, 7);
     let stats = an.analyze(6, 10);
     let near_one = stats
@@ -59,7 +59,7 @@ fn welch_bound_met_with_equality_only_by_etf() {
     let welch = ((2.0 - 1.0) / (2.0 * 7.0 - 1.0f64)).sqrt();
     assert!((paley::max_coherence(&s) - welch).abs() < 1e-9);
     // Gaussian frame at the same size: strictly above the bound
-    let enc = Encoding::build(Scheme::Gaussian, 7, 2, 2.0, 3).unwrap();
+    let enc = EncodingOp::build(Scheme::Gaussian, 7, 2, 2.0, 3).unwrap();
     let mut g = enc.stack(&[0, 1]);
     // normalize rows to unit norm for a fair coherence comparison
     for i in 0..g.rows() {
@@ -75,7 +75,7 @@ fn welch_bound_met_with_equality_only_by_etf() {
 /// n(1 − β(1−η)) eigenvalues exactly 1.
 #[test]
 fn prop8_unit_eigenvalue_count() {
-    let enc = Encoding::build(Scheme::Steiner, 28, 8, 2.0, 1).unwrap();
+    let enc = EncodingOp::build(Scheme::Steiner, 28, 8, 2.0, 1).unwrap();
     let beta = enc.beta;
     // η = 6/8 = 0.75 → guarantee: 28·(1 − β/4)
     let subset: Vec<usize> = (0..6).collect();
@@ -92,7 +92,7 @@ fn lemma10_subset_solution_quality() {
     let prob = RidgeProblem::new(x.clone(), y.clone(), 0.0);
     let f_star = prob.objective(&prob.solve_exact());
     let m = 8;
-    let enc = Encoding::build(Scheme::Hadamard, 64, m, 2.0, 9).unwrap();
+    let enc = EncodingOp::build(Scheme::Hadamard, 64, m, 2.0, 9).unwrap();
     let mut rng = Pcg64::new(31);
     for _ in 0..5 {
         let subset = sample_without_replacement(&mut rng, m, 6);
@@ -221,13 +221,13 @@ fn lemma3_pair_curvature_bounds() {
 #[test]
 fn lemma15_lift_preserves_optimum() {
     let (x, y, _) = gaussian_linear(40, 10, 0.2, 15);
-    let enc = Encoding::build(Scheme::Hadamard, 10, 2, 2.0, 15).unwrap();
+    let enc = EncodingOp::build(Scheme::Hadamard, 10, 2, 2.0, 15).unwrap();
     let norm = 1.0 / enc.beta.sqrt();
     // lifted design X·S̄ᵀ (40 × βp), assembled column-block by block
     let xt = x.transpose();
     let mut lifted_cols: Vec<Vec<f64>> = Vec::new(); // columns of X·S̄ᵀ
-    for s in &enc.blocks {
-        let mut si_xt = s.encode_mat(&xt); // b_i × 40
+    for i in 0..enc.workers() {
+        let mut si_xt = enc.row_block(i).encode_mat(&xt); // b_i × 40
         si_xt.scale_inplace(norm);
         for r in 0..si_xt.rows() {
             lifted_cols.push(si_xt.row(r).to_vec());
