@@ -149,5 +149,14 @@ fn main() -> anyhow::Result<()> {
         op.n,
         op.beta
     );
+
+    // All of the bit-identity claims above rest on source-level
+    // invariants (total float orders, no wall-clock reads in simulated
+    // paths, ordered iteration, audited unsafe). They are mechanized as
+    // `coded-opt lint` — the determinism-contract static analysis
+    // (coded_opt::analysis), blocking in CI. Run it locally with
+    // `cargo run --release -- lint` (add `--json` for the
+    // `coded-opt/lint-v1` report); exceptions need an inline
+    // `lint:allow(<rule>)` with a justification, which the report counts.
     Ok(())
 }

@@ -1,0 +1,187 @@
+//! Determinism-contract static analysis (`coded-opt lint`).
+//!
+//! The paper's convergence guarantees are deterministic sample-path
+//! results, so this repo pins bit-exact golden traces across thread
+//! counts and engines. This module mechanizes the source-level side of
+//! that contract: a dependency-free, std-only scanner over the
+//! workspace's `.rs` files that fails CI when code re-introduces the
+//! bug classes the contract forbids (NaN-partial float orders,
+//! wall-clock reads in simulated paths, hash-iteration order leaking
+//! into traces, unaudited `unsafe`). See [`rules::RULES`] for the rule
+//! set and [`rules`] for the `lint:allow` escape hatch.
+//!
+//! Design note: the scanner is line/token-level, not a parser — see
+//! [`source`] for what it does and does not understand. It scans its
+//! own source too; the rule tokens it searches for live in string
+//! literals, which the lexer blanks, so the tool is clean under itself.
+
+pub mod rules;
+pub mod source;
+
+pub use rules::{Finding, RuleInfo, Suppressed, BARE_ALLOW, RULES};
+
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Outcome of linting a tree.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Surviving violations, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Violations consumed by `lint:allow` directives.
+    pub suppressed: Vec<Suppressed>,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+}
+
+impl LintReport {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable report (schema `coded-opt/lint-v1`).
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n");
+        s.push_str("  \"schema\": \"coded-opt/lint-v1\",\n");
+        let _ = writeln!(s, "  \"files_scanned\": {},", self.files);
+        let _ = writeln!(s, "  \"finding_count\": {},", self.findings.len());
+        let _ = writeln!(s, "  \"suppressed_count\": {},", self.suppressed.len());
+        s.push_str("  \"findings\": [");
+        for (i, f) in self.findings.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"message\": \"{}\"}}",
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.rule),
+                json_escape(&f.message)
+            );
+        }
+        s.push_str(if self.findings.is_empty() { "],\n" } else { "\n  ],\n" });
+        s.push_str("  \"suppressed\": [");
+        for (i, sp) in self.suppressed.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n    {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \
+                 \"justification\": \"{}\"}}",
+                json_escape(&sp.file),
+                sp.line,
+                json_escape(&sp.rule),
+                json_escape(&sp.justification)
+            );
+        }
+        s.push_str(if self.suppressed.is_empty() { "]\n" } else { "\n  ]\n" });
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable report.
+    pub fn render_human(&self) -> String {
+        let mut s = String::new();
+        for f in &self.findings {
+            let _ = writeln!(s, "{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+        if !self.findings.is_empty() {
+            s.push('\n');
+        }
+        for sp in &self.suppressed {
+            let why =
+                if sp.justification.is_empty() { "(no justification)" } else { &sp.justification };
+            let _ = writeln!(s, "allowed {}:{}: [{}] {}", sp.file, sp.line, sp.rule, why);
+        }
+        if !self.suppressed.is_empty() {
+            s.push('\n');
+        }
+        let _ = writeln!(
+            s,
+            "{} finding(s), {} allowlisted, {} file(s) scanned",
+            self.findings.len(),
+            self.suppressed.len(),
+            self.files
+        );
+        s
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, deterministic
+/// order). Paths in the report are relative to `root`.
+pub fn lint_path(root: &Path) -> Result<LintReport> {
+    let files = source::rs_files(root)
+        .with_context(|| format!("walking {}", root.display()))?;
+    let mut report = LintReport { files: files.len(), ..Default::default() };
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let (f, s) = rules::lint_file(&rel, &text);
+        report.findings.extend(f);
+        report.suppressed.extend(s);
+    }
+    Ok(report)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(rel: &str, text: &str) -> LintReport {
+        let (findings, suppressed) = rules::lint_file(rel, text);
+        LintReport { findings, suppressed, files: 1 }
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let r = report("metrics/x.rs", "let a = f64::NAN;\n");
+        let j = r.to_json();
+        assert!(j.contains("\"schema\": \"coded-opt/lint-v1\""));
+        assert!(j.contains("\"finding_count\": 1"));
+        assert!(j.contains("\"rule\": \"no-silent-nan\""));
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn empty_report_is_valid_json_arrays() {
+        let r = LintReport { files: 3, ..Default::default() };
+        let j = r.to_json();
+        assert!(j.contains("\"findings\": []"));
+        assert!(j.contains("\"suppressed\": []"));
+        assert!(r.is_clean());
+    }
+
+    #[test]
+    fn human_render_mentions_counts() {
+        let r = report("metrics/x.rs", "let a = f64::NAN;\n");
+        let h = r.render_human();
+        assert!(h.contains("metrics/x.rs:1:"));
+        assert!(h.contains("1 finding(s), 0 allowlisted, 1 file(s) scanned"));
+    }
+}

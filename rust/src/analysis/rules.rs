@@ -1,0 +1,526 @@
+//! The determinism-contract rules and the per-file scan.
+//!
+//! Each rule encodes an invariant the repo's bit-exact golden traces
+//! depend on (see the "Determinism contract" section in the crate
+//! docs). Rules are heuristic and token-level by design; the escape
+//! hatch for a justified exception is an inline allow directive:
+//!
+//! ```text
+//! // lint:allow(no-silent-nan) — documented empty-trace sentinel
+//! ```
+//!
+//! written either as a standalone comment on the line *above* the
+//! flagged code or as a trailing comment on the flagged line itself.
+//! A directive **must** carry a justification after the closing paren;
+//! a bare `lint:allow(rule)` still suppresses the target finding (so
+//! fixtures stay deterministic) but is itself reported under the meta
+//! rule `bare-allow` — you cannot silence the tool without saying why.
+//! Doc comments (`///`, `//!`) are never parsed as directives, so docs
+//! may quote the syntax freely.
+
+use crate::analysis::source::{classify, find_token, SourceLine};
+use std::path::Path;
+
+/// A lint rule's identity and one-line contract.
+#[derive(Clone, Copy, Debug)]
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub summary: &'static str,
+}
+
+/// The five determinism-contract rules.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "float-total-order",
+        summary: "float comparisons in sort/max/min positions must use total_cmp",
+    },
+    RuleInfo {
+        id: "wall-clock-zone",
+        summary: "wall-clock reads only in cluster/threads.rs and bench.rs",
+    },
+    RuleInfo {
+        id: "ordered-iteration",
+        summary: "no HashMap/HashSet in trace-producing modules (use BTreeMap)",
+    },
+    RuleInfo {
+        id: "safety-comment",
+        summary: "unsafe only under runtime/, and always with a SAFETY: comment",
+    },
+    RuleInfo {
+        id: "no-silent-nan",
+        summary: "no NAN literals or partial-order unwraps in library code",
+    },
+];
+
+/// Meta rule id for allow directives that are malformed, name an
+/// unknown rule, or carry no justification.
+pub const BARE_ALLOW: &str = "bare-allow";
+
+/// One contract violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the scanned root, `/`-separated.
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub message: String,
+}
+
+/// A finding consumed by a `lint:allow` directive.
+#[derive(Clone, Debug)]
+pub struct Suppressed {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    /// Empty when the directive was bare (which is itself a finding).
+    pub justification: String,
+}
+
+/// Comparator-taking methods: a float `partial_cmp` within reach of one
+/// of these is an ordering that panics or goes unstable on NaN.
+const SORT_TOKENS: &[&str] =
+    &["sort_by", "sort_unstable_by", "max_by", "min_by", "binary_search_by"];
+
+/// How many preceding lines of context count as "the same call" when
+/// looking for a sort token (closures often split across lines).
+const SORT_WINDOW: usize = 2;
+
+/// Modules whose iteration order leaks into traces or user-visible
+/// output (matched as `/`-separated path prefixes relative to `src`).
+const TRACE_MODULES: &[&str] = &[
+    "cluster/",
+    "coordinator/",
+    "data/",
+    "delay/",
+    "driver/",
+    "encoding/",
+    "linalg/",
+    "metrics/",
+    "objectives/",
+    "scenario/",
+];
+
+/// Modules allowed to read the wall clock (path-component suffixes).
+const WALL_CLOCK_ZONES: &[&str] = &["cluster/threads.rs", "bench.rs"];
+
+/// Modules where `unsafe` is permitted (with a SAFETY: comment).
+const UNSAFE_ZONES: &[&str] = &["runtime/"];
+
+/// A parsed `lint:allow` directive.
+struct Allow {
+    /// Rule name as written (may be unknown).
+    rule: String,
+    /// Justification text; empty for a bare directive.
+    justification: String,
+    /// Line the directive itself sits on.
+    line: usize,
+    /// Line whose findings it suppresses.
+    target: usize,
+}
+
+fn is_zone(rel: &str, suffixes: &[&str]) -> bool {
+    // Component-wise suffix match: `bench.rs` matches `bench.rs` but
+    // not `microbench.rs`.
+    suffixes.iter().any(|s| Path::new(rel).ends_with(s))
+}
+
+fn in_prefix(rel: &str, prefixes: &[&str]) -> bool {
+    prefixes.iter().any(|p| rel.starts_with(p))
+}
+
+/// Scan one file. Returns surviving findings and suppressed findings,
+/// both sorted by (line, rule).
+pub fn lint_file(rel: &str, text: &str) -> (Vec<Finding>, Vec<Suppressed>) {
+    let lines = classify(text);
+    let mut findings = scan(rel, &lines);
+    let mut suppressed = Vec::new();
+    apply_allows(rel, &lines, &mut findings, &mut suppressed);
+    findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    suppressed.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    (findings, suppressed)
+}
+
+fn scan(rel: &str, lines: &[SourceLine]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let code = line.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        let mut total_order_hit = false;
+
+        // float-total-order: partial_cmp with a comparator-taking call
+        // in the same statement window.
+        if find_token(code, "partial_cmp").is_some() {
+            let lo = i.saturating_sub(SORT_WINDOW);
+            let in_sort = lines[lo..=i]
+                .iter()
+                .any(|l| SORT_TOKENS.iter().any(|t| find_token(&l.code, t).is_some()));
+            if in_sort {
+                total_order_hit = true;
+                out.push(mk(rel, line, "float-total-order",
+                    "partial_cmp in a sort/max/min position; use total_cmp for a NaN-total order"));
+            }
+        }
+
+        // wall-clock-zone
+        if !is_zone(rel, WALL_CLOCK_ZONES)
+            && (find_token(code, "Instant::now").is_some()
+                || find_token(code, "SystemTime").is_some())
+        {
+            out.push(mk(rel, line, "wall-clock-zone",
+                "wall-clock read outside the declared zones (cluster/threads.rs, bench.rs)"));
+        }
+
+        // ordered-iteration
+        if in_prefix(rel, TRACE_MODULES)
+            && (find_token(code, "HashMap").is_some() || find_token(code, "HashSet").is_some())
+        {
+            out.push(mk(rel, line, "ordered-iteration",
+                "hash collection in a trace-producing module; use BTreeMap/BTreeSet"));
+        }
+
+        // safety-comment
+        if find_token(code, "unsafe").is_some() {
+            if !in_prefix(rel, UNSAFE_ZONES) {
+                out.push(mk(rel, line, "safety-comment",
+                    "unsafe outside the allowlisted modules (runtime/)"));
+            } else if !has_safety_comment(lines, i) {
+                out.push(mk(rel, line, "safety-comment",
+                    "unsafe without an adjacent SAFETY: comment"));
+            }
+        }
+
+        // no-silent-nan (library code only)
+        if !line.in_test {
+            if find_token(code, "NAN").is_some() {
+                out.push(mk(rel, line, "no-silent-nan",
+                    "NAN literal in library code; sanitize at the boundary or justify"));
+            }
+            let unwrapped_cmp = find_token(code, "partial_cmp")
+                .is_some_and(|p| code[p..].contains(".unwrap()"));
+            if unwrapped_cmp && !total_order_hit {
+                out.push(mk(rel, line, "no-silent-nan",
+                    "unwrap on a partial-order result panics on NaN; use total_cmp"));
+            }
+        }
+    }
+    out
+}
+
+fn mk(rel: &str, line: &SourceLine, rule: &str, message: &str) -> Finding {
+    Finding {
+        file: rel.to_string(),
+        line: line.number,
+        rule: rule.to_string(),
+        message: message.to_string(),
+    }
+}
+
+/// Is there a SAFETY: marker on line `i` or in the contiguous block of
+/// comment/attribute-only lines directly above it?
+fn has_safety_comment(lines: &[SourceLine], i: usize) -> bool {
+    if lines[i].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let l = &lines[j];
+        let code = l.code.trim();
+        if code.is_empty() && !l.comment.is_empty() {
+            if l.comment.contains("SAFETY:") {
+                return true;
+            }
+        } else if code.starts_with("#[") {
+            continue; // attributes may sit between the comment and the item
+        } else {
+            break;
+        }
+    }
+    false
+}
+
+const ALLOW_PREFIX: &str = "lint:allow";
+
+fn parse_allows(lines: &[SourceLine]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for line in lines {
+        if line.is_doc || !line.comment.starts_with(ALLOW_PREFIX) {
+            continue;
+        }
+        let target =
+            if line.code.trim().is_empty() { line.number + 1 } else { line.number };
+        let body = &line.comment[ALLOW_PREFIX.len()..];
+        let (rule, justification) = match split_directive(body) {
+            Some(pair) => pair,
+            None => {
+                // Malformed (`lint:allow` with no parenthesized rule):
+                // report and suppress nothing.
+                out.push(Allow {
+                    rule: String::new(),
+                    justification: String::new(),
+                    line: line.number,
+                    target,
+                });
+                continue;
+            }
+        };
+        out.push(Allow { rule, justification, line: line.number, target });
+    }
+    out
+}
+
+/// Split `"(rule) — why"` into (`rule`, `why`). The justification is
+/// whatever follows the closing paren, minus leading separators; it
+/// counts only if it contains something alphanumeric.
+fn split_directive(body: &str) -> Option<(String, String)> {
+    let rest = body.strip_prefix('(')?;
+    let close = rest.find(')')?;
+    let rule = rest[..close].trim().to_string();
+    if rule.is_empty() {
+        return None;
+    }
+    let tail = rest[close + 1..]
+        .trim_start_matches([' ', '\t', '—', '–', '-', ':'])
+        .trim()
+        .to_string();
+    let justified = tail.chars().any(|c| c.is_ascii_alphanumeric());
+    Some((rule, if justified { tail } else { String::new() }))
+}
+
+fn apply_allows(
+    rel: &str,
+    lines: &[SourceLine],
+    findings: &mut Vec<Finding>,
+    suppressed: &mut Vec<Suppressed>,
+) {
+    for allow in parse_allows(lines) {
+        let known = RULES.iter().any(|r| r.id == allow.rule);
+        if !known {
+            let what = if allow.rule.is_empty() {
+                "malformed lint:allow directive (expected a parenthesized rule name)".to_string()
+            } else {
+                format!("lint:allow names unknown rule `{}`", allow.rule)
+            };
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: allow.line,
+                rule: BARE_ALLOW.to_string(),
+                message: what,
+            });
+            continue;
+        }
+        let mut hit = false;
+        findings.retain(|f| {
+            if f.line == allow.target && f.rule == allow.rule {
+                hit = true;
+                suppressed.push(Suppressed {
+                    file: f.file.clone(),
+                    line: f.line,
+                    rule: f.rule.clone(),
+                    justification: allow.justification.clone(),
+                });
+                false
+            } else {
+                true
+            }
+        });
+        if allow.justification.is_empty() {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: allow.line,
+                rule: BARE_ALLOW.to_string(),
+                message: "lint:allow without a justification".to_string(),
+            });
+        } else if !hit {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: allow.line,
+                rule: BARE_ALLOW.to_string(),
+                message: format!("unused lint:allow({}) — nothing to suppress", allow.rule),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(rel: &str, text: &str) -> (Vec<Finding>, Vec<Suppressed>) {
+        lint_file(rel, text)
+    }
+
+    #[test]
+    fn partial_cmp_in_sort_is_flagged() {
+        let (f, _) =
+            lint("linalg/x.rs", "v.sort_by(|a, b| a.partial_cmp(b).expect(\"cmp\"));\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "float-total-order");
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn sort_token_in_window_counts() {
+        let text = "v.sort_by(|a, b| {\n    a.cost\n        .partial_cmp(&b.cost)\n});\n";
+        let (f, _) = lint("linalg/x.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn partial_ord_impl_is_not_flagged() {
+        let text = "impl PartialOrd for Time {\n    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {\n        Some(self.cmp(o))\n    }\n}\n";
+        let (f, _) = lint("coordinator/x.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn total_cmp_sort_is_clean() {
+        let (f, _) = lint("linalg/x.rs", "v.sort_by(|a, b| a.total_cmp(b));\n");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn wall_clock_zones_respected() {
+        let text = "let t = Instant::now();\n";
+        let (f, _) = lint("coordinator/x.rs", text);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "wall-clock-zone");
+        let (f, _) = lint("cluster/threads.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = lint("bench.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        // component-wise: `microbench.rs` is NOT in the zone
+        let (f, _) = lint("microbench.rs", text);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn hash_collections_flagged_in_trace_modules_only() {
+        let text = "use std::collections::HashMap;\n";
+        let (f, _) = lint("cluster/x.rs", text);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "ordered-iteration");
+        let (f, _) = lint("analysis/x.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn unsafe_needs_zone_and_safety_comment() {
+        let bad_zone = "unsafe impl Send for X {}\n";
+        let (f, _) = lint("linalg/x.rs", bad_zone);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "safety-comment");
+
+        let (f, _) = lint("runtime/x.rs", "unsafe impl Send for X {}\n");
+        assert_eq!(f.len(), 1, "in-zone but uncommented: {f:?}");
+
+        let ok = "// SAFETY: X is plain data.\n// Second comment line.\nunsafe impl Send for X {}\n";
+        let (f, _) = lint("runtime/x.rs", ok);
+        assert!(f.is_empty(), "{f:?}");
+
+        let multi = "// SAFETY: head line.\n// continuation.\n#[allow(dead_code)]\nunsafe impl Send for X {}\n";
+        let (f, _) = lint("runtime/x.rs", multi);
+        assert!(f.is_empty(), "walkback crosses attributes: {f:?}");
+    }
+
+    #[test]
+    fn nan_literal_flagged_outside_tests_only() {
+        let text = "let a = f64::NAN;\n#[cfg(test)]\nmod tests {\n    fn t() { let b = f64::NAN; }\n}\n";
+        let (f, _) = lint("metrics/x.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 1);
+        assert_eq!(f[0].rule, "no-silent-nan");
+    }
+
+    #[test]
+    fn partial_cmp_unwrap_without_sort_context() {
+        let (f, _) = lint("metrics/x.rs", "let o = a.partial_cmp(&b).unwrap();\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "no-silent-nan");
+    }
+
+    #[test]
+    fn sort_unwrap_fires_once_not_twice() {
+        let (f, _) = lint("metrics/x.rs", "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n");
+        assert_eq!(f.len(), 1, "dedup: {f:?}");
+        assert_eq!(f[0].rule, "float-total-order");
+    }
+
+    #[test]
+    fn justified_allow_suppresses_and_is_counted() {
+        let text = "// lint:allow(no-silent-nan) — documented sentinel for empty traces\nlet a = f64::NAN;\n";
+        let (f, s) = lint("metrics/x.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].rule, "no-silent-nan");
+        assert_eq!(s[0].line, 2);
+        assert!(s[0].justification.contains("sentinel"));
+    }
+
+    #[test]
+    fn trailing_allow_targets_its_own_line() {
+        let text = "let a = f64::NAN; // lint:allow(no-silent-nan) — sentinel value\n";
+        let (f, s) = lint("metrics/x.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn bare_allow_suppresses_but_is_itself_a_finding() {
+        let text = "// lint:allow(no-silent-nan)\nlet a = f64::NAN;\n";
+        let (f, s) = lint("metrics/x.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, BARE_ALLOW);
+        assert_eq!(f[0].line, 1);
+        assert_eq!(s.len(), 1, "underlying finding still suppressed");
+        assert!(s[0].justification.is_empty());
+    }
+
+    #[test]
+    fn separator_only_justification_is_bare() {
+        let text = "let a = f64::NAN; // lint:allow(no-silent-nan) —\n";
+        let (f, s) = lint("metrics/x.rs", text);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, BARE_ALLOW);
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn unknown_rule_is_a_finding_and_suppresses_nothing() {
+        let text = "// lint:allow(no-such-rule) — reason\nlet a = f64::NAN;\n";
+        let (f, s) = lint("metrics/x.rs", text);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|x| x.rule == BARE_ALLOW));
+        assert!(f.iter().any(|x| x.rule == "no-silent-nan"));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn unused_allow_is_reported() {
+        let text = "// lint:allow(no-silent-nan) — stale directive\nlet a = 1.0;\n";
+        let (f, _) = lint("metrics/x.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, BARE_ALLOW);
+        assert!(f[0].message.contains("unused"));
+    }
+
+    #[test]
+    fn doc_comments_never_parse_as_directives() {
+        let text = "/// lint:allow(no-silent-nan) — this is documentation\nlet a = f64::NAN;\n";
+        let (f, s) = lint("metrics/x.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "no-silent-nan");
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn directive_in_string_is_inert() {
+        let text = "let s = \"// lint:allow(no-silent-nan) — nope\";\nlet a = f64::NAN;\n";
+        let (f, s) = lint("metrics/x.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(s.is_empty());
+    }
+}

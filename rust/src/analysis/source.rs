@@ -1,0 +1,381 @@
+//! Lexical preprocessing for the determinism-contract lint.
+//!
+//! The scanner is deliberately *not* a Rust parser: the invariants it
+//! checks are token-shaped (`partial_cmp` in a sort position,
+//! `Instant::now` outside a wall-clock zone, a bare `unsafe`), so a
+//! line classifier that strips comments and blanks string/char literal
+//! *contents* is exactly enough — and it keeps the pass dependency-free
+//! and fast. What the classifier must get right:
+//!
+//! - line (`//`) and nested block (`/* */`) comments, so a token inside
+//!   prose never counts as code;
+//! - string literals (including raw `r#"…"#` and multi-line strings),
+//!   so the scanner can mention its own forbidden tokens in messages
+//!   without flagging itself;
+//! - char literals vs lifetimes (`'{'` must not leak a brace into the
+//!   brace-depth tracking; `'a` must not swallow the rest of the line);
+//! - `#[cfg(test)]` regions, tracked by brace depth over the stripped
+//!   code, so rules scoped to library code skip test modules.
+
+use std::path::{Path, PathBuf};
+
+/// One source line after classification.
+#[derive(Clone, Debug)]
+pub struct SourceLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with comments removed and string/char contents blanked.
+    pub code: String,
+    /// Text of a `//` comment on this line (marker stripped), if any.
+    pub comment: String,
+    /// The comment was a doc comment (`///` or `//!`). Doc comments are
+    /// never parsed for `lint:allow` directives, so docs can quote the
+    /// directive syntax freely.
+    pub is_doc: bool,
+    /// The line sits inside a `#[cfg(test)]` item.
+    pub in_test: bool,
+}
+
+/// Lexer state carried across lines.
+enum St {
+    Code,
+    /// Nested block comment at the given depth.
+    Block(usize),
+    /// Inside a normal string literal.
+    Str,
+    /// Inside a raw string literal closed by `"` + this many `#`.
+    RawStr(usize),
+}
+
+/// Classify a whole file into [`SourceLine`]s.
+pub fn classify(text: &str) -> Vec<SourceLine> {
+    let mut st = St::Code;
+    let mut out: Vec<SourceLine> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut code = String::new();
+        let mut comment = String::new();
+        let mut is_doc = false;
+        let mut i = 0usize;
+        while i < chars.len() {
+            match st {
+                St::Block(depth) => {
+                    if chars[i] == '*' && i + 1 < chars.len() && chars[i + 1] == '/' {
+                        st = if depth <= 1 { St::Code } else { St::Block(depth - 1) };
+                        i += 2;
+                    } else if chars[i] == '/' && i + 1 < chars.len() && chars[i + 1] == '*' {
+                        st = St::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if chars[i] == '\\' {
+                        i += 2; // escape: skip the escaped char (may run past EOL)
+                    } else if chars[i] == '"' {
+                        code.push('"');
+                        st = St::Code;
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::RawStr(hashes) => {
+                    if chars[i] == '"' && closes_raw(&chars, i, hashes) {
+                        code.push('"');
+                        st = St::Code;
+                        i += 1 + hashes;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::Code => {
+                    let c = chars[i];
+                    let next = chars.get(i + 1).copied();
+                    if c == '/' && next == Some('/') {
+                        let rest: String = chars[i..].iter().collect();
+                        is_doc = rest.starts_with("///") || rest.starts_with("//!");
+                        let skip = if is_doc { 3 } else { 2 };
+                        comment = rest.chars().skip(skip).collect::<String>().trim().to_string();
+                        break; // rest of the line is comment
+                    }
+                    if c == '/' && next == Some('*') {
+                        st = St::Block(1);
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        code.push('"');
+                        st = St::Str;
+                        i += 1;
+                        continue;
+                    }
+                    // raw string start: r"…", r#"…"#, br"…" — only when
+                    // the `r` is not the tail of an identifier (`for`).
+                    if (c == 'r' || c == 'b') && !prev_is_ident(&code) {
+                        if let Some((hashes, consumed)) = raw_string_open(&chars, i) {
+                            code.push('"');
+                            st = St::RawStr(hashes);
+                            i += consumed;
+                            continue;
+                        }
+                    }
+                    if c == '\'' {
+                        // char literal vs lifetime
+                        if next == Some('\\') {
+                            // escaped char literal: skip to the closing quote
+                            let mut j = i + 3; // past ' \ and the escape head
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            code.push(' ');
+                            i = j + 1;
+                        } else if i + 2 < chars.len() && chars[i + 2] == '\'' {
+                            code.push(' '); // plain char literal 'x'
+                            i += 3;
+                        } else {
+                            code.push('\''); // lifetime marker
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(SourceLine { number: idx + 1, code, comment, is_doc, in_test: false });
+    }
+    mark_test_regions(&mut out);
+    out
+}
+
+/// Does the `"` at `chars[i]` (inside a raw string) close it, i.e. is it
+/// followed by `hashes` consecutive `#`?
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If `chars[i..]` opens a raw string (`r"`, `r#"`, `br##"`, …), return
+/// `(hash_count, chars_consumed_including_quote)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+        if chars.get(j) != Some(&'r') {
+            return None;
+        }
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars().last().is_some_and(|c| c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Mark lines inside `#[cfg(test)]` items by tracking brace depth over
+/// the stripped code (string braces are already blanked).
+fn mark_test_regions(lines: &mut [SourceLine]) {
+    let mut pending = false;
+    let mut in_region = false;
+    let mut depth: i64 = 0;
+    for line in lines.iter_mut() {
+        if in_region {
+            line.in_test = true;
+            depth += brace_delta(&line.code);
+            if depth <= 0 {
+                in_region = false;
+            }
+            continue;
+        }
+        if line.code.contains("cfg(test") {
+            line.in_test = true;
+            pending = true;
+            continue;
+        }
+        if pending {
+            line.in_test = true;
+            let opens = line.code.matches('{').count() as i64;
+            if opens > 0 {
+                depth = brace_delta(&line.code);
+                pending = false;
+                in_region = depth > 0;
+            } else if line.code.contains(';') {
+                pending = false; // brace-less cfg'd item (`mod tests;`, `use …;`)
+            }
+            // otherwise: still between the attribute and its item header
+        }
+    }
+}
+
+fn brace_delta(code: &str) -> i64 {
+    code.matches('{').count() as i64 - code.matches('}').count() as i64
+}
+
+/// Word-boundary token search over stripped code. Tokens are ASCII; a
+/// match is rejected when butted against identifier characters (so
+/// `check_partial_cmp` does not match `partial_cmp`).
+pub fn find_token(code: &str, tok: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(tok) {
+        let i = start + pos;
+        let j = i + tok.len();
+        let before_ok = i == 0 || !is_ident_byte(bytes[i - 1]);
+        let after_ok = j >= bytes.len() || !is_ident_byte(bytes[j]);
+        if before_ok && after_ok {
+            return Some(i);
+        }
+        start = j; // tokens don't self-overlap; j is a char boundary
+    }
+    None
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// All `.rs` files under `root`, recursively, in a deterministic
+/// (sorted-path) order — the lint's own output obeys the
+/// ordered-iteration contract it enforces.
+pub fn rs_files(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        classify(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_stripped_and_captured() {
+        let lines = classify("let x = 1; // trailing note\n// full line\n");
+        assert_eq!(lines[0].code.trim_end(), "let x = 1;");
+        assert_eq!(lines[0].comment, "trailing note");
+        assert_eq!(lines[1].code, "");
+        assert_eq!(lines[1].comment, "full line");
+        assert!(!lines[0].is_doc);
+    }
+
+    #[test]
+    fn doc_comments_flagged() {
+        let lines = classify("/// docs here\n//! inner docs\n");
+        assert!(lines[0].is_doc && lines[1].is_doc);
+        assert_eq!(lines[0].comment, "docs here");
+    }
+
+    #[test]
+    fn string_contents_blanked() {
+        let c = codes("let s = \"Instant::now HashMap\";\n");
+        assert!(!c[0].contains("Instant"), "{:?}", c[0]);
+        assert!(c[0].contains("let s ="));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_close_string() {
+        let c = codes("let s = \"a\\\"b unsafe\"; let t = 1;\n");
+        assert!(!c[0].contains("unsafe"));
+        assert!(c[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let c = codes("let s = \"first\nsecond unsafe\nend\"; let z = 2;\n");
+        assert!(!c[1].contains("unsafe"));
+        assert!(c[2].contains("let z = 2;"));
+    }
+
+    #[test]
+    fn raw_strings_blanked() {
+        let c = codes("let s = r#\"partial_cmp \"quoted\" inside\"#; let u = 3;\n");
+        assert!(!c[0].contains("partial_cmp"), "{:?}", c[0]);
+        assert!(c[0].contains("let u = 3;"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let c = codes("a; /* one /* two */ still comment */ b;\n");
+        assert!(c[0].contains("a;") && c[0].contains("b;"));
+        assert!(!c[0].contains("still"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let c = codes("if c == '{' { x::<'a>(); let q = '\\n'; }\n");
+        // the literal brace is blanked; the real braces survive
+        assert_eq!(c[0].matches('{').count(), 1, "{:?}", c[0]);
+        assert!(c[0].contains("<'a>"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracked() {
+        let text = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        x();\n    }\n}\nfn after() {}\n";
+        let lines = classify(text);
+        assert!(!lines[0].in_test);
+        assert!(lines[1].in_test && lines[2].in_test && lines[4].in_test);
+        assert!(lines[6].in_test, "closing brace still inside");
+        assert!(!lines[7].in_test, "region ends after the brace closes");
+    }
+
+    #[test]
+    fn cfg_test_braceless_item_does_not_leak() {
+        let lines = classify("#[cfg(test)]\nmod tests;\nfn real() {\n}\n");
+        assert!(lines[1].in_test);
+        assert!(!lines[2].in_test, "next item is library code");
+    }
+
+    #[test]
+    fn token_word_boundaries() {
+        assert!(find_token("a.partial_cmp(b)", "partial_cmp").is_some());
+        assert!(find_token("check_partial_cmp(b)", "partial_cmp").is_none());
+        assert!(find_token("partial_cmp_all()", "partial_cmp").is_none());
+        assert!(find_token("Instant::now()", "Instant::now").is_some());
+    }
+
+    #[test]
+    fn rs_files_sorted() {
+        let dir = std::env::temp_dir().join("coded_opt_lint_walk_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("b")).unwrap();
+        std::fs::write(dir.join("b/z.rs"), "").unwrap();
+        std::fs::write(dir.join("a.rs"), "").unwrap();
+        std::fs::write(dir.join("skip.txt"), "").unwrap();
+        let files = rs_files(&dir).unwrap();
+        let names: Vec<String> =
+            files.iter().map(|p| p.strip_prefix(&dir).unwrap().display().to_string()).collect();
+        assert_eq!(names, vec!["a.rs".to_string(), "b/z.rs".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

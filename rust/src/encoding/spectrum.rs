@@ -131,7 +131,7 @@ impl<'a> SubsetSpectrum<'a> {
             lmax = lmax.max(*eigs.last().unwrap());
             all.extend(eigs);
         }
-        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all.sort_by(|a, b| a.total_cmp(b));
         let bulk = all.iter().filter(|&&e| (eta * e - 1.0).abs() <= 0.02).count() as f64
             / all.len() as f64;
         SpectrumStats {

@@ -188,6 +188,40 @@
 //! gated kernel's *speedup ratio* drops >25% below the checked-in
 //! `bench/baseline.json`; extend that schema, don't invent a new one.
 //!
+//! ## Determinism contract
+//!
+//! Because the guarantees are sample-path results, the repo's real
+//! cross-engine contract is *bit-exact golden traces* — and that only
+//! holds if the source obeys a handful of invariants. They are
+//! mechanized as a built-in static-analysis pass, `coded-opt lint`
+//! (blocking in CI), implemented in [`analysis`]:
+//!
+//! - **`float-total-order`** — float orderings in sort/max/min
+//!   positions use `f64::total_cmp`, never `partial_cmp` (which panics
+//!   or goes order-unstable on NaN; cf. [`delay::sanitize_delay`]).
+//! - **`wall-clock-zone`** — `Instant::now` / `SystemTime` only in the
+//!   declared wall-clock modules (`cluster/threads.rs`, `bench.rs`).
+//!   Anywhere else — `SimCluster`, solvers, encoding, scenarios — a
+//!   wall-clock read breaks replay determinism.
+//! - **`ordered-iteration`** — no `HashMap`/`HashSet` in
+//!   trace-producing modules; hash-iteration order leaks into output.
+//!   Use `BTreeMap`/`BTreeSet` or a sorted collection.
+//! - **`safety-comment`** — `unsafe` only under `runtime/`, and always
+//!   with an adjacent `// SAFETY:` comment.
+//! - **`no-silent-nan`** — no `NAN` literals or `.unwrap()` on partial
+//!   orders in library (non-test) code; NaN is sanitized at the delay
+//!   boundary, not smuggled through.
+//!
+//! Run it with `coded-opt lint` (`--json` for the machine-readable
+//! `coded-opt/lint-v1` report, `--root DIR` to point it elsewhere); it
+//! exits non-zero on any finding. Justified exceptions are inline:
+//! `// lint:allow(<rule>) — <why>` on (or directly above) the flagged
+//! line. The justification is mandatory — a bare allow is itself
+//! reported — and every suppression is counted in the report. What the
+//! scanner cannot see, CI's sanitizer jobs cover: ThreadSanitizer runs
+//! the thread-pool/cluster suites and Miri runs the `runtime`, `shard`,
+//! and `fwht` unit tests on the nightly toolchain.
+//!
 //! ## Layout
 //!
 //! - [`driver`] — the `Experiment` builder and the `Solver` trait with
@@ -216,11 +250,19 @@
 //! - [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them on the hot path.
 //! - [`metrics`] — timers, traces, histograms, writers.
+//! - [`analysis`] — the determinism-contract lint behind `coded-opt
+//!   lint` (std-only source scanner, rule set, `lint:allow` handling).
 //! - [`config`] / [`cli`] — experiment configuration and launcher parsing.
 //! - [`testutil`] — a small property-testing framework (offline
 //!   environment: no external proptest).
 //! - [`bench`] — measurement harness used by `rust/benches/*`.
 
+// Test code pins bit-exact values on purpose (golden traces, kernel
+// equivalence), so exact float comparison is the point there; library
+// code stays under the workspace-level `clippy::float_cmp` deny.
+#![cfg_attr(test, allow(clippy::float_cmp))]
+
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod cluster;

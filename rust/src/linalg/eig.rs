@@ -47,7 +47,9 @@ pub fn symmetric_eigen_tol(a: &Mat, tol: f64, max_sweeps: usize) -> (Vec<f64>, M
     // Sort eigenpairs ascending by eigenvalue.
     let mut order: Vec<usize> = (0..n).collect();
     let diag: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    order.sort_by(|&i, &j| diag[i].partial_cmp(&diag[j]).unwrap());
+    // total_cmp: NaN-total order; the sort is stable, so equal
+    // eigenvalues keep their index order as before.
+    order.sort_by(|&i, &j| diag[i].total_cmp(&diag[j]));
     let eigs: Vec<f64> = order.iter().map(|&i| diag[i]).collect();
     let mut vs = Mat::zeros(n, n);
     for (new_col, &old_col) in order.iter().enumerate() {
@@ -175,7 +177,7 @@ pub fn symmetric_eigenvalues_tol(a: &Mat, tol: f64, max_sweeps: usize) -> Vec<f6
         }
     }
     let mut eigs: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
-    eigs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    eigs.sort_by(|a, b| a.total_cmp(b));
     eigs
 }
 

@@ -45,6 +45,13 @@
 //!   differ from the in-memory estimate, so pass an explicit `--step`
 //!   when diffing CLI traces bit-for-bit (prox also reports no F1
 //!   metric — there is no known `w*` on the sharded path).
+//! - `lint [--root DIR] [--json] [--out lint-report.json]` — run the
+//!   determinism-contract static analysis (see [`coded_opt::analysis`])
+//!   over the source tree (default root: `rust/src`, falling back to
+//!   `src`). Prints findings and counted `lint:allow` suppressions;
+//!   `--json` emits the `coded-opt/lint-v1` report instead, `--out`
+//!   additionally writes it to a file. Exits non-zero on any finding —
+//!   this is the blocking CI `lint` job.
 //! - `info` — build / artifact info.
 
 use anyhow::{bail, Result};
@@ -73,10 +80,11 @@ fn main() -> Result<()> {
         Some("shard") => cmd_shard(&args),
         Some("encode") => cmd_encode(&args),
         Some("bench") => cmd_bench(&args),
+        Some("lint") => cmd_lint(&args),
         Some("info") | None => cmd_info(),
         Some(other) => bail!(
             "unknown subcommand '{other}' \
-             (try: run, spectrum, scenario, shard, encode, bench, info)"
+             (try: run, spectrum, scenario, shard, encode, bench, lint, info)"
         ),
     }
 }
@@ -93,7 +101,36 @@ fn cmd_info() -> Result<()> {
             println!("  {:<24} {:<14} {}x{}", a.name, a.kind, a.rows, a.cols);
         }
     }
-    println!("subcommands: run, spectrum, scenario, shard, encode, bench, info");
+    println!("subcommands: run, spectrum, scenario, shard, encode, bench, lint, info");
+    Ok(())
+}
+
+/// Determinism-contract static analysis over the source tree. Exits
+/// non-zero (via the error return) on any finding, so CI can gate on it.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => ["rust/src", "src"]
+            .into_iter()
+            .map(std::path::PathBuf::from)
+            .find(|p| p.is_dir())
+            .ok_or_else(|| {
+                anyhow::anyhow!("lint: no rust/src or src here; pass --root DIR")
+            })?,
+    };
+    let report = coded_opt::analysis::lint_path(&root)?;
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, report.to_json())?;
+    }
+    if args.has_flag("json") {
+        println!("{}", report.to_json());
+    } else {
+        println!("lint root: {}", root.display());
+        print!("{}", report.render_human());
+    }
+    if !report.is_clean() {
+        bail!("lint: {} determinism-contract finding(s)", report.findings.len());
+    }
     Ok(())
 }
 

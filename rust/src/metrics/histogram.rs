@@ -28,6 +28,7 @@ impl Histogram {
 
     pub fn mean(&self) -> f64 {
         if self.samples.is_empty() {
+            // lint:allow(no-silent-nan) — documented empty-histogram sentinel
             return f64::NAN;
         }
         self.samples.iter().sum::<f64>() / self.samples.len() as f64
@@ -45,7 +46,7 @@ impl Histogram {
 
     fn ensure_sorted(&mut self) {
         if !self.sorted {
-            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.samples.sort_by(|a, b| a.total_cmp(b));
             self.sorted = true;
         }
     }
@@ -53,6 +54,7 @@ impl Histogram {
     /// Exact percentile via nearest-rank (q in [0,1]).
     pub fn percentile(&mut self, q: f64) -> f64 {
         if self.samples.is_empty() {
+            // lint:allow(no-silent-nan) — documented empty-histogram sentinel
             return f64::NAN;
         }
         self.ensure_sorted();

@@ -41,10 +41,12 @@ impl Trace {
     }
 
     pub fn final_objective(&self) -> f64 {
+        // lint:allow(no-silent-nan) — documented empty-trace sentinel
         self.records.last().map(|r| r.objective).unwrap_or(f64::NAN)
     }
 
     pub fn final_test_metric(&self) -> f64 {
+        // lint:allow(no-silent-nan) — documented empty-trace sentinel
         self.records.last().map(|r| r.test_metric).unwrap_or(f64::NAN)
     }
 
@@ -64,11 +66,13 @@ impl Trace {
 
     /// Objective at time t (NaN before the first record).
     pub fn objective_at_time(&self, t: f64) -> f64 {
+        // lint:allow(no-silent-nan) — documented before-first-record sentinel
         self.at_time(t).map(|r| r.objective).unwrap_or(f64::NAN)
     }
 
     /// Test metric at time t (NaN before the first record).
     pub fn test_metric_at_time(&self, t: f64) -> f64 {
+        // lint:allow(no-silent-nan) — documented before-first-record sentinel
         self.at_time(t).map(|r| r.test_metric).unwrap_or(f64::NAN)
     }
 

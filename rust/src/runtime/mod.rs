@@ -82,6 +82,10 @@ enum ExecState {
         exe: Rc<xla::PjRtLoadedExecutable>,
         sx_buf: xla::PjRtBuffer,
         sy_buf: xla::PjRtBuffer,
+        /// Thread that compiled (and therefore owns) the Rc'd PJRT
+        /// state; `gradient()` asserts it is never entered from any
+        /// other thread (the `Send` SAFETY contract, runtime-verified).
+        owner: std::thread::ThreadId,
     },
     /// Compilation failed; native fallback forever.
     Failed,
@@ -100,7 +104,10 @@ pub struct GradExecutor {
 // which hold plain data. The `Ready` state (holding Rc'd PJRT objects) is
 // entered lazily inside `gradient()` and the executor is never moved
 // across threads afterwards: `cluster::threads` moves workers exactly
-// once, at spawn, before any task runs.
+// once, at spawn, before any task runs. The claim is runtime-verified:
+// `Ready` records the compiling thread's id and `gradient()`
+// debug-asserts every entry happens on that thread (exercised by the
+// debug test suites, including the ThreadSanitizer CI job).
 unsafe impl Send for GradExecutor {}
 
 impl GradExecutor {
@@ -137,7 +144,7 @@ impl GradExecutor {
             )?;
             let sy_buf =
                 client.buffer_from_host_buffer::<f32>(&self.spec.sy, &[self.spec.rows], None)?;
-            Ok(ExecState::Ready { exe, sx_buf, sy_buf })
+            Ok(ExecState::Ready { exe, sx_buf, sy_buf, owner: std::thread::current().id() })
         })();
         match built {
             Ok(state) => {
@@ -162,9 +169,15 @@ impl GradExecutor {
             return Err(anyhow!("shape mismatch: w has {} != {}", w.len(), self.spec.cols));
         }
         self.ensure_ready()?;
-        let ExecState::Ready { exe, sx_buf, sy_buf } = &self.state else {
+        let ExecState::Ready { exe, sx_buf, sy_buf, owner } = &self.state else {
             unreachable!("ensure_ready succeeded");
         };
+        debug_assert_eq!(
+            *owner,
+            std::thread::current().id(),
+            "GradExecutor::gradient entered off the owning thread — violates \
+             the `unsafe impl Send` contract (Ready state must not move)"
+        );
         let w32: Vec<f32> = w.iter().map(|&v| v as f32).collect();
         let client = thread_client()?;
         let w_buf = client.buffer_from_host_buffer::<f32>(&w32, &[w32.len()], None)?;

@@ -73,6 +73,7 @@ impl DelayModel for DelayRecorder {
         let mut tape = self.handle.tape.lock().unwrap();
         while tape.len() <= iter {
             let m = self.handle.m;
+            // lint:allow(no-silent-nan) — never-sampled hole marker, patched by replay()
             tape.push(vec![f64::NAN; m]);
         }
         tape[iter][worker] = d;

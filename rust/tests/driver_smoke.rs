@@ -6,6 +6,11 @@
 //! (`rust/tests/golden_traces.rs`) is what pins driver numerics across
 //! refactors.
 
+// This suite pins bit-exact float values on purpose; exact equality
+// is the contract under test, not an accident (the workspace denies
+// clippy::float_cmp for library code).
+#![allow(clippy::float_cmp)]
+
 use coded_opt::config::Scheme;
 use coded_opt::data::synth::{gaussian_linear, sparse_recovery};
 use coded_opt::driver::{AsyncBcd, AsyncGd, Bcd, Experiment, Gd, Lbfgs, Problem, Prox};

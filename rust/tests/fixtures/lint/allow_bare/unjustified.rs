@@ -1,0 +1,8 @@
+//! Lint fixture: a bare allow directive (no justification).
+//! Expected: the underlying finding is suppressed (and counted), but
+//! the directive itself is exactly one `bare-allow` finding.
+
+pub fn sentinel() -> f64 {
+    // lint:allow(no-silent-nan)
+    f64::NAN
+}

@@ -1,0 +1,7 @@
+//! Lint fixture: a justified allow directive.
+//! Expected: zero findings, exactly one counted suppression.
+
+pub fn sentinel() -> f64 {
+    // lint:allow(no-silent-nan) — fixture: documented sentinel with a reason
+    f64::NAN
+}

@@ -1,0 +1,7 @@
+//! Lint fixture: an allow directive naming a rule that does not exist.
+//! Expected: exactly one `bare-allow` finding, nothing suppressed.
+
+pub fn plain() -> f64 {
+    // lint:allow(no-such-rule) — the rule name is wrong, so this is inert
+    1.0
+}

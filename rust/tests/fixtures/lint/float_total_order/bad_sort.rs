@@ -1,0 +1,6 @@
+//! Lint fixture: float sort through a NaN-partial order.
+//! Expected: exactly one `float-total-order` finding (line 5).
+
+pub fn sort_delays(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in delays"));
+}

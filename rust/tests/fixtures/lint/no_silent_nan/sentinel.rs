@@ -1,0 +1,15 @@
+//! Lint fixture: NAN literal in library code.
+//! Expected: exactly one `no-silent-nan` finding (line 6); the NAN in
+//! the test module below must NOT be flagged.
+
+pub fn missing() -> f64 {
+    f64::NAN
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn nan_in_tests_is_fine() {
+        assert!(f64::NAN.is_nan());
+    }
+}

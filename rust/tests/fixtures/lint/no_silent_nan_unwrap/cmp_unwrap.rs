@@ -1,0 +1,6 @@
+//! Lint fixture: unwrap on a partial-order result, no sort context.
+//! Expected: exactly one `no-silent-nan` finding (line 5).
+
+pub fn is_less(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b).unwrap() == std::cmp::Ordering::Less
+}

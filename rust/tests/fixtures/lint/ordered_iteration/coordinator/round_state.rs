@@ -1,0 +1,6 @@
+//! Lint fixture: hash collection in a trace-producing module.
+//! Expected: exactly one `ordered-iteration` finding (line 5).
+
+pub struct RoundState {
+    pub pending: std::collections::HashMap<usize, f64>,
+}

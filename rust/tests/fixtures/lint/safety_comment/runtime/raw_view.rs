@@ -1,0 +1,7 @@
+//! Lint fixture: unsafe inside the allowed zone but with no SAFETY
+//! comment. Expected: exactly one `safety-comment` finding (line 6).
+
+pub fn raw_view(v: &[f64]) -> &[u8] {
+    let n = v.len() * 8;
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, n) }
+}

@@ -1,0 +1,10 @@
+//! Lint fixture: unsafe with a perfectly good SAFETY comment — but in
+//! a module outside the allowlisted zone (runtime/ only).
+//! Expected: exactly one `safety-comment` finding (line 7).
+
+pub fn fast_copy(src: &[f64], dst: &mut [f64]) {
+    // SAFETY: both slices have the same length, checked by the caller.
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr(), dst.as_mut_ptr(), src.len());
+    }
+}

@@ -1,0 +1,8 @@
+//! Lint fixture: wall-clock read outside the declared zones.
+//! Expected: exactly one `wall-clock-zone` finding (line 7).
+
+use std::time::Instant;
+
+pub fn tick() -> Instant {
+    Instant::now()
+}

@@ -18,6 +18,11 @@
 //!   the determinism claim of the paper's sample-path guarantees made
 //!   executable.
 
+// This suite pins bit-exact float values on purpose; exact equality
+// is the contract under test, not an accident (the workspace denies
+// clippy::float_cmp for library code).
+#![allow(clippy::float_cmp)]
+
 use std::fs;
 use std::path::PathBuf;
 

@@ -4,6 +4,11 @@
 //! in `cluster/threads.rs` (the paper's footnote 1: the master's
 //! interrupt signal makes the worker drop, not delay, its result).
 
+// This suite pins bit-exact float values on purpose; exact equality
+// is the contract under test, not an accident (the workspace denies
+// clippy::float_cmp for library code).
+#![allow(clippy::float_cmp)]
+
 use coded_opt::cluster::{Gather, Task, ThreadCluster, WorkerNode};
 use coded_opt::config::Scheme;
 use coded_opt::coordinator::{build_data_parallel, KIND_GRADIENT};

@@ -16,6 +16,11 @@
 //!   tree reduction / butterfly reorders the sum deterministically
 //!   (documented in `linalg::par` and `linalg::sparse`).
 
+// This suite pins bit-exact float values on purpose; exact equality
+// is the contract under test, not an accident (the workspace denies
+// clippy::float_cmp for library code).
+#![allow(clippy::float_cmp)]
+
 use std::sync::Mutex;
 
 use coded_opt::config::Scheme;

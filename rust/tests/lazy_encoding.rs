@@ -14,6 +14,11 @@
 //! existed" — the eager `Encoding::build` this API replaced would have
 //! put `N×n×8` bytes on the heap up front for every scheme.
 
+// This suite pins bit-exact float values on purpose; exact equality
+// is the contract under test, not an accident (the workspace denies
+// clippy::float_cmp for library code).
+#![allow(clippy::float_cmp)]
+
 use coded_opt::config::Scheme;
 use coded_opt::data::shard::MatSource;
 use coded_opt::encoding::{probe, stream, Encoder, EncodingOp, FastPath, SchemeSpec};

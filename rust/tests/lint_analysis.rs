@@ -1,0 +1,188 @@
+//! Determinism-contract lint: fixture coverage, allowlist semantics,
+//! the clean-tree self-check, and the CLI exit-code contract.
+//!
+//! Each fixture under `tests/fixtures/lint/<case>/` is a tiny source
+//! tree with one known-bad snippet that must produce exactly one
+//! finding (or exercise the `lint:allow` mechanics). The fixtures are
+//! data, not code — they are never compiled.
+
+use coded_opt::analysis::{lint_path, LintReport, BARE_ALLOW};
+use std::path::PathBuf;
+use std::process::Command;
+
+fn fixture(case: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/lint").join(case)
+}
+
+fn src_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+fn lint_fixture(case: &str) -> LintReport {
+    lint_path(&fixture(case)).expect("fixture tree lints")
+}
+
+/// Assert a fixture yields exactly one finding of `rule` at `line`.
+fn assert_single(case: &str, rule: &str, line: usize) -> LintReport {
+    let report = lint_fixture(case);
+    assert_eq!(
+        report.findings.len(),
+        1,
+        "{case}: expected exactly one finding, got {:?}",
+        report.findings
+    );
+    let f = &report.findings[0];
+    assert_eq!(f.rule, rule, "{case}: wrong rule: {f:?}");
+    assert_eq!(f.line, line, "{case}: wrong line: {f:?}");
+    report
+}
+
+#[test]
+fn fixture_float_total_order() {
+    assert_single("float_total_order", "float-total-order", 5);
+}
+
+#[test]
+fn fixture_wall_clock_zone() {
+    assert_single("wall_clock_zone", "wall-clock-zone", 7);
+}
+
+#[test]
+fn fixture_ordered_iteration() {
+    let r = assert_single("ordered_iteration", "ordered-iteration", 5);
+    assert_eq!(r.findings[0].file, "coordinator/round_state.rs");
+}
+
+#[test]
+fn fixture_safety_comment_missing() {
+    let r = assert_single("safety_comment", "safety-comment", 6);
+    assert!(r.findings[0].message.contains("SAFETY"), "{:?}", r.findings[0]);
+}
+
+#[test]
+fn fixture_safety_comment_outside_zone() {
+    // a SAFETY comment does not excuse unsafe outside runtime/
+    let r = assert_single("safety_comment_zone", "safety-comment", 7);
+    assert!(r.findings[0].message.contains("runtime/"), "{:?}", r.findings[0]);
+}
+
+#[test]
+fn fixture_no_silent_nan_skips_test_code() {
+    let r = assert_single("no_silent_nan", "no-silent-nan", 6);
+    // the NAN inside #[cfg(test)] produced no second finding
+    assert_eq!(r.findings.len(), 1);
+}
+
+#[test]
+fn fixture_partial_cmp_unwrap() {
+    assert_single("no_silent_nan_unwrap", "no-silent-nan", 5);
+}
+
+#[test]
+fn justified_allow_suppresses_and_is_counted() {
+    let r = lint_fixture("allow_ok");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.suppressed.len(), 1, "{:?}", r.suppressed);
+    assert_eq!(r.suppressed[0].rule, "no-silent-nan");
+    assert!(
+        !r.suppressed[0].justification.is_empty(),
+        "justification must be recorded: {:?}",
+        r.suppressed[0]
+    );
+}
+
+#[test]
+fn bare_allow_is_itself_a_finding() {
+    let r = assert_single("allow_bare", BARE_ALLOW, 6);
+    // the underlying violation was still suppressed (and counted)
+    assert_eq!(r.suppressed.len(), 1, "{:?}", r.suppressed);
+    assert!(r.suppressed[0].justification.is_empty());
+}
+
+#[test]
+fn unknown_rule_allow_is_a_finding() {
+    let r = assert_single("allow_unknown", BARE_ALLOW, 5);
+    assert!(r.suppressed.is_empty(), "{:?}", r.suppressed);
+    assert!(r.findings[0].message.contains("no-such-rule"), "{:?}", r.findings[0]);
+}
+
+/// The repo's own source tree must be clean — this is the same check
+/// the blocking CI `lint` job runs via the binary.
+#[test]
+fn clean_tree_self_check() {
+    let report = lint_path(&src_root()).expect("src tree lints");
+    assert!(report.files > 30, "walk found the tree ({} files)", report.files);
+    assert!(
+        report.findings.is_empty(),
+        "determinism-contract violations in rust/src:\n{}",
+        report.render_human()
+    );
+    // the known sentinels are allowlisted WITH justifications
+    assert!(!report.suppressed.is_empty(), "expected counted allowlist entries");
+    for s in &report.suppressed {
+        assert!(!s.justification.is_empty(), "bare allow slipped through: {s:?}");
+    }
+}
+
+/// CLI contract: non-zero exit on every violating fixture, zero on the
+/// clean tree, and `--json` emits the v1 schema.
+#[test]
+fn cli_exit_codes_and_json() {
+    let bin = env!("CARGO_BIN_EXE_coded-opt");
+    for case in [
+        "float_total_order",
+        "wall_clock_zone",
+        "ordered_iteration",
+        "safety_comment",
+        "safety_comment_zone",
+        "no_silent_nan",
+        "no_silent_nan_unwrap",
+        "allow_bare",
+        "allow_unknown",
+    ] {
+        let out = Command::new(bin)
+            .args(["lint", "--root"])
+            .arg(fixture(case))
+            .output()
+            .expect("spawn coded-opt lint");
+        assert!(
+            !out.status.success(),
+            "{case}: lint must exit non-zero on a violation\nstdout: {}",
+            String::from_utf8_lossy(&out.stdout)
+        );
+    }
+
+    let out = Command::new(bin)
+        .args(["lint", "--json", "--root"])
+        .arg(src_root())
+        .output()
+        .expect("spawn coded-opt lint");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "clean tree must exit zero\nstdout: {stdout}\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("\"schema\": \"coded-opt/lint-v1\""), "{stdout}");
+    assert!(stdout.contains("\"finding_count\": 0"), "{stdout}");
+}
+
+/// `--out` writes the same JSON the CI job uploads as an artifact.
+#[test]
+fn cli_out_writes_report_file() {
+    let bin = env!("CARGO_BIN_EXE_coded-opt");
+    let dir = std::env::temp_dir().join(format!("lint-report-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("lint-report.json");
+    let out = Command::new(bin)
+        .args(["lint", "--root"])
+        .arg(fixture("allow_ok"))
+        .arg("--out")
+        .arg(&path)
+        .output()
+        .expect("spawn coded-opt lint");
+    assert!(out.status.success(), "allow_ok fixture is clean");
+    let text = std::fs::read_to_string(&path).expect("report written");
+    assert!(text.contains("\"suppressed_count\": 1"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -16,6 +16,11 @@
 //!    shard (the `BoundedProbe` wrapper proves every observed block
 //!    honors the bound end to end).
 
+// This suite pins bit-exact float values on purpose; exact equality
+// is the contract under test, not an accident (the workspace denies
+// clippy::float_cmp for library code).
+#![allow(clippy::float_cmp)]
+
 use std::path::PathBuf;
 
 use coded_opt::config::Scheme;
