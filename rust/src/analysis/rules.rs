@@ -36,7 +36,8 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: "wall-clock-zone",
-        summary: "wall-clock reads only in cluster/threads.rs and bench.rs",
+        summary: "wall-clock reads only in cluster/threads.rs, cluster/socket.rs, \
+                  cluster/wire.rs and bench.rs",
     },
     RuleInfo {
         id: "ordered-iteration",
@@ -101,7 +102,11 @@ const TRACE_MODULES: &[&str] = &[
 ];
 
 /// Modules allowed to read the wall clock (path-component suffixes).
-const WALL_CLOCK_ZONES: &[&str] = &["cluster/threads.rs", "bench.rs"];
+/// The socket engine's zone covers connect-retry deadlines and I/O
+/// timeouts only — fault *detection*; its traces run on a virtual
+/// clock, which the cross-engine conformance suite pins bit-for-bit.
+const WALL_CLOCK_ZONES: &[&str] =
+    &["cluster/threads.rs", "cluster/socket.rs", "cluster/wire.rs", "bench.rs"];
 
 /// Modules where `unsafe` is permitted (with a SAFETY: comment).
 const UNSAFE_ZONES: &[&str] = &["runtime/"];
@@ -169,7 +174,8 @@ fn scan(rel: &str, lines: &[SourceLine]) -> Vec<Finding> {
                 || find_token(code, "SystemTime").is_some())
         {
             out.push(mk(rel, line, "wall-clock-zone",
-                "wall-clock read outside the declared zones (cluster/threads.rs, bench.rs)"));
+                "wall-clock read outside the declared zones (cluster/threads.rs, \
+                 cluster/socket.rs, cluster/wire.rs, bench.rs)"));
         }
 
         // ordered-iteration
@@ -390,6 +396,14 @@ mod tests {
         assert_eq!(f[0].rule, "wall-clock-zone");
         let (f, _) = lint("cluster/threads.rs", text);
         assert!(f.is_empty(), "{f:?}");
+        // the socket engine's timeout/retry machinery is in the zone…
+        let (f, _) = lint("cluster/socket.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = lint("cluster/wire.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        // …but the virtual-clock sim engine stays out of it
+        let (f, _) = lint("cluster/sim.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
         let (f, _) = lint("bench.rs", text);
         assert!(f.is_empty(), "{f:?}");
         // component-wise: `microbench.rs` is NOT in the zone

@@ -7,27 +7,38 @@
 //! the delay distribution + wait-for-k semantics, both of which are
 //! reproduced exactly here.
 //!
-//! Two engines share the [`WorkerNode`] / round-gather contract:
+//! Three engines share the [`WorkerNode`] / round-gather contract:
 //! - [`sim::SimCluster`] — virtual-clock, single-threaded, fully
 //!   deterministic. Drives all paper-figure benches (time axis =
 //!   simulated seconds).
 //! - [`threads::ThreadCluster`] — real OS threads, std::mpsc messaging,
 //!   `AtomicU64` interrupt lines, wall-clock timing. Drives the examples
 //!   and the PJRT-backed end-to-end run.
+//! - [`socket::SocketCluster`] — multi-process TCP over the hand-rolled
+//!   [`wire`] frame format, workers streaming pre-encoded partitions
+//!   from their own disks (`coded-opt worker`). Virtual-clock like
+//!   `SimCluster` — injected delays are enforced by the master's winner
+//!   selection, not wall clock — so a replayed delay tape reproduces a
+//!   `SimCluster` trace bit for bit across real processes.
 //!
-//! Both engines support heterogeneous per-worker compute speeds
+//! All engines support heterogeneous per-worker compute speeds
 //! (`with_speeds`) and crash semantics: an infinite injected delay
 //! ([`crate::delay::CRASHED`], produced e.g. by a
 //! [`crate::scenario`] crash window) means the worker cannot respond
 //! this round — `SimCluster` gives it an infinite arrival time,
-//! `ThreadCluster` never dispatches to it — and the wait-for-k gather
+//! `ThreadCluster` never dispatches to it, `SocketCluster` additionally
+//! maps every transport/protocol fault (disconnect, timeout, torn or
+//! stale frame) onto the same erasure — and the wait-for-k gather
 //! erases it exactly like any other straggler (the paper's
 //! stragglers-as-erasures model; each round asserts ≥ k live workers).
 
 pub mod sim;
+pub mod socket;
 pub mod threads;
+pub mod wire;
 
 pub use sim::SimCluster;
+pub use socket::{SocketCluster, WorkerServer};
 pub use threads::ThreadCluster;
 
 /// A task broadcast from the master to workers in one round.

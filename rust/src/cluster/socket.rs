@@ -1,0 +1,445 @@
+//! Multi-process TCP cluster engine.
+//!
+//! [`SocketCluster`] is the *placement master* side of a multi-host
+//! run: it connects to remote workers (each a `coded-opt worker
+//! --listen ADDR --partition DIR` process that streamed its encoded
+//! partition from local disk), drives the same wait-for-k
+//! [`Gather`] round contract as [`SimCluster`], and maps every network
+//! fault onto the paper's stragglers-as-erasures model.
+//!
+//! # Determinism: master-enforced virtual time
+//!
+//! The master samples the delay model itself and computes each worker's
+//! **virtual** arrival with exactly [`SimCluster`]'s formula
+//! (`cost·secs_per_unit·speed_i + sanitize_delay(delay(i, t))`, total
+//! order + index tie-break). Injected delays are *enforced by
+//! selection* — only the k virtual winners are dispatched over TCP —
+//! never by wall-clock sleeps. Task and result payloads cross the wire
+//! as exact little-endian `f64` bits, so a recorded delay tape replayed
+//! through real processes on localhost produces a trace **bit-identical**
+//! to [`SimCluster`] replaying the same tape (pinned by
+//! `rust/tests/socket_cluster.rs` and the CI `socket-smoke` job). Wall
+//! clock appears only as connect/read *timeouts*, which exist to detect
+//! faults and can never influence a fault-free trace.
+//!
+//! # Faults are erasures
+//!
+//! Any protocol or transport failure — disconnect, read timeout, torn
+//! frame, checksum mismatch, a result echoing the wrong iteration —
+//! permanently erases the worker: its connection is dropped and its
+//! arrival is `+∞` from that point on, exactly a
+//! [`crate::delay::CRASHED`] delay. If a *winner* dies mid-round, the
+//! already-sampled arrivals are re-ranked with that worker at `+∞` and
+//! the next-fastest live worker is dispatched instead (responses
+//! already collected stay valid — erasing a worker only promotes
+//! others). The `k ≤ live` assertion holds with [`SimCluster`]'s exact
+//! message, and a stale payload can never reach a later round's
+//! assembler: the iteration echo is checked before a payload is
+//! accepted.
+//!
+//! [`SimCluster`]: super::SimCluster
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::wire::{read_msg, read_msg_or_eof, write_msg, Msg};
+use super::{Gather, Response, RoundResult, Task, WorkerNode};
+use crate::delay::DelayModel;
+
+/// Default per-connection I/O timeout (handshake, task write, result
+/// read). Generous: it only bounds fault *detection*, never the trace.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The master side of a multi-process TCP cluster. See the module docs
+/// for the determinism and fault model.
+pub struct SocketCluster {
+    /// `None` = erased (crashed / misbehaved / disconnected).
+    conns: Vec<Option<TcpStream>>,
+    addrs: Vec<String>,
+    /// Partition shape `(rows, cols)` each worker reported in its
+    /// `Hello`; `rows` drives the virtual-arrival cost model.
+    shapes: Vec<(u64, u64)>,
+    delay: Box<dyn DelayModel>,
+    /// Seconds of virtual compute per unit of worker cost (a worker's
+    /// cost is its partition row count, mirroring `QuadWorker::cost`).
+    pub secs_per_unit: f64,
+    /// Master-side per-round overhead on the virtual clock.
+    pub master_overhead: f64,
+    speed: Vec<f64>,
+    clock: f64,
+    iter: usize,
+    io_timeout: Duration,
+}
+
+/// Retry `connect` until `deadline`: workers and master are commonly
+/// launched concurrently, so the listener may not be up yet.
+fn connect_retry(addr: &str, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to worker {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+impl SocketCluster {
+    /// Connect to one worker per address (index order = partition
+    /// order) and complete the `Hello` handshake with each. A peer
+    /// speaking a different wire version is refused here, cleanly, with
+    /// an error naming both versions.
+    pub fn connect(addrs: &[String], delay: Box<dyn DelayModel>) -> Result<Self> {
+        Self::connect_with_timeout(addrs, delay, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// [`SocketCluster::connect`] with an explicit I/O timeout (connect
+    /// retries, task writes, result reads). Fault-injection tests use a
+    /// short timeout so a stalled peer is erased quickly.
+    pub fn connect_with_timeout(
+        addrs: &[String],
+        delay: Box<dyn DelayModel>,
+        io_timeout: Duration,
+    ) -> Result<Self> {
+        assert_eq!(addrs.len(), delay.workers(), "delay model sized for wrong m");
+        ensure!(!addrs.is_empty(), "socket cluster needs at least one worker address");
+        let deadline = Instant::now() + io_timeout;
+        let mut conns = Vec::with_capacity(addrs.len());
+        let mut shapes = Vec::with_capacity(addrs.len());
+        for (i, addr) in addrs.iter().enumerate() {
+            let mut stream = connect_retry(addr, deadline)?;
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(io_timeout))?;
+            stream.set_write_timeout(Some(io_timeout))?;
+            match read_msg(&mut stream)
+                .with_context(|| format!("handshake with worker {i} ({addr})"))?
+            {
+                Msg::Hello { rows, cols } => shapes.push((rows, cols)),
+                other => bail!(
+                    "worker {i} ({addr}) opened with {} instead of Hello",
+                    other.kind_name()
+                ),
+            }
+            conns.push(Some(stream));
+        }
+        let m = addrs.len();
+        Ok(SocketCluster {
+            conns,
+            addrs: addrs.to_vec(),
+            shapes,
+            delay,
+            // SimCluster's defaults, so a driver-built socket run is
+            // bit-identical to the equivalent sim run out of the box.
+            secs_per_unit: 0.01,
+            master_overhead: 0.001,
+            speed: vec![1.0; m],
+            clock: 0.0,
+            iter: 0,
+            io_timeout,
+        })
+    }
+
+    /// Same builder as [`SimCluster::with_timing`](super::SimCluster::with_timing).
+    pub fn with_timing(mut self, secs_per_unit: f64, master_overhead: f64) -> Self {
+        self.secs_per_unit = secs_per_unit;
+        self.master_overhead = master_overhead;
+        self
+    }
+
+    /// Heterogeneous per-worker compute-speed multipliers (same
+    /// contract as [`SimCluster::with_speeds`](super::SimCluster::with_speeds)).
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> Self {
+        assert_eq!(speeds.len(), self.conns.len(), "one speed per worker");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "speed multipliers must be finite and > 0"
+        );
+        self.speed = speeds;
+        self
+    }
+
+    /// Rounds completed.
+    pub fn iterations(&self) -> usize {
+        self.iter
+    }
+
+    /// Partition shape `(rows, cols)` each worker reported at handshake.
+    pub fn partition_shapes(&self) -> &[(u64, u64)] {
+        &self.shapes
+    }
+
+    /// Placement check: every worker must hold the partition its index
+    /// implies — row counts from the encoding geometry, `cols = p`. A
+    /// mismatch means a worker was pointed at the wrong `worker-NNN`
+    /// directory (or the wrong encode entirely); refuse up front rather
+    /// than assemble garbage gradients.
+    pub fn verify_partitions(&self, expected_rows: &[u64], cols: u64) -> Result<()> {
+        ensure!(
+            expected_rows.len() == self.shapes.len(),
+            "expected {} partition shapes, have {} workers",
+            expected_rows.len(),
+            self.shapes.len()
+        );
+        for (i, (&want_rows, &(rows, got_cols))) in
+            expected_rows.iter().zip(&self.shapes).enumerate()
+        {
+            ensure!(
+                got_cols == cols,
+                "worker {i} ({}) holds a partition with {got_cols} columns, the \
+                 problem has p={cols} — wrong dataset?",
+                self.addrs[i]
+            );
+            ensure!(
+                rows == want_rows,
+                "worker {i} ({}) holds a {rows}-row partition but encoded partition \
+                 {i} has {want_rows} rows — check that --worker-addrs order matches \
+                 the worker-NNN partition order",
+                self.addrs[i]
+            );
+        }
+        Ok(())
+    }
+
+    /// Worker cost for the virtual-arrival formula — mirrors
+    /// `QuadWorker::cost` (partition rows, min 1) so the socket engine
+    /// ranks arrivals exactly like the in-process build of the same
+    /// partitions.
+    fn cost(&self, i: usize) -> f64 {
+        self.shapes[i].0.max(1) as f64
+    }
+
+    /// One task→result exchange with worker `i`. Any error (transport,
+    /// codec, or a result echoing the wrong iteration) is a fault the
+    /// caller turns into an erasure.
+    fn exchange(&mut self, i: usize, task: &Task) -> Result<Vec<f64>> {
+        let stream = self.conns[i].as_mut().expect("dispatch to a live worker");
+        write_msg(
+            stream,
+            &Msg::Task {
+                iter: task.iter as u64,
+                kind: task.kind,
+                payload: task.payload.clone(),
+                aux: task.aux.clone(),
+            },
+        )?;
+        stream.flush()?;
+        match read_msg(stream)? {
+            Msg::Result { iter, payload } => {
+                ensure!(
+                    iter == task.iter as u64,
+                    "stale result: worker echoed iteration {iter}, round is {} — \
+                     protocol violation, payload dropped",
+                    task.iter
+                );
+                Ok(payload)
+            }
+            other => bail!("expected Result, got {}", other.kind_name()),
+        }
+    }
+}
+
+impl Gather for SocketCluster {
+    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        let m = self.conns.len();
+        assert!(k >= 1 && k <= m, "k={k} out of range for m={m}");
+        // Virtual arrivals: SimCluster's exact formula over the same
+        // sample order (0..m every round, so stateful delay models see
+        // the same stream either engine). An already-erased worker's
+        // arrival is forced to +∞ AFTER sampling, preserving that
+        // alignment.
+        let mut arrivals: Vec<(f64, usize)> = (0..m)
+            .map(|i| {
+                let d = crate::delay::sanitize_delay(self.delay.sample(i, self.iter));
+                let t = self.cost(i) * self.secs_per_unit * self.speed[i] + d;
+                if self.conns[i].is_some() {
+                    (t, i)
+                } else {
+                    (f64::INFINITY, i)
+                }
+            })
+            .collect();
+        arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let mut payloads: Vec<Option<Vec<f64>>> = (0..m).map(|_| None).collect();
+        loop {
+            let live = arrivals.iter().take_while(|(t, _)| t.is_finite()).count();
+            assert!(
+                k <= live,
+                "round {}: k={k} but only {live} live (non-crashed) workers of m={m}",
+                self.iter
+            );
+            // Dispatch the k virtual winners that have not answered
+            // yet, in arrival order (the task_for order SimCluster
+            // uses); collect each result before the next dispatch.
+            let mut faulted: Vec<usize> = Vec::new();
+            for &(_, i) in &arrivals[..k] {
+                if payloads[i].is_some() {
+                    continue;
+                }
+                let task = task_for(i);
+                debug_assert_eq!(task.iter, self.iter, "task iter mismatch");
+                match self.exchange(i, &task) {
+                    Ok(p) => payloads[i] = Some(p),
+                    Err(e) => {
+                        eprintln!(
+                            "socket: round {}: worker {i} ({}) erased: {e:#}",
+                            self.iter, self.addrs[i]
+                        );
+                        self.conns[i] = None;
+                        faulted.push(i);
+                    }
+                }
+            }
+            if faulted.is_empty() {
+                break;
+            }
+            // Crash-erasure mid-round: re-rank the SAME sampled
+            // arrivals with the faulted workers at +∞ (no re-sampling —
+            // a crash is an infinite delay, not a different delay).
+            // Previous responders keep their finite arrivals, so they
+            // stay winners; only the next-fastest live workers are
+            // promoted into the gap.
+            for a in arrivals.iter_mut() {
+                if faulted.contains(&a.1) {
+                    a.0 = f64::INFINITY;
+                }
+            }
+            arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        }
+        let winners = &arrivals[..k];
+        let elapsed = winners.last().unwrap().0;
+        let mut responses = Vec::with_capacity(k);
+        for &(arrival, i) in winners {
+            let payload = payloads[i].take().expect("every winner answered");
+            responses.push(Response { worker: i, payload, arrival });
+        }
+        let interrupted: Vec<usize> = arrivals[k..].iter().map(|&(_, i)| i).collect();
+        self.clock += elapsed + self.master_overhead;
+        self.iter += 1;
+        RoundResult { responses, elapsed, interrupted }
+    }
+
+    fn workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    fn clock(&self) -> f64 {
+        self.clock
+    }
+}
+
+impl Drop for SocketCluster {
+    fn drop(&mut self) {
+        // Best-effort session end so workers return to accepting; a
+        // worker that is gone already is exactly why this is best-effort.
+        for conn in self.conns.iter_mut().flatten() {
+            let _ = write_msg(conn, &Msg::Shutdown);
+        }
+    }
+}
+
+/// The worker side of the socket engine: load one encoded partition
+/// from local disk, listen, and serve master sessions. This is what
+/// `coded-opt worker --listen ADDR --partition DIR` runs.
+pub struct WorkerServer {
+    listener: TcpListener,
+    worker: crate::coordinator::QuadWorker,
+    rows: u64,
+    cols: u64,
+}
+
+impl WorkerServer {
+    /// Bind `listen` and load the partition (a `worker-NNN` shard
+    /// dataset written by `coded-opt encode` — already
+    /// Parseval-normalized `(S̄_iX, S̄_iy)`).
+    pub fn bind(listen: &str, partition: &Path) -> Result<Self> {
+        let (sx, sy) = crate::data::shard::ShardedSource::open(partition)?
+            .load_dense()
+            .with_context(|| format!("loading partition {}", partition.display()))?;
+        let sy = sy.with_context(|| {
+            format!(
+                "partition {} has no targets S̄y — data-parallel workers need them \
+                 (was the source dataset sharded without y?)",
+                partition.display()
+            )
+        })?;
+        let (rows, cols) = (sx.rows() as u64, sx.cols() as u64);
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("binding worker listener on {listen}"))?;
+        Ok(WorkerServer {
+            listener,
+            worker: crate::coordinator::QuadWorker::new(sx, sy),
+            rows,
+            cols,
+        })
+    }
+
+    /// The bound address (resolves `--listen 127.0.0.1:0` to the real
+    /// port; the CLI prints it for harnesses to scrape).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Partition shape `(rows, cols)` reported in the `Hello`.
+    pub fn shape(&self) -> (u64, u64) {
+        (self.rows, self.cols)
+    }
+
+    /// Accept and serve master sessions, at most `sessions` of them
+    /// (`None` = forever). Sessions are sequential — one master drives
+    /// a round-based run at a time, then the worker re-accepts (which
+    /// is what lets a conformance test run the same master twice
+    /// against live workers).
+    pub fn serve(&mut self, sessions: Option<usize>) -> Result<()> {
+        let mut done = 0usize;
+        loop {
+            let (stream, peer) = self.listener.accept().context("accept master")?;
+            if let Err(e) = self.serve_master(stream) {
+                eprintln!("worker: session with {peer} ended with error: {e:#}");
+            }
+            done += 1;
+            if sessions.is_some_and(|s| done >= s) {
+                return Ok(());
+            }
+        }
+    }
+
+    /// One master session: `Hello`, then a task→result loop until
+    /// `Shutdown` or a clean EOF. Malformed input (bad kind, wrong
+    /// payload size) errors out of the session without panicking — the
+    /// master's failure must not take the worker down with it.
+    fn serve_master(&mut self, mut stream: TcpStream) -> Result<()> {
+        stream.set_nodelay(true).ok();
+        write_msg(&mut stream, &Msg::Hello { rows: self.rows, cols: self.cols })?;
+        loop {
+            match read_msg_or_eof(&mut stream)? {
+                Some(Msg::Task { iter, kind, payload, aux }) => {
+                    ensure!(
+                        kind == crate::coordinator::KIND_GRADIENT
+                            || kind == crate::coordinator::KIND_LINESEARCH,
+                        "unsupported task kind {kind} (socket workers serve the \
+                         data-parallel gradient/line-search kernels)"
+                    );
+                    ensure!(
+                        payload.len() as u64 == self.cols,
+                        "task payload has {} coordinates, partition has p={}",
+                        payload.len(),
+                        self.cols
+                    );
+                    let task = Task { iter: iter as usize, kind, payload, aux };
+                    let out = self.worker.process(&task);
+                    write_msg(&mut stream, &Msg::Result { iter, payload: out })?;
+                    stream.flush()?;
+                }
+                Some(Msg::Shutdown) | None => return Ok(()),
+                Some(other) => bail!("unexpected {} from master", other.kind_name()),
+            }
+        }
+    }
+}

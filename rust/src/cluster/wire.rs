@@ -1,0 +1,498 @@
+//! Hand-rolled wire format for the multi-host socket engine.
+//!
+//! Zero dependencies beyond `std::io` — the same defensive style as the
+//! shard format (`data/shard.rs`): a magic tag, an explicit
+//! little-endian protocol version, a bounded length header, and an
+//! FNV-1a checksum over every frame, with loud `ensure!` errors on any
+//! mismatch. A peer that sends garbage is *diagnosed*, never trusted.
+//!
+//! # Frame layout (all integers little-endian)
+//!
+//! | offset        | size | field                                       |
+//! |--------------:|-----:|---------------------------------------------|
+//! | 0             | 4    | magic `b"CWIR"`                             |
+//! | 4             | 4    | `u32` protocol version ([`WIRE_VERSION`])   |
+//! | 8             | 1    | message kind tag                            |
+//! | 9             | 8    | `u64` body length (≤ [`MAX_BODY`])          |
+//! | 17            | body | kind-specific body (below)                  |
+//! | 17 + body     | 8    | `u64` FNV-1a 64 over kind tag + body        |
+//!
+//! # Message kinds
+//!
+//! | tag | message    | body                                             |
+//! |----:|------------|--------------------------------------------------|
+//! | 0   | `Hello`    | `rows: u64, cols: u64` — worker → master greeting with its partition shape |
+//! | 1   | `Task`     | `iter: u64, kind: u32`, then `payload` and `aux` as length-prefixed f64 vectors |
+//! | 2   | `Result`   | `iter: u64` echo, then `payload` as a length-prefixed f64 vector |
+//! | 3   | `Shutdown` | empty — master → worker session end                |
+//!
+//! f64 vectors are `count: u64` followed by `count` raw little-endian
+//! `f64::to_le_bytes` values — payloads cross the wire **bit-exactly**,
+//! which is what lets a multi-process run reproduce a [`SimCluster`]
+//! trace bit for bit (see [`super::socket`]).
+//!
+//! Version negotiation is the frame header itself: a peer speaking a
+//! different [`WIRE_VERSION`] is refused at the first frame with an
+//! error naming both versions, before any payload is interpreted.
+//!
+//! [`SimCluster`]: super::SimCluster
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Frame magic, little-endian first on the wire.
+pub const WIRE_MAGIC: &[u8; 4] = b"CWIR";
+
+/// Protocol version; bump on any frame- or body-layout change.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Upper bound on a frame body. A gradient payload is `p` f64s, so this
+/// admits models up to tens of millions of coordinates while making a
+/// corrupt (or hostile) length header fail fast instead of attempting a
+/// multi-gigabyte allocation.
+pub const MAX_BODY: u64 = 1 << 28;
+
+const K_HELLO: u8 = 0;
+const K_TASK: u8 = 1;
+const K_RESULT: u8 = 2;
+const K_SHUTDOWN: u8 = 3;
+
+// FNV-1a 64 (same constants as the shard format's checksum; kept
+// private there, so the wire codec carries its own copies).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+fn fnv1a64(mut acc: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        acc ^= b as u64;
+        acc = acc.wrapping_mul(FNV_PRIME);
+    }
+    acc
+}
+
+/// One socket-engine message. See the module docs for the exact wire
+/// encoding of each kind.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Worker → master greeting sent immediately after accept: the
+    /// shape of the encoded partition the worker loaded from disk.
+    /// `rows` drives the master's virtual-arrival cost model (mirrors
+    /// `QuadWorker::cost`), `cols` is checked against the problem `p`.
+    Hello { rows: u64, cols: u64 },
+    /// Master → worker: execute one round task (the wire form of
+    /// [`super::Task`]).
+    Task { iter: u64, kind: u32, payload: Vec<f64>, aux: Vec<f64> },
+    /// Worker → master: the task's result, echoing the iteration it
+    /// answers. A mismatched echo is a protocol violation the master
+    /// treats as a crash-erasure — stale payloads never reach a later
+    /// round's assembler.
+    Result { iter: u64, payload: Vec<f64> },
+    /// Master → worker: the session is over; return to accepting.
+    Shutdown,
+}
+
+impl Msg {
+    /// Stable human name for error messages (avoids Debug-printing
+    /// payload vectors into an error string).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Msg::Hello { .. } => "Hello",
+            Msg::Task { .. } => "Task",
+            Msg::Result { .. } => "Result",
+            Msg::Shutdown => "Shutdown",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            Msg::Hello { .. } => K_HELLO,
+            Msg::Task { .. } => K_TASK,
+            Msg::Result { .. } => K_RESULT,
+            Msg::Shutdown => K_SHUTDOWN,
+        }
+    }
+}
+
+fn push_f64s(body: &mut Vec<u8>, v: &[f64]) {
+    body.extend_from_slice(&(v.len() as u64).to_le_bytes());
+    for x in v {
+        body.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn encode_body(msg: &Msg) -> Vec<u8> {
+    let mut body = Vec::new();
+    match msg {
+        Msg::Hello { rows, cols } => {
+            body.extend_from_slice(&rows.to_le_bytes());
+            body.extend_from_slice(&cols.to_le_bytes());
+        }
+        Msg::Task { iter, kind, payload, aux } => {
+            body.extend_from_slice(&iter.to_le_bytes());
+            body.extend_from_slice(&kind.to_le_bytes());
+            push_f64s(&mut body, payload);
+            push_f64s(&mut body, aux);
+        }
+        Msg::Result { iter, payload } => {
+            body.extend_from_slice(&iter.to_le_bytes());
+            push_f64s(&mut body, payload);
+        }
+        Msg::Shutdown => {}
+    }
+    body
+}
+
+/// Serialize one frame. The whole frame is assembled in memory and
+/// written with a single `write_all`, so a frame is never interleaved
+/// with another writer's bytes on the same stream.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    write_msg_with_version(w, msg, WIRE_VERSION)
+}
+
+/// [`write_msg`] with an explicit header version — exists so the
+/// version-skew handshake path is testable (see `testutil::peer`).
+pub(crate) fn write_msg_with_version<W: Write>(
+    w: &mut W,
+    msg: &Msg,
+    version: u32,
+) -> Result<()> {
+    let kind = msg.tag();
+    let body = encode_body(msg);
+    let mut frame = Vec::with_capacity(17 + body.len() + 8);
+    frame.extend_from_slice(WIRE_MAGIC);
+    frame.extend_from_slice(&version.to_le_bytes());
+    frame.push(kind);
+    frame.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    frame.extend_from_slice(&body);
+    let sum = fnv1a64(fnv1a64(FNV_OFFSET, &[kind]), &body);
+    frame.extend_from_slice(&sum.to_le_bytes());
+    w.write_all(&frame).context("write wire frame")?;
+    Ok(())
+}
+
+fn read_exact<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf).with_context(|| format!("torn frame: truncated {what}"))
+}
+
+fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    read_exact(r, &mut b, what)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64<R: Read>(r: &mut R, what: &str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    read_exact(r, &mut b, what)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read one frame; a clean EOF *at a frame boundary* (zero bytes before
+/// the magic) is `Ok(None)` — the peer ended the session. EOF anywhere
+/// inside a frame is a torn-frame error.
+pub fn read_msg_or_eof<R: Read>(r: &mut R) -> Result<Option<Msg>> {
+    let mut magic = [0u8; 4];
+    let mut got = 0usize;
+    while got < magic.len() {
+        let k = r.read(&mut magic[got..]).context("read wire frame magic")?;
+        if k == 0 {
+            ensure!(got == 0, "torn frame: EOF inside the magic ({got}/4 bytes)");
+            return Ok(None);
+        }
+        got += k;
+    }
+    ensure!(
+        &magic == WIRE_MAGIC,
+        "bad wire magic {magic:02x?} (expected {WIRE_MAGIC:02x?}) — not a coded-opt peer"
+    );
+    let version = read_u32(r, "version")?;
+    ensure!(
+        version == WIRE_VERSION,
+        "protocol version skew: peer speaks wire v{version}, this build speaks \
+         v{WIRE_VERSION}; upgrade the older side"
+    );
+    let mut kind_b = [0u8; 1];
+    read_exact(r, &mut kind_b, "kind tag")?;
+    let kind = kind_b[0];
+    let len = read_u64(r, "length header")?;
+    ensure!(
+        len <= MAX_BODY,
+        "wire frame length header {len} exceeds the {MAX_BODY}-byte bound \
+         (corrupt stream or hostile peer)"
+    );
+    let mut body = vec![0u8; len as usize];
+    read_exact(r, &mut body, "body")?;
+    let want = read_u64(r, "checksum")?;
+    let got_sum = fnv1a64(fnv1a64(FNV_OFFSET, &[kind]), &body);
+    ensure!(
+        got_sum == want,
+        "wire frame checksum mismatch (kind tag {kind}): computed {got_sum:#018x}, \
+         header says {want:#018x} — corrupt frame"
+    );
+    decode_body(kind, &body).map(Some)
+}
+
+/// Read one frame, treating any EOF — even at a frame boundary — as an
+/// error ("connection closed by peer"). The master side uses this:
+/// mid-round, a vanished worker is a fault, not a session end.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    match read_msg_or_eof(r)? {
+        Some(msg) => Ok(msg),
+        None => bail!("connection closed by peer"),
+    }
+}
+
+/// Bounds-checked reader over a frame body.
+struct Body<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Body<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.remaining(),
+            "wire body underrun reading {what}: need {n} bytes, {} left",
+            self.remaining()
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self, what: &str) -> Result<Vec<f64>> {
+        let count = self.u64(what)? as usize;
+        let bytes = count.checked_mul(8).ok_or_else(|| {
+            anyhow::anyhow!("wire vector length {count} overflows reading {what}")
+        })?;
+        let raw = self.take(bytes, what)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn done(self, kind: u8) -> Result<()> {
+        ensure!(
+            self.remaining() == 0,
+            "wire frame (kind tag {kind}) has {} trailing byte(s)",
+            self.remaining()
+        );
+        Ok(())
+    }
+}
+
+fn decode_body(kind: u8, body: &[u8]) -> Result<Msg> {
+    let mut b = Body { buf: body, pos: 0 };
+    let msg = match kind {
+        K_HELLO => Msg::Hello { rows: b.u64("Hello.rows")?, cols: b.u64("Hello.cols")? },
+        K_TASK => Msg::Task {
+            iter: b.u64("Task.iter")?,
+            kind: b.u32("Task.kind")?,
+            payload: b.f64s("Task.payload")?,
+            aux: b.f64s("Task.aux")?,
+        },
+        K_RESULT => {
+            Msg::Result { iter: b.u64("Result.iter")?, payload: b.f64s("Result.payload")? }
+        }
+        K_SHUTDOWN => Msg::Shutdown,
+        other => bail!("unknown wire message kind tag {other}"),
+    };
+    b.done(kind)?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    // Round-trip comparisons pin exact payload bits on purpose.
+    #![allow(clippy::float_cmp)]
+
+    use super::*;
+
+    fn frame(msg: &Msg) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, msg).unwrap();
+        buf
+    }
+
+    fn all_kinds() -> Vec<Msg> {
+        vec![
+            Msg::Hello { rows: 32, cols: 8 },
+            Msg::Task {
+                iter: 7,
+                kind: 1,
+                payload: vec![1.5, -0.0, f64::INFINITY, 3.25e-300],
+                aux: vec![42.0],
+            },
+            Msg::Result { iter: 7, payload: vec![0.1, 0.2, 0.3] },
+            Msg::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn round_trip_all_message_kinds() {
+        for msg in all_kinds() {
+            let buf = frame(&msg);
+            let back = read_msg(&mut buf.as_slice())
+                .unwrap_or_else(|e| panic!("{}: {e:#}", msg.kind_name()));
+            assert_eq!(back, msg, "{} round trip", msg.kind_name());
+        }
+    }
+
+    #[test]
+    fn payload_bits_survive_the_wire_exactly() {
+        let vals = vec![0.1 + 0.2, -0.0, 1.0 / 3.0, f64::MIN_POSITIVE, f64::INFINITY];
+        let msg = Msg::Result { iter: 0, payload: vals.clone() };
+        let Msg::Result { payload, .. } = read_msg(&mut frame(&msg).as_slice()).unwrap()
+        else {
+            panic!("wrong kind")
+        };
+        for (a, b) in vals.iter().zip(&payload) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn back_to_back_frames_parse_in_order() {
+        let mut buf = Vec::new();
+        for msg in all_kinds() {
+            write_msg(&mut buf, &msg).unwrap();
+        }
+        let mut r = buf.as_slice();
+        for msg in all_kinds() {
+            assert_eq!(read_msg(&mut r).unwrap(), msg);
+        }
+        assert!(read_msg_or_eof(&mut r).unwrap().is_none(), "clean EOF after last frame");
+    }
+
+    #[test]
+    fn checksum_mismatch_is_rejected_loudly() {
+        let msg = Msg::Result { iter: 3, payload: vec![1.0, 2.0] };
+        let mut buf = frame(&msg);
+        let body_byte = 17 + 9; // inside the payload, after iter + count
+        buf[body_byte] ^= 0x40;
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn flipped_kind_tag_also_fails_the_checksum() {
+        // the checksum covers the kind tag, not just the body
+        let mut buf = frame(&Msg::Shutdown);
+        buf[8] = K_HELLO;
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("checksum mismatch"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_length_header_is_rejected_before_allocating() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(K_RESULT);
+        buf.extend_from_slice(&u64::MAX.to_le_bytes());
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("exceeds") && s.contains("bound"), "{err:#}");
+    }
+
+    #[test]
+    fn version_skew_is_refused_with_both_versions_named() {
+        let mut buf = Vec::new();
+        write_msg_with_version(&mut buf, &Msg::Hello { rows: 1, cols: 1 }, WIRE_VERSION + 1)
+            .unwrap();
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        let s = err.to_string();
+        assert!(s.contains("version skew"), "{err:#}");
+        let theirs = format!("v{}", WIRE_VERSION + 1);
+        let ours = format!("v{WIRE_VERSION}");
+        assert!(s.contains(&theirs) && s.contains(&ours), "both versions named: {err:#}");
+    }
+
+    #[test]
+    fn bad_magic_is_rejected() {
+        let mut buf = frame(&Msg::Shutdown);
+        buf[0] = b'X';
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("bad wire magic"), "{err:#}");
+    }
+
+    #[test]
+    fn truncation_anywhere_is_a_torn_frame_not_a_hang_or_panic() {
+        let full = frame(&Msg::Task {
+            iter: 1,
+            kind: 0,
+            payload: vec![1.0, 2.0, 3.0],
+            aux: vec![],
+        });
+        // cut at every prefix length except 0 (which is a clean EOF)
+        for cut in 1..full.len() {
+            let err = read_msg(&mut &full[..cut]).unwrap_err();
+            assert!(
+                err.to_string().contains("torn frame"),
+                "cut at {cut}/{}: {err:#}",
+                full.len()
+            );
+        }
+        assert!(read_msg_or_eof(&mut &full[..0]).unwrap().is_none());
+    }
+
+    #[test]
+    fn unknown_kind_tag_is_rejected() {
+        // craft a checksum-valid frame with an unassigned kind tag
+        let mut buf = Vec::new();
+        buf.extend_from_slice(WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(99);
+        buf.extend_from_slice(&0u64.to_le_bytes());
+        buf.extend_from_slice(&fnv1a64(FNV_OFFSET, &[99]).to_le_bytes());
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("unknown wire message kind"), "{err:#}");
+    }
+
+    #[test]
+    fn inconsistent_inner_vector_length_is_rejected() {
+        // a Result whose inner count promises more f64s than the body
+        // holds: body-level bounds catch it (defense past the checksum,
+        // which an in-protocol attacker could recompute)
+        let mut body = Vec::new();
+        body.extend_from_slice(&0u64.to_le_bytes()); // iter
+        body.extend_from_slice(&1000u64.to_le_bytes()); // count: lies
+        body.extend_from_slice(&1.0f64.to_le_bytes()); // only one value
+        let mut buf = Vec::new();
+        buf.extend_from_slice(WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(K_RESULT);
+        buf.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&body);
+        buf.extend_from_slice(&fnv1a64(fnv1a64(FNV_OFFSET, &[K_RESULT]), &body).to_le_bytes());
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("underrun"), "{err:#}");
+    }
+
+    #[test]
+    fn trailing_bytes_in_a_body_are_rejected() {
+        let mut body = Vec::new();
+        body.extend_from_slice(&1u64.to_le_bytes());
+        body.extend_from_slice(&2u64.to_le_bytes());
+        body.push(0xAB); // one byte too many for a Hello
+        let mut buf = Vec::new();
+        buf.extend_from_slice(WIRE_MAGIC);
+        buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        buf.push(K_HELLO);
+        buf.extend_from_slice(&(body.len() as u64).to_le_bytes());
+        buf.extend_from_slice(&body);
+        buf.extend_from_slice(&fnv1a64(fnv1a64(FNV_OFFSET, &[K_HELLO]), &body).to_le_bytes());
+        let err = read_msg(&mut buf.as_slice()).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err:#}");
+    }
+}

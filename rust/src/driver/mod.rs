@@ -72,7 +72,7 @@ pub use solvers::{AsyncBcd, AsyncGd, Bcd, Gd, Lbfgs, Prox, Solver};
 
 use std::cell::RefCell;
 
-use crate::cluster::{Gather, SimCluster, ThreadCluster, WorkerNode};
+use crate::cluster::{Gather, SimCluster, SocketCluster, ThreadCluster, WorkerNode};
 use crate::config::{DelaySpec, Scheme};
 use crate::coordinator::bcd::{build_model_parallel, logistic_phi, quadratic_phi};
 use crate::coordinator::{
@@ -80,7 +80,7 @@ use crate::coordinator::{
 };
 use crate::data::shard::{BlockSource, ShardedSource};
 use crate::delay::{from_spec, DelayModel, NoDelay};
-use crate::encoding::partition_bounds;
+use crate::encoding::{partition_bounds, EncodingOp, ReplicationMap};
 use crate::linalg::Mat;
 use crate::metrics::{Participation, Trace};
 use crate::runtime::ArtifactIndex;
@@ -151,7 +151,7 @@ pub enum DataSource<'a> {
 }
 
 /// Cluster engine selection.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub enum Engine {
     /// Deterministic virtual-clock simulation ([`SimCluster`]).
     Sim,
@@ -159,6 +159,15 @@ pub enum Engine {
     /// Injected delays are multiplied by `delay_scale` (scale the
     /// paper's 20-second stragglers down to test-friendly milliseconds).
     Threads { delay_scale: f64 },
+    /// Multi-process TCP engine ([`SocketCluster`]): `addrs[i]` is the
+    /// listen address of the `coded-opt worker` process holding encoded
+    /// partition `i` (the `worker-NNN` directory written by
+    /// `coded-opt encode`). Virtual-clock like [`Engine::Sim`] —
+    /// injected delays are enforced by the master's winner selection,
+    /// never wall clock — so the same experiment on `Sim` and `Socket`
+    /// produces bit-identical traces. Data-parallel solvers only
+    /// (gd / lbfgs / prox).
+    Socket { addrs: Vec<String> },
 }
 
 /// How the experiment sources its straggler delays.
@@ -582,13 +591,18 @@ impl<'e, 'a> Ctx<'e, 'a> {
     }
 
     /// Guard for the event-queue async solvers, which have no cluster
-    /// and therefore cannot honor [`Engine::Threads`].
+    /// and therefore cannot honor [`Engine::Threads`] or
+    /// [`Engine::Socket`].
     pub fn require_sim_engine(&self, who: &str) -> Result<()> {
-        match self.exp.engine {
+        match &self.exp.engine {
             Engine::Sim => Ok(()),
             Engine::Threads { .. } => anyhow::bail!(
                 "{who} simulates asynchrony on a virtual-time event queue \
                  and does not support Engine::Threads"
+            ),
+            Engine::Socket { .. } => anyhow::bail!(
+                "{who} simulates asynchrony on a virtual-time event queue \
+                 and does not support Engine::Socket"
             ),
         }
     }
@@ -652,7 +666,7 @@ impl<'e, 'a> Ctx<'e, 'a> {
             .exp
             .speeds
             .resolve(self.exp.m, self.exp.seed ^ self.exp.speed_seed.wrapping_mul(0x9e37_79b9))?;
-        Ok(match self.exp.engine {
+        Ok(match &self.exp.engine {
             Engine::Sim => Box::new(
                 SimCluster::new(workers, delay)
                     .with_timing(self.exp.secs_per_unit, self.exp.master_overhead)
@@ -666,10 +680,15 @@ impl<'e, 'a> Ctx<'e, 'a> {
                 );
                 Box::new(
                     ThreadCluster::new(workers, delay)
-                        .with_delay_scale(delay_scale)
+                        .with_delay_scale(*delay_scale)
                         .with_speeds(speeds),
                 )
             }
+            Engine::Socket { .. } => anyhow::bail!(
+                "this pipeline builds its workers in-process, but Engine::Socket \
+                 workers hold pre-encoded partitions on their own disks; only the \
+                 data-parallel solvers (gd / lbfgs / prox) run on the socket engine"
+            ),
         })
     }
 
@@ -680,6 +699,10 @@ impl<'e, 'a> Ctx<'e, 'a> {
     /// materialized, and the resulting workers are bit-identical to the
     /// in-memory build of the same rows.
     pub fn data_parallel(&mut self) -> Result<(Box<dyn Gather>, GradAssembler)> {
+        if let Engine::Socket { addrs } = &self.exp.engine {
+            let addrs = addrs.clone();
+            return self.data_parallel_socket(&addrs);
+        }
         let exp = self.exp;
         let dp = match &exp.source {
             DataSource::InMemory(prob) => {
@@ -707,6 +730,59 @@ impl<'e, 'a> Ctx<'e, 'a> {
         self.beta = dp.beta;
         let assembler = dp.assembler.clone();
         Ok((self.cluster(dp.workers)?, assembler))
+    }
+
+    /// The data-parallel pipeline on [`Engine::Socket`]: the encoded
+    /// worker shards already live on the remote workers' disks
+    /// (written by `coded-opt encode`), so the master builds only the
+    /// delay model, the assembler, and the TCP connections — then
+    /// checks that each worker reports the partition shape the
+    /// encoding predicts for its index, catching shuffled
+    /// `--worker-addrs` before any gradient crosses the wire.
+    fn data_parallel_socket(&mut self, addrs: &[String]) -> Result<(Box<dyn Gather>, GradAssembler)> {
+        let exp = self.exp;
+        anyhow::ensure!(
+            exp.scheme != Scheme::Replication,
+            "Engine::Socket workers load partitions written by `coded-opt encode`, \
+             which has no replication layout; use a coded scheme (hadamard / \
+             gaussian / paley) or the uncoded baseline"
+        );
+        anyhow::ensure!(
+            addrs.len() == exp.m,
+            "Engine::Socket got {} worker address(es) but the experiment has m={} \
+             workers; pass one address per encoded partition",
+            addrs.len(),
+            exp.m
+        );
+        match &exp.source {
+            DataSource::InMemory(prob) => {
+                self.require_y(prob, "socket-engine data-parallel solvers")?;
+            }
+            DataSource::Sharded(src) => anyhow::ensure!(
+                src.has_targets(),
+                "data-parallel workers need targets y; the sharded dataset has none"
+            ),
+        }
+        let (n, p) = (self.n(), self.p());
+        // Same lazy lowering `coded-opt encode` ran when it wrote the
+        // partitions: predicts each worker's row count and the achieved
+        // redundancy without touching the data.
+        let enc = EncodingOp::build(exp.scheme, n, exp.m, exp.beta, exp.seed)?;
+        let expected_rows: Vec<u64> =
+            (0..exp.m).map(|w| enc.block_rows(w) as u64).collect();
+        let delay = self.delay_model()?;
+        let speeds = self
+            .exp
+            .speeds
+            .resolve(exp.m, exp.seed ^ exp.speed_seed.wrapping_mul(0x9e37_79b9))?;
+        let cluster = SocketCluster::connect(addrs, delay)?
+            .with_timing(exp.secs_per_unit, exp.master_overhead)
+            .with_speeds(speeds);
+        cluster.verify_partitions(&expected_rows, p as u64)?;
+        self.pjrt_attached = 0;
+        self.beta = enc.beta;
+        let assembler = GradAssembler { n, p, map: ReplicationMap::new(exp.m, 1) };
+        Ok((Box::new(cluster), assembler))
     }
 
     /// Build the encoded model-parallel pipeline: per-worker column

@@ -179,6 +179,44 @@
 //! ROADMAP). Driver runs keep all partitions resident by design — they
 //! *are* the simulated workers' shards.
 //!
+//! ## Cluster engines: one round contract, three substrates
+//!
+//! Every solver talks to its workers through the [`cluster::Gather`]
+//! round contract (dispatch tasks, collect the fastest `k`, interrupt
+//! the rest). Three engines implement it:
+//!
+//! | Engine | Processes | Clock | Use it for |
+//! |---|---|---|---|
+//! | [`cluster::SimCluster`] | one | virtual (delay-model arrivals) | experiments, grids, golden traces |
+//! | [`cluster::ThreadCluster`] | one (worker threads) | virtual, real thread preemption | exercising real concurrency |
+//! | [`cluster::SocketCluster`] | one master + `m` workers over TCP | virtual; wall clock only for fault detection | multi-host deployment, conformance |
+//!
+//! The socket engine keeps the virtual clock: the **master** samples the
+//! delay model for all `m` workers each round and ranks arrivals exactly
+//! like `SimCluster` — TCP only moves the payload bytes (exact
+//! little-endian f64 bits, framed per the [`cluster::wire`] spec:
+//! length-prefixed, versioned, checksummed). A disconnect, torn frame,
+//! stale echo, or timeout is mapped to a *crash-erasure* (arrival `∞`),
+//! which the paper's arbitrary-`A_t` guarantee already covers — so a
+//! recorded delay tape replayed through real processes produces a trace
+//! **bit-identical** to `SimCluster` on the same tape
+//! (`rust/tests/socket_cluster.rs` pins it). Two terminals:
+//!
+//! ```text
+//! # terminal 1..m — serve one encoded partition each
+//! coded-opt worker --partition encoded/worker-000 --listen 127.0.0.1:7101
+//!
+//! # terminal 0 — drive the round loop over TCP
+//! coded-opt run --source shards/ --scheme hadamard --workers 2 --k 1 \
+//!     --algorithm gd --iters 20 --cluster socket \
+//!     --worker-addrs 127.0.0.1:7101,127.0.0.1:7102
+//! ```
+//!
+//! Record a tape with [`scenario::DelayRecorder`], ship it as text
+//! (`scenario::write_tape_file`), and replay it on any engine with
+//! `coded-opt run … --replay-tape tape.txt`; `--trace-out` writes the
+//! canonical trace for `cmp`-style cross-engine diffing.
+//!
 //! ## Benchmarks and the perf gate
 //!
 //! `coded-opt bench` times the hot paths against the preserved naive
@@ -200,9 +238,11 @@
 //!   positions use `f64::total_cmp`, never `partial_cmp` (which panics
 //!   or goes order-unstable on NaN; cf. [`delay::sanitize_delay`]).
 //! - **`wall-clock-zone`** — `Instant::now` / `SystemTime` only in the
-//!   declared wall-clock modules (`cluster/threads.rs`, `bench.rs`).
-//!   Anywhere else — `SimCluster`, solvers, encoding, scenarios — a
-//!   wall-clock read breaks replay determinism.
+//!   declared wall-clock modules (`cluster/threads.rs`,
+//!   `cluster/socket.rs`, `cluster/wire.rs`, `bench.rs`; the socket
+//!   engine reads wall time for connect/IO fault detection only, never
+//!   for the trace). Anywhere else — `SimCluster`, solvers, encoding,
+//!   scenarios — a wall-clock read breaks replay determinism.
 //! - **`ordered-iteration`** — no `HashMap`/`HashSet` in
 //!   trace-producing modules; hash-iteration order leaks into output.
 //!   Use `BTreeMap`/`BTreeSet` or a sorted collection.
@@ -238,8 +278,10 @@
 //! - [`scenario`] — the scenario engine: composable delay transforms,
 //!   record/replay, the TOML scenario DSL, and the Scheme × Solver ×
 //!   Scenario grid runner behind `coded-opt scenario`.
-//! - [`cluster`] — the simulated master/worker distributed substrate with
-//!   wait-for-`k` gather and interrupts.
+//! - [`cluster`] — the master/worker distributed substrate with
+//!   wait-for-`k` gather and interrupts: virtual-time [`cluster::sim`],
+//!   thread-backed [`cluster::threads`], and multi-process TCP
+//!   [`cluster::socket`] over the [`cluster::wire`] frame codec.
 //! - [`coordinator`] — the algorithm master loops and worker state
 //!   machines the driver dispatches to ([`driver::Experiment`] is the
 //!   sole entry point; the old `run_*` shims are gone).
@@ -254,7 +296,8 @@
 //!   lint` (std-only source scanner, rule set, `lint:allow` handling).
 //! - [`config`] / [`cli`] — experiment configuration and launcher parsing.
 //! - [`testutil`] — a small property-testing framework (offline
-//!   environment: no external proptest).
+//!   environment: no external proptest) and the scripted
+//!   [`testutil::MisbehavingPeer`] for socket fault-injection tests.
 //! - [`bench`] — measurement harness used by `rust/benches/*`.
 
 // Test code pins bit-exact values on purpose (golden traces, kernel

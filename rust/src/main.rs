@@ -45,6 +45,22 @@
 //!   differ from the in-memory estimate, so pass an explicit `--step`
 //!   when diffing CLI traces bit-for-bit (prox also reports no F1
 //!   metric — there is no known `w*` on the sharded path).
+//! - `run … [--cluster sim|threads|socket] [--worker-addrs A,B,…]
+//!   [--replay-tape FILE] [--trace-out FILE]` — engine selection and
+//!   cross-engine diffing. `--cluster socket` runs the round gather
+//!   over TCP against `coded-opt worker` processes (one address per
+//!   encoded partition, in worker order); `--replay-tape` replays a
+//!   recorded delay tape (text format: one line per round, one f64 per
+//!   worker, `inf` = crash) instead of sampling delays; `--trace-out`
+//!   writes the canonical bit-exact trace, so
+//!   `cmp sim.trace socket.trace` is the cross-engine conformance
+//!   check (see `.github/workflows/ci.yml` `socket-smoke`).
+//! - `worker --partition DIR [--listen ADDR] [--once]` — serve one
+//!   encoded partition (a `worker-NNN` directory written by
+//!   `coded-opt encode`) to a socket-engine master. Prints
+//!   `worker listening on HOST:PORT …` once bound (`--listen` defaults
+//!   to `127.0.0.1:0`, an OS-assigned port); `--once` exits after one
+//!   master session (used by CI).
 //! - `lint [--root DIR] [--json] [--out lint-report.json]` — run the
 //!   determinism-contract static analysis (see [`coded_opt::analysis`])
 //!   over the source tree (default root: `rust/src`, falling back to
@@ -57,11 +73,12 @@
 use anyhow::{bail, Result};
 use coded_opt::bench::{banner, run_bench, BenchReport};
 use coded_opt::cli::Args;
+use coded_opt::cluster::WorkerServer;
 use coded_opt::config::{Algorithm, ExperimentConfig, Scheme};
 use coded_opt::data::shard::{shard_dataset, BlockSource, MatSource, ShardedSource};
 use coded_opt::data::synth::{gaussian_linear, gaussian_linear_shard_to, sparse_recovery};
 use coded_opt::driver::{
-    AsyncBcd, AsyncGd, Bcd, DataSource, Experiment, Gd, Lbfgs, Problem, Prox,
+    AsyncBcd, AsyncGd, Bcd, DataSource, Engine, Experiment, Gd, Lbfgs, Problem, Prox, RunOutput,
 };
 use coded_opt::encoding::{stream, EncodingOp, FastPath, SubsetSpectrum};
 use coded_opt::linalg::{dot, mat::reference, par, Mat};
@@ -69,7 +86,9 @@ use coded_opt::metrics::{TableWriter, Trace};
 use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 use coded_opt::rng::Pcg64;
 use coded_opt::runtime::ArtifactIndex;
-use coded_opt::scenario::{canonical_trace, run_grid, summary_table, GridSpec, Scenario};
+use coded_opt::scenario::{
+    canonical_trace, read_tape_file, run_grid, summary_table, GridCell, GridSpec, Scenario,
+};
 
 fn main() -> Result<()> {
     let args = Args::from_env()?;
@@ -79,12 +98,13 @@ fn main() -> Result<()> {
         Some("scenario") => cmd_scenario(&args),
         Some("shard") => cmd_shard(&args),
         Some("encode") => cmd_encode(&args),
+        Some("worker") => cmd_worker(&args),
         Some("bench") => cmd_bench(&args),
         Some("lint") => cmd_lint(&args),
         Some("info") | None => cmd_info(),
         Some(other) => bail!(
             "unknown subcommand '{other}' \
-             (try: run, spectrum, scenario, shard, encode, bench, lint, info)"
+             (try: run, spectrum, scenario, shard, encode, worker, bench, lint, info)"
         ),
     }
 }
@@ -101,7 +121,7 @@ fn cmd_info() -> Result<()> {
             println!("  {:<24} {:<14} {}x{}", a.name, a.kind, a.rows, a.cols);
         }
     }
-    println!("subcommands: run, spectrum, scenario, shard, encode, bench, lint, info");
+    println!("subcommands: run, spectrum, scenario, shard, encode, worker, bench, lint, info");
     Ok(())
 }
 
@@ -240,6 +260,28 @@ fn cmd_encode(args: &Args) -> Result<()> {
         if has_targets { ", S̄_iy" } else { "" }
     );
     Ok(())
+}
+
+/// `coded-opt worker`: serve one encoded partition over TCP to a
+/// socket-engine master (see [`coded_opt::cluster::socket`]).
+fn cmd_worker(args: &Args) -> Result<()> {
+    let Some(partition) = args.get("partition") else {
+        bail!(
+            "worker: --partition DIR is required (a worker-NNN directory \
+             written by `coded-opt encode`)"
+        )
+    };
+    let listen = args.get("listen").unwrap_or("127.0.0.1:0");
+    let mut server = WorkerServer::bind(listen, std::path::Path::new(partition))?;
+    let (rows, cols) = server.shape();
+    // Scraped by the conformance suite and quickstart scripts; stdout is
+    // line-buffered, so the line flushes before the accept loop blocks.
+    println!(
+        "worker listening on {} — partition {partition} ({rows}×{cols})",
+        server.local_addr()?
+    );
+    let sessions = if args.has_flag("once") { Some(1) } else { None };
+    server.serve(sessions)
 }
 
 /// Hot-path kernel benchmarks with a machine-readable report and an
@@ -453,6 +495,7 @@ fn base_source<'a>(
     cfg: &ExperimentConfig,
     source: DataSource<'a>,
     idx: Option<&'a ArtifactIndex>,
+    engine: Option<&Engine>,
 ) -> Experiment<'a> {
     let mut exp = Experiment::data_source(source)
         .scheme(cfg.scheme)
@@ -465,6 +508,9 @@ fn base_source<'a>(
         Some(sc) => exp.scenario(sc),
         None => exp.delay_spec(cfg.delay.clone(), cfg.seed),
     };
+    if let Some(engine) = engine {
+        exp = exp.engine(engine.clone());
+    }
     if let Some(idx) = idx {
         exp = exp.runtime(idx);
     }
@@ -477,8 +523,59 @@ fn base_experiment<'a>(
     x: &'a coded_opt::linalg::Mat,
     y: &'a [f64],
     idx: Option<&'a ArtifactIndex>,
+    engine: Option<&Engine>,
 ) -> Experiment<'a> {
-    base_source(cfg, DataSource::InMemory(Problem::least_squares(x, y)), idx)
+    base_source(cfg, DataSource::InMemory(Problem::least_squares(x, y)), idx, engine)
+}
+
+/// Engine selection from `--cluster` / `--worker-addrs`
+/// (`None` = the library default, [`Engine::Sim`]).
+fn cli_engine(args: &Args) -> Result<Option<Engine>> {
+    let engine = match args.get("cluster") {
+        None | Some("sim") => {
+            if args.get("worker-addrs").is_some() {
+                bail!("--worker-addrs only applies to --cluster socket");
+            }
+            return Ok(None);
+        }
+        Some("threads") => Engine::Threads {
+            delay_scale: args.get_f64("delay-scale")?.unwrap_or(1e-3),
+        },
+        Some("socket") => {
+            let Some(addrs) = args.get("worker-addrs") else {
+                bail!(
+                    "--cluster socket needs --worker-addrs HOST:PORT,HOST:PORT,… \
+                     (one per encoded partition, in worker order)"
+                )
+            };
+            let addrs: Vec<String> = csv_list(addrs).into_iter().map(String::from).collect();
+            if addrs.is_empty() {
+                bail!("--worker-addrs is empty");
+            }
+            Engine::Socket { addrs }
+        }
+        Some(other) => bail!("unknown --cluster '{other}' (sim, threads, socket)"),
+    };
+    Ok(Some(engine))
+}
+
+/// `--trace-out FILE`: write the canonical bit-exact trace
+/// ([`canonical_trace`]) so two engines' runs can be diffed with `cmp`
+/// (the CI `socket-smoke` job compares sim vs socket this way).
+fn write_trace_out(args: &Args, cfg: &ExperimentConfig, out: &RunOutput) -> Result<()> {
+    let Some(path) = args.get("trace-out") else { return Ok(()) };
+    let cell = GridCell {
+        scheme: cfg.scheme,
+        algorithm: cfg.algorithm,
+        scenario: cfg
+            .scenario
+            .as_ref()
+            .map_or_else(|| "none".to_string(), |sc| sc.name.clone()),
+        out: out.clone(),
+    };
+    std::fs::write(path, canonical_trace(&cell))?;
+    println!("wrote canonical trace to {path}");
+    Ok(())
 }
 
 /// Print a convergence trace the way `coded-opt run` reports it.
@@ -500,7 +597,12 @@ fn print_trace(trace: &Trace) {
 /// encoded block-by-block from the sharded dataset; the full matrix is
 /// never materialized in this process. Objectives are evaluated by
 /// streaming passes over the shards.
-fn cmd_run_sharded(mut cfg: ExperimentConfig, dir: &str) -> Result<()> {
+fn cmd_run_sharded(
+    mut cfg: ExperimentConfig,
+    dir: &str,
+    args: &Args,
+    engine: Option<&Engine>,
+) -> Result<()> {
     let src = ShardedSource::open(dir)?;
     cfg.n = src.rows();
     cfg.p = src.cols();
@@ -555,12 +657,12 @@ fn cmd_run_sharded(mut cfg: ExperimentConfig, dir: &str) -> Result<()> {
                     } else {
                         1.0 / smoothness()?
                     };
-                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref(), engine)
                         .eval(eval)
                         .run(Gd::with_step(step).lambda(lambda).iters(cfg.iterations))?
                 }
                 Algorithm::Lbfgs => {
-                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref(), engine)
                         .eval(eval)
                         .run(
                             Lbfgs::new()
@@ -576,7 +678,7 @@ fn cmd_run_sharded(mut cfg: ExperimentConfig, dir: &str) -> Result<()> {
                         0.3 / smoothness()?
                     };
                     let updates = cfg.iterations * cfg.k;
-                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+                    base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref(), engine)
                         .eval(eval)
                         .run(
                             AsyncGd::with_step(step)
@@ -602,7 +704,7 @@ fn cmd_run_sharded(mut cfg: ExperimentConfig, dir: &str) -> Result<()> {
                 // same expression shape as LassoProblem::default_step
                 1.0 / (src.gram_spectral_norm(60, 0x1a)? / n).max(1e-12)
             };
-            base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref())
+            base_source(&cfg, DataSource::Sharded(src.clone()), idx.as_ref(), engine)
                 .eval(eval)
                 .run(Prox::with_step(step).lambda(lambda).iters(cfg.iterations))?
         }
@@ -615,14 +717,24 @@ fn cmd_run_sharded(mut cfg: ExperimentConfig, dir: &str) -> Result<()> {
     if cfg.use_pjrt {
         println!("PJRT-backed workers: {}/{}", out.pjrt_attached, cfg.workers);
     }
+    write_trace_out(args, &cfg, &out)?;
     print_trace(&out.trace);
     Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let mut cfg = load_config(args)?;
+    if let Some(path) = args.get("replay-tape") {
+        // replace the delay model (or scenario) with the recorded tape;
+        // the scenario name lands in the canonical-trace header, so both
+        // sides of a cross-engine diff must use the same tape path
+        let tape = read_tape_file(path)?;
+        cfg.scenario = Some(Scenario::new(&format!("replay:{path}")).replay(tape));
+    }
+    let engine = cli_engine(args)?;
+    let engine = engine.as_ref();
     if let Some(dir) = args.get("source") {
-        return cmd_run_sharded(cfg, dir);
+        return cmd_run_sharded(cfg, dir, args, engine);
     }
     println!(
         "experiment '{}': {:?} / {} — n={} p={} m={} k={} β={} iters={}",
@@ -671,13 +783,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         Algorithm::Gd => {
             let prob = RidgeProblem::new(x.clone(), y.clone(), cfg.lambda);
             let step = if cfg.step_size > 0.0 { cfg.step_size } else { 1.0 / prob.smoothness() };
-            base_experiment(&cfg, &x, &y, idx.as_ref())
+            base_experiment(&cfg, &x, &y, idx.as_ref(), engine)
                 .eval(|w| (prob.objective(w), 0.0))
                 .run(Gd::with_step(step).lambda(cfg.lambda).iters(cfg.iterations))?
         }
         Algorithm::Lbfgs => {
             let prob = RidgeProblem::new(x.clone(), y.clone(), cfg.lambda);
-            base_experiment(&cfg, &x, &y, idx.as_ref())
+            base_experiment(&cfg, &x, &y, idx.as_ref(), engine)
                 .eval(|w| (prob.objective(w), 0.0))
                 .run(
                     Lbfgs::new()
@@ -690,7 +802,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             let prob = LassoProblem::new(x.clone(), y.clone(), cfg.lambda);
             let step = if cfg.step_size > 0.0 { cfg.step_size } else { prob.default_step() };
             let ws = w_star.clone();
-            base_experiment(&cfg, &x, &y, idx.as_ref())
+            base_experiment(&cfg, &x, &y, idx.as_ref(), engine)
                 .eval(move |w| {
                     let (_, _, f1) = coded_opt::metrics::f1_support(&ws, w, 1e-2);
                     (prob.objective(w), f1)
@@ -708,7 +820,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             } else {
                 0.8 * cfg.n as f64 / x.gram_spectral_norm(60, cfg.seed)
             };
-            base_experiment(&cfg, &x, &y, idx.as_ref())
+            base_experiment(&cfg, &x, &y, idx.as_ref(), engine)
                 .eval(|w| (prob.objective(w), 0.0))
                 .run(Bcd::with_step(step).lambda(cfg.lambda).iters(cfg.iterations))?
         }
@@ -720,7 +832,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 0.3 / prob.smoothness()
             };
             let updates = cfg.iterations * cfg.k;
-            base_experiment(&cfg, &x, &y, idx.as_ref())
+            base_experiment(&cfg, &x, &y, idx.as_ref(), engine)
                 .eval(|w| (prob.objective(w), 0.0))
                 .run(
                     AsyncGd::with_step(step)
@@ -741,7 +853,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 0.5 * cfg.n as f64 / x.gram_spectral_norm(60, cfg.seed)
             };
             let updates = cfg.iterations * cfg.k;
-            base_experiment(&cfg, &x, &y, idx.as_ref())
+            base_experiment(&cfg, &x, &y, idx.as_ref(), engine)
                 .eval(|w| (prob.objective(w), 0.0))
                 .run(
                     AsyncBcd::with_step(step)
@@ -754,6 +866,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     if cfg.use_pjrt {
         println!("PJRT-backed workers: {}/{}", out.pjrt_attached, cfg.workers);
     }
+    write_trace_out(args, &cfg, &out)?;
     print_trace(&out.trace);
     Ok(())
 }

@@ -546,6 +546,77 @@ fn parse_transform(doc: &TomlDoc, section: &str) -> Result<Transform> {
     })
 }
 
+// ------------------------------------------------------- tape files
+//
+// A recorded delay tape as a text file: one line per gather round, one
+// whitespace-separated f64 per worker, `#` comments and blank lines
+// ignored, `inf` for a crash erasure. Rust's shortest-round-trip float
+// formatting guarantees `format_tape` → `parse_tape` preserves every
+// delay bit-for-bit, so a tape written by one process and replayed by
+// another (`coded-opt run --replay-tape`) reproduces the recorded
+// trace exactly.
+
+/// Render a delay tape in the text format [`parse_tape`] reads.
+pub fn format_tape(tape: &[Vec<f64>]) -> String {
+    let mut s = String::from("# coded-opt delay tape: rows = rounds, cols = workers\n");
+    for row in tape {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        s.push_str(&cells.join(" "));
+        s.push('\n');
+    }
+    s
+}
+
+/// Parse the text tape format (see [`format_tape`]). Rejects NaN holes,
+/// ragged rows, and empty tapes loudly — a malformed tape must never
+/// degrade into a silently different delay realization.
+pub fn parse_tape(text: &str) -> Result<Vec<Vec<f64>>> {
+    let mut tape: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut row = Vec::new();
+        for tok in line.split_whitespace() {
+            let v: f64 = tok
+                .parse()
+                .map_err(|e| anyhow::anyhow!("tape line {}: '{tok}': {e}", lineno + 1))?;
+            ensure!(
+                !v.is_nan(),
+                "tape line {}: NaN delay — record holes must be patched \
+                 (TapeHandle::replay) before writing a tape file",
+                lineno + 1
+            );
+            row.push(v);
+        }
+        if let Some(first) = tape.first() {
+            ensure!(
+                row.len() == first.len(),
+                "tape line {}: {} delay(s) but earlier rounds have {} worker(s)",
+                lineno + 1,
+                row.len(),
+                first.len()
+            );
+        }
+        tape.push(row);
+    }
+    ensure!(!tape.is_empty(), "delay tape has no rounds");
+    Ok(tape)
+}
+
+/// [`parse_tape`] over a file path.
+pub fn read_tape_file(path: &str) -> Result<Vec<Vec<f64>>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading delay tape {path}"))?;
+    parse_tape(&text).with_context(|| format!("parsing delay tape {path}"))
+}
+
+/// [`format_tape`] to a file path.
+pub fn write_tape_file(path: &str, tape: &[Vec<f64>]) -> Result<()> {
+    std::fs::write(path, format_tape(tape)).with_context(|| format!("writing delay tape {path}"))
+}
+
 fn parse_speeds(doc: &TomlDoc, section: &str) -> Result<SpeedProfile> {
     let kind = doc.get_str(section, "kind").unwrap_or("uniform");
     Ok(match kind {
@@ -753,5 +824,41 @@ factor = 3.0
         assert_eq!(d.sample(0, 1), 0.3);
         // wrong width is rejected
         assert!(sc.build_delay(3, 99).is_err());
+    }
+
+    #[test]
+    fn tape_text_round_trip_is_bit_exact() {
+        // awkward values on purpose: shortest-round-trip formatting must
+        // preserve every bit, including subnormals and infinities
+        let tape = vec![
+            vec![0.1, 1.0 / 3.0, f64::INFINITY, 5e-324],
+            vec![f64::MAX, 0.0, 1e-17, 2.5],
+        ];
+        let parsed = parse_tape(&format_tape(&tape)).unwrap();
+        assert_eq!(parsed.len(), tape.len());
+        for (a, b) in tape.iter().zip(&parsed) {
+            let (ab, bb): (Vec<u64>, Vec<u64>) = (
+                a.iter().map(|v| v.to_bits()).collect(),
+                b.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(ab, bb);
+        }
+    }
+
+    #[test]
+    fn tape_parser_rejects_malformed_input_loudly() {
+        // comments and blank lines are fine
+        let ok = parse_tape("# header\n\n0.1 0.2 # trailing\n0.3 inf\n").unwrap();
+        assert_eq!(ok, vec![vec![0.1, 0.2], vec![0.3, f64::INFINITY]]);
+        // ragged rows
+        let e = parse_tape("0.1 0.2\n0.3\n").unwrap_err().to_string();
+        assert!(e.contains("earlier rounds have 2 worker(s)"), "{e}");
+        // NaN holes
+        let e = parse_tape("0.1 NaN\n").unwrap_err().to_string();
+        assert!(e.contains("NaN delay"), "{e}");
+        // junk token
+        assert!(parse_tape("0.1 zebra\n").is_err());
+        // empty
+        assert!(parse_tape("# nothing\n").is_err());
     }
 }

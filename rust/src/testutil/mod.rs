@@ -5,8 +5,10 @@
 //! executes a property over many random cases, and greedy shrinking for
 //! failures so that counterexamples are small and readable.
 
+pub mod peer;
 pub mod prop;
 
+pub use peer::{MisbehavingPeer, PeerMode};
 pub use prop::{Gen, PropError, PropRunner};
 
 /// Assert two f64 slices are elementwise close.

@@ -1,0 +1,141 @@
+//! A deliberately misbehaving socket-engine worker for fault-injection
+//! tests.
+//!
+//! Each [`MisbehavingPeer`] binds an ephemeral localhost port, accepts
+//! exactly one master session on a background thread, and then
+//! misbehaves in one scripted way ([`PeerMode`]). The conformance suite
+//! points a [`SocketCluster`](crate::cluster::SocketCluster) at it and
+//! asserts that every mode surfaces as a *crash-erasure* — the peer is
+//! interrupted out of the active set, the `k ≤ live` invariant holds,
+//! and its stale bytes never reach an assembler — rather than a hang or
+//! panic.
+
+use std::io::Write as _;
+use std::net::TcpListener;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::wire::{read_msg, write_msg, write_msg_with_version, Msg, WIRE_VERSION};
+
+/// The scripted fault a [`MisbehavingPeer`] commits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerMode {
+    /// Answer the first task with the first 10 bytes of a valid result
+    /// frame — EOF lands mid-header, a torn frame.
+    TornFrame,
+    /// Answer with a full header but only half the promised body, then
+    /// close — a truncated payload.
+    TruncatedResult,
+    /// Answer with a well-formed result echoing the *wrong* iteration
+    /// (`iter + 1`) — a stale/confused payload the master must drop.
+    WrongIterEcho,
+    /// Open the session with a `Hello` stamped `WIRE_VERSION + 1` —
+    /// the handshake must refuse cleanly.
+    WrongVersionHello,
+    /// Accept the task and never reply — the master's read timeout, not
+    /// a hang, must end the round.
+    Stall,
+}
+
+/// One scripted-fault worker session on an ephemeral localhost port.
+pub struct MisbehavingPeer {
+    addr: String,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MisbehavingPeer {
+    /// Bind `127.0.0.1:0` and serve one master session in `mode`,
+    /// advertising a `rows × cols` partition in the `Hello`.
+    pub fn spawn(mode: PeerMode, rows: u64, cols: u64) -> Result<Self> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding misbehaving peer")?;
+        let addr = listener.local_addr()?.to_string();
+        let handle = std::thread::spawn(move || {
+            // A refused/failed session is the point of this peer; errors
+            // here only mean the master already gave up on us.
+            let _ = serve_once(&listener, mode, rows, cols);
+        });
+        Ok(MisbehavingPeer { addr, handle: Some(handle) })
+    }
+
+    /// The address to hand the master, e.g. in a `--worker-addrs` slot.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+}
+
+impl Drop for MisbehavingPeer {
+    fn drop(&mut self) {
+        // The serving thread exits on its own in every mode (the master
+        // disconnecting unblocks any pending I/O); joining keeps test
+        // teardown deterministic.
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_once(listener: &TcpListener, mode: PeerMode, rows: u64, cols: u64) -> Result<()> {
+    let (mut stream, _) = listener.accept()?;
+    stream.set_nodelay(true).ok();
+    if mode == PeerMode::WrongVersionHello {
+        write_msg_with_version(
+            &mut stream,
+            &Msg::Hello { rows, cols },
+            WIRE_VERSION + 1,
+        )?;
+        stream.flush()?;
+        // Hold the connection open until the master hangs up: the test
+        // asserts the *master* refuses, not that we disconnected first.
+        let _ = read_msg(&mut stream);
+        return Ok(());
+    }
+    write_msg(&mut stream, &Msg::Hello { rows, cols })?;
+    stream.flush()?;
+    loop {
+        let task = match read_msg(&mut stream) {
+            Ok(Msg::Task { iter, .. }) => iter,
+            // Shutdown or disconnect: session over.
+            _ => return Ok(()),
+        };
+        match mode {
+            PeerMode::TornFrame => {
+                let frame = result_frame(task, cols);
+                stream.write_all(&frame[..10])?;
+                stream.flush()?;
+                return Ok(()); // close: EOF mid-header on the master side
+            }
+            PeerMode::TruncatedResult => {
+                let frame = result_frame(task, cols);
+                stream.write_all(&frame[..frame.len() / 2])?;
+                stream.flush()?;
+                return Ok(()); // close: EOF mid-body
+            }
+            PeerMode::WrongIterEcho => {
+                write_msg(
+                    &mut stream,
+                    &Msg::Result { iter: task + 1, payload: vec![0.0; cols as usize] },
+                )?;
+                stream.flush()?;
+                // keep answering wrongly until the master hangs up
+            }
+            PeerMode::Stall => {
+                // Never reply; block until the master's timeout closes
+                // the connection (the next read returns Err/EOF).
+                let _ = read_msg(&mut stream);
+                return Ok(());
+            }
+            PeerMode::WrongVersionHello => unreachable!("handled before the loop"),
+        }
+    }
+}
+
+/// A well-formed `Result` frame for `iter` with a `cols`-sized payload —
+/// the byte source the torn/truncated modes cut short.
+fn result_frame(iter: u64, cols: u64) -> Vec<u8> {
+    let mut frame = Vec::new();
+    write_msg(&mut frame, &Msg::Result { iter, payload: vec![0.5; cols as usize] })
+        .expect("Vec write cannot fail");
+    frame
+}

@@ -1,0 +1,9 @@
+//! Lint fixture: the virtual-clock sim engine is NOT a wall-clock zone —
+//! the socket/wire additions must not widen the zone past themselves.
+//! Expected: exactly one `wall-clock-zone` finding (line 8).
+
+use std::time::Instant;
+
+pub fn tick() -> Instant {
+    Instant::now()
+}

@@ -1,0 +1,8 @@
+//! Lint fixture: the socket engine's timeout machinery is a declared
+//! wall-clock zone. Expected: no findings in this file.
+
+use std::time::Instant;
+
+pub fn connect_deadline() -> Instant {
+    Instant::now()
+}

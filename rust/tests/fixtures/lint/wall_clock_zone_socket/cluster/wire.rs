@@ -1,0 +1,8 @@
+//! Lint fixture: the wire codec is a declared wall-clock zone.
+//! Expected: no findings in this file.
+
+use std::time::SystemTime;
+
+pub fn frame_stamp() -> SystemTime {
+    SystemTime::now()
+}

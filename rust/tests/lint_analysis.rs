@@ -47,6 +47,16 @@ fn fixture_wall_clock_zone() {
     assert_single("wall_clock_zone", "wall-clock-zone", 7);
 }
 
+/// Pins the socket-engine zone extension from both sides: wall-clock
+/// reads in `cluster/socket.rs` / `cluster/wire.rs` are allowed
+/// (timeouts need `Instant::now`), while the same read in
+/// `cluster/sim.rs` — the virtual-clock engine — still violates.
+#[test]
+fn fixture_wall_clock_zone_socket() {
+    let r = assert_single("wall_clock_zone_socket", "wall-clock-zone", 8);
+    assert_eq!(r.findings[0].file, "cluster/sim.rs", "{:?}", r.findings[0]);
+}
+
 #[test]
 fn fixture_ordered_iteration() {
     let r = assert_single("ordered_iteration", "ordered-iteration", 5);
@@ -132,6 +142,7 @@ fn cli_exit_codes_and_json() {
     for case in [
         "float_total_order",
         "wall_clock_zone",
+        "wall_clock_zone_socket",
         "ordered_iteration",
         "safety_comment",
         "safety_comment_zone",

@@ -1,0 +1,406 @@
+//! Cross-engine conformance suite for the multi-process socket engine.
+//!
+//! The contract under test (see `cluster::socket`): a recorded delay
+//! tape replayed through [`SocketCluster`] across real localhost worker
+//! processes produces a trace **bit-identical** to [`SimCluster`]
+//! replaying the same tape — and every transport/protocol fault (killed
+//! process, torn frame, truncated payload, stale iteration echo, stall,
+//! version skew) degrades to a crash-erasure, never a hang or panic.
+//!
+//! Workers are the real `coded-opt worker` binary
+//! (`CARGO_BIN_EXE_coded-opt`) serving encoded partitions written by
+//! the real encode pipeline; misbehaving peers come from
+//! [`coded_opt::testutil::MisbehavingPeer`].
+
+use std::io::{BufRead, BufReader};
+use std::panic::AssertUnwindSafe;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use coded_opt::cluster::{Gather, SocketCluster, Task};
+use coded_opt::config::Scheme;
+use coded_opt::coordinator::KIND_GRADIENT;
+use coded_opt::data::shard::{shard_dataset, ShardedSource};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::delay::{NoDelay, TraceDelay};
+use coded_opt::driver::{Engine, Experiment, Gd, Lbfgs, RunOutput, Solver};
+use coded_opt::encoding::{stream, EncodingOp};
+use coded_opt::scenario::{DelayRecorder, Scenario};
+use coded_opt::testutil::{MisbehavingPeer, PeerMode};
+
+const N: usize = 64;
+const P: usize = 8;
+const BETA: f64 = 2.0;
+
+/// A sharded source dataset plus its encoded worker partitions, in a
+/// per-test temp directory (removed on drop).
+struct TestData {
+    root: PathBuf,
+    shards: PathBuf,
+    encoded: PathBuf,
+    block_rows: Vec<u64>,
+}
+
+impl TestData {
+    fn partition(&self, w: usize) -> PathBuf {
+        self.encoded.join(format!("worker-{w:03}"))
+    }
+}
+
+impl Drop for TestData {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.root);
+    }
+}
+
+fn setup(name: &str, m: usize, seed: u64) -> TestData {
+    let root =
+        std::env::temp_dir().join(format!("coded-opt-socket-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let shards = root.join("shards");
+    let encoded = root.join("encoded");
+    let (x, y, _) = gaussian_linear(N, P, 0.5, seed);
+    shard_dataset(&x, Some(&y), &shards, 16).expect("shard dataset");
+    let src = ShardedSource::open(&shards).expect("open shards");
+    let enc = EncodingOp::build(Scheme::Hadamard, N, m, BETA, seed).expect("encoding");
+    stream::write_encoded_partitions(&enc, &src, &encoded).expect("write partitions");
+    let block_rows = (0..m).map(|w| enc.block_rows(w) as u64).collect();
+    TestData { root, shards, encoded, block_rows }
+}
+
+/// One real `coded-opt worker` child process, killed on drop. The bound
+/// address is scraped from the `worker listening on …` banner.
+struct WorkerProc {
+    child: Child,
+    addr: String,
+}
+
+impl WorkerProc {
+    fn spawn(partition: &Path) -> Self {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_coded-opt"))
+            .arg("worker")
+            .arg("--partition")
+            .arg(partition)
+            .args(["--listen", "127.0.0.1:0"])
+            .stdout(Stdio::piped())
+            .spawn()
+            .expect("spawn coded-opt worker");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("read worker banner");
+        let addr = line
+            .strip_prefix("worker listening on ")
+            .and_then(|rest| rest.split_whitespace().next())
+            .unwrap_or_else(|| panic!("unexpected worker banner: {line:?}"))
+            .to_string();
+        WorkerProc { child, addr }
+    }
+
+    fn kill(&mut self) {
+        self.child.kill().expect("kill worker");
+        self.child.wait().expect("reap worker");
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+fn spawn_workers(data: &TestData, m: usize) -> (Vec<WorkerProc>, Vec<String>) {
+    let workers: Vec<WorkerProc> =
+        (0..m).map(|w| WorkerProc::spawn(&data.partition(w))).collect();
+    let addrs = workers.iter().map(|w| w.addr.clone()).collect();
+    (workers, addrs)
+}
+
+/// Record the delay tape a solver consumes under the `rack-correlated`
+/// builtin scenario on the sim engine — the "recorded on one cluster,
+/// replayed on another" half of the conformance story.
+fn record_tape(
+    shards: &Path,
+    m: usize,
+    k: usize,
+    seed: u64,
+    solver: impl Solver,
+) -> Vec<Vec<f64>> {
+    let inner = Scenario::builtin("rack-correlated")
+        .expect("builtin scenario")
+        .build_delay(m, seed)
+        .expect("build delay");
+    let (rec, tape) = DelayRecorder::new(inner);
+    Experiment::sharded(ShardedSource::open(shards).expect("open shards"))
+        .scheme(Scheme::Hadamard)
+        .workers(m)
+        .wait_for(k)
+        .redundancy(BETA)
+        .seed(seed)
+        .delay_model(Box::new(rec))
+        .run(solver)
+        .expect("recording run");
+    let tape = tape.snapshot();
+    assert!(!tape.is_empty(), "recording run sampled no delays");
+    tape
+}
+
+/// Replay `tape` through the sim engine (`engine: None`) or the socket
+/// engine, with an otherwise identical experiment.
+fn replay_run(
+    shards: &Path,
+    m: usize,
+    k: usize,
+    seed: u64,
+    tape: &[Vec<f64>],
+    engine: Option<Engine>,
+    solver: impl Solver,
+) -> RunOutput {
+    let sc = Scenario::new("replay").replay(tape.to_vec());
+    let mut exp = Experiment::sharded(ShardedSource::open(shards).expect("open shards"))
+        .scheme(Scheme::Hadamard)
+        .workers(m)
+        .wait_for(k)
+        .redundancy(BETA)
+        .seed(seed)
+        .scenario(&sc);
+    if let Some(engine) = engine {
+        exp = exp.engine(engine);
+    }
+    exp.run(solver).expect("replay run")
+}
+
+/// Bit-level equality of two runs: every trace field and every iterate
+/// coordinate compared as raw `f64` bits — no tolerance anywhere.
+fn assert_bit_identical(a: &RunOutput, b: &RunOutput, ctx: &str) {
+    assert_eq!(
+        a.trace.records.len(),
+        b.trace.records.len(),
+        "{ctx}: trace lengths differ"
+    );
+    for (i, (ra, rb)) in a.trace.records.iter().zip(&b.trace.records).enumerate() {
+        assert_eq!(ra.iter, rb.iter, "{ctx}: record {i}: iter");
+        assert_eq!(ra.k_used, rb.k_used, "{ctx}: record {i}: k_used");
+        assert_eq!(
+            ra.time.to_bits(),
+            rb.time.to_bits(),
+            "{ctx}: record {i}: time {} vs {}",
+            ra.time,
+            rb.time
+        );
+        assert_eq!(
+            ra.objective.to_bits(),
+            rb.objective.to_bits(),
+            "{ctx}: record {i}: objective {} vs {}",
+            ra.objective,
+            rb.objective
+        );
+        assert_eq!(
+            ra.test_metric.to_bits(),
+            rb.test_metric.to_bits(),
+            "{ctx}: record {i}: test_metric {} vs {}",
+            ra.test_metric,
+            rb.test_metric
+        );
+    }
+    assert_eq!(a.w.len(), b.w.len(), "{ctx}: iterate lengths differ");
+    for (j, (x, y)) in a.w.iter().zip(&b.w).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: w[{j}]: {x} vs {y}");
+    }
+}
+
+fn grad_task(iter: usize) -> Task {
+    Task { iter, kind: KIND_GRADIENT, payload: vec![0.0; P], aux: Vec::new() }
+}
+
+// ---------------------------------------------------------------------
+// Conformance: sim and socket produce the same bits on the same tape.
+// ---------------------------------------------------------------------
+
+#[test]
+fn gd_socket_trace_is_bit_identical_to_sim_and_run_twice_deterministic() {
+    let (m, k, seed) = (4, 3, 1234u64);
+    let data = setup("gd", m, seed);
+    let gd = || Gd::with_step(0.05).lambda(0.05).iters(8);
+    let tape = record_tape(&data.shards, m, k, seed, gd());
+
+    let sim = replay_run(&data.shards, m, k, seed, &tape, None, gd());
+    let (_workers, addrs) = spawn_workers(&data, m);
+    let socket = replay_run(
+        &data.shards,
+        m,
+        k,
+        seed,
+        &tape,
+        Some(Engine::Socket { addrs: addrs.clone() }),
+        gd(),
+    );
+    assert_bit_identical(&sim, &socket, "gd: sim vs socket");
+
+    // Same tape, same live workers (re-accepted sessions), same bits.
+    let again = replay_run(
+        &data.shards,
+        m,
+        k,
+        seed,
+        &tape,
+        Some(Engine::Socket { addrs }),
+        gd(),
+    );
+    assert_bit_identical(&socket, &again, "gd: socket run twice");
+}
+
+#[test]
+fn lbfgs_socket_trace_is_bit_identical_to_sim() {
+    let (m, k, seed) = (4, 3, 4321u64);
+    let data = setup("lbfgs", m, seed);
+    let lbfgs = || Lbfgs::new().lambda(0.05).iters(5);
+    let tape = record_tape(&data.shards, m, k, seed, lbfgs());
+
+    let sim = replay_run(&data.shards, m, k, seed, &tape, None, lbfgs());
+    let (_workers, addrs) = spawn_workers(&data, m);
+    let socket = replay_run(
+        &data.shards,
+        m,
+        k,
+        seed,
+        &tape,
+        Some(Engine::Socket { addrs }),
+        lbfgs(),
+    );
+    assert_bit_identical(&sim, &socket, "lbfgs: sim vs socket");
+}
+
+// ---------------------------------------------------------------------
+// Fault injection: every fault is a crash-erasure, never a hang/panic.
+// ---------------------------------------------------------------------
+
+/// A misbehaving peer that would WIN round 0 (smallest injected delay)
+/// must land exactly where a crashed worker lands: the socket run's
+/// trace equals a sim run whose tape has that worker at +∞ throughout.
+#[test]
+fn misbehaving_winner_degrades_to_crash_erasure_bit_identically() {
+    let (m, k, seed) = (4, 3, 77u64);
+    let data = setup("peer", m, seed);
+    let rounds = 5usize;
+    // Peer (slot 3, delay 0.0) is the fastest arrival every round; the
+    // sim reference crashes that slot for the whole run instead.
+    let live_row = vec![0.002, 0.003, 0.004, 0.0];
+    let mut dead_row = live_row.clone();
+    dead_row[3] = f64::INFINITY;
+    let live_tape: Vec<Vec<f64>> = (0..rounds).map(|_| live_row.clone()).collect();
+    let dead_tape: Vec<Vec<f64>> = (0..rounds).map(|_| dead_row.clone()).collect();
+    let gd = || Gd::with_step(0.05).lambda(0.05).iters(rounds);
+
+    let sim = replay_run(&data.shards, m, k, seed, &dead_tape, None, gd());
+    let (_workers, real_addrs) = spawn_workers(&data, 3);
+    for mode in
+        [PeerMode::TornFrame, PeerMode::TruncatedResult, PeerMode::WrongIterEcho]
+    {
+        let peer =
+            MisbehavingPeer::spawn(mode, data.block_rows[3], P as u64).expect("spawn peer");
+        let mut addrs = real_addrs.clone();
+        addrs.push(peer.addr().to_string());
+        let socket = replay_run(
+            &data.shards,
+            m,
+            k,
+            seed,
+            &live_tape,
+            Some(Engine::Socket { addrs }),
+            gd(),
+        );
+        assert_bit_identical(
+            &sim,
+            &socket,
+            &format!("{mode:?}: sim-with-crashed-slot vs socket"),
+        );
+    }
+}
+
+/// A stalled winner is erased by the I/O timeout — wall clock bounds
+/// fault *detection* only — and the next-fastest live worker is
+/// promoted so the round still completes.
+#[test]
+fn stalled_winner_is_erased_by_timeout_and_round_completes() {
+    let (m, seed) = (2, 5u64);
+    let data = setup("stall", m, seed);
+    let worker = WorkerProc::spawn(&data.partition(0));
+    let peer =
+        MisbehavingPeer::spawn(PeerMode::Stall, data.block_rows[1], P as u64).expect("peer");
+    let addrs = vec![worker.addr.clone(), peer.addr().to_string()];
+    // Equal costs (equal partition rows), so the peer's 0.0 delay makes
+    // it the round-0 winner; the live worker is 0.5 s behind.
+    let delay = Box::new(TraceDelay::new(vec![vec![0.5, 0.0]]));
+    let mut cluster =
+        SocketCluster::connect_with_timeout(&addrs, delay, Duration::from_millis(300))
+            .expect("connect");
+    let rr = cluster.round(1, &mut |_| grad_task(0));
+    assert_eq!(rr.responses.len(), 1);
+    assert_eq!(rr.responses[0].worker, 0, "live worker must be promoted into the gap");
+    assert_eq!(rr.interrupted, vec![1], "stalled peer ends up interrupted/erased");
+    assert!(rr.elapsed.is_finite());
+}
+
+/// A peer speaking a different wire version is refused at the
+/// handshake, with an error naming the skew — not a garbled session.
+#[test]
+fn version_skew_peer_is_refused_at_connect() {
+    let peer =
+        MisbehavingPeer::spawn(PeerMode::WrongVersionHello, 4, P as u64).expect("peer");
+    let err = SocketCluster::connect_with_timeout(
+        &[peer.addr().to_string()],
+        Box::new(NoDelay::new(1)),
+        Duration::from_secs(2),
+    )
+    .err()
+    .expect("wrong-version handshake must be refused");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("protocol version skew"), "unexpected error: {msg}");
+}
+
+/// Killing a worker process mid-run erases it permanently (a crash,
+/// exactly an infinite delay), and erasing the last worker below `k`
+/// fires the same `k ≤ live` assertion SimCluster uses.
+#[test]
+fn killed_worker_is_erased_and_too_few_live_workers_panics() {
+    let (m, seed) = (2, 9u64);
+    let data = setup("kill", m, seed);
+    let (mut workers, addrs) = spawn_workers(&data, m);
+    let delay = Box::new(TraceDelay::new(vec![vec![0.0, 0.0]]));
+    let mut cluster =
+        SocketCluster::connect_with_timeout(&addrs, delay, Duration::from_secs(5))
+            .expect("connect");
+
+    // Round 0: both live; equal arrivals tie-break to worker 0.
+    let rr = cluster.round(1, &mut |_| grad_task(0));
+    assert_eq!(rr.responses[0].worker, 0);
+
+    // Kill worker 0: the next dispatch to it faults, it is erased, and
+    // worker 1 is promoted — the round completes.
+    workers[0].kill();
+    let rr = cluster.round(1, &mut |_| grad_task(1));
+    assert_eq!(rr.responses.len(), 1);
+    assert_eq!(rr.responses[0].worker, 1, "killed worker must be erased, not retried");
+    assert_eq!(rr.interrupted, vec![0]);
+
+    // Stays dead: later rounds never dispatch to the erased worker.
+    let rr = cluster.round(1, &mut |_| grad_task(2));
+    assert_eq!(rr.responses[0].worker, 1);
+
+    // Killing the last live worker drops live below k: the round must
+    // fail the k ≤ live invariant loudly (SimCluster's exact message),
+    // not hang waiting for ghosts.
+    workers[1].kill();
+    let panic = std::panic::catch_unwind(AssertUnwindSafe(|| {
+        cluster.round(1, &mut |_| grad_task(3));
+    }))
+    .expect_err("round with zero live workers must panic");
+    let msg = panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("live (non-crashed)"), "unexpected panic payload: {msg:?}");
+}
