@@ -101,6 +101,32 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(one.w, eight.w, "kernel threading must never move a result");
     println!("\nthreads=1 and threads=8 runs are bit-identical (deterministic chunk pool)");
 
+    // The same is true of SIMD: with AVX2 the kernels run std::arch
+    // fast paths, but they vectorize across independent outputs in the
+    // scalar accumulation order, so results stay bit-identical and the
+    // CODED_OPT_SIMD toggle (0 = force scalar) is pure speed — see the
+    // coded_opt::linalg::simd docs. Mixed precision is the one knob
+    // that ISN'T bit-pinned: `.precision(Precision::F32)` stores worker
+    // shards at f32 (half the memory/bandwidth) while accumulating in
+    // f64. Each kernel stays within 1e-5 of the f64 referee; over a
+    // whole run the rounding compounds, so compare loosely:
+    use coded_opt::linalg::Precision;
+    let half = Experiment::new(Problem::least_squares(&x, &y))
+        .workers(m)
+        .wait_for(k)
+        .seed(42)
+        .precision(Precision::F32)
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(50))?;
+    let drift = one
+        .w
+        .iter()
+        .zip(&half.w)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(drift < 1e-3, "f32 shard storage drifted too far: {drift:e}");
+    println!("f32-shard run tracks the f64 run (max |Δw| = {drift:.1e}, shards at half size)");
+
     // Out-of-core: the same experiment can read its dataset from a
     // shard directory instead of memory. A sharded dataset is a
     // manifest.json (schema `coded-opt/shard-v1`: rows/cols, targets

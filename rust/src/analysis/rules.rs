@@ -45,7 +45,8 @@ pub const RULES: &[RuleInfo] = &[
     },
     RuleInfo {
         id: "safety-comment",
-        summary: "unsafe only under runtime/, and always with a SAFETY: comment",
+        summary: "unsafe only under runtime/ and in linalg/simd.rs, and always \
+                  with a SAFETY: comment",
     },
     RuleInfo {
         id: "no-silent-nan",
@@ -108,8 +109,11 @@ const TRACE_MODULES: &[&str] = &[
 const WALL_CLOCK_ZONES: &[&str] =
     &["cluster/threads.rs", "cluster/socket.rs", "cluster/wire.rs", "bench.rs"];
 
-/// Modules where `unsafe` is permitted (with a SAFETY: comment).
-const UNSAFE_ZONES: &[&str] = &["runtime/"];
+/// Modules where `unsafe` is permitted (with a SAFETY: comment):
+/// the PJRT FFI boundary and the std::arch SIMD kernels. The SIMD zone
+/// is the single file, not `linalg/` — the rest of linalg stays
+/// unsafe-free.
+const UNSAFE_ZONES: &[&str] = &["runtime/", "linalg/simd.rs"];
 
 /// A parsed `lint:allow` directive.
 struct Allow {
@@ -190,7 +194,7 @@ fn scan(rel: &str, lines: &[SourceLine]) -> Vec<Finding> {
         if find_token(code, "unsafe").is_some() {
             if !in_prefix(rel, UNSAFE_ZONES) {
                 out.push(mk(rel, line, "safety-comment",
-                    "unsafe outside the allowlisted modules (runtime/)"));
+                    "unsafe outside the allowlisted modules (runtime/, linalg/simd.rs)"));
             } else if !has_safety_comment(lines, i) {
                 out.push(mk(rel, line, "safety-comment",
                     "unsafe without an adjacent SAFETY: comment"));
@@ -438,6 +442,17 @@ mod tests {
         let multi = "// SAFETY: head line.\n// continuation.\n#[allow(dead_code)]\nunsafe impl Send for X {}\n";
         let (f, _) = lint("runtime/x.rs", multi);
         assert!(f.is_empty(), "walkback crosses attributes: {f:?}");
+
+        // The SIMD kernel file is in the zone (still SAFETY-gated)…
+        let (f, _) = lint("linalg/simd.rs", "unsafe { body() }\n");
+        assert_eq!(f.len(), 1, "in-zone but uncommented: {f:?}");
+        let ok = "// SAFETY: avx2 checked by the dispatcher.\nunsafe { body() }\n";
+        let (f, _) = lint("linalg/simd.rs", ok);
+        assert!(f.is_empty(), "{f:?}");
+        // …and the zone is that one file, not the rest of linalg/.
+        let (f, _) = lint("linalg/mat.rs", ok);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("runtime/"), "{f:?}");
     }
 
     #[test]

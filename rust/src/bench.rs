@@ -11,6 +11,7 @@
 //! {
 //!   "schema": "coded-opt/bench-v1",
 //!   "threads": 8,
+//!   "features": "cpu=sse2,avx,avx2; simd=on; precision=f64",
 //!   "entries": [
 //!     {
 //!       "name": "encode_hadamard_1024x512",
@@ -30,6 +31,17 @@
 //! timed in the same process — because those are machine-independent,
 //! unlike absolute seconds. Future PRs should extend this schema (new
 //! entry names) rather than invent a new format.
+//!
+//! `features` is an informational free-form descriptor of the machine
+//! and data-plane configuration the report was produced under (detected
+//! CPU SIMD features, whether the AVX2 kernels were active, storage
+//! precision). It is never gated on — `simd_*` / `f32_*` paired entries
+//! carry that information where it matters, as speedup ratios measured
+//! with both variants in the same process (e.g. `simd_matvec_1024x512`
+//! times the AVX2 kernel against the forced-scalar kernel, and
+//! `f32_matvec_1024x512` times f32-storage matvec against f64). Parsers
+//! treat a missing `features` field as empty for backward compatibility
+//! with pre-SIMD reports.
 
 use std::time::Instant;
 
@@ -129,6 +141,9 @@ impl BenchEntry {
 #[derive(Clone, Debug)]
 pub struct BenchReport {
     pub threads: usize,
+    /// Free-form machine/configuration descriptor (CPU SIMD features,
+    /// active SIMD mode, precision). Informational only — never gated.
+    pub features: String,
     pub entries: Vec<BenchEntry>,
 }
 
@@ -137,7 +152,13 @@ pub const BENCH_SCHEMA: &str = "coded-opt/bench-v1";
 
 impl BenchReport {
     pub fn new(threads: usize) -> Self {
-        BenchReport { threads, entries: Vec::new() }
+        BenchReport { threads, features: String::new(), entries: Vec::new() }
+    }
+
+    /// Attach the machine/configuration descriptor (see module docs).
+    pub fn with_features(mut self, features: impl Into<String>) -> Self {
+        self.features = features.into();
+        self
     }
 
     /// Record a plain timing.
@@ -173,6 +194,7 @@ impl BenchReport {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"schema\": \"{BENCH_SCHEMA}\",\n"));
         out.push_str(&format!("  \"threads\": {},\n", self.threads));
+        out.push_str(&format!("  \"features\": \"{}\",\n", json::escape(&self.features)));
         out.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
             out.push_str("    {");
@@ -203,6 +225,11 @@ impl BenchReport {
             bail!("bench report: unknown schema '{schema}' (want {BENCH_SCHEMA})");
         }
         let threads = json::get(obj, "threads").and_then(|v| v.as_f64()).unwrap_or(1.0) as usize;
+        // Absent in pre-SIMD reports (still schema bench-v1): default empty.
+        let features = json::get(obj, "features")
+            .and_then(|v| v.as_str())
+            .unwrap_or_default()
+            .to_string();
         let entries_v = json::get(obj, "entries")
             .and_then(|v| v.as_array())
             .context("bench report: missing entries array")?;
@@ -225,7 +252,7 @@ impl BenchReport {
                 baseline_mean_secs: json::get(e, "baseline_mean_secs").and_then(|v| v.as_f64()),
             });
         }
-        Ok(BenchReport { threads, entries })
+        Ok(BenchReport { threads, features, entries })
     }
 
     /// Regression gate: every baseline entry that records a speedup must
@@ -503,14 +530,21 @@ mod tests {
 
     #[test]
     fn report_json_roundtrip() {
-        let mut r = BenchReport::new(8);
+        let mut r = BenchReport::new(8).with_features("cpu=avx2; simd=on; precision=f64");
         r.push(&stats("fwht_8192", 1e-4));
         r.push(&stats("tricky \"name\" with \\ and n=8", 1e-4));
         r.push_pair("gram_512", &stats("gram fast", 1e-3), &stats("gram naive", 4e-3));
         let text = r.to_json();
         let back = BenchReport::parse_json(&text).unwrap();
         assert_eq!(back.threads, 8);
+        assert_eq!(back.features, "cpu=avx2; simd=on; precision=f64");
         assert_eq!(back.entries.len(), 3);
+        // Pre-SIMD documents omit `features`; parse must tolerate that.
+        let old = BenchReport::parse_json(
+            "{\"schema\": \"coded-opt/bench-v1\", \"threads\": 2, \"entries\": []}",
+        )
+        .unwrap();
+        assert!(old.features.is_empty());
         assert!(back.entry("fwht_8192").unwrap().speedup().is_none());
         assert!(back.entry("tricky \"name\" with \\ and n=8").is_some(), "escaped roundtrip");
         let g = back.entry("gram_512").unwrap();

@@ -39,7 +39,7 @@ pub use prox::ProxConfig;
 use crate::cluster::{Task, WorkerNode};
 use crate::config::Scheme;
 use crate::encoding::{EncodingOp, ReplicationMap};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Precision, PrecisionMat};
 use anyhow::Result;
 
 /// Task kinds understood by [`QuadWorker`].
@@ -55,9 +55,14 @@ pub const KIND_BCD_STEP: u32 = 2;
 /// gradient hot path executes the AOT-compiled JAX/Pallas artifact;
 /// otherwise it runs the native rust kernel. Both compute
 /// `r_i = (S̄_iX)ᵀ(S̄_iX·w − S̄_iy)`.
+///
+/// The shard matrix is stored at a [`Precision`]: `F64` by default
+/// (bit-determinism contract), or `F32` storage with f64 accumulation
+/// (half the shard memory traffic, ≤ 1e-5 tolerance vs the f64 referee
+/// — see [`crate::linalg::precision`]). Targets `S̄_iy` always stay f64.
 pub struct QuadWorker {
-    /// Encoded shard S̄_iX (rows_i × p).
-    pub sx: Mat,
+    /// Encoded shard S̄_iX (rows_i × p) at its storage precision.
+    pub sx: PrecisionMat,
     /// Encoded targets S̄_i y.
     pub sy: Vec<f64>,
     /// Optional PJRT executor for the gradient kernel.
@@ -69,6 +74,11 @@ pub struct QuadWorker {
 
 impl QuadWorker {
     pub fn new(sx: Mat, sy: Vec<f64>) -> Self {
+        QuadWorker::with_precision(PrecisionMat::F64(sx), sy)
+    }
+
+    /// Box a shard already stored at its target precision.
+    pub fn with_precision(sx: PrecisionMat, sy: Vec<f64>) -> Self {
         assert_eq!(sx.rows(), sy.len());
         let rows = sx.rows();
         QuadWorker { sx, sy, pjrt: None, resid: vec![0.0; rows] }
@@ -193,7 +203,7 @@ pub fn build_data_parallel(
     beta: f64,
     seed: u64,
 ) -> Result<DataParallel> {
-    build_data_parallel_with_runtime(x, y, scheme, m, beta, seed, None)
+    build_data_parallel_with_runtime(x, y, scheme, m, beta, seed, Precision::F64, None)
 }
 
 /// Parseval-normalize encoded blocks and box them into [`QuadWorker`]s,
@@ -205,6 +215,7 @@ fn assemble_coded_workers(
     sx_blocks: Vec<Mat>,
     sy_blocks: Vec<Vec<f64>>,
     norm: f64,
+    precision: Precision,
     runtime: Option<&crate::runtime::ArtifactIndex>,
 ) -> (Vec<Box<dyn WorkerNode>>, usize) {
     let mut pjrt_attached = 0;
@@ -212,13 +223,19 @@ fn assemble_coded_workers(
         .into_iter()
         .zip(sy_blocks)
         .map(|(mut sx, mut sy)| {
+            // Normalize in f64, THEN demote: the stored f32 values are
+            // the rounding of the exact normalized shard, not a product
+            // of rounded factors.
             sx.scale_inplace(norm);
             crate::linalg::scale(norm, &mut sy);
-            let mut worker = QuadWorker::new(sx, sy);
+            let mut worker = QuadWorker::with_precision(PrecisionMat::demote(sx, precision), sy);
             if let Some(idx) = runtime {
-                worker.pjrt =
-                    crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
-                pjrt_attached += usize::from(worker.pjrt.is_some());
+                // The AOT artifacts take f64 shard buffers; f32-storage
+                // workers always run the native widening kernels.
+                if let PrecisionMat::F64(m) = &worker.sx {
+                    worker.pjrt = crate::runtime::GradExecutor::from_index(idx, m, &worker.sy);
+                    pjrt_attached += usize::from(worker.pjrt.is_some());
+                }
             }
             Box::new(worker) as Box<dyn WorkerNode>
         })
@@ -233,17 +250,20 @@ fn assemble_replicated_workers(
     shards: &[(Mat, Vec<f64>)],
     map: &ReplicationMap,
     m: usize,
+    precision: Precision,
     runtime: Option<&crate::runtime::ArtifactIndex>,
 ) -> (Vec<Box<dyn WorkerNode>>, usize) {
     let mut pjrt_attached = 0;
     let workers: Vec<Box<dyn WorkerNode>> = (0..m)
         .map(|w| {
             let p = map.partition_of(w);
-            let mut worker = QuadWorker::new(shards[p].0.clone(), shards[p].1.clone());
+            let sx = PrecisionMat::demote(shards[p].0.clone(), precision);
+            let mut worker = QuadWorker::with_precision(sx, shards[p].1.clone());
             if let Some(idx) = runtime {
-                worker.pjrt =
-                    crate::runtime::GradExecutor::from_index(idx, &worker.sx, &worker.sy);
-                pjrt_attached += usize::from(worker.pjrt.is_some());
+                if let PrecisionMat::F64(mat) = &worker.sx {
+                    worker.pjrt = crate::runtime::GradExecutor::from_index(idx, mat, &worker.sy);
+                    pjrt_attached += usize::from(worker.pjrt.is_some());
+                }
             }
             Box::new(worker) as Box<dyn WorkerNode>
         })
@@ -255,6 +275,13 @@ fn assemble_replicated_workers(
 /// whose shard shape matches a compiled `quad_grad` artifact execute
 /// their gradient hot path on PJRT (lazy per-thread compilation); the
 /// rest use the native kernel.
+///
+/// `precision` selects the shard storage mode: [`Precision::F64`]
+/// (default everywhere else) keeps the bit-determinism contract;
+/// [`Precision::F32`] stores each worker's `S̄_iX` in single precision
+/// (accumulation stays f64) and disables the PJRT attach for those
+/// workers, since the AOT artifacts expect f64 buffers.
+#[allow(clippy::too_many_arguments)]
 pub fn build_data_parallel_with_runtime(
     x: &Mat,
     y: &[f64],
@@ -262,6 +289,7 @@ pub fn build_data_parallel_with_runtime(
     m: usize,
     beta: f64,
     seed: u64,
+    precision: Precision,
     runtime: Option<&crate::runtime::ArtifactIndex>,
 ) -> Result<DataParallel> {
     let n = x.rows();
@@ -282,7 +310,7 @@ pub fn build_data_parallel_with_runtime(
                 })
                 .collect();
             let (workers, pjrt_attached) =
-                assemble_replicated_workers(&shards, &map, m, runtime);
+                assemble_replicated_workers(&shards, &map, m, precision, runtime);
             Ok(DataParallel {
                 workers,
                 assembler: GradAssembler { n, p: x.cols(), map },
@@ -300,7 +328,7 @@ pub fn build_data_parallel_with_runtime(
             let sx_blocks = enc.encode_data(x);
             let sy_blocks = enc.encode_vec(y);
             let (workers, pjrt_attached) =
-                assemble_coded_workers(sx_blocks, sy_blocks, norm, runtime);
+                assemble_coded_workers(sx_blocks, sy_blocks, norm, precision, runtime);
             Ok(DataParallel {
                 workers,
                 assembler: GradAssembler { n, p: x.cols(), map: ReplicationMap::new(m, 1) },
@@ -333,6 +361,7 @@ pub fn build_data_parallel_streamed(
     m: usize,
     beta: f64,
     seed: u64,
+    precision: Precision,
     runtime: Option<&crate::runtime::ArtifactIndex>,
 ) -> Result<DataParallel> {
     use crate::data::shard::assemble_targets;
@@ -357,7 +386,7 @@ pub fn build_data_parallel_streamed(
                 .map(|(p, sxp)| (sxp, enc.row_block(p).matvec(&y)))
                 .collect();
             let (workers, pjrt_attached) =
-                assemble_replicated_workers(&shards, &map, m, runtime);
+                assemble_replicated_workers(&shards, &map, m, precision, runtime);
             Ok(DataParallel {
                 workers,
                 assembler: GradAssembler { n, p: src.cols(), map },
@@ -372,7 +401,7 @@ pub fn build_data_parallel_streamed(
             let sx_blocks = encode_data_streamed(&enc, src)?;
             let sy_blocks = encode_vec_streamed(&enc, src)?;
             let (workers, pjrt_attached) =
-                assemble_coded_workers(sx_blocks, sy_blocks, norm, runtime);
+                assemble_coded_workers(sx_blocks, sy_blocks, norm, precision, runtime);
             Ok(DataParallel {
                 workers,
                 assembler: GradAssembler { n, p: src.cols(), map: ReplicationMap::new(m, 1) },

@@ -17,4 +17,4 @@ pub mod rcv1like;
 pub mod shard;
 pub mod synth;
 
-pub use shard::{BlockSource, Manifest, MatSource, ShardStream, ShardWriter, ShardedSource};
+pub use shard::{BlockSource, Dtype, Manifest, MatSource, ShardStream, ShardWriter, ShardedSource};

@@ -4,25 +4,33 @@
 //!
 //! A *sharded dataset* is a directory containing
 //! - `manifest.json` — schema `coded-opt/shard-v1`: global shape
-//!   (`rows`, `cols`), targets flag, and one entry per shard file
-//!   (name, starting row, row count, payload checksum);
+//!   (`rows`, `cols`), targets flag, X payload [`Dtype`] (absent field
+//!   = `f64`, so version-1 manifests parse unchanged), and one entry
+//!   per shard file (name, starting row, row count, payload checksum);
 //! - `shard-NNNNN.bin` — consecutive row blocks of the design matrix
-//!   `X` (row-major little-endian f64) plus, when targets are present,
-//!   the matching slice of `y`.
+//!   `X` (row-major little-endian, element width per the dtype) plus,
+//!   when targets are present, the matching slice of `y` (always f64).
 //!
-//! ## Shard file layout (version 1)
+//! ## Shard file layout (versions 1 and 2)
 //!
 //! ```text
 //! offset  size          field
 //! 0       4             magic  b"CSHD"
-//! 4       4             u32 LE version (= 1)
+//! 4       4             u32 LE version (1 = f64 X payload, 2 = flagged)
 //! 8       8             u64 LE row0   (global row of the first row)
 //! 16      8             u64 LE rows   (rows in this shard)
 //! 24      8             u64 LE cols
-//! 32      1             has_targets (0 / 1)
-//! 33      rows·cols·8   X block, row-major f64 LE
-//! …       rows·8        y block (present iff has_targets)
+//! 32      1             v1: has_targets (0 / 1)
+//!                       v2: flags — bit 0 has_targets, bit 1 f32 X
+//! 33      rows·cols·w   X block, row-major LE (w = 8 f64, 4 f32)
+//! …       rows·8        y block, f64 LE (present iff has_targets)
 //! ```
+//!
+//! An f64 dataset is written as version-1 files byte-for-byte, so every
+//! pre-dtype reader and fixture keeps working; only `f32` storage emits
+//! version-2 files. The read path always widens X to an f64 [`Mat`] —
+//! storage precision is a disk/bandwidth knob, not an arithmetic one
+//! (see [`crate::linalg::precision`] for the tolerance contract).
 //!
 //! [`ShardWriter`] splits any row stream into fixed-size shards;
 //! [`ShardStream`] / [`ShardedSource`] read them back one block at a
@@ -44,14 +52,60 @@ use crate::bench::json;
 use crate::linalg::Mat;
 use anyhow::{ensure, Context, Result};
 
-/// Manifest schema tag (bump [`SHARD_VERSION`] and this together).
+/// Manifest schema tag. Unchanged across shard-file versions: version 2
+/// only *adds* an optional `dtype` field, so every v1 document is a
+/// valid v2 document.
 pub const SHARD_SCHEMA: &str = "coded-opt/shard-v1";
 
-/// Binary shard-file version.
-pub const SHARD_VERSION: u32 = 1;
+/// Highest binary shard-file version this build writes/reads. Readers
+/// accept `1..=SHARD_VERSION`; writers emit 1 for f64 payloads (byte
+/// compatibility) and 2 for f32.
+pub const SHARD_VERSION: u32 = 2;
 
 const MAGIC: &[u8; 4] = b"CSHD";
 const MANIFEST_FILE: &str = "manifest.json";
+
+/// Flags byte (header offset 32) of a version-2 shard file.
+const FLAG_TARGETS: u8 = 0b01;
+const FLAG_F32: u8 = 0b10;
+
+/// On-disk element type of the X payload (`y` is always f64).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    /// 8-byte LE doubles — the version-1 format, bit-exact round trip.
+    F64,
+    /// 4-byte LE floats — half the payload; each element is the
+    /// nearest-f32 rounding of the written value, widened exactly on
+    /// read.
+    F32,
+}
+
+impl Dtype {
+    /// Canonical name (`"f64"` / `"f32"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::F64 => "f64",
+            Dtype::F32 => "f32",
+        }
+    }
+
+    /// Parse a manifest / CLI spelling.
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" => Some(Dtype::F64),
+            "f32" => Some(Dtype::F32),
+            _ => None,
+        }
+    }
+
+    /// Stored bytes per X element.
+    pub fn width(self) -> usize {
+        match self {
+            Dtype::F64 => 8,
+            Dtype::F32 => 4,
+        }
+    }
+}
 
 /// A re-iterable source of contiguous row blocks of `(X, y)`.
 ///
@@ -176,6 +230,9 @@ pub struct Manifest {
     pub rows: usize,
     pub cols: usize,
     pub has_targets: bool,
+    /// X payload storage type. Absent in pre-dtype manifests, which
+    /// parse as [`Dtype::F64`].
+    pub dtype: Dtype,
     /// The writer's shard-row target: every shard has exactly this many
     /// rows except possibly the last.
     pub shard_rows: usize,
@@ -191,6 +248,7 @@ impl Manifest {
         out.push_str(&format!("  \"rows\": {},\n", self.rows));
         out.push_str(&format!("  \"cols\": {},\n", self.cols));
         out.push_str(&format!("  \"has_targets\": {},\n", self.has_targets));
+        out.push_str(&format!("  \"dtype\": \"{}\",\n", self.dtype.name()));
         out.push_str(&format!("  \"shard_rows\": {},\n", self.shard_rows));
         out.push_str("  \"shards\": [\n");
         for (i, s) in self.shards.iter().enumerate() {
@@ -225,8 +283,8 @@ impl Manifest {
             .and_then(|v| v.as_f64())
             .context("shard manifest: missing version")? as u32;
         ensure!(
-            version == SHARD_VERSION,
-            "shard manifest: unsupported version {version} (want {SHARD_VERSION})"
+            (1..=SHARD_VERSION).contains(&version),
+            "shard manifest: unsupported version {version} (this build reads 1..={SHARD_VERSION})"
         );
         let num = |key: &str| -> Result<usize> {
             Ok(json::get(obj, key)
@@ -239,6 +297,12 @@ impl Manifest {
         let has_targets = json::get(obj, "has_targets")
             .and_then(|v| v.as_bool())
             .context("shard manifest: missing has_targets")?;
+        let dtype = match json::get(obj, "dtype").and_then(|v| v.as_str()) {
+            // pre-dtype (version 1) manifests omit the field
+            None => Dtype::F64,
+            Some(s) => Dtype::parse(s)
+                .with_context(|| format!("shard manifest: unknown dtype '{s}'"))?,
+        };
         let shards_v = json::get(obj, "shards")
             .and_then(|v| v.as_array())
             .context("shard manifest: missing shards array")?;
@@ -270,7 +334,7 @@ impl Manifest {
                 checksum,
             });
         }
-        let m = Manifest { rows, cols, has_targets, shard_rows, shards };
+        let m = Manifest { rows, cols, has_targets, dtype, shard_rows, shards };
         m.validate()?;
         Ok(m)
     }
@@ -328,12 +392,31 @@ fn f64s_to_le_bytes(vals: &[f64], out: &mut Vec<u8>) {
     }
 }
 
+/// Demote to nearest-f32 and serialize — the `Dtype::F32` X payload.
+fn f64s_to_f32_le_bytes(vals: &[f64], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vals.len() * 4);
+    for &v in vals {
+        out.extend_from_slice(&(v as f32).to_le_bytes());
+    }
+}
+
 fn le_bytes_to_f64s(bytes: &[u8], out: &mut Vec<f64>) {
     debug_assert_eq!(bytes.len() % 8, 0);
     out.clear();
     out.reserve(bytes.len() / 8);
     for c in bytes.chunks_exact(8) {
         out.push(f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]));
+    }
+}
+
+/// Widen an f32 LE payload to f64 values (exact).
+fn f32_le_bytes_to_f64s(bytes: &[u8], out: &mut Vec<f64>) {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    out.clear();
+    out.reserve(bytes.len() / 4);
+    for c in bytes.chunks_exact(4) {
+        out.push(f64::from(f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
     }
 }
 
@@ -345,6 +428,7 @@ pub struct ShardWriter {
     cols: usize,
     shard_rows: usize,
     has_targets: bool,
+    dtype: Dtype,
     /// Buffered rows not yet flushed (≤ shard_rows · cols values).
     xbuf: Vec<f64>,
     ybuf: Vec<f64>,
@@ -379,12 +463,21 @@ impl ShardWriter {
             cols,
             shard_rows,
             has_targets,
+            dtype: Dtype::F64,
             xbuf: Vec::new(),
             ybuf: Vec::new(),
             rows_written: 0,
             shards: Vec::new(),
             finished: false,
         })
+    }
+
+    /// X payload storage type (default [`Dtype::F64`] — the version-1
+    /// byte format). [`Dtype::F32`] emits version-2 files with each X
+    /// element rounded to nearest f32; targets stay f64 either way.
+    pub fn with_dtype(mut self, dtype: Dtype) -> Self {
+        self.dtype = dtype;
+        self
     }
 
     /// Append a row block (and its target slice when the writer was
@@ -419,13 +512,22 @@ impl ShardWriter {
             .with_context(|| format!("creating shard file {}", path.display()))?;
         let mut w = BufWriter::new(f);
         w.write_all(MAGIC)?;
-        w.write_all(&SHARD_VERSION.to_le_bytes())?;
+        // f64 payloads stay version-1 files byte-for-byte; only f32
+        // storage needs the version-2 flags byte.
+        let (version, flags) = match self.dtype {
+            Dtype::F64 => (1u32, u8::from(self.has_targets)),
+            Dtype::F32 => (2u32, u8::from(self.has_targets) | FLAG_F32),
+        };
+        w.write_all(&version.to_le_bytes())?;
         w.write_all(&(self.rows_written as u64).to_le_bytes())?;
         w.write_all(&(rows as u64).to_le_bytes())?;
         w.write_all(&(self.cols as u64).to_le_bytes())?;
-        w.write_all(&[u8::from(self.has_targets)])?;
+        w.write_all(&[flags])?;
         let mut bytes = Vec::new();
-        f64s_to_le_bytes(&self.xbuf[..nvals], &mut bytes);
+        match self.dtype {
+            Dtype::F64 => f64s_to_le_bytes(&self.xbuf[..nvals], &mut bytes),
+            Dtype::F32 => f64s_to_f32_le_bytes(&self.xbuf[..nvals], &mut bytes),
+        }
         let mut checksum = fnv1a64(FNV_OFFSET, &bytes);
         w.write_all(&bytes)?;
         if self.has_targets {
@@ -457,6 +559,7 @@ impl ShardWriter {
             rows: self.rows_written,
             cols: self.cols,
             has_targets: self.has_targets,
+            dtype: self.dtype,
             shard_rows: self.shard_rows,
             shards: std::mem::take(&mut self.shards),
         };
@@ -476,7 +579,20 @@ pub fn shard_dataset(
     dir: impl AsRef<Path>,
     shard_rows: usize,
 ) -> Result<Manifest> {
-    let mut w = ShardWriter::create(&dir, x.cols(), shard_rows, y.is_some())?;
+    shard_dataset_dtype(x, y, dir, shard_rows, Dtype::F64)
+}
+
+/// [`shard_dataset`] with an explicit X payload [`Dtype`]
+/// (`coded-opt shard --dtype f32` lands here).
+pub fn shard_dataset_dtype(
+    x: &Mat,
+    y: Option<&[f64]>,
+    dir: impl AsRef<Path>,
+    shard_rows: usize,
+    dtype: Dtype,
+) -> Result<Manifest> {
+    let mut w =
+        ShardWriter::create(&dir, x.cols(), shard_rows, y.is_some())?.with_dtype(dtype);
     // Feed in shard-sized blocks so the writer buffer stays small.
     let src = MatSource::new(x, y, shard_rows);
     src.for_each_block(&mut |_r0, xb, yb| w.append(xb, yb))?;
@@ -563,8 +679,8 @@ impl ShardedSource {
         ensure!(&head[0..4] == MAGIC, "shard {}: bad magic", meta.file);
         let version = u32::from_le_bytes([head[4], head[5], head[6], head[7]]);
         ensure!(
-            version == SHARD_VERSION,
-            "shard {}: unsupported version {version} (want {SHARD_VERSION})",
+            (1..=SHARD_VERSION).contains(&version),
+            "shard {}: unsupported version {version} (this build reads 1..={SHARD_VERSION})",
             meta.file
         );
         let rd_u64 = |o: usize| {
@@ -580,7 +696,28 @@ impl ShardedSource {
             ]) as usize
         };
         let (row0, rows, cols) = (rd_u64(8), rd_u64(16), rd_u64(24));
-        let has_targets = head[32] != 0;
+        let flags = head[32];
+        let (has_targets, dtype) = if version == 1 {
+            ensure!(flags <= 1, "shard {}: bad has_targets byte {flags}", meta.file);
+            (flags != 0, Dtype::F64)
+        } else {
+            ensure!(
+                flags & !(FLAG_TARGETS | FLAG_F32) == 0,
+                "shard {}: unknown flag bits {flags:#04x}",
+                meta.file
+            );
+            (
+                flags & FLAG_TARGETS != 0,
+                if flags & FLAG_F32 != 0 { Dtype::F32 } else { Dtype::F64 },
+            )
+        };
+        ensure!(
+            dtype == self.manifest.dtype,
+            "shard {}: payload dtype {} disagrees with manifest {}",
+            meta.file,
+            dtype.name(),
+            self.manifest.dtype.name()
+        );
         ensure!(
             row0 == meta.row0 && rows == meta.rows,
             "shard {}: header rows [{row0}, {row0}+{rows}) disagree with manifest \
@@ -595,12 +732,15 @@ impl ShardedSource {
             "shard {}: header shape disagrees with manifest",
             meta.file
         );
-        let mut bytes = vec![0u8; rows * cols * 8];
+        let mut bytes = vec![0u8; rows * cols * dtype.width()];
         r.read_exact(&mut bytes)
             .with_context(|| format!("reading shard payload {}", path.display()))?;
         let mut checksum = fnv1a64(FNV_OFFSET, &bytes);
         let mut xvals = Vec::new();
-        le_bytes_to_f64s(&bytes, &mut xvals);
+        match dtype {
+            Dtype::F64 => le_bytes_to_f64s(&bytes, &mut xvals),
+            Dtype::F32 => f32_le_bytes_to_f64s(&bytes, &mut xvals),
+        }
         let x = Mat::from_vec(rows, cols, xvals);
         let mut y = Vec::new();
         if has_targets {
@@ -751,6 +891,49 @@ mod tests {
     }
 
     #[test]
+    fn f32_dataset_roundtrips_at_f32_fidelity() {
+        let (x, y, _) = gaussian_linear(37, 6, 0.3, 17);
+        let dir = tmpdir("f32-roundtrip");
+        let manifest = shard_dataset_dtype(&x, Some(&y), &dir, 8, Dtype::F32).unwrap();
+        assert_eq!(manifest.dtype, Dtype::F32);
+        let src = ShardedSource::open(&dir).unwrap();
+        assert_eq!(src.manifest().dtype, Dtype::F32);
+        let (x2, y2) = src.load_dense().unwrap();
+        // X comes back as the exact widening of its nearest-f32 rounding…
+        for (orig, got) in x.as_slice().iter().zip(x2.as_slice()) {
+            assert_eq!(*got, f64::from(*orig as f32));
+        }
+        // …while y (always f64 on disk) round-trips bit-exactly.
+        assert_eq!(y, y2.unwrap());
+        // The f32 payload really is half-width on disk: header 33 bytes
+        // + rows·cols·4 (X) + rows·8 (y).
+        let s0 = &manifest.shards[0];
+        let len = fs::metadata(dir.join(&s0.file)).unwrap().len() as usize;
+        assert_eq!(len, 33 + s0.rows * 6 * 4 + s0.rows * 8);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dtype_absent_in_manifest_means_f64() {
+        let (x, y, _) = gaussian_linear(12, 3, 0.2, 19);
+        let dir = tmpdir("dtype-absent");
+        shard_dataset(&x, Some(&y), &dir, 6).unwrap();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path).unwrap();
+        // Strip the dtype line, emulating a pre-dtype (version 1)
+        // manifest; the dataset must still open and read as f64.
+        let stripped: String =
+            text.lines().filter(|l| !l.contains("\"dtype\"")).collect::<Vec<_>>().join("\n");
+        assert_ne!(stripped, text, "fixture must actually drop the field");
+        fs::write(&path, stripped).unwrap();
+        let src = ShardedSource::open(&dir).unwrap();
+        assert_eq!(src.manifest().dtype, Dtype::F64);
+        let (x2, _) = src.load_dense().unwrap();
+        assert_eq!(x.as_slice(), x2.as_slice());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn blocks_are_bounded_and_ordered() {
         let (x, y, _) = gaussian_linear(40, 3, 0.1, 3);
         let dir = tmpdir("bounded");
@@ -799,6 +982,7 @@ mod tests {
             rows: 10,
             cols: 3,
             has_targets: true,
+            dtype: Dtype::F64,
             shard_rows: 6,
             shards: vec![
                 ShardMeta { file: "shard-00000.bin".into(), row0: 0, rows: 6, checksum: 1 },

@@ -68,6 +68,22 @@ pub fn gaussian_linear_shard_to(
     seed: u64,
     shard_rows: usize,
 ) -> anyhow::Result<(crate::data::shard::Manifest, Vec<f64>)> {
+    gaussian_linear_shard_to_dtype(dir, n, p, sigma, seed, shard_rows, crate::data::Dtype::F64)
+}
+
+/// [`gaussian_linear_shard_to`] with an explicit X payload dtype.
+/// Generation is identical (the PRNG stream and `y` are f64 regardless);
+/// only the on-disk X width changes, so an f32 dataset holds exactly the
+/// nearest-f32 rounding of the f64 dataset with the same seed.
+pub fn gaussian_linear_shard_to_dtype(
+    dir: impl AsRef<std::path::Path>,
+    n: usize,
+    p: usize,
+    sigma: f64,
+    seed: u64,
+    shard_rows: usize,
+    dtype: crate::data::Dtype,
+) -> anyhow::Result<(crate::data::shard::Manifest, Vec<f64>)> {
     use crate::data::shard::ShardWriter;
     anyhow::ensure!(n > 0 && p > 0, "n and p must be positive");
     // Pass 1: advance past the n·p design draws, then take w*.
@@ -79,7 +95,7 @@ pub fn gaussian_linear_shard_to(
     // rng_noise is now parked at the first noise draw.
     let mut rng_x = Pcg64::with_stream(seed, 0xda7a);
     let noise = Normal::new(0.0, sigma);
-    let mut writer = ShardWriter::create(dir, p, shard_rows, true)?;
+    let mut writer = ShardWriter::create(dir, p, shard_rows, true)?.with_dtype(dtype);
     let mut r0 = 0;
     while r0 < n {
         let rows = shard_rows.min(n - r0);

@@ -81,7 +81,7 @@ use crate::coordinator::{
 use crate::data::shard::{BlockSource, ShardedSource};
 use crate::delay::{from_spec, DelayModel, NoDelay};
 use crate::encoding::{partition_bounds, EncodingOp, ReplicationMap};
-use crate::linalg::Mat;
+use crate::linalg::{Mat, Precision};
 use crate::metrics::{Participation, Trace};
 use crate::runtime::ArtifactIndex;
 use crate::scenario::{Scenario, SpeedProfile};
@@ -223,6 +223,8 @@ pub struct Experiment<'a> {
     /// Whether `timing()` was explicitly configured (rejected loudly
     /// under `Engine::Threads`, which measures wall-clock).
     timing_set: bool,
+    /// Worker shard storage precision (data-parallel solvers only).
+    precision: Precision,
     runtime: Option<&'a ArtifactIndex>,
     delay: DelayChoice<'a>,
     /// Per-worker compute-speed multipliers, resolved with `m` at
@@ -264,6 +266,7 @@ impl<'a> Experiment<'a> {
             master_overhead: 0.001,
             engine: Engine::Sim,
             timing_set: false,
+            precision: Precision::F64,
             runtime: None,
             delay: DelayChoice::None,
             speeds: SpeedProfile::Uniform,
@@ -384,6 +387,18 @@ impl<'a> Experiment<'a> {
     /// then `available_parallelism`.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n);
+        self
+    }
+
+    /// Worker shard storage precision for the data-parallel solvers.
+    /// Default: [`Precision::F64`] (the bit-determinism contract and
+    /// golden traces assume it). [`Precision::F32`] stores each worker's
+    /// `S̄_iX` in single precision with f64 accumulation — half the
+    /// shard memory at a documented ≤ 1e-5 tolerance vs the f64 run
+    /// (see [`crate::linalg::precision`]). In-process engines only;
+    /// socket workers load f64 partitions from their own disks.
+    pub fn precision(mut self, p: Precision) -> Self {
+        self.precision = p;
         self
     }
 
@@ -714,6 +729,7 @@ impl<'e, 'a> Ctx<'e, 'a> {
                     exp.m,
                     exp.beta,
                     exp.seed,
+                    exp.precision,
                     exp.runtime,
                 )?
             }
@@ -723,6 +739,7 @@ impl<'e, 'a> Ctx<'e, 'a> {
                 exp.m,
                 exp.beta,
                 exp.seed,
+                exp.precision,
                 exp.runtime,
             )?,
         };
@@ -753,6 +770,12 @@ impl<'e, 'a> Ctx<'e, 'a> {
              workers; pass one address per encoded partition",
             addrs.len(),
             exp.m
+        );
+        anyhow::ensure!(
+            exp.precision == Precision::F64,
+            "Engine::Socket workers load f64 partitions written by `coded-opt \
+             encode`; Precision::F32 shard storage is in-process only \
+             (Sim / Threads engines)"
         );
         match &exp.source {
             DataSource::InMemory(prob) => {

@@ -56,7 +56,7 @@ pub use replication::ReplicationMap;
 pub use spectrum::{SpectrumStats, SubsetSpectrum};
 
 use crate::config::Scheme;
-use crate::linalg::{Csr, Mat};
+use crate::linalg::{Csr, Mat, PrecisionMat};
 use anyhow::Result;
 
 /// Thread-local accounting of dense generator material — the
@@ -513,6 +513,17 @@ impl EncodingOp {
                 outs
             }
         }
+    }
+
+    /// [`encode_data`](EncodingOp::encode_data) at a requested storage
+    /// precision: the encode itself always runs in f64 (so the encoded
+    /// values are independent of the storage mode), then each worker
+    /// block is demoted once. Under [`Precision::F64`] this is exactly
+    /// `encode_data`; under [`Precision::F32`] each stored element
+    /// rounds to nearest f32 (see [`crate::linalg::precision`] for the
+    /// tolerance contract).
+    pub fn encode_data_prec(&self, x: &Mat, p: crate::linalg::Precision) -> Vec<PrecisionMat> {
+        self.encode_data(x).into_iter().map(|b| PrecisionMat::demote(b, p)).collect()
     }
 
     /// Apply to a vector: returns `S_i·y` per worker (one structured

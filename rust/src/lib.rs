@@ -100,6 +100,27 @@
 //! [`linalg::par::set_threads`], or the `CODED_OPT_THREADS` environment
 //! variable; it only trades wall-clock for cores.
 //!
+//! The same contract extends to SIMD ([`linalg::simd`]): on x86_64 with
+//! AVX2 the dense/CSR/FWHT inner loops run explicit `std::arch`
+//! kernels, but every kernel vectorizes across **independent outputs**
+//! — four output rows or four independent axpy/butterfly element
+//! positions per vector — and runs each output's accumulation chain in
+//! the exact scalar order (multiply then add, never FMA, never a
+//! horizontal reduction). SIMD results are therefore **bit-identical to
+//! scalar by construction**, and the `CODED_OPT_SIMD` environment
+//! variable (`0` = force scalar, `1`/unset = auto-detect) is a
+//! pure-speed knob that cannot move a golden trace; CI runs the kernel
+//! and golden suites under both settings to prove it.
+//!
+//! Orthogonally, worker shards can be stored at f32
+//! ([`linalg::Precision::F32`], via `Experiment::precision` or
+//! `coded-opt shard --dtype f32`): storage is f32 (half the bytes/
+//! bandwidth) while every accumulation stays f64 (widening is exact).
+//! Unlike the SIMD and thread knobs, f32 storage is **not** bit-pinned
+//! against f64 — the contract is a documented ≤1e-5 relative tolerance
+//! against the f64 referee (`rust/tests/kernel_equivalence.rs`), and
+//! golden traces are recorded under f64 only.
+//!
 //! ## Operator-first encoding: `SchemeSpec` → `EncodingOp`
 //!
 //! The paper's schemes are *operators*, not matrices (§4.2 "efficient
@@ -138,7 +159,9 @@
 //! `coded-opt/shard-v1` — global shape, targets flag, one entry per
 //! shard file with starting row, row count, and payload checksum) plus
 //! `shard-NNNNN.bin` files holding consecutive row blocks of `X` (and
-//! `y`) as little-endian f64. The [`data::shard::BlockSource`] trait is
+//! `y`) as little-endian f64 — or, with `--dtype f32`, `X` at f32
+//! (targets stay f64; readers widen transparently, manifest `dtype`
+//! records the width). The [`data::shard::BlockSource`] trait is
 //! the streaming contract: blocks arrive in ascending row order, are
 //! bounded by the shard size, and a source can be re-iterated.
 //!
@@ -225,6 +248,11 @@
 //! [`bench`] for the field reference). CI's `perf` job fails when any
 //! gated kernel's *speedup ratio* drops >25% below the checked-in
 //! `bench/baseline.json`; extend that schema, don't invent a new one.
+//! Reports carry a `features` field (detected CPU vector features +
+//! active SIMD/precision mode) and paired `simd_*` / `f32_*` entries
+//! timing the AVX2 kernels against forced-scalar and f32 storage
+//! against f64 in the same process. Refresh the baseline from the CI
+//! runner class via the `baseline-refresh` workflow_dispatch job.
 //!
 //! ## Determinism contract
 //!
@@ -246,8 +274,9 @@
 //! - **`ordered-iteration`** — no `HashMap`/`HashSet` in
 //!   trace-producing modules; hash-iteration order leaks into output.
 //!   Use `BTreeMap`/`BTreeSet` or a sorted collection.
-//! - **`safety-comment`** — `unsafe` only under `runtime/`, and always
-//!   with an adjacent `// SAFETY:` comment.
+//! - **`safety-comment`** — `unsafe` only under `runtime/` (the PJRT
+//!   FFI boundary) and in `linalg/simd.rs` (the `std::arch` kernels),
+//!   and always with an adjacent `// SAFETY:` comment.
 //! - **`no-silent-nan`** — no `NAN` literals or `.unwrap()` on partial
 //!   orders in library (non-test) code; NaN is sanitized at the delay
 //!   boundary, not smuggled through.

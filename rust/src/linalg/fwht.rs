@@ -7,18 +7,31 @@
 ///
 /// After the call, `x = H·x` where `H` is the ±1 Sylvester-Hadamard
 /// matrix of order `x.len()`.
+///
+/// Each layer's butterflies `(a, b) ← (a + b, a − b)` are elementwise
+/// over a block's two halves, so wide layers (`h ≥ 4`) run the AVX2
+/// lane kernel ([`crate::linalg::simd::butterfly`]) — per-pair
+/// operation order unchanged, so the transform is bit-identical with
+/// SIMD on or off.
 pub fn fwht(x: &mut [f64]) {
     let n = x.len();
     assert!(n.is_power_of_two(), "FWHT length must be a power of two, got {n}");
     let mut h = 1;
     while h < n {
         let step = h * 2;
-        for block in (0..n).step_by(step) {
-            for i in block..block + h {
-                let a = x[i];
-                let b = x[i + h];
-                x[i] = a + b;
-                x[i + h] = a - b;
+        if h >= 4 {
+            for block in (0..n).step_by(step) {
+                let (lo, hi) = x[block..block + step].split_at_mut(h);
+                crate::linalg::simd::butterfly(lo, hi);
+            }
+        } else {
+            for block in (0..n).step_by(step) {
+                for i in block..block + h {
+                    let a = x[i];
+                    let b = x[i + h];
+                    x[i] = a + b;
+                    x[i + h] = a - b;
+                }
             }
         }
         h = step;

@@ -6,11 +6,16 @@
 //! order* (ascending `k` / row index), so results are bit-identical to
 //! the single-threaded reference at any thread count — the chunking only
 //! partitions independent output elements, never a floating-point sum.
-//! The pre-existing naive kernels are preserved in [`reference`] as the
+//! The same rule governs the AVX2 paths ([`super::simd`]): `matvec` /
+//! `matvec_sub` process four rows per vector register (lane = row, each
+//! lane running the scalar ascending-`k` chain), while `matvec_t`,
+//! `gram`, and `matmul` vectorize their elementwise inner sweeps through
+//! [`super::axpy`] — so SIMD on/off is bit-identical too. The
+//! pre-existing naive kernels are preserved in [`reference`] as the
 //! equivalence referee and the denominator of the `coded-opt bench`
 //! speedup gate.
 
-use super::{axpy, dot, par};
+use super::{axpy, dot, par, simd};
 
 /// k-tile length for [`Mat::matmul`]: a `KB × cols` panel of the right
 /// operand stays cache-hot while it is reused across a chunk's rows.
@@ -138,8 +143,11 @@ impl Mat {
     /// y = A·x.
     ///
     /// Output rows are independent, so the kernel parallelizes over
-    /// fixed row chunks with each `y[i]` computed by the same `dot` as
-    /// the reference — bit-identical at any thread count.
+    /// fixed row chunks, and within a chunk processes rows four at a
+    /// time through [`simd::dot4`] (lane = row; each lane is the same
+    /// ascending-`k` `dot` chain as the reference, so the quad path is
+    /// bit-identical whether the SIMD dispatch lands on AVX2 or the
+    /// scalar fallback) — bit-identical at any thread count.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols, "matvec dim mismatch");
         let mut y = vec![0.0; self.rows];
@@ -147,7 +155,20 @@ impl Mat {
         let cols = self.cols;
         par::par_chunks_mut(&mut y, par::CHUNK, cols, |ci, yc| {
             let r0 = ci * par::CHUNK;
-            for (dy, i) in yc.iter_mut().zip(r0..) {
+            let mut q = 0;
+            while q + 4 <= yc.len() {
+                let base = (r0 + q) * cols;
+                let quad = simd::dot4(
+                    &data[base..base + cols],
+                    &data[base + cols..base + 2 * cols],
+                    &data[base + 2 * cols..base + 3 * cols],
+                    &data[base + 3 * cols..base + 4 * cols],
+                    x,
+                );
+                yc[q..q + 4].copy_from_slice(&quad);
+                q += 4;
+            }
+            for (dy, i) in yc[q..].iter_mut().zip(r0 + q..) {
                 *dy = dot(&data[i * cols..(i + 1) * cols], x);
             }
         });
@@ -155,8 +176,9 @@ impl Mat {
     }
 
     /// out = A·x − b, the fused residual kernel of the worker gradient
-    /// hot path. Same chunking and per-element order as
-    /// [`matvec`](Self::matvec).
+    /// hot path. Same chunking, quad-row SIMD grouping, and per-element
+    /// order as [`matvec`](Self::matvec); the `− b[i]` lands after each
+    /// row's dot exactly like the scalar sweep.
     pub fn matvec_sub(&self, x: &[f64], b: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.cols, "matvec_sub dim mismatch");
         assert_eq!(b.len(), self.rows, "matvec_sub rhs mismatch");
@@ -165,7 +187,23 @@ impl Mat {
         let cols = self.cols;
         par::par_chunks_mut(out, par::CHUNK, cols, |ci, oc| {
             let r0 = ci * par::CHUNK;
-            for (dy, i) in oc.iter_mut().zip(r0..) {
+            let mut q = 0;
+            while q + 4 <= oc.len() {
+                let i = r0 + q;
+                let base = i * cols;
+                let quad = simd::dot4(
+                    &data[base..base + cols],
+                    &data[base + cols..base + 2 * cols],
+                    &data[base + 2 * cols..base + 3 * cols],
+                    &data[base + 3 * cols..base + 4 * cols],
+                    x,
+                );
+                for l in 0..4 {
+                    oc[q + l] = quad[l] - b[i + l];
+                }
+                q += 4;
+            }
+            for (dy, i) in oc[q..].iter_mut().zip(r0 + q..) {
                 *dy = dot(&data[i * cols..(i + 1) * cols], x) - b[i];
             }
         });
@@ -177,7 +215,8 @@ impl Mat {
     /// its contributions in ascending row order — exactly the reference
     /// `axpy` sweep's per-element order — so the result is bit-identical
     /// to the sequential kernel at any thread count, and each pass
-    /// streams only its column stripe of A.
+    /// streams only its column stripe of A. The stripe update IS an
+    /// [`axpy`], which carries the SIMD lane path.
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
         let mut y = vec![0.0; self.cols];
@@ -187,9 +226,7 @@ impl Mat {
             let j0 = ci * par::CHUNK;
             for (i, &xi) in x.iter().enumerate() {
                 let stripe = &data[i * cols + j0..i * cols + j0 + yc.len()];
-                for (dy, &a) in yc.iter_mut().zip(stripe) {
-                    *dy += xi * a;
-                }
+                axpy(xi, stripe, yc);
             }
         });
         y
@@ -270,10 +307,10 @@ impl Mat {
                     if ri == 0.0 {
                         continue;
                     }
+                    // the suffix update is an axpy: G[i][i..] += ri·row[i..]
+                    // (same per-element order; carries the SIMD lane path)
                     let grow = &mut g.data[i * n..(i + 1) * n];
-                    for (dst, &rj) in grow[i..].iter_mut().zip(&row[i..]) {
-                        *dst += ri * rj;
-                    }
+                    axpy(ri, &row[i..], &mut grow[i..]);
                 }
             }
         } else {
@@ -288,9 +325,7 @@ impl Mat {
                         if ri == 0.0 {
                             continue;
                         }
-                        for (dst, &rj) in grow[i..].iter_mut().zip(&row[i..]) {
-                            *dst += ri * rj;
-                        }
+                        axpy(ri, &row[i..], &mut grow[i..]);
                     }
                 }
             });

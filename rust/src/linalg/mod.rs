@@ -2,21 +2,32 @@
 //!
 //! The entire optimizer stack (encoding, objectives, coordinator math,
 //! spectrum analysis for Figures 5–6) runs on these primitives. Built from
-//! scratch for the offline environment; `f64` everywhere on the rust side
-//! (the AOT JAX/Pallas artifacts compute in `f32` and are validated against
-//! these reference ops in integration tests).
+//! scratch for the offline environment; `f64` accumulation everywhere on
+//! the rust side (the AOT JAX/Pallas artifacts compute in `f32` and are
+//! validated against these reference ops in integration tests). Two
+//! orthogonal data-plane knobs sit below the kernels:
+//!
+//! - [`simd`] — runtime-dispatched AVX2 lane kernels
+//!   (`CODED_OPT_SIMD=0|1`), bit-identical to the scalar paths by
+//!   construction (lanes are independent outputs, never a reduction).
+//! - [`precision`] — optional f32 *storage* with f64 accumulation
+//!   ([`MatF32`] / [`PrecisionMat`], [`Precision::F32`]), halving shard
+//!   memory bandwidth at a documented ≤ 1e-5 tolerance vs f64.
 
 pub mod chol;
 pub mod eig;
 pub mod fwht;
 pub mod mat;
 pub mod par;
+pub mod precision;
+pub mod simd;
 pub mod sparse;
 
 pub use chol::{cholesky_factor, cholesky_solve};
 pub use eig::{symmetric_eigen, symmetric_eigenvalues};
 pub use fwht::{fwht, fwht_normalized};
 pub use mat::Mat;
+pub use precision::{MatF32, Precision, PrecisionMat};
 pub use sparse::Csr;
 
 /// Dot product.
@@ -44,12 +55,16 @@ pub fn norm2(x: &[f64]) -> f64 {
 }
 
 /// y ← y + αx.
+///
+/// Routed through [`simd::axpy`]: the AVX2 lane kernel when the SIMD
+/// path is active, the scalar sweep otherwise — bit-identical either
+/// way (lane = element; per-element op order is the scalar sweep's).
+/// `matvec_t` stripes, the `gram` row update, and `matmul`'s k-panels
+/// all inherit the SIMD path through this one entry point.
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy(alpha, x, y);
 }
 
 /// Elementwise x ← αx.

@@ -1,0 +1,379 @@
+//! Mixed-precision storage: f32 shards, f64 accumulation.
+//!
+//! The paper's encoded workers are memory-bandwidth-bound at the shipped
+//! shard shapes — every gradient round streams the whole `S·X` block.
+//! Storing the block in `f32` halves the streamed bytes while every
+//! arithmetic accumulation stays in `f64`: each stored element is
+//! widened *exactly* (`f64::from(f32)` is lossless) before the same
+//! ascending mul/add chain the f64 kernels use.
+//!
+//! # Tolerance contract
+//!
+//! `f32` storage is **not** bit-pinned. The determinism contract splits:
+//!
+//! - For a *fixed* precision mode, results remain bit-identical at any
+//!   thread count and with SIMD on or off (the lane kernels in
+//!   [`super::simd`] replay the scalar widening chain per output).
+//! - Across *modes* (`F32` vs `F64`), the one-time demotion rounds each
+//!   stored element to the nearest `f32`, so results differ by the input
+//!   rounding only: `rust/tests/kernel_equivalence.rs` pins the f32 path
+//!   within `1e-5` relative error of the f64 referee on unit-scale data.
+//!
+//! Golden traces are recorded under [`Precision::F64`] (the default);
+//! `F32` runs are perf/memory experiments, not trace-conformant runs.
+
+use super::{par, simd, Mat};
+
+/// Data-plane storage precision for worker shards.
+///
+/// `F64` is the default and the only mode the golden-trace suite
+/// records. `F32` stores shard payloads in single precision (half the
+/// memory traffic) while accumulating in `f64`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Full double-precision storage (bit-determinism contract applies).
+    F64,
+    /// Single-precision storage, double-precision accumulation
+    /// (≤ 1e-5 relative tolerance vs the f64 referee; not bit-pinned).
+    F32,
+}
+
+impl Precision {
+    /// Parse a CLI / config spelling. Accepts `f64` / `f32`
+    /// (case-insensitive).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f64" => Some(Precision::F64),
+            "f32" => Some(Precision::F32),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (`"f64"` / `"f32"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+/// Scalar f32-storage dot with f64 accumulation: the canonical widening
+/// sweep every SIMD f32 lane replays (`acc += widen(a[k])·x[k]`,
+/// ascending `k`, one rounding per op).
+#[inline]
+pub(crate) fn dot_widen(a: &[f32], x: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), x.len());
+    let mut acc = 0.0;
+    for (&ai, xi) in a.iter().zip(x) {
+        acc += f64::from(ai) * xi;
+    }
+    acc
+}
+
+/// Dense row-major matrix with `f32` storage and `f64` kernel
+/// accumulation. Mirrors the [`Mat`] hot-path kernels (`matvec` /
+/// `matvec_sub` / `matvec_t`) with the same chunking, quad-row SIMD
+/// grouping, and per-element accumulation order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// Demote an f64 matrix: each element rounds to nearest `f32` once.
+    pub fn from_mat(m: &Mat) -> Self {
+        MatF32 {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.as_slice().iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Wrap an existing row-major `f32` buffer (shard read path).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        MatF32 { rows, cols, data }
+    }
+
+    /// Widen back to an f64 [`Mat`] (exact).
+    pub fn to_mat(&self) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|&v| f64::from(v)).collect())
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Raw row-major buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Storage footprint in bytes — half of the equivalent [`Mat`].
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// y = A·x with f64 accumulation. Same row-chunk parallelism and
+    /// quad-row SIMD grouping as [`Mat::matvec`]; bit-identical at any
+    /// thread count and across the SIMD toggle *for this storage mode*.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dim mismatch");
+        let mut y = vec![0.0; self.rows];
+        let data = &self.data;
+        let cols = self.cols;
+        par::par_chunks_mut(&mut y, par::CHUNK, cols, |ci, yc| {
+            let r0 = ci * par::CHUNK;
+            let mut q = 0;
+            while q + 4 <= yc.len() {
+                let base = (r0 + q) * cols;
+                let quad = simd::dot4_f32(
+                    &data[base..base + cols],
+                    &data[base + cols..base + 2 * cols],
+                    &data[base + 2 * cols..base + 3 * cols],
+                    &data[base + 3 * cols..base + 4 * cols],
+                    x,
+                );
+                yc[q..q + 4].copy_from_slice(&quad);
+                q += 4;
+            }
+            for (dy, i) in yc[q..].iter_mut().zip(r0 + q..) {
+                *dy = dot_widen(&data[i * cols..(i + 1) * cols], x);
+            }
+        });
+        y
+    }
+
+    /// out = A·x − b, the fused residual kernel (f32-storage twin of
+    /// [`Mat::matvec_sub`]): the `− b[i]` lands after each row's dot.
+    pub fn matvec_sub(&self, x: &[f64], b: &[f64], out: &mut [f64]) {
+        assert_eq!(x.len(), self.cols, "matvec_sub dim mismatch");
+        assert_eq!(b.len(), self.rows, "matvec_sub rhs mismatch");
+        assert_eq!(out.len(), self.rows, "matvec_sub out mismatch");
+        let data = &self.data;
+        let cols = self.cols;
+        par::par_chunks_mut(out, par::CHUNK, cols, |ci, oc| {
+            let r0 = ci * par::CHUNK;
+            let mut q = 0;
+            while q + 4 <= oc.len() {
+                let i = r0 + q;
+                let base = i * cols;
+                let quad = simd::dot4_f32(
+                    &data[base..base + cols],
+                    &data[base + cols..base + 2 * cols],
+                    &data[base + 2 * cols..base + 3 * cols],
+                    &data[base + 3 * cols..base + 4 * cols],
+                    x,
+                );
+                for l in 0..4 {
+                    oc[q + l] = quad[l] - b[i + l];
+                }
+                q += 4;
+            }
+            for (dy, i) in oc[q..].iter_mut().zip(r0 + q..) {
+                *dy = dot_widen(&data[i * cols..(i + 1) * cols], x) - b[i];
+            }
+        });
+    }
+
+    /// y = Aᵀ·x with f64 accumulation. Column-stripe chunks exactly as
+    /// [`Mat::matvec_t`]; the stripe update is a widening axpy
+    /// ([`simd::axpy_widen`]), ascending row order per output element.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t dim mismatch");
+        let mut y = vec![0.0; self.cols];
+        let data = &self.data;
+        let cols = self.cols;
+        par::par_chunks_mut(&mut y, par::CHUNK, self.rows, |ci, yc| {
+            let j0 = ci * par::CHUNK;
+            for (i, &xi) in x.iter().enumerate() {
+                let stripe = &data[i * cols + j0..i * cols + j0 + yc.len()];
+                simd::axpy_widen(xi, stripe, yc);
+            }
+        });
+        y
+    }
+}
+
+/// A worker shard matrix in either storage precision, presenting the
+/// hot-path kernel surface (`matvec` / `matvec_sub` / `matvec_t`)
+/// uniformly so the coordinator never branches per call.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PrecisionMat {
+    F64(Mat),
+    F32(MatF32),
+}
+
+impl PrecisionMat {
+    /// Store `m` at the requested precision (one demotion pass for
+    /// `F32`, a move for `F64`).
+    pub fn demote(m: Mat, p: Precision) -> Self {
+        match p {
+            Precision::F64 => PrecisionMat::F64(m),
+            Precision::F32 => PrecisionMat::F32(MatF32::from_mat(&m)),
+        }
+    }
+
+    /// The storage precision of this shard.
+    pub fn precision(&self) -> Precision {
+        match self {
+            PrecisionMat::F64(_) => Precision::F64,
+            PrecisionMat::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Borrow the f64 matrix, if this shard is stored in f64 (the
+    /// PJRT executor path needs the raw f64 buffer).
+    pub fn as_f64(&self) -> Option<&Mat> {
+        match self {
+            PrecisionMat::F64(m) => Some(m),
+            PrecisionMat::F32(_) => None,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            PrecisionMat::F64(m) => m.rows(),
+            PrecisionMat::F32(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            PrecisionMat::F64(m) => m.cols(),
+            PrecisionMat::F32(m) => m.cols(),
+        }
+    }
+
+    /// Storage footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            PrecisionMat::F64(m) => m.as_slice().len() * std::mem::size_of::<f64>(),
+            PrecisionMat::F32(m) => m.bytes(),
+        }
+    }
+
+    /// y = A·x.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            PrecisionMat::F64(m) => m.matvec(x),
+            PrecisionMat::F32(m) => m.matvec(x),
+        }
+    }
+
+    /// out = A·x − b.
+    pub fn matvec_sub(&self, x: &[f64], b: &[f64], out: &mut [f64]) {
+        match self {
+            PrecisionMat::F64(m) => m.matvec_sub(x, b, out),
+            PrecisionMat::F32(m) => m.matvec_sub(x, b, out),
+        }
+    }
+
+    /// y = Aᵀ·x.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        match self {
+            PrecisionMat::F64(m) => m.matvec_t(x),
+            PrecisionMat::F32(m) => m.matvec_t(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randm(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.next_f64() - 0.5)
+    }
+
+    fn randv(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = crate::rng::Pcg64::new(seed);
+        (0..n).map(|_| rng.next_f64() - 0.5).collect()
+    }
+
+    #[test]
+    fn parse_and_name_roundtrip() {
+        assert_eq!(Precision::parse("f64"), Some(Precision::F64));
+        assert_eq!(Precision::parse("F32"), Some(Precision::F32));
+        assert_eq!(Precision::parse(" f32 "), Some(Precision::F32));
+        assert_eq!(Precision::parse("f16"), None);
+        assert_eq!(Precision::F32.name(), "f32");
+        assert_eq!(Precision::parse(Precision::F64.name()), Some(Precision::F64));
+    }
+
+    #[test]
+    fn widening_roundtrip_is_exact() {
+        // f64::from(v as f32) is the identity on values that fit f32
+        // exactly; to_mat()/from_mat over such values round-trips.
+        let m = Mat::from_fn(7, 5, |i, j| (i as f64) * 0.5 - (j as f64) * 0.25);
+        let f = MatF32::from_mat(&m);
+        assert_eq!(f.to_mat(), m);
+        assert_eq!(f.bytes() * 2, m.as_slice().len() * std::mem::size_of::<f64>());
+    }
+
+    #[test]
+    fn f32_kernels_within_tolerance_of_f64() {
+        // Sizes past one quad and with remainder rows/cols.
+        let m = randm(70, 33, 11);
+        let f = MatF32::from_mat(&m);
+        let x = randv(33, 12);
+        let xt = randv(70, 13);
+        let b = randv(70, 14);
+
+        let tol = |got: &[f64], want: &[f64]| {
+            for (g, w) in got.iter().zip(want) {
+                assert!((g - w).abs() <= 1e-5 * w.abs().max(1.0), "got {g}, want {w}");
+            }
+        };
+        tol(&f.matvec(&x), &m.matvec(&x));
+        tol(&f.matvec_t(&xt), &m.matvec_t(&xt));
+        let mut got = vec![0.0; 70];
+        let mut want = vec![0.0; 70];
+        f.matvec_sub(&x, &b, &mut got);
+        m.matvec_sub(&x, &b, &mut want);
+        tol(&got, &want);
+    }
+
+    #[test]
+    fn f32_matvec_matches_widened_mat_exactly() {
+        // The f32 kernels accumulate in f64, so they agree bit-for-bit
+        // with the f64 kernels applied to the widened copy.
+        let m = randm(41, 19, 21);
+        let f = MatF32::from_mat(&m);
+        let wide = f.to_mat();
+        let x = randv(19, 22);
+        assert_eq!(f.matvec(&x), wide.matvec(&x));
+        let xt = randv(41, 23);
+        assert_eq!(f.matvec_t(&xt), wide.matvec_t(&xt));
+    }
+
+    #[test]
+    fn precision_mat_dispatches() {
+        let m = randm(10, 6, 31);
+        let x = randv(6, 32);
+        let p64 = PrecisionMat::demote(m.clone(), Precision::F64);
+        let p32 = PrecisionMat::demote(m.clone(), Precision::F32);
+        assert_eq!(p64.precision(), Precision::F64);
+        assert_eq!(p32.precision(), Precision::F32);
+        assert_eq!(p64.matvec(&x), m.matvec(&x));
+        assert!(p64.as_f64().is_some());
+        assert!(p32.as_f64().is_none());
+        assert_eq!(p64.rows(), 10);
+        assert_eq!(p32.cols(), 6);
+        assert_eq!(p32.bytes() * 2, p64.bytes());
+    }
+}

@@ -1,0 +1,531 @@
+//! Runtime-dispatched AVX2 SIMD kernels for the data-plane hot paths.
+//!
+//! # Determinism contract (why SIMD cannot move a golden trace)
+//!
+//! Every kernel in this module vectorizes across **independent output
+//! elements** — four matvec rows side by side (lane = row), four axpy /
+//! butterfly elements side by side (lane = element) — and **never
+//! across a reduction axis**. Each lane runs the exact scalar
+//! accumulation: ascending-`k` sweep, separate multiply and add
+//! instructions (`_mm256_mul_pd` + `_mm256_add_pd`, never FMA — fused
+//! single rounding would change bits), no horizontal add anywhere. A
+//! lane's float operation sequence is therefore *identical* to the
+//! scalar kernel's for that output element, so the SIMD path is
+//! bit-identical to the scalar path on every input, at every size, at
+//! any thread count — flipping `CODED_OPT_SIMD` cannot move a golden
+//! trace, and `rust/tests/kernel_equivalence.rs` pins exactly that.
+//!
+//! # Dispatch
+//!
+//! Resolved once per process and cached: `CODED_OPT_SIMD=0` forces the
+//! scalar path, `CODED_OPT_SIMD=1` (or unset) uses AVX2 when the CPU
+//! reports it at runtime (`is_x86_64_feature_detected!`); non-x86_64
+//! targets always take the scalar path. Tests and the bench harness
+//! override in-process with [`set_forced`]. The f32-storage variants
+//! ([`dot4_f32`], [`axpy_widen`]) widen each stored `f32` to `f64`
+//! exactly (`vcvtps2pd` — lossless) before the same mul/add sequence,
+//! so they too are bit-identical to their scalar twins in
+//! [`super::precision`].
+//!
+//! `unsafe` here is confined to `#[target_feature(enable = "avx2")]`
+//! functions and their guarded call sites; the `safety-comment` lint
+//! rule allowlists exactly this file (outside `runtime/`) and requires
+//! every block to name its CPU-feature guard.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+const UNRESOLVED: u8 = 0;
+const OFF: u8 = 1;
+const ON: u8 = 2;
+
+/// Cached dispatch state. Relaxed ordering suffices: the resolved value
+/// is a pure function of the environment + CPU, so racing resolvers
+/// store the same byte.
+static STATE: AtomicU8 = AtomicU8::new(UNRESOLVED);
+
+/// Does this CPU support the AVX2 path at all?
+pub fn detected() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_64_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Is the SIMD path active for this process?
+///
+/// First call resolves `CODED_OPT_SIMD` (`0` = force scalar, `1` = SIMD
+/// where supported; unset = auto-detect) and caches the answer.
+#[inline]
+pub fn active() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        ON => true,
+        OFF => false,
+        _ => {
+            let on = resolve();
+            STATE.store(if on { ON } else { OFF }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+fn resolve() -> bool {
+    match std::env::var("CODED_OPT_SIMD") {
+        Ok(v) if v.trim() == "0" => false,
+        _ => detected(),
+    }
+}
+
+/// In-process override mirroring [`super::par::set_threads`]:
+/// `Some(true)` forces SIMD on (still requires hardware support — on a
+/// non-AVX2 CPU the scalar path is kept, which is bit-identical
+/// anyway), `Some(false)` forces scalar, `None` re-resolves from the
+/// environment on next use. Used by the equivalence tests and the
+/// SIMD-vs-scalar bench pairs.
+pub fn set_forced(on: Option<bool>) {
+    let s = match on {
+        Some(true) => {
+            if detected() {
+                ON
+            } else {
+                OFF
+            }
+        }
+        Some(false) => OFF,
+        None => UNRESOLVED,
+    };
+    STATE.store(s, Ordering::Relaxed);
+}
+
+/// Comma-separated list of the detected CPU vector features relevant to
+/// this module — recorded in the bench report (`features` field) so
+/// cross-runner baseline diffs are explainable.
+pub fn cpu_features() -> String {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let probes = [
+            ("sse2", std::arch::is_x86_64_feature_detected!("sse2")),
+            ("sse4.2", std::arch::is_x86_64_feature_detected!("sse4.2")),
+            ("avx", std::arch::is_x86_64_feature_detected!("avx")),
+            ("avx2", std::arch::is_x86_64_feature_detected!("avx2")),
+            ("fma", std::arch::is_x86_64_feature_detected!("fma")),
+            ("avx512f", std::arch::is_x86_64_feature_detected!("avx512f")),
+        ];
+        let hits: Vec<&str> =
+            probes.iter().filter(|(_, have)| *have).map(|(name, _)| *name).collect();
+        hits.join(",")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        String::new()
+    }
+}
+
+/// Four dot products at once: `[a0·x, a1·x, a2·x, a3·x]`, lane = row.
+///
+/// Each lane accumulates `acc += a[k]·x[k]` in ascending `k` from a
+/// zero start — the exact [`super::dot`] sequence — so the result is
+/// bit-identical to four scalar `dot` calls. This breaks the serial
+/// add-latency chain that bounds a single scalar dot (~4 cycles per
+/// element) by running four independent chains in one vector register.
+#[inline]
+pub fn dot4(a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64], x: &[f64]) -> [f64; 4] {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` is true only when AVX2 was detected on
+        // this CPU (both the env resolution and `set_forced(Some(true))`
+        // re-check `detected()`), satisfying `dot4_avx2`'s guard.
+        return unsafe { dot4_avx2(a0, a1, a2, a3, x) };
+    }
+    [super::dot(a0, x), super::dot(a1, x), super::dot(a2, x), super::dot(a3, x)]
+}
+
+/// [`dot4`] over f32 row storage with f64 accumulation: each element is
+/// widened exactly before the same mul/add sequence — bit-identical to
+/// the scalar widening sweep in [`super::precision`].
+#[inline]
+pub fn dot4_f32(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], x: &[f64]) -> [f64; 4] {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` implies AVX2 was detected at runtime,
+        // satisfying `dot4_f32_avx2`'s target-feature guard.
+        return unsafe { dot4_f32_avx2(a0, a1, a2, a3, x) };
+    }
+    [
+        super::precision::dot_widen(a0, x),
+        super::precision::dot_widen(a1, x),
+        super::precision::dot_widen(a2, x),
+        super::precision::dot_widen(a3, x),
+    ]
+}
+
+/// y ← y + αx. Lane = element; per-element operation order is exactly
+/// the scalar sweep's (`y[j] + α·x[j]`, one rounding per op), so the
+/// vector path is bit-identical. [`super::axpy`] routes here; the
+/// matvec_t stripe sweep, the gram row update, and matmul's k-panels
+/// all inherit the SIMD path through it.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if y.len() >= 4 && active() {
+        // SAFETY: `active()` implies AVX2 was detected at runtime,
+        // satisfying `axpy_avx2`'s target-feature guard.
+        unsafe { axpy_avx2(alpha, x, y) };
+        return;
+    }
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y ← y + α·widen(x) over f32 storage: the f32 matvec_t stripe kernel.
+/// Widening is exact, mul/add separate — bit-identical to the scalar
+/// widening sweep.
+#[inline]
+pub fn axpy_widen(alpha: f64, x: &[f32], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if y.len() >= 4 && active() {
+        // SAFETY: `active()` implies AVX2 was detected at runtime,
+        // satisfying `axpy_widen_avx2`'s target-feature guard.
+        unsafe { axpy_widen_avx2(alpha, x, y) };
+        return;
+    }
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * f64::from(xi);
+    }
+}
+
+/// One FWHT butterfly layer half: `(a, b) ← (a + b, a − b)` elementwise
+/// over two equal-length halves of a block. Lane = element; per-pair
+/// operation order is the scalar butterfly's, so the result is
+/// bit-identical. [`crate::linalg::fwht::fwht`] calls this per block.
+#[inline]
+pub fn butterfly(a: &mut [f64], b: &mut [f64]) {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    if a.len() >= 4 && active() {
+        // SAFETY: `active()` implies AVX2 was detected at runtime,
+        // satisfying `butterfly_avx2`'s target-feature guard.
+        unsafe { butterfly_avx2(a, b) };
+        return;
+    }
+    for (ai, bi) in a.iter_mut().zip(b.iter_mut()) {
+        let s = *ai + *bi;
+        let d = *ai - *bi;
+        *ai = s;
+        *bi = d;
+    }
+}
+
+/// Four CSR row products at once: lane `l` accumulates
+/// `acc += v[l][k]·x[ix[l][k]]` in ascending `k` — the sequential CSR
+/// row sweep — lockstep over the rows' common-length prefix, then
+/// scalar per-lane tails that *continue* each lane's chain. Every
+/// lane's operation sequence is exactly the scalar row sweep's, so the
+/// result is bit-identical to four scalar rows.
+#[inline]
+pub fn csr_dot4(v: [&[f64]; 4], ix: [&[usize]; 4], x: &[f64]) -> [f64; 4] {
+    #[cfg(target_arch = "x86_64")]
+    if active() {
+        // SAFETY: `active()` implies AVX2 was detected at runtime,
+        // satisfying `csr_dot4_avx2`'s target-feature guard.
+        return unsafe { csr_dot4_avx2(v, ix, x) };
+    }
+    let mut out = [0.0f64; 4];
+    for l in 0..4 {
+        let mut acc = 0.0;
+        for (val, &c) in v[l].iter().zip(ix[l]) {
+            acc += val * x[c];
+        }
+        out[l] = acc;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// AVX2 bodies. Callers must hold the guard stated on each function; the
+// safe wrappers above establish it via `active()`.
+// ---------------------------------------------------------------------
+
+// SAFETY: caller must ensure the CPU supports AVX2 (checked by the safe
+// wrapper via `active()`); all memory access below is bounds-asserted.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_avx2(a0: &[f64], a1: &[f64], a2: &[f64], a3: &[f64], x: &[f64]) -> [f64; 4] {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    assert!(a0.len() == n && a1.len() == n && a2.len() == n && a3.len() == n);
+    let (p0, p1, p2, p3, px) = (a0.as_ptr(), a1.as_ptr(), a2.as_ptr(), a3.as_ptr(), x.as_ptr());
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..n {
+        // SAFETY: k < n and every slice has length n (asserted above),
+        // so each `add(k)` read is in bounds.
+        let rows = unsafe { _mm256_set_pd(*p3.add(k), *p2.add(k), *p1.add(k), *p0.add(k)) };
+        // SAFETY: k < n = x.len().
+        let xk = unsafe { _mm256_set1_pd(*px.add(k)) };
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(rows, xk));
+    }
+    let mut out = [0.0f64; 4];
+    // SAFETY: `out` holds exactly four f64s — one full 256-bit store.
+    unsafe { _mm256_storeu_pd(out.as_mut_ptr(), acc) };
+    out
+}
+
+// SAFETY: caller must ensure the CPU supports AVX2 (checked by the safe
+// wrapper via `active()`); all memory access below is bounds-asserted.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot4_f32_avx2(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], x: &[f64]) -> [f64; 4] {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    assert!(a0.len() == n && a1.len() == n && a2.len() == n && a3.len() == n);
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..n {
+        // Exact f32→f64 widening per lane, then the scalar mul/add.
+        let rows = _mm256_set_pd(
+            f64::from(a3[k]),
+            f64::from(a2[k]),
+            f64::from(a1[k]),
+            f64::from(a0[k]),
+        );
+        let xk = _mm256_set1_pd(x[k]);
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(rows, xk));
+    }
+    let mut out = [0.0f64; 4];
+    // SAFETY: `out` holds exactly four f64s — one full 256-bit store.
+    unsafe { _mm256_storeu_pd(out.as_mut_ptr(), acc) };
+    out
+}
+
+// SAFETY: caller must ensure the CPU supports AVX2 (checked by the safe
+// wrapper via `active()`); all memory access below is bounds-asserted.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = y.len();
+    assert!(x.len() == n);
+    let va = _mm256_set1_pd(alpha);
+    let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+    let mut k = 0;
+    while k + 4 <= n {
+        // SAFETY: k + 4 ≤ n, so the 4-wide load/store stays in bounds
+        // of both length-n slices.
+        unsafe {
+            let vx = _mm256_loadu_pd(px.add(k));
+            let vy = _mm256_loadu_pd(py.add(k));
+            _mm256_storeu_pd(py.add(k), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+        }
+        k += 4;
+    }
+    while k < n {
+        y[k] += alpha * x[k];
+        k += 1;
+    }
+}
+
+// SAFETY: caller must ensure the CPU supports AVX2 (checked by the safe
+// wrapper via `active()`); all memory access below is bounds-asserted.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_widen_avx2(alpha: f64, x: &[f32], y: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = y.len();
+    assert!(x.len() == n);
+    let va = _mm256_set1_pd(alpha);
+    let (px, py) = (x.as_ptr(), y.as_mut_ptr());
+    let mut k = 0;
+    while k + 4 <= n {
+        // SAFETY: k + 4 ≤ n: the 128-bit f32 load reads x[k..k+4], the
+        // 256-bit f64 load/store covers y[k..k+4] — both in bounds.
+        unsafe {
+            let vx = _mm256_cvtps_pd(_mm_loadu_ps(px.add(k)));
+            let vy = _mm256_loadu_pd(py.add(k));
+            _mm256_storeu_pd(py.add(k), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+        }
+        k += 4;
+    }
+    while k < n {
+        y[k] += alpha * f64::from(x[k]);
+        k += 1;
+    }
+}
+
+// SAFETY: caller must ensure the CPU supports AVX2 (checked by the safe
+// wrapper via `active()`); all memory access below is bounds-asserted.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn butterfly_avx2(a: &mut [f64], b: &mut [f64]) {
+    use std::arch::x86_64::*;
+    let n = a.len();
+    assert!(b.len() == n);
+    let (pa, pb) = (a.as_mut_ptr(), b.as_mut_ptr());
+    let mut k = 0;
+    while k + 4 <= n {
+        // SAFETY: k + 4 ≤ n, so each 4-wide load/store stays in bounds
+        // of both length-n halves (disjoint slices by construction).
+        unsafe {
+            let va = _mm256_loadu_pd(pa.add(k));
+            let vb = _mm256_loadu_pd(pb.add(k));
+            _mm256_storeu_pd(pa.add(k), _mm256_add_pd(va, vb));
+            _mm256_storeu_pd(pb.add(k), _mm256_sub_pd(va, vb));
+        }
+        k += 4;
+    }
+    while k < n {
+        let s = a[k] + b[k];
+        let d = a[k] - b[k];
+        a[k] = s;
+        b[k] = d;
+        k += 1;
+    }
+}
+
+// SAFETY: caller must ensure the CPU supports AVX2 (checked by the safe
+// wrapper via `active()`); memory access uses bounds-checked indexing.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn csr_dot4_avx2(v: [&[f64]; 4], ix: [&[usize]; 4], x: &[f64]) -> [f64; 4] {
+    use std::arch::x86_64::*;
+    for l in 0..4 {
+        assert_eq!(v[l].len(), ix[l].len());
+    }
+    let common =
+        v[0].len().min(v[1].len()).min(v[2].len()).min(v[3].len());
+    let mut acc = _mm256_setzero_pd();
+    for k in 0..common {
+        // Bounds-checked gathers: CSR guarantees indices < cols, and a
+        // violation should panic exactly like the scalar path.
+        let vals = _mm256_set_pd(v[3][k], v[2][k], v[1][k], v[0][k]);
+        let xs = _mm256_set_pd(x[ix[3][k]], x[ix[2][k]], x[ix[1][k]], x[ix[0][k]]);
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(vals, xs));
+    }
+    let mut out = [0.0f64; 4];
+    // SAFETY: `out` holds exactly four f64s — one full 256-bit store.
+    unsafe { _mm256_storeu_pd(out.as_mut_ptr(), acc) };
+    // Scalar tails continue each lane's ascending chain past the
+    // common prefix — same order the sequential row sweep would use.
+    for l in 0..4 {
+        let mut a = out[l];
+        for k in common..v[l].len() {
+            a += v[l][k] * x[ix[l][k]];
+        }
+        out[l] = a;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Serializes tests that flip the process-wide dispatch knob.
+    static KNOB: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    fn randv(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Pcg64::new(seed);
+        (0..n).map(|_| rng.next_f64() - 0.5).collect()
+    }
+
+    /// Run `f` with SIMD forced on and off, returning (on, off).
+    fn both<T>(mut f: impl FnMut() -> T) -> (T, T) {
+        let _g = KNOB.lock().unwrap();
+        set_forced(Some(true));
+        let on = f();
+        set_forced(Some(false));
+        let off = f();
+        set_forced(None);
+        (on, off)
+    }
+
+    #[test]
+    fn dot4_bit_equal_across_toggle_and_vs_dot() {
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 13, 64, 65, 127] {
+            let a: Vec<Vec<f64>> = (0..4).map(|i| randv(n, 10 + i)).collect();
+            let x = randv(n, 99);
+            let (on, off) = both(|| dot4(&a[0], &a[1], &a[2], &a[3], &x));
+            assert_eq!(on, off, "n={n}");
+            for l in 0..4 {
+                assert_eq!(on[l], crate::linalg::dot(&a[l], &x), "n={n} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_bit_equal_across_toggle() {
+        for n in [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 31, 64, 130] {
+            let x = randv(n, 3);
+            let y0 = randv(n, 4);
+            let (on, off) = both(|| {
+                let mut y = y0.clone();
+                axpy(0.37, &x, &mut y);
+                y
+            });
+            assert_eq!(on, off, "n={n}");
+        }
+    }
+
+    #[test]
+    fn butterfly_bit_equal_across_toggle() {
+        for n in [1usize, 2, 3, 4, 5, 7, 8, 16, 33] {
+            let a0 = randv(n, 5);
+            let b0 = randv(n, 6);
+            let (on, off) = both(|| {
+                let (mut a, mut b) = (a0.clone(), b0.clone());
+                butterfly(&mut a, &mut b);
+                (a, b)
+            });
+            assert_eq!(on, off, "n={n}");
+        }
+    }
+
+    #[test]
+    fn csr_dot4_handles_ragged_rows() {
+        // Rows of different lengths exercise the common-prefix + tail
+        // split on the AVX2 path.
+        let lens = [0usize, 3, 7, 5];
+        let x = randv(40, 8);
+        let rows: Vec<(Vec<f64>, Vec<usize>)> = lens
+            .iter()
+            .enumerate()
+            .map(|(l, &len)| {
+                let vals = randv(len, 20 + l as u64);
+                let idxs: Vec<usize> = (0..len).map(|k| (k * 7 + l) % 40).collect();
+                (vals, idxs)
+            })
+            .collect();
+        let (on, off) = both(|| {
+            csr_dot4(
+                [&rows[0].0, &rows[1].0, &rows[2].0, &rows[3].0],
+                [&rows[0].1, &rows[1].1, &rows[2].1, &rows[3].1],
+                &x,
+            )
+        });
+        assert_eq!(on, off);
+        for l in 0..4 {
+            let want: f64 =
+                rows[l].0.iter().zip(&rows[l].1).fold(0.0, |acc, (v, &c)| acc + v * x[c]);
+            assert_eq!(off[l], want, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn forced_on_requires_detection() {
+        let _g = KNOB.lock().unwrap();
+        set_forced(Some(true));
+        assert_eq!(active(), detected());
+        set_forced(None);
+    }
+
+    #[test]
+    fn cpu_features_lists_avx2_when_detected() {
+        let feats = cpu_features();
+        assert_eq!(feats.contains("avx2"), detected(), "{feats}");
+    }
+}

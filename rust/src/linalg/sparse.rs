@@ -98,15 +98,34 @@ impl Csr {
     /// Output rows are independent, so the kernel parallelizes over
     /// fixed row chunks (each `y[i]` accumulated in the same ascending
     /// non-zero order as the sequential sweep — bit-identical at any
-    /// thread count). The inline/parallel decision keys on the average
-    /// row fill, never on the thread count.
+    /// thread count), and within a chunk runs four row products per
+    /// vector register through [`par`]-independent
+    /// [`crate::linalg::simd::csr_dot4`] lanes (each lane keeps its
+    /// row's ascending order, so SIMD on/off is bit-identical too).
+    /// The inline/parallel decision keys on the average row fill, never
+    /// on the thread count.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols, "csr matvec dim mismatch");
         let mut y = vec![0.0; self.rows];
         let fill = self.nnz() / self.rows.max(1);
+        let row = |i: usize| {
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            (&self.values[lo..hi], &self.indices[lo..hi])
+        };
         par::par_chunks_mut(&mut y, par::CHUNK, fill, |ci, yc| {
             let r0 = ci * par::CHUNK;
-            for (dy, i) in yc.iter_mut().zip(r0..) {
+            let mut q = 0;
+            while q + 4 <= yc.len() {
+                let i = r0 + q;
+                let (v0, c0) = row(i);
+                let (v1, c1) = row(i + 1);
+                let (v2, c2) = row(i + 2);
+                let (v3, c3) = row(i + 3);
+                let quad = crate::linalg::simd::csr_dot4([v0, v1, v2, v3], [c0, c1, c2, c3], x);
+                yc[q..q + 4].copy_from_slice(&quad);
+                q += 4;
+            }
+            for (dy, i) in yc[q..].iter_mut().zip(r0 + q..) {
                 let mut acc = 0.0;
                 for idx in self.indptr[i]..self.indptr[i + 1] {
                     acc += self.values[idx] * x[self.indices[idx]];

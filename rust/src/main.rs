@@ -18,7 +18,11 @@
 //!   `coded-opt/bench-v1` JSON report, and optionally gate on a
 //!   checked-in baseline: only *speedup ratios* are compared (fast vs
 //!   reference timed in the same process), because absolute seconds are
-//!   machine-dependent.
+//!   machine-dependent. The report's `features` field records the
+//!   detected CPU vector features plus the active SIMD / precision
+//!   configuration; `simd_*` pairs time the AVX2 kernels against the
+//!   forced-scalar path in the same process, `f32_*` pairs time
+//!   f32-storage kernels against f64.
 //! - `scenario [--schemes hadamard,uncoded --algorithms gd,lbfgs|all
 //!   --scenarios crash-rejoin,rack-correlated | --scenario-file sc.toml]
 //!   [--n N --p P --workers M --k K --beta B --iters T --seed S
@@ -27,10 +31,13 @@
 //!   (`--out` also writes per-cell trace CSVs and canonical bit-exact
 //!   traces).
 //! - `shard --out DIR [--dataset gaussian|sparse --n N --p P --sigma S
-//!   --seed S --shard-rows R --nnz K]` — generate a synthetic dataset
-//!   straight into the out-of-core shard format (`manifest.json` +
-//!   `shard-*.bin`, schema `coded-opt/shard-v1`). The gaussian ensemble
-//!   streams shard-by-shard and never materializes the full matrix.
+//!   --seed S --shard-rows R --nnz K --dtype f64|f32]` — generate a
+//!   synthetic dataset straight into the out-of-core shard format
+//!   (`manifest.json` + `shard-*.bin`, schema `coded-opt/shard-v1`).
+//!   The gaussian ensemble streams shard-by-shard and never
+//!   materializes the full matrix. `--dtype f32` stores the design
+//!   matrix at half width (targets stay f64); readers transparently
+//!   widen back to f64.
 //! - `encode --source DIR --out DIR [--scheme S --workers M --beta B
 //!   --seed S]` — apply an encoding scheme to a sharded dataset
 //!   block-by-block (FWHT / CSR fast paths included) and write the
@@ -75,13 +82,15 @@ use coded_opt::bench::{banner, run_bench, BenchReport};
 use coded_opt::cli::Args;
 use coded_opt::cluster::WorkerServer;
 use coded_opt::config::{Algorithm, ExperimentConfig, Scheme};
-use coded_opt::data::shard::{shard_dataset, BlockSource, MatSource, ShardedSource};
-use coded_opt::data::synth::{gaussian_linear, gaussian_linear_shard_to, sparse_recovery};
+use coded_opt::data::shard::{
+    shard_dataset_dtype, BlockSource, Dtype, MatSource, ShardedSource,
+};
+use coded_opt::data::synth::{gaussian_linear, gaussian_linear_shard_to_dtype, sparse_recovery};
 use coded_opt::driver::{
     AsyncBcd, AsyncGd, Bcd, DataSource, Engine, Experiment, Gd, Lbfgs, Problem, Prox, RunOutput,
 };
 use coded_opt::encoding::{stream, EncodingOp, FastPath, SubsetSpectrum};
-use coded_opt::linalg::{dot, mat::reference, par, Mat};
+use coded_opt::linalg::{dot, mat::reference, par, simd, Mat, MatF32};
 use coded_opt::metrics::{TableWriter, Trace};
 use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 use coded_opt::rng::Pcg64;
@@ -162,12 +171,15 @@ fn cmd_shard(args: &Args) -> Result<()> {
     let sigma = args.get_f64("sigma")?.unwrap_or(0.5);
     let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
     let shard_rows = args.get_usize("shard-rows")?.unwrap_or(1024);
+    let dtype_arg = args.get("dtype").unwrap_or("f64");
+    let dtype = Dtype::parse(dtype_arg)
+        .ok_or_else(|| anyhow::anyhow!("shard: unknown --dtype '{dtype_arg}' (f64, f32)"))?;
     let dataset = args.get("dataset").unwrap_or("gaussian");
     let manifest = match dataset {
         "gaussian" => {
             // fully streaming: the full X never exists in this process
             let (manifest, _w_star) =
-                gaussian_linear_shard_to(out, n, p, sigma, seed, shard_rows)?;
+                gaussian_linear_shard_to_dtype(out, n, p, sigma, seed, shard_rows, dtype)?;
             manifest
         }
         "sparse" => {
@@ -175,7 +187,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
             // noise, so it is generated in memory and then sharded
             let nnz = args.get_usize("nnz")?.unwrap_or(p / 12 + 1);
             let (x, y, _) = sparse_recovery(n, p, nnz, sigma, seed);
-            shard_dataset(&x, Some(&y), out, shard_rows)?
+            shard_dataset_dtype(&x, Some(&y), out, shard_rows, dtype)?
         }
         other => bail!("shard: unknown --dataset '{other}' (gaussian, sparse)"),
     };
@@ -297,8 +309,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
         "hotpath",
         "fast kernels vs the naive pre-blocking reference (linalg::mat::reference)",
     );
-    println!("threads: {}\n", par::threads());
-    let mut report = BenchReport::new(par::threads());
+    println!("threads: {}", par::threads());
+    // Recorded in the report's `features` field so cross-runner baseline
+    // diffs are explainable (informational — never gated).
+    let features = format!(
+        "cpu={}; simd={}; precision=f64",
+        simd::cpu_features(),
+        if simd::active() { "on" } else { "off" }
+    );
+    println!("features: {features}\n");
+    let mut report = BenchReport::new(par::threads()).with_features(&features);
     let mut rng = Pcg64::new(1);
 
     // ---- structured Hadamard encode: 1024×512 generator applied to a
@@ -355,6 +375,56 @@ fn cmd_bench(args: &Args) -> Result<()> {
             std::hint::black_box(reference::gram(&a));
         });
         report.push_pair("gram_512x512", &fast, &naive);
+    }
+
+    // ---- SIMD vs forced-scalar (the same kernels behind the
+    //      CODED_OPT_SIMD toggle — outputs are bit-identical by the
+    //      determinism contract, so the pair measures pure speed). The
+    //      matvec pair is in the gate baseline; skipped entirely when
+    //      SIMD is unavailable so a scalar-only machine does not report
+    //      a meaningless 1.0x (the gate then fails loudly on the
+    //      missing entry, which is the honest outcome).
+    if simd::active() {
+        let a = Mat::from_fn(1024, 512, |_, _| rng.next_f64() - 0.5);
+        let v: Vec<f64> = (0..512).map(|_| rng.next_f64() - 0.5).collect();
+        let fast = run_bench("matvec 1024x512 (simd)", warmup, iters * 4, || {
+            std::hint::black_box(a.matvec(&v));
+        });
+        simd::set_forced(Some(false));
+        let naive = run_bench("matvec 1024x512 (forced scalar)", warmup, iters * 4, || {
+            std::hint::black_box(a.matvec(&v));
+        });
+        simd::set_forced(None);
+        report.push_pair("simd_matvec_1024x512", &fast, &naive);
+
+        let g = Mat::from_fn(512, 384, |_, _| rng.next_f64() - 0.5);
+        let fast = run_bench("gram 512x384 (simd)", warmup, iters, || {
+            std::hint::black_box(g.gram());
+        });
+        simd::set_forced(Some(false));
+        let naive = run_bench("gram 512x384 (forced scalar)", warmup, iters, || {
+            std::hint::black_box(g.gram());
+        });
+        simd::set_forced(None);
+        report.push_pair("simd_gram_512x384", &fast, &naive);
+    } else {
+        println!("simd inactive (no avx2 or CODED_OPT_SIMD=0): skipping simd_* pairs");
+    }
+
+    // ---- f32 storage vs f64 (informational: the f32 kernels widen to
+    //      f64 accumulators, so this measures the bandwidth win of
+    //      half-width rows, not a precision shortcut)
+    {
+        let a = Mat::from_fn(1024, 512, |_, _| rng.next_f64() - 0.5);
+        let af = MatF32::from_mat(&a);
+        let v: Vec<f64> = (0..512).map(|_| rng.next_f64() - 0.5).collect();
+        let fast = run_bench("matvec 1024x512 (f32 storage)", warmup, iters * 4, || {
+            std::hint::black_box(af.matvec(&v));
+        });
+        let naive = run_bench("matvec 1024x512 (f64 storage)", warmup, iters * 4, || {
+            std::hint::black_box(a.matvec(&v));
+        });
+        report.push_pair("f32_matvec_1024x512", &fast, &naive);
     }
 
     // ---- matmul and matvec_t (informational pairs; not in the gate

@@ -1,0 +1,8 @@
+//! Lint fixture: unsafe in the SIMD kernel file — which IS in the
+//! allowed zone — but with no SAFETY comment. The zone never waives
+//! the comment. Expected: exactly one `safety-comment` finding (line 7).
+
+pub fn axpy_avx2(a: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    unsafe { axpy_avx2_body(a, x.as_ptr(), y.as_mut_ptr(), n) }
+}

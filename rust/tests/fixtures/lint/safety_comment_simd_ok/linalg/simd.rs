@@ -1,0 +1,10 @@
+//! Lint fixture: unsafe in the SIMD kernel file with a SAFETY comment
+//! naming the guard — the shape every real kernel in linalg/simd.rs
+//! follows. Expected: clean (zero findings).
+
+pub fn axpy_avx2(a: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len();
+    // SAFETY: avx2 availability is checked by the dispatcher before any
+    // caller reaches this path; pointers cover exactly n elements.
+    unsafe { axpy_avx2_body(a, x.as_ptr(), y.as_mut_ptr(), n) }
+}

@@ -1,5 +1,5 @@
 //! Lint fixture: unsafe with a perfectly good SAFETY comment — but in
-//! a module outside the allowlisted zone (runtime/ only).
+//! a module outside the allowlisted zones (runtime/, linalg/simd.rs).
 //! Expected: exactly one `safety-comment` finding (line 7).
 
 pub fn fast_copy(src: &[f64], dst: &mut [f64]) {

@@ -15,6 +15,13 @@
 //!   `apply`/`apply_t`: ≤1e-12 of the dense reference — the fixed-chunk
 //!   tree reduction / butterfly reorders the sum deterministically
 //!   (documented in `linalg::par` and `linalg::sparse`).
+//! - SIMD vs scalar (`linalg::simd`): **bit-identical** at every size
+//!   and thread count — the AVX2 kernels vectorize across independent
+//!   outputs only and run each output's accumulation chain in the
+//!   scalar order, so `CODED_OPT_SIMD` can never move a golden trace.
+//! - f32 storage (`linalg::precision`): ≤1e-5 of the f64 referee,
+//!   explicitly NOT bit-pinned (the rounding is in the storage, not the
+//!   accumulation — f32 kernels accumulate in f64).
 
 // This suite pins bit-exact float values on purpose; exact equality
 // is the contract under test, not an accident (the workspace denies
@@ -26,7 +33,7 @@ use std::sync::Mutex;
 use coded_opt::config::Scheme;
 use coded_opt::encoding::{Encoder, EncodingOp};
 use coded_opt::linalg::mat::reference;
-use coded_opt::linalg::{par, Csr, Mat};
+use coded_opt::linalg::{fwht, par, simd, Csr, Mat, MatF32};
 use coded_opt::rng::Pcg64;
 use coded_opt::testutil::assert_allclose;
 
@@ -148,6 +155,132 @@ fn csr_kernels_match_dense_reference_across_threads() {
     assert_eq!(across[0], across[1], "csr matvec_t t=1 vs t=2");
     assert_eq!(across[0], across[2], "csr matvec_t t=1 vs t=8");
     par::set_threads(restore);
+}
+
+/// Sizes for the SIMD sweep: every row/col count is chosen so the quad
+/// loop leaves a remainder lane (≢ 0 mod 4) or the axpy tail is ragged
+/// (≢ 0 mod 8/4), plus one chunk-crossing shape.
+const SIMD_SIZES: [(usize, usize); 5] = [(5, 3), (7, 9), (33, 17), (65, 129), (150, 301)];
+
+/// Run `f` once under forced-scalar and once under forced-SIMD,
+/// returning both results. `set_forced` is process-global, so callers
+/// hold THREAD_KNOB (the same mutex the thread sweeps use). On a
+/// machine without AVX2 the "on" leg silently runs scalar too — the
+/// bit-equality assertion then holds trivially, and CI's SIMD matrix
+/// covers the real thing.
+fn scalar_vs_simd<T>(mut f: impl FnMut() -> T) -> (T, T) {
+    simd::set_forced(Some(false));
+    let scalar = f();
+    simd::set_forced(Some(true));
+    let vector = f();
+    simd::set_forced(None);
+    (scalar, vector)
+}
+
+#[test]
+fn simd_dense_kernels_bit_identical_to_scalar() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let restore = par::threads();
+    for &(rows, cols) in &SIMD_SIZES {
+        let mut rng = Pcg64::new(rows as u64 * 4096 + cols as u64);
+        let a = random_mat(&mut rng, rows, cols);
+        let b = random_mat(&mut rng, cols, (rows % 50) + 1);
+        let x = random_vec(&mut rng, cols);
+        let xt = random_vec(&mut rng, rows);
+        for &t in &THREAD_SWEEP {
+            par::set_threads(t);
+            let tag = format!("{rows}x{cols} t={t}");
+            let (s, v) = scalar_vs_simd(|| a.matvec(&x));
+            assert_eq!(s, v, "matvec {tag}");
+            // …and SIMD output equals the naive reference bit-for-bit,
+            // not merely the scalar production kernel.
+            assert_eq!(v, reference::matvec(&a, &x), "matvec vs reference {tag}");
+            let (s, v) = scalar_vs_simd(|| a.matvec_t(&xt));
+            assert_eq!(s, v, "matvec_t {tag}");
+            let (s, v) = scalar_vs_simd(|| a.matmul(&b));
+            assert_eq!(s, v, "matmul {tag}");
+            let (s, v) = scalar_vs_simd(|| a.gram());
+            assert_eq!(s, v, "gram {tag}");
+            let (s, v) = scalar_vs_simd(|| {
+                let mut resid = vec![0.0; rows];
+                a.matvec_sub(&x, &xt, &mut resid);
+                resid
+            });
+            assert_eq!(s, v, "matvec_sub {tag}");
+        }
+    }
+    par::set_threads(restore);
+}
+
+#[test]
+fn simd_csr_and_fwht_bit_identical_to_scalar() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let restore = par::threads();
+    // Ragged CSR: row lengths 0..=12 exercise the common-prefix
+    // lockstep and every per-lane tail length of the quad kernel.
+    let mut triplets = Vec::new();
+    for i in 0..37usize {
+        for j in 0..(i % 13) {
+            triplets.push((i, (j * 5 + i) % 23, (i as f64) * 0.11 - (j as f64) * 0.07));
+        }
+    }
+    let a = Csr::from_triplets(37, 23, &triplets);
+    let mut rng = Pcg64::new(91);
+    let x = random_vec(&mut rng, 23);
+    for &t in &THREAD_SWEEP {
+        par::set_threads(t);
+        let (s, v) = scalar_vs_simd(|| a.matvec(&x));
+        assert_eq!(s, v, "csr matvec t={t}");
+    }
+    // FWHT at the h<4 base cases and across the butterfly switch-over.
+    for n in [2usize, 4, 8, 64, 1024] {
+        let base: Vec<f64> = (0..n).map(|i| (i as f64 * 0.37).sin()).collect();
+        let (s, v) = scalar_vs_simd(|| {
+            let mut buf = base.clone();
+            fwht(&mut buf);
+            buf
+        });
+        assert_eq!(s, v, "fwht n={n}");
+    }
+    par::set_threads(restore);
+}
+
+#[test]
+fn f32_storage_tracks_f64_referee_within_tolerance() {
+    let mut rng = Pcg64::new(2024);
+    let a = random_mat(&mut rng, 150, 67);
+    let af = MatF32::from_mat(&a);
+    let x = random_vec(&mut rng, 67);
+    let xt = random_vec(&mut rng, 150);
+    // Not bit-pinned: the contract is a relative tolerance against the
+    // f64 referee (storage rounding only; accumulation stays f64).
+    let tol = |got: f64, want: f64, tag: &str| {
+        assert!(
+            (got - want).abs() <= 1e-5 * want.abs().max(1.0),
+            "{tag}: got {got}, want {want}"
+        );
+    };
+    let want_mv = reference::matvec(&a, &x);
+    for (g, w) in af.matvec(&x).iter().zip(&want_mv) {
+        tol(*g, *w, "f32 matvec");
+    }
+    for (g, w) in af.matvec_t(&xt).iter().zip(reference::matvec_t(&a, &xt)) {
+        tol(*g, w, "f32 matvec_t");
+    }
+    let mut resid = vec![0.0; 150];
+    af.matvec_sub(&x, &xt, &mut resid);
+    for (i, g) in resid.iter().enumerate() {
+        tol(*g, want_mv[i] - xt[i], "f32 matvec_sub");
+    }
+    // …and the point of the mode: the shard really is half the bytes.
+    use coded_opt::linalg::{Precision, PrecisionMat};
+    let half = PrecisionMat::demote(a.clone(), Precision::F32);
+    let full = PrecisionMat::demote(a.clone(), Precision::F64);
+    assert_eq!(half.bytes() * 2, full.bytes(), "f32 storage halves the shard");
+    // Exactness where exactness is promised: an f32 matvec equals the
+    // f64 matvec of the widened copy bit-for-bit (widening is exact and
+    // both accumulate in f64 in the same order).
+    assert_eq!(af.matvec(&x), af.to_mat().matvec(&x), "widened-copy bit equality");
 }
 
 #[test]

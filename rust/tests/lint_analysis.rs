@@ -76,6 +76,22 @@ fn fixture_safety_comment_outside_zone() {
     assert!(r.findings[0].message.contains("runtime/"), "{:?}", r.findings[0]);
 }
 
+/// The SIMD kernel file is inside the unsafe zone, but the zone never
+/// waives the SAFETY-comment requirement.
+#[test]
+fn fixture_safety_comment_simd_zone_still_needs_comment() {
+    let r = assert_single("safety_comment_simd", "safety-comment", 7);
+    assert_eq!(r.findings[0].file, "linalg/simd.rs", "{:?}", r.findings[0]);
+    assert!(r.findings[0].message.contains("SAFETY"), "{:?}", r.findings[0]);
+}
+
+/// …and with the SAFETY comment in place, in-zone unsafe is clean.
+#[test]
+fn fixture_safety_comment_simd_ok_is_clean() {
+    let r = lint_fixture("safety_comment_simd_ok");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
 #[test]
 fn fixture_no_silent_nan_skips_test_code() {
     let r = assert_single("no_silent_nan", "no-silent-nan", 6);
@@ -146,6 +162,7 @@ fn cli_exit_codes_and_json() {
         "ordered_iteration",
         "safety_comment",
         "safety_comment_zone",
+        "safety_comment_simd",
         "no_silent_nan",
         "no_silent_nan_unwrap",
         "allow_bare",

@@ -158,7 +158,13 @@ fn streamed_worker_build_observes_only_bounded_blocks() {
     let probe = BoundedProbe { inner: &src, max_seen: std::cell::Cell::new(0) };
     for scheme in [Scheme::Hadamard, Scheme::Gaussian, Scheme::Replication] {
         let dp = coded_opt::coordinator::build_data_parallel_streamed(
-            &probe, scheme, 8, 2.0, 3, None,
+            &probe,
+            scheme,
+            8,
+            2.0,
+            3,
+            coded_opt::linalg::Precision::F64,
+            None,
         )
         .unwrap();
         assert_eq!(dp.workers.len(), 8);
