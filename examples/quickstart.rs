@@ -178,11 +178,15 @@ fn main() -> anyhow::Result<()> {
 
     // All of the bit-identity claims above rest on source-level
     // invariants (total float orders, no wall-clock reads in simulated
-    // paths, ordered iteration, audited unsafe). They are mechanized as
-    // `coded-opt lint` — the determinism-contract static analysis
-    // (coded_opt::analysis), blocking in CI. Run it locally with
-    // `cargo run --release -- lint` (add `--json` for the
-    // `coded-opt/lint-v1` report); exceptions need an inline
+    // paths, ordered iteration, audited unsafe) plus architecture-level
+    // ones checked on the extracted module graph (the layering DAG,
+    // zone containment, no eager buffers in streaming modules). They
+    // are mechanized as `coded-opt lint` — the determinism-contract
+    // static analysis (coded_opt::analysis), blocking in CI. Run it
+    // locally with `cargo run --release -- lint` (`--format json` for
+    // the `coded-opt/lint-v1` report, `--format github` for PR-diff
+    // annotations, `--graph-out FILE` for the module DAG CI keeps
+    // committed as `module-graph.json`); exceptions need an inline
     // `lint:allow(<rule>)` with a justification, which the report counts.
     Ok(())
 }

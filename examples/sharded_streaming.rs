@@ -1,0 +1,67 @@
+//! OUT-OF-CORE PIPELINE — the whole sharded path with no full-matrix
+//! materialization anywhere: generate a dataset straight into the
+//! shard-v1 format (one shard buffer resident at a time), open it
+//! (reads only the manifest), solve with encoded L-BFGS streaming
+//! blocks through the encoder, and evaluate BOTH the per-iteration
+//! loss curve and the final iterate with
+//! [`ShardedSource::half_mse`](coded_opt::data::ShardedSource::half_mse)
+//! — the one-pass streamed objective. Nothing in this file ever holds
+//! `X`; peak resident data is one `shard_rows × p` block.
+//!
+//!     cargo run --release --example sharded_streaming
+
+use coded_opt::config::Scheme;
+use coded_opt::data::synth::gaussian_linear_shard_to;
+use coded_opt::data::ShardedSource;
+use coded_opt::driver::{Experiment, Lbfgs};
+use coded_opt::linalg::norm2;
+
+fn main() -> anyhow::Result<()> {
+    // 2048 × 128 in 8 shards of 256 rows. β=2 over 8 workers gives
+    // 4096 encoded rows → power-of-two FWHT, 512-row worker shards.
+    let (n, p, shard_rows) = (2048usize, 128usize, 256usize);
+    let dir = std::env::temp_dir().join(format!("coded-opt-sharded-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let (manifest, w_star) = gaussian_linear_shard_to(&dir, n, p, 0.5, 321, shard_rows)?;
+    println!(
+        "dataset: {} rows × {} cols in {} shards under {}",
+        manifest.rows,
+        manifest.cols,
+        manifest.shards.len(),
+        dir.display()
+    );
+
+    // The eval closure streams too: ½·mean‖Xw−y‖² one shard at a time,
+    // re-reading (and checksum-verifying) the shards on every call.
+    let source = ShardedSource::open(&dir)?;
+    let eval_src = source.clone();
+    let out = Experiment::sharded(source.clone())
+        .scheme(Scheme::Hadamard)
+        .workers(8)
+        .wait_for(6)
+        .redundancy(2.0)
+        .seed(9)
+        .label("sharded-lbfgs")
+        .eval(move |w| (eval_src.half_mse(w).expect("streamed objective"), 0.0))
+        .run(Lbfgs::new().iters(40))?;
+
+    println!("\n iter    f(w_t)  [streamed ½·MSE]");
+    for r in out.trace.records.iter().step_by(8) {
+        println!("{:>5}   {:<14.8}", r.iter, r.objective);
+    }
+
+    // Final-iterate checks, both streamed: the data term again, and
+    // recovery error against the generator's planted w*.
+    let final_obj = source.half_mse(&out.w)?;
+    let mut diff = out.w.clone();
+    for (d, t) in diff.iter_mut().zip(&w_star) {
+        *d -= t;
+    }
+    let rel = norm2(&diff) / norm2(&w_star);
+    println!("\nfinal streamed ½·MSE: {final_obj:.6}");
+    println!("‖w − w*‖/‖w*‖ = {rel:.3e}  (σ=0.5 noise keeps this above zero)");
+    anyhow::ensure!(rel < 0.5, "L-BFGS failed to approach the planted model: {rel:e}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

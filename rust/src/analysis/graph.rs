@@ -1,0 +1,692 @@
+//! Module-dependency-graph extraction and the graph-aware
+//! architecture rules (`layer-order`, `zone-containment`).
+//!
+//! The line rules in [`super::rules`] catch forbidden *tokens*; this
+//! module catches forbidden *edges*. It rebuilds the crate's module
+//! DAG from the classified-line representation — `use` statements
+//! (with brace expansion), `mod child;` declarations, and qualified
+//! expression paths (`crate::…`, `super::…`, or a path whose first
+//! segment names a known module) — still std-only, no parser
+//! dependency. `#[cfg(test)]` regions contribute no edges, so the
+//! graph describes what ships, not what the tests reach for.
+//!
+//! Resolution is deliberately conservative: a path contributes an edge
+//! only when some prefix of it names a module that exists as a file in
+//! the scanned tree (deepest such prefix wins). Paths into `std`,
+//! external crates, or plain types therefore resolve to nothing. This
+//! can *miss* edges (an expression `stream::f()` after
+//! `use crate::encoding::stream` resolves through the `use`, not the
+//! expression) but does not invent them — the right bias for a gate.
+//!
+//! The extracted graph is also an artifact: [`ModuleGraph::to_json`]
+//! emits schema `coded-opt/modgraph-v1` with line numbers deliberately
+//! omitted and edges deduplicated, so the committed `module-graph.json`
+//! only changes when the architecture actually changes (see the CI
+//! graph-drift gate).
+
+use crate::analysis::rules::{self, Finding};
+use crate::analysis::source::SourceLine;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt::Write as _;
+
+/// The declared layering DAG, as `(top-level module, rank)`. An edge
+/// from a ranked module to a *higher*-ranked one (an upward import) is
+/// a `layer-order` finding; same-rank and downward edges are legal.
+/// Unlisted modules (rng, metrics, objectives, delay, config, runtime,
+/// bench, testutil, …) are shared leaves/utilities and unconstrained —
+/// except `analysis`, which must not import any other crate module.
+pub const LAYER_RANKS: &[(&str, u8)] = &[
+    ("linalg", 0),
+    ("encoding", 1),
+    ("data", 1),
+    ("coordinator", 2),
+    ("cluster", 2),
+    ("scenario", 2),
+    ("driver", 3),
+    ("cli", 4),
+    ("main", 4),
+];
+
+/// One module reference occurrence (an edge plus where it was seen).
+#[derive(Clone, Debug)]
+pub struct EdgeOcc {
+    pub from: String,
+    pub to: String,
+    /// File (relative, `/`-separated) the reference sits in.
+    pub file: String,
+    /// Line of the reference (start line for a multi-line `use`).
+    pub line: usize,
+}
+
+/// The crate's module dependency graph.
+#[derive(Clone, Debug, Default)]
+pub struct ModuleGraph {
+    /// module name → defining file, both `/`-separated relative paths.
+    pub modules: BTreeMap<String, String>,
+    /// Every reference occurrence, in (sorted-file, line) scan order.
+    pub occurrences: Vec<EdgeOcc>,
+}
+
+impl ModuleGraph {
+    /// Deduplicated edge set, sorted by (from, to).
+    pub fn edges(&self) -> BTreeSet<(String, String)> {
+        self.occurrences.iter().map(|o| (o.from.clone(), o.to.clone())).collect()
+    }
+
+    /// Machine-readable module DAG (schema `coded-opt/modgraph-v1`).
+    ///
+    /// Line numbers and per-occurrence data are deliberately excluded:
+    /// the committed artifact must only drift when an edge or module
+    /// appears or disappears, not when code moves within a file.
+    pub fn to_json(&self) -> String {
+        let edges = self.edges();
+        let mut s = String::from("{\n  \"schema\": \"coded-opt/modgraph-v1\",\n");
+        let _ = writeln!(s, "  \"module_count\": {},", self.modules.len());
+        let _ = writeln!(s, "  \"edge_count\": {},", edges.len());
+        s.push_str("  \"modules\": [");
+        for (i, (name, file)) in self.modules.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\n    {{\"name\": \"{name}\", \"file\": \"{file}\"");
+            if let Some(rank) = layer_rank(name) {
+                let _ = write!(s, ", \"layer\": {rank}");
+            }
+            if let Some(kind) = zone_of(name) {
+                let _ = write!(s, ", \"zone\": \"{kind}\"");
+            }
+            s.push('}');
+        }
+        s.push_str(if self.modules.is_empty() { "],\n" } else { "\n  ],\n" });
+        s.push_str("  \"edges\": [");
+        for (i, (from, to)) in edges.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\n    {{\"from\": \"{from}\", \"to\": \"{to}\"}}");
+        }
+        s.push_str(if edges.is_empty() { "]\n" } else { "\n  ]\n" });
+        s.push_str("}\n");
+        s
+    }
+}
+
+/// Module a source file defines: `lib.rs` → `crate`, `main.rs` →
+/// `main`, `foo/mod.rs` → `foo`, `foo/bar.rs` → `foo::bar`.
+pub fn module_of(rel: &str) -> Option<String> {
+    let stem = rel.strip_suffix(".rs")?;
+    if stem == "lib" {
+        return Some("crate".to_string());
+    }
+    let mut parts: Vec<&str> = stem.split('/').filter(|p| !p.is_empty()).collect();
+    if parts.last() == Some(&"mod") {
+        parts.pop();
+    }
+    if parts.is_empty() {
+        return Some("crate".to_string());
+    }
+    Some(parts.join("::"))
+}
+
+/// Layer rank of a module, from its top-level segment.
+pub fn layer_rank(module: &str) -> Option<u8> {
+    let top = module.split("::").next().unwrap_or(module);
+    LAYER_RANKS.iter().find(|(m, _)| *m == top).map(|(_, r)| *r)
+}
+
+/// Zone kind of a module (`wall-clock` / `unsafe`), derived from the
+/// file-level zone lists in [`rules`] so the two views cannot drift.
+pub fn zone_of(module: &str) -> Option<&'static str> {
+    let hit = |zones: &[&str]| {
+        zones.iter().any(|z| {
+            let m = z.trim_end_matches(".rs").trim_end_matches('/').replace('/', "::");
+            module == m || module.starts_with(&format!("{m}::"))
+        })
+    };
+    if hit(rules::WALL_CLOCK_ZONES) {
+        Some("wall-clock")
+    } else if hit(rules::UNSAFE_ZONES) {
+        Some("unsafe")
+    } else {
+        None
+    }
+}
+
+/// Build the module graph over classified files (as produced by
+/// [`super::lint_path`]: relative `/`-separated paths, sorted).
+pub fn build(files: &[(String, Vec<SourceLine>)]) -> ModuleGraph {
+    let mut modules = BTreeMap::new();
+    for (rel, _) in files {
+        if let Some(m) = module_of(rel) {
+            modules.insert(m, rel.clone());
+        }
+    }
+    let known: BTreeSet<String> = modules.keys().cloned().collect();
+    let mut occurrences = Vec::new();
+    for (rel, lines) in files {
+        let Some(cm) = module_of(rel) else { continue };
+        extract_file(rel, &cm, lines, &known, &mut occurrences);
+    }
+    ModuleGraph { modules, occurrences }
+}
+
+/// Graph-aware rule pass: `layer-order` and `zone-containment` over the
+/// edge occurrences. One finding per (file, offending target), anchored
+/// at the first occurrence — repeated references to an already-reported
+/// target are the same architectural fact, not new findings.
+pub fn check(graph: &ModuleGraph) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut seen_layer: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut seen_zone: BTreeSet<(String, String)> = BTreeSet::new();
+    for occ in &graph.occurrences {
+        let top_from = occ.from.split("::").next().unwrap_or(&occ.from).to_string();
+        let top_to = occ.to.split("::").next().unwrap_or(&occ.to).to_string();
+
+        // layer-order: analysis isolation, then upward rank edges.
+        if top_from != top_to {
+            let msg = if top_from == "analysis" {
+                Some(format!(
+                    "`{}` imports `{}`; analysis/ must not depend on any other crate module",
+                    occ.from, occ.to
+                ))
+            } else {
+                match (layer_rank(&occ.from), layer_rank(&occ.to)) {
+                    (Some(rf), Some(rt)) if rf < rt => Some(format!(
+                        "`{}` (layer {rf}) imports `{}` (layer {rt}); the layering DAG \
+                         forbids upward imports",
+                        occ.from, occ.to
+                    )),
+                    _ => None,
+                }
+            };
+            if let Some(message) = msg {
+                if seen_layer.insert((occ.file.clone(), top_to.clone())) {
+                    out.push(Finding {
+                        file: occ.file.clone(),
+                        line: occ.line,
+                        rule: "layer-order".to_string(),
+                        message,
+                    });
+                }
+            }
+        }
+
+        // zone-containment: trace-affecting module importing a zone.
+        if let Some(kind) = zone_of(&occ.to) {
+            let src_in_zone = rules::is_zone(&occ.file, rules::WALL_CLOCK_ZONES)
+                || rules::in_prefix(&occ.file, rules::UNSAFE_ZONES);
+            let src_traces = rules::in_prefix(&occ.file, rules::TRACE_MODULES);
+            if src_traces && !src_in_zone && !is_parent(&occ.from, &occ.to) {
+                if seen_zone.insert((occ.file.clone(), occ.to.clone())) {
+                    out.push(Finding {
+                        file: occ.file.clone(),
+                        line: occ.line,
+                        rule: "zone-containment".to_string(),
+                        message: format!(
+                            "trace-affecting `{}` imports {kind} zone `{}`; zones must \
+                             stay leaf-contained",
+                            occ.from, occ.to
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Is `from` the direct parent module of `to`? A parent declaring
+/// (`mod x;`) or re-exporting its own zone submodule is containment,
+/// not a leak.
+fn is_parent(from: &str, to: &str) -> bool {
+    if from == "crate" {
+        return !to.contains("::");
+    }
+    to.strip_prefix(from)
+        .and_then(|r| r.strip_prefix("::"))
+        .is_some_and(|r| !r.contains("::"))
+}
+
+fn extract_file(
+    rel: &str,
+    cm: &str,
+    lines: &[SourceLine],
+    known: &BTreeSet<String>,
+    out: &mut Vec<EdgeOcc>,
+) {
+    let mut pending_use: Option<(usize, String)> = None;
+    for line in lines {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.trim();
+        if code.is_empty() {
+            continue;
+        }
+        if let Some((start, mut buf)) = pending_use.take() {
+            buf.push(' ');
+            buf.push_str(code);
+            if code.contains(';') {
+                use_edges(rel, cm, start, &buf, known, out);
+            } else {
+                pending_use = Some((start, buf));
+            }
+            continue;
+        }
+        let decl = strip_visibility(code);
+        if decl == "use" || decl.starts_with("use ") || decl.starts_with("use{") {
+            if decl.contains(';') {
+                use_edges(rel, cm, line.number, decl, known, out);
+            } else {
+                pending_use = Some((line.number, decl.to_string()));
+            }
+            continue;
+        }
+        if let Some(child) = mod_decl(decl) {
+            let target =
+                if cm == "crate" { child.to_string() } else { format!("{cm}::{child}") };
+            if known.contains(&target) && target != cm {
+                out.push(EdgeOcc {
+                    from: cm.to_string(),
+                    to: target,
+                    file: rel.to_string(),
+                    line: line.number,
+                });
+            }
+            continue;
+        }
+        for segs in path_chains(code) {
+            if let Some(to) = resolve(cm, &segs, known, false) {
+                if to != cm {
+                    out.push(EdgeOcc {
+                        from: cm.to_string(),
+                        to,
+                        file: rel.to_string(),
+                        line: line.number,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Strip a leading `pub` / `pub(crate)` / `pub(in …)` visibility.
+fn strip_visibility(code: &str) -> &str {
+    let Some(rest) = code.strip_prefix("pub") else { return code };
+    if !rest.starts_with([' ', '\t', '(']) {
+        return code; // an identifier that merely starts with `pub`
+    }
+    let rest = rest.trim_start();
+    if let Some(inner) = rest.strip_prefix('(') {
+        match inner.find(')') {
+            Some(close) => inner[close + 1..].trim_start(),
+            None => code,
+        }
+    } else {
+        rest
+    }
+}
+
+/// Parse a `mod child;` declaration (inline `mod child {` bodies are
+/// walked as ordinary lines; a child without its own file is unknown
+/// and contributes nothing).
+fn mod_decl(decl: &str) -> Option<&str> {
+    let rest = decl.strip_prefix("mod ")?;
+    let end = rest.find(';')?;
+    let name = rest[..end].trim();
+    let ident = !name.is_empty()
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_')
+        && !name.as_bytes()[0].is_ascii_digit();
+    ident.then_some(name)
+}
+
+/// Expand one complete `use …;` statement into edges.
+fn use_edges(
+    rel: &str,
+    cm: &str,
+    line: usize,
+    stmt: &str,
+    known: &BTreeSet<String>,
+    out: &mut Vec<EdgeOcc>,
+) {
+    let body = stmt
+        .trim_start_matches("use")
+        .trim()
+        .split(';')
+        .next()
+        .unwrap_or("")
+        .trim();
+    let mut paths = Vec::new();
+    expand_use_tree(body, &mut paths);
+    let mut seen = BTreeSet::new();
+    for path in paths {
+        let segs: Vec<String> =
+            path.split("::").map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect();
+        if segs.is_empty() {
+            continue;
+        }
+        if let Some(to) = resolve(cm, &segs, known, true) {
+            if to != cm && seen.insert(to.clone()) {
+                out.push(EdgeOcc {
+                    from: cm.to_string(),
+                    to,
+                    file: rel.to_string(),
+                    line,
+                });
+            }
+        }
+    }
+}
+
+/// Recursively expand a use-tree (`a::{b, c::{d}, self}`) into plain
+/// paths. `self` and `*` leaves resolve to the prefix; ` as` renames
+/// are dropped.
+fn expand_use_tree(tree: &str, out: &mut Vec<String>) {
+    let tree = tree.trim();
+    if let Some(open) = tree.find('{') {
+        let prefix = tree[..open].trim().trim_end_matches("::").trim();
+        let close = tree.rfind('}').unwrap_or(tree.len());
+        let inner = &tree[open + 1..close];
+        for item in split_top_commas(inner) {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            if item.contains('{') {
+                let joined = if prefix.is_empty() {
+                    item.to_string()
+                } else {
+                    format!("{prefix}::{item}")
+                };
+                expand_use_tree(&joined, out);
+            } else {
+                push_leaf(prefix, item, out);
+            }
+        }
+    } else {
+        push_leaf("", tree, out);
+    }
+}
+
+fn push_leaf(prefix: &str, item: &str, out: &mut Vec<String>) {
+    let base = item.split(" as ").next().unwrap_or(item).trim();
+    let base = base.trim_end_matches('*').trim_end_matches("::").trim();
+    let path = if base.is_empty() || base == "self" {
+        prefix.to_string()
+    } else if prefix.is_empty() {
+        base.to_string()
+    } else {
+        format!("{prefix}::{base}")
+    };
+    let path = path.trim_end_matches("::self").trim_end_matches("::").trim();
+    if !path.is_empty() {
+        out.push(path.to_string());
+    }
+}
+
+/// Split on commas at brace depth 0.
+fn split_top_commas(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let (mut depth, mut start) = (0usize, 0usize);
+    for (i, b) in s.bytes().enumerate() {
+        match b {
+            b'{' => depth += 1,
+            b'}' => depth = depth.saturating_sub(1),
+            b',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+/// All `ident(::ident)+` chains in a code line, left to right.
+fn path_chains(code: &str) -> Vec<Vec<String>> {
+    let b = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if ident_start(b[i]) && (i == 0 || !ident_byte(b[i - 1])) {
+            let mut segs = Vec::new();
+            let mut j = i;
+            loop {
+                let s = j;
+                while j < b.len() && ident_byte(b[j]) {
+                    j += 1;
+                }
+                segs.push(code[s..j].to_string());
+                if j + 2 < b.len() && b[j] == b':' && b[j + 1] == b':' && ident_start(b[j + 2]) {
+                    j += 2;
+                } else {
+                    break;
+                }
+            }
+            if segs.len() >= 2 {
+                out.push(segs);
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Resolve a path to the deepest known module it references, from
+/// module `cm`. `is_use` follows Rust-2018 `use` semantics (an
+/// unanchored first segment is current-module-relative only); in
+/// expressions an unanchored first segment may also name a top-level
+/// module brought into scope.
+fn resolve(cm: &str, segs: &[String], known: &BTreeSet<String>, is_use: bool) -> Option<String> {
+    let cm_parts: Vec<&str> =
+        if cm == "crate" { Vec::new() } else { cm.split("::").collect() };
+    match segs[0].as_str() {
+        "crate" | "coded_opt" => {
+            let rest: Vec<&str> = segs[1..].iter().map(String::as_str).collect();
+            deepest(&rest, 1, known)
+        }
+        "self" => {
+            let mut parts = cm_parts;
+            parts.extend(segs[1..].iter().map(String::as_str));
+            deepest(&parts, 1, known)
+        }
+        "super" => {
+            let mut parts = cm_parts;
+            let mut k = 0;
+            while k < segs.len() && segs[k] == "super" {
+                if parts.pop().is_none() {
+                    return None; // `super` above the crate root
+                }
+                k += 1;
+            }
+            parts.extend(segs[k..].iter().map(String::as_str));
+            if parts.is_empty() {
+                return None;
+            }
+            deepest(&parts, 1, known)
+        }
+        _ => {
+            // Current-module-relative (uniform path)…
+            let mut parts = cm_parts.clone();
+            parts.extend(segs.iter().map(String::as_str));
+            if let Some(hit) = deepest(&parts, cm_parts.len() + 1, known) {
+                return Some(hit);
+            }
+            // …else, in expressions, a top-level module in scope.
+            if !is_use {
+                let parts: Vec<&str> = segs.iter().map(String::as_str).collect();
+                return deepest(&parts, 1, known);
+            }
+            None
+        }
+    }
+}
+
+/// Longest known-module prefix of `parts` with at least `min_len`
+/// segments.
+fn deepest(parts: &[&str], min_len: usize, known: &BTreeSet<String>) -> Option<String> {
+    for len in (min_len..=parts.len()).rev() {
+        let name = parts[..len].join("::");
+        if known.contains(&name) {
+            return Some(name);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::source::classify;
+
+    fn graph_of(files: &[(&str, &str)]) -> ModuleGraph {
+        let classified: Vec<(String, Vec<_>)> =
+            files.iter().map(|(rel, text)| (rel.to_string(), classify(text))).collect();
+        build(&classified)
+    }
+
+    #[test]
+    fn module_identity_from_paths() {
+        assert_eq!(module_of("lib.rs").as_deref(), Some("crate"));
+        assert_eq!(module_of("main.rs").as_deref(), Some("main"));
+        assert_eq!(module_of("bench.rs").as_deref(), Some("bench"));
+        assert_eq!(module_of("cluster/mod.rs").as_deref(), Some("cluster"));
+        assert_eq!(module_of("cluster/socket.rs").as_deref(), Some("cluster::socket"));
+        assert_eq!(module_of("notes.txt"), None);
+    }
+
+    #[test]
+    fn use_statements_make_edges_with_brace_expansion() {
+        let g = graph_of(&[
+            ("driver/mod.rs", "use crate::cluster::{sim::SimCluster, wire};\n"),
+            ("cluster/mod.rs", "pub mod sim;\npub mod wire;\n"),
+            ("cluster/sim.rs", ""),
+            ("cluster/wire.rs", ""),
+        ]);
+        let e = g.edges();
+        assert!(e.contains(&("driver".into(), "cluster::sim".into())), "{e:?}");
+        assert!(e.contains(&("driver".into(), "cluster::wire".into())), "{e:?}");
+        assert!(e.contains(&("cluster".into(), "cluster::sim".into())), "{e:?}");
+    }
+
+    #[test]
+    fn uniform_path_use_resolves_to_sibling_child() {
+        let g = graph_of(&[
+            ("cluster/mod.rs", "pub use sim::SimCluster;\n"),
+            ("cluster/sim.rs", ""),
+        ]);
+        assert!(g.edges().contains(&("cluster".into(), "cluster::sim".into())));
+    }
+
+    #[test]
+    fn qualified_expression_paths_resolve() {
+        let g = graph_of(&[
+            ("linalg/mod.rs", ""),
+            ("linalg/simd.rs", ""),
+            ("linalg/fwht.rs", "fn f(x: &mut [f64]) { crate::linalg::simd::butterfly(x); }\n"),
+            ("coordinator/mod.rs", "fn g() { let _ = super::runtime::thing(); }\n"),
+            ("runtime/mod.rs", ""),
+        ]);
+        let e = g.edges();
+        assert!(e.contains(&("linalg::fwht".into(), "linalg::simd".into())), "{e:?}");
+        assert!(e.contains(&("coordinator".into(), "runtime".into())), "{e:?}");
+    }
+
+    #[test]
+    fn std_and_unknown_paths_make_no_edges() {
+        let g = graph_of(&[(
+            "metrics/mod.rs",
+            "use std::collections::BTreeMap;\nfn f() { let _ = f64::NAN.is_nan(); }\n",
+        )]);
+        assert!(g.edges().is_empty(), "{:?}", g.edges());
+    }
+
+    #[test]
+    fn test_regions_contribute_no_edges() {
+        let g = graph_of(&[
+            ("encoding/mod.rs", "#[cfg(test)]\nmod tests {\n    use crate::driver::Gd;\n}\n"),
+            ("driver/mod.rs", ""),
+        ]);
+        assert!(g.edges().is_empty(), "{:?}", g.edges());
+    }
+
+    #[test]
+    fn multi_line_use_anchors_at_start_line() {
+        let g = graph_of(&[
+            ("driver/mod.rs", "use crate::coordinator::{\n    Round,\n    State,\n};\n"),
+            ("coordinator/mod.rs", ""),
+        ]);
+        assert_eq!(g.occurrences.len(), 1);
+        assert_eq!(g.occurrences[0].line, 1);
+        assert_eq!(g.occurrences[0].to, "coordinator");
+    }
+
+    #[test]
+    fn layer_order_flags_upward_imports_once_per_file() {
+        let g = graph_of(&[
+            ("coordinator/mf.rs", "use crate::driver::Experiment;\nfn f() { crate::driver::go(); }\n"),
+            ("coordinator/mod.rs", "mod mf;\n"),
+            ("driver/mod.rs", "use crate::coordinator::Round;\n"),
+        ]);
+        let f = check(&g);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "layer-order");
+        assert_eq!((f[0].file.as_str(), f[0].line), ("coordinator/mf.rs", 1));
+    }
+
+    #[test]
+    fn analysis_must_import_nothing() {
+        let g = graph_of(&[
+            ("analysis/mod.rs", "use crate::linalg::Mat;\n"),
+            ("linalg/mod.rs", ""),
+        ]);
+        let f = check(&g);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "layer-order");
+        assert!(f[0].message.contains("analysis/"), "{f:?}");
+    }
+
+    #[test]
+    fn zone_containment_flags_trace_imports_but_exempts_parents() {
+        let g = graph_of(&[
+            ("coordinator/mod.rs", "use crate::runtime::GradExecutor;\n"),
+            ("cluster/mod.rs", "pub mod socket;\npub use socket::SocketCluster;\n"),
+            ("cluster/socket.rs", "use crate::cluster::wire::Frame;\n"),
+            ("cluster/wire.rs", ""),
+            ("runtime/mod.rs", ""),
+            ("main.rs", "use coded_opt::runtime::ArtifactIndex;\n"),
+        ]);
+        let f = check(&g);
+        // coordinator→runtime is the only finding: cluster (parent) may
+        // declare/re-export its zone children, socket.rs is itself a
+        // zone, and main is not trace-affecting.
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "zone-containment");
+        assert_eq!(f[0].file, "coordinator/mod.rs");
+        assert!(f[0].message.contains("`runtime`"), "{f:?}");
+    }
+
+    #[test]
+    fn modgraph_json_is_sorted_and_line_free() {
+        let g = graph_of(&[
+            ("data/mod.rs", "use crate::linalg::Mat;\nuse crate::linalg::Mat;\n"),
+            ("linalg/mod.rs", ""),
+        ]);
+        let j = g.to_json();
+        assert!(j.contains("\"schema\": \"coded-opt/modgraph-v1\""));
+        assert!(j.contains("\"edge_count\": 1"), "dedup: {j}");
+        assert!(j.contains("{\"name\": \"data\", \"file\": \"data/mod.rs\", \"layer\": 1}"));
+        assert!(!j.contains("\"line\""));
+    }
+}

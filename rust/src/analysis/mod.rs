@@ -10,11 +10,20 @@
 //! into traces, unaudited `unsafe`). See [`rules::RULES`] for the rule
 //! set and [`rules`] for the `lint:allow` escape hatch.
 //!
+//! Beyond the line rules, the analyzer is architecture-aware: [`graph`]
+//! rebuilds the crate's module dependency DAG from `use`/`mod`/
+//! qualified-path references and checks the layering contract
+//! (`layer-order`), zone leaf-containment (`zone-containment`) and
+//! streaming-path eagerness (`eager-buffer`) over it. The graph itself
+//! is an emitted artifact (`coded-opt/modgraph-v1`, committed as
+//! `module-graph.json` and drift-gated in CI).
+//!
 //! Design note: the scanner is line/token-level, not a parser — see
 //! [`source`] for what it does and does not understand. It scans its
 //! own source too; the rule tokens it searches for live in string
 //! literals, which the lexer blanks, so the tool is clean under itself.
 
+pub mod graph;
 pub mod rules;
 pub mod source;
 
@@ -33,6 +42,8 @@ pub struct LintReport {
     pub suppressed: Vec<Suppressed>,
     /// Number of `.rs` files scanned.
     pub files: usize,
+    /// The module dependency graph the architecture rules ran over.
+    pub graph: graph::ModuleGraph,
 }
 
 impl LintReport {
@@ -108,14 +119,49 @@ impl LintReport {
         );
         s
     }
+
+    /// GitHub Actions annotation lines (`--format github`): one
+    /// `::error` per finding, so a failing CI lint job renders its
+    /// findings inline on the PR diff. `root` prefixes file paths so
+    /// annotations resolve from the repository root.
+    pub fn render_github(&self, root: &str) -> String {
+        let prefix = root.trim_end_matches('/');
+        let mut s = String::new();
+        for f in &self.findings {
+            let path =
+                if prefix.is_empty() { f.file.clone() } else { format!("{prefix}/{}", f.file) };
+            let _ = writeln!(
+                s,
+                "::error file={path},line={},title={}::{}",
+                f.line,
+                f.rule,
+                gh_escape(&f.message)
+            );
+        }
+        let _ = writeln!(
+            s,
+            "{} finding(s), {} allowlisted, {} file(s) scanned",
+            self.findings.len(),
+            self.suppressed.len(),
+            self.files
+        );
+        s
+    }
 }
 
 /// Lint every `.rs` file under `root` (recursively, deterministic
 /// order). Paths in the report are relative to `root`.
+///
+/// Two phases: every file is classified once, the module graph is
+/// built over the whole tree, and then each file's line-rule findings
+/// and graph-rule findings go through that file's `lint:allow`
+/// directives together — so an allow can suppress an architecture
+/// finding exactly like a line finding, and an unused allow is still
+/// detected.
 pub fn lint_path(root: &Path) -> Result<LintReport> {
     let files = source::rs_files(root)
         .with_context(|| format!("walking {}", root.display()))?;
-    let mut report = LintReport { files: files.len(), ..Default::default() };
+    let mut classified = Vec::with_capacity(files.len());
     for path in &files {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -124,11 +170,33 @@ pub fn lint_path(root: &Path) -> Result<LintReport> {
             .unwrap_or(path)
             .to_string_lossy()
             .replace('\\', "/");
-        let (f, s) = rules::lint_file(&rel, &text);
-        report.findings.extend(f);
-        report.suppressed.extend(s);
+        classified.push((rel, source::classify(&text)));
+    }
+    let module_graph = graph::build(&classified);
+    let mut graph_findings: std::collections::BTreeMap<String, Vec<Finding>> =
+        std::collections::BTreeMap::new();
+    for f in graph::check(&module_graph) {
+        graph_findings.entry(f.file.clone()).or_default().push(f);
+    }
+    let mut report =
+        LintReport { files: classified.len(), graph: module_graph, ..Default::default() };
+    for (rel, lines) in &classified {
+        let mut findings = rules::scan(rel, lines);
+        if let Some(extra) = graph_findings.remove(rel.as_str()) {
+            findings.extend(extra);
+        }
+        let mut suppressed = Vec::new();
+        rules::apply_allows(rel, lines, &mut findings, &mut suppressed);
+        findings.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+        suppressed.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+        report.findings.extend(findings);
+        report.suppressed.extend(suppressed);
     }
     Ok(report)
+}
+
+fn gh_escape(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
 }
 
 fn json_escape(s: &str) -> String {
@@ -155,7 +223,7 @@ mod tests {
 
     fn report(rel: &str, text: &str) -> LintReport {
         let (findings, suppressed) = rules::lint_file(rel, text);
-        LintReport { findings, suppressed, files: 1 }
+        LintReport { findings, suppressed, files: 1, ..Default::default() }
     }
 
     #[test]
@@ -183,5 +251,17 @@ mod tests {
         let h = r.render_human();
         assert!(h.contains("metrics/x.rs:1:"));
         assert!(h.contains("1 finding(s), 0 allowlisted, 1 file(s) scanned"));
+    }
+
+    #[test]
+    fn github_render_emits_error_annotations() {
+        let r = report("metrics/x.rs", "let a = f64::NAN;\n");
+        let g = r.render_github("rust/src");
+        assert!(
+            g.contains("::error file=rust/src/metrics/x.rs,line=1,title=no-silent-nan::"),
+            "{g}"
+        );
+        assert!(g.contains("1 finding(s)"));
+        assert_eq!(gh_escape("a%b\nc"), "a%25b%0Ac");
     }
 }

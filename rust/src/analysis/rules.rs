@@ -28,7 +28,10 @@ pub struct RuleInfo {
     pub summary: &'static str,
 }
 
-/// The five determinism-contract rules.
+/// The determinism-contract rules: five line-level rules plus the
+/// graph-aware architecture rules (whose edge analysis lives in
+/// [`crate::analysis::graph`]; `zone-containment` also has a
+/// line-level half here for CPU-dispatch intrinsics).
 pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "float-total-order",
@@ -51,6 +54,21 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "no-silent-nan",
         summary: "no NAN literals or partial-order unwraps in library code",
+    },
+    RuleInfo {
+        id: "layer-order",
+        summary: "imports must follow the layering DAG (linalg → encoding/data → \
+                  coordinator/cluster/scenario → driver → cli/main); analysis imports nothing",
+    },
+    RuleInfo {
+        id: "zone-containment",
+        summary: "wall-clock/unsafe zones must not be imported by trace-affecting \
+                  modules; std::arch only in linalg/simd.rs",
+    },
+    RuleInfo {
+        id: "eager-buffer",
+        summary: "no dense full-matrix constructors (Mat::zeros, stack(, load_dense) \
+                  in streaming modules",
     },
 ];
 
@@ -89,7 +107,13 @@ const SORT_WINDOW: usize = 2;
 
 /// Modules whose iteration order leaks into traces or user-visible
 /// output (matched as `/`-separated path prefixes relative to `src`).
-const TRACE_MODULES: &[&str] = &[
+/// `analysis/` is in the list because the lint's own report ordering
+/// is part of its contract (deterministic output, byte-stable graph
+/// artifact); `cluster/socket.rs` and `cluster/wire.rs` are covered by
+/// the `cluster/` prefix — their wall-clock allowance never extended
+/// to iteration order.
+pub(crate) const TRACE_MODULES: &[&str] = &[
+    "analysis/",
     "cluster/",
     "coordinator/",
     "data/",
@@ -106,14 +130,25 @@ const TRACE_MODULES: &[&str] = &[
 /// The socket engine's zone covers connect-retry deadlines and I/O
 /// timeouts only — fault *detection*; its traces run on a virtual
 /// clock, which the cross-engine conformance suite pins bit-for-bit.
-const WALL_CLOCK_ZONES: &[&str] =
+pub(crate) const WALL_CLOCK_ZONES: &[&str] =
     &["cluster/threads.rs", "cluster/socket.rs", "cluster/wire.rs", "bench.rs"];
 
 /// Modules where `unsafe` is permitted (with a SAFETY: comment):
 /// the PJRT FFI boundary and the std::arch SIMD kernels. The SIMD zone
 /// is the single file, not `linalg/` — the rest of linalg stays
 /// unsafe-free.
-const UNSAFE_ZONES: &[&str] = &["runtime/", "linalg/simd.rs"];
+pub(crate) const UNSAFE_ZONES: &[&str] = &["runtime/", "linalg/simd.rs"];
+
+/// Streaming modules where a dense full-matrix constructor defeats the
+/// point: these paths exist so the input never has to fit in memory.
+/// (`coordinator/mod.rs` holds the streamed partition builders.)
+const EAGER_ZONES: &[&str] = &["encoding/stream.rs", "data/shard.rs", "coordinator/mod.rs"];
+
+/// Call-position tokens that materialize a full dense matrix. Matched
+/// word-boundary and only when followed by `(`, so `vstack(` or a
+/// `stack` variable never fire; a token directly after `fn` is the
+/// definition, not a call.
+const EAGER_TOKENS: &[&str] = &["Mat::zeros", "stack", "load_dense"];
 
 /// A parsed `lint:allow` directive.
 struct Allow {
@@ -127,18 +162,20 @@ struct Allow {
     target: usize,
 }
 
-fn is_zone(rel: &str, suffixes: &[&str]) -> bool {
+pub(crate) fn is_zone(rel: &str, suffixes: &[&str]) -> bool {
     // Component-wise suffix match: `bench.rs` matches `bench.rs` but
     // not `microbench.rs`.
     suffixes.iter().any(|s| Path::new(rel).ends_with(s))
 }
 
-fn in_prefix(rel: &str, prefixes: &[&str]) -> bool {
+pub(crate) fn in_prefix(rel: &str, prefixes: &[&str]) -> bool {
     prefixes.iter().any(|p| rel.starts_with(p))
 }
 
-/// Scan one file. Returns surviving findings and suppressed findings,
-/// both sorted by (line, rule).
+/// Scan one file with the line-level rules only. Returns surviving
+/// findings and suppressed findings, both sorted by (line, rule).
+/// The graph-aware passes need the whole tree — [`super::lint_path`]
+/// runs them and feeds their findings through the same allow machinery.
 pub fn lint_file(rel: &str, text: &str) -> (Vec<Finding>, Vec<Suppressed>) {
     let lines = classify(text);
     let mut findings = scan(rel, &lines);
@@ -149,7 +186,7 @@ pub fn lint_file(rel: &str, text: &str) -> (Vec<Finding>, Vec<Suppressed>) {
     (findings, suppressed)
 }
 
-fn scan(rel: &str, lines: &[SourceLine]) -> Vec<Finding> {
+pub(crate) fn scan(rel: &str, lines: &[SourceLine]) -> Vec<Finding> {
     let mut out = Vec::new();
     for (i, line) in lines.iter().enumerate() {
         let code = line.code.as_str();
@@ -198,6 +235,34 @@ fn scan(rel: &str, lines: &[SourceLine]) -> Vec<Finding> {
             } else if !has_safety_comment(lines, i) {
                 out.push(mk(rel, line, "safety-comment",
                     "unsafe without an adjacent SAFETY: comment"));
+            }
+        }
+
+        // zone-containment, line-level half: CPU-dispatch intrinsics
+        // stay in the SIMD kernel file (the module-graph half runs in
+        // crate::analysis::graph::check).
+        if !is_zone(rel, &["linalg/simd.rs"])
+            && (find_token(code, "std::arch").is_some()
+                || find_token(code, "core::arch").is_some()
+                || find_token(code, "is_x86_64_feature_detected").is_some())
+        {
+            out.push(mk(rel, line, "zone-containment",
+                "std::arch/core::arch reference outside linalg/simd.rs"));
+        }
+
+        // eager-buffer (streaming zones, library code only)
+        if !line.in_test && is_zone(rel, EAGER_ZONES) {
+            for tok in EAGER_TOKENS {
+                if let Some(pos) = find_token(code, tok) {
+                    let is_call = code[pos + tok.len()..].trim_start().starts_with('(');
+                    let is_def = code[..pos].trim_end().ends_with("fn");
+                    if is_call && !is_def {
+                        out.push(mk(rel, line, "eager-buffer",
+                            "dense full-matrix constructor in a streaming module; \
+                             build per block or stream through BlockSource"));
+                        break;
+                    }
+                }
             }
         }
 
@@ -299,7 +364,7 @@ fn split_directive(body: &str) -> Option<(String, String)> {
     Some((rule, if justified { tail } else { String::new() }))
 }
 
-fn apply_allows(
+pub(crate) fn apply_allows(
     rel: &str,
     lines: &[SourceLine],
     findings: &mut Vec<Finding>,
@@ -421,7 +486,55 @@ mod tests {
         let (f, _) = lint("cluster/x.rs", text);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, "ordered-iteration");
+        // the lint's own report ordering is part of the contract…
         let (f, _) = lint("analysis/x.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "ordered-iteration");
+        // …and the socket/wire wall-clock zone never waived it
+        let (f, _) = lint("cluster/socket.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        let (f, _) = lint("testutil/x.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn arch_intrinsics_only_in_simd_kernel_file() {
+        let text = "use std::arch::x86_64::_mm256_set1_pd;\n";
+        let (f, _) = lint("linalg/mat.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "zone-containment");
+        let (f, _) = lint("linalg/simd.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = lint("linalg/simd.rs", "if is_x86_64_feature_detected!(\"avx2\") {}\n");
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = lint("driver/mod.rs", "if is_x86_64_feature_detected!(\"avx2\") {}\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn eager_constructors_flagged_in_streaming_zones_only() {
+        let text = "let out = Mat::zeros(rows, cols);\n";
+        let (f, _) = lint("encoding/stream.rs", text);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "eager-buffer");
+        let (f, _) = lint("data/shard.rs", "let (x, y) = src.load_dense()?;\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        // same constructor outside the streaming zones is fine
+        let (f, _) = lint("linalg/mat.rs", text);
+        assert!(f.is_empty(), "{f:?}");
+        // definitions don't fire — only call positions do
+        let (f, _) = lint("data/shard.rs", "pub fn load_dense(&self) -> Result<Mat> {\n");
+        assert!(f.is_empty(), "{f:?}");
+        // word boundaries: vstack( and a `stack` variable are not stack(
+        let (f, _) = lint("encoding/stream.rs", "let m = Mat::vstack(&blocks);\n");
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = lint("encoding/stream.rs", "let mut stack = Vec::new();\nstack.push(1);\n");
+        assert!(f.is_empty(), "{f:?}");
+        let (f, _) = lint("coordinator/mod.rs", "let s = enc.stack(&parts);\n");
+        assert_eq!(f.len(), 1, "{f:?}");
+        // test modules may build dense fixtures freely
+        let in_test = "#[cfg(test)]\nmod tests {\n    fn t() { let m = Mat::zeros(4, 4); }\n}\n";
+        let (f, _) = lint("encoding/stream.rs", in_test);
         assert!(f.is_empty(), "{f:?}");
     }
 

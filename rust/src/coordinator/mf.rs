@@ -9,6 +9,8 @@
 
 use crate::config::Scheme;
 use crate::delay::DelayModel;
+// The matfac coordinator launches nested per-block Experiments through the driver.
+// lint:allow(layer-order) — deliberate inversion, confined to this subsolver
 use crate::driver::{Experiment, Lbfgs, Problem};
 use crate::objectives::matfac::{LocalCholesky, SubSolver, Subproblem};
 use crate::objectives::QuadObjective;

@@ -66,6 +66,9 @@ pub struct QuadWorker {
     /// Encoded targets S̄_i y.
     pub sy: Vec<f64>,
     /// Optional PJRT executor for the gradient kernel.
+    // When absent (the default and the CI path) the same kernels run in-process,
+    // bit-for-bit, so no unsafe reaches the trace path.
+    // lint:allow(zone-containment) — optional accelerator handle, not hot-loop unsafe
     pub pjrt: Option<crate::runtime::GradExecutor>,
     /// Residual scratch buffer (hot-path allocation avoidance; see
     /// EXPERIMENTS.md §Perf iteration 5).

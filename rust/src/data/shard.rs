@@ -48,6 +48,7 @@ use std::fs;
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
+// lint:allow(zone-containment) — shares bench's dependency-free JSON writer; no timing flows
 use crate::bench::json;
 use crate::linalg::Mat;
 use anyhow::{ensure, Context, Result};
@@ -768,6 +769,7 @@ impl ShardedSource {
     /// explicit opt-out of streaming). NOT used by the streaming encode
     /// or driver paths — those consume [`BlockSource`] blocks.
     pub fn load_dense(&self) -> Result<(Mat, Option<Vec<f64>>)> {
+        // lint:allow(eager-buffer) — load_dense IS the documented whole-matrix escape hatch
         let mut x = Mat::zeros(self.manifest.rows, self.manifest.cols);
         let mut y =
             if self.manifest.has_targets { Some(vec![0.0; self.manifest.rows]) } else { None };

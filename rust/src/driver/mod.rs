@@ -83,6 +83,8 @@ use crate::delay::{from_spec, DelayModel, NoDelay};
 use crate::encoding::{partition_bounds, EncodingOp, ReplicationMap};
 use crate::linalg::{Mat, Precision};
 use crate::metrics::{Participation, Trace};
+// A missing index leaves the trace-identical in-process kernel path untouched.
+// lint:allow(zone-containment) — setup-time artifact discovery, not hot-loop unsafe
 use crate::runtime::ArtifactIndex;
 use crate::scenario::{Scenario, SpeedProfile};
 use anyhow::Result;

@@ -134,8 +134,13 @@ pub fn encode_data_streamed(enc: &EncodingOp, src: &dyn BlockSource) -> Result<V
     let p = src.cols();
     match &enc.gen {
         Generator::Fwht(op) => {
-            let mut outs: Vec<Mat> =
-                (0..enc.workers()).map(|i| Mat::zeros(enc.block_rows(i), p)).collect();
+            // Encoded OUTPUT partitions (this fn's return value); the input X still
+            // streams block-wise. The column-chunked ShardWriter mode that retires
+            // this buffer is the ROADMAP's last-eager-buffers item.
+            let mut outs: Vec<Mat> = (0..enc.workers())
+                // lint:allow(eager-buffer) — output partitions by contract; input streams
+                .map(|i| Mat::zeros(enc.block_rows(i), p))
+                .collect();
             let n = src.rows();
             let width = panel_width(src);
             let mut j0 = 0;
@@ -171,8 +176,10 @@ pub fn encode_data_streamed(enc: &EncodingOp, src: &dyn BlockSource) -> Result<V
             Ok(outs)
         }
         Generator::Sparse(s) => {
-            let mut outs: Vec<Mat> =
-                (0..enc.workers()).map(|i| Mat::zeros(enc.block_rows(i), p)).collect();
+            let mut outs: Vec<Mat> = (0..enc.workers())
+                // lint:allow(eager-buffer) — output partitions by contract; input streams
+                .map(|i| Mat::zeros(enc.block_rows(i), p))
+                .collect();
             let bounds = enc.block_bounds().to_vec();
             src.for_each_block(&mut |k0, xb, _y| {
                 for (i, out) in outs.iter_mut().enumerate() {
@@ -191,6 +198,7 @@ pub fn encode_data_streamed(enc: &EncodingOp, src: &dyn BlockSource) -> Result<V
                     SMatrix::Dense(m) => m,
                     SMatrix::Sparse(_) => unreachable!("dense generator yields dense blocks"),
                 };
+                // lint:allow(eager-buffer) — one worker block at a time, block_rows × p
                 let mut out = Mat::zeros(sb.rows(), p);
                 src.for_each_block(&mut |k0, xb, _y| {
                     acc_dense_block(sb, k0, xb, &mut out);
@@ -219,6 +227,7 @@ pub fn encode_rows_streamed(
     ensure!(enc.n == src.rows(), "encode dim mismatch");
     ensure!(r0 <= r1 && r1 <= enc.total_rows(), "row range out of bounds");
     let p = src.cols();
+    // lint:allow(eager-buffer) — caller-bounded row range (one shard's worth when streaming)
     let mut out = Mat::zeros(r1 - r0, p);
     match &enc.gen {
         Generator::Fwht(_) => bail!(
@@ -264,6 +273,7 @@ pub fn encode_data_streamed_with_dense_blocks(
     src: &dyn BlockSource,
 ) -> Result<Vec<Mat>> {
     let p = src.cols();
+    // lint:allow(eager-buffer) — outputs sized by the caller's generator blocks; X streams
     let mut outs: Vec<Mat> = blocks.iter().map(|b| Mat::zeros(b.rows(), p)).collect();
     src.for_each_block(&mut |k0, xb, _y| {
         for (b, out) in blocks.iter().zip(&mut outs) {
@@ -354,6 +364,7 @@ pub fn write_encoded_partitions(
             let mut chunk = match &paley_full {
                 Some(full) => {
                     let sb = full.row_block(c0, c1);
+                    // lint:allow(eager-buffer) — one shard-sized chunk between writes
                     let mut out = Mat::zeros(c1 - c0, src.cols());
                     src.for_each_block(&mut |k0, xb, _y| {
                         acc_dense_block(&sb, k0, xb, &mut out);

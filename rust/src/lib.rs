@@ -281,15 +281,57 @@
 //!   orders in library (non-test) code; NaN is sanitized at the delay
 //!   boundary, not smuggled through.
 //!
-//! Run it with `coded-opt lint` (`--json` for the machine-readable
-//! `coded-opt/lint-v1` report, `--root DIR` to point it elsewhere); it
-//! exits non-zero on any finding. Justified exceptions are inline:
-//! `// lint:allow(<rule>) — <why>` on (or directly above) the flagged
-//! line. The justification is mandatory — a bare allow is itself
-//! reported — and every suppression is counted in the report. What the
-//! scanner cannot see, CI's sanitizer jobs cover: ThreadSanitizer runs
-//! the thread-pool/cluster suites and Miri runs the `runtime`, `shard`,
-//! and `fwht` unit tests on the nightly toolchain.
+//! On top of the line rules, the lint extracts the crate's module
+//! dependency graph ([`analysis::graph`], from `use`/`mod`/qualified
+//! paths — comments, strings and `#[cfg(test)]` regions contribute no
+//! edges) and checks three architecture rules on it:
+//!
+//! - **`layer-order`** — imports must point down the layering DAG:
+//!
+//!   | layer | modules |
+//!   |-------|---------|
+//!   | 0 | `linalg` |
+//!   | 1 | `encoding`, `data` |
+//!   | 2 | `coordinator`, `cluster`, `scenario` |
+//!   | 3 | `driver` |
+//!   | 4 | `cli`, `main` |
+//!
+//!   An import from a lower-numbered layer into a higher one is a
+//!   finding. `analysis` sits outside the table: it may import
+//!   *nothing* from the crate, so the lint can never depend on what it
+//!   checks. Unlisted modules (`rng`, `metrics`, `objectives`, …) are
+//!   shared leaves, unconstrained.
+//! - **`zone-containment`** — the wall-clock zone (the declared
+//!   wall-clock modules above) and the unsafe zone (`runtime`,
+//!   `linalg::simd`) must
+//!   stay leaves: a trace-affecting module importing one is a finding,
+//!   exempting only a zone file's direct parent (that is how
+//!   `linalg/mod.rs` dispatches into the SIMD kernel). The same rule
+//!   pins `std::arch` / `core::arch` references to `linalg/simd.rs` at
+//!   the line level.
+//! - **`eager-buffer`** — the streaming modules (`encoding/stream.rs`,
+//!   `data/shard.rs`, `coordinator/mod.rs`) must not call dense
+//!   full-matrix constructors (`Mat::zeros`, `stack(`, `load_dense`);
+//!   out-of-core paths build per block or stream through
+//!   [`data::BlockSource`].
+//!
+//! Run it with `coded-opt lint` (`--format json` for the
+//! machine-readable `coded-opt/lint-v1` report, `--format github` for
+//! workflow error annotations on the PR diff, `--root DIR` to point it
+//! elsewhere). Exit codes are part of the contract: 0 clean, 1
+//! findings, 2 broken invocation (bad flag / unreadable root).
+//! Justified exceptions are inline: `// lint:allow(<rule>) — <why>` on
+//! (or directly above) the flagged line. The justification is
+//! mandatory — a bare allow is itself reported — and every suppression
+//! is counted in the report. The extracted graph is itself an
+//! artifact: `coded-opt lint --graph-out FILE` writes the
+//! `coded-opt/modgraph-v1` module DAG (sorted, line-number-free, so it
+//! only changes on real architectural drift). CI regenerates it and
+//! diffs against the committed `module-graph.json` at the repo root —
+//! an architecture change must update that file in the same PR. What
+//! the scanner cannot see, CI's sanitizer jobs cover: ThreadSanitizer
+//! runs the thread-pool/cluster suites and Miri runs the `runtime`,
+//! `shard`, and `fwht` unit tests on the nightly toolchain.
 //!
 //! ## Layout
 //!
@@ -322,7 +364,9 @@
 //!   artifacts (`artifacts/*.hlo.txt`) and executes them on the hot path.
 //! - [`metrics`] — timers, traces, histograms, writers.
 //! - [`analysis`] — the determinism-contract lint behind `coded-opt
-//!   lint` (std-only source scanner, rule set, `lint:allow` handling).
+//!   lint`: std-only source scanner, line rules, module-graph
+//!   extraction + architecture rules ([`analysis::graph`]), and
+//!   `lint:allow` handling. Depends on no other module in this list.
 //! - [`config`] / [`cli`] — experiment configuration and launcher parsing.
 //! - [`testutil`] — a small property-testing framework (offline
 //!   environment: no external proptest) and the scripted

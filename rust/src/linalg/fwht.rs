@@ -22,6 +22,7 @@ pub fn fwht(x: &mut [f64]) {
         if h >= 4 {
             for block in (0..n).step_by(step) {
                 let (lo, hi) = x[block..block + step].split_at_mut(h);
+                // lint:allow(zone-containment) — dispatched SIMD butterfly, bit-identical
                 crate::linalg::simd::butterfly(lo, hi);
             }
         } else {

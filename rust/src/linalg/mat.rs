@@ -15,6 +15,9 @@
 //! equivalence referee and the denominator of the `coded-opt bench`
 //! speedup gate.
 
+// The dispatcher contract (bit-identical to scalar at any width) is what keeps
+// reaching into the simd zone legal for this kernel family.
+// lint:allow(zone-containment) — dispatched SIMD fast path, bit-identical to scalar
 use super::{axpy, dot, par, simd};
 
 /// k-tile length for [`Mat::matmul`]: a `KB × cols` panel of the right

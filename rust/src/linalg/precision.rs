@@ -22,6 +22,7 @@
 //! Golden traces are recorded under [`Precision::F64`] (the default);
 //! `F32` runs are perf/memory experiments, not trace-conformant runs.
 
+// lint:allow(zone-containment) — dispatched SIMD fast path, bit-identical to scalar
 use super::{par, simd, Mat};
 
 /// Data-plane storage precision for worker shards.

@@ -121,6 +121,7 @@ impl Csr {
                 let (v1, c1) = row(i + 1);
                 let (v2, c2) = row(i + 2);
                 let (v3, c3) = row(i + 3);
+                // lint:allow(zone-containment) — dispatched SIMD row products, bit-identical
                 let quad = crate::linalg::simd::csr_dot4([v0, v1, v2, v3], [c0, c1, c2, c3], x);
                 yc[q..q + 4].copy_from_slice(&quad);
                 q += 4;

@@ -68,13 +68,19 @@
 //!   `worker listening on HOST:PORT …` once bound (`--listen` defaults
 //!   to `127.0.0.1:0`, an OS-assigned port); `--once` exits after one
 //!   master session (used by CI).
-//! - `lint [--root DIR] [--json] [--out lint-report.json]` — run the
-//!   determinism-contract static analysis (see [`coded_opt::analysis`])
-//!   over the source tree (default root: `rust/src`, falling back to
-//!   `src`). Prints findings and counted `lint:allow` suppressions;
-//!   `--json` emits the `coded-opt/lint-v1` report instead, `--out`
-//!   additionally writes it to a file. Exits non-zero on any finding —
-//!   this is the blocking CI `lint` job.
+//! - `lint [--root DIR] [--format human|json|github] [--out FILE]
+//!   [--graph-out FILE]` — run the determinism-contract static
+//!   analysis (see [`coded_opt::analysis`]) over the source tree
+//!   (default root: `rust/src`, falling back to `src`): the line
+//!   rules plus the module-graph architecture rules (`layer-order`,
+//!   `zone-containment`, `eager-buffer`). `--format github` emits
+//!   `::error` annotation lines so CI findings render inline on the
+//!   PR diff (`--json` is an alias for `--format json`); `--out`
+//!   writes the `coded-opt/lint-v1` JSON report to a file;
+//!   `--graph-out` writes the extracted `coded-opt/modgraph-v1`
+//!   module DAG (committed as `module-graph.json` at the repo root
+//!   and drift-gated by the CI `lint` job). Exit codes: 0 clean,
+//!   1 findings, 2 IO/usage errors.
 //! - `info` — build / artifact info.
 
 use anyhow::{bail, Result};
@@ -109,7 +115,7 @@ fn main() -> Result<()> {
         Some("encode") => cmd_encode(&args),
         Some("worker") => cmd_worker(&args),
         Some("bench") => cmd_bench(&args),
-        Some("lint") => cmd_lint(&args),
+        Some("lint") => lint_entry(&args),
         Some("info") | None => cmd_info(),
         Some(other) => bail!(
             "unknown subcommand '{other}' \
@@ -134,9 +140,33 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
-/// Determinism-contract static analysis over the source tree. Exits
-/// non-zero (via the error return) on any finding, so CI can gate on it.
-fn cmd_lint(args: &Args) -> Result<()> {
+/// Exit-code discipline for `lint`: 0 clean, 1 findings, 2 IO/usage
+/// errors — so CI and scripts can tell "the contract is violated"
+/// from "the tool could not run".
+fn lint_entry(args: &Args) -> Result<()> {
+    match cmd_lint(args) {
+        Ok(true) => Ok(()),
+        Ok(false) => std::process::exit(1),
+        Err(e) => {
+            eprintln!("lint error: {e:#}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Determinism-contract static analysis over the source tree (line
+/// rules + module-graph architecture rules). Returns whether the tree
+/// is clean; report/graph artifacts are written regardless, so a
+/// failing CI run still uploads them.
+fn cmd_lint(args: &Args) -> Result<bool> {
+    let format = match args.get("format") {
+        Some(f) => f.to_string(),
+        None if args.has_flag("json") => "json".to_string(),
+        None => "human".to_string(),
+    };
+    if !matches!(format.as_str(), "human" | "json" | "github") {
+        bail!("lint: unknown --format '{format}' (expected human, json or github)");
+    }
     let root = match args.get("root") {
         Some(dir) => std::path::PathBuf::from(dir),
         None => ["rust/src", "src"]
@@ -151,16 +181,18 @@ fn cmd_lint(args: &Args) -> Result<()> {
     if let Some(path) = args.get("out") {
         std::fs::write(path, report.to_json())?;
     }
-    if args.has_flag("json") {
-        println!("{}", report.to_json());
-    } else {
-        println!("lint root: {}", root.display());
-        print!("{}", report.render_human());
+    if let Some(path) = args.get("graph-out") {
+        std::fs::write(path, report.graph.to_json())?;
     }
-    if !report.is_clean() {
-        bail!("lint: {} determinism-contract finding(s)", report.findings.len());
+    match format.as_str() {
+        "json" => println!("{}", report.to_json()),
+        "github" => print!("{}", report.render_github(&root.to_string_lossy())),
+        _ => {
+            println!("lint root: {}", root.display());
+            print!("{}", report.render_human());
+        }
     }
-    Ok(())
+    Ok(report.is_clean())
 }
 
 /// Generate a synthetic dataset straight into the shard-v1 format.

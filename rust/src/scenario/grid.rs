@@ -10,6 +10,8 @@
 use super::Scenario;
 use crate::config::{Algorithm, Scheme};
 use crate::data::synth::gaussian_linear;
+// The grid enumerates Scheme×Solver×Scenario cells and runs each through the driver.
+// lint:allow(layer-order) — the sweep is a harness over driver::Experiment by design
 use crate::driver::{self, Experiment, Problem, RunOutput};
 use crate::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 use anyhow::{bail, Result};

@@ -1,0 +1,7 @@
+//! Lint fixture: dense full-matrix constructor inside a streaming
+//! module. Expected: exactly one `eager-buffer` finding (line 5).
+
+pub fn assemble(rows: usize, cols: usize) -> Mat {
+    let out = Mat::zeros(rows, cols);
+    out
+}

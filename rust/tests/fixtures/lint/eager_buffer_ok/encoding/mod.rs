@@ -1,0 +1,8 @@
+//! Lint fixture (known-good): the same dense constructor OUTSIDE the
+//! streaming file list is fine — the rule is zone-scoped, not global.
+//! Expected: no findings.
+
+pub fn assemble(rows: usize, cols: usize) -> Mat {
+    let out = Mat::zeros(rows, cols);
+    out
+}

@@ -1,0 +1,15 @@
+//! Lint fixture: path-like text in strings and comments must not grow
+//! the module graph. `driver` is a known module here, yet only the one
+//! real import below may appear as an edge (data -> linalg).
+//!
+//! A doc mention of `crate::driver::sweep` is not an import.
+
+pub const HINT: &str = "use crate::driver::sweep; crate::driver::run()";
+
+use crate::linalg::Mat;
+
+// a plain comment naming crate::driver::Experiment is not an import
+/// Neither is this doc reference to [`crate::driver::sweep`].
+pub fn rows(_m: &Mat) -> usize {
+    0
+}

@@ -1,0 +1,3 @@
+//! Layer stub so the graph knows the `driver` module.
+
+pub struct Experiment;

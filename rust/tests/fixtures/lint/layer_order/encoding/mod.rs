@@ -1,0 +1,6 @@
+//! Lint fixture: an encoding-layer module importing the driver layer.
+//! Expected: exactly one `layer-order` finding (line 4).
+
+use crate::driver::Experiment;
+
+pub fn plan(_e: &Experiment) {}

@@ -1,0 +1,8 @@
+//! Lint fixture: analysis/ must depend on no other crate module — not
+//! even the bottom layer. Expected: one `layer-order` finding (line 4).
+
+use crate::linalg::Mat;
+
+pub fn rows(_m: &Mat) -> usize {
+    0
+}

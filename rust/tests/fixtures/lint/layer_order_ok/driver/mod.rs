@@ -1,0 +1,6 @@
+//! Lint fixture (known-good): driver importing DOWN into encoding is
+//! exactly what the layering DAG allows. Expected: no findings.
+
+use crate::encoding::Encoder;
+
+pub fn run(_e: &Encoder) {}

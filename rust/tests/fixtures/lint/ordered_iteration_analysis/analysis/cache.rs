@@ -1,0 +1,7 @@
+//! Lint fixture: the lint's own analysis/ tree is trace-affecting too —
+//! finding order must be deterministic, so no hash collections.
+//! Expected: exactly one `ordered-iteration` finding (line 6).
+
+pub struct Cache {
+    pub seen: std::collections::HashMap<String, usize>,
+}

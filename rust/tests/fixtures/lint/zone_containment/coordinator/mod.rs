@@ -1,0 +1,8 @@
+//! Lint fixture: a trace-affecting module importing the unsafe
+//! `runtime` zone. Expected: one `zone-containment` finding (line 4).
+
+use crate::runtime::GradExecutor;
+
+pub struct Coordinator {
+    pub exec: GradExecutor,
+}

@@ -1,0 +1,3 @@
+//! Zone stub so the graph knows the `runtime` module (unsafe zone).
+
+pub struct GradExecutor;

@@ -1,0 +1,7 @@
+//! Lint fixture (known-good): a zone's direct parent may re-export it —
+//! that is how `linalg/mod.rs` dispatches into the SIMD kernel file.
+//! Expected: no findings.
+
+pub mod simd;
+
+pub use self::simd::dot4;

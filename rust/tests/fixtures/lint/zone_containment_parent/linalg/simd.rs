@@ -1,0 +1,5 @@
+//! Unsafe-zone stub (no actual unsafe, so no SAFETY comment needed).
+
+pub fn dot4(a: [f64; 4], b: [f64; 4]) -> f64 {
+    a[0] * b[0] + a[1] * b[1] + a[2] * b[2] + a[3] * b[3]
+}

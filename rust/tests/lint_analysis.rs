@@ -93,6 +93,91 @@ fn fixture_safety_comment_simd_ok_is_clean() {
 }
 
 #[test]
+fn fixture_layer_order_upward_import() {
+    let r = assert_single("layer_order", "layer-order", 4);
+    assert_eq!(r.findings[0].file, "encoding/mod.rs", "{:?}", r.findings[0]);
+    assert!(r.findings[0].message.contains("layer"), "{:?}", r.findings[0]);
+}
+
+/// The same edge in the allowed direction (driver → encoding) is clean.
+#[test]
+fn fixture_layer_order_downward_import_is_clean() {
+    let r = lint_fixture("layer_order_ok");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+/// analysis/ sits outside the DAG entirely: it may import NOTHING from
+/// the crate, not even the bottom layer.
+#[test]
+fn fixture_layer_order_analysis_imports_nothing() {
+    let r = assert_single("layer_order_analysis", "layer-order", 4);
+    assert_eq!(r.findings[0].file, "analysis/helper.rs", "{:?}", r.findings[0]);
+    assert!(r.findings[0].message.contains("analysis"), "{:?}", r.findings[0]);
+}
+
+#[test]
+fn fixture_zone_containment_trace_import() {
+    let r = assert_single("zone_containment", "zone-containment", 4);
+    assert_eq!(r.findings[0].file, "coordinator/mod.rs", "{:?}", r.findings[0]);
+    assert!(r.findings[0].message.contains("unsafe"), "{:?}", r.findings[0]);
+}
+
+/// A zone's direct parent may re-export it — that is how linalg/mod.rs
+/// dispatches into the SIMD kernel without a finding.
+#[test]
+fn fixture_zone_containment_parent_reexport_is_clean() {
+    let r = lint_fixture("zone_containment_parent");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn fixture_eager_buffer_in_streaming_module() {
+    let r = assert_single("eager_buffer", "eager-buffer", 5);
+    assert_eq!(r.findings[0].file, "encoding/stream.rs", "{:?}", r.findings[0]);
+}
+
+/// The identical constructor OUTSIDE the streaming file list is fine.
+#[test]
+fn fixture_eager_buffer_outside_zone_is_clean() {
+    let r = lint_fixture("eager_buffer_ok");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+/// analysis/ joined the ordered-iteration trace zone: the lint's own
+/// finding order must be deterministic too.
+#[test]
+fn fixture_ordered_iteration_analysis() {
+    let r = assert_single("ordered_iteration_analysis", "ordered-iteration", 6);
+    assert_eq!(r.findings[0].file, "analysis/cache.rs");
+}
+
+/// Path-like text inside strings and comments must not grow the graph:
+/// `driver` is a known module in this fixture, yet only the one real
+/// import appears as an edge.
+#[test]
+fn graph_noise_yields_only_real_edges() {
+    let r = lint_fixture("graph_noise");
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    let edges: Vec<(String, String)> = r.graph.edges().into_iter().collect();
+    assert_eq!(edges, vec![("data".to_string(), "linalg".to_string())], "{edges:?}");
+    let json = r.graph.to_json();
+    assert!(json.contains("\"schema\": \"coded-opt/modgraph-v1\""), "{json}");
+    assert!(!json.contains("\"line\""), "modgraph must be line-free:\n{json}");
+}
+
+/// Two walks of the same tree must serialize byte-identically — the
+/// committed `module-graph.json` drift gate depends on this.
+#[test]
+fn graph_extraction_is_deterministic() {
+    let a = lint_path(&src_root()).expect("first walk").graph.to_json();
+    let b = lint_path(&src_root()).expect("second walk").graph.to_json();
+    assert_eq!(a, b, "modgraph JSON must be byte-stable across walks");
+    let c = lint_fixture("graph_noise").graph.to_json();
+    let d = lint_fixture("graph_noise").graph.to_json();
+    assert_eq!(c, d);
+}
+
+#[test]
 fn fixture_no_silent_nan_skips_test_code() {
     let r = assert_single("no_silent_nan", "no-silent-nan", 6);
     // the NAN inside #[cfg(test)] produced no second finding
@@ -167,6 +252,11 @@ fn cli_exit_codes_and_json() {
         "no_silent_nan_unwrap",
         "allow_bare",
         "allow_unknown",
+        "layer_order",
+        "layer_order_analysis",
+        "zone_containment",
+        "eager_buffer",
+        "ordered_iteration_analysis",
     ] {
         let out = Command::new(bin)
             .args(["lint", "--root"])
@@ -193,6 +283,78 @@ fn cli_exit_codes_and_json() {
     );
     assert!(stdout.contains("\"schema\": \"coded-opt/lint-v1\""), "{stdout}");
     assert!(stdout.contains("\"finding_count\": 0"), "{stdout}");
+}
+
+/// The exit-code contract is part of the CLI surface: findings exit 1,
+/// IO/usage errors exit 2 — so CI can tell "violations" from "broken
+/// invocation" without parsing output.
+#[test]
+fn cli_exit_code_contract() {
+    let bin = env!("CARGO_BIN_EXE_coded-opt");
+
+    // findings → exactly 1
+    let out = Command::new(bin)
+        .args(["lint", "--root"])
+        .arg(fixture("layer_order"))
+        .output()
+        .expect("spawn coded-opt lint");
+    assert_eq!(out.status.code(), Some(1), "findings must exit 1");
+
+    // nonexistent root → exactly 2, with a diagnostic on stderr
+    let out = Command::new(bin)
+        .args(["lint", "--root", "/nonexistent/coded-opt-lint-root"])
+        .output()
+        .expect("spawn coded-opt lint");
+    assert_eq!(out.status.code(), Some(2), "IO error must exit 2");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("lint error"), "stderr: {err}");
+
+    // unknown --format → usage error, also 2
+    let out = Command::new(bin)
+        .args(["lint", "--format", "xml", "--root"])
+        .arg(fixture("allow_ok"))
+        .output()
+        .expect("spawn coded-opt lint");
+    assert_eq!(out.status.code(), Some(2), "usage error must exit 2");
+}
+
+/// `--format github` renders findings as workflow error annotations.
+#[test]
+fn cli_format_github_emits_annotations() {
+    let bin = env!("CARGO_BIN_EXE_coded-opt");
+    let out = Command::new(bin)
+        .args(["lint", "--format", "github", "--root"])
+        .arg(fixture("zone_containment"))
+        .output()
+        .expect("spawn coded-opt lint");
+    assert_eq!(out.status.code(), Some(1));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        stdout.contains("::error file=") && stdout.contains("title=zone-containment"),
+        "{stdout}"
+    );
+}
+
+/// `--graph-out` writes the modgraph-v1 artifact CI commits and diffs.
+#[test]
+fn cli_graph_out_writes_modgraph() {
+    let bin = env!("CARGO_BIN_EXE_coded-opt");
+    let dir = std::env::temp_dir().join(format!("lint-graph-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("module-graph.json");
+    let out = Command::new(bin)
+        .args(["lint", "--root"])
+        .arg(fixture("graph_noise"))
+        .arg("--graph-out")
+        .arg(&path)
+        .output()
+        .expect("spawn coded-opt lint");
+    assert!(out.status.success(), "graph_noise fixture is clean");
+    let text = std::fs::read_to_string(&path).expect("graph written");
+    assert!(text.contains("\"schema\": \"coded-opt/modgraph-v1\""), "{text}");
+    assert!(text.contains("\"module_count\": 3"), "{text}");
+    assert!(text.contains("{\"from\": \"data\", \"to\": \"linalg\"}"), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// `--out` writes the same JSON the CI job uploads as an artifact.
