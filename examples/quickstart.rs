@@ -74,6 +74,47 @@ fn main() -> anyhow::Result<()> {
         out.trace.total_time()
     );
 
+    // Adaptive wait-for-k: instead of a fixed k, an online controller
+    // (coded_opt::control) watches each round's arrival times and moves
+    // the NEXT round's k within hard bounds — never below the erasure
+    // floor ceil(m/β) the encoding can absorb, never above the live
+    // worker count. Decisions derive only from recorded arrivals, so a
+    // replayed delay tape reproduces every k decision bit-for-bit and
+    // the adaptive golden fixtures pin the whole decision sequence.
+    // Controller-steered runs carry a per-round log in RunOutput
+    // (requested/effective k, live count, winner arrival times), also
+    // emitted by `coded-opt run --policy adaptive --trace-out`.
+    use coded_opt::control::KPolicy;
+    let steered = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(m)
+        .wait_for(k)
+        .redundancy(2.0)
+        .seed(42)
+        .scenario(&sc)
+        .controller(KPolicy::parse("adaptive")?)
+        .label("adaptive")
+        .eval(|w| (prob.objective(w), 0.0))
+        .run(Gd::with_step(1.0 / prob.smoothness()).lambda(0.05).iters(200))?;
+    let (k_lo, k_hi) = steered
+        .rounds
+        .iter()
+        .fold((m, 0), |(lo, hi), r| (lo.min(r.k_effective), hi.max(r.k_effective)));
+    println!(
+        "controller '{}': effective k ranged {k_lo}..{k_hi} over {} rounds of '{}'",
+        steered.controller,
+        steered.rounds.len(),
+        sc.name
+    );
+    // The redundancy/latency trade-off those knobs span is a standing
+    // artifact, not an ad-hoc figure: `coded-opt pareto` sweeps
+    // (scheme, β, k-policy) × scenario, attaches the erasure-robustness
+    // coordinate (m − ceil(m/β))/m to each cell's time-to-ε, prunes
+    // per-scenario dominated points, and writes a `coded-opt/pareto-v1`
+    // report (per-cell rows use the same metrics as `coded-opt scenario
+    // --json-out`, schema `coded-opt/grid-v1`). CI's pareto-smoke job
+    // runs a pinned-seed sweep twice and byte-compares the reports.
+
     // Compute-kernel threading: the linalg kernels run on a
     // deterministic chunk pool (coded_opt::linalg::par). Results are
     // BIT-IDENTICAL at any thread count — the knob only trades

@@ -8,6 +8,7 @@
 
 use coded_opt::bench::banner;
 use coded_opt::config::{Algorithm, Scheme};
+use coded_opt::control::KPolicy;
 use coded_opt::scenario::{run_grid, summary_table, GridSpec, Scenario};
 
 fn main() -> anyhow::Result<()> {
@@ -30,6 +31,7 @@ fn main() -> anyhow::Result<()> {
         iters: 60,
         seed: 42,
         lambda: 0.05,
+        policy: KPolicy::Static,
     };
     println!(
         "{} cells: n={} p={} m={} k={} β={} iters={}\n",

@@ -42,9 +42,10 @@ pub const LAYER_RANKS: &[(&str, u8)] = &[
     ("coordinator", 2),
     ("cluster", 2),
     ("scenario", 2),
-    ("driver", 3),
-    ("cli", 4),
-    ("main", 4),
+    ("control", 3),
+    ("driver", 4),
+    ("cli", 5),
+    ("main", 5),
 ];
 
 /// One module reference occurrence (an edge plus where it was seen).

@@ -58,7 +58,8 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         id: "layer-order",
         summary: "imports must follow the layering DAG (linalg → encoding/data → \
-                  coordinator/cluster/scenario → driver → cli/main); analysis imports nothing",
+                  coordinator/cluster/scenario → control → driver → cli/main); \
+                  analysis imports nothing",
     },
     RuleInfo {
         id: "zone-containment",
@@ -115,6 +116,7 @@ const SORT_WINDOW: usize = 2;
 pub(crate) const TRACE_MODULES: &[&str] = &[
     "analysis/",
     "cluster/",
+    "control/",
     "coordinator/",
     "data/",
     "delay/",

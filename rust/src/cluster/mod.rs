@@ -86,6 +86,9 @@ pub struct RoundResult {
     pub elapsed: f64,
     /// Workers that were interrupted (A_tᶜ).
     pub interrupted: Vec<usize>,
+    /// Non-crashed workers at dispatch time — the ceiling a clamped
+    /// round's effective k was held to (see [`Gather::round_clamped`]).
+    pub live: usize,
 }
 
 impl RoundResult {
@@ -106,7 +109,20 @@ impl RoundResult {
 pub trait Gather {
     /// Broadcast one task per worker (built by `task_for`), wait for the
     /// fastest `k` responses, interrupt the rest, return the round.
+    /// Panics if fewer than `k` workers are live — a static wait-for-k
+    /// run that outlives its erasure tolerance is a configuration error.
     fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult;
+
+    /// [`Gather::round`], but `k` is clamped down to the live worker
+    /// count instead of panicking when crashes push `live` below `k` —
+    /// the entry point the adaptive wait-for-k controller uses, since a
+    /// controller's request is made *before* it can observe this round's
+    /// crashes. Still panics when no worker at all is live. All three
+    /// engines override this; the default delegates to [`Gather::round`]
+    /// for exotic implementations that never lose workers.
+    fn round_clamped(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        self.round(k, task_for)
+    }
 
     /// Worker count m.
     fn workers(&self) -> usize;
@@ -128,6 +144,7 @@ mod tests {
             ],
             elapsed: 0.2,
             interrupted: vec![1, 2],
+            live: 4,
         };
         assert_eq!(rr.active_set(), vec![0, 3]);
         assert_eq!(rr.arrival_order(), vec![3, 0]);

@@ -73,8 +73,15 @@ impl SimCluster {
     }
 }
 
-impl Gather for SimCluster {
-    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+impl SimCluster {
+    /// Shared round body. `clamp` selects [`Gather::round_clamped`]'s
+    /// behavior: hold k down to the live count instead of panicking.
+    fn round_impl(
+        &mut self,
+        k: usize,
+        clamp: bool,
+        task_for: &mut dyn FnMut(usize) -> Task,
+    ) -> RoundResult {
         let m = self.workers.len();
         assert!(k >= 1 && k <= m, "k={k} out of range for m={m}");
         // Arrival time of each worker if it were allowed to finish.
@@ -92,11 +99,17 @@ impl Gather for SimCluster {
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         // Crashed workers (infinite delay) can never be waited for.
         let live = arrivals.iter().take_while(|(t, _)| t.is_finite()).count();
-        assert!(
-            k <= live,
-            "round {}: k={k} but only {live} live (non-crashed) workers of m={m}",
-            self.iter
-        );
+        let k = if clamp {
+            assert!(live >= 1, "round {}: no live (non-crashed) workers of m={m}", self.iter);
+            k.min(live)
+        } else {
+            assert!(
+                k <= live,
+                "round {}: k={k} but only {live} live (non-crashed) workers of m={m}",
+                self.iter
+            );
+            k
+        };
         let winners = &arrivals[..k];
         let elapsed = winners.last().unwrap().0;
         let mut responses = Vec::with_capacity(k);
@@ -109,7 +122,17 @@ impl Gather for SimCluster {
         let interrupted: Vec<usize> = arrivals[k..].iter().map(|&(_, i)| i).collect();
         self.clock += elapsed + self.master_overhead;
         self.iter += 1;
-        RoundResult { responses, elapsed, interrupted }
+        RoundResult { responses, elapsed, interrupted, live }
+    }
+}
+
+impl Gather for SimCluster {
+    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        self.round_impl(k, false, task_for)
+    }
+
+    fn round_clamped(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        self.round_impl(k, true, task_for)
     }
 
     fn workers(&self) -> usize {
@@ -250,6 +273,33 @@ mod tests {
         let delay = crate::delay::TraceDelay::new(vec![vec![0.0, f64::INFINITY]]);
         let mut c = mk_cluster(2, Box::new(delay));
         c.round(2, &mut |_| task(0));
+    }
+
+    #[test]
+    fn clamped_round_holds_k_to_live() {
+        // worker 1 crashed: round_clamped(2) must deliver 1 response
+        // instead of panicking, and report live=1.
+        let delay = crate::delay::TraceDelay::new(vec![
+            vec![0.0, f64::INFINITY],
+            vec![0.0, 0.0],
+        ]);
+        let mut c = mk_cluster(2, Box::new(delay));
+        let r0 = c.round_clamped(2, &mut |_| task(0));
+        assert_eq!(r0.responses.len(), 1);
+        assert_eq!(r0.live, 1);
+        assert_eq!(r0.active_set(), vec![0]);
+        // next round both live again: full k honored, live reported
+        let r1 = c.round_clamped(2, &mut |_| task(1));
+        assert_eq!(r1.responses.len(), 2);
+        assert_eq!(r1.live, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "no live")]
+    fn clamped_round_still_panics_with_zero_live() {
+        let delay = crate::delay::TraceDelay::new(vec![vec![f64::INFINITY, f64::INFINITY]]);
+        let mut c = mk_cluster(2, Box::new(delay));
+        c.round_clamped(1, &mut |_| task(0));
     }
 
     #[test]

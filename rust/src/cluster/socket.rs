@@ -245,8 +245,18 @@ impl SocketCluster {
     }
 }
 
-impl Gather for SocketCluster {
-    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+impl SocketCluster {
+    /// Shared round body. `clamp` selects [`Gather::round_clamped`]'s
+    /// behavior: hold k down to the live count instead of panicking.
+    /// The effective k is re-derived on every dispatch pass — a winner
+    /// erased mid-round shrinks `live`, and a clamped round must track
+    /// that instead of waiting for a replacement that may not exist.
+    fn round_impl(
+        &mut self,
+        k: usize,
+        clamp: bool,
+        task_for: &mut dyn FnMut(usize) -> Task,
+    ) -> RoundResult {
         let m = self.conns.len();
         assert!(k >= 1 && k <= m, "k={k} out of range for m={m}");
         // Virtual arrivals: SimCluster's exact formula over the same
@@ -267,18 +277,30 @@ impl Gather for SocketCluster {
             .collect();
         arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         let mut payloads: Vec<Option<Vec<f64>>> = (0..m).map(|_| None).collect();
+        let mut k_eff = k;
+        let mut final_live;
         loop {
             let live = arrivals.iter().take_while(|(t, _)| t.is_finite()).count();
-            assert!(
-                k <= live,
-                "round {}: k={k} but only {live} live (non-crashed) workers of m={m}",
-                self.iter
-            );
+            if clamp {
+                assert!(
+                    live >= 1,
+                    "round {}: no live (non-crashed) workers of m={m}",
+                    self.iter
+                );
+                k_eff = k.min(live);
+            } else {
+                assert!(
+                    k <= live,
+                    "round {}: k={k} but only {live} live (non-crashed) workers of m={m}",
+                    self.iter
+                );
+            }
+            final_live = live;
             // Dispatch the k virtual winners that have not answered
             // yet, in arrival order (the task_for order SimCluster
             // uses); collect each result before the next dispatch.
             let mut faulted: Vec<usize> = Vec::new();
-            for &(_, i) in &arrivals[..k] {
+            for &(_, i) in &arrivals[..k_eff] {
                 if payloads[i].is_some() {
                     continue;
                 }
@@ -312,17 +334,27 @@ impl Gather for SocketCluster {
             }
             arrivals.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
         }
-        let winners = &arrivals[..k];
+        let winners = &arrivals[..k_eff];
         let elapsed = winners.last().unwrap().0;
-        let mut responses = Vec::with_capacity(k);
+        let mut responses = Vec::with_capacity(k_eff);
         for &(arrival, i) in winners {
             let payload = payloads[i].take().expect("every winner answered");
             responses.push(Response { worker: i, payload, arrival });
         }
-        let interrupted: Vec<usize> = arrivals[k..].iter().map(|&(_, i)| i).collect();
+        let interrupted: Vec<usize> = arrivals[k_eff..].iter().map(|&(_, i)| i).collect();
         self.clock += elapsed + self.master_overhead;
         self.iter += 1;
-        RoundResult { responses, elapsed, interrupted }
+        RoundResult { responses, elapsed, interrupted, live: final_live }
+    }
+}
+
+impl Gather for SocketCluster {
+    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        self.round_impl(k, false, task_for)
+    }
+
+    fn round_clamped(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        self.round_impl(k, true, task_for)
     }
 
     fn workers(&self) -> usize {

@@ -159,8 +159,15 @@ fn worker_loop(
     }
 }
 
-impl Gather for ThreadCluster {
-    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+impl ThreadCluster {
+    /// Shared round body. `clamp` selects [`Gather::round_clamped`]'s
+    /// behavior: hold k down to the live count instead of panicking.
+    fn round_impl(
+        &mut self,
+        k: usize,
+        clamp: bool,
+        task_for: &mut dyn FnMut(usize) -> Task,
+    ) -> RoundResult {
         let m = self.task_txs.len();
         assert!(k >= 1 && k <= m, "k={k} out of range for m={m}");
         let iter = self.iter;
@@ -185,10 +192,16 @@ impl Gather for ThreadCluster {
             dispatched[i] = true;
         }
         let live = dispatched.iter().filter(|&&d| d).count();
-        assert!(
-            k <= live,
-            "round {iter}: k={k} but only {live} live (non-crashed) workers of m={m}"
-        );
+        let k = if clamp {
+            assert!(live >= 1, "round {iter}: no live (non-crashed) workers of m={m}");
+            k.min(live)
+        } else {
+            assert!(
+                k <= live,
+                "round {iter}: k={k} but only {live} live (non-crashed) workers of m={m}"
+            );
+            k
+        };
         let mut responses: Vec<Response> = Vec::with_capacity(k);
         let mut responded = vec![false; m];
         while responses.len() < k {
@@ -216,7 +229,17 @@ impl Gather for ThreadCluster {
         }
         let elapsed = responses.last().map(|r| r.arrival).unwrap_or(0.0);
         self.iter += 1;
-        RoundResult { responses, elapsed, interrupted }
+        RoundResult { responses, elapsed, interrupted, live }
+    }
+}
+
+impl Gather for ThreadCluster {
+    fn round(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        self.round_impl(k, false, task_for)
+    }
+
+    fn round_clamped(&mut self, k: usize, task_for: &mut dyn FnMut(usize) -> Task) -> RoundResult {
+        self.round_impl(k, true, task_for)
     }
 
     fn workers(&self) -> usize {
@@ -337,6 +360,22 @@ mod tests {
         let delay = crate::delay::TraceDelay::new(vec![vec![0.0, f64::INFINITY]]);
         let mut c = mk(2, Box::new(delay));
         c.round(2, &mut |_| task(0, vec![]));
+    }
+
+    #[test]
+    fn clamped_round_holds_k_to_live() {
+        let delay = crate::delay::TraceDelay::new(vec![
+            vec![0.0, f64::INFINITY],
+            vec![0.0, 0.0],
+        ]);
+        let mut c = mk(2, Box::new(delay));
+        let r0 = c.round_clamped(2, &mut |_| task(0, vec![]));
+        assert_eq!(r0.responses.len(), 1);
+        assert_eq!(r0.live, 1);
+        assert_eq!(r0.active_set(), vec![0]);
+        let r1 = c.round_clamped(2, &mut |_| task(1, vec![]));
+        assert_eq!(r1.responses.len(), 2);
+        assert_eq!(r1.live, 2);
     }
 
     #[test]

@@ -190,6 +190,11 @@ pub struct ExperimentConfig {
     /// shard shape matches a compiled artifact; fall back to native rust
     /// kernels otherwise.
     pub use_pjrt: bool,
+    /// Wait-for-k runtime policy ([`crate::control::KPolicy`], parsed
+    /// from `k_policy = "static" | "adaptive[:opts]"`). Static keeps
+    /// the legacy fixed-k gather bit-for-bit; adaptive retunes k
+    /// between rounds within the erasure-floor bounds.
+    pub k_policy: crate::control::KPolicy,
 }
 
 impl Default for ExperimentConfig {
@@ -211,6 +216,7 @@ impl Default for ExperimentConfig {
             delay: DelaySpec::Exponential { mean: 0.001 },
             scenario: None,
             use_pjrt: false,
+            k_policy: crate::control::KPolicy::Static,
         }
     }
 }
@@ -261,6 +267,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.get_bool(s, "use_pjrt") {
             cfg.use_pjrt = v;
+        }
+        if let Some(v) = doc.get_str(s, "k_policy") {
+            cfg.k_policy = crate::control::KPolicy::parse(v)?;
         }
         if doc.has_section("delay") {
             cfg.delay = DelaySpec::parse(doc, "delay")?;
@@ -338,6 +347,7 @@ iterations = 50
 n = 1024
 p = 1500
 lambda = 0.05
+k_policy = "adaptive:widen=3.0"
 
 [delay]
 kind = "bimodal"
@@ -350,7 +360,15 @@ kind = "bimodal"
         assert_eq!(cfg.workers, 32);
         assert_eq!(cfg.k, 12);
         assert_eq!(cfg.delay, DelaySpec::Bimodal);
+        assert_eq!(cfg.k_policy.name(), "adaptive");
         assert!((cfg.eta() - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_k_policy_rejected() {
+        let text = "[experiment]\nk_policy = \"sometimes\"\n";
+        let doc = TomlDoc::parse(text).unwrap();
+        assert!(ExperimentConfig::from_doc(&doc).is_err());
     }
 
     #[test]

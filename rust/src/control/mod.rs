@@ -1,0 +1,390 @@
+//! Adaptive wait-for-k runtime control.
+//!
+//! The paper fixes the wait-for-k parameter ahead of time; this module
+//! closes the loop at runtime. A [`Controller`] watches the per-round
+//! arrival-time record ([`RoundStats`]) and chooses the `k` to request
+//! for the *next* round, trading redundancy headroom against straggler
+//! latency while the run is in flight.
+//!
+//! ## Controller contract
+//!
+//! 1. **Inputs are the recorded arrivals only.** A controller sees the
+//!    [`RoundStats`] stream the engines recorded — never wall clocks,
+//!    RNGs, thread timing, or ambient state — so a controller-enabled
+//!    run replays bit-identically from a delay tape and golden-traces
+//!    like any static run.
+//! 2. **Hard bounds.** The returned `k` never drops below the scheme's
+//!    erasure-tolerance floor ([`erasure_floor`], derived from the
+//!    achieved redundancy β) and never exceeds `m`; it is additionally
+//!    held to the last observed live-worker count (the engines clamp
+//!    the *effective* k to live at dispatch time regardless, via
+//!    `Gather::round_clamped`).
+//! 3. **Decisions are per-round.** `observe` is called exactly once per
+//!    gather round, after the round completes, with that round's stats.
+//!
+//! The driver threads a controller into the coordinator loops as an
+//! opaque `FnMut(&RoundStats) -> usize` closure
+//! (`coordinator::RoundCtl::adaptive`), keeping the coordinator layer
+//! below `control` in the module DAG.
+//!
+//! [`RoundStats`]: crate::metrics::RoundStats
+
+use anyhow::{bail, Context, Result};
+
+use crate::metrics::RoundStats;
+
+pub mod pareto;
+
+/// Minimum `k` the encoding can tolerate without biasing the assembled
+/// gradient: `ceil(m / β)`, clamped to `[1, m]`.
+///
+/// With redundancy β every partition's signal is spread over ~β worker
+/// blocks, so any `ceil(m/β)` responses carry a full-rank view of the
+/// data. For an uncoded run (β = 1) the floor is `m` — shedding any
+/// worker silently drops its data block.
+pub fn erasure_floor(m: usize, beta: f64) -> usize {
+    let b = beta.max(1.0);
+    ((m as f64 / b).ceil() as usize).clamp(1, m)
+}
+
+/// Online wait-for-k policy: one `observe` call per completed gather
+/// round, returning the `k` to request next round. See the module docs
+/// for the determinism and bounds contract.
+pub trait Controller {
+    /// Stable policy name recorded in traces and reports.
+    fn name(&self) -> &'static str;
+
+    /// The `k` to request for round 0, before any stats exist.
+    fn initial_k(&self) -> usize;
+
+    /// Digest one completed round; return next round's requested `k`.
+    fn observe(&mut self, stats: &RoundStats) -> usize;
+}
+
+/// The paper's baseline: `k` fixed for the whole run.
+#[derive(Clone, Debug)]
+pub struct StaticK {
+    pub k: usize,
+}
+
+impl Controller for StaticK {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn initial_k(&self) -> usize {
+        self.k
+    }
+
+    fn observe(&mut self, _stats: &RoundStats) -> usize {
+        self.k
+    }
+}
+
+/// Tuning knobs for [`AdaptiveK`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptiveConfig {
+    /// Shrink `k` when the tail gap exceeds `widen ×` the median
+    /// inter-arrival gap (the last waited-for worker is a straggler).
+    pub widen: f64,
+    /// Grow `k` when the tail gap is at most `shrink ×` the median gap
+    /// (the marginal response was nearly free).
+    pub shrink: f64,
+    /// Consecutive same-direction signals required before moving
+    /// (hysteresis); 1 moves immediately.
+    pub patience: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { widen: 2.0, shrink: 0.75, patience: 1 }
+    }
+}
+
+/// Arrival-gap adaptive policy.
+///
+/// Per round it computes the inter-arrival gaps of the `k_effective`
+/// recorded arrivals, compares the tail gap (cost of the last response
+/// waited for) against the median of the earlier gaps, and steps `k`
+/// by one: down when the tail is `widen ×` the median or worse, up
+/// when it is within `shrink ×` the median. Every decision is clamped
+/// to `[erasure_floor(m, β), m]` and to the observed live count, per
+/// the module contract.
+#[derive(Clone, Debug)]
+pub struct AdaptiveK {
+    cfg: AdaptiveConfig,
+    k: usize,
+    floor: usize,
+    m: usize,
+    /// Signed run-length of same-direction signals (hysteresis state).
+    streak: i32,
+}
+
+impl AdaptiveK {
+    /// `k0` is the starting request (clamped into the hard bounds);
+    /// `beta` is the ACHIEVED redundancy of the built encoding.
+    pub fn new(k0: usize, m: usize, beta: f64, cfg: AdaptiveConfig) -> AdaptiveK {
+        assert!(m >= 1, "need at least one worker");
+        let floor = erasure_floor(m, beta);
+        AdaptiveK {
+            cfg: AdaptiveConfig { patience: cfg.patience.max(1), ..cfg },
+            k: k0.clamp(floor, m),
+            floor,
+            m,
+            streak: 0,
+        }
+    }
+
+    /// The erasure-tolerance floor this controller never drops below.
+    pub fn floor(&self) -> usize {
+        self.floor
+    }
+}
+
+impl Controller for AdaptiveK {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn initial_k(&self) -> usize {
+        self.k
+    }
+
+    fn observe(&mut self, stats: &RoundStats) -> usize {
+        // Direction signal from the recorded arrival gaps. With fewer
+        // than 3 arrivals there is no tail-vs-body comparison: hold.
+        let a = &stats.arrivals;
+        let mut dir: i32 = 0;
+        if a.len() >= 3 {
+            let gaps: Vec<f64> = a.windows(2).map(|w| w[1] - w[0]).collect();
+            let tail = *gaps.last().unwrap();
+            let mut body = gaps[..gaps.len() - 1].to_vec();
+            body.sort_by(|x, y| x.total_cmp(y));
+            let median = body[(body.len() - 1) / 2];
+            if tail > self.cfg.widen * median {
+                dir = -1;
+            } else if tail <= self.cfg.shrink * median {
+                dir = 1;
+            }
+        }
+        if dir == 0 {
+            self.streak = 0;
+        } else if self.streak != 0 && (dir > 0) == (self.streak > 0) {
+            self.streak += dir;
+        } else {
+            self.streak = dir;
+        }
+        if dir != 0 && self.streak.unsigned_abs() as usize >= self.cfg.patience {
+            self.k = if dir > 0 { self.k + 1 } else { self.k.saturating_sub(1) };
+            self.streak = 0;
+        }
+        // Hard bounds: never below the erasure floor, never above m,
+        // and held to the last observed live count (the floor wins if
+        // live has dipped below it — the engine clamp covers the gap).
+        self.k = self.k.clamp(self.floor, self.m).min(stats.live.max(self.floor));
+        self.k
+    }
+}
+
+/// Parsed k-policy selection, carried by `driver::Experiment` and
+/// `scenario::GridSpec`.
+///
+/// `Static` preserves the legacy strict-gather semantics (a round with
+/// `k > live` panics); `Adaptive` routes rounds through the clamped
+/// gather and moves `k` between rounds.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum KPolicy {
+    #[default]
+    Static,
+    Adaptive(AdaptiveConfig),
+}
+
+impl KPolicy {
+    /// Parse `"static"`, `"adaptive"`, or
+    /// `"adaptive:widen=2.0,shrink=0.75,patience=1"`.
+    pub fn parse(s: &str) -> Result<KPolicy> {
+        let (head, opts) = match s.split_once(':') {
+            Some((h, o)) => (h, Some(o)),
+            None => (s, None),
+        };
+        match head {
+            "static" => {
+                if opts.is_some() {
+                    bail!("policy 'static' takes no options");
+                }
+                Ok(KPolicy::Static)
+            }
+            "adaptive" => {
+                let mut cfg = AdaptiveConfig::default();
+                for kv in opts.unwrap_or("").split(',').filter(|t| !t.is_empty()) {
+                    let (key, val) = kv
+                        .split_once('=')
+                        .with_context(|| format!("bad policy option '{kv}' (want key=value)"))?;
+                    match key {
+                        "widen" => cfg.widen = val.parse().context("bad widen")?,
+                        "shrink" => cfg.shrink = val.parse().context("bad shrink")?,
+                        "patience" => cfg.patience = val.parse().context("bad patience")?,
+                        other => bail!("unknown adaptive option '{other}'"),
+                    }
+                }
+                Ok(KPolicy::Adaptive(cfg))
+            }
+            other => bail!("unknown k-policy '{other}' (try: static, adaptive)"),
+        }
+    }
+
+    /// Stable name, matching the built controller's `name()`.
+    pub fn name(&self) -> &'static str {
+        match self {
+            KPolicy::Static => "static",
+            KPolicy::Adaptive(_) => "adaptive",
+        }
+    }
+
+    pub fn is_static(&self) -> bool {
+        matches!(self, KPolicy::Static)
+    }
+
+    /// Instantiate the controller for a run with `m` workers, starting
+    /// request `k0`, and achieved redundancy `beta`.
+    pub fn build(&self, k0: usize, m: usize, beta: f64) -> Box<dyn Controller> {
+        match self {
+            KPolicy::Static => Box::new(StaticK { k: k0 }),
+            KPolicy::Adaptive(cfg) => Box::new(AdaptiveK::new(k0, m, beta, cfg.clone())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(round: usize, live: usize, arrivals: &[f64]) -> RoundStats {
+        RoundStats {
+            round,
+            k_requested: arrivals.len(),
+            k_effective: arrivals.len(),
+            live,
+            elapsed: arrivals.last().copied().unwrap_or(0.0),
+            arrivals: arrivals.to_vec(),
+        }
+    }
+
+    #[test]
+    fn erasure_floor_bounds() {
+        assert_eq!(erasure_floor(8, 2.0), 4);
+        assert_eq!(erasure_floor(8, 1.0), 8);
+        assert_eq!(erasure_floor(8, 3.0), 3);
+        assert_eq!(erasure_floor(8, 100.0), 1);
+        // β < 1 is treated as uncoded, not a panic.
+        assert_eq!(erasure_floor(8, 0.5), 8);
+        assert_eq!(erasure_floor(1, 2.0), 1);
+    }
+
+    #[test]
+    fn static_k_never_moves() {
+        let mut c = StaticK { k: 6 };
+        assert_eq!(c.initial_k(), 6);
+        assert_eq!(c.observe(&stats(0, 8, &[1.0, 2.0, 50.0])), 6);
+        assert_eq!(c.observe(&stats(1, 2, &[1.0])), 6);
+    }
+
+    #[test]
+    fn adaptive_shrinks_on_straggler_tail() {
+        let mut c = AdaptiveK::new(6, 8, 2.0, AdaptiveConfig::default());
+        // gaps 1,1,1,1,7: tail 7 > 2×median(1) → shed the straggler.
+        let k = c.observe(&stats(0, 8, &[1.0, 2.0, 3.0, 4.0, 5.0, 12.0]));
+        assert_eq!(k, 5);
+        // ...but never below the erasure floor (m/β = 4).
+        let k = c.observe(&stats(1, 8, &[1.0, 2.0, 3.0, 4.0, 11.0]));
+        assert_eq!(k, 4);
+        let k = c.observe(&stats(2, 8, &[1.0, 2.0, 3.0, 10.0]));
+        assert_eq!(k, 4, "floor must hold");
+        assert_eq!(c.floor(), 4);
+    }
+
+    #[test]
+    fn adaptive_grows_on_cheap_tail() {
+        let mut c = AdaptiveK::new(6, 8, 2.0, AdaptiveConfig::default());
+        // gaps 1,1,1,1,0.1: tail ≤ 0.75×median → the marginal response
+        // was nearly free, wait for one more.
+        let k = c.observe(&stats(0, 8, &[1.0, 2.0, 3.0, 4.0, 5.0, 5.1]));
+        assert_eq!(k, 7);
+        let k = c.observe(&stats(1, 8, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 6.1]));
+        assert_eq!(k, 8);
+        let k = c.observe(&stats(2, 8, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 7.05]));
+        assert_eq!(k, 8, "ceiling at m");
+    }
+
+    #[test]
+    fn adaptive_holds_on_balanced_gaps_or_short_rounds() {
+        let mut c = AdaptiveK::new(5, 8, 2.0, AdaptiveConfig::default());
+        // Equal gaps: tail == median, neither threshold fires.
+        assert_eq!(c.observe(&stats(0, 8, &[1.0, 2.0, 3.0, 4.0, 5.0])), 5);
+        // Fewer than 3 arrivals: no signal.
+        assert_eq!(c.observe(&stats(1, 8, &[1.0, 2.0])), 5);
+    }
+
+    #[test]
+    fn adaptive_respects_live_ceiling() {
+        let mut c = AdaptiveK::new(6, 8, 2.0, AdaptiveConfig::default());
+        // Crash round: only 5 live. Even with a grow signal the next
+        // request is held to live.
+        let k = c.observe(&stats(0, 5, &[1.0, 2.0, 3.0, 4.0, 4.05]));
+        assert_eq!(k, 5);
+        // live dips below the floor: the floor wins for the REQUEST
+        // (the engine clamps the effective k to live at dispatch).
+        let k = c.observe(&stats(1, 3, &[1.0, 2.0, 3.0]));
+        assert!(k >= c.floor());
+    }
+
+    #[test]
+    fn patience_defers_moves() {
+        let cfg = AdaptiveConfig { patience: 2, ..AdaptiveConfig::default() };
+        let mut c = AdaptiveK::new(6, 8, 2.0, cfg);
+        let straggly = [1.0, 2.0, 3.0, 4.0, 5.0, 12.0];
+        assert_eq!(c.observe(&stats(0, 8, &straggly)), 6, "first signal: hold");
+        assert_eq!(c.observe(&stats(1, 8, &straggly)), 5, "second consecutive: move");
+    }
+
+    #[test]
+    fn controller_replays_deterministically() {
+        let rounds: Vec<RoundStats> = (0..6)
+            .map(|r| {
+                let arr: Vec<f64> =
+                    (0..6).map(|i| (i as f64) + ((r * 7 + i) % 3) as f64 * 0.4).collect();
+                let mut sorted = arr;
+                sorted.sort_by(|x, y| x.total_cmp(y));
+                stats(r, 8, &sorted)
+            })
+            .collect();
+        let run = |mut c: AdaptiveK| -> Vec<usize> {
+            rounds.iter().map(|s| c.observe(s)).collect()
+        };
+        let a = run(AdaptiveK::new(6, 8, 2.0, AdaptiveConfig::default()));
+        let b = run(AdaptiveK::new(6, 8, 2.0, AdaptiveConfig::default()));
+        assert_eq!(a, b, "same stats stream must give the same k sequence");
+    }
+
+    #[test]
+    fn policy_parse_and_names() {
+        assert_eq!(KPolicy::parse("static").unwrap(), KPolicy::Static);
+        assert_eq!(KPolicy::parse("adaptive").unwrap(), KPolicy::Adaptive(Default::default()));
+        let p = KPolicy::parse("adaptive:widen=3.0,shrink=0.5,patience=2").unwrap();
+        assert_eq!(
+            p,
+            KPolicy::Adaptive(AdaptiveConfig { widen: 3.0, shrink: 0.5, patience: 2 })
+        );
+        assert_eq!(p.name(), "adaptive");
+        assert_eq!(KPolicy::Static.name(), "static");
+        assert!(KPolicy::Static.is_static());
+        assert!(!p.is_static());
+        assert!(KPolicy::parse("banana").is_err());
+        assert!(KPolicy::parse("adaptive:bogus=1").is_err());
+        assert!(KPolicy::parse("static:widen=2").is_err());
+        // build() honors the policy and the bounds.
+        let c = KPolicy::Adaptive(Default::default()).build(2, 8, 2.0);
+        assert_eq!(c.initial_k(), 4, "k0 below the floor is lifted to it");
+        assert_eq!(KPolicy::Static.build(6, 8, 2.0).initial_k(), 6);
+    }
+}

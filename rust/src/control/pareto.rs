@@ -1,0 +1,421 @@
+//! `coded-opt pareto` — the redundancy/latency frontier sweep.
+//!
+//! Runs the (β, k-policy, scheme) × scenario grid through the
+//! deterministic scenario runner ([`crate::scenario::run_grid`]), maps
+//! every cell to a point carrying its convergence-latency metrics (the
+//! `grid-v1` [`CellSummary`] row) plus its erasure-robustness
+//! coordinate, and marks the points no other point dominates — the
+//! operating frontier of the paper's redundancy-vs-latency trade-off.
+//!
+//! ## `coded-opt/pareto-v1` schema
+//!
+//! Hand-written JSON in the `bench-v1` / `lint-v1` / `grid-v1` family
+//! (parse with [`crate::bench::json`]):
+//!
+//! ```json
+//! {
+//!   "schema": "coded-opt/pareto-v1",
+//!   "spec": { "n": 64, "workers": 8, "k0": 6, "epsilon": 0.5,
+//!             "betas": [1, 2], "policies": ["static", "adaptive"],
+//!             "schemes": ["hadamard"], "scenarios": ["crash-rejoin"] },
+//!   "points": [
+//!     { "scheme": "hadamard", "scenario": "crash-rejoin",
+//!       "policy": "adaptive", "beta": 2, "beta_achieved": 2,
+//!       "erasure_floor": 4, "erasure_robustness": 0.5,
+//!       "time_to_eps": 1.2e0, "iters_to_eps": 9,
+//!       "mean_round_secs": 1.3e-1, "p99_round_secs": 6.1e-1,
+//!       "k_min": 4, "k_max": 7, "reached": true, "on_frontier": true }
+//!   ],
+//!   "frontier": [ { "scheme": "…", "scenario": "…", "policy": "…",
+//!                   "beta": 2, "time_to_eps": 1.2e0,
+//!                   "erasure_robustness": 0.5 } ]
+//! }
+//! ```
+//!
+//! The report is a pure function of the [`ParetoSpec`] — every run is a
+//! pinned-seed [`SimCluster`](crate::cluster::SimCluster) simulation —
+//! so CI byte-compares a committed fixture against a fresh sweep.
+//!
+//! ## Frontier semantics
+//!
+//! Dominance is evaluated **within each scenario** (two scenarios are
+//! different environments, so comparing their latencies is
+//! meaningless): point `p` dominates `q` iff `p` reaches the ε-target
+//! no later AND is at least as erasure-robust, strictly better on one
+//! axis. Points that never reach the target (`time_to_eps = null`) are
+//! never on the frontier.
+
+use anyhow::{ensure, Result};
+
+use super::{erasure_floor, KPolicy};
+// lint:allow(zone-containment) — shares bench's dependency-free JSON writer; no timing flows
+use crate::bench::json::escape;
+use crate::config::{Algorithm, Scheme};
+use crate::scenario::{run_grid, summarize_cell, CellSummary, GridSpec, Scenario};
+
+/// Schema tag written into / expected from every pareto report.
+pub const PARETO_SCHEMA: &str = "coded-opt/pareto-v1";
+
+/// The sweep to run: the cross product of `betas × policies` becomes
+/// one [`GridSpec`] each (sharing `schemes × scenarios` cells and one
+/// pinned-seed synthetic problem), always on the deterministic Sim
+/// engine with the Gd solver — the paper's Algorithm 1, and the one
+/// solver whose round count equals its iteration count.
+#[derive(Clone, Debug)]
+pub struct ParetoSpec {
+    pub schemes: Vec<Scheme>,
+    pub betas: Vec<f64>,
+    pub policies: Vec<KPolicy>,
+    /// Built-in scenario names ([`Scenario::builtin_names`]).
+    pub scenarios: Vec<String>,
+    pub n: usize,
+    pub p: usize,
+    pub m: usize,
+    /// Starting wait-for-k request (adaptive policies move from here).
+    pub k0: usize,
+    pub iters: usize,
+    pub seed: u64,
+    pub lambda: f64,
+    /// Convergence target as a fraction of the first recorded
+    /// objective (see [`summarize_cell`]).
+    pub epsilon: f64,
+}
+
+impl ParetoSpec {
+    /// The CLI-default sweep: 2 schemes × 2 betas × 2 policies × 2
+    /// library scenarios = 16 points, a few seconds of simulation.
+    pub fn small() -> Self {
+        ParetoSpec {
+            schemes: vec![Scheme::Hadamard, Scheme::Uncoded],
+            betas: vec![1.0, 2.0],
+            policies: vec![KPolicy::Static, KPolicy::Adaptive(Default::default())],
+            scenarios: vec!["crash-rejoin".to_string(), "rack-correlated".to_string()],
+            n: 64,
+            p: 8,
+            m: 8,
+            k0: 6,
+            iters: 15,
+            seed: 42,
+            lambda: 0.05,
+            epsilon: 0.5,
+        }
+    }
+
+    /// Points the sweep will produce.
+    pub fn points(&self) -> usize {
+        self.schemes.len() * self.betas.len() * self.policies.len() * self.scenarios.len()
+    }
+}
+
+/// One (β, policy, scheme, scenario) operating point.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// Requested redundancy (the summary carries the achieved β).
+    pub beta: f64,
+    /// `erasure_floor(m, beta_achieved)` — the k the scheme can shed to.
+    pub floor: usize,
+    /// `(m − floor) / m`: the fraction of the fleet the run tolerates
+    /// losing without biasing the assembled gradient. 0 for uncoded.
+    pub erasure_robustness: f64,
+    /// The cell's `grid-v1` metrics row.
+    pub summary: CellSummary,
+    /// Set by [`mark_frontier`].
+    pub on_frontier: bool,
+}
+
+impl ParetoPoint {
+    /// Whether the run reached the ε-target at all.
+    pub fn reached(&self) -> bool {
+        self.summary.time_to_eps.is_some()
+    }
+}
+
+/// Run the sweep. Deterministic: same spec ⇒ same points, in a fixed
+/// order (β-major, then policy, then [`run_grid`]'s scenario × scheme
+/// cell order). The frontier is already marked on return.
+pub fn run_pareto(spec: &ParetoSpec) -> Result<Vec<ParetoPoint>> {
+    ensure!(!spec.betas.is_empty(), "pareto sweep needs at least one β");
+    ensure!(!spec.policies.is_empty(), "pareto sweep needs at least one k-policy");
+    ensure!(spec.epsilon > 0.0 && spec.epsilon < 1.0, "epsilon must be in (0, 1)");
+    let scenarios: Vec<Scenario> = spec
+        .scenarios
+        .iter()
+        .map(|name| {
+            Scenario::builtin(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario '{name}' (builtins: {})",
+                    Scenario::builtin_names().join(", ")
+                )
+            })
+        })
+        .collect::<Result<_>>()?;
+    let mut points = Vec::with_capacity(spec.points());
+    for &beta in &spec.betas {
+        for policy in &spec.policies {
+            let grid = GridSpec {
+                schemes: spec.schemes.clone(),
+                algorithms: vec![Algorithm::Gd],
+                scenarios: scenarios.clone(),
+                n: spec.n,
+                p: spec.p,
+                m: spec.m,
+                k: spec.k0,
+                beta,
+                iters: spec.iters,
+                seed: spec.seed,
+                lambda: spec.lambda,
+                policy: policy.clone(),
+            };
+            for cell in run_grid(&grid)? {
+                let summary = summarize_cell(&cell, spec.epsilon);
+                let floor = erasure_floor(spec.m, summary.beta_achieved);
+                points.push(ParetoPoint {
+                    beta,
+                    floor,
+                    erasure_robustness: (spec.m - floor) as f64 / spec.m as f64,
+                    summary,
+                    on_frontier: false,
+                });
+            }
+        }
+    }
+    mark_frontier(&mut points);
+    Ok(points)
+}
+
+/// Mark the non-dominated points within each scenario (see the module
+/// docs for the dominance rule). Idempotent.
+pub fn mark_frontier(points: &mut [ParetoPoint]) {
+    for i in 0..points.len() {
+        points[i].on_frontier = false;
+        let Some(ti) = points[i].summary.time_to_eps else { continue };
+        let ri = points[i].erasure_robustness;
+        let dominated = points.iter().enumerate().any(|(j, q)| {
+            if j == i || q.summary.scenario != points[i].summary.scenario {
+                return false;
+            }
+            let Some(tj) = q.summary.time_to_eps else { return false };
+            tj <= ti && q.erasure_robustness >= ri && (tj < ti || q.erasure_robustness > ri)
+        });
+        points[i].on_frontier = !dominated;
+    }
+}
+
+fn json_f64_list(vals: &[f64]) -> String {
+    let cells: Vec<String> = vals.iter().map(|v| format!("{v:e}")).collect();
+    format!("[{}]", cells.join(", "))
+}
+
+fn json_str_list(vals: &[String]) -> String {
+    let cells: Vec<String> = vals.iter().map(|v| format!("\"{}\"", escape(v))).collect();
+    format!("[{}]", cells.join(", "))
+}
+
+/// Serialize the sweep to the `coded-opt/pareto-v1` JSON document.
+/// Byte-deterministic for a pinned spec — the CI `pareto-smoke` job
+/// runs the same pinned-seed sweep twice and `cmp`s the two reports.
+pub fn pareto_json(spec: &ParetoSpec, points: &[ParetoPoint]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema\": \"{PARETO_SCHEMA}\",\n"));
+    out.push_str("  \"spec\": {");
+    out.push_str(&format!("\"n\": {}, ", spec.n));
+    out.push_str(&format!("\"p\": {}, ", spec.p));
+    out.push_str(&format!("\"workers\": {}, ", spec.m));
+    out.push_str(&format!("\"k0\": {}, ", spec.k0));
+    out.push_str(&format!("\"iters\": {}, ", spec.iters));
+    out.push_str(&format!("\"seed\": {}, ", spec.seed));
+    out.push_str(&format!("\"lambda\": {:e}, ", spec.lambda));
+    out.push_str(&format!("\"epsilon\": {:e}, ", spec.epsilon));
+    let schemes: Vec<String> = spec.schemes.iter().map(|s| s.name().to_string()).collect();
+    let policies: Vec<String> = spec.policies.iter().map(|p| p.name().to_string()).collect();
+    out.push_str(&format!("\"schemes\": {}, ", json_str_list(&schemes)));
+    out.push_str(&format!("\"betas\": {}, ", json_f64_list(&spec.betas)));
+    out.push_str(&format!("\"policies\": {}, ", json_str_list(&policies)));
+    out.push_str(&format!("\"scenarios\": {}", json_str_list(&spec.scenarios)));
+    out.push_str("},\n");
+    out.push_str("  \"points\": [\n");
+    for (i, pt) in points.iter().enumerate() {
+        let s = &pt.summary;
+        out.push_str("    {");
+        out.push_str(&format!("\"scheme\": \"{}\", ", escape(&s.scheme)));
+        out.push_str(&format!("\"scenario\": \"{}\", ", escape(&s.scenario)));
+        out.push_str(&format!("\"policy\": \"{}\", ", escape(&s.policy)));
+        out.push_str(&format!("\"beta\": {:e}, ", pt.beta));
+        out.push_str(&format!("\"beta_achieved\": {:e}, ", s.beta_achieved));
+        out.push_str(&format!("\"erasure_floor\": {}, ", pt.floor));
+        out.push_str(&format!("\"erasure_robustness\": {:e}, ", pt.erasure_robustness));
+        match s.time_to_eps {
+            Some(t) => out.push_str(&format!("\"time_to_eps\": {t:e}, ")),
+            None => out.push_str("\"time_to_eps\": null, "),
+        }
+        match s.iters_to_eps {
+            Some(n) => out.push_str(&format!("\"iters_to_eps\": {n}, ")),
+            None => out.push_str("\"iters_to_eps\": null, "),
+        }
+        out.push_str(&format!("\"rounds\": {}, ", s.rounds));
+        out.push_str(&format!("\"mean_round_secs\": {:e}, ", s.mean_round_secs));
+        out.push_str(&format!("\"p99_round_secs\": {:e}, ", s.p99_round_secs));
+        out.push_str(&format!("\"k_min\": {}, ", s.k_min));
+        out.push_str(&format!("\"k_max\": {}, ", s.k_max));
+        out.push_str(&format!("\"final_objective\": {:e}, ", s.final_objective));
+        out.push_str(&format!("\"total_time\": {:e}, ", s.total_time));
+        out.push_str(&format!("\"reached\": {}, ", pt.reached()));
+        out.push_str(&format!("\"on_frontier\": {}", pt.on_frontier));
+        out.push('}');
+        out.push_str(if i + 1 < points.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"frontier\": [\n");
+    let frontier: Vec<&ParetoPoint> = points.iter().filter(|p| p.on_frontier).collect();
+    for (i, pt) in frontier.iter().enumerate() {
+        let s = &pt.summary;
+        out.push_str("    {");
+        out.push_str(&format!("\"scheme\": \"{}\", ", escape(&s.scheme)));
+        out.push_str(&format!("\"scenario\": \"{}\", ", escape(&s.scenario)));
+        out.push_str(&format!("\"policy\": \"{}\", ", escape(&s.policy)));
+        out.push_str(&format!("\"beta\": {:e}, ", pt.beta));
+        out.push_str(&format!(
+            "\"time_to_eps\": {:e}, ",
+            s.time_to_eps.expect("frontier points reached the target")
+        ));
+        out.push_str(&format!("\"erasure_robustness\": {:e}", pt.erasure_robustness));
+        out.push('}');
+        out.push_str(if i + 1 < frontier.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// Human-readable summary table of the sweep (frontier points starred).
+pub fn pareto_table(points: &[ParetoPoint]) -> crate::metrics::TableWriter {
+    let mut table = crate::metrics::TableWriter::new(&[
+        "scenario", "scheme", "policy", "beta", "robust", "t_eps", "p99 round", "k range", "front",
+    ]);
+    for pt in points {
+        let s = &pt.summary;
+        table.row(&[
+            s.scenario.clone(),
+            s.scheme.clone(),
+            s.policy.clone(),
+            format!("{:.2}", s.beta_achieved),
+            format!("{:.2}", pt.erasure_robustness),
+            match s.time_to_eps {
+                Some(t) => format!("{t:.3}s"),
+                None => "—".to_string(),
+            },
+            format!("{:.3}s", s.p99_round_secs),
+            format!("{}..{}", s.k_min, s.k_max),
+            if pt.on_frontier { "*".to_string() } else { String::new() },
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(scenario: &str, time: Option<f64>, robust: f64) -> ParetoPoint {
+        ParetoPoint {
+            beta: 2.0,
+            floor: 4,
+            erasure_robustness: robust,
+            summary: CellSummary {
+                scheme: "hadamard".to_string(),
+                algorithm: "gd".to_string(),
+                scenario: scenario.to_string(),
+                policy: "static".to_string(),
+                beta_achieved: 2.0,
+                final_objective: 1.0,
+                total_time: 2.0,
+                rounds: 10,
+                mean_round_secs: 0.1,
+                p99_round_secs: 0.2,
+                k_min: 6,
+                k_max: 6,
+                time_to_eps: time,
+                iters_to_eps: time.map(|_| 5),
+                min_participation: 1.0,
+            },
+            on_frontier: false,
+        }
+    }
+
+    #[test]
+    fn frontier_keeps_non_dominated_points_per_scenario() {
+        let mut pts = vec![
+            point("a", Some(1.0), 0.5),  // fast and robust: frontier
+            point("a", Some(2.0), 0.5),  // slower, equally robust: dominated
+            point("a", Some(0.5), 0.0),  // fastest but fragile: frontier
+            point("a", None, 0.9),       // never converged: excluded
+            point("b", Some(9.0), 0.0),  // other scenario: its own frontier
+        ];
+        mark_frontier(&mut pts);
+        let flags: Vec<bool> = pts.iter().map(|p| p.on_frontier).collect();
+        assert_eq!(flags, vec![true, false, true, false, true]);
+        // idempotent
+        mark_frontier(&mut pts);
+        assert_eq!(flags, pts.iter().map(|p| p.on_frontier).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tie_on_both_axes_keeps_both_points() {
+        let mut pts = vec![point("a", Some(1.0), 0.5), point("a", Some(1.0), 0.5)];
+        mark_frontier(&mut pts);
+        assert!(pts[0].on_frontier && pts[1].on_frontier, "equal points co-exist");
+    }
+
+    #[test]
+    fn sweep_runs_and_serializes_deterministically() {
+        // One β × both policies on one scheme/scenario: 2 points, fast.
+        let spec = ParetoSpec {
+            schemes: vec![Scheme::Hadamard],
+            betas: vec![2.0],
+            policies: vec![KPolicy::Static, KPolicy::Adaptive(Default::default())],
+            scenarios: vec!["crash-rejoin".to_string()],
+            n: 32,
+            p: 4,
+            m: 8,
+            k0: 6,
+            iters: 10,
+            seed: 7,
+            lambda: 0.05,
+            epsilon: 0.5,
+        };
+        let points = run_pareto(&spec).unwrap();
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].summary.policy, "static");
+        assert_eq!(points[1].summary.policy, "adaptive");
+        assert_eq!(points[0].floor, 4, "hadamard β=2 on m=8");
+        assert!((points[0].erasure_robustness - 0.5).abs() < 1e-12);
+        // every scenario with a reached point has a frontier point
+        assert!(points.iter().any(|p| p.on_frontier) || points.iter().all(|p| !p.reached()));
+        let text = pareto_json(&spec, &points);
+        let root = crate::bench::json::parse(&text).unwrap();
+        let obj = root.as_object().unwrap();
+        assert_eq!(
+            crate::bench::json::get(obj, "schema").unwrap().as_str().unwrap(),
+            PARETO_SCHEMA
+        );
+        let pts_v = crate::bench::json::get(obj, "points").unwrap().as_array().unwrap();
+        assert_eq!(pts_v.len(), 2);
+        // pinned seed ⇒ byte-identical report
+        let again = pareto_json(&spec, &run_pareto(&spec).unwrap());
+        assert_eq!(text, again);
+        // and the table renders header + separator + one row per point
+        assert_eq!(pareto_table(&points).render().lines().count(), 2 + 2);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let mut spec = ParetoSpec::small();
+        spec.scenarios = vec!["no-such-scenario".to_string()];
+        assert!(run_pareto(&spec).is_err());
+        let mut spec = ParetoSpec::small();
+        spec.betas.clear();
+        assert!(run_pareto(&spec).is_err());
+        let mut spec = ParetoSpec::small();
+        spec.epsilon = 1.5;
+        assert!(run_pareto(&spec).is_err());
+    }
+}

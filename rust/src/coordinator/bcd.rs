@@ -16,7 +16,7 @@
 //! optimum, unlike the data-parallel algorithms' κ-approximation.
 
 use super::gd::RunOutput;
-use super::KIND_BCD_STEP;
+use super::{RoundCtl, KIND_BCD_STEP};
 use crate::cluster::{Gather, Task, WorkerNode};
 use crate::config::Scheme;
 use crate::encoding::{Encoder, EncodingOp, SMatrix};
@@ -223,6 +223,7 @@ pub(crate) fn bcd_loop(
     n: usize,
     p: usize,
     cfg: &BcdConfig,
+    ctl: &mut RoundCtl<'_>,
     label: &str,
     eval: &super::EvalFn,
 ) -> RunOutput {
@@ -243,7 +244,7 @@ pub(crate) fn bcd_loop(
             let total_ref = &total_u;
             let u_ref = &u;
             let accept_ref = &last_accept;
-            cluster.round(cfg.k, &mut |i| {
+            ctl.gather(cluster, &mut |i| {
                 let mut z_tilde = total_ref.clone();
                 for (z, ui) in z_tilde.iter_mut().zip(&u_ref[i]) {
                     *z -= ui;
@@ -359,9 +360,16 @@ mod tests {
         use crate::objectives::QuadObjective;
         let f_star = prob.objective(&prob.solve_exact());
         let cfg = BcdConfig { k: m, iters: 400 };
-        let out = bcd_loop(&mut cluster, &recon, 48, 12, &cfg, "bcd", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = bcd_loop(
+            &mut cluster,
+            &recon,
+            48,
+            12,
+            &cfg,
+            &mut RoundCtl::fixed(m),
+            "bcd",
+            &|w| (prob.objective(w), 0.0),
+        );
         let f_final = out.trace.final_objective();
         assert!(
             (f_final - f_star) / f_star.max(1e-12) < 1e-3,
@@ -393,9 +401,16 @@ mod tests {
         let f_star = prob.objective(&prob.solve_exact());
         let f0 = prob.objective(&[0.0; 16]);
         let cfg = BcdConfig { k: 6, iters: 600 };
-        let out = bcd_loop(&mut cluster, &recon, 40, 16, &cfg, "bcd-adv", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = bcd_loop(
+            &mut cluster,
+            &recon,
+            40,
+            16,
+            &cfg,
+            &mut RoundCtl::fixed(6),
+            "bcd-adv",
+            &|w| (prob.objective(w), 0.0),
+        );
         let f_final = out.trace.final_objective();
         // Fixed stragglers freeze 2 of 8 lifted blocks; redundancy must
         // still recover most of the gap to optimal.
@@ -426,9 +441,16 @@ mod tests {
         let prob = crate::objectives::RidgeProblem::new(x, y, 0.0);
         use crate::objectives::QuadObjective;
         let cfg = BcdConfig { k: m, iters: 100 };
-        let out = bcd_loop(&mut cluster, &recon, 30, 8, &cfg, "bcd", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = bcd_loop(
+            &mut cluster,
+            &recon,
+            30,
+            8,
+            &cfg,
+            &mut RoundCtl::fixed(m),
+            "bcd",
+            &|w| (prob.objective(w), 0.0),
+        );
         // allow the tiny one-round-staleness transient at t=0→1
         for pair in out.trace.records.windows(2).skip(1) {
             assert!(
@@ -454,9 +476,16 @@ mod tests {
         let mut cluster = SimCluster::new(mp.workers, Box::new(NoDelay::new(m)));
         let f0 = prob.objective(&[0.0; 24]);
         let cfg = BcdConfig { k: 4, iters: 150 };
-        let out = bcd_loop(&mut cluster, &recon, n_train, 24, &cfg, "bcd-log", &|w| {
-            (prob.objective(w), prob.error_rate(w, &ds.test))
-        });
+        let out = bcd_loop(
+            &mut cluster,
+            &recon,
+            n_train,
+            24,
+            &cfg,
+            &mut RoundCtl::fixed(4),
+            "bcd-log",
+            &|w| (prob.objective(w), prob.error_rate(w, &ds.test)),
+        );
         assert!(
             out.trace.final_objective() < 0.7 * f0,
             "objective {} vs f0 {f0}",

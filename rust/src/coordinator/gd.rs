@@ -6,7 +6,7 @@
 //! BRIP encoding the iterates converge deterministically to a
 //! neighborhood of the true optimum for *arbitrary* straggler patterns.
 
-use super::{EvalFn, GradAssembler, KIND_GRADIENT};
+use super::{EvalFn, GradAssembler, RoundCtl, KIND_GRADIENT};
 use crate::cluster::{Gather, Task};
 use crate::metrics::{IterRecord, Participation, Trace};
 
@@ -43,11 +43,15 @@ pub struct RunOutput {
 ///
 /// `eval` maps the iterate to (original objective, test metric) for the
 /// trace — convergence is reported on the ORIGINAL problem, as in the
-/// paper's theorems. Called by the `driver::Gd` solver.
+/// paper's theorems. Every gather goes through `ctl`, which records the
+/// per-round arrivals and — under an adaptive policy — moves k between
+/// rounds (`cfg.k` is only the starting point the caller seeded the
+/// controller with). Called by the `driver::Gd` solver.
 pub(crate) fn gd_loop(
     cluster: &mut dyn Gather,
     assembler: &GradAssembler,
     cfg: &GdConfig,
+    ctl: &mut RoundCtl<'_>,
     label: &str,
     eval: &EvalFn,
 ) -> RunOutput {
@@ -58,7 +62,7 @@ pub(crate) fn gd_loop(
     let mut trace = Trace::new(label);
     let mut participation = Participation::new(m);
     for t in 0..cfg.iters {
-        let rr = cluster.round(cfg.k, &mut |_| Task {
+        let rr = ctl.gather(cluster, &mut |_| Task {
             iter: t,
             kind: KIND_GRADIENT,
             payload: w.clone(),
@@ -114,9 +118,14 @@ mod tests {
         let (prob, asm, mut cluster) = setup(64, 8, Scheme::Hadamard, 8, 3);
         let step = 1.0 / prob.smoothness();
         let f_star = prob.objective(&prob.solve_exact());
-        let out = gd_loop(&mut cluster, &asm, &gd_cfg(8, step, 400), "gd", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = gd_loop(
+            &mut cluster,
+            &asm,
+            &gd_cfg(8, step, 400),
+            &mut RoundCtl::fixed(8),
+            "gd",
+            &|w| (prob.objective(w), 0.0),
+        );
         let f_final = out.trace.final_objective();
         assert!(
             (f_final - f_star) / f_star < 1e-6,
@@ -137,9 +146,14 @@ mod tests {
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
         let step = 0.5 / prob.smoothness();
         let f_star = prob.objective(&prob.solve_exact());
-        let out = gd_loop(&mut cluster, &asm, &gd_cfg(6, step, 600), "gd-adv", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = gd_loop(
+            &mut cluster,
+            &asm,
+            &gd_cfg(6, step, 600),
+            &mut RoundCtl::fixed(6),
+            "gd-adv",
+            &|w| (prob.objective(w), 0.0),
+        );
         let f_final = out.trace.final_objective();
         // κ-neighborhood, not exact: allow a generous approximation band
         assert!(
@@ -188,9 +202,14 @@ mod tests {
             let asm = dp.assembler.clone();
             let delay = AdversarialDelay::new(8, vec![1, 6], 1e6);
             let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-            let out = gd_loop(&mut cluster, &asm, &gd_cfg(6, step, 500), "x", &|w| {
-                (prob.objective(w), 0.0)
-            });
+            let out = gd_loop(
+                &mut cluster,
+                &asm,
+                &gd_cfg(6, step, 500),
+                &mut RoundCtl::fixed(6),
+                "x",
+                &|w| (prob.objective(w), 0.0),
+            );
             finals.insert(format!("{scheme:?}"), out.trace.final_objective());
         }
         let coded = (finals["Haar"] - f_star) / f_star;
@@ -206,18 +225,28 @@ mod tests {
         // Theorem-5-style sanity: no divergence along the run.
         let (prob, asm, mut cluster) = setup(48, 6, Scheme::Steiner, 6, 13);
         let step = 0.8 / prob.smoothness();
-        let out = gd_loop(&mut cluster, &asm, &gd_cfg(4, step, 200), "gd", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = gd_loop(
+            &mut cluster,
+            &asm,
+            &gd_cfg(4, step, 200),
+            &mut RoundCtl::fixed(4),
+            "gd",
+            &|w| (prob.objective(w), 0.0),
+        );
         assert!(out.trace.bounded_by(1.05));
     }
 
     #[test]
     fn trace_records_k_and_time_monotone() {
         let (prob, asm, mut cluster) = setup(32, 4, Scheme::Gaussian, 4, 17);
-        let out = gd_loop(&mut cluster, &asm, &gd_cfg(3, 0.01, 10), "gd", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = gd_loop(
+            &mut cluster,
+            &asm,
+            &gd_cfg(3, 0.01, 10),
+            &mut RoundCtl::fixed(3),
+            "gd",
+            &|w| (prob.objective(w), 0.0),
+        );
         assert_eq!(out.trace.len(), 10);
         for rec in &out.trace.records {
             assert_eq!(rec.k_used, 3);

@@ -16,7 +16,7 @@
 use std::collections::BTreeMap;
 
 use super::gd::RunOutput;
-use super::{EvalFn, GradAssembler, KIND_GRADIENT, KIND_LINESEARCH};
+use super::{EvalFn, GradAssembler, RoundCtl, KIND_GRADIENT, KIND_LINESEARCH};
 use crate::cluster::{Gather, Task};
 use crate::linalg::{axpy, dot, scale, sub};
 use crate::metrics::{IterRecord, Participation, Trace};
@@ -74,10 +74,15 @@ fn two_loop(pairs: &[Pair], g: &[f64]) -> Vec<f64> {
 
 /// Encoded L-BFGS master loop on a gathered cluster. Called by the
 /// `driver::Lbfgs` solver.
+///
+/// Both of an iteration's gather rounds (gradient and line search) go
+/// through `ctl`, so an adaptive wait-for-k policy observes and adjusts
+/// at round granularity — twice per outer iteration.
 pub(crate) fn lbfgs_loop(
     cluster: &mut dyn Gather,
     assembler: &GradAssembler,
     cfg: &LbfgsConfig,
+    ctl: &mut RoundCtl<'_>,
     label: &str,
     eval: &EvalFn,
 ) -> RunOutput {
@@ -96,7 +101,7 @@ pub(crate) fn lbfgs_loop(
 
     for t in 0..cfg.iters {
         // ---- Round 1: gradients over A_t.
-        let rr = cluster.round(cfg.k, &mut |_| Task {
+        let rr = ctl.gather(cluster, &mut |_| Task {
             iter: 2 * t,
             kind: KIND_GRADIENT,
             payload: w.clone(),
@@ -148,7 +153,7 @@ pub(crate) fn lbfgs_loop(
         };
 
         // ---- Round 2: exact line search over D_t (eq. 3).
-        let ls = cluster.round(cfg.k, &mut |_| Task {
+        let ls = ctl.gather(cluster, &mut |_| Task {
             iter: 2 * t + 1,
             kind: KIND_LINESEARCH,
             payload: d.clone(),
@@ -222,9 +227,14 @@ mod tests {
         let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 3).unwrap();
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(8)));
-        let out = lbfgs_loop(&mut cluster, &asm, &lb_cfg(8, 60, 0.05), "lbfgs", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = lbfgs_loop(
+            &mut cluster,
+            &asm,
+            &lb_cfg(8, 60, 0.05),
+            &mut RoundCtl::fixed(8),
+            "lbfgs",
+            &|w| (prob.objective(w), 0.0),
+        );
         let sub = (out.trace.final_objective() - f_star) / f_star;
         assert!(sub < 1e-8, "subopt={sub}");
     }
@@ -239,18 +249,28 @@ mod tests {
         let dp = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 5).unwrap();
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(8)));
-        let out_l = lbfgs_loop(&mut cluster, &asm, &lb_cfg(8, 80, 0.05), "l", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out_l = lbfgs_loop(
+            &mut cluster,
+            &asm,
+            &lb_cfg(8, 80, 0.05),
+            &mut RoundCtl::fixed(8),
+            "l",
+            &|w| (prob.objective(w), 0.0),
+        );
         // GD run, same budget
         let dp2 = build_data_parallel(&x, &y, Scheme::Hadamard, 8, 2.0, 5).unwrap();
         let asm2 = dp2.assembler.clone();
         let mut cluster2 = SimCluster::new(dp2.workers, Box::new(NoDelay::new(8)));
         let step = 1.0 / prob.smoothness();
         let cfg = crate::coordinator::GdConfig { k: 8, step, iters: 80, lambda: 0.05, w0: None };
-        let out_g = crate::coordinator::gd::gd_loop(&mut cluster2, &asm2, &cfg, "g", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out_g = crate::coordinator::gd::gd_loop(
+            &mut cluster2,
+            &asm2,
+            &cfg,
+            &mut RoundCtl::fixed(8),
+            "g",
+            &|w| (prob.objective(w), 0.0),
+        );
         let it_l = out_l.trace.records.iter().position(|r| r.objective <= target);
         let it_g = out_g.trace.records.iter().position(|r| r.objective <= target);
         assert!(it_l.is_some(), "L-BFGS never hit target");
@@ -274,9 +294,14 @@ mod tests {
             let asm = dp.assembler.clone();
             let delay = MixtureDelay::paper_bimodal(16, 11);
             let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-            let out = lbfgs_loop(&mut cluster, &asm, &lb_cfg(6, 50, 0.05), "x", &|w| {
-                (prob.objective(w), 0.0)
-            });
+            let out = lbfgs_loop(
+                &mut cluster,
+                &asm,
+                &lb_cfg(6, 50, 0.05),
+                &mut RoundCtl::fixed(6),
+                "x",
+                &|w| (prob.objective(w), 0.0),
+            );
             subopts.insert(
                 format!("{scheme:?}"),
                 (out.trace.final_objective() - f_star) / f_star,
@@ -305,9 +330,14 @@ mod tests {
         let asm = dp.assembler.clone();
         let delay = AdversarialDelay::rotating(8, 0.5, 1e6);
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
-        let out = lbfgs_loop(&mut cluster, &asm, &lb_cfg(4, 60, 0.05), "rot", &|w| {
-            (prob.objective(w), 0.0)
-        });
+        let out = lbfgs_loop(
+            &mut cluster,
+            &asm,
+            &lb_cfg(4, 60, 0.05),
+            &mut RoundCtl::fixed(4),
+            "rot",
+            &|w| (prob.objective(w), 0.0),
+        );
         assert!(out.trace.final_objective().is_finite());
         assert!(out.trace.bounded_by(1.2));
     }

@@ -36,10 +36,11 @@ pub use gd::{GdConfig, RunOutput};
 pub use lbfgs::LbfgsConfig;
 pub use prox::ProxConfig;
 
-use crate::cluster::{Task, WorkerNode};
+use crate::cluster::{Gather, RoundResult, Task, WorkerNode};
 use crate::config::Scheme;
 use crate::encoding::{EncodingOp, ReplicationMap};
 use crate::linalg::{Mat, Precision, PrecisionMat};
+use crate::metrics::RoundStats;
 use anyhow::Result;
 
 /// Task kinds understood by [`QuadWorker`].
@@ -420,6 +421,84 @@ pub fn build_data_parallel_streamed(
 /// `(original objective, test metric)` for the trace.
 pub type EvalFn<'a> = dyn Fn(&[f64]) -> (f64, f64) + 'a;
 
+/// Per-round wait-for-k policy driving a solver loop's gather calls.
+///
+/// The solver loops ([`gd`], [`lbfgs`], [`prox`], [`bcd`]) never call
+/// [`Gather::round`] directly anymore: every gather goes through
+/// [`RoundCtl::gather`], which records a [`RoundStats`] observation and
+/// — under an adaptive policy — asks the policy for the next round's k.
+/// The coordinator layer stays below `control` in the module DAG: the
+/// policy arrives as an opaque `FnMut(&RoundStats) -> usize` closure
+/// (built by `driver` from a `control::Controller`), so nothing here
+/// imports upward.
+///
+/// With a fixed policy the behavior (including the hard `k ≤ live`
+/// panic) is bit-identical to the pre-controller loops; an adaptive
+/// policy switches gathers to [`Gather::round_clamped`], since its
+/// request precedes this round's crash observations.
+pub struct RoundCtl<'a> {
+    k: usize,
+    policy: Option<&'a mut dyn FnMut(&RoundStats) -> usize>,
+    round: usize,
+    rounds: Vec<RoundStats>,
+}
+
+impl<'a> RoundCtl<'a> {
+    /// Static wait-for-k: every round requests exactly `k`.
+    pub fn fixed(k: usize) -> Self {
+        RoundCtl { k, policy: None, round: 0, rounds: Vec::new() }
+    }
+
+    /// Adaptive wait-for-k: start at `k0`, and after each round feed the
+    /// recorded [`RoundStats`] to `policy`, whose return value is the
+    /// next round's k. The policy owns all bounds (erasure floor, m);
+    /// the engine only clamps down to the live count.
+    pub fn adaptive(k0: usize, policy: &'a mut dyn FnMut(&RoundStats) -> usize) -> Self {
+        RoundCtl { k: k0, policy: Some(policy), round: 0, rounds: Vec::new() }
+    }
+
+    /// The k the next gather will request.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Run one gather round under the current policy and record it.
+    pub fn gather(
+        &mut self,
+        cluster: &mut dyn Gather,
+        task_for: &mut dyn FnMut(usize) -> Task,
+    ) -> RoundResult {
+        let rr = match self.policy {
+            None => cluster.round(self.k, task_for),
+            Some(_) => cluster.round_clamped(self.k, task_for),
+        };
+        let stats = RoundStats {
+            round: self.round,
+            k_requested: self.k,
+            k_effective: rr.responses.len(),
+            live: rr.live,
+            elapsed: rr.elapsed,
+            arrivals: rr.responses.iter().map(|r| r.arrival).collect(),
+        };
+        if let Some(policy) = self.policy.as_mut() {
+            self.k = policy(&stats);
+        }
+        self.rounds.push(stats);
+        self.round += 1;
+        rr
+    }
+
+    /// The recorded per-round observations, in round order.
+    pub fn rounds(&self) -> &[RoundStats] {
+        &self.rounds
+    }
+
+    /// Consume the controller, yielding its recorded rounds.
+    pub fn into_rounds(self) -> Vec<RoundStats> {
+        self.rounds
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -504,6 +583,46 @@ mod tests {
         let xd = x.matvec(&d);
         let exact = crate::linalg::dot(&xd, &xd) / 32.0;
         assert!((q - exact).abs() < 1e-9 * exact.max(1.0), "{q} vs {exact}");
+    }
+
+    #[test]
+    fn round_ctl_records_and_adapts() {
+        let (x, y, _) = gaussian_linear(32, 6, 0.3, 5);
+        let dp = build_data_parallel(&x, &y, Scheme::Uncoded, 4, 2.0, 7).unwrap();
+        let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
+        let w = vec![0.0; 6];
+        // toy policy: request one fewer than delivered, never below 2
+        let mut policy = |s: &RoundStats| s.k_effective.saturating_sub(1).max(2);
+        let mut ctl = RoundCtl::adaptive(4, &mut policy);
+        let r0 = ctl.gather(&mut cluster, &mut |_| grad_task(0, &w));
+        assert_eq!(r0.responses.len(), 4);
+        assert_eq!(ctl.k(), 3, "policy shrank k after round 0");
+        let r1 = ctl.gather(&mut cluster, &mut |_| grad_task(1, &w));
+        assert_eq!(r1.responses.len(), 3);
+        assert_eq!(ctl.k(), 2);
+        let rounds = ctl.into_rounds();
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(rounds[0].k_requested, 4);
+        assert_eq!(rounds[1].k_requested, 3);
+        assert_eq!(rounds[1].k_effective, 3);
+        assert_eq!(rounds[1].live, 4);
+        assert_eq!(rounds[1].arrivals.len(), 3);
+    }
+
+    #[test]
+    fn round_ctl_fixed_records_without_adapting() {
+        let (x, y, _) = gaussian_linear(32, 6, 0.3, 5);
+        let dp = build_data_parallel(&x, &y, Scheme::Uncoded, 4, 2.0, 7).unwrap();
+        let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
+        let w = vec![0.0; 6];
+        let mut ctl = RoundCtl::fixed(3);
+        for t in 0..3 {
+            let rr = ctl.gather(&mut cluster, &mut |_| grad_task(t, &w));
+            assert_eq!(rr.responses.len(), 3);
+            assert_eq!(ctl.k(), 3);
+        }
+        assert_eq!(ctl.rounds().len(), 3);
+        assert!(ctl.rounds().iter().all(|s| s.k_requested == 3 && s.k_effective == 3));
     }
 
     #[test]

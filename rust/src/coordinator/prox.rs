@@ -5,7 +5,7 @@
 //! `w_{t+1} = prox_{αλ‖·‖₁}(w_t − α·ĝ_t)` where ĝ_t is the assembled
 //! encoded gradient of the smooth part.
 
-use super::{EvalFn, GradAssembler, KIND_GRADIENT};
+use super::{EvalFn, GradAssembler, RoundCtl, KIND_GRADIENT};
 use crate::cluster::{Gather, Task};
 use crate::linalg::soft_threshold;
 use crate::metrics::{IterRecord, Participation, Trace};
@@ -31,6 +31,7 @@ pub(crate) fn prox_loop(
     cluster: &mut dyn Gather,
     assembler: &GradAssembler,
     cfg: &ProxConfig,
+    ctl: &mut RoundCtl<'_>,
     label: &str,
     eval: &EvalFn,
 ) -> RunOutput {
@@ -41,7 +42,7 @@ pub(crate) fn prox_loop(
     let mut participation = Participation::new(m);
     let tau = cfg.step * cfg.lambda;
     for t in 0..cfg.iters {
-        let rr = cluster.round(cfg.k, &mut |_| Task {
+        let rr = ctl.gather(cluster, &mut |_| Task {
             iter: t,
             kind: KIND_GRADIENT,
             payload: w.clone(),
@@ -84,7 +85,9 @@ mod tests {
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
         let cfg = ProxConfig { k: 4, step: alpha, iters: 80, lambda: 0.05, w0: None };
-        let out = prox_loop(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, &mut RoundCtl::fixed(4), "prox", &|w| {
+            (prob.objective(w), 0.0)
+        });
         let w_ref = prob.solve_ista(80);
         let err = crate::testutil::rel_err(&out.w, &w_ref);
         assert!(err < 1e-6, "rel err {err}");
@@ -100,7 +103,9 @@ mod tests {
         let delay = AdversarialDelay::new(8, vec![2, 5], 1e6);
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
         let cfg = ProxConfig { k: 6, step: alpha, iters: 250, lambda: 0.08, w0: None };
-        let out = prox_loop(&mut cluster, &asm, &cfg, "prox-adv", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, &mut RoundCtl::fixed(6), "prox-adv", &|w| {
+            (prob.objective(w), 0.0)
+        });
         let (_, _, f1) = f1_support(&w_star, &out.w, 1e-2);
         assert!(f1 > 0.8, "f1={f1}");
     }
@@ -118,7 +123,9 @@ mod tests {
         let delay = AdversarialDelay::rotating(8, 0.25, 1e6);
         let mut cluster = SimCluster::new(dp.workers, Box::new(delay));
         let cfg = ProxConfig { k: 6, step: alpha, iters: 120, lambda: 0.05, w0: None };
-        let out = prox_loop(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, &mut RoundCtl::fixed(6), "prox", &|w| {
+            (prob.objective(w), 0.0)
+        });
         for pair in out.trace.records.windows(2) {
             assert!(
                 pair[1].objective <= 1.6 * pair[0].objective + 1e-12,
@@ -138,7 +145,9 @@ mod tests {
         let asm = dp.assembler.clone();
         let mut cluster = SimCluster::new(dp.workers, Box::new(NoDelay::new(4)));
         let cfg = ProxConfig { k: 3, step: alpha, iters: 150, lambda: 0.2, w0: None };
-        let out = prox_loop(&mut cluster, &asm, &cfg, "prox", &|w| (prob.objective(w), 0.0));
+        let out = prox_loop(&mut cluster, &asm, &cfg, &mut RoundCtl::fixed(3), "prox", &|w| {
+            (prob.objective(w), 0.0)
+        });
         let nnz = out.w.iter().filter(|&&v| v != 0.0).count();
         assert!(nnz < 40, "soft-thresholding must zero out coordinates (nnz={nnz})");
         assert!(nnz >= 1);

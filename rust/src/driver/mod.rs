@@ -74,15 +74,17 @@ use std::cell::RefCell;
 
 use crate::cluster::{Gather, SimCluster, SocketCluster, ThreadCluster, WorkerNode};
 use crate::config::{DelaySpec, Scheme};
+use crate::control::{Controller, KPolicy};
 use crate::coordinator::bcd::{build_model_parallel, logistic_phi, quadratic_phi};
 use crate::coordinator::{
     build_data_parallel_streamed, build_data_parallel_with_runtime, EvalFn, GradAssembler,
+    RoundCtl,
 };
 use crate::data::shard::{BlockSource, ShardedSource};
 use crate::delay::{from_spec, DelayModel, NoDelay};
 use crate::encoding::{partition_bounds, EncodingOp, ReplicationMap};
 use crate::linalg::{Mat, Precision};
-use crate::metrics::{Participation, Trace};
+use crate::metrics::{Participation, RoundStats, Trace};
 // A missing index leaves the trace-identical in-process kernel path untouched.
 // lint:allow(zone-containment) — setup-time artifact discovery, not hot-loop unsafe
 use crate::runtime::ArtifactIndex;
@@ -203,6 +205,15 @@ pub struct RunOutput {
     /// Achieved redundancy β (1.0 for uncoded/async runs; constructions
     /// round to feasible sizes so this can differ from the request).
     pub beta: f64,
+    /// Per-gather-round record — requested/effective k, live-worker
+    /// count, and the arrival times the k-controller's next decision
+    /// was derived from. One entry per gather round (L-BFGS takes two
+    /// per outer iteration); empty for the async baselines, which have
+    /// no rounds.
+    pub rounds: Vec<RoundStats>,
+    /// Name of the k-policy that steered the run (`"static"` unless
+    /// [`Experiment::controller`] installed another).
+    pub controller: String,
 }
 
 /// Builder-style driver for one encoded-optimization experiment.
@@ -239,6 +250,8 @@ pub struct Experiment<'a> {
     /// Compute-kernel worker threads ([`crate::linalg::par`]); None
     /// keeps the process-wide setting.
     threads: Option<usize>,
+    /// Wait-for-k runtime controller policy ([`crate::control`]).
+    policy: KPolicy,
     #[allow(clippy::type_complexity)]
     eval: Option<Box<dyn Fn(&[f64]) -> (f64, f64) + 'a>>,
     w0: Option<Vec<f64>>,
@@ -274,6 +287,7 @@ impl<'a> Experiment<'a> {
             speeds: SpeedProfile::Uniform,
             speed_seed: 0,
             threads: None,
+            policy: KPolicy::Static,
             eval: None,
             w0: None,
         }
@@ -300,6 +314,19 @@ impl<'a> Experiment<'a> {
     /// interrupted. Default: `m` (full gather).
     pub fn wait_for(mut self, k: usize) -> Self {
         self.k = Some(k);
+        self
+    }
+
+    /// Wait-for-k runtime controller policy ([`crate::control`]).
+    /// Default: [`KPolicy::Static`] — the classic fixed-k gather with
+    /// strict semantics (`k > live` panics). An adaptive policy starts
+    /// from [`wait_for`](Self::wait_for)'s k, routes every gather
+    /// through the live-clamped round path, and moves k between rounds
+    /// within `[erasure_floor(m, β), m]`; the per-round decisions and
+    /// arrivals land in [`RunOutput::rounds`]. Synchronous wait-for-k
+    /// solvers only — the async baselines reject a non-static policy.
+    pub fn controller(mut self, policy: KPolicy) -> Self {
+        self.policy = policy;
         self
     }
 
@@ -456,7 +483,14 @@ impl<'a> Experiment<'a> {
         }
         let label =
             if self.label.is_empty() { solver.name().to_string() } else { self.label.clone() };
-        let mut ctx = Ctx { exp: self, label, pjrt_attached: 0, beta: 1.0 };
+        let mut ctx = Ctx {
+            exp: self,
+            label,
+            pjrt_attached: 0,
+            beta: 1.0,
+            rounds: Vec::new(),
+            controller: "static",
+        };
         let core = solver.solve(&mut ctx)?;
         Ok(RunOutput {
             trace: core.trace,
@@ -464,6 +498,8 @@ impl<'a> Experiment<'a> {
             participation: core.participation,
             pjrt_attached: ctx.pjrt_attached,
             beta: ctx.beta,
+            rounds: ctx.rounds,
+            controller: ctx.controller.to_string(),
         })
     }
 
@@ -472,8 +508,14 @@ impl<'a> Experiment<'a> {
     /// cluster + assembler, without running a solver.
     pub fn assemble_data_parallel(&self) -> Result<DataParallelParts> {
         self.validate()?;
-        let mut ctx =
-            Ctx { exp: self, label: self.label.clone(), pjrt_attached: 0, beta: 1.0 };
+        let mut ctx = Ctx {
+            exp: self,
+            label: self.label.clone(),
+            pjrt_attached: 0,
+            beta: 1.0,
+            rounds: Vec::new(),
+            controller: "static",
+        };
         let (cluster, assembler) = ctx.data_parallel()?;
         Ok(DataParallelParts {
             cluster,
@@ -522,6 +564,10 @@ pub struct Ctx<'e, 'a> {
     label: String,
     pub(crate) pjrt_attached: usize,
     pub(crate) beta: f64,
+    /// Per-round controller records, filled by [`Ctx::run_rounds`].
+    pub(crate) rounds: Vec<RoundStats>,
+    /// Name of the controller that steered the run.
+    pub(crate) controller: &'static str,
 }
 
 impl<'e, 'a> Ctx<'e, 'a> {
@@ -571,6 +617,52 @@ impl<'e, 'a> Ctx<'e, 'a> {
             Some(f) => &**f,
             None => &zero_eval,
         }
+    }
+
+    /// The experiment's wait-for-k controller policy.
+    pub fn policy(&self) -> &KPolicy {
+        &self.exp.policy
+    }
+
+    /// Build the experiment's k-controller and drive a solver loop with
+    /// it: `run` receives the wired [`RoundCtl`] plus the trace label
+    /// and evaluation callback. A static policy uses the strict
+    /// fixed-k gather (bit-identical to the pre-controller loops); an
+    /// adaptive policy seeds the controller with `k` and the ACHIEVED β
+    /// (call after [`data_parallel`](Self::data_parallel) /
+    /// [`model_parallel`](Self::model_parallel)), then routes every
+    /// round through the live-clamped gather. The per-round records
+    /// land in [`RunOutput::rounds`] either way.
+    pub fn run_rounds<R>(
+        &mut self,
+        run: impl FnOnce(&mut RoundCtl<'_>, &str, &EvalFn<'_>) -> R,
+    ) -> R {
+        let mut controller = self.exp.policy.build(self.exp.effective_k(), self.exp.m, self.beta);
+        self.controller = controller.name();
+        let (out, rounds) = if self.exp.policy.is_static() {
+            let mut ctl = RoundCtl::fixed(self.exp.effective_k());
+            let out = run(&mut ctl, &self.label, self.eval_fn());
+            (out, ctl.into_rounds())
+        } else {
+            let k0 = controller.initial_k();
+            let mut policy = |s: &RoundStats| controller.observe(s);
+            let mut ctl = RoundCtl::adaptive(k0, &mut policy);
+            let out = run(&mut ctl, &self.label, self.eval_fn());
+            (out, ctl.into_rounds())
+        };
+        self.rounds = rounds;
+        out
+    }
+
+    /// Guard for the async baselines, which have no gather rounds for a
+    /// k-controller to steer.
+    pub fn require_static_policy(&self, who: &str) -> Result<()> {
+        anyhow::ensure!(
+            self.exp.policy.is_static(),
+            "{who} has no gather rounds for a k-controller to steer; adaptive \
+             k-policies need the wait-for-k solvers (gd / lbfgs / prox / bcd)"
+        );
+        Ok(())
     }
 
     /// Instantiate the experiment's straggler delay model.
@@ -987,6 +1079,62 @@ mod tests {
         assert_eq!(a.trace.len(), 20);
         assert!(a.trace.records.iter().all(|r| r.k_used == 6));
         assert!(a.trace.total_time().is_finite());
+    }
+
+    #[test]
+    fn adaptive_controller_is_deterministic_and_bounded() {
+        let (x, y, _) = gaussian_linear(64, 8, 0.2, 2);
+        let sc = crate::scenario::Scenario::builtin("crash-rejoin").unwrap();
+        let exp = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(8)
+            .wait_for(6)
+            .scenario(&sc)
+            .controller(KPolicy::Adaptive(Default::default()));
+        let a = exp.run(Gd::with_step(0.01).iters(20)).unwrap();
+        let b = exp.run(Gd::with_step(0.01).iters(20)).unwrap();
+        assert_eq!(a.w, b.w, "controller-enabled runs must be bit-identical");
+        assert_eq!(a.controller, "adaptive");
+        assert_eq!(a.rounds.len(), 20);
+        let floor = crate::control::erasure_floor(8, a.beta);
+        for r in &a.rounds {
+            assert!(
+                r.k_requested >= floor,
+                "round {}: k {} < floor {floor}",
+                r.round,
+                r.k_requested
+            );
+            assert!(r.k_requested <= 8);
+            assert_eq!(r.k_effective, r.k_requested.min(r.live));
+            assert_eq!(r.arrivals.len(), r.k_effective);
+        }
+        // The crash window shrinks live below m; the controller must
+        // have been held to it rather than panicking the strict gather.
+        assert!(a.rounds.iter().any(|r| r.live < 8), "crash window never seen");
+    }
+
+    #[test]
+    fn static_runs_record_rounds_too() {
+        let (x, y, _) = gaussian_linear(32, 4, 0.2, 5);
+        let out = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(4)
+            .wait_for(3)
+            .run(Gd::with_step(0.01).iters(6))
+            .unwrap();
+        assert_eq!(out.controller, "static");
+        assert_eq!(out.rounds.len(), 6);
+        assert!(out.rounds.iter().all(|r| r.k_requested == 3 && r.k_effective == 3));
+    }
+
+    #[test]
+    fn async_solvers_reject_adaptive_policy() {
+        let (x, y, _) = gaussian_linear(30, 6, 0.2, 11);
+        let exp = Experiment::new(Problem::least_squares(&x, &y))
+            .workers(3)
+            .controller(KPolicy::Adaptive(Default::default()));
+        let err = exp.run(AsyncGd::with_step(0.01).updates(50)).unwrap_err();
+        assert!(err.to_string().contains("k-controller"), "got: {err}");
+        let err = exp.run(AsyncBcd::with_step(0.01).updates(50)).unwrap_err();
+        assert!(err.to_string().contains("k-controller"), "got: {err}");
     }
 
     #[test]

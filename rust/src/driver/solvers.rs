@@ -82,7 +82,9 @@ impl Solver for Gd {
             lambda: self.lambda,
             w0: ctx.w0(),
         };
-        Ok(gd_loop(cluster.as_mut(), &assembler, &cfg, ctx.label(), ctx.eval_fn()))
+        Ok(ctx.run_rounds(|ctl, label, eval| {
+            gd_loop(cluster.as_mut(), &assembler, &cfg, ctl, label, eval)
+        }))
     }
 }
 
@@ -148,7 +150,9 @@ impl Solver for Lbfgs {
             rho: self.rho,
             w0: ctx.w0(),
         };
-        Ok(lbfgs_loop(cluster.as_mut(), &assembler, &cfg, ctx.label(), ctx.eval_fn()))
+        Ok(ctx.run_rounds(|ctl, label, eval| {
+            lbfgs_loop(cluster.as_mut(), &assembler, &cfg, ctl, label, eval)
+        }))
     }
 }
 
@@ -193,7 +197,9 @@ impl Solver for Prox {
             lambda: self.lambda,
             w0: ctx.w0(),
         };
-        Ok(prox_loop(cluster.as_mut(), &assembler, &cfg, ctx.label(), ctx.eval_fn()))
+        Ok(ctx.run_rounds(|ctl, label, eval| {
+            prox_loop(cluster.as_mut(), &assembler, &cfg, ctl, label, eval)
+        }))
     }
 }
 
@@ -236,15 +242,9 @@ impl Solver for Bcd {
         let parts = ctx.model_parallel(self.step, self.lambda)?;
         let mut cluster = parts.cluster;
         let cfg = BcdConfig { k: ctx.k(), iters: self.iters };
-        Ok(bcd_loop(
-            cluster.as_mut(),
-            &parts.recon,
-            parts.n,
-            parts.p,
-            &cfg,
-            ctx.label(),
-            ctx.eval_fn(),
-        ))
+        Ok(ctx.run_rounds(|ctl, label, eval| {
+            bcd_loop(cluster.as_mut(), &parts.recon, parts.n, parts.p, &cfg, ctl, label, eval)
+        }))
     }
 }
 
@@ -294,6 +294,7 @@ impl Solver for AsyncGd {
         ctx.reject_w0("AsyncGd")?;
         ctx.require_sim_engine("AsyncGd")?;
         ctx.reject_unsupported_scenario("AsyncGd")?;
+        ctx.require_static_policy("AsyncGd")?;
         ctx.beta = 1.0;
         let shards = ctx.uncoded_row_shards()?;
         let mut delay = ctx.delay_model()?;
@@ -361,6 +362,7 @@ impl Solver for AsyncBcd {
         ctx.reject_w0("AsyncBcd")?;
         ctx.require_sim_engine("AsyncBcd")?;
         ctx.reject_unsupported_scenario("AsyncBcd")?;
+        ctx.require_static_policy("AsyncBcd")?;
         ctx.beta = 1.0;
         let blocks = ctx.uncoded_col_blocks()?;
         let phi = ctx.grad_phi()?;

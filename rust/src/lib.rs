@@ -87,6 +87,44 @@
 //! `coded-opt scenario` subcommand; `rust/tests/golden_traces.rs` pins
 //! the grid's traces bit-for-bit against checked-in fixtures.
 //!
+//! ## Adaptive wait-for-k control and the redundancy/latency frontier
+//!
+//! The wait-for-`k` knob need not be static: the [`control`] module
+//! adds an online controller that retunes `k` *between* rounds from the
+//! recorded arrival pattern of the previous round. The contract
+//! ([`control::Controller`]) has three clauses, stated in the module
+//! docs and enforced by tests:
+//!
+//! 1. decisions derive **only** from recorded arrival times
+//!    ([`metrics::RoundStats`]), so a controller run replays
+//!    bit-identically from a delay tape on any engine;
+//! 2. `k` stays within hard bounds — never below the erasure-tolerance
+//!    floor [`control::erasure_floor`]`(m, β) = ⌈m/β⌉` (below it the
+//!    code cannot cover the erasures), never above `m`, and held to the
+//!    live-worker count under crash windows;
+//! 3. exactly one `observe` per gather round, in round order.
+//!
+//! Select a policy with `Experiment::controller(KPolicy::parse(
+//! "adaptive")?)` or `coded-opt scenario --policy adaptive:widen=2`;
+//! static runs keep the strict legacy gather path and their golden
+//! traces byte-for-byte. Per-round arrivals and the controller's
+//! k-decision sequence are surfaced in [`driver::RunOutput`] (`rounds`,
+//! `controller`) and in the canonical trace (`--trace-out`).
+//!
+//! On top of the controller sits the `coded-opt pareto` sweep
+//! ([`control::pareto`]): a (β, k-policy, scheme) × scenario grid where
+//! every cell reports time-to-ε, rounds-to-ε, erasure-robustness
+//! `(m − ⌈m/β⌉)/m`, and mean/p99 round latency; per-scenario
+//! non-dominated points form the redundancy/latency frontier the paper
+//! trades along. Reports are hand-written JSON in the `bench-v1`
+//! family: `coded-opt scenario --json-out` emits per-cell metrics as
+//! `coded-opt/grid-v1` ([`scenario::GRID_SCHEMA`]) and `coded-opt
+//! pareto --out` emits the point set + frontier as `coded-opt/pareto-v1`
+//! ([`control::pareto::PARETO_SCHEMA`], field reference in the module
+//! docs). Both are byte-deterministic for a pinned seed — CI's
+//! `pareto-smoke` job runs the same pinned-seed sweep twice and
+//! byte-compares the two reports.
+//!
 //! ## The compute data plane: deterministic parallel kernels
 //!
 //! The [`linalg`] kernels (`matvec` / `matvec_t` / `matmul` / `gram`,
@@ -293,8 +331,9 @@
 //!   | 0 | `linalg` |
 //!   | 1 | `encoding`, `data` |
 //!   | 2 | `coordinator`, `cluster`, `scenario` |
-//!   | 3 | `driver` |
-//!   | 4 | `cli`, `main` |
+//!   | 3 | `control` |
+//!   | 4 | `driver` |
+//!   | 5 | `cli`, `main` |
 //!
 //!   An import from a lower-numbered layer into a higher one is a
 //!   finding. `analysis` sits outside the table: it may import
@@ -353,6 +392,10 @@
 //!   wait-for-`k` gather and interrupts: virtual-time [`cluster::sim`],
 //!   thread-backed [`cluster::threads`], and multi-process TCP
 //!   [`cluster::socket`] over the [`cluster::wire`] frame codec.
+//! - [`control`] — the online wait-for-`k` runtime controllers
+//!   (static / adaptive arrival-histogram policies behind
+//!   [`control::Controller`]) and the `coded-opt pareto`
+//!   redundancy/latency frontier sweep ([`control::pareto`]).
 //! - [`coordinator`] — the algorithm master loops and worker state
 //!   machines the driver dispatches to ([`driver::Experiment`] is the
 //!   sole entry point; the old `run_*` shims are gone).
@@ -383,6 +426,7 @@ pub mod bench;
 pub mod cli;
 pub mod cluster;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod delay;

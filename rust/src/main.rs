@@ -2,12 +2,13 @@
 //!
 //! Subcommands:
 //! - `run --config exp.toml [--workers N --k K --scheme S --iters T
-//!   --step A --lambda L]` —
+//!   --step A --lambda L --policy static|adaptive[:opts]]` —
 //!   run one experiment through the [`coded_opt::driver::Experiment`]
 //!   API (overrides apply on top of the config file; all flags optional,
 //!   defaults from [`coded_opt::config::ExperimentConfig`]). Every
 //!   algorithm is supported: gd / lbfgs / prox / bcd / async_gd /
-//!   async_bcd.
+//!   async_bcd; `--policy adaptive` retunes wait-for-k between rounds
+//!   (sync solvers only, any engine).
 //! - `spectrum [--scheme paley --n 128 --workers 16 --beta 2 --k 12]` —
 //!   print the subsampled-Gram eigenvalue summary (Figures 5–6 style).
 //! - `bench [--json] [--out BENCH_hotpath.json]
@@ -26,10 +27,23 @@
 //! - `scenario [--schemes hadamard,uncoded --algorithms gd,lbfgs|all
 //!   --scenarios crash-rejoin,rack-correlated | --scenario-file sc.toml]
 //!   [--n N --p P --workers M --k K --beta B --iters T --seed S
-//!   --out dir] [--list]` — sweep a Scheme × Solver × Scenario grid on
-//!   the deterministic SimCluster and print per-cell results
-//!   (`--out` also writes per-cell trace CSVs and canonical bit-exact
-//!   traces).
+//!   --policy static|adaptive[:opts] --out dir
+//!   --json-out FILE --epsilon E] [--list]` — sweep a Scheme × Solver ×
+//!   Scenario grid on the deterministic SimCluster and print per-cell
+//!   results (`--out` also writes per-cell trace CSVs and canonical
+//!   bit-exact traces; `--json-out` writes the `coded-opt/grid-v1`
+//!   per-cell metrics report; `--policy` selects the wait-for-k runtime
+//!   controller, see [`coded_opt::control`]).
+//! - `pareto [--schemes hadamard,uncoded --betas 1,2
+//!   --policies static,adaptive --scenarios crash-rejoin,rack-correlated
+//!   --n N --p P --workers M --k K0 --iters T --seed S --lambda L
+//!   --epsilon E --out FILE]` — sweep the (β, k-policy, scheme) ×
+//!   scenario grid, report per-point time-to-ε / round-latency /
+//!   erasure-robustness metrics, mark the per-scenario non-dominated
+//!   points, and (with `--out`) write the `coded-opt/pareto-v1` report
+//!   ([`coded_opt::control::pareto`]). Byte-deterministic for a pinned
+//!   seed — CI's `pareto-smoke` job runs the sweep twice and
+//!   byte-compares the two reports.
 //! - `shard --out DIR [--dataset gaussian|sparse --n N --p P --sigma S
 //!   --seed S --shard-rows R --nnz K --dtype f64|f32]` — generate a
 //!   synthetic dataset straight into the out-of-core shard format
@@ -88,6 +102,8 @@ use coded_opt::bench::{banner, run_bench, BenchReport};
 use coded_opt::cli::Args;
 use coded_opt::cluster::WorkerServer;
 use coded_opt::config::{Algorithm, ExperimentConfig, Scheme};
+use coded_opt::control::pareto::{pareto_json, pareto_table, run_pareto, ParetoSpec};
+use coded_opt::control::KPolicy;
 use coded_opt::data::shard::{
     shard_dataset_dtype, BlockSource, Dtype, MatSource, ShardedSource,
 };
@@ -102,7 +118,8 @@ use coded_opt::objectives::{LassoProblem, QuadObjective, RidgeProblem};
 use coded_opt::rng::Pcg64;
 use coded_opt::runtime::ArtifactIndex;
 use coded_opt::scenario::{
-    canonical_trace, read_tape_file, run_grid, summary_table, GridCell, GridSpec, Scenario,
+    canonical_trace, grid_json, read_tape_file, run_grid, summarize_cell, summary_table, GridCell,
+    GridSpec, Scenario,
 };
 
 fn main() -> Result<()> {
@@ -111,6 +128,7 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("spectrum") => cmd_spectrum(&args),
         Some("scenario") => cmd_scenario(&args),
+        Some("pareto") => cmd_pareto(&args),
         Some("shard") => cmd_shard(&args),
         Some("encode") => cmd_encode(&args),
         Some("worker") => cmd_worker(&args),
@@ -119,7 +137,7 @@ fn main() -> Result<()> {
         Some("info") | None => cmd_info(),
         Some(other) => bail!(
             "unknown subcommand '{other}' \
-             (try: run, spectrum, scenario, shard, encode, worker, bench, lint, info)"
+             (try: run, spectrum, scenario, pareto, shard, encode, worker, bench, lint, info)"
         ),
     }
 }
@@ -136,7 +154,9 @@ fn cmd_info() -> Result<()> {
             println!("  {:<24} {:<14} {}x{}", a.name, a.kind, a.rows, a.cols);
         }
     }
-    println!("subcommands: run, spectrum, scenario, shard, encode, worker, bench, lint, info");
+    println!(
+        "subcommands: run, spectrum, scenario, pareto, shard, encode, worker, bench, lint, info"
+    );
     Ok(())
 }
 
@@ -584,6 +604,9 @@ fn load_config(args: &Args) -> Result<ExperimentConfig> {
     if args.has_flag("pjrt") {
         cfg.use_pjrt = true;
     }
+    if let Some(v) = args.get("policy") {
+        cfg.k_policy = KPolicy::parse(v)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -605,6 +628,7 @@ fn base_source<'a>(
         .wait_for(cfg.k)
         .redundancy(cfg.beta)
         .seed(cfg.seed)
+        .controller(cfg.k_policy.clone())
         .label(&cfg.name);
     exp = match &cfg.scenario {
         Some(sc) => exp.scenario(sc),
@@ -678,6 +702,22 @@ fn write_trace_out(args: &Args, cfg: &ExperimentConfig, out: &RunOutput) -> Resu
     std::fs::write(path, canonical_trace(&cell))?;
     println!("wrote canonical trace to {path}");
     Ok(())
+}
+
+/// One-line controller report for adaptive runs: where the online
+/// policy actually moved k. Static runs stay silent so legacy output
+/// is unchanged.
+fn print_controller(out: &RunOutput) {
+    if out.controller == "static" || out.rounds.is_empty() {
+        return;
+    }
+    let lo = out.rounds.iter().map(|r| r.k_effective).min().unwrap_or(0);
+    let hi = out.rounds.iter().map(|r| r.k_effective).max().unwrap_or(0);
+    println!(
+        "controller '{}': {} rounds, effective k ranged {lo}..{hi}",
+        out.controller,
+        out.rounds.len()
+    );
 }
 
 /// Print a convergence trace the way `coded-opt run` reports it.
@@ -820,6 +860,7 @@ fn cmd_run_sharded(
         println!("PJRT-backed workers: {}/{}", out.pjrt_attached, cfg.workers);
     }
     write_trace_out(args, &cfg, &out)?;
+    print_controller(&out);
     print_trace(&out.trace);
     Ok(())
 }
@@ -969,6 +1010,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("PJRT-backed workers: {}/{}", out.pjrt_attached, cfg.workers);
     }
     write_trace_out(args, &cfg, &out)?;
+    print_controller(&out);
     print_trace(&out.trace);
     Ok(())
 }
@@ -1067,9 +1109,12 @@ fn cmd_scenario(args: &Args) -> Result<()> {
     if let Some(v) = args.get_usize("seed")? {
         spec.seed = v as u64;
     }
+    if let Some(v) = args.get("policy") {
+        spec.policy = KPolicy::parse(v)?;
+    }
     println!(
         "scenario grid: {} scheme(s) × {} solver(s) × {} scenario(s) = {} cells \
-         (n={} p={} m={} k={} β={} iters={} seed={})",
+         (n={} p={} m={} k={} β={} iters={} seed={} policy={})",
         spec.schemes.len(),
         spec.algorithms.len(),
         spec.scenarios.len(),
@@ -1080,7 +1125,8 @@ fn cmd_scenario(args: &Args) -> Result<()> {
         spec.k,
         spec.beta,
         spec.iters,
-        spec.seed
+        spec.seed,
+        spec.policy.name()
     );
     let cells = run_grid(&spec)?;
     summary_table(&cells).print();
@@ -1096,6 +1142,89 @@ fn cmd_scenario(args: &Args) -> Result<()> {
             std::fs::write(dir.join(format!("{stem}.trace")), canonical_trace(cell))?;
         }
         println!("wrote {} trace pairs to {}", cells.len(), dir.display());
+    }
+    if let Some(path) = args.get("json-out") {
+        let epsilon = args.get_f64("epsilon")?.unwrap_or(0.5);
+        let rows: Vec<_> = cells.iter().map(|c| summarize_cell(c, epsilon)).collect();
+        std::fs::write(path, grid_json(&spec, epsilon, &rows))?;
+        println!("wrote coded-opt/grid-v1 report ({} cells) to {path}", rows.len());
+    }
+    Ok(())
+}
+
+/// Sweep the (β, k-policy, scheme) × scenario grid and report the
+/// redundancy/latency pareto frontier (`coded-opt/pareto-v1`).
+fn cmd_pareto(args: &Args) -> Result<()> {
+    let mut spec = ParetoSpec::small();
+    if let Some(s) = args.get("schemes") {
+        spec.schemes =
+            csv_list(s).into_iter().map(Scheme::parse).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(s) = args.get("betas") {
+        let mut betas = Vec::new();
+        for t in csv_list(s) {
+            match t.parse::<f64>() {
+                Ok(b) => betas.push(b),
+                Err(e) => bail!("bad --betas entry '{t}': {e}"),
+            }
+        }
+        spec.betas = betas;
+    }
+    if let Some(s) = args.get("policies") {
+        spec.policies =
+            csv_list(s).into_iter().map(KPolicy::parse).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(s) = args.get("scenarios") {
+        spec.scenarios = csv_list(s).into_iter().map(String::from).collect();
+    }
+    if let Some(v) = args.get_usize("n")? {
+        spec.n = v;
+    }
+    if let Some(v) = args.get_usize("p")? {
+        spec.p = v;
+    }
+    if let Some(v) = args.get_usize("workers")? {
+        spec.m = v;
+    }
+    if let Some(v) = args.get_usize("k")? {
+        spec.k0 = v;
+    }
+    if let Some(v) = args.get_usize("iters")? {
+        spec.iters = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        spec.seed = v as u64;
+    }
+    if let Some(v) = args.get_f64("lambda")? {
+        spec.lambda = v;
+    }
+    if let Some(v) = args.get_f64("epsilon")? {
+        spec.epsilon = v;
+    }
+    println!(
+        "pareto sweep: {} scheme(s) × {} β × {} polic{} × {} scenario(s) = {} points \
+         (n={} p={} m={} k0={} iters={} seed={} ε={})",
+        spec.schemes.len(),
+        spec.betas.len(),
+        spec.policies.len(),
+        if spec.policies.len() == 1 { "y" } else { "ies" },
+        spec.scenarios.len(),
+        spec.points(),
+        spec.n,
+        spec.p,
+        spec.m,
+        spec.k0,
+        spec.iters,
+        spec.seed,
+        spec.epsilon
+    );
+    let points = run_pareto(&spec)?;
+    pareto_table(&points).print();
+    let on = points.iter().filter(|p| p.on_frontier).count();
+    println!("{on} of {} points on the per-scenario frontier", points.len());
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, pareto_json(&spec, &points))?;
+        println!("wrote coded-opt/pareto-v1 report to {path}");
     }
     Ok(())
 }

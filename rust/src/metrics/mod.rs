@@ -9,6 +9,53 @@ pub use histogram::Histogram;
 pub use trace::{IterRecord, Trace};
 pub use writer::{write_csv, TableWriter};
 
+/// One cluster round as the wait-for-k control plane saw it: what k was
+/// asked for, what the engine could actually deliver, and the winners'
+/// arrival times. This is the *only* input a
+/// [`Controller`](../control/trait.Controller.html) may base its next-k
+/// decision on (see `crate::control`) — everything here is derived from
+/// recorded arrivals, so a controller-enabled run replays bit-identically
+/// from a delay tape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundStats {
+    /// Cluster round index (for L-BFGS this counts both the gradient and
+    /// the line-search round of each iteration).
+    pub round: usize,
+    /// The k the coordinator asked the engine for this round (already
+    /// clamped to the controller's hard bounds).
+    pub k_requested: usize,
+    /// The k the engine delivered — `min(k_requested, live)` under an
+    /// adaptive policy, exactly `k_requested` under a static one.
+    pub k_effective: usize,
+    /// Non-crashed workers at dispatch time.
+    pub live: usize,
+    /// Virtual seconds from round start to the slowest winner.
+    pub elapsed: f64,
+    /// Winner arrival times in arrival order (ascending; ties broken by
+    /// worker index) — the per-round arrival "histogram" raw data.
+    pub arrivals: Vec<f64>,
+}
+
+impl RoundStats {
+    /// The winners' arrival times as a [`Histogram`] (exact percentiles).
+    pub fn arrival_histogram(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for &a in &self.arrivals {
+            h.record(a);
+        }
+        h
+    }
+
+    /// Gap between the slowest and second-slowest winner — the marginal
+    /// price paid for the last unit of k this round (0 when k < 2).
+    pub fn tail_gap(&self) -> f64 {
+        match self.arrivals.len() {
+            0 | 1 => 0.0,
+            n => self.arrivals[n - 1] - self.arrivals[n - 2],
+        }
+    }
+}
+
 /// Per-node participation statistics — the empirical probability of the
 /// event {i ∈ A_t} plotted in the paper's Figures 12–13.
 #[derive(Clone, Debug)]
@@ -132,6 +179,26 @@ mod tests {
         assert!((p - 0.5).abs() < 1e-12);
         assert!((r - 0.5).abs() < 1e-12);
         assert!((f1 - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn round_stats_tail_gap_and_histogram() {
+        let s = RoundStats {
+            round: 0,
+            k_requested: 3,
+            k_effective: 3,
+            live: 4,
+            elapsed: 0.9,
+            arrivals: vec![0.1, 0.2, 0.9],
+        };
+        assert!((s.tail_gap() - 0.7).abs() < 1e-12);
+        let mut h = s.arrival_histogram();
+        assert_eq!(h.len(), 3);
+        assert_eq!(h.max(), 0.9);
+        let empty = RoundStats { arrivals: vec![], k_effective: 0, ..s.clone() };
+        assert_eq!(empty.tail_gap(), 0.0);
+        let one = RoundStats { arrivals: vec![0.5], k_effective: 1, ..s };
+        assert_eq!(one.tail_gap(), 0.0);
     }
 
     #[test]

@@ -8,9 +8,14 @@
 //! exact f64 bit patterns for golden-fixture comparison.
 
 use super::Scenario;
+// lint:allow(zone-containment) — shares bench's dependency-free JSON writer; no timing flows
+use crate::bench::json::escape;
 use crate::config::{Algorithm, Scheme};
+// lint:allow(layer-order) — grid cells carry the driver-level k-policy selection by design
+use crate::control::KPolicy;
 use crate::data::synth::gaussian_linear;
-// The grid enumerates Scheme×Solver×Scenario cells and runs each through the driver.
+// The grid enumerates Scheme×Solver×Scenario cells and runs each through the driver
+// (and carries the driver-level k-policy selection for each cell).
 // lint:allow(layer-order) — the sweep is a harness over driver::Experiment by design
 use crate::driver::{self, Experiment, Problem, RunOutput};
 use crate::objectives::{LassoProblem, QuadObjective, RidgeProblem};
@@ -34,6 +39,10 @@ pub struct GridSpec {
     pub iters: usize,
     pub seed: u64,
     pub lambda: f64,
+    /// Wait-for-k controller policy applied to every cell
+    /// ([`crate::control`]). `KPolicy::Static` reproduces the classic
+    /// fixed-k grid bit-for-bit.
+    pub policy: KPolicy,
 }
 
 impl GridSpec {
@@ -54,6 +63,7 @@ impl GridSpec {
             iters: 15,
             seed: 42,
             lambda: 0.05,
+            policy: KPolicy::Static,
         }
     }
 
@@ -132,6 +142,7 @@ pub fn run_grid(spec: &GridSpec) -> Result<Vec<GridCell>> {
                     .redundancy(spec.beta)
                     .seed(spec.seed)
                     .scenario(scenario)
+                    .controller(spec.policy.clone())
                     .label(&label);
                 let out = match algorithm {
                     Algorithm::Gd => exp
@@ -201,7 +212,160 @@ pub fn canonical_trace(cell: &GridCell) -> String {
         s.push_str(&format!(" {:016x}", v.to_bits()));
     }
     s.push('\n');
+    // Controller-steered runs additionally pin the per-round k decisions
+    // and the arrival times they were derived from. Static runs emit
+    // nothing here, keeping their serialization byte-identical to every
+    // pre-controller fixture (and to the socket-vs-sim CI `cmp`).
+    if cell.out.controller != "static" {
+        s.push_str(&format!(
+            "# controller={} rounds={}\n",
+            cell.out.controller,
+            cell.out.rounds.len()
+        ));
+        for r in &cell.out.rounds {
+            s.push_str(&format!(
+                "r{} k={}/{} live={} {:016x}",
+                r.round,
+                r.k_requested,
+                r.k_effective,
+                r.live,
+                r.elapsed.to_bits()
+            ));
+            for a in &r.arrivals {
+                s.push_str(&format!(" {:016x}", a.to_bits()));
+            }
+            s.push('\n');
+        }
+    }
     s
+}
+
+/// Schema tag of the machine-readable grid report.
+pub const GRID_SCHEMA: &str = "coded-opt/grid-v1";
+
+/// Per-cell metrics row of the `coded-opt/grid-v1` report — also the
+/// raw material of the `coded-opt pareto` sweep
+/// ([`crate::control::pareto`]), which attaches redundancy-robustness
+/// coordinates and prunes these rows to a frontier.
+#[derive(Clone, Debug)]
+pub struct CellSummary {
+    pub scheme: String,
+    pub algorithm: String,
+    pub scenario: String,
+    /// Controller that steered the run (`RunOutput::controller`).
+    pub policy: String,
+    /// Achieved redundancy β of the built encoding.
+    pub beta_achieved: f64,
+    pub final_objective: f64,
+    /// Simulated seconds to the last trace record.
+    pub total_time: f64,
+    /// Gather rounds recorded (L-BFGS: two per outer iteration).
+    pub rounds: usize,
+    pub mean_round_secs: f64,
+    pub p99_round_secs: f64,
+    /// Range of the effective k over the run's rounds.
+    pub k_min: usize,
+    pub k_max: usize,
+    /// Simulated seconds until the objective first dropped to
+    /// `ε × f(w_1)`; `None` if the run never got there.
+    pub time_to_eps: Option<f64>,
+    /// Trace records consumed to reach the same target.
+    pub iters_to_eps: Option<usize>,
+    pub min_participation: f64,
+}
+
+/// Reduce one completed cell to its `grid-v1` metrics row. `epsilon`
+/// sets the convergence target as a fraction of the first recorded
+/// objective (`time_to_eps` is the simulated time of the first record
+/// at or below `ε × f(w_1)`).
+pub fn summarize_cell(cell: &GridCell, epsilon: f64) -> CellSummary {
+    let out = &cell.out;
+    let mut time_to_eps = None;
+    let mut iters_to_eps = None;
+    if let Some(first) = out.trace.records.first() {
+        let target = epsilon * first.objective;
+        for (i, r) in out.trace.records.iter().enumerate() {
+            if r.objective <= target {
+                time_to_eps = Some(r.time);
+                iters_to_eps = Some(i + 1);
+                break;
+            }
+        }
+    }
+    let mut h = crate::metrics::Histogram::new();
+    for r in &out.rounds {
+        h.record(r.elapsed);
+    }
+    let (mean_round, p99_round) =
+        if h.is_empty() { (0.0, 0.0) } else { (h.mean(), h.percentile(0.99)) };
+    let k_eff: Vec<usize> = out.rounds.iter().map(|r| r.k_effective).collect();
+    CellSummary {
+        scheme: cell.scheme.name().to_string(),
+        algorithm: cell.algorithm.name().to_string(),
+        scenario: cell.scenario.clone(),
+        policy: out.controller.clone(),
+        beta_achieved: out.beta,
+        final_objective: out.trace.final_objective(),
+        total_time: out.trace.total_time(),
+        rounds: out.rounds.len(),
+        mean_round_secs: mean_round,
+        p99_round_secs: p99_round,
+        k_min: k_eff.iter().copied().min().unwrap_or(0),
+        k_max: k_eff.iter().copied().max().unwrap_or(0),
+        time_to_eps,
+        iters_to_eps,
+        min_participation: cell.min_participation(),
+    }
+}
+
+/// Serialize a completed grid to the `coded-opt/grid-v1` JSON document
+/// (hand-written like `bench-v1`; parse it back with
+/// [`crate::bench::json`]). Deterministic: a pinned-seed grid yields a
+/// byte-identical report.
+pub fn grid_json(spec: &GridSpec, epsilon: f64, cells: &[CellSummary]) -> String {
+    let mut out = String::from("{\n");
+    out.push_str(&format!("  \"schema\": \"{GRID_SCHEMA}\",\n"));
+    out.push_str("  \"spec\": {");
+    out.push_str(&format!("\"n\": {}, ", spec.n));
+    out.push_str(&format!("\"p\": {}, ", spec.p));
+    out.push_str(&format!("\"workers\": {}, ", spec.m));
+    out.push_str(&format!("\"k\": {}, ", spec.k));
+    out.push_str(&format!("\"beta\": {:e}, ", spec.beta));
+    out.push_str(&format!("\"iters\": {}, ", spec.iters));
+    out.push_str(&format!("\"seed\": {}, ", spec.seed));
+    out.push_str(&format!("\"lambda\": {:e}, ", spec.lambda));
+    out.push_str(&format!("\"policy\": \"{}\", ", spec.policy.name()));
+    out.push_str(&format!("\"epsilon\": {epsilon:e}"));
+    out.push_str("},\n");
+    out.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        out.push_str("    {");
+        out.push_str(&format!("\"scheme\": \"{}\", ", escape(&c.scheme)));
+        out.push_str(&format!("\"algorithm\": \"{}\", ", escape(&c.algorithm)));
+        out.push_str(&format!("\"scenario\": \"{}\", ", escape(&c.scenario)));
+        out.push_str(&format!("\"policy\": \"{}\", ", escape(&c.policy)));
+        out.push_str(&format!("\"beta_achieved\": {:e}, ", c.beta_achieved));
+        out.push_str(&format!("\"final_objective\": {:e}, ", c.final_objective));
+        out.push_str(&format!("\"total_time\": {:e}, ", c.total_time));
+        out.push_str(&format!("\"rounds\": {}, ", c.rounds));
+        out.push_str(&format!("\"mean_round_secs\": {:e}, ", c.mean_round_secs));
+        out.push_str(&format!("\"p99_round_secs\": {:e}, ", c.p99_round_secs));
+        out.push_str(&format!("\"k_min\": {}, ", c.k_min));
+        out.push_str(&format!("\"k_max\": {}, ", c.k_max));
+        match c.time_to_eps {
+            Some(t) => out.push_str(&format!("\"time_to_eps\": {t:e}, ")),
+            None => out.push_str("\"time_to_eps\": null, "),
+        }
+        match c.iters_to_eps {
+            Some(n) => out.push_str(&format!("\"iters_to_eps\": {n}, ")),
+            None => out.push_str("\"iters_to_eps\": null, "),
+        }
+        out.push_str(&format!("\"min_participation\": {:e}", c.min_participation));
+        out.push('}');
+        out.push_str(if i + 1 < cells.len() { ",\n" } else { "\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
 }
 
 #[cfg(test)]
@@ -221,6 +385,7 @@ mod tests {
             iters: 8,
             seed: 7,
             lambda: 0.05,
+            policy: KPolicy::Static,
         }
     }
 
@@ -233,7 +398,52 @@ mod tests {
         assert_eq!(cell.stem(), "hadamard__gd__crash-rejoin");
         let s = canonical_trace(cell);
         assert!(s.starts_with("# scheme=hadamard"));
+        // Static runs must serialize exactly as before the controller
+        // landed: header + records + w, no rounds section.
         assert_eq!(s.lines().count(), 1 + 8 + 1);
+    }
+
+    #[test]
+    fn adaptive_cells_pin_their_round_decisions() {
+        let mut spec = tiny_spec();
+        spec.policy = KPolicy::Adaptive(Default::default());
+        let cells = run_grid(&spec).unwrap();
+        let cell = &cells[0];
+        assert_eq!(cell.out.controller, "adaptive");
+        assert_eq!(cell.out.rounds.len(), 8);
+        let s = canonical_trace(cell);
+        assert!(s.contains("# controller=adaptive rounds=8"));
+        assert_eq!(s.lines().count(), 1 + 8 + 1 + 1 + 8, "records + w + rounds section");
+        let again = canonical_trace(&run_grid(&spec).unwrap()[0]);
+        assert_eq!(s, again, "adaptive grid must be bit-deterministic");
+    }
+
+    #[test]
+    fn grid_json_is_schema_tagged_and_parseable() {
+        let cells = run_grid(&tiny_spec()).unwrap();
+        let rows: Vec<CellSummary> = cells.iter().map(|c| summarize_cell(c, 0.5)).collect();
+        assert_eq!(rows[0].policy, "static");
+        assert_eq!(rows[0].rounds, 8);
+        assert_eq!(rows[0].k_min, 6);
+        assert_eq!(rows[0].k_max, 6);
+        assert!(rows[0].mean_round_secs > 0.0);
+        assert!(rows[0].p99_round_secs >= rows[0].mean_round_secs);
+        let text = grid_json(&tiny_spec(), 0.5, &rows);
+        let root = crate::bench::json::parse(&text).unwrap();
+        let obj = root.as_object().unwrap();
+        let schema = crate::bench::json::get(obj, "schema").unwrap().as_str().unwrap();
+        assert_eq!(schema, GRID_SCHEMA);
+        let cells_v = crate::bench::json::get(obj, "cells").unwrap().as_array().unwrap();
+        assert_eq!(cells_v.len(), 1);
+        let row = cells_v[0].as_object().unwrap();
+        assert_eq!(
+            crate::bench::json::get(row, "scheme").unwrap().as_str().unwrap(),
+            "hadamard"
+        );
+        // Determinism: the pinned-seed report is byte-stable.
+        let rows2: Vec<CellSummary> =
+            run_grid(&tiny_spec()).unwrap().iter().map(|c| summarize_cell(c, 0.5)).collect();
+        assert_eq!(text, grid_json(&tiny_spec(), 0.5, &rows2));
     }
 
     #[test]

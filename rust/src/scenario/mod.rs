@@ -82,7 +82,10 @@ pub mod grid;
 pub mod record;
 pub mod transforms;
 
-pub use grid::{canonical_trace, run_grid, summary_table, GridCell, GridSpec};
+pub use grid::{
+    canonical_trace, grid_json, run_grid, summarize_cell, summary_table, CellSummary, GridCell,
+    GridSpec, GRID_SCHEMA,
+};
 pub use record::{DelayRecorder, TapeHandle};
 pub use transforms::{
     unit_hash, CrashWindowDelay, PhasedDelay, RackCorrelatedDelay, WorkerScaleDelay,

@@ -17,6 +17,11 @@
 //!   same grid run twice in-process must serialize identically, which is
 //!   the determinism claim of the paper's sample-path guarantees made
 //!   executable.
+//! - The `adaptive__*` fixtures pin the wait-for-k controller
+//!   ([`coded_opt::control`]) on the same machinery: their
+//!   [`canonical_trace`] serialization additionally carries every
+//!   per-round k decision and arrival time, so a drifting controller
+//!   heuristic fails the byte compare even when the iterates survive.
 
 // This suite pins bit-exact float values on purpose; exact equality
 // is the contract under test, not an accident (the workspace denies
@@ -27,7 +32,11 @@ use std::fs;
 use std::path::PathBuf;
 
 use coded_opt::config::{Algorithm, Scheme};
-use coded_opt::scenario::{canonical_trace, run_grid, GridSpec, Scenario};
+use coded_opt::control::{erasure_floor, KPolicy};
+use coded_opt::data::synth::gaussian_linear;
+use coded_opt::driver::{Experiment, Gd, Problem, RunOutput};
+use coded_opt::objectives::RidgeProblem;
+use coded_opt::scenario::{canonical_trace, run_grid, DelayRecorder, GridCell, GridSpec, Scenario};
 
 /// The pinned matrix: 2 schemes × 3 solvers × 4 scenarios = 24 cells,
 /// including crash/rejoin and rack-correlated adversaries.
@@ -49,11 +58,85 @@ fn golden_spec() -> GridSpec {
         iters: 12,
         seed: 1234,
         lambda: 0.05,
+        policy: KPolicy::Static,
+    }
+}
+
+/// The controller matrix: 2 schemes × 2 scenarios under the default
+/// adaptive policy, Gd only. Small on purpose — each cell's fixture
+/// pins the full k-decision sequence, so two adversaries (correlated
+/// stragglers, crash/rejoin) per scheme already cover both directions
+/// the controller can move k.
+fn adaptive_spec() -> GridSpec {
+    GridSpec {
+        schemes: vec![Scheme::Hadamard, Scheme::Gaussian],
+        algorithms: vec![Algorithm::Gd],
+        scenarios: vec![
+            Scenario::builtin("rack-correlated").unwrap(),
+            Scenario::builtin("crash-rejoin").unwrap(),
+        ],
+        n: 64,
+        p: 8,
+        m: 8,
+        k: 6,
+        beta: 2.0,
+        iters: 12,
+        seed: 1234,
+        lambda: 0.05,
+        policy: KPolicy::Adaptive(Default::default()),
     }
 }
 
 fn fixtures_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden")
+}
+
+/// Compare `cells` against fixtures named `{prefix}{stem}.trace`,
+/// blessing missing ones (or all of them under `BLESS=1`) unless
+/// `GOLDEN_STRICT=1` forbids it. Shared by the static and adaptive
+/// fixture tests so both matrices get identical bless/strict semantics.
+fn compare_or_bless(cells: &[GridCell], prefix: &str) {
+    let dir = fixtures_dir();
+    fs::create_dir_all(&dir).expect("create fixtures dir");
+    let bless = std::env::var("BLESS").is_ok();
+    let strict = std::env::var("GOLDEN_STRICT").is_ok_and(|v| v != "0" && !v.is_empty());
+    assert!(
+        !(bless && strict),
+        "BLESS and GOLDEN_STRICT are mutually exclusive: strict mode exists to \
+         prove no fixture was (re)generated"
+    );
+    let mut blessed = 0usize;
+    for cell in cells {
+        let path = dir.join(format!("{prefix}{}.trace", cell.stem()));
+        let got = canonical_trace(cell);
+        if bless || !path.exists() {
+            assert!(
+                !strict,
+                "GOLDEN_STRICT=1: fixture {} is missing — this run would bless it \
+                 and compare nothing. A strict pass needs the full committed (or \
+                 previously blessed) fixture set.",
+                path.display()
+            );
+            fs::write(&path, &got).expect("write fixture");
+            blessed += 1;
+            continue;
+        }
+        let want = fs::read_to_string(&path).expect("read fixture");
+        assert_eq!(
+            got, want,
+            "golden trace drift for {prefix}{} — coordinator/driver numerics changed. \
+             If intentional, regenerate fixtures with `BLESS=1 cargo test golden`.",
+            cell.stem()
+        );
+    }
+    if blessed > 0 {
+        eprintln!(
+            "golden_traces: blessed {blessed}/{} fixtures in {} \
+             (first run or BLESS=1); commit them to pin behavior",
+            cells.len(),
+            dir.display()
+        );
+    }
 }
 
 #[test]
@@ -75,49 +158,8 @@ fn scenario_grid_is_bit_deterministic() {
 
 #[test]
 fn golden_traces_match_fixtures() {
-    let spec = golden_spec();
-    let cells = run_grid(&spec).expect("grid run");
-    let dir = fixtures_dir();
-    fs::create_dir_all(&dir).expect("create fixtures dir");
-    let bless = std::env::var("BLESS").is_ok();
-    let strict = std::env::var("GOLDEN_STRICT").is_ok_and(|v| v != "0" && !v.is_empty());
-    assert!(
-        !(bless && strict),
-        "BLESS and GOLDEN_STRICT are mutually exclusive: strict mode exists to \
-         prove no fixture was (re)generated"
-    );
-    let mut blessed = 0usize;
-    for cell in &cells {
-        let path = dir.join(format!("{}.trace", cell.stem()));
-        let got = canonical_trace(cell);
-        if bless || !path.exists() {
-            assert!(
-                !strict,
-                "GOLDEN_STRICT=1: fixture {} is missing — this run would bless it \
-                 and compare nothing. A strict pass needs the full committed (or \
-                 previously blessed) fixture set.",
-                path.display()
-            );
-            fs::write(&path, &got).expect("write fixture");
-            blessed += 1;
-            continue;
-        }
-        let want = fs::read_to_string(&path).expect("read fixture");
-        assert_eq!(
-            got, want,
-            "golden trace drift for {} — coordinator/driver numerics changed. \
-             If intentional, regenerate fixtures with `BLESS=1 cargo test golden`.",
-            cell.stem()
-        );
-    }
-    if blessed > 0 {
-        eprintln!(
-            "golden_traces: blessed {blessed}/{} fixtures in {} \
-             (first run or BLESS=1); commit them to pin behavior",
-            cells.len(),
-            dir.display()
-        );
-    }
+    let cells = run_grid(&golden_spec()).expect("grid run");
+    compare_or_bless(&cells, "");
 }
 
 #[test]
@@ -148,5 +190,160 @@ fn crash_rejoin_cells_really_erase_and_readmit() {
     assert!(
         out.trace.total_time().is_finite(),
         "crash must never poison the virtual clock"
+    );
+}
+
+#[test]
+fn adaptive_grid_is_bit_deterministic() {
+    let spec = adaptive_spec();
+    let a = run_grid(&spec).expect("adaptive grid run 1");
+    let b = run_grid(&spec).expect("adaptive grid run 2");
+    assert_eq!(a.len(), spec.cells());
+    assert_eq!(a.len(), b.len());
+    for (ca, cb) in a.iter().zip(&b) {
+        assert_eq!(
+            canonical_trace(ca),
+            canonical_trace(cb),
+            "non-deterministic adaptive trace for cell {}",
+            ca.stem()
+        );
+    }
+}
+
+#[test]
+fn adaptive_golden_traces_match_fixtures() {
+    let cells = run_grid(&adaptive_spec()).expect("adaptive grid run");
+    for cell in &cells {
+        // The fixtures must actually pin controller decisions: every
+        // cell is controller-steered and carries its round log.
+        assert_eq!(cell.out.controller, "adaptive", "cell {}: not steered", cell.stem());
+        assert!(!cell.out.rounds.is_empty(), "cell {}: no rounds recorded", cell.stem());
+    }
+    compare_or_bless(&cells, "adaptive__");
+}
+
+/// Bit-level equality of two controller-steered runs: every trace
+/// record, every per-round k decision with its arrival times, and the
+/// final iterate compared as raw `f64` bits — no tolerance anywhere.
+fn assert_runs_bit_identical(a: &RunOutput, b: &RunOutput, ctx: &str) {
+    assert_eq!(a.controller, b.controller, "{ctx}: controller name");
+    assert_eq!(a.trace.records.len(), b.trace.records.len(), "{ctx}: trace lengths");
+    for (i, (ra, rb)) in a.trace.records.iter().zip(&b.trace.records).enumerate() {
+        assert_eq!(ra.iter, rb.iter, "{ctx}: record {i}: iter");
+        assert_eq!(ra.k_used, rb.k_used, "{ctx}: record {i}: k_used");
+        assert_eq!(ra.time.to_bits(), rb.time.to_bits(), "{ctx}: record {i}: time");
+        assert_eq!(
+            ra.objective.to_bits(),
+            rb.objective.to_bits(),
+            "{ctx}: record {i}: objective"
+        );
+    }
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{ctx}: round counts");
+    for (i, (ra, rb)) in a.rounds.iter().zip(&b.rounds).enumerate() {
+        assert_eq!(ra.round, rb.round, "{ctx}: round {i}: index");
+        assert_eq!(ra.k_requested, rb.k_requested, "{ctx}: round {i}: k_requested");
+        assert_eq!(ra.k_effective, rb.k_effective, "{ctx}: round {i}: k_effective");
+        assert_eq!(ra.live, rb.live, "{ctx}: round {i}: live");
+        assert_eq!(ra.elapsed.to_bits(), rb.elapsed.to_bits(), "{ctx}: round {i}: elapsed");
+        let arrivals_a: Vec<u64> = ra.arrivals.iter().map(|v| v.to_bits()).collect();
+        let arrivals_b: Vec<u64> = rb.arrivals.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(arrivals_a, arrivals_b, "{ctx}: round {i}: arrivals");
+    }
+    assert_eq!(a.w.len(), b.w.len(), "{ctx}: iterate lengths");
+    for (j, (p, q)) in a.w.iter().zip(&b.w).enumerate() {
+        assert_eq!(p.to_bits(), q.to_bits(), "{ctx}: w[{j}]: {p} vs {q}");
+    }
+}
+
+#[test]
+fn adaptive_tape_record_replay_is_bit_identical() {
+    // The controller contract's replay clause, end to end: decisions
+    // derive only from recorded arrivals, so an adaptive run taped under
+    // the live rack-correlated delay model and replayed from that tape
+    // must reproduce every k decision and every trace float bit-for-bit
+    // (rack-correlated crashes nobody, so the tape has no holes).
+    let (x, y, _) = gaussian_linear(64, 8, 0.5, 77);
+    let ridge = RidgeProblem::new(x.clone(), y.clone(), 0.05);
+    let step = 1.0 / ridge.smoothness();
+    let inner = Scenario::builtin("rack-correlated")
+        .expect("builtin scenario")
+        .build_delay(8, 77)
+        .expect("build delay");
+    let (rec, tape) = DelayRecorder::new(inner);
+    let recorded = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(8)
+        .wait_for(6)
+        .redundancy(2.0)
+        .seed(77)
+        .controller(KPolicy::Adaptive(Default::default()))
+        .delay_model(Box::new(rec))
+        .run(Gd::with_step(step).lambda(0.05).iters(12))
+        .expect("recording run");
+    assert_eq!(recorded.controller, "adaptive");
+    assert!(!recorded.rounds.is_empty(), "recording run logged no rounds");
+    assert!(!tape.is_empty(), "recording run sampled no delays");
+    let sc = Scenario::new("replay").replay(tape.snapshot());
+    let replayed = Experiment::new(Problem::least_squares(&x, &y))
+        .scheme(Scheme::Hadamard)
+        .workers(8)
+        .wait_for(6)
+        .redundancy(2.0)
+        .seed(77)
+        .controller(KPolicy::Adaptive(Default::default()))
+        .scenario(&sc)
+        .run(Gd::with_step(step).lambda(0.05).iters(12))
+        .expect("replay run");
+    assert_runs_bit_identical(&recorded, &replayed, "record vs replay");
+}
+
+#[test]
+fn adaptive_k_bounded_under_crash_rejoin() {
+    // Hard bounds of the controller contract, checked under the one
+    // adversary that actually moves `live`: the requested k never drops
+    // below the erasure floor ceil(m/β) or exceeds m, and the delivered
+    // k never exceeds the live worker count.
+    let mut spec = adaptive_spec();
+    spec.schemes = vec![Scheme::Hadamard];
+    spec.scenarios = vec![Scenario::builtin("crash-rejoin").unwrap()];
+    spec.iters = 25;
+    let floor = erasure_floor(spec.m, spec.beta);
+    let cells = run_grid(&spec).unwrap();
+    let out = &cells[0].out;
+    assert!(!out.rounds.is_empty(), "adaptive crash-rejoin run logged no rounds");
+    for r in &out.rounds {
+        assert!(
+            (floor..=spec.m).contains(&r.k_requested),
+            "round {}: k_requested {} outside [{floor}, {}]",
+            r.round,
+            r.k_requested,
+            spec.m
+        );
+        assert!(
+            r.k_effective <= r.live,
+            "round {}: k_effective {} exceeds live {}",
+            r.round,
+            r.k_effective,
+            r.live
+        );
+        assert!(
+            r.k_effective >= 1 && r.k_effective <= r.k_requested,
+            "round {}: k_effective {} outside [1, k_requested={}]",
+            r.round,
+            r.k_effective,
+            r.k_requested
+        );
+        assert_eq!(
+            r.arrivals.len(),
+            r.k_effective,
+            "round {}: arrival log does not match delivered k",
+            r.round
+        );
+    }
+    // The crash window really bites, so the live-clamp path of the
+    // bounds is exercised, not just vacuously true.
+    assert!(
+        out.rounds.iter().any(|r| r.live < spec.m),
+        "crash-rejoin never reduced the live worker count"
     );
 }
